@@ -1,0 +1,97 @@
+//! Hardware cost explorer: sweeps the RTL cost model (Table 5) across
+//! clocks, codebook sizes and bit-widths, and prints the network-level
+//! energy breakdown behind the paper's ~4x and 1–2% claims.
+//!
+//!     cargo run --release --example hw_cost_explorer
+
+use dfq::hw::energy::{estimate, EnergyTable, Precision, RequantStyle};
+use dfq::hw::synth::{headline_ratios, synthesize, REF_CLOCK_MHZ};
+use dfq::hw::units::RequantOp;
+use dfq::models::resnet;
+use dfq::report::table::{pct, Table};
+
+fn main() {
+    // Table 5 at several clocks
+    let mut t = Table::new(
+        "Requantization operator cost across clocks",
+        &["clock (MHz)", "scaling mW", "codebook mW", "bit-shift mW"],
+    );
+    for clock in [250.0, 500.0, 1000.0] {
+        let sf = synthesize(RequantOp::ScalingFactor { zero_point: false }, clock);
+        let cb = synthesize(RequantOp::Codebook { index_bits: 4, entry_bits: 8 }, clock);
+        let bs = synthesize(RequantOp::BitShift, clock);
+        t.row(vec![
+            format!("{clock}"),
+            format!("{:.1}", sf.power_mw),
+            format!("{:.1}", cb.power_mw),
+            format!("{:.1}", bs.power_mw),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // codebook size sweep: the encode/decode cost grows with entries
+    let mut t = Table::new(
+        "Codebook size sweep (500 MHz)",
+        &["index bits", "entries", "power mW", "area um^2"],
+    );
+    for bits in [2u32, 3, 4, 5, 6] {
+        let r = synthesize(RequantOp::Codebook { index_bits: bits, entry_bits: 8 }, REF_CLOCK_MHZ);
+        t.row(vec![
+            format!("{bits}"),
+            format!("{}", 1 << bits),
+            format!("{:.1}", r.power_mw),
+            format!("{:.1}", r.area_um2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let (p, a) = headline_ratios();
+    println!("headline: codebook/bit-shift power {p:.1}x (paper ~14.8x), area {a:.1}x (paper ~9.0x)\n");
+
+    // network-level energy: FP32 vs int8 with each requant style
+    let graph = resnet::resnet_graph("resnet_l", 5, 10);
+    let e = EnergyTable::default();
+    let mut t = Table::new(
+        &format!(
+            "Per-inference energy, {} ({} MMACs)",
+            graph.name,
+            graph.total_macs() / 1_000_000
+        ),
+        &["precision", "MAC uJ", "requant uJ", "mem uJ", "total uJ", "requant share"],
+    );
+    let fp = estimate(&graph, Precision::Fp32, &e);
+    t.row(vec![
+        "FP32".into(),
+        format!("{:.2}", fp.mac_uj),
+        "-".into(),
+        format!("{:.2}", fp.mem_uj),
+        format!("{:.2}", fp.total_uj()),
+        "-".into(),
+    ]);
+    for (label, style) in [
+        ("int8 + scaling", RequantStyle::ScalingFactor),
+        ("int8 + codebook", RequantStyle::Codebook),
+        ("int8 + bit-shift", RequantStyle::BitShift),
+    ] {
+        let c = estimate(&graph, Precision::Int { bits: 8, requant: style }, &e);
+        t.row(vec![
+            label.into(),
+            format!("{:.2}", c.mac_uj),
+            format!("{:.3}", c.requant_uj),
+            format!("{:.2}", c.mem_uj),
+            format!("{:.2}", c.total_uj()),
+            pct(c.requant_share()),
+        ]);
+    }
+    println!("{}", t.render());
+    let q8 = estimate(
+        &graph,
+        Precision::Int { bits: 8, requant: RequantStyle::BitShift },
+        &e,
+    );
+    println!(
+        "int8 vs FP32: {:.1}x less memory traffic, {:.1}x less energy (paper: ~4x)",
+        fp.traffic_bytes as f64 / q8.traffic_bytes as f64,
+        fp.total_uj() / q8.total_uj()
+    );
+}

@@ -1,0 +1,37 @@
+//! Per-module timing breakdown of the integer engine on the trained
+//! ResNet-S — the profiling tool behind EXPERIMENTS.md §Perf.
+//!
+//!     cargo run --release --example prof_e2e
+
+// quick manual breakdown of the e2e integer path per module
+use std::collections::HashMap;
+use dfq::prelude::*;
+use dfq::engine::int::IntEngine;
+fn main() {
+    let art = Artifacts::open("artifacts").unwrap();
+    let bundle = art.load_model("resnet_s").unwrap();
+    let calib = art.calibration_images(1).unwrap();
+    let out = dfq::report::experiments::calibrate_ours(&bundle, &calib, 8);
+    let eng = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
+    let ds = art.classification_set("synthimagenet_val").unwrap();
+    let (x, _) = ds.batch(0, 8);
+    let xq = eng.quantize_input(&x);
+    // warm
+    for _ in 0..3 { eng.run_acts(&xq); }
+    let mut per: HashMap<String, f64> = HashMap::new();
+    for _ in 0..10 {
+        let mut acts: HashMap<String, dfq::tensor::TensorI32> = HashMap::new();
+        acts.insert("input".to_string(), xq.clone());
+        for m in &bundle.graph.modules {
+            let t = std::time::Instant::now();
+            let o = eng.run_module(m, &acts);
+            *per.entry(m.name.clone()).or_default() += t.elapsed().as_secs_f64();
+            acts.insert(m.name.clone(), o);
+        }
+    }
+    let mut v: Vec<(String, f64)> = per.into_iter().collect();
+    v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let total: f64 = v.iter().map(|(_, t)| t).sum();
+    println!("total {:.2} ms/iter", total * 100.0);
+    for (name, t) in v { println!("{name:<14} {:>8.2} ms ({:.0}%)", t * 100.0, t / total * 100.0); }
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the whole pipeline on a small model built in-process —
+//! no artifacts needed. Builds a ResNet-S graph with random "trained"
+//! weights, runs the dataflow analysis, joint-calibrates with Algorithm
+//! 1 on one image, and compares FP vs integer-only outputs.
+//!
+//!     cargo run --release --example quickstart
+
+use std::collections::HashMap;
+
+use dfq::engine::fp::FpEngine;
+use dfq::engine::int::IntEngine;
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::graph::fuse;
+use dfq::graph::ModuleKind;
+use dfq::models::resnet;
+use dfq::prelude::*;
+use dfq::quant::joint::{CalibConfig, JointCalibrator};
+use dfq::util::mathutil::mse;
+
+fn main() {
+    // 1. the model, in the fine-grained form a framework would export
+    let layers = resnet::resnet_layers("resnet_s", 1, 10);
+    let fused = fuse::fuse(&layers).expect("dataflow analysis");
+    println!("== dataflow restructuring (paper Fig. 1) ==");
+    println!("{}\n", fuse::quant_point_report(&fused));
+    let graph = fused.graph;
+
+    // 2. random He-init weights standing in for a trained model
+    let mut rng = Pcg::new(7);
+    let mut folded: HashMap<String, FoldedParams> = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.05)).collect(),
+            },
+        );
+    }
+
+    // 3. one calibration image (paper §2.1) + Algorithm 1 per module
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 42);
+    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+    println!("== joint calibration (Algorithm 1, tau=4, 1 image) ==");
+    println!("calibrated {} modules in {:.2}s", out.spec.modules.len(), out.seconds);
+    let (lo, med, hi) = out.stats.shift_summary();
+    println!("deployed shift range [{lo}, {hi}], median {med} (paper Fig 2b: [1, 10])\n");
+
+    // 4. FP oracle vs the integer-only engine on fresh images
+    let x = dfq::data::dataset::synth_images(4, 32, 3, 43);
+    let fp_logits = FpEngine::new(&graph, &folded).run(&x);
+    let eng = IntEngine::new(&graph, &folded, &out.spec);
+    let q_logits = eng.run_dequant(&x);
+    println!("== FP vs integer-only inference ==");
+    println!("logit MSE: {:.6}", mse(&q_logits.data, &fp_logits.data));
+    for i in 0..4 {
+        let row = |t: &Tensor| {
+            let c = t.shape.dim(1);
+            let r = &t.data[i * c..(i + 1) * c];
+            let mut best = 0;
+            for (j, v) in r.iter().enumerate() {
+                if *v > r[best] {
+                    best = j;
+                }
+            }
+            best
+        };
+        println!(
+            "image {i}: FP argmax = {}, int8 argmax = {}",
+            row(&fp_logits),
+            row(&q_logits)
+        );
+    }
+    println!("\nquickstart OK — see examples/imagenet_resnet.rs for the full pipeline");
+}

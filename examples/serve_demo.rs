@@ -1,0 +1,141 @@
+//! Serving demo: the batching inference service running the calibrated
+//! quantized ResNet-S through the **PJRT-compiled AOT artifact** on the
+//! request path — the deployment story end to end, python nowhere in
+//! sight. Falls back to the pure-rust integer engine with `int` as the
+//! first argument.
+//!
+//! Requires `make artifacts`.
+//!
+//!     cargo run --release --example serve_demo [pjrt|int] [n_requests]
+
+use std::sync::Arc;
+
+use dfq::coordinator::serve::{Backend, InferenceService, ServeConfig};
+use dfq::data::artifacts::ModelBundle;
+use dfq::engine::int::IntEngine;
+use dfq::prelude::*;
+use dfq::report::experiments;
+use dfq::runtime::{ArgValue, PjrtWorker};
+use dfq::util::timer::Timer;
+
+struct PjrtBackend {
+    worker: PjrtWorker,
+    path: std::path::PathBuf,
+    tail: Vec<ArgValue>,
+    bundle: ModelBundle,
+    spec: QuantSpec,
+    batch: usize,
+}
+
+impl Backend for PjrtBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
+        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
+        let mut argv = vec![ArgValue::I32(eng.quantize_input(batch))];
+        argv.extend(self.tail.iter().cloned());
+        let out = self.worker.run(&self.path, argv)?;
+        Ok(out[0].as_i32()?.map_f32(|v| v as f32))
+    }
+}
+
+struct IntBackend {
+    bundle: ModelBundle,
+    spec: QuantSpec,
+}
+
+impl Backend for IntBackend {
+    fn batch_size(&self) -> usize {
+        16
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
+        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
+        Ok(eng.run(batch).map_f32(|v| v as f32))
+    }
+}
+
+fn main() {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
+    let n_req: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let model = "resnet_s";
+    let art = Artifacts::open("artifacts").expect("run `make artifacts` first");
+    let bundle = art.load_model(model).unwrap();
+    let calib = art.calibration_images(1).unwrap();
+    let out = experiments::calibrate_ours(&bundle, &calib, 8);
+    println!("calibrated {model} in {:.2}s; starting {mode} backend", out.seconds);
+
+    let backend: Arc<dyn Backend> = if mode == "pjrt" {
+        let worker = PjrtWorker::start().expect("pjrt");
+        let path = art.hlo_path(model, "q_logits").unwrap();
+        let t = Timer::start();
+        worker.warm(&path).expect("compile artifact");
+        println!("compiled q_logits artifact in {:.2}s", t.secs());
+        let batch = art.artifact_batch(model, "q_logits").unwrap();
+        let eng = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
+        let mut tail = Vec::new();
+        for m in bundle.graph.weight_modules() {
+            let qp = &eng.qparams()[&m.name];
+            tail.push(ArgValue::I32(qp.w.clone()));
+            tail.push(ArgValue::I32(dfq::tensor::TensorI32::from_vec(
+                &[qp.b.len()],
+                qp.b.clone(),
+            )));
+            tail.push(ArgValue::I32Vec(
+                out.spec.shift_vector(&bundle.graph, &m.name).to_vec(),
+            ));
+        }
+        Arc::new(PjrtBackend {
+            worker,
+            path,
+            tail,
+            bundle: art.load_model(model).unwrap(),
+            spec: out.spec.clone(),
+            batch,
+        })
+    } else {
+        Arc::new(IntBackend { bundle: art.load_model(model).unwrap(), spec: out.spec.clone() })
+    };
+
+    let ds = art.classification_set("synthimagenet_val").unwrap();
+    let svc = Arc::new(InferenceService::start(backend, ServeConfig::default()));
+    let t = Timer::start();
+    let mut handles = Vec::new();
+    for i in 0..n_req {
+        let svc = svc.clone();
+        let (img, label) = {
+            let (x, labels) = ds.batch(i % ds.len(), 1);
+            (x, labels[0])
+        };
+        handles.push(std::thread::spawn(move || {
+            let logits = svc.infer(img).unwrap();
+            let mut best = 0usize;
+            for (j, v) in logits.iter().enumerate() {
+                if *v > logits[best] {
+                    best = j;
+                }
+            }
+            (best as i32 == label) as usize
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let secs = t.secs();
+    let m = svc.metrics();
+    println!(
+        "served {n_req} requests in {secs:.2}s -> {:.1} req/s, top-1 {:.1}%",
+        n_req as f64 / secs,
+        100.0 * correct as f64 / n_req as f64
+    );
+    println!(
+        "batches {}, mean occupancy {:.1}, latency p50 {:.1} ms / p99 {:.1} ms",
+        m.batches,
+        m.mean_occupancy(),
+        m.latency_percentile(50.0) * 1e3,
+        m.latency_percentile(99.0) * 1e3
+    );
+}

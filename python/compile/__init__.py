@@ -1,0 +1,1 @@
+"""Build-time python package: L1 kernels, L2 model, AOT export, training."""

@@ -1,0 +1,230 @@
+"""AOT export: lower the L2/L1 graphs to HLO **text** and write the
+manifest the rust runtime consumes.
+
+Interchange is HLO text, NOT ``lowered.compile().serialize()`` — the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+All artifacts take weights/shifts as *runtime inputs*, so lowering needs
+only shapes — one artifact per topology serves every calibration outcome,
+and `make artifacts` can lower before/independently of training.
+
+Artifacts per model (resnet_s/m/l, detnet):
+  fp_logits  (batch 16) — BN-folded FP forward, logits only: FP eval path.
+  fp_acts    (batch 1)  — folded FP forward returning every unified
+                          module's activation: the Eq.-5 oracle fetched in
+                          one PJRT call by the rust calibrator.
+  q_logits   (batch 16) — integer-only forward built from the Pallas
+                          kernels: the serve/eval hot path.
+Shared:
+  quantize_op / requantize_op — the elementwise Pallas operators.
+  qmodule_<sig> (batch 1) — each distinct unified-module signature, for
+                          per-module cross-checks and --via-pjrt
+                          calibration.
+
+Manifest: artifacts/manifest.json {models: {name: {spec, weights,
+artifacts}}, qmodules, ops, datasets}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import qconv, quant
+
+EVAL_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def _spec_of(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def module_arg_specs(spec: dict, batch: int, quantized: bool):
+    """Argument ShapeDtypeStructs for the flat forwards, plus (name, shape,
+    dtype) descriptors for the manifest."""
+    h, w, c = spec["input"]["h"], spec["input"]["w"], spec["input"]["c"]
+    if quantized:
+        args = [_spec_of((batch, h, w, c), jnp.int32)]
+        descs = [("x_int", (batch, h, w, c), "i32")]
+    else:
+        args = [_spec_of((batch, h, w, c), jnp.float32)]
+        descs = [("x", (batch, h, w, c), "f32")]
+    dt = jnp.int32 if quantized else jnp.float32
+    ds = "i32" if quantized else "f32"
+    for m in model.q_modules(spec):
+        if m["kind"] == "conv":
+            wshape = (m["kh"], m["kw"], m["cin"], m["cout"])
+        else:
+            wshape = (m["cin"], m["cout"])
+        bshape = (m["cout"],)
+        args += [_spec_of(wshape, dt), _spec_of(bshape, dt)]
+        descs += [(f"{m['name']}/w", wshape, ds),
+                  (f"{m['name']}/b", bshape, ds)]
+        if quantized:
+            args.append(_spec_of((3,), jnp.int32))
+            descs.append((f"{m['name']}/shifts", (3,), "i32"))
+    return args, descs
+
+
+def export_model(name: str, out: str, manifest: Dict, log) -> None:
+    spec = model.model_spec(name)
+    entry = {"spec": spec, "weights": f"weights/{name}.dfqt",
+             "artifacts": {}}
+
+    for kind, batch, quantized, with_acts in (
+            ("fp_logits", EVAL_BATCH, False, False),
+            ("fp_acts", 1, False, True),
+            ("q_logits", EVAL_BATCH, True, False)):
+        if quantized:
+            fn, _ = model.q_forward_flat(spec)
+        else:
+            fn, _ = model.fp_forward_flat(spec, with_acts=with_acts)
+        args, descs = module_arg_specs(spec, batch, quantized)
+        path = f"hlo/{name}_{kind}.hlo.txt"
+        n = lower_to_file(fn, args, f"{out}/{path}")
+        outputs = ([m["name"] for m in model.q_modules(spec)]
+                   if with_acts else [spec["modules"][-1]["name"]])
+        entry["artifacts"][kind] = {
+            "path": path, "batch": batch,
+            "inputs": [{"name": nm, "shape": list(sh), "dtype": dt}
+                       for nm, sh, dt in descs],
+            "outputs": outputs,
+        }
+        log(f"  {name}/{kind}: {n} chars")
+    manifest["models"][name] = entry
+
+
+def qmodule_signatures(specs: List[dict]) -> List[dict]:
+    """Distinct (input shape, kernel, stride, relu, residual) signatures
+    across all models. Input spatial dims are inferred by walking the
+    graph."""
+    sigs: Dict[Tuple, dict] = {}
+    for spec in specs:
+        h, w = spec["input"]["h"], spec["input"]["w"]
+        dims = {"input": (h, w)}
+        for m in spec["modules"]:
+            if m["kind"] == "conv":
+                ih, iw = dims[m["src"]]
+                oh, ow = -(-ih // m["stride"]), -(-iw // m["stride"])
+                dims[m["name"]] = (oh, ow)
+                key = (ih, iw, m["cin"], m["cout"], m["kh"], m["kw"],
+                       m["stride"], m["relu"], bool(m.get("res")))
+                if key not in sigs:
+                    sigs[key] = dict(
+                        ih=ih, iw=iw, cin=m["cin"], cout=m["cout"],
+                        kh=m["kh"], kw=m["kw"], stride=m["stride"],
+                        relu=m["relu"], res=bool(m.get("res")),
+                        oh=oh, ow=ow)
+            elif m["kind"] == "gap":
+                dims[m["name"]] = (1, 1)
+    return list(sigs.values())
+
+
+def export_qmodules(specs: List[dict], out: str, manifest: Dict, log):
+    for sig in qmodule_signatures(specs):
+        tag = (f"qmodule_{sig['ih']}x{sig['iw']}x{sig['cin']}"
+               f"_k{sig['kh']}o{sig['cout']}s{sig['stride']}"
+               f"{'r' if sig['relu'] else ''}{'x' if sig['res'] else ''}")
+
+        def fn(x_int, w, b, shifts, res=None, _sig=sig):
+            return (qconv.qconv2d_pallas(
+                x_int, w, b, shifts, stride=_sig["stride"],
+                relu=_sig["relu"], res_int=res),)
+
+        args = [
+            _spec_of((1, sig["ih"], sig["iw"], sig["cin"]), jnp.int32),
+            _spec_of((sig["kh"], sig["kw"], sig["cin"], sig["cout"]),
+                     jnp.int32),
+            _spec_of((sig["cout"],), jnp.int32),
+            _spec_of((3,), jnp.int32),
+        ]
+        if sig["res"]:
+            args.append(_spec_of((1, sig["oh"], sig["ow"], sig["cout"]),
+                                 jnp.int32))
+        path = f"hlo/{tag}.hlo.txt"
+        lower_to_file(fn, args, f"{out}/{path}")
+        manifest["qmodules"].append({**sig, "path": path})
+        log(f"  {tag}")
+
+
+def export_ops(out: str, manifest: Dict, log):
+    n = 4096
+
+    def quant_fn(x, nf):
+        return (quant.quantize_pallas(x, nf),)
+
+    def requant_fn(v, s):
+        return (quant.requantize_pallas(v, s, relu=False),)
+
+    lower_to_file(quant_fn,
+                  [_spec_of((n,), jnp.float32), _spec_of((1,), jnp.int32)],
+                  f"{out}/hlo/quantize_op.hlo.txt")
+    lower_to_file(requant_fn,
+                  [_spec_of((n,), jnp.int32), _spec_of((1,), jnp.int32)],
+                  f"{out}/hlo/requantize_op.hlo.txt")
+    manifest["ops"] = {
+        "quantize": {"path": "hlo/quantize_op.hlo.txt", "n": n},
+        "requantize": {"path": "hlo/requantize_op.hlo.txt", "n": n},
+    }
+    log("  quantize_op / requantize_op")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="resnet_s,resnet_m,resnet_l,detnet")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(f"{out}/hlo", exist_ok=True)
+
+    def log(msg):
+        print(msg, flush=True)
+
+    manifest: Dict = {"models": {}, "qmodules": [], "ops": {},
+                      "datasets": {
+                          "synthimagenet_train": "data/synthimagenet_train.dfqt",
+                          "synthimagenet_val": "data/synthimagenet_val.dfqt",
+                          "synthkitti_train": "data/synthkitti_train.dfqt",
+                          "synthkitti_val": "data/synthkitti_val.dfqt",
+                      },
+                      "eval_batch": EVAL_BATCH}
+    names = args.models.split(",")
+    log("lowering model artifacts ...")
+    for name in names:
+        export_model(name, out, manifest, log)
+    log("lowering qmodule artifacts ...")
+    specs = [model.model_spec(n) for n in names]
+    export_qmodules(specs, out, manifest, log)
+    log("lowering op artifacts ...")
+    export_ops(out, manifest, log)
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"manifest: {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

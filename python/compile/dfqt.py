@@ -1,0 +1,83 @@
+"""dfqt — the tensor interchange format between the python build path and
+the rust runtime.
+
+A ``.dfqt`` file is a flat, little-endian container of named tensors:
+
+    magic   : 6 bytes  b"DFQT1\\n"
+    count   : u32      number of tensors
+    tensor* : repeated
+        name_len : u16
+        name     : utf-8 bytes
+        dtype    : u8   (0=f32, 1=i8, 2=i32, 3=u8, 4=i64)
+        ndim     : u8
+        dims     : u32 * ndim
+        nbytes   : u64
+        data     : raw little-endian buffer
+
+The rust reader lives in ``rust/src/data/dfqt.rs``; both sides are covered
+by round-trip tests (``python/tests/test_dfqt.py`` writes, rust unit tests
+read a golden file and vice versa via ``dfq dump``).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"DFQT1\n"
+
+_DTYPE_TO_CODE = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int8): 1,
+    np.dtype(np.int32): 2,
+    np.dtype(np.uint8): 3,
+    np.dtype(np.int64): 4,
+}
+_CODE_TO_DTYPE = {v: k for k, v in _DTYPE_TO_CODE.items()}
+
+
+def write_dfqt(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a name->array mapping. Insertion order is preserved so the
+    rust side can rely on deterministic layout for golden tests."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            # note: np.ascontiguousarray would promote 0-d to 1-d;
+            # tobytes() below already emits C order for any layout.
+            arr = np.asarray(arr)
+            if arr.dtype not in _DTYPE_TO_CODE:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _DTYPE_TO_CODE[arr.dtype]))
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_dfqt(path: str) -> Dict[str, np.ndarray]:
+    """Read a ``.dfqt`` container back into a dict (insertion-ordered)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        magic = f.read(len(MAGIC))
+        if magic != MAGIC:
+            raise ValueError(f"bad magic in {path}: {magic!r}")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            arr = np.frombuffer(raw, dtype=_CODE_TO_DTYPE[code]).reshape(dims)
+            out[name] = arr.copy()
+    return out

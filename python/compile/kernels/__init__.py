@@ -1,0 +1,2 @@
+"""L1 Pallas kernels + pure-jnp oracles for the quantization operators."""
+from . import ref, quant, qconv  # noqa: F401

@@ -1,0 +1,129 @@
+"""L1 Pallas kernel for the unified quantized module (paper Fig. 1 a-d).
+
+The paper's hot spot is the integer conv + bias-align + (residual-align +)
+(ReLU +) rounded-shift requantization, executed as ONE fused unit so the
+accumulator never round-trips through memory ("the cost of memory accesses
+is reduced dramatically without writing the convolution output back to
+memory", §1.2.1). We express the conv as an im2col GEMM so the MAC array —
+the ASIC's PE grid in the paper, the MXU on TPU — sees a plain int8xint8
+-> int32 matmul.
+
+Kernel signature (GEMM form):
+    patches (M, K) int32[int8 codes]   — im2col'd quantized ifmaps
+    weights (K, N) int32[int8 codes]   — quantized filters, HWIO-flattened
+    bias    (1, N) int32               — quantized biases
+    shifts  (3,)   int32               — [bias_shift, out_shift, res_shift]
+    residual(M, N) int32, optional     — quantized shortcut codes
+    out     (M, N) int32[n-bit codes]
+
+Grid is (M/bm, N/bn) with the full K dimension resident per block: for
+every shape in our models K = kh*kw*C <= 576, so an (bm=128, K) x (K,
+bn=128) tile plus the int32 accumulator needs ~193 KiB of VMEM at int8 —
+comfortably inside a TensorCore's 16 MiB with room for double buffering
+(DESIGN.md §Hardware-Adaptation). interpret=True: CPU PJRT cannot run
+Mosaic custom-calls; interpret mode lowers to portable HLO.
+
+Shifts arrive as a runtime (3,) vector so a single AOT artifact serves
+every calibration candidate the rust coordinator tries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BM = 128  # M tile (im2col rows = output pixels)
+BN = 128  # N tile (output channels); shapes are padded up to these
+
+
+def _qgemm_kernel(shifts_ref, p_ref, w_ref, b_ref, o_ref, *, n_bits, relu):
+    qmin, qmax = ref.qrange(n_bits, unsigned=relu)
+    acc = jnp.dot(p_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    acc = acc + ref.align(b_ref[...].astype(jnp.int32), shifts_ref[0])
+    out = ref.shift_round(acc, shifts_ref[1])
+    o_ref[...] = jnp.clip(out, qmin, qmax).astype(jnp.int32)
+
+
+def _qgemm_res_kernel(shifts_ref, p_ref, w_ref, b_ref, r_ref, o_ref, *,
+                      n_bits, relu):
+    qmin, qmax = ref.qrange(n_bits, unsigned=relu)
+    acc = jnp.dot(p_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    acc = acc + ref.align(b_ref[...].astype(jnp.int32), shifts_ref[0])
+    acc = acc + ref.align(r_ref[...].astype(jnp.int32), shifts_ref[2])
+    out = ref.shift_round(acc, shifts_ref[1])
+    o_ref[...] = jnp.clip(out, qmin, qmax).astype(jnp.int32)
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qgemm_pallas(patches, weights, bias, shifts, *, n_bits: int = 8,
+                 relu: bool = False, residual=None):
+    """Fused unified-module GEMM. Shapes: patches (M,K), weights (K,N),
+    bias (N,), shifts (3,) int32, residual (M,N) or None. Returns (M,N)
+    int32 codes. M, N are padded internally to BM/BN tiles."""
+    m, k = patches.shape
+    k2, n = weights.shape
+    assert k == k2, (k, k2)
+    p = _pad_to(patches.astype(jnp.int32), 0, BM)
+    w = weights.astype(jnp.int32)
+    b = _pad_to(bias.astype(jnp.int32).reshape(1, n), 1, BN)
+    w = _pad_to(w, 1, BN)
+    mp, np_ = p.shape[0], w.shape[1]
+    grid = (mp // BM, np_ // BN)
+    common = dict(
+        grid=grid,
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )
+    shift_spec = pl.BlockSpec((3,), lambda i, j: (0,))
+    p_spec = pl.BlockSpec((BM, k), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((k, BN), lambda i, j: (0, j))
+    b_spec = pl.BlockSpec((1, BN), lambda i, j: (0, j))
+    if residual is None:
+        out = pl.pallas_call(
+            functools.partial(_qgemm_kernel, n_bits=n_bits, relu=relu),
+            in_specs=[shift_spec, p_spec, w_spec, b_spec],
+            **common,
+        )(shifts.astype(jnp.int32), p, w, b)
+    else:
+        r = _pad_to(_pad_to(residual.astype(jnp.int32), 0, BM), 1, BN)
+        r_spec = pl.BlockSpec((BM, BN), lambda i, j: (i, j))
+        out = pl.pallas_call(
+            functools.partial(_qgemm_res_kernel, n_bits=n_bits, relu=relu),
+            in_specs=[shift_spec, p_spec, w_spec, b_spec, r_spec],
+            **common,
+        )(shifts.astype(jnp.int32), p, w, b, r)
+    return out[:m, :n]
+
+
+def qconv2d_pallas(x_int, w_int, b_int, shifts, *, stride: int = 1,
+                   n_bits: int = 8, relu: bool = False, res_int=None,
+                   padding: str = "SAME"):
+    """Conv form: NHWC codes x HWIO codes -> NHWC codes, via im2col + the
+    fused GEMM kernel. ``res_int`` is an NHWC tensor of shortcut codes."""
+    kh, kw, c, o = w_int.shape
+    patches, (n, ho, wo) = ref.im2col_nhwc(x_int.astype(jnp.int32), kh, kw,
+                                           stride, padding)
+    wmat = w_int.astype(jnp.int32).reshape(kh * kw * c, o)
+    res = None
+    if res_int is not None:
+        res = res_int.astype(jnp.int32).reshape(n * ho * wo, o)
+    out = qgemm_pallas(patches, wmat, b_int, shifts, n_bits=n_bits,
+                       relu=relu, residual=res)
+    return out.reshape(n, ho, wo, o)

@@ -1,0 +1,82 @@
+"""L1 Pallas kernels for the elementwise quantization operators.
+
+Two kernels:
+
+* ``quantize_pallas``   — float tensor -> integer codes (paper Eq. 1).
+* ``requantize_pallas`` — int32 accumulator -> n-bit codes by a rounded
+  arithmetic shift (the paper's Table-5 "bit-shifting" operator).
+
+Both take the shift/fractional-bit as a *runtime* scalar carried in a tiny
+int32 array so the AOT-lowered HLO modules accept calibrated values chosen
+later by the rust coordinator — one artifact serves every grid candidate.
+
+TPU mapping (§Hardware-Adaptation in DESIGN.md): these are pure VPU
+element-wise ops; blocks are sized to whole rows so the HBM->VMEM stream
+is contiguous. ``interpret=True`` everywhere — the CPU PJRT client cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+both the python tests and the rust runtime execute identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Elementwise block: one lane-aligned row chunk per grid step.
+_BLOCK = 1024
+
+
+def _quantize_kernel(nf_ref, x_ref, o_ref, *, n_bits: int, unsigned: bool):
+    qmin, qmax = ref.qrange(n_bits, unsigned)
+    nf = nf_ref[0].astype(jnp.float32)
+    scaled = jnp.floor(x_ref[...] * jnp.exp2(nf) + 0.5)
+    o_ref[...] = jnp.clip(scaled, qmin, qmax).astype(jnp.int32)
+
+
+def quantize_pallas(x, n_frac, *, n_bits: int = 8, unsigned: bool = False):
+    """Quantize a flat f32 vector to int32 codes. ``n_frac`` is a (1,)
+    int32 array (runtime input)."""
+    (n,) = x.shape
+    assert n % _BLOCK == 0, f"pad to a multiple of {_BLOCK}"
+    grid = (n // _BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, n_bits=n_bits, unsigned=unsigned),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),       # n_frac broadcast
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),  # x
+        ],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(n_frac.astype(jnp.int32), x.astype(jnp.float32))
+
+
+def _requantize_kernel(s_ref, v_ref, o_ref, *, n_bits: int, relu: bool):
+    qmin, qmax = ref.qrange(n_bits, unsigned=relu)
+    out = ref.shift_round(v_ref[...], s_ref[0])
+    o_ref[...] = jnp.clip(out, qmin, qmax).astype(jnp.int32)
+
+
+def requantize_pallas(v, shift, *, n_bits: int = 8, relu: bool = False):
+    """Rounded-shift requantization of a flat int32 vector. ``shift`` is a
+    (1,) int32 array; negative values left-shift (paper §1.2)."""
+    (n,) = v.shape
+    assert n % _BLOCK == 0, f"pad to a multiple of {_BLOCK}"
+    grid = (n // _BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_requantize_kernel, n_bits=n_bits, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(shift.astype(jnp.int32), v.astype(jnp.int32))

@@ -1,0 +1,179 @@
+"""Pure-jnp oracles for every L1 kernel — the single source of truth for
+the quantization semantics shared by the Pallas kernels, the lowered L2
+model, and the rust integer engine (rust/src/quant/scheme.rs mirrors
+these definitions exactly and the integration tests check bit-equality).
+
+Semantics (paper Eq. 1, 3, 4):
+
+* rounding is **round-half-up**: round(x) = floor(x + 0.5). (jnp.round is
+  banker's rounding and f32::round in rust is half-away-from-zero; both
+  differ from each other, so we standardise on floor(x+0.5), which has an
+  exact integer-shift analogue.)
+* ``quantize_int(r, N, bits)`` = clip(round(r * 2^N), qmin, qmax).
+* integer requantization by shift s = (N_x + N_w) - N_o uses
+  ``shift_round``: for s >= 0, (v + (1 << (s-1))) >> s with an arithmetic
+  shift (floor division), which equals floor(v / 2^s + 0.5) exactly; for
+  s < 0 it is a left shift.
+* ReLU modules clamp the requantized output to the **unsigned** range
+  [0, 2^bits - 1] (the paper: "outputs of the ReLU layer is in the range
+  [0, 255] if the bit-width is 8-bit"); non-ReLU modules clamp to the
+  signed range [-2^(bits-1), 2^(bits-1)-1].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def round_half_up(x):
+    return jnp.floor(x + 0.5)
+
+
+def qrange(n_bits: int, unsigned: bool):
+    if unsigned:
+        return 0, (1 << n_bits) - 1
+    return -(1 << (n_bits - 1)), (1 << (n_bits - 1)) - 1
+
+
+def quantize_int(r, n_frac, n_bits: int, unsigned: bool = False):
+    """Float -> integer code (int32). ``n_frac`` may be a traced scalar."""
+    qmin, qmax = qrange(n_bits, unsigned)
+    scaled = round_half_up(r * jnp.exp2(jnp.asarray(n_frac, jnp.float32)))
+    return jnp.clip(scaled, qmin, qmax).astype(jnp.int32)
+
+
+def dequantize(r_int, n_frac):
+    return r_int.astype(jnp.float32) * jnp.exp2(-jnp.asarray(n_frac, jnp.float32))
+
+
+def quantize(r, n_frac, n_bits: int, unsigned: bool = False):
+    """The paper's Q(r; N, n_bits): float -> quantized float."""
+    return dequantize(quantize_int(r, n_frac, n_bits, unsigned), n_frac)
+
+
+def shift_round(v, s):
+    """Round-half-up right shift for s >= 0; left shift for s < 0.
+
+    ``v`` int32, ``s`` scalar int32 (may be traced). Branchless so it can
+    take runtime shift inputs in the AOT-lowered modules."""
+    v = v.astype(jnp.int32)
+    s = jnp.asarray(s, jnp.int32)
+    s_pos = jnp.maximum(s, 0)
+    s_neg = jnp.maximum(-s, 0)
+    half = jnp.where(s_pos > 0, jnp.left_shift(1, jnp.maximum(s_pos - 1, 0)), 0)
+    right = jnp.right_shift(v + half, s_pos)  # arithmetic shift == floor div
+    left = jnp.left_shift(v, s_neg)
+    return jnp.where(s >= 0, right, left)
+
+
+def align(v, s):
+    """Bias/residual alignment into the accumulator domain: left shift for
+    s >= 0 (the common case, paper §1.2), rounded right shift otherwise."""
+    return shift_round(v, -jnp.asarray(s, jnp.int32))
+
+
+def requantize(acc, out_shift, n_bits: int, relu: bool):
+    """int32 accumulator -> n_bits integer code, the paper's Table-5 op."""
+    qmin, qmax = qrange(n_bits, unsigned=relu)
+    return jnp.clip(shift_round(acc, out_shift), qmin, qmax).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Unified-module oracle (Fig. 1 a-d as one parameterised op)
+# --------------------------------------------------------------------------
+
+def conv2d_int(x_int, w_int, stride: int, padding: str = "SAME"):
+    """Integer conv, NHWC x HWIO -> NHWC, int32 accumulation."""
+    return lax.conv_general_dilated(
+        x_int.astype(jnp.int32),
+        w_int.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def qmodule_ref(
+    x_int,
+    w_int,
+    b_int,
+    bias_shift,
+    out_shift,
+    *,
+    stride: int = 1,
+    n_bits: int = 8,
+    relu: bool = False,
+    res_int=None,
+    res_shift=None,
+    padding: str = "SAME",
+):
+    """The unified module (paper Fig. 1):
+
+      acc  = conv_int32(x, w) + align(b, bias_shift) [+ align(res, res_shift)]
+      out  = clip(shift_round(acc, out_shift), range(n_bits, unsigned=relu))
+
+    ``bias_shift`` = (N_x + N_w) - N_b, ``out_shift`` = (N_x + N_w) - N_o,
+    ``res_shift`` = (N_x + N_w) - N_r. ReLU-then-requantize equals
+    requantize-then-clamp-at-zero for round-half-up shifts, so the fused
+    form clamps the requantized value to [0, 2^bits - 1].
+    """
+    acc = conv2d_int(x_int, w_int, stride, padding)
+    acc = acc + align(b_int.astype(jnp.int32), bias_shift)[None, None, None, :]
+    if res_int is not None:
+        acc = acc + align(res_int.astype(jnp.int32), res_shift)
+    return requantize(acc, out_shift, n_bits, relu)
+
+
+def qgemm_ref(p_int, w_int, b_int, bias_shift, out_shift, *, n_bits=8,
+              relu=False, res_int=None, res_shift=None):
+    """GEMM form of the unified module: (M,K) x (K,N) + bias(N) [+ res(M,N)].
+
+    This is exactly what the Pallas kernel computes; conv modules reach it
+    through im2col (see im2col_nhwc)."""
+    acc = jnp.dot(p_int.astype(jnp.int32), w_int.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    acc = acc + align(b_int.astype(jnp.int32), bias_shift)[None, :]
+    if res_int is not None:
+        acc = acc + align(res_int.astype(jnp.int32), res_shift)
+    return requantize(acc, out_shift, n_bits, relu)
+
+
+def im2col_nhwc(x, kh: int, kw: int, stride: int, padding: str = "SAME"):
+    """(N,H,W,C) -> (N*Ho*Wo, kh*kw*C) patches, (kh, kw, C) minor-to-major
+    order chosen to match HWIO weights reshaped to (kh*kw*C, O)."""
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        pad_h = max(0, (ho - 1) * stride + kh - h)
+        pad_w = max(0, (wo - 1) * stride + kw - w)
+        x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i:i + (ho - 1) * stride + 1:stride,
+                          j:j + (wo - 1) * stride + 1:stride, :])
+    patches = jnp.concatenate(cols, axis=-1)  # (N, Ho, Wo, kh*kw*C)
+    return patches.reshape(n * ho * wo, kh * kw * c), (n, ho, wo)
+
+
+def global_avg_pool_int(x_int, n_bits: int = 8, unsigned: bool = True):
+    """Integer global average pool. The model is designed so H*W is a power
+    of two (8x8 = 64), making the mean an exact rounded shift — the same
+    trick the paper uses everywhere else."""
+    n, h, w, c = x_int.shape
+    hw = h * w
+    assert hw & (hw - 1) == 0, "spatial size must be a power of two"
+    s = hw.bit_length() - 1
+    total = jnp.sum(x_int.astype(jnp.int32), axis=(1, 2))
+    qmin, qmax = qrange(n_bits, unsigned)
+    return jnp.clip(shift_round(total, s), qmin, qmax)

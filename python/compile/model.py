@@ -1,0 +1,339 @@
+"""L2 — the JAX models (build-time only).
+
+Two families, mirroring the paper's evaluation:
+
+* **ResNet-S/M/L** — residual CNNs for SynthImageNet standing in for
+  ResNet-50/101/152 (Tables 1–3). Basic blocks conv-BN-ReLU / conv-BN +
+  shortcut (+ReLU), projection shortcuts on downsampling stages, so all
+  four Fig.-1 dataflow cases occur naturally:
+    (a) bare conv        — the 1x1 projection shortcuts and the FC head,
+    (b) conv + ReLU      — the stem and every block's first conv,
+    (c) residual + ReLU  — every block's second conv except the last,
+    (d) residual, no ReLU— the final block (feeds global-avg-pool).
+
+* **DetNet** — a single-stage detector on SynthKITTI standing in for
+  Faster R-CNN on KITTI (Table 4): conv backbone striding to an 8x16 grid,
+  a 1x1 head predicting (objectness, 3 class scores, 4 box params) per
+  cell.
+
+The *model spec* — an ordered list of unified modules with explicit
+dataflow (who feeds whom, who is a residual source) — is serialised into
+``artifacts/manifest.json`` and re-built verbatim by the rust graph layer
+(rust/src/models), so both sides agree on names, shapes and quantization
+points by construction.
+
+The quantized forward is assembled entirely from the L1 Pallas kernels and
+takes weights + shift vectors as *runtime inputs*, so one AOT artifact per
+topology serves any calibration outcome.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import qconv, ref
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# --------------------------------------------------------------------------
+# Model specs (shared contract with rust/src/models)
+# --------------------------------------------------------------------------
+
+def conv_module(name, kh, kw, cin, cout, stride, relu, src, res=None,
+                bn=True):
+    return dict(name=name, kind="conv", kh=kh, kw=kw, cin=cin, cout=cout,
+                stride=stride, relu=relu, src=src, res=res, bn=bn)
+
+
+def resnet_spec(n_blocks: int, widths=(16, 32, 64), in_ch: int = 3,
+                num_classes: int = 10, image_hw: int = 32) -> dict:
+    """Build the ResNet module list. ``n_blocks`` per stage: S=1, M=3, L=5."""
+    mods: List[dict] = [conv_module("stem", 3, 3, in_ch, widths[0], 1, True,
+                                    "input")]
+    prev = "stem"
+    cin = widths[0]
+    last_stage, last_block = len(widths) - 1, n_blocks - 1
+    for s, w in enumerate(widths):
+        for b in range(n_blocks):
+            stride = 2 if (s > 0 and b == 0) else 1
+            base = f"s{s}b{b}"
+            shortcut = prev
+            if stride != 1 or cin != w:
+                mods.append(conv_module(f"{base}/proj", 1, 1, cin, w, stride,
+                                        False, prev))      # Fig. 1 (a)
+                shortcut = f"{base}/proj"
+            mods.append(conv_module(f"{base}/c1", 3, 3, cin, w, stride, True,
+                                    prev))                  # Fig. 1 (b)
+            final = (s == last_stage and b == last_block)
+            mods.append(conv_module(f"{base}/c2", 3, 3, w, w, 1,
+                                    not final,              # (c) or (d)
+                                    f"{base}/c1", res=shortcut))
+            prev, cin = f"{base}/c2", w
+    mods.append(dict(name="gap", kind="gap", src=prev, cin=cin))
+    mods.append(dict(name="fc", kind="dense", cin=cin, cout=num_classes,
+                     relu=False, src="gap", bn=False))      # Fig. 1 (a)
+    return dict(arch="resnet", n_blocks=n_blocks, widths=list(widths),
+                input=dict(h=image_hw, w=image_hw, c=in_ch),
+                num_classes=num_classes, modules=mods)
+
+
+def detnet_spec(in_h: int = 64, in_w: int = 128, n_classes: int = 3) -> dict:
+    """Single-stage detector: stride-8 backbone + 1x1 prediction head.
+    Head channels = 1 obj + n_classes + 4 box."""
+    chans = [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1), (96, 2)]
+    mods: List[dict] = []
+    prev, cin = "input", 3
+    for i, (c, s) in enumerate(chans):
+        name = f"bb{i}"
+        mods.append(conv_module(name, 3, 3, cin, c, s, True, prev))
+        prev, cin = name, c
+    head_c = 1 + n_classes + 4
+    mods.append(conv_module("head", 1, 1, cin, head_c, 1, False, prev,
+                            bn=False))                      # Fig. 1 (a)
+    return dict(arch="detnet", input=dict(h=in_h, w=in_w, c=3),
+                n_classes=n_classes, grid=dict(h=in_h // 8, w=in_w // 8),
+                modules=mods)
+
+
+RESNET_DEPTHS = {"s": 1, "m": 3, "l": 5}
+
+
+def model_spec(name: str) -> dict:
+    if name.startswith("resnet_"):
+        return resnet_spec(RESNET_DEPTHS[name.split("_")[1]])
+    if name == "detnet":
+        return detnet_spec()
+    raise ValueError(name)
+
+
+def conv_layer_count(spec: dict) -> int:
+    return sum(1 for m in spec["modules"] if m["kind"] in ("conv", "dense"))
+
+
+# --------------------------------------------------------------------------
+# Parameter init + FP forward (training / oracle)
+# --------------------------------------------------------------------------
+
+def init_params(spec: dict, seed: int) -> Dict[str, np.ndarray]:
+    """He-init conv weights; BN gamma=1, beta=0; zero biases."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for m in spec["modules"]:
+        if m["kind"] == "conv":
+            fan_in = m["kh"] * m["kw"] * m["cin"]
+            params[f"{m['name']}/w"] = rng.normal(
+                0, np.sqrt(2.0 / fan_in),
+                (m["kh"], m["kw"], m["cin"], m["cout"])).astype(np.float32)
+            if m.get("bn", True):
+                for k, v in (("gamma", 1.0), ("beta", 0.0), ("mean", 0.0),
+                             ("var", 1.0)):
+                    params[f"{m['name']}/bn/{k}"] = np.full(
+                        m["cout"], v, np.float32)
+            else:
+                params[f"{m['name']}/b"] = np.zeros(m["cout"], np.float32)
+        elif m["kind"] == "dense":
+            fan_in = m["cin"]
+            params[f"{m['name']}/w"] = rng.normal(
+                0, np.sqrt(2.0 / fan_in),
+                (m["cin"], m["cout"])).astype(np.float32)
+            params[f"{m['name']}/b"] = np.zeros(m["cout"], np.float32)
+    return params
+
+
+def split_trainable(params):
+    """BN running stats are state, not trainable parameters."""
+    train = {k: v for k, v in params.items()
+             if not (k.endswith("/bn/mean") or k.endswith("/bn/var"))}
+    state = {k: v for k, v in params.items()
+             if k.endswith("/bn/mean") or k.endswith("/bn/var")}
+    return train, state
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def fp_forward(spec: dict, params: Dict, x, train: bool = False):
+    """FP forward pass. In train mode BN uses batch stats and the function
+    also returns updated running stats; in eval mode it uses running stats
+    (mathematically identical to the BN-folded integer graph's FP oracle).
+    Returns (output, new_state, activations) — activations keyed by module
+    name (post-ReLU / post-add), used by tests and exported golden data."""
+    acts = {"input": x}
+    new_state = {}
+    for m in spec["modules"]:
+        if m["kind"] == "conv":
+            h = _conv(acts[m["src"]], params[f"{m['name']}/w"], m["stride"])
+            if m.get("bn", True):
+                g = params[f"{m['name']}/bn/gamma"]
+                beta = params[f"{m['name']}/bn/beta"]
+                if train:
+                    mu = jnp.mean(h, axis=(0, 1, 2))
+                    var = jnp.var(h, axis=(0, 1, 2))
+                    new_state[f"{m['name']}/bn/mean"] = (
+                        BN_MOMENTUM * params[f"{m['name']}/bn/mean"]
+                        + (1 - BN_MOMENTUM) * mu)
+                    new_state[f"{m['name']}/bn/var"] = (
+                        BN_MOMENTUM * params[f"{m['name']}/bn/var"]
+                        + (1 - BN_MOMENTUM) * var)
+                else:
+                    mu = params[f"{m['name']}/bn/mean"]
+                    var = params[f"{m['name']}/bn/var"]
+                h = g * (h - mu) / jnp.sqrt(var + BN_EPS) + beta
+            else:
+                h = h + params[f"{m['name']}/b"]
+            if m.get("res"):
+                h = h + acts[m["res"]]
+            if m["relu"]:
+                h = jnp.maximum(h, 0.0)
+            acts[m["name"]] = h
+        elif m["kind"] == "gap":
+            acts[m["name"]] = jnp.mean(acts[m["src"]], axis=(1, 2))
+        elif m["kind"] == "dense":
+            acts[m["name"]] = (acts[m["src"]] @ params[f"{m['name']}/w"]
+                               + params[f"{m['name']}/b"])
+    out = acts[spec["modules"][-1]["name"]]
+    return out, new_state, acts
+
+
+def fold_bn(spec: dict, params: Dict) -> Dict[str, np.ndarray]:
+    """Fold BN into conv weights/biases (paper §1.2.1: "the batch
+    normalization layer is merged into the weights and biases"). Returns
+    {name/w, name/b} for every conv/dense module. Mirrored by
+    rust/src/graph/bn_fold.rs; test_model.py checks equivalence."""
+    out: Dict[str, np.ndarray] = {}
+    for m in spec["modules"]:
+        if m["kind"] == "conv":
+            w = np.asarray(params[f"{m['name']}/w"])
+            if m.get("bn", True):
+                g = np.asarray(params[f"{m['name']}/bn/gamma"])
+                beta = np.asarray(params[f"{m['name']}/bn/beta"])
+                mu = np.asarray(params[f"{m['name']}/bn/mean"])
+                var = np.asarray(params[f"{m['name']}/bn/var"])
+                scale = g / np.sqrt(var + BN_EPS)
+                out[f"{m['name']}/w"] = (w * scale[None, None, None, :]
+                                         ).astype(np.float32)
+                out[f"{m['name']}/b"] = (beta - mu * scale).astype(np.float32)
+            else:
+                out[f"{m['name']}/w"] = w.astype(np.float32)
+                out[f"{m['name']}/b"] = np.asarray(
+                    params[f"{m['name']}/b"], np.float32)
+        elif m["kind"] == "dense":
+            out[f"{m['name']}/w"] = np.asarray(params[f"{m['name']}/w"],
+                                               np.float32)
+            out[f"{m['name']}/b"] = np.asarray(params[f"{m['name']}/b"],
+                                               np.float32)
+    return out
+
+
+def fp_forward_folded(spec: dict, x, folded: Dict[str, jnp.ndarray]):
+    """FP forward over BN-folded weights (conv + bias [+ res] [+ relu]).
+    This is the per-module oracle O of Eq. 5 — returns (final_out, acts)
+    with one activation per unified module, in q_modules order. AOT-
+    exported (batch 1) so the rust calibrator can fetch all targets with a
+    single PJRT call."""
+    acts = {"input": x}
+    for m in spec["modules"]:
+        name = m["name"]
+        if m["kind"] == "conv":
+            h = _conv(acts[m["src"]], folded[f"{name}/w"], m["stride"])
+            h = h + folded[f"{name}/b"]
+            if m.get("res"):
+                h = h + acts[m["res"]]
+            if m["relu"]:
+                h = jnp.maximum(h, 0.0)
+            acts[name] = h
+        elif m["kind"] == "gap":
+            acts[name] = jnp.mean(acts[m["src"]], axis=(1, 2))
+        elif m["kind"] == "dense":
+            acts[name] = acts[m["src"]] @ folded[f"{name}/w"] \
+                + folded[f"{name}/b"]
+    return acts[spec["modules"][-1]["name"]], acts
+
+
+def fp_forward_flat(spec: dict, with_acts: bool):
+    """Flat-argument folded forward for AOT lowering: [x, then per module
+    (w, b)]. ``with_acts`` selects the all-activations variant."""
+    mods = q_modules(spec)
+
+    def fn(x, *flat):
+        folded = {}
+        it = iter(flat)
+        for m in mods:
+            folded[f"{m['name']}/w"] = next(it)
+            folded[f"{m['name']}/b"] = next(it)
+        out, acts = fp_forward_folded(spec, x, folded)
+        if with_acts:
+            return tuple(acts[m["name"]] for m in mods)
+        return (out,)
+
+    names = ["x"]
+    for m in mods:
+        names += [f"{m['name']}/w", f"{m['name']}/b"]
+    return fn, names
+
+
+# --------------------------------------------------------------------------
+# Quantized forward (assembled from L1 kernels; AOT-exported)
+# --------------------------------------------------------------------------
+
+def q_modules(spec: dict) -> List[dict]:
+    """Modules that carry quantized parameters, in execution order."""
+    return [m for m in spec["modules"] if m["kind"] in ("conv", "dense")]
+
+
+def q_forward(spec: dict, x_int, weights: Dict[str, jnp.ndarray],
+              shifts: Dict[str, jnp.ndarray], n_bits: int = 8):
+    """Integer-only forward. ``weights`` holds int32 codes ``name/w`` /
+    ``name/b``; ``shifts`` holds a (3,) int32 vector per module
+    [bias_shift, out_shift, res_shift]. Built from the Pallas kernels, so
+    the whole graph lowers into one HLO module with no float math on the
+    activation path."""
+    acts = {"input": x_int.astype(jnp.int32)}
+    for m in spec["modules"]:
+        name = m["name"]
+        if m["kind"] == "conv":
+            res = acts[m["res"]] if m.get("res") else None
+            acts[name] = qconv.qconv2d_pallas(
+                acts[m["src"]], weights[f"{name}/w"], weights[f"{name}/b"],
+                shifts[name], stride=m["stride"], n_bits=n_bits,
+                relu=m["relu"], res_int=res)
+        elif m["kind"] == "gap":
+            acts[name] = ref.global_avg_pool_int(acts[m["src"]], n_bits,
+                                                 unsigned=False)
+        elif m["kind"] == "dense":
+            acts[name] = qconv.qgemm_pallas(
+                acts[m["src"]], weights[f"{name}/w"], weights[f"{name}/b"],
+                shifts[name], n_bits=n_bits, relu=m["relu"])
+    return acts[spec["modules"][-1]["name"]]
+
+
+def q_forward_flat(spec: dict, n_bits: int = 8):
+    """Return (fn, input_names): a flat-argument version of q_forward for
+    AOT lowering — PJRT executables take positional buffers, so the rust
+    runtime needs a stable argument order: [x_int, then per module
+    (w, b, shifts)...] (see manifest)."""
+    mods = q_modules(spec)
+
+    def fn(x_int, *flat):
+        weights, shifts = {}, {}
+        it = iter(flat)
+        for m in mods:
+            weights[f"{m['name']}/w"] = next(it)
+            weights[f"{m['name']}/b"] = next(it)
+            shifts[m["name"]] = next(it)
+        return (q_forward(spec, x_int, weights, shifts, n_bits),)
+
+    names = ["x_int"]
+    for m in mods:
+        names += [f"{m['name']}/w", f"{m['name']}/b", f"{m['name']}/shifts"]
+    return fn, names

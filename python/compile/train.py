@@ -1,0 +1,289 @@
+"""Build-time training of the models that stand in for the paper's
+pretrained networks (TF-slim ResNet-50/101/152, Faster R-CNN/ResNet-152).
+
+Runs once under ``make artifacts``:
+
+  1. generate the seeded synthetic datasets (data.py),
+  2. train ResNet-S/M/L on SynthImageNet and DetNet on SynthKITTI with
+     SGD + momentum + cosine LR (hand-rolled; no optax in this image),
+  3. write datasets + raw (unfolded) weights + a training report to
+     ``artifacts/``.
+
+Everything is deterministic (fixed seeds) so artifacts are reproducible.
+Python never runs at inference time — the rust binary consumes the
+exported ``.dfqt``/HLO files only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as dat
+from . import dfqt, model
+
+SEED = 7
+CLS_TRAIN, CLS_VAL = 8000, 2000
+DET_TRAIN, DET_VAL = 2000, 500
+
+
+# --------------------------------------------------------------------------
+# SGD + momentum + cosine schedule
+# --------------------------------------------------------------------------
+
+def sgd_init(params):
+    return {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+def sgd_step(params, grads, mom, lr, momentum=0.9, wd=1e-4):
+    new_p, new_m = {}, {}
+    for k in params:
+        g = grads[k] + wd * params[k]
+        m = momentum * mom[k] + g
+        new_m[k] = m
+        new_p[k] = params[k] - lr * m
+    return new_p, new_m
+
+
+def cosine_lr(step, total, base=0.08, warmup=50):
+    warm = base * (step + 1) / warmup
+    t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = base * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# --------------------------------------------------------------------------
+# Classification
+# --------------------------------------------------------------------------
+
+def _ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def train_classifier(spec: dict, images: np.ndarray, labels: np.ndarray,
+                     epochs: int, batch: int, seed: int, log):
+    params = {k: jnp.asarray(v) for k, v in
+              model.init_params(spec, seed).items()}
+    train_p, bn_state = model.split_trainable(params)
+    mom = sgd_init(train_p)
+    n = images.shape[0]
+    steps_per_epoch = n // batch
+    total = steps_per_epoch * epochs
+
+    def loss_fn(tp, state, x, y):
+        out, new_state, _ = model.fp_forward(spec, {**tp, **state}, x,
+                                             train=True)
+        return _ce_loss(out, y), new_state
+
+    @jax.jit
+    def step_fn(tp, state, mom, x, y, lr):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(tp, state, x, y)
+        tp, mom = sgd_step(tp, grads, mom, lr)
+        state = {**state, **new_state}
+        return tp, state, mom, loss
+
+    rng = np.random.default_rng(seed + 1)
+    step = 0
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        ep_loss = 0.0
+        for i in range(steps_per_epoch):
+            idx = order[i * batch:(i + 1) * batch]
+            x = jnp.asarray(dat.normalize(images[idx]))
+            y = jnp.asarray(labels[idx])
+            lr = cosine_lr(step, total)
+            train_p, bn_state, mom, loss = step_fn(train_p, bn_state, mom,
+                                                   x, y, lr)
+            ep_loss += float(loss)
+            step += 1
+        log(f"  epoch {ep + 1}/{epochs} loss={ep_loss / steps_per_epoch:.4f}")
+    return {**{k: np.asarray(v) for k, v in train_p.items()},
+            **{k: np.asarray(v) for k, v in bn_state.items()}}
+
+
+def eval_classifier(spec, params, images, labels, batch=200):
+    params_j = {k: jnp.asarray(v) for k, v in params.items()}
+
+    @jax.jit
+    def fwd(x):
+        out, _, _ = model.fp_forward(spec, params_j, x, train=False)
+        return jnp.argmax(out, axis=1)
+
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        x = jnp.asarray(dat.normalize(images[i:i + batch]))
+        correct += int(jnp.sum(fwd(x) == jnp.asarray(labels[i:i + batch])))
+    return correct / images.shape[0]
+
+
+# --------------------------------------------------------------------------
+# Detection
+# --------------------------------------------------------------------------
+
+def det_targets(labels: np.ndarray, gh: int, gw: int, n_classes: int):
+    """labels (N, MAX, 6) -> per-cell targets:
+    obj (N,gh,gw), cls (N,gh,gw) int, box (N,gh,gw,4) in [0,1]."""
+    n = labels.shape[0]
+    obj = np.zeros((n, gh, gw), np.float32)
+    cls = np.zeros((n, gh, gw), np.int32)
+    box = np.zeros((n, gh, gw, 4), np.float32)
+    for i in range(n):
+        for row in labels[i]:
+            if row[0] < 0.5:
+                continue
+            c, cx, cy, w, h = int(row[1]), row[2], row[3], row[4], row[5]
+            ix = min(gw - 1, int(cx * gw))
+            iy = min(gh - 1, int(cy * gh))
+            obj[i, iy, ix] = 1.0
+            cls[i, iy, ix] = c
+            box[i, iy, ix] = (cx * gw - ix, cy * gh - iy, w, h)
+    return obj, cls, box
+
+
+def det_loss(pred, obj_t, cls_t, box_t, n_classes: int):
+    """pred (N,gh,gw,1+C+4). BCE objectness over all cells; CE + L2 box on
+    positive cells."""
+    obj_logit = pred[..., 0]
+    cls_logit = pred[..., 1:1 + n_classes]
+    box_pred = jax.nn.sigmoid(pred[..., 1 + n_classes:])
+    obj_p = jax.nn.sigmoid(obj_logit)
+    eps = 1e-6
+    bce = -(obj_t * jnp.log(obj_p + eps)
+            + (1 - obj_t) * jnp.log(1 - obj_p + eps))
+    # class imbalance: ~3% positive cells
+    bce = jnp.where(obj_t > 0.5, 4.0 * bce, bce)
+    logp = jax.nn.log_softmax(cls_logit)
+    onehot = jax.nn.one_hot(cls_t, n_classes)
+    ce = -jnp.sum(onehot * logp, axis=-1)
+    l2 = jnp.sum((box_pred - box_t) ** 2, axis=-1)
+    pos = obj_t
+    npos = jnp.maximum(jnp.sum(pos), 1.0)
+    return (jnp.mean(bce) + jnp.sum(pos * ce) / npos
+            + 2.0 * jnp.sum(pos * l2) / npos)
+
+
+def train_detector(spec, images, labels, epochs, batch, seed, log):
+    gh, gw = spec["grid"]["h"], spec["grid"]["w"]
+    ncls = spec["n_classes"]
+    obj_t, cls_t, box_t = det_targets(labels, gh, gw, ncls)
+    params = {k: jnp.asarray(v) for k, v in
+              model.init_params(spec, seed).items()}
+    train_p, bn_state = model.split_trainable(params)
+    mom = sgd_init(train_p)
+    n = images.shape[0]
+    steps_per_epoch = n // batch
+    total = steps_per_epoch * epochs
+
+    def loss_fn(tp, state, x, ot, ct, bt):
+        out, new_state, _ = model.fp_forward(spec, {**tp, **state}, x,
+                                             train=True)
+        return det_loss(out, ot, ct, bt, ncls), new_state
+
+    @jax.jit
+    def step_fn(tp, state, mom, x, ot, ct, bt, lr):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(tp, state, x, ot, ct, bt)
+        tp, mom = sgd_step(tp, grads, mom, lr, wd=5e-5)
+        return tp, {**state, **new_state}, mom, loss
+
+    rng = np.random.default_rng(seed + 2)
+    step = 0
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        ep_loss = 0.0
+        for i in range(steps_per_epoch):
+            idx = order[i * batch:(i + 1) * batch]
+            x = jnp.asarray(dat.normalize(images[idx]))
+            lr = cosine_lr(step, total, base=0.04)
+            train_p, bn_state, mom, loss = step_fn(
+                train_p, bn_state, mom, x, jnp.asarray(obj_t[idx]),
+                jnp.asarray(cls_t[idx]), jnp.asarray(box_t[idx]), lr)
+            ep_loss += float(loss)
+            step += 1
+        log(f"  epoch {ep + 1}/{epochs} loss={ep_loss / steps_per_epoch:.4f}")
+    return {**{k: np.asarray(v) for k, v in train_p.items()},
+            **{k: np.asarray(v) for k, v in bn_state.items()}}
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=14)
+    ap.add_argument("--det-epochs", type=int, default=20)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny run for CI smoke tests")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(f"{out}/weights", exist_ok=True)
+    os.makedirs(f"{out}/data", exist_ok=True)
+    report: Dict = {"models": {}}
+
+    def log(msg):
+        print(msg, flush=True)
+
+    cls_train_n = 512 if args.quick else CLS_TRAIN
+    cls_val_n = 256 if args.quick else CLS_VAL
+    det_train_n = 128 if args.quick else DET_TRAIN
+    det_val_n = 64 if args.quick else DET_VAL
+    epochs = 2 if args.quick else args.epochs
+    det_epochs = 2 if args.quick else args.det_epochs
+
+    log("generating SynthImageNet ...")
+    tr_x, tr_y = dat.gen_classification(cls_train_n, seed=SEED)
+    va_x, va_y = dat.gen_classification(cls_val_n, seed=SEED + 100)
+    dfqt.write_dfqt(f"{out}/data/synthimagenet_train.dfqt",
+                    {"images": tr_x, "labels": tr_y})
+    dfqt.write_dfqt(f"{out}/data/synthimagenet_val.dfqt",
+                    {"images": va_x, "labels": va_y})
+
+    for name in ("resnet_s", "resnet_m", "resnet_l"):
+        spec = model.model_spec(name)
+        log(f"training {name} ({model.conv_layer_count(spec)} weight layers,"
+            f" {epochs} epochs) ...")
+        t0 = time.time()
+        params = train_classifier(spec, tr_x, tr_y, epochs=epochs,
+                                  batch=128, seed=SEED, log=log)
+        acc = eval_classifier(spec, params, va_x, va_y)
+        log(f"  {name}: val top-1 = {acc * 100:.2f}%"
+            f" ({time.time() - t0:.0f}s)")
+        dfqt.write_dfqt(f"{out}/weights/{name}.dfqt", params)
+        report["models"][name] = {"val_top1": acc,
+                                  "train_secs": time.time() - t0}
+
+    log("generating SynthKITTI ...")
+    dtr_x, dtr_y = dat.gen_detection(det_train_n, seed=SEED + 500)
+    dva_x, dva_y = dat.gen_detection(det_val_n, seed=SEED + 600)
+    dfqt.write_dfqt(f"{out}/data/synthkitti_train.dfqt",
+                    {"images": dtr_x, "labels": dtr_y})
+    dfqt.write_dfqt(f"{out}/data/synthkitti_val.dfqt",
+                    {"images": dva_x, "labels": dva_y})
+
+    spec = model.detnet_spec()
+    log(f"training detnet ({det_epochs} epochs) ...")
+    t0 = time.time()
+    params = train_detector(spec, dtr_x, dtr_y, epochs=det_epochs, batch=32,
+                            seed=SEED, log=log)
+    dfqt.write_dfqt(f"{out}/weights/detnet.dfqt", params)
+    report["models"]["detnet"] = {"train_secs": time.time() - t0}
+
+    with open(f"{out}/train_report.json", "w") as f:
+        json.dump(report, f, indent=2)
+    log("training done.")
+
+
+if __name__ == "__main__":
+    main()

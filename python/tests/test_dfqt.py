@@ -1,0 +1,66 @@
+"""Round-trip tests for the .dfqt tensor interchange format."""
+
+import io
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import dfqt
+
+
+def _roundtrip(tensors):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.dfqt")
+        dfqt.write_dfqt(path, tensors)
+        return dfqt.read_dfqt(path)
+
+
+def test_roundtrip_all_dtypes():
+    rng = np.random.default_rng(0)
+    tensors = {
+        "f32": rng.normal(size=(3, 4, 5)).astype(np.float32),
+        "i8": rng.integers(-128, 127, (7,)).astype(np.int8),
+        "i32": rng.integers(-(2**30), 2**30, (2, 2)).astype(np.int32),
+        "u8": rng.integers(0, 255, (4, 4, 3)).astype(np.uint8),
+        "i64": rng.integers(-(2**40), 2**40, (3,)).astype(np.int64),
+    }
+    out = _roundtrip(tensors)
+    assert list(out.keys()) == list(tensors.keys())
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_roundtrip_scalar_and_empty():
+    out = _roundtrip({"scalar": np.float32(3.5).reshape(()),
+                      "empty": np.zeros((0, 4), np.float32)})
+    assert out["scalar"].shape == ()
+    assert float(out["scalar"]) == 3.5
+    assert out["empty"].shape == (0, 4)
+
+
+def test_order_preserved():
+    names = [f"t{i}" for i in range(20)]
+    tensors = {n: np.full((2,), i, np.float32) for i, n in enumerate(names)}
+    out = _roundtrip(tensors)
+    assert list(out.keys()) == names
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.dfqt"
+    p.write_bytes(b"NOTDFQT" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="bad magic"):
+        dfqt.read_dfqt(str(p))
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(ValueError, match="unsupported dtype"):
+        dfqt.write_dfqt(str(tmp_path / "x.dfqt"),
+                        {"f64": np.zeros(3, np.float64)})
+
+
+def test_unicode_names():
+    out = _roundtrip({"stage0/блок/γ": np.ones(3, np.float32)})
+    assert "stage0/блок/γ" in out

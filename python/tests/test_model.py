@@ -1,0 +1,149 @@
+"""L2 model tests: spec structure, BN folding equivalence, quantized
+forward sanity, and the flat-argument AOT wrappers."""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+
+from compile import data as dat
+from compile import model
+from compile.kernels import ref
+
+
+def test_resnet_spec_has_all_four_fig1_cases():
+    spec = model.resnet_spec(1)
+    mods = {m["name"]: m for m in spec["modules"]}
+    # (a) bare conv: projection shortcut, no relu, no res
+    assert not mods["s1b0/proj"]["relu"] and not mods["s1b0/proj"].get("res")
+    # (b) conv + relu
+    assert mods["stem"]["relu"] and not mods["stem"].get("res")
+    # (c) residual + relu
+    assert mods["s0b0/c2"]["relu"] and mods["s0b0/c2"]["res"] == "stem"
+    # (d) residual without relu (final block)
+    assert not mods["s2b0/c2"]["relu"] and mods["s2b0/c2"]["res"]
+
+
+def test_resnet_depths():
+    for name, layers in (("resnet_s", 10), ("resnet_m", 22),
+                         ("resnet_l", 34)):
+        spec = model.model_spec(name)
+        assert model.conv_layer_count(spec) == layers
+
+
+def test_spec_dataflow_is_topologically_ordered():
+    for name in ("resnet_l", "detnet"):
+        spec = model.model_spec(name)
+        seen = {"input"}
+        for m in spec["modules"]:
+            assert m["src"] in seen, (name, m)
+            if m.get("res"):
+                assert m["res"] in seen
+            seen.add(m["name"])
+
+
+def test_final_spatial_is_power_of_two():
+    """global_avg_pool_int needs a power-of-two spatial size (exact shift)."""
+    spec = model.resnet_spec(2)
+    h = spec["input"]["h"]
+    strides = [m["stride"] for m in spec["modules"]
+               if m["kind"] == "conv" and "proj" not in m["name"]
+               and m["stride"] > 1]
+    final = h // int(np.prod(strides))
+    assert (final * final) & (final * final - 1) == 0
+
+
+def test_bn_fold_equivalence():
+    """Folded conv+bias forward == BN eval forward (paper §1.2.1)."""
+    spec = model.resnet_spec(1)
+    params = model.init_params(spec, seed=0)
+    rng = np.random.default_rng(1)
+    # randomise BN stats so folding is non-trivial
+    for k in list(params):
+        if "/bn/mean" in k:
+            params[k] = rng.normal(0, 0.5, params[k].shape).astype(np.float32)
+        if "/bn/var" in k:
+            params[k] = rng.uniform(0.5, 2.0, params[k].shape).astype(
+                np.float32)
+        if "/bn/gamma" in k:
+            params[k] = rng.uniform(0.5, 1.5, params[k].shape).astype(
+                np.float32)
+        if "/bn/beta" in k:
+            params[k] = rng.normal(0, 0.3, params[k].shape).astype(np.float32)
+    x = jnp.array(rng.normal(0, 1, (2, 32, 32, 3)).astype(np.float32))
+    out_bn, _, _ = model.fp_forward(spec, {k: jnp.asarray(v) for k, v in
+                                           params.items()}, x, train=False)
+    folded = model.fold_bn(spec, params)
+    out_folded, _ = model.fp_forward_folded(
+        spec, x, {k: jnp.asarray(v) for k, v in folded.items()})
+    npt.assert_allclose(np.asarray(out_bn), np.asarray(out_folded),
+                        rtol=1e-4, atol=1e-4)
+
+
+def test_q_forward_shapes_and_determinism():
+    spec = model.resnet_spec(1)
+    rng = np.random.default_rng(2)
+    weights, shifts = {}, {}
+    for m in model.q_modules(spec):
+        if m["kind"] == "conv":
+            wshape = (m["kh"], m["kw"], m["cin"], m["cout"])
+        else:
+            wshape = (m["cin"], m["cout"])
+        weights[f"{m['name']}/w"] = jnp.array(
+            rng.integers(-128, 127, wshape), jnp.int32)
+        weights[f"{m['name']}/b"] = jnp.array(
+            rng.integers(-128, 127, (m["cout"],)), jnp.int32)
+        shifts[m["name"]] = jnp.array([2, 10, 4], jnp.int32)
+    x = jnp.array(rng.integers(-64, 64, (2, 32, 32, 3)), jnp.int32)
+    out1 = model.q_forward(spec, x, weights, shifts)
+    out2 = model.q_forward(spec, x, weights, shifts)
+    assert out1.shape == (2, 10)
+    assert out1.dtype == jnp.int32
+    npt.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    # 8-bit signed output range
+    assert np.asarray(out1).max() <= 127 and np.asarray(out1).min() >= -128
+
+
+def test_flat_wrappers_argument_order():
+    spec = model.detnet_spec()
+    fn, names = model.q_forward_flat(spec)
+    assert names[0] == "x_int"
+    assert names[1:4] == ["bb0/w", "bb0/b", "bb0/shifts"]
+    assert names[-3:] == ["head/w", "head/b", "head/shifts"]
+    fn_fp, names_fp = model.fp_forward_flat(spec, with_acts=True)
+    assert len(names_fp) == 1 + 2 * len(model.q_modules(spec))
+
+
+def test_detnet_grid():
+    spec = model.detnet_spec()
+    assert spec["grid"] == {"h": 8, "w": 16}
+    head = spec["modules"][-1]
+    assert head["cout"] == 1 + 3 + 4
+
+
+def test_normalize_range():
+    u8 = np.array([[0, 127, 255]], np.uint8)
+    x = dat.normalize(u8)
+    npt.assert_allclose(x, [[-2.0, -0.00784314, 2.0]], atol=1e-5)
+
+
+def test_datasets_deterministic():
+    a_img, a_lab = dat.gen_classification(8, seed=42)
+    b_img, b_lab = dat.gen_classification(8, seed=42)
+    npt.assert_array_equal(a_img, b_img)
+    npt.assert_array_equal(a_lab, b_lab)
+    di, dl = dat.gen_detection(4, seed=9)
+    assert di.shape == (4, 64, 128, 3)
+    assert dl.shape == (4, dat.MAX_OBJECTS, 6)
+    # every image has at least one object with valid box
+    assert (dl[:, 0, 0] == 1).all()
+    assert (dl[..., 2:][dl[..., 0] > 0] >= 0).all()
+    assert (dl[..., 2:][dl[..., 0] > 0] <= 1).all()
+
+
+def test_gap_int_is_exact_shift():
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.integers(0, 255, (2, 8, 8, 4)), jnp.int32)
+    got = ref.global_avg_pool_int(x, 8, unsigned=True)
+    want = np.floor(np.asarray(x).sum(axis=(1, 2)) / 64.0 + 0.5)
+    npt.assert_array_equal(np.asarray(got), np.clip(want, 0, 255))

@@ -1,0 +1,113 @@
+"""The fused unified-module Pallas kernel vs the conv oracle, across the
+Fig. 1 cases, strides, shapes and bit-widths (exact integer equality)."""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qconv, ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_module(rng, h, w, c, o, kh, kw, unsigned_in):
+    lo, hi = (0, 255) if unsigned_in else (-128, 127)
+    x = rng.integers(lo, hi, (2, h, w, c)).astype(np.int32)
+    wgt = rng.integers(-128, 127, (kh, kw, c, o)).astype(np.int32)
+    b = rng.integers(-128, 127, o).astype(np.int32)
+    return x, wgt, b
+
+
+CASES = st.tuples(
+    st.sampled_from([(8, 8), (9, 7), (16, 16), (5, 5)]),  # H, W
+    st.sampled_from([1, 3, 4]),                           # C
+    st.sampled_from([1, 5, 8]),                           # O
+    st.sampled_from([(1, 1), (3, 3)]),                    # kernel
+    st.sampled_from([1, 2]),                              # stride
+    st.booleans(),                                        # relu
+)
+
+
+@given(CASES, st.integers(0, 6), st.integers(4, 12))
+def test_qconv_matches_oracle(case, bias_shift, out_shift):
+    (h, w), c, o, (kh, kw), stride, relu = case
+    rng = np.random.default_rng(h * 31 + c * 7 + o + kh + stride)
+    x, wgt, b = _rand_module(rng, h, w, c, o, kh, kw, unsigned_in=True)
+    sh = np.array([bias_shift, out_shift, 0], np.int32)
+    got = qconv.qconv2d_pallas(jnp.array(x), jnp.array(wgt), jnp.array(b),
+                               jnp.array(sh), stride=stride, relu=relu)
+    want = ref.qmodule_ref(jnp.array(x), jnp.array(wgt), jnp.array(b),
+                           bias_shift, out_shift, stride=stride, relu=relu)
+    npt.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(CASES, st.integers(-2, 8))
+def test_qconv_residual_case(case, res_shift):
+    """Fig. 1 (c)/(d): residual aligned into the accumulator domain."""
+    (h, w), c, o, (kh, kw), stride, relu = case
+    rng = np.random.default_rng(h + c * 13 + o * 3 + res_shift)
+    x, wgt, b = _rand_module(rng, h, w, c, o, kh, kw, unsigned_in=True)
+    oh, ow = -(-h // stride), -(-w // stride)
+    r = rng.integers(0, 255, (2, oh, ow, o)).astype(np.int32)
+    sh = np.array([2, 9, res_shift], np.int32)
+    got = qconv.qconv2d_pallas(jnp.array(x), jnp.array(wgt), jnp.array(b),
+                               jnp.array(sh), stride=stride, relu=relu,
+                               res_int=jnp.array(r))
+    want = ref.qmodule_ref(jnp.array(x), jnp.array(wgt), jnp.array(b),
+                           2, 9, stride=stride, relu=relu,
+                           res_int=jnp.array(r), res_shift=res_shift)
+    npt.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qgemm_dense_path():
+    """Dense layers ride the same kernel as (M,K)x(K,N)."""
+    rng = np.random.default_rng(11)
+    p = rng.integers(-128, 127, (16, 64)).astype(np.int32)
+    w = rng.integers(-128, 127, (64, 10)).astype(np.int32)
+    b = rng.integers(-128, 127, 10).astype(np.int32)
+    sh = np.array([1, 7, 0], np.int32)
+    got = qconv.qgemm_pallas(jnp.array(p), jnp.array(w), jnp.array(b),
+                             jnp.array(sh))
+    want = ref.qgemm_ref(jnp.array(p), jnp.array(w), jnp.array(b), 1, 7)
+    npt.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_left_shift_requant_path():
+    """out_shift < 0 must left-shift (paper: N_o may exceed N_x + N_w)."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 3, (1, 4, 4, 2)).astype(np.int32)
+    w = rng.integers(-2, 2, (1, 1, 2, 3)).astype(np.int32)
+    b = np.zeros(3, np.int32)
+    sh = np.array([0, -2, 0], np.int32)
+    got = qconv.qconv2d_pallas(jnp.array(x), jnp.array(w), jnp.array(b),
+                               jnp.array(sh))
+    want = ref.qmodule_ref(jnp.array(x), jnp.array(w), jnp.array(b), 0, -2)
+    npt.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_im2col_ordering_matches_hwio_flatten():
+    """(kh, kw, C)-major patches must match w.reshape(kh*kw*C, O)."""
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.normal(size=(1, 6, 6, 3)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(3, 3, 3, 4)).astype(np.float32))
+    patches, (n, ho, wo) = ref.im2col_nhwc(x, 3, 3, 1, "SAME")
+    via_gemm = (patches @ w.reshape(-1, 4)).reshape(n, ho, wo, 4)
+    import jax
+    direct = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    npt.assert_allclose(np.asarray(via_gemm), np.asarray(direct),
+                        rtol=1e-5, atol=1e-5)
+
+
+def test_accumulator_stays_int32_exact():
+    """Max-magnitude codes through the largest model K (3*3*64) must not
+    overflow int32: 576 * 128 * 255 = 18.8M << 2^31."""
+    x = jnp.full((1, 4, 4, 64), 255, jnp.int32)
+    w = jnp.full((3, 3, 64, 4), -128, jnp.int32)
+    b = jnp.zeros(4, jnp.int32)
+    sh = jnp.array([0, 0, 0], jnp.int32)
+    got = qconv.qconv2d_pallas(x, w, b, sh)
+    want = ref.qmodule_ref(x, w, b, 0, 0)
+    npt.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,121 @@
+"""Pallas elementwise kernels vs the pure-jnp oracle (exact equality), plus
+direct checks of the oracle semantics themselves.
+
+Hypothesis sweeps shapes, bit-widths, fractional bits and value ranges —
+the quantize/requantize operators must agree bit-for-bit with ref.py for
+any input, since the rust engine mirrors ref.py and the integration tests
+chain these equalities into engine == pallas == PJRT.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------- oracle
+
+def test_round_half_up_semantics():
+    x = jnp.array([-1.5, -0.5, -0.49, 0.0, 0.49, 0.5, 1.5, 2.5])
+    npt.assert_array_equal(np.asarray(ref.round_half_up(x)),
+                           [-1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 3.0])
+
+
+def test_qrange():
+    assert ref.qrange(8, False) == (-128, 127)
+    assert ref.qrange(8, True) == (0, 255)
+    assert ref.qrange(6, False) == (-32, 31)
+    assert ref.qrange(2, False) == (-2, 1)
+
+
+def test_quantize_matches_paper_eq1():
+    # r^q = clamp(round(r * 2^N)) * 2^-N
+    r = jnp.array([0.3, -0.3, 1.7, 100.0, -100.0])
+    q = ref.quantize(r, 5, 8)
+    scale = 2.0**5
+    expect = np.clip(np.floor(np.asarray(r) * scale + 0.5), -128, 127) / scale
+    npt.assert_allclose(np.asarray(q), expect)
+
+
+def test_negative_fractional_bit_selects_upper_digits():
+    # N = -3 with 8-bit width: values quantized in steps of 2^3 = 8
+    r = jnp.array([12.0, 20.0, 100.0])
+    q = ref.quantize(r, -3, 8)
+    # 12/8=1.5 -> 2 -> 16;  20/8=2.5 -> 3 -> 24;  100/8=12.5 -> 13 -> 104
+    npt.assert_allclose(np.asarray(q), [16.0, 24.0, 104.0])
+
+
+def test_shift_round_exact_cases():
+    v = jnp.array([0, 1, 7, 8, 9, -1, -7, -8, -9, 12, -12], jnp.int32)
+    # s=3: round-half-up of v/8
+    got = np.asarray(ref.shift_round(v, 3))
+    want = np.floor(np.asarray(v) / 8.0 + 0.5).astype(np.int32)
+    npt.assert_array_equal(got, want)
+    # s=0 identity, s=-2 left shift
+    npt.assert_array_equal(np.asarray(ref.shift_round(v, 0)), np.asarray(v))
+    npt.assert_array_equal(np.asarray(ref.shift_round(v, -2)),
+                           np.asarray(v) * 4)
+
+
+@given(st.integers(-(2**27), 2**27), st.integers(0, 20))
+def test_shift_round_is_floor_half_up(v, s):
+    got = int(ref.shift_round(jnp.array([v], jnp.int32), s)[0])
+    want = int(np.floor(v / (2.0**s) + 0.5))
+    assert got == want
+
+
+@given(st.integers(-(2**20), 2**20), st.integers(0, 10))
+def test_align_inverts_shift_sign(v, s):
+    got = int(ref.align(jnp.array([v], jnp.int32), -s)[0])
+    assert got == int(ref.shift_round(jnp.array([v], jnp.int32), s)[0])
+    got_l = int(ref.align(jnp.array([v], jnp.int32), s)[0])
+    assert got_l == v * (2**s)
+
+
+def test_relu_requant_equivalence():
+    """clamp(shift_round(max(acc,0))) == clamp_unsigned(shift_round(acc)) —
+    the fusion argument used by the kernel (DESIGN.md)."""
+    rng = np.random.default_rng(3)
+    acc = jnp.array(rng.integers(-(2**20), 2**20, 4096), jnp.int32)
+    fused = ref.requantize(acc, 9, 8, relu=True)
+    relu_first = ref.requantize(jnp.maximum(acc, 0), 9, 8, relu=True)
+    npt.assert_array_equal(np.asarray(fused), np.asarray(relu_first))
+
+
+# ---------------------------------------------------------------- pallas
+
+@given(st.integers(1, 4), st.integers(-6, 10),
+       st.sampled_from([4, 6, 7, 8]), st.booleans(),
+       st.floats(0.1, 50.0))
+def test_quantize_pallas_matches_ref(nblocks, n_frac, n_bits, unsigned, amp):
+    n = nblocks * 1024
+    rng = np.random.default_rng(n + n_frac + n_bits)
+    x = rng.normal(0, amp, n).astype(np.float32)
+    got = quant.quantize_pallas(jnp.array(x), jnp.array([n_frac], jnp.int32),
+                                n_bits=n_bits, unsigned=unsigned)
+    want = ref.quantize_int(jnp.array(x), n_frac, n_bits, unsigned)
+    npt.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 4), st.integers(-4, 20),
+       st.sampled_from([6, 7, 8]), st.booleans())
+def test_requantize_pallas_matches_ref(nblocks, shift, n_bits, relu):
+    n = nblocks * 1024
+    rng = np.random.default_rng(abs(shift) * 31 + n_bits)
+    v = rng.integers(-(2**24), 2**24, n).astype(np.int32)
+    got = quant.requantize_pallas(jnp.array(v), jnp.array([shift], jnp.int32),
+                                  n_bits=n_bits, relu=relu)
+    want = ref.requantize(jnp.array(v), shift, n_bits, relu)
+    npt.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_pallas_saturates():
+    x = jnp.array([1e9, -1e9] * 512, jnp.float32)
+    got = np.asarray(quant.quantize_pallas(x, jnp.array([0], jnp.int32)))
+    assert got.max() == 127 and got.min() == -128

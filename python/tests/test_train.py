@@ -1,0 +1,85 @@
+"""Training-substrate tests: target assembly, the hand-rolled optimizer,
+the LR schedule and the detection loss (fast — no real training)."""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+
+from compile import data as dat
+from compile import model, train
+
+
+def test_det_targets_place_objects_in_cells():
+    labels = np.zeros((1, dat.MAX_OBJECTS, 6), np.float32)
+    labels[0, 0] = (1.0, 2.0, 0.51, 0.26, 0.2, 0.1)  # cx=0.51, cy=0.26
+    obj, cls, box = train.det_targets(labels, gh=8, gw=16, n_classes=3)
+    iy, ix = int(0.26 * 8), int(0.51 * 16)
+    assert obj[0, iy, ix] == 1.0
+    assert obj.sum() == 1.0
+    assert cls[0, iy, ix] == 2
+    npt.assert_allclose(box[0, iy, ix], [0.51 * 16 - ix, 0.26 * 8 - iy, 0.2, 0.1],
+                        rtol=1e-5)
+
+
+def test_det_targets_edge_clamp():
+    labels = np.zeros((1, dat.MAX_OBJECTS, 6), np.float32)
+    labels[0, 0] = (1.0, 0.0, 0.999, 0.999, 0.1, 0.1)
+    obj, _, _ = train.det_targets(labels, gh=8, gw=16, n_classes=3)
+    assert obj[0, 7, 15] == 1.0  # clamped into the last cell
+
+
+def test_cosine_lr_warmup_and_decay():
+    lr0 = float(train.cosine_lr(0, 1000))
+    lr_peak = float(train.cosine_lr(50, 1000))
+    lr_end = float(train.cosine_lr(999, 1000))
+    assert lr0 < lr_peak
+    assert lr_end < 0.01 * lr_peak + 1e-6
+
+
+def test_sgd_momentum_moves_against_gradient():
+    params = {"w": jnp.array([1.0, -1.0])}
+    grads = {"w": jnp.array([0.5, -0.5])}
+    mom = train.sgd_init(params)
+    p1, m1 = train.sgd_step(params, grads, mom, lr=0.1, wd=0.0)
+    assert float(p1["w"][0]) < 1.0
+    assert float(p1["w"][1]) > -1.0
+    # momentum accumulates
+    p2, _ = train.sgd_step(p1, grads, m1, lr=0.1, wd=0.0)
+    step1 = 1.0 - float(p1["w"][0])
+    step2 = float(p1["w"][0]) - float(p2["w"][0])
+    assert step2 > step1
+
+
+def test_det_loss_decreases_with_correct_predictions():
+    gh, gw, ncls = 4, 4, 3
+    obj = np.zeros((1, gh, gw), np.float32)
+    obj[0, 1, 1] = 1.0
+    cls = np.zeros((1, gh, gw), np.int32)
+    cls[0, 1, 1] = 1
+    box = np.zeros((1, gh, gw, 4), np.float32)
+    box[0, 1, 1] = (0.5, 0.5, 0.3, 0.2)
+
+    bad = np.zeros((1, gh, gw, 1 + ncls + 4), np.float32)
+    good = bad.copy()
+    good[0, :, :, 0] = -8.0          # background everywhere...
+    good[0, 1, 1, 0] = 8.0           # ...except the object cell
+    good[0, 1, 1, 2] = 6.0           # correct class logit
+    # box: sigmoid^-1 of targets
+    good[0, 1, 1, 4:6] = 0.0         # sigmoid(0) = 0.5 = dx, dy
+    good[0, 1, 1, 6] = np.log(0.3 / 0.7)
+    good[0, 1, 1, 7] = np.log(0.2 / 0.8)
+
+    l_bad = float(train.det_loss(jnp.array(bad), jnp.array(obj),
+                                 jnp.array(cls), jnp.array(box), ncls))
+    l_good = float(train.det_loss(jnp.array(good), jnp.array(obj),
+                                  jnp.array(cls), jnp.array(box), ncls))
+    assert l_good < l_bad / 3.0
+
+
+def test_split_trainable_separates_bn_stats():
+    spec = model.resnet_spec(1)
+    params = model.init_params(spec, 0)
+    trainable, state = model.split_trainable(params)
+    assert all("/bn/mean" not in k and "/bn/var" not in k for k in trainable)
+    assert all(k.endswith("/bn/mean") or k.endswith("/bn/var") for k in state)
+    assert len(trainable) + len(state) == len(params)

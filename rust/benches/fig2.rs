@@ -1,0 +1,61 @@
+//! Bench: paper Figure 2 — (a) MSE of quantized activations vs residual
+//! block depth, (b) deployed shift bits vs layer depth — plus the
+//! dataflow ablation (fused vs per-layer quantization points).
+//!
+//!     cargo bench --bench fig2
+
+use dfq::prelude::*;
+use dfq::report::experiments::{self, EvalOptions};
+use dfq::report::figures;
+
+fn main() {
+    let art = match Artifacts::open("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            println!("SKIP fig2: {e}");
+            return;
+        }
+    };
+    match experiments::fig2(&art, "resnet_l") {
+        Ok((a, b)) => {
+            println!(
+                "{}",
+                figures::ascii_plot("Fig 2a: MSE vs residual block depth (resnet_l)", &a, 64, 14)
+            );
+            println!(
+                "{}",
+                figures::ascii_plot("Fig 2b: deployed shift vs layer depth (resnet_l)", &b, 64, 14)
+            );
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/fig2a.csv", figures::series_csv(&a)).ok();
+            std::fs::write("results/fig2b.csv", figures::series_csv(&b)).ok();
+            // paper's observations, checked numerically:
+            let adds: Vec<f64> = a[1].points.iter().map(|(_, y)| *y).collect();
+            let convs: Vec<f64> = a[0].points.iter().map(|(_, y)| *y).collect();
+            let add_gt_conv = adds
+                .iter()
+                .zip(&convs)
+                .filter(|(a, c)| a > c)
+                .count();
+            println!(
+                "residual-add MSE > conv MSE in {}/{} blocks (paper: adds dominate)",
+                add_gt_conv,
+                adds.len()
+            );
+            let shifts: Vec<f64> = b[0].points.iter().map(|(_, y)| *y).collect();
+            let (lo, hi) = shifts.iter().fold((f64::MAX, f64::MIN), |(l, h), &s| {
+                (l.min(s), h.max(s))
+            });
+            println!("shift range [{lo:.0}, {hi:.0}] (paper: [1, 10])");
+        }
+        Err(e) => println!("fig2 failed: {e}"),
+    }
+    let opt = EvalOptions { eval_n: 400, ..Default::default() };
+    match experiments::dataflow_ablation(&art, "resnet_s", opt) {
+        Ok(t) => {
+            println!("\n{}", t.render());
+            std::fs::write("results/ablation.csv", t.to_csv()).ok();
+        }
+        Err(e) => println!("ablation failed: {e}"),
+    }
+}

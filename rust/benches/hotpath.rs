@@ -1,0 +1,151 @@
+//! Hot-path microbenchmarks — the instrument for the performance pass
+//! (EXPERIMENTS.md §Perf). Artifact-free; always runs.
+//!
+//! Covers, per layer of the paper's deployment stack:
+//!   * integer GEMM / conv accumulator (the MAC array),
+//!   * the requantization shift (Table 5's operator, in software),
+//!   * im2col patch extraction,
+//!   * a full unified module through the engine,
+//!   * one Algorithm-1 module search (the calibration inner loop),
+//!   * end-to-end ResNet-S integer inference per image.
+//!
+//!     cargo bench --bench hotpath
+
+use std::collections::HashMap;
+
+use dfq::engine::int::IntEngine;
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::graph::ModuleKind;
+use dfq::models::resnet;
+use dfq::prelude::*;
+use dfq::quant::algo1::{self, ModuleProblem, SearchConfig};
+use dfq::quant::joint::{CalibConfig, JointCalibrator};
+use dfq::quant::scheme;
+use dfq::tensor::im2col::{im2col, Padding};
+use dfq::tensor::{ops_int, TensorI32};
+use dfq::util::timer::{bench, fmt_secs, Stats};
+
+fn report(name: &str, macs_or_elems: f64, unit: &str, st: &Stats) {
+    println!(
+        "{name:<42} median {:>10}  p95 {:>10}  {:>8.2} {unit}",
+        fmt_secs(st.median()),
+        fmt_secs(st.percentile(95.0)),
+        macs_or_elems / st.median() / 1e9,
+    );
+}
+
+fn main() {
+    let mut rng = Pcg::new(99);
+
+    // --- integer GEMM (im2col'd 3x3x64 conv over a 16x16x64 fmap) ---
+    let (m, k, n) = (256usize, 576usize, 64usize);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.int_range(0, 256) as i32).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.int_range(-128, 128) as i32).collect();
+    let st = bench(3, 20, || {
+        std::hint::black_box(ops_int::gemm_i32(&a, &b, m, k, n));
+    });
+    report("int GEMM 256x576x64", (m * k * n) as f64, "GMAC/s", &st);
+
+    // --- f32 GEMM, same shape (the FP oracle's core) ---
+    let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+    let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+    let st = bench(3, 20, || {
+        std::hint::black_box(dfq::tensor::ops::gemm_f32(&af, &bf, m, k, n));
+    });
+    report("f32 GEMM 256x576x64", (m * k * n) as f64, "GFLOP/s", &st);
+
+    // --- requantization shift over 1M accumulators ---
+    let acc = TensorI32::from_vec(
+        &[1 << 20],
+        (0..1 << 20).map(|_| rng.int_range(-(1 << 24), 1 << 24) as i32).collect(),
+    );
+    let st = bench(3, 20, || {
+        std::hint::black_box(scheme::requantize_tensor(&acc, 9, 8, true));
+    });
+    report("requantize 1M accumulators", (1 << 20) as f64, "Gelem/s", &st);
+
+    // --- im2col 32x32x16, k3 ---
+    let x = TensorI32::from_vec(
+        &[1, 32, 32, 16],
+        (0..32 * 32 * 16).map(|_| rng.int_range(0, 256) as i32).collect(),
+    );
+    let st = bench(3, 20, || {
+        std::hint::black_box(im2col(&x, 3, 3, 1, Padding::Same));
+    });
+    report("im2col 32x32x16 k3", (32 * 32 * 16 * 9) as f64, "Gelem/s", &st);
+
+    // --- one unified module (conv+bias+relu+requant) ---
+    let w = TensorI32::from_vec(
+        &[3, 3, 16, 16],
+        (0..9 * 256).map(|_| rng.int_range(-128, 128) as i32).collect(),
+    );
+    let st = bench(3, 20, || {
+        let acc = ops_int::conv2d_acc(&x, &w, 1, Padding::Same);
+        std::hint::black_box(scheme::requantize_tensor(&acc, 9, 8, true));
+    });
+    report("unified module 32x32x16->16 k3", (32 * 32 * 9 * 256) as f64, "GMAC/s", &st);
+
+    // --- the whole models, FP weights from He-init ---
+    let graph = resnet::resnet_graph("resnet_s", 1, 10);
+    let mut folded: HashMap<String, FoldedParams> = HashMap::new();
+    for md in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &md.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let stdv = (2.0 / fan_in as f32).sqrt();
+        let numel: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            md.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..numel).map(|_| rng.normal_ms(0.0, stdv)).collect()),
+                b: vec![0.0; cout],
+            },
+        );
+    }
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 1);
+    let spec = JointCalibrator::new(CalibConfig::default())
+        .calibrate(&graph, &folded, &calib)
+        .spec;
+    let eng = IntEngine::new(&graph, &folded, &spec);
+    let xb = dfq::data::dataset::synth_images(8, 32, 3, 2);
+    let macs = graph.total_macs() as f64 * 8.0;
+    let st = bench(1, 10, || {
+        std::hint::black_box(eng.run(&xb));
+    });
+    report("resnet_s int8 e2e (batch 8)", macs, "GMAC/s", &st);
+    println!(
+        "  -> per image {}  ({:.1} img/s)",
+        fmt_secs(st.median() / 8.0),
+        8.0 / st.median()
+    );
+
+    // --- Algorithm-1 single-module search (calibration inner loop) ---
+    let module = graph.module("s0b0/c1").unwrap();
+    let x_int = scheme::quantize_tensor(&calib, spec.input_frac, 8, false);
+    let stem_out = {
+        let mut acts = HashMap::new();
+        acts.insert("input".to_string(), x_int.clone());
+        eng.run_module(graph.module("stem").unwrap(), &acts)
+    };
+    let p = &folded["s0b0/c1"];
+    let fp_engine = dfq::engine::fp::FpEngine::new(&graph, &folded);
+    let facts = fp_engine.run_acts(&calib);
+    let problem = ModuleProblem {
+        module,
+        x_int: &stem_out,
+        n_x: spec.modules["stem"].n_o,
+        w: &p.w,
+        b: &p.b,
+        res: None,
+        target: &facts["s0b0/c1"],
+    };
+    let st = bench(1, 10, || {
+        std::hint::black_box(algo1::search(&problem, SearchConfig::default()));
+    });
+    report("Algorithm-1 search (one module, tau=4)", 125.0, "kcand/s", &st);
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate paper Table 1 (ResNet-S/M/L, FP vs 8-bit methods)
+//! and time the end-to-end quantized evaluation.
+//!
+//!     cargo bench --bench table1 [-- eval_n]
+//!
+//! Requires `make artifacts`; exits 0 with a notice otherwise (so
+//! `cargo bench` works in a fresh checkout).
+
+use dfq::coordinator::pool::Pool;
+use dfq::prelude::*;
+use dfq::report::experiments::{self, EvalOptions};
+use dfq::util::timer::Timer;
+
+fn main() {
+    let eval_n: usize = std::env::args()
+        .filter(|a| a.chars().all(|c| c.is_ascii_digit()))
+        .next_back()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(600);
+    let art = match Artifacts::open("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            println!("SKIP table1: {e}");
+            return;
+        }
+    };
+    let opt = EvalOptions { eval_n, ..Default::default() };
+    let pool = Pool::auto();
+    let t = Timer::start();
+    match experiments::table1(&art, &pool, opt) {
+        Ok(table) => {
+            println!("{}", table.render());
+            println!("regenerated in {:.1}s (eval_n={eval_n})", t.secs());
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/table1.csv", table.to_csv()).ok();
+        }
+        Err(e) => println!("table1 failed: {e}"),
+    }
+}

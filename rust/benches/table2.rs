@@ -1,0 +1,56 @@
+//! Bench: paper Table 2 — joint-quantization (calibration) wall-clock per
+//! network depth, plus the τ / calibration-set-size ablation and the
+//! serial-vs-parallel coordinator comparison.
+//!
+//!     cargo bench --bench table2
+
+use dfq::coordinator::calib::calibrate_parallel;
+use dfq::coordinator::pool::Pool;
+use dfq::prelude::*;
+use dfq::quant::joint::{CalibConfig, JointCalibrator};
+use dfq::report::experiments::{self, EvalOptions};
+use dfq::util::timer::{bench, fmt_secs};
+
+fn main() {
+    let art = match Artifacts::open("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            println!("SKIP table2: {e}");
+            return;
+        }
+    };
+    let opt = EvalOptions { eval_n: 300, ..Default::default() };
+    match experiments::table2(&art, opt) {
+        Ok(t) => {
+            println!("{}", t.render());
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/table2.csv", t.to_csv()).ok();
+        }
+        Err(e) => println!("table2 failed: {e}"),
+    }
+    match experiments::table2_ablation(&art, opt) {
+        Ok(t) => {
+            println!("{}", t.render());
+            std::fs::write("results/table2_ablation.csv", t.to_csv()).ok();
+        }
+        Err(e) => println!("table2 ablation failed: {e}"),
+    }
+
+    // serial vs parallel calibration timing on resnet_m
+    let bundle = art.load_model("resnet_m").unwrap();
+    let calib = art.calibration_images(1).unwrap();
+    let cfg = CalibConfig::default();
+    let serial = bench(1, 3, || {
+        JointCalibrator::new(cfg).calibrate(&bundle.graph, &bundle.folded, &calib);
+    });
+    let pool = Pool::auto();
+    let par = bench(1, 3, || {
+        calibrate_parallel(&pool, cfg, &bundle.graph, &bundle.folded, &calib);
+    });
+    println!(
+        "resnet_m calibration: serial {} | parallel({} workers) {}",
+        fmt_secs(serial.median()),
+        pool.workers(),
+        fmt_secs(par.median())
+    );
+}

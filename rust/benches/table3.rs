@@ -1,0 +1,34 @@
+//! Bench: paper Table 3 — ResNet-S accuracy across quantization methods
+//! and bit-widths (codebook / pow2-INQ / affine 5-5 / ternary / ours).
+//!
+//!     cargo bench --bench table3 [-- eval_n]
+
+use dfq::prelude::*;
+use dfq::report::experiments::{self, EvalOptions};
+use dfq::util::timer::Timer;
+
+fn main() {
+    let eval_n: usize = std::env::args()
+        .filter(|a| a.chars().all(|c| c.is_ascii_digit()))
+        .next_back()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(600);
+    let art = match Artifacts::open("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            println!("SKIP table3: {e}");
+            return;
+        }
+    };
+    let opt = EvalOptions { eval_n, ..Default::default() };
+    let t = Timer::start();
+    match experiments::table3(&art, opt) {
+        Ok(table) => {
+            println!("{}", table.render());
+            println!("regenerated in {:.1}s (eval_n={eval_n})", t.secs());
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/table3.csv", table.to_csv()).ok();
+        }
+        Err(e) => println!("table3 failed: {e}"),
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench: paper Table 4 — SynthKITTI detection AP at FP/8/7/6-bit.
+//!
+//!     cargo bench --bench table4 [-- eval_n]
+
+use dfq::prelude::*;
+use dfq::report::experiments::{self, EvalOptions};
+use dfq::util::timer::Timer;
+
+fn main() {
+    let eval_n: usize = std::env::args()
+        .filter(|a| a.chars().all(|c| c.is_ascii_digit()))
+        .next_back()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(250);
+    let art = match Artifacts::open("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            println!("SKIP table4: {e}");
+            return;
+        }
+    };
+    let opt = EvalOptions { eval_n, batch: 25, calib_n: 1 };
+    let t = Timer::start();
+    match experiments::table4(&art, opt) {
+        Ok(table) => {
+            println!("{}", table.render());
+            println!("regenerated in {:.1}s (eval_n={eval_n})", t.secs());
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/table4.csv", table.to_csv()).ok();
+        }
+        Err(e) => println!("table4 failed: {e}"),
+    }
+}

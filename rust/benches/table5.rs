@@ -1,0 +1,24 @@
+//! Bench: paper Table 5 — requantization-operator hardware cost — plus
+//! the abstract's headline ratios and the intro's ~4x compute/memory
+//! claim. Artifact-free (pure cost model), always runs.
+//!
+//!     cargo bench --bench table5
+
+use dfq::models::resnet;
+use dfq::report::experiments;
+
+fn main() {
+    let t = experiments::table5();
+    println!("{}", t.render());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table5.csv", t.to_csv()).ok();
+
+    println!("paper Table 5 reference: scaling 30.6 mW / 502.7 um^2,");
+    println!("                        codebook 228.8 mW / 1787.6 um^2,");
+    println!("                        bit-shift 15.5 mW / 198.2 um^2\n");
+
+    let graph = resnet::resnet_graph("resnet_l", 5, 10);
+    let t = experiments::headline(&graph);
+    println!("{}", t.render());
+    std::fs::write("results/headline.csv", t.to_csv()).ok();
+}

@@ -1,0 +1,233 @@
+//! Parallel calibration orchestration: the per-module Algorithm-1 grid
+//! is embarrassingly parallel across its `N_w` branches (each branch owns
+//! one conv evaluation), and table-level work is parallel across
+//! (model × method × bit-width) jobs. Both fan out over the shared
+//! [`Pool`].
+
+use std::collections::HashMap;
+
+use crate::coordinator::pool::Pool;
+use crate::graph::bn_fold::FoldedParams;
+use crate::graph::{Graph, ModuleKind};
+use crate::quant::algo1::{self, ModuleProblem, SearchConfig};
+use crate::quant::joint::{CalibConfig, CalibOutcome, JointCalibrator};
+use crate::quant::params::QuantSpec;
+use crate::quant::scheme;
+use crate::quant::stats::{CalibStats, ModuleStat};
+use crate::tensor::{Tensor, TensorI32};
+use crate::util::mathutil::mse;
+use crate::util::timer::Timer;
+
+/// Joint calibration with the `N_w` branches of every module's grid
+/// search evaluated on the pool. Numerically identical to
+/// [`JointCalibrator::calibrate`] (asserted by a unit test).
+pub fn calibrate_parallel(
+    pool: &Pool,
+    cfg: CalibConfig,
+    graph: &Graph,
+    folded: &HashMap<String, FoldedParams>,
+    calib: &Tensor,
+) -> CalibOutcome {
+    let timer = Timer::start();
+    let scfg = SearchConfig { n_bits: cfg.n_bits, tau: cfg.tau };
+    let fp = crate::engine::fp::FpEngine::new(graph, folded);
+    let fp_acts = fp.run_acts(calib);
+
+    let mut spec = QuantSpec::new(cfg.n_bits);
+    spec.input_frac = algo1::search_input_frac(calib, cfg.n_bits, cfg.tau);
+    let mut stats = CalibStats::default();
+    let mut iacts: HashMap<String, TensorI32> = HashMap::new();
+    iacts.insert(
+        "input".to_string(),
+        scheme::quantize_tensor(calib, spec.input_frac, cfg.n_bits, false),
+    );
+
+    for m in &graph.modules {
+        match &m.kind {
+            ModuleKind::Gap => {
+                let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
+                let out = eng.run_module(m, &iacts);
+                let n = spec.value_frac(graph, &m.src);
+                let deq = scheme::dequantize_tensor(&out, n);
+                stats.push(ModuleStat {
+                    name: m.name.clone(),
+                    fig1_case: m.fig1_case(),
+                    mse: mse(&deq.data, &fp_acts[&m.name].data),
+                    n_w: 0,
+                    n_b: 0,
+                    n_o: n,
+                    out_shift: 0,
+                    error: 0.0,
+                });
+                iacts.insert(m.name.clone(), out);
+            }
+            _ => {
+                let p = &folded[&m.name];
+                let n_x = spec.value_frac(graph, &m.src);
+                let res = m.res.as_ref().map(|r| (&iacts[r], spec.value_frac(graph, r)));
+                let problem = ModuleProblem {
+                    module: m,
+                    x_int: &iacts[&m.src],
+                    n_x,
+                    w: &p.w,
+                    b: &p.b,
+                    res,
+                    target: &fp_acts[&m.name],
+                };
+                // fan the N_w branches across the pool
+                let cands = algo1::weight_candidates(&problem, scfg);
+                let branch_results = pool.run(
+                    cands
+                        .iter()
+                        .map(|&n_w| {
+                            let pr = &problem;
+                            move || algo1::search_nw(pr, scfg, n_w)
+                        })
+                        .collect(),
+                );
+                let mut best = branch_results[0];
+                let mut evaluated = 0usize;
+                for r in &branch_results {
+                    evaluated += r.evaluated;
+                    if r.error < best.error {
+                        best = *r;
+                    }
+                }
+                let _ = evaluated;
+                spec.modules.insert(m.name.clone(), best.shifts);
+                let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
+                let out = eng.run_module(m, &iacts);
+                let deq = scheme::dequantize_tensor(&out, best.shifts.n_o);
+                stats.push(ModuleStat {
+                    name: m.name.clone(),
+                    fig1_case: m.fig1_case(),
+                    mse: mse(&deq.data, &fp_acts[&m.name].data),
+                    n_w: best.shifts.n_w,
+                    n_b: best.shifts.n_b,
+                    n_o: best.shifts.n_o,
+                    out_shift: best.shifts.out_shift(n_x),
+                    error: best.error,
+                });
+                iacts.insert(m.name.clone(), out);
+            }
+        }
+    }
+    CalibOutcome { spec, stats, seconds: timer.secs() }
+}
+
+/// A named calibration job for table-level fan-out.
+pub struct CalibJob<'a> {
+    /// label (e.g. `resnet_m@8bit`)
+    pub label: String,
+    /// graph to calibrate
+    pub graph: &'a Graph,
+    /// its folded params
+    pub folded: &'a HashMap<String, FoldedParams>,
+    /// calibration batch
+    pub calib: &'a Tensor,
+    /// config
+    pub cfg: CalibConfig,
+}
+
+/// Run many calibrations concurrently (one worker per job; each job's
+/// inner search stays serial to avoid nested pools).
+pub fn calibrate_many(pool: &Pool, jobs: Vec<CalibJob<'_>>) -> Vec<(String, CalibOutcome)> {
+    pool.run(
+        jobs.into_iter()
+            .map(|job| {
+                move || {
+                    let out = JointCalibrator::new(job.cfg)
+                        .calibrate(job.graph, job.folded, job.calib);
+                    (job.label, out)
+                }
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::UnifiedModule;
+
+    fn toy() -> (Graph, HashMap<String, FoldedParams>, Tensor) {
+        let graph = Graph {
+            name: "toy".into(),
+            input_hwc: (8, 8, 3),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 4, cout: 4, stride: 2 },
+                    src: "c0".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut rng = crate::util::rng::Pcg::new(41);
+        let mut folded = HashMap::new();
+        for m in graph.weight_modules() {
+            if let ModuleKind::Conv { kh, kw, cin, cout, .. } = m.kind {
+                let n = kh * kw * cin * cout;
+                folded.insert(
+                    m.name.clone(),
+                    FoldedParams {
+                        w: Tensor::from_vec(
+                            &[kh, kw, cin, cout],
+                            (0..n).map(|_| rng.normal_ms(0.0, 0.3)).collect(),
+                        ),
+                        b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+                    },
+                );
+            }
+        }
+        let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
+        (graph, folded, x)
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let (graph, folded, x) = toy();
+        let cfg = CalibConfig::default();
+        let serial = JointCalibrator::new(cfg).calibrate(&graph, &folded, &x);
+        let pool = Pool::new(4);
+        let par = calibrate_parallel(&pool, cfg, &graph, &folded, &x);
+        assert_eq!(par.spec.input_frac, serial.spec.input_frac);
+        for (k, v) in &serial.spec.modules {
+            assert_eq!(par.spec.modules[k], *v, "module {k}");
+        }
+    }
+
+    #[test]
+    fn calibrate_many_labels_preserved() {
+        let (graph, folded, x) = toy();
+        let pool = Pool::new(2);
+        let jobs = vec![
+            CalibJob {
+                label: "a".into(),
+                graph: &graph,
+                folded: &folded,
+                calib: &x,
+                cfg: CalibConfig::default(),
+            },
+            CalibJob {
+                label: "b".into(),
+                graph: &graph,
+                folded: &folded,
+                calib: &x,
+                cfg: CalibConfig { n_bits: 6, ..Default::default() },
+            },
+        ];
+        let out = calibrate_many(&pool, jobs);
+        assert_eq!(out[0].0, "a");
+        assert_eq!(out[1].0, "b");
+        assert_eq!(out[1].1.spec.n_bits, 6);
+    }
+}

@@ -1,0 +1,9 @@
+//! The L3 coordinator: a work-stealing thread pool ([`pool`]), the
+//! parallel calibration orchestrator ([`calib`]) that fans Algorithm-1
+//! candidate branches and whole-model jobs across workers, and the
+//! batching inference service ([`serve`]) that owns the request loop at
+//! deployment time (python is nowhere in this path).
+
+pub mod calib;
+pub mod pool;
+pub mod serve;

@@ -1,0 +1,124 @@
+//! A small fixed-size thread pool over `std::thread::scope` — no
+//! external dependencies (the offline registry has no rayon/tokio).
+//! Jobs are closures pulled from a shared queue; results return in
+//! submission order.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Fixed-size scoped thread pool.
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// Pool with `workers` threads (min 1).
+    pub fn new(workers: usize) -> Self {
+        Pool { workers: workers.max(1) }
+    }
+
+    /// Pool sized to the machine.
+    pub fn auto() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Pool::new(n)
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run all jobs; returns results in submission order. Panics in jobs
+    /// propagate (fail fast — calibration must not silently lose a
+    /// candidate).
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // single worker or single job: run inline (no thread overhead)
+        if self.workers == 1 || n == 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let queue: Mutex<VecDeque<(usize, F)>> =
+            Mutex::new(jobs.into_iter().enumerate().collect());
+        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                s.spawn(|| loop {
+                    let job = queue.lock().unwrap().pop_front();
+                    match job {
+                        Some((i, f)) => {
+                            let out = f();
+                            *results[i].lock().unwrap() = Some(out);
+                        }
+                        None => break,
+                    }
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("job completed"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_submission_order() {
+        let pool = Pool::new(4);
+        let jobs: Vec<_> = (0..32)
+            .map(|i| {
+                move || {
+                    // jitter completion order
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        ((31 - i) * 50) as u64,
+                    ));
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_execute_exactly_once() {
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        let pool = Pool::new(3);
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                || {
+                    COUNT.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(COUNT.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let pool = Pool::new(2);
+        let out: Vec<i32> = pool.run(Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
+        let out = pool.run(vec![|| 42]);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn auto_pool_has_workers() {
+        assert!(Pool::auto().workers() >= 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! The batching inference service — the deployment request loop. Clients
+//! submit single images over a channel; a collector thread groups them
+//! into batches (up to the backend's batch size, bounded by a wait
+//! budget), runs the backend (PJRT executable or the integer engine) and
+//! fans responses back. Latency percentiles are tracked for the serve
+//! demo / perf pass.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+/// Something that can run a fixed-size batch of normalised images and
+/// return per-image outputs (e.g. logits).
+pub trait Backend: Send + Sync {
+    /// the batch size the backend expects (requests are padded to it)
+    fn batch_size(&self) -> usize;
+    /// run a full batch `(B, H, W, C)` -> `(B, out_dim)`
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String>;
+}
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// max time to wait for a batch to fill
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_wait: Duration::from_millis(5) }
+    }
+}
+
+struct Request {
+    image: Tensor, // (1, H, W, C)
+    resp: Sender<Result<Vec<f32>, String>>,
+    submitted: Instant,
+}
+
+/// Latency/throughput counters.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// completed requests
+    pub completed: usize,
+    /// executed batches
+    pub batches: usize,
+    /// per-request latencies (seconds)
+    pub latencies: Vec<f64>,
+    /// batch occupancy sum (for mean occupancy)
+    pub occupancy_sum: usize,
+}
+
+impl ServeMetrics {
+    /// p-th latency percentile in seconds.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        crate::util::timer::Stats::from(self.latencies.clone()).percentile(p)
+    }
+
+    /// Mean batch occupancy.
+    pub fn mean_occupancy(&self) -> f64 {
+        self.occupancy_sum as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// Handle to a running service.
+pub struct InferenceService {
+    tx: Option<Sender<Request>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+}
+
+impl InferenceService {
+    /// Start the collector thread over a backend.
+    pub fn start(backend: Arc<dyn Backend>, cfg: ServeConfig) -> InferenceService {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || collector(rx, backend, cfg, m2));
+        InferenceService { tx: Some(tx), worker: Some(worker), metrics }
+    }
+
+    /// Submit one image (`(1, H, W, C)` normalised) and wait for its
+    /// output row.
+    pub fn infer(&self, image: Tensor) -> Result<Vec<f32>, String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send(Request { image, resp: rtx, submitted: Instant::now() })
+            .map_err(|_| "service stopped".to_string())?;
+        rrx.recv().map_err(|_| "service dropped request".to_string())?
+    }
+
+    /// Snapshot the metrics.
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop and join.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            w.join().ok();
+        }
+        let m = self.metrics.lock().unwrap().clone();
+        m
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            w.join().ok();
+        }
+    }
+}
+
+fn collector(
+    rx: Receiver<Request>,
+    backend: Arc<dyn Backend>,
+    cfg: ServeConfig,
+    metrics: Arc<Mutex<ServeMetrics>>,
+) {
+    let bsz = backend.batch_size().max(1);
+    loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < bsz {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        run_batch(&pending, backend.as_ref(), bsz, &metrics);
+    }
+}
+
+fn run_batch(
+    pending: &[Request],
+    backend: &dyn Backend,
+    bsz: usize,
+    metrics: &Arc<Mutex<ServeMetrics>>,
+) {
+    // assemble, padding the tail with zeros
+    let dims = pending[0].image.shape.dims().to_vec();
+    let per = dims[1] * dims[2] * dims[3];
+    let mut data = vec![0.0f32; bsz * per];
+    for (i, r) in pending.iter().enumerate() {
+        data[i * per..(i + 1) * per].copy_from_slice(&r.image.data);
+    }
+    let batch = Tensor::from_vec(&[bsz, dims[1], dims[2], dims[3]], data);
+    match backend.run_batch(&batch) {
+        Ok(out) => {
+            let odim = out.numel() / bsz;
+            let mut m = metrics.lock().unwrap();
+            m.batches += 1;
+            m.occupancy_sum += pending.len();
+            for (i, r) in pending.iter().enumerate() {
+                let row = out.data[i * odim..(i + 1) * odim].to_vec();
+                m.completed += 1;
+                m.latencies.push(r.submitted.elapsed().as_secs_f64());
+                r.resp.send(Ok(row)).ok();
+            }
+        }
+        Err(e) => {
+            for r in pending {
+                r.resp.send(Err(e.clone())).ok();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A backend that sums each image's pixels.
+    struct SumBackend {
+        batch: usize,
+    }
+
+    impl Backend for SumBackend {
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
+            let b = batch.shape.dim(0);
+            let per = batch.numel() / b;
+            let mut out = Vec::with_capacity(b);
+            for i in 0..b {
+                out.push(batch.data[i * per..(i + 1) * per].iter().sum::<f32>());
+            }
+            Ok(Tensor::from_vec(&[b, 1], out))
+        }
+    }
+
+    fn img(v: f32) -> Tensor {
+        Tensor::from_vec(&[1, 2, 2, 1], vec![v; 4])
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let svc = InferenceService::start(
+            Arc::new(SumBackend { batch: 4 }),
+            ServeConfig { max_wait: Duration::from_millis(1) },
+        );
+        let out = svc.infer(img(1.5)).unwrap();
+        assert_eq!(out, vec![6.0]);
+        let m = svc.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.batches, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_batched() {
+        let svc = Arc::new(InferenceService::start(
+            Arc::new(SumBackend { batch: 8 }),
+            ServeConfig { max_wait: Duration::from_millis(30) },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let s = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                s.infer(img(i as f32)).unwrap()[0]
+            }));
+        }
+        let outs: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(*o, 4.0 * i as f32);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 8);
+        // batching happened: fewer batches than requests
+        assert!(m.batches < 8, "batches {}", m.batches);
+        assert!(m.mean_occupancy() > 1.0);
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let svc = InferenceService::start(
+            Arc::new(SumBackend { batch: 2 }),
+            ServeConfig::default(),
+        );
+        svc.infer(img(1.0)).unwrap();
+        let m = svc.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+}

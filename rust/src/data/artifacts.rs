@@ -1,0 +1,213 @@
+//! The artifact-directory façade: one handle over everything
+//! `make artifacts` produced — the manifest, model specs, weights,
+//! datasets and HLO files — so examples and the CLI need a single line
+//! to get a ready-to-run model.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::graph::bn_fold::{fold_bn, FoldedParams};
+use crate::graph::Graph;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::dataset::{ClassificationSet, DetectionSet};
+use super::dfqt;
+
+/// An opened artifacts directory.
+pub struct Artifacts {
+    root: PathBuf,
+    manifest: Json,
+}
+
+/// A model ready for deployment work: graph + raw + folded parameters.
+pub struct ModelBundle {
+    /// the unified-module graph (from the manifest spec)
+    pub graph: Graph,
+    /// raw exported parameters (incl. BN stats)
+    pub params: HashMap<String, Tensor>,
+    /// BN-folded parameters
+    pub folded: HashMap<String, FoldedParams>,
+}
+
+impl Artifacts {
+    /// Open `root` (usually `artifacts/`) and parse the manifest.
+    pub fn open(root: impl AsRef<Path>) -> Result<Artifacts, String> {
+        let root = root.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts`)", mpath.display()))?;
+        let manifest = Json::parse(&text).map_err(|e| format!("manifest: {e}"))?;
+        Ok(Artifacts { root, manifest })
+    }
+
+    /// The artifacts root path.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Json {
+        &self.manifest
+    }
+
+    /// Names of the exported models.
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The manifest entry for one model.
+    pub fn model_entry(&self, name: &str) -> Result<&Json, String> {
+        self.manifest
+            .req("models")?
+            .get(name)
+            .ok_or_else(|| format!("model '{name}' not in manifest"))
+    }
+
+    /// Load a model: graph from the manifest spec + weights + folding.
+    pub fn load_model(&self, name: &str) -> Result<ModelBundle, String> {
+        let entry = self.model_entry(name)?;
+        let graph = Graph::from_manifest_spec(name, entry.req("spec")?)?;
+        let wrel = entry.req("weights")?.as_str().ok_or("weights path")?;
+        let params = dfqt::read_weights(&self.root.join(wrel))?;
+        let folded = fold_bn(&graph, &params)?;
+        Ok(ModelBundle { graph, params, folded })
+    }
+
+    /// Absolute path of a model's HLO artifact of a given kind
+    /// (`fp_logits`, `fp_acts`, `q_logits`).
+    pub fn hlo_path(&self, model: &str, kind: &str) -> Result<PathBuf, String> {
+        let entry = self.model_entry(model)?;
+        let rel = entry
+            .req("artifacts")?
+            .req(kind)?
+            .req("path")?
+            .as_str()
+            .ok_or("artifact path")?;
+        Ok(self.root.join(rel))
+    }
+
+    /// The batch size an eval artifact was lowered with.
+    pub fn artifact_batch(&self, model: &str, kind: &str) -> Result<usize, String> {
+        self.model_entry(model)?
+            .req("artifacts")?
+            .req(kind)?
+            .req("batch")?
+            .as_usize()
+            .ok_or_else(|| "batch".to_string())
+    }
+
+    /// Load a named dataset split.
+    pub fn classification_set(&self, key: &str) -> Result<ClassificationSet, String> {
+        let rel = self
+            .manifest
+            .req("datasets")?
+            .req(key)?
+            .as_str()
+            .ok_or("dataset path")?;
+        ClassificationSet::load(&self.root.join(rel))
+    }
+
+    /// Load a detection dataset split.
+    pub fn detection_set(&self, key: &str) -> Result<DetectionSet, String> {
+        let rel = self
+            .manifest
+            .req("datasets")?
+            .req(key)?
+            .as_str()
+            .ok_or("dataset path")?;
+        DetectionSet::load(&self.root.join(rel))
+    }
+
+    /// First `n` validation images as one normalised batch — the
+    /// calibration set (the paper uses n = 1).
+    pub fn calibration_images(&self, n: usize) -> Result<Tensor, String> {
+        let ds = self.classification_set("synthimagenet_val")?;
+        Ok(ds.batch(0, n).0)
+    }
+
+    /// The per-shape qmodule artifact list (path + geometry).
+    pub fn qmodules(&self) -> Result<&[Json], String> {
+        self.manifest
+            .req("qmodules")?
+            .as_arr()
+            .ok_or_else(|| "qmodules".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a minimal fake artifacts dir to exercise the façade without
+    /// the real build (the real one is covered by integration tests).
+    fn fake_artifacts() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dfq_fake_art_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("weights")).unwrap();
+        std::fs::create_dir_all(dir.join("data")).unwrap();
+        // weights: one conv (no bn) + dense
+        let w = Tensor::from_vec(&[1, 1, 1, 2], vec![1.0, -1.0]);
+        let b = Tensor::from_vec(&[2], vec![0.0, 0.5]);
+        let fw = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let fb = Tensor::from_vec(&[2], vec![0.0, 0.0]);
+        dfqt::write_dfqt(
+            &dir.join("weights/tiny.dfqt"),
+            &[
+                ("c/w".into(), dfqt::AnyTensor::F32(w)),
+                ("c/b".into(), dfqt::AnyTensor::F32(b)),
+                ("fc/w".into(), dfqt::AnyTensor::F32(fw)),
+                ("fc/b".into(), dfqt::AnyTensor::F32(fb)),
+            ],
+        )
+        .unwrap();
+        let manifest = r#"{
+          "models": {"tiny": {
+            "spec": {"input": {"h": 2, "w": 2, "c": 1}, "modules": [
+              {"name": "c", "kind": "conv", "kh":1, "kw":1, "cin":1,
+               "cout":2, "stride":1, "relu": true, "src": "input"},
+              {"name": "gap", "kind": "gap", "src": "c"},
+              {"name": "fc", "kind": "dense", "cin":2, "cout":2,
+               "relu": false, "src": "gap"}
+            ]},
+            "weights": "weights/tiny.dfqt",
+            "artifacts": {"q_logits": {"path": "hlo/x.hlo.txt", "batch": 4,
+                                        "inputs": [], "outputs": ["fc"]}}
+          }},
+          "qmodules": [],
+          "datasets": {},
+          "eval_batch": 4
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        dir
+    }
+
+    #[test]
+    fn open_load_and_query() {
+        let dir = fake_artifacts();
+        let art = Artifacts::open(&dir).unwrap();
+        assert_eq!(art.model_names(), vec!["tiny"]);
+        let bundle = art.load_model("tiny").unwrap();
+        assert_eq!(bundle.graph.modules.len(), 3);
+        assert_eq!(bundle.folded["c"].b, vec![0.0, 0.5]);
+        assert_eq!(art.artifact_batch("tiny", "q_logits").unwrap(), 4);
+        assert!(art
+            .hlo_path("tiny", "q_logits")
+            .unwrap()
+            .ends_with("hlo/x.hlo.txt"));
+        assert!(art.load_model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = match Artifacts::open("/nonexistent/path") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,234 @@
+//! Dataset containers + the shared normalisation, plus a rust-native
+//! synthetic sample generator for tests and the serve demo (the training
+//! datasets themselves are generated at build time by
+//! `python/compile/data.py` and loaded from `.dfqt`).
+
+use std::path::Path;
+
+use crate::metrics::map::{BBox, GroundTruth};
+use crate::tensor::{Tensor, TensorBase};
+use crate::util::rng::Pcg;
+
+use super::dfqt::{self, AnyTensor};
+
+/// The one true image normalisation: `(u8/255 − 0.5) / 0.25` — mirrored
+/// in `python/compile/data.py::normalize`.
+pub fn normalize_u8(img: &TensorBase<u8>) -> Tensor {
+    Tensor {
+        shape: img.shape.clone(),
+        data: img
+            .data
+            .iter()
+            .map(|&v| (v as f32 / 255.0 - 0.5) / 0.25)
+            .collect(),
+    }
+}
+
+/// A classification dataset (images u8 NHWC + labels).
+pub struct ClassificationSet {
+    /// raw images
+    pub images: TensorBase<u8>,
+    /// class labels
+    pub labels: Vec<i32>,
+}
+
+impl ClassificationSet {
+    /// Load from a `.dfqt` written by the build pipeline.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let map = dfqt::read_dfqt_map(path)?;
+        let images = map
+            .get("images")
+            .ok_or("missing 'images'")?
+            .as_u8()?
+            .clone();
+        let labels = match map.get("labels").ok_or("missing 'labels'")? {
+            AnyTensor::I32(t) => t.data.clone(),
+            AnyTensor::I64(t) => t.data.iter().map(|&v| v as i32).collect(),
+            _ => return Err("labels must be integer".into()),
+        };
+        if images.shape.dim(0) != labels.len() {
+            return Err("image/label count mismatch".into());
+        }
+        Ok(ClassificationSet { images, labels })
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Normalised f32 batch `[start, start+n)` (clamped to the end).
+    pub fn batch(&self, start: usize, n: usize) -> (Tensor, &[i32]) {
+        let end = (start + n).min(self.len());
+        let dims = self.images.shape.dims();
+        let per = dims[1] * dims[2] * dims[3];
+        let img = TensorBase::from_vec(
+            &[end - start, dims[1], dims[2], dims[3]],
+            self.images.data[start * per..end * per].to_vec(),
+        );
+        (normalize_u8(&img), &self.labels[start..end])
+    }
+}
+
+/// A detection dataset (images + padded object labels).
+pub struct DetectionSet {
+    /// raw images
+    pub images: TensorBase<u8>,
+    /// labels (N, MAX_OBJECTS, 6): (present, class, cx, cy, w, h)
+    pub labels: Tensor,
+}
+
+impl DetectionSet {
+    /// Load from `.dfqt`.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let map = dfqt::read_dfqt_map(path)?;
+        let images = map
+            .get("images")
+            .ok_or("missing 'images'")?
+            .as_u8()?
+            .clone();
+        let labels = map
+            .get("labels")
+            .ok_or("missing 'labels'")?
+            .as_f32()?
+            .clone();
+        Ok(DetectionSet { images, labels })
+    }
+
+    /// Number of images.
+    pub fn len(&self) -> usize {
+        self.images.shape.dim(0)
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Normalised f32 batch.
+    pub fn batch(&self, start: usize, n: usize) -> Tensor {
+        let end = (start + n).min(self.len());
+        let dims = self.images.shape.dims();
+        let per = dims[1] * dims[2] * dims[3];
+        let img = TensorBase::from_vec(
+            &[end - start, dims[1], dims[2], dims[3]],
+            self.images.data[start * per..end * per].to_vec(),
+        );
+        normalize_u8(&img)
+    }
+
+    /// Ground truths for images `[start, end)`, image ids re-based to 0.
+    pub fn ground_truths(&self, start: usize, end: usize) -> Vec<GroundTruth> {
+        let max_obj = self.labels.shape.dim(1);
+        let mut out = Vec::new();
+        for i in start..end.min(self.len()) {
+            for j in 0..max_obj {
+                let base = (i * max_obj + j) * 6;
+                let row = &self.labels.data[base..base + 6];
+                if row[0] > 0.5 {
+                    out.push(GroundTruth {
+                        image: i - start,
+                        class: row[1] as usize,
+                        bbox: BBox { cx: row[2], cy: row[3], w: row[4], h: row[5] },
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Rust-native synthetic classification images (statistically similar to
+/// the python generator; used by unit tests, property tests and the
+/// serve demo so they need no artifacts).
+pub fn synth_images(n: usize, hw: usize, c: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg::new(seed);
+    let mut data = Vec::with_capacity(n * hw * hw * c);
+    for _ in 0..n {
+        let fx = rng.uniform(0.1, 0.9);
+        let fy = rng.uniform(0.1, 0.9);
+        let phase = rng.uniform(0.0, std::f32::consts::TAU);
+        for y in 0..hw {
+            for x in 0..hw {
+                for ch in 0..c {
+                    let v = ((x as f32 * fx + y as f32 * fy) + phase
+                        + ch as f32).sin()
+                        + 0.3 * rng.normal();
+                    data.push(v.clamp(-2.0, 2.0));
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, hw, hw, c], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_matches_python_constants() {
+        let img = TensorBase::from_vec(&[1, 1, 1, 3], vec![0u8, 127, 255]);
+        let x = normalize_u8(&img);
+        assert!((x.data[0] + 2.0).abs() < 1e-6);
+        assert!((x.data[1] + 0.00784314).abs() < 1e-5);
+        assert!((x.data[2] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn classification_roundtrip_via_dfqt() {
+        let p = std::env::temp_dir().join("dfq_test_cls.dfqt");
+        let imgs = TensorBase::from_vec(&[2, 2, 2, 1], (0u8..8).collect());
+        let labels = crate::tensor::TensorI32::from_vec(&[2], vec![3, 7]);
+        dfqt::write_dfqt(
+            &p,
+            &[
+                ("images".into(), AnyTensor::U8(imgs)),
+                ("labels".into(), AnyTensor::I32(labels)),
+            ],
+        )
+        .unwrap();
+        let ds = ClassificationSet::load(&p).unwrap();
+        assert_eq!(ds.len(), 2);
+        let (batch, labels) = ds.batch(1, 5);
+        assert_eq!(batch.shape.dims(), &[1, 2, 2, 1]);
+        assert_eq!(labels, &[7]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detection_ground_truths_extracted() {
+        let p = std::env::temp_dir().join("dfq_test_det.dfqt");
+        let imgs = TensorBase::from_vec(&[1, 2, 2, 1], vec![0u8; 4]);
+        let mut lab = vec![0.0f32; 2 * 6];
+        lab[..6].copy_from_slice(&[1.0, 2.0, 0.5, 0.5, 0.2, 0.1]);
+        let labels = Tensor::from_vec(&[1, 2, 6], lab);
+        dfqt::write_dfqt(
+            &p,
+            &[
+                ("images".into(), AnyTensor::U8(imgs)),
+                ("labels".into(), AnyTensor::F32(labels)),
+            ],
+        )
+        .unwrap();
+        let ds = DetectionSet::load(&p).unwrap();
+        let gts = ds.ground_truths(0, 1);
+        assert_eq!(gts.len(), 1);
+        assert_eq!(gts[0].class, 2);
+        assert!((gts[0].bbox.w - 0.2).abs() < 1e-6);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn synth_images_deterministic_and_bounded() {
+        let a = synth_images(2, 8, 3, 5);
+        let b = synth_images(2, 8, 3, 5);
+        assert_eq!(a.data, b.data);
+        assert!(a.data.iter().all(|v| (-2.0..=2.0).contains(v)));
+    }
+}

@@ -1,0 +1,305 @@
+//! Reader/writer for the `.dfqt` container (see
+//! `python/compile/dfqt.py` for the format definition — 6-byte magic,
+//! u32 count, then per tensor: name, dtype code, dims, raw
+//! little-endian data). Round-trip compatibility with the python side is
+//! covered by `tests/integration_artifacts.rs`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::{Shape, Tensor, TensorBase, TensorI32};
+
+const MAGIC: &[u8; 6] = b"DFQT1\n";
+
+/// Element type codes (shared with python).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// f32
+    F32 = 0,
+    /// i8
+    I8 = 1,
+    /// i32
+    I32 = 2,
+    /// u8
+    U8 = 3,
+    /// i64
+    I64 = 4,
+}
+
+impl Dtype {
+    fn from_code(c: u8) -> Result<Dtype, String> {
+        Ok(match c {
+            0 => Dtype::F32,
+            1 => Dtype::I8,
+            2 => Dtype::I32,
+            3 => Dtype::U8,
+            4 => Dtype::I64,
+            other => return Err(format!("unknown dtype code {other}")),
+        })
+    }
+
+    fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 | Dtype::U8 => 1,
+            Dtype::I64 => 8,
+        }
+    }
+}
+
+/// A loaded tensor of any supported dtype.
+#[derive(Clone, Debug)]
+pub enum AnyTensor {
+    /// f32
+    F32(Tensor),
+    /// i32 (i8 is widened on load; codes live in i32 lanes everywhere)
+    I32(TensorI32),
+    /// u8 (images)
+    U8(TensorBase<u8>),
+    /// i64 (labels)
+    I64(TensorBase<i64>),
+}
+
+impl AnyTensor {
+    /// Shape of the payload.
+    pub fn shape(&self) -> &Shape {
+        match self {
+            AnyTensor::F32(t) => &t.shape,
+            AnyTensor::I32(t) => &t.shape,
+            AnyTensor::U8(t) => &t.shape,
+            AnyTensor::I64(t) => &t.shape,
+        }
+    }
+
+    /// Unwrap f32 or error.
+    pub fn as_f32(&self) -> Result<&Tensor, String> {
+        match self {
+            AnyTensor::F32(t) => Ok(t),
+            _ => Err("expected f32 tensor".into()),
+        }
+    }
+
+    /// Unwrap i32 or error.
+    pub fn as_i32(&self) -> Result<&TensorI32, String> {
+        match self {
+            AnyTensor::I32(t) => Ok(t),
+            _ => Err("expected i32 tensor".into()),
+        }
+    }
+
+    /// Unwrap u8 or error.
+    pub fn as_u8(&self) -> Result<&TensorBase<u8>, String> {
+        match self {
+            AnyTensor::U8(t) => Ok(t),
+            _ => Err("expected u8 tensor".into()),
+        }
+    }
+}
+
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>, String> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).map_err(|e| e.to_string())?;
+    Ok(buf)
+}
+
+fn u16le(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+
+fn u32le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn u64le(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Read a `.dfqt` file into an ordered name → tensor map.
+pub fn read_dfqt(path: &Path) -> Result<Vec<(String, AnyTensor)>, String> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| format!("open {}: {e}", path.display()))?;
+    let magic = read_exact(&mut f, 6)?;
+    if magic != MAGIC {
+        return Err(format!("bad magic in {}", path.display()));
+    }
+    let count = u32le(&read_exact(&mut f, 4)?) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = u16le(&read_exact(&mut f, 2)?) as usize;
+        let name = String::from_utf8(read_exact(&mut f, name_len)?)
+            .map_err(|e| e.to_string())?;
+        let dtype = Dtype::from_code(read_exact(&mut f, 1)?[0])?;
+        let ndim = read_exact(&mut f, 1)?[0] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32le(&read_exact(&mut f, 4)?) as usize);
+        }
+        let nbytes = u64le(&read_exact(&mut f, 8)?) as usize;
+        let numel: usize = dims.iter().product();
+        if nbytes != numel * dtype.size() {
+            return Err(format!("{name}: byte count mismatch"));
+        }
+        let raw = read_exact(&mut f, nbytes)?;
+        let t = match dtype {
+            Dtype::F32 => AnyTensor::F32(Tensor::from_vec(
+                &dims,
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )),
+            Dtype::I32 => AnyTensor::I32(TensorI32::from_vec(
+                &dims,
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )),
+            Dtype::I8 => AnyTensor::I32(TensorI32::from_vec(
+                &dims,
+                raw.iter().map(|&b| b as i8 as i32).collect(),
+            )),
+            Dtype::U8 => AnyTensor::U8(TensorBase::from_vec(&dims, raw)),
+            Dtype::I64 => AnyTensor::I64(TensorBase::from_vec(
+                &dims,
+                raw.chunks_exact(8)
+                    .map(|c| {
+                        i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                    })
+                    .collect(),
+            )),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+/// Read into a hash map (order-insensitive access).
+pub fn read_dfqt_map(path: &Path) -> Result<HashMap<String, AnyTensor>, String> {
+    Ok(read_dfqt(path)?.into_iter().collect())
+}
+
+/// Write tensors (used by `dfq dump` and the golden-file tests).
+pub fn write_dfqt(path: &Path, tensors: &[(String, AnyTensor)]) -> Result<(), String> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| format!("create {}: {e}", path.display()))?;
+    let mut w = |bytes: &[u8]| f.write_all(bytes).map_err(|e| e.to_string());
+    w(MAGIC)?;
+    w(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w(&(nb.len() as u16).to_le_bytes())?;
+        w(nb)?;
+        let (code, dims, payload): (u8, &[usize], Vec<u8>) = match t {
+            AnyTensor::F32(t) => (
+                0,
+                t.shape.dims(),
+                t.data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            AnyTensor::I32(t) => (
+                2,
+                t.shape.dims(),
+                t.data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            AnyTensor::U8(t) => (3, t.shape.dims(), t.data.clone()),
+            AnyTensor::I64(t) => (
+                4,
+                t.shape.dims(),
+                t.data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+        };
+        w(&[code, dims.len() as u8])?;
+        for d in dims {
+            w(&(*d as u32).to_le_bytes())?;
+        }
+        w(&(payload.len() as u64).to_le_bytes())?;
+        w(&payload)?;
+    }
+    Ok(())
+}
+
+/// Load a weights file as f32 tensors (what the model loaders expect).
+pub fn read_weights(path: &Path) -> Result<HashMap<String, Tensor>, String> {
+    let mut out = HashMap::new();
+    for (name, t) in read_dfqt(path)? {
+        match t {
+            AnyTensor::F32(t) => {
+                out.insert(name, t);
+            }
+            other => {
+                return Err(format!(
+                    "{name}: expected f32 weights, got {:?}",
+                    other.shape()
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let dir = std::env::temp_dir().join("dfq_test_roundtrip.dfqt");
+        let tensors = vec![
+            (
+                "f".to_string(),
+                AnyTensor::F32(Tensor::from_vec(&[2, 2], vec![1.5, -2.5, 0.0, 3.25])),
+            ),
+            (
+                "i".to_string(),
+                AnyTensor::I32(TensorI32::from_vec(&[3], vec![-5, 0, 1 << 30])),
+            ),
+            (
+                "u".to_string(),
+                AnyTensor::U8(TensorBase::from_vec(&[4], vec![0, 127, 200, 255])),
+            ),
+            (
+                "l".to_string(),
+                AnyTensor::I64(TensorBase::from_vec(&[2], vec![-(1i64 << 40), 7])),
+            ),
+        ];
+        write_dfqt(&dir, &tensors).unwrap();
+        let back = read_dfqt(&dir).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back[0].0, "f");
+        assert_eq!(back[0].1.as_f32().unwrap().data, vec![1.5, -2.5, 0.0, 3.25]);
+        assert_eq!(back[1].1.as_i32().unwrap().data, vec![-5, 0, 1 << 30]);
+        assert_eq!(back[2].1.as_u8().unwrap().data, vec![0, 127, 200, 255]);
+        match &back[3].1 {
+            AnyTensor::I64(t) => assert_eq!(t.data, vec![-(1i64 << 40), 7]),
+            _ => panic!("wrong dtype"),
+        }
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = std::env::temp_dir().join("dfq_test_badmagic.dfqt");
+        std::fs::write(&p, b"NOTDFQTxxxx").unwrap();
+        assert!(read_dfqt(&p).unwrap_err().contains("bad magic"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn i8_widens_to_i32() {
+        let p = std::env::temp_dir().join("dfq_test_i8.dfqt");
+        // hand-build an i8 tensor record
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'x');
+        bytes.push(1); // dtype i8
+        bytes.push(1); // ndim
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&[0xFF, 0x00, 0x7F]); // -1, 0, 127
+        std::fs::write(&p, &bytes).unwrap();
+        let back = read_dfqt(&p).unwrap();
+        assert_eq!(back[0].1.as_i32().unwrap().data, vec![-1, 0, 127]);
+        std::fs::remove_file(&p).ok();
+    }
+}

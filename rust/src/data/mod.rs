@@ -1,0 +1,8 @@
+//! Data plumbing: the `.dfqt` tensor interchange format ([`dfqt`]), the
+//! synthetic datasets ([`dataset`]), and the artifact-directory façade
+//! ([`artifacts`]) that ties manifest + weights + datasets + HLO files
+//! together for the rest of the system.
+
+pub mod artifacts;
+pub mod dataset;
+pub mod dfqt;

@@ -1,0 +1,155 @@
+//! The FP oracle engine: executes the unified graph on folded weights in
+//! f32, recording every module's activation (the `O` of Eq. 5).
+
+use std::collections::HashMap;
+
+use crate::graph::bn_fold::FoldedParams;
+use crate::graph::{Graph, ModuleKind};
+use crate::tensor::im2col::Padding;
+use crate::tensor::{ops, Tensor};
+
+/// Floating-point executor over a unified-module graph.
+pub struct FpEngine<'g> {
+    graph: &'g Graph,
+    folded: &'g HashMap<String, FoldedParams>,
+}
+
+impl<'g> FpEngine<'g> {
+    /// Build from a graph and its folded parameters.
+    pub fn new(graph: &'g Graph, folded: &'g HashMap<String, FoldedParams>) -> Self {
+        FpEngine { graph, folded }
+    }
+
+    /// Run a batch, applying `transform(module_name, act)` to every
+    /// module output before it is recorded/consumed downstream. This is
+    /// the fake-quantization hook used by the comparison baselines
+    /// (`quant::baselines`): simulating a quantizer in f32 while the
+    /// dataflow stays exactly the real graph's.
+    pub fn run_acts_transformed<F>(&self, x: &Tensor, transform: F) -> HashMap<String, Tensor>
+    where
+        F: Fn(&str, Tensor) -> Tensor,
+    {
+        let mut acts: HashMap<String, Tensor> = HashMap::new();
+        acts.insert("input".to_string(), transform("input", x.clone()));
+        for m in &self.graph.modules {
+            let src = &acts[&m.src];
+            let mut out = match &m.kind {
+                ModuleKind::Conv { stride, .. } => {
+                    let p = &self.folded[&m.name];
+                    ops::conv2d(src, &p.w, &p.b, *stride, Padding::Same)
+                }
+                ModuleKind::Dense { .. } => {
+                    let p = &self.folded[&m.name];
+                    let flat = src.reshape(&[src.shape.dim(0), src.numel() / src.shape.dim(0)]);
+                    ops::dense(&flat, &p.w, &p.b)
+                }
+                ModuleKind::Gap => ops::global_avg_pool(src),
+            };
+            if let Some(r) = &m.res {
+                out = ops::add(&out, &acts[r]);
+            }
+            if m.relu {
+                ops::relu_inplace(&mut out);
+            }
+            acts.insert(m.name.clone(), transform(&m.name, out));
+        }
+        acts
+    }
+
+    /// Run a batch, returning all activations keyed by module name
+    /// (plus `"input"`). `x` is NHWC, already normalised.
+    pub fn run_acts(&self, x: &Tensor) -> HashMap<String, Tensor> {
+        self.run_acts_transformed(x, |_, t| t)
+    }
+
+    /// Run a batch, returning only the final output.
+    pub fn run(&self, x: &Tensor) -> Tensor {
+        let mut acts = self.run_acts(x);
+        acts.remove(&self.graph.modules.last().unwrap().name).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::UnifiedModule;
+    use crate::tensor::Tensor;
+
+    /// identity 1x1 conv + residual + relu, then gap: checks the
+    /// epilogue order (bias, residual, relu) matches the python oracle.
+    #[test]
+    fn epilogue_order_bias_res_relu() {
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (2, 2, 1),
+            modules: vec![
+                UnifiedModule {
+                    name: "c".into(),
+                    kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 1, cout: 1, stride: 1 },
+                    src: "input".into(),
+                    res: Some("input".into()),
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut folded = HashMap::new();
+        folded.insert(
+            "c".to_string(),
+            FoldedParams { w: Tensor::from_vec(&[1, 1, 1, 1], vec![2.0]), b: vec![-1.0] },
+        );
+        let eng = FpEngine::new(&graph, &folded);
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, -2.0, 0.5, 0.0]);
+        let acts = eng.run_acts(&x);
+        // c = relu(2x - 1 + x) = relu(3x - 1)
+        let want = [2.0f32, 0.0, 0.5, 0.0];
+        for (a, b) in acts["c"].data.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(acts["gap"].shape.dims(), &[1, 1]);
+        assert!((acts["gap"].data[0] - 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dense_flattens_gap_output() {
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (2, 2, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "input".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 2, cout: 3 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut folded = HashMap::new();
+        folded.insert(
+            "fc".to_string(),
+            FoldedParams {
+                w: Tensor::from_vec(&[2, 3], vec![1., 0., 1., 0., 1., 1.]),
+                b: vec![0.0, 0.0, 1.0],
+            },
+        );
+        let eng = FpEngine::new(&graph, &folded);
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let y = eng.run(&x);
+        // gap = [4, 5]; fc = [4, 5, 10]
+        assert_eq!(y.data, vec![4.0, 5.0, 10.0]);
+    }
+}

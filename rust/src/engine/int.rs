@@ -1,0 +1,387 @@
+//! The integer-only inference engine — the paper's custom hardware unit
+//! in software (Eq. 3–4):
+//!
+//! * weights/biases/activations are n-bit integer codes (held in i32
+//!   lanes), accumulation is 32-bit;
+//! * biases are aligned into the accumulator domain by a left shift of
+//!   `(N_x + N_w) − N_b` (Eq. 3), residuals by `(N_x + N_w) − N_r`;
+//! * the output is requantized with a rounded right shift of
+//!   `(N_x + N_w) − N_o` and clamped — to the unsigned range after a
+//!   fused ReLU (Fig. 1 b/c), the signed range otherwise;
+//! * global-average-pool divides by a power-of-two spatial size with the
+//!   same rounded shift, so the whole network is exact integer math.
+//!
+//! Bit-exact with `python/compile/kernels/ref.py` (and therefore with the
+//! Pallas kernels and the AOT artifacts) — integration tests chain all
+//! three.
+//!
+//! The engine also supports the **unfused** ablation (DESIGN.md §7):
+//! quantization immediately after the conv accumulator and again after
+//! the residual add — the strategy the paper's Fig.-1 restructuring
+//! removes. It needs extra calibrated scales (`pre_frac`), supplied by
+//! the ablation calibrator.
+
+use std::collections::HashMap;
+
+use crate::graph::bn_fold::FoldedParams;
+use crate::graph::{Graph, ModuleKind};
+use crate::quant::params::QuantSpec;
+use crate::quant::scheme;
+use crate::tensor::im2col::Padding;
+use crate::tensor::{ops_int, Tensor, TensorI32};
+
+/// Quantized parameters of one module, ready for the integer engine.
+#[derive(Clone, Debug)]
+pub struct QuantizedParams {
+    /// weight codes (HWIO conv / (Cin,Cout) dense)
+    pub w: TensorI32,
+    /// bias codes
+    pub b: Vec<i32>,
+}
+
+/// Quantize all folded parameters per a spec (shared by the engine and
+/// the PJRT path, so both feed identical codes).
+pub fn quantize_params(
+    graph: &Graph,
+    folded: &HashMap<String, FoldedParams>,
+    spec: &QuantSpec,
+) -> HashMap<String, QuantizedParams> {
+    let mut out = HashMap::new();
+    for m in graph.weight_modules() {
+        // during joint calibration only a prefix of the graph is
+        // calibrated; quantize what the spec covers
+        let Some(&s) = spec.modules.get(&m.name) else { continue };
+        let p = &folded[&m.name];
+        let w = scheme::quantize_tensor(&p.w, s.n_w, spec.n_bits, false);
+        let b: Vec<i32> = p
+            .b
+            .iter()
+            .map(|&x| scheme::quantize_val(x, s.n_b, spec.n_bits, false))
+            .collect();
+        out.insert(m.name.clone(), QuantizedParams { w, b });
+    }
+    out
+}
+
+/// The integer-only executor.
+pub struct IntEngine<'g> {
+    graph: &'g Graph,
+    spec: &'g QuantSpec,
+    qparams: HashMap<String, QuantizedParams>,
+    /// unfused ablation: per-module fractional bits of the intermediate
+    /// (pre-ReLU / pre-add) quantization points
+    pub pre_frac: Option<HashMap<String, i32>>,
+}
+
+impl<'g> IntEngine<'g> {
+    /// Build: quantizes the folded weights once.
+    pub fn new(
+        graph: &'g Graph,
+        folded: &HashMap<String, FoldedParams>,
+        spec: &'g QuantSpec,
+    ) -> Self {
+        let qparams = quantize_params(graph, folded, spec);
+        IntEngine { graph, spec, qparams, pre_frac: None }
+    }
+
+    /// Access the quantized parameters (the PJRT path feeds these to the
+    /// q_logits artifact).
+    pub fn qparams(&self) -> &HashMap<String, QuantizedParams> {
+        &self.qparams
+    }
+
+    /// Quantize a normalised f32 input batch into codes.
+    pub fn quantize_input(&self, x: &Tensor) -> TensorI32 {
+        scheme::quantize_tensor(x, self.spec.input_frac, self.spec.n_bits, false)
+    }
+
+    /// Run on input codes, returning every module's codes.
+    pub fn run_acts(&self, x_int: &TensorI32) -> HashMap<String, TensorI32> {
+        let mut acts: HashMap<String, TensorI32> = HashMap::new();
+        acts.insert("input".to_string(), x_int.clone());
+        for m in &self.graph.modules {
+            let out = self.run_module(m, &acts);
+            acts.insert(m.name.clone(), out);
+        }
+        acts
+    }
+
+    /// Execute one module given the activations so far.
+    pub fn run_module(
+        &self,
+        m: &crate::graph::UnifiedModule,
+        acts: &HashMap<String, TensorI32>,
+    ) -> TensorI32 {
+        let src = &acts[&m.src];
+        let n_bits = self.spec.n_bits;
+        match &m.kind {
+            ModuleKind::Gap => {
+                let sum = ops_int::global_sum_pool(src);
+                let hw = src.shape.dim(1) * src.shape.dim(2);
+                debug_assert!(hw.is_power_of_two());
+                let s = hw.trailing_zeros() as i32;
+                let unsigned = self.spec.value_unsigned(self.graph, &m.src);
+                let (qmin, qmax) = scheme::qrange(n_bits, unsigned);
+                sum.map_i32_ref(|v| scheme::shift_round(v, s).clamp(qmin, qmax))
+            }
+            ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => {
+                let sp = self.spec.modules[&m.name];
+                let n_x = self.spec.value_frac(self.graph, &m.src);
+                let qp = &self.qparams[&m.name];
+                let mut acc = match &m.kind {
+                    ModuleKind::Conv { stride, .. } => {
+                        ops_int::conv2d_acc(src, &qp.w, *stride, Padding::Same)
+                    }
+                    ModuleKind::Dense { .. } => {
+                        let flat = src.reshape(&[
+                            src.shape.dim(0),
+                            src.numel() / src.shape.dim(0),
+                        ]);
+                        ops_int::dense_acc(&flat, &qp.w)
+                    }
+                    ModuleKind::Gap => unreachable!(),
+                };
+                let bias_shift = sp.bias_shift(n_x);
+                let cout = *acc.shape.dims().last().unwrap();
+                let aligned: Vec<i32> =
+                    qp.b.iter().map(|&b| scheme::align(b, bias_shift)).collect();
+                if let Some(pre) = &self.pre_frac {
+                    // ----- unfused ablation: extra quantization points -----
+                    for chunk in acc.data.chunks_exact_mut(cout) {
+                        for (v, a) in chunk.iter_mut().zip(&aligned) {
+                            *v = v.wrapping_add(*a);
+                        }
+                    }
+                    return self.run_epilogue_unfused(m, acc, acts, pre, n_x, sp);
+                }
+                // fused epilogue: bias-add (+ residual-align-add) + shift
+                // + clamp in ONE pass over the accumulator, in place —
+                // the software analogue of the paper's "without writing
+                // the convolution output back to memory" (§Perf log #2).
+                let out_shift = sp.out_shift(n_x);
+                let (qmin, qmax) = scheme::qrange(n_bits, m.relu);
+                match &m.res {
+                    Some(r) => {
+                        let n_r = self.spec.value_frac(self.graph, r);
+                        let rs = sp.res_shift(n_x, n_r);
+                        let rt = &acts[r];
+                        debug_assert_eq!(rt.numel(), acc.numel());
+                        for (row, chunk) in acc.data.chunks_exact_mut(cout).enumerate() {
+                            let rrow = &rt.data[row * cout..(row + 1) * cout];
+                            for (j, v) in chunk.iter_mut().enumerate() {
+                                let a = v
+                                    .wrapping_add(aligned[j])
+                                    .wrapping_add(scheme::align(rrow[j], rs));
+                                *v = scheme::shift_round(a, out_shift).clamp(qmin, qmax);
+                            }
+                        }
+                    }
+                    None => {
+                        for chunk in acc.data.chunks_exact_mut(cout) {
+                            for (j, v) in chunk.iter_mut().enumerate() {
+                                let a = v.wrapping_add(aligned[j]);
+                                *v = scheme::shift_round(a, out_shift).clamp(qmin, qmax);
+                            }
+                        }
+                    }
+                }
+                acc
+            }
+        }
+    }
+
+    /// The ablation epilogue: requantize the conv output immediately
+    /// (extra quantization op), then align + add the residual in the
+    /// *code* domain, then requantize again (another extra op) — the
+    /// "quantize instantly after convolution" dataflow of prior work.
+    fn run_epilogue_unfused(
+        &self,
+        m: &crate::graph::UnifiedModule,
+        acc: TensorI32,
+        acts: &HashMap<String, TensorI32>,
+        pre: &HashMap<String, i32>,
+        n_x: i32,
+        sp: crate::quant::params::ModuleShifts,
+    ) -> TensorI32 {
+        let n_bits = self.spec.n_bits;
+        let n_pre = *pre.get(&m.name).unwrap_or(&sp.n_o);
+        // quant point #1: conv output -> codes at scale n_pre (signed)
+        let conv_codes =
+            scheme::requantize_tensor(&acc, n_x + sp.n_w - n_pre, n_bits, false);
+        let mut cur = conv_codes;
+        if let Some(r) = &m.res {
+            let n_r = self.spec.value_frac(self.graph, r);
+            let rt = &acts[r];
+            // align residual codes to n_pre and add, then quant point #2
+            let mut sum: Vec<i32> = cur
+                .data
+                .iter()
+                .zip(&rt.data)
+                .map(|(&a, &b)| a.wrapping_add(scheme::shift_round(b, n_r - n_pre)))
+                .collect();
+            let (qmin, qmax) = scheme::qrange(n_bits, false);
+            for v in &mut sum {
+                *v = (*v).clamp(qmin * 2, qmax * 2); // 9-bit intermediate
+            }
+            cur = TensorI32 { shape: cur.shape.clone(), data: sum };
+        }
+        // final requant to n_o (+relu clamp) — quant point #2/#3
+        let (qmin, qmax) = scheme::qrange(n_bits, m.relu);
+        cur.map_i32_ref(|v| scheme::shift_round(v, n_pre - sp.n_o).clamp(qmin, qmax))
+    }
+
+    /// Full pipeline from a normalised f32 batch to final output codes.
+    pub fn run(&self, x: &Tensor) -> TensorI32 {
+        let xq = self.quantize_input(x);
+        let mut acts = self.run_acts(&xq);
+        acts.remove(&self.graph.modules.last().unwrap().name).unwrap()
+    }
+
+    /// Final logits dequantized to f32 (for metrics that need scores).
+    pub fn run_dequant(&self, x: &Tensor) -> Tensor {
+        let last = &self.graph.modules.last().unwrap().name;
+        let out = self.run(x);
+        scheme::dequantize_tensor(&out, self.spec.value_frac(self.graph, last))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::UnifiedModule;
+    use crate::quant::params::ModuleShifts;
+
+    /// Hand-checkable single conv: x scale 2^-4, w scale 2^-6, bias 2^-5,
+    /// out 2^-3.
+    #[test]
+    fn single_conv_matches_hand_math() {
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (1, 1, 1),
+            modules: vec![UnifiedModule {
+                name: "c".into(),
+                kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 1, cout: 1, stride: 1 },
+                src: "input".into(),
+                res: None,
+                relu: false,
+            }],
+        };
+        let mut folded = HashMap::new();
+        folded.insert(
+            "c".to_string(),
+            FoldedParams { w: Tensor::from_vec(&[1, 1, 1, 1], vec![0.75]), b: vec![0.5] },
+        );
+        let mut spec = QuantSpec::new(8);
+        spec.input_frac = 4;
+        spec.modules.insert("c".into(), ModuleShifts { n_w: 6, n_b: 5, n_o: 3 });
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        // x = 1.25 -> code 20; w = 0.75 -> code 48; b = 0.5 -> code 16
+        let x = Tensor::from_vec(&[1, 1, 1, 1], vec![1.25]);
+        let out = eng.run(&x);
+        // acc = 20*48 + (16 << (4+6-5)) = 960 + 512 = 1472 at scale 2^-10
+        // out = round(1472 / 2^(10-3)) = round(11.5) = 12 -> 1.5 at 2^-3
+        assert_eq!(out.data[0], 12);
+        let deq = eng.run_dequant(&x);
+        assert!((deq.data[0] - 1.5).abs() < 1e-6);
+    }
+
+    /// The engine must agree with a float-side simulation of Q for a
+    /// random fused residual module.
+    #[test]
+    fn residual_module_exactness_vs_scheme_sim() {
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (4, 4, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 2, cout: 2, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "c0".into(),
+                    res: Some("c0".into()),
+                    relu: true,
+                },
+            ],
+        };
+        let mut rng = crate::util::rng::Pcg::new(11);
+        let mut folded = HashMap::new();
+        for name in ["c0", "c1"] {
+            let k = if name == "c0" { 1 } else { 3 };
+            let w = Tensor::from_vec(
+                &[k, k, 2, 2],
+                (0..k * k * 4).map(|_| rng.normal_ms(0.0, 0.4)).collect(),
+            );
+            folded.insert(
+                name.to_string(),
+                FoldedParams { w, b: vec![rng.normal_ms(0.0, 0.2), rng.normal_ms(0.0, 0.2)] },
+            );
+        }
+        let mut spec = QuantSpec::new(8);
+        spec.input_frac = 5;
+        spec.modules.insert("c0".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 5 });
+        spec.modules.insert("c1".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let x = Tensor::from_vec(&[1, 4, 4, 2], (0..32).map(|_| rng.normal()).collect());
+        let acts = eng.run_acts(&eng.quantize_input(&x));
+        // every activation is inside its clamp range
+        for name in ["c0", "c1"] {
+            let (qmin, qmax) = scheme::qrange(8, true);
+            for &v in &acts[name].data {
+                assert!(v >= qmin && v <= qmax);
+            }
+        }
+        // and c1's codes dequantize close to the FP engine's output
+        let fpe = crate::engine::fp::FpEngine::new(&graph, &folded);
+        let facts = fpe.run_acts(&x);
+        let deq = scheme::dequantize_tensor(&acts["c1"], 4);
+        let mse = crate::util::mathutil::mse(&deq.data, &facts["c1"].data);
+        assert!(mse < 0.01, "integer path diverged: mse={mse}");
+    }
+
+    #[test]
+    fn unfused_mode_runs_and_differs() {
+        // same graph as above; the ablation engine should produce valid
+        // codes that (generally) differ from the fused ones.
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (4, 4, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+            ],
+        };
+        let mut rng = crate::util::rng::Pcg::new(13);
+        let mut folded = HashMap::new();
+        folded.insert(
+            "c0".to_string(),
+            FoldedParams {
+                w: Tensor::from_vec(&[3, 3, 2, 2], (0..36).map(|_| rng.normal_ms(0.0, 0.4)).collect()),
+                b: vec![0.1, -0.1],
+            },
+        );
+        let mut spec = QuantSpec::new(8);
+        spec.input_frac = 5;
+        spec.modules.insert("c0".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 5 });
+        let mut eng = IntEngine::new(&graph, &folded, &spec);
+        let x = Tensor::from_vec(&[1, 4, 4, 2], (0..32).map(|_| rng.normal()).collect());
+        let fused = eng.run(&x);
+        let mut pre = HashMap::new();
+        pre.insert("c0".to_string(), 3); // coarse intermediate scale
+        eng.pre_frac = Some(pre);
+        let unfused = eng.run(&x);
+        assert_eq!(fused.shape, unfused.shape);
+        // coarse pre-quantization loses information vs the fused path
+        assert_ne!(fused.data, unfused.data);
+    }
+}

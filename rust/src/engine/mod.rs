@@ -1,0 +1,11 @@
+//! Inference engines over the unified-module graph:
+//!
+//! * [`fp`] — the floating-point oracle (folded weights), supplying the
+//!   Eq.-5 calibration targets and the FP rows of Tables 1/3/4;
+//! * [`int`] — the integer-only engine (Eq. 3–4): i8-range codes, i32
+//!   accumulation, shift-based alignment/requantization. Models the
+//!   paper's custom hardware unit bit-exactly — cross-validated against
+//!   the Pallas kernels via the PJRT artifacts in the integration tests.
+
+pub mod fp;
+pub mod int;

@@ -1,0 +1,169 @@
+//! BatchNorm folding (paper §1.2.1: "the batch normalization layer is
+//! merged into the weights and biases of the ... convolution layer at
+//! inference stage").
+//!
+//! For inference-mode BN `y = γ(x − μ)/√(σ² + ε) + β` applied to a conv
+//! output, the folded conv is `W' = W · γ/√(σ²+ε)` (per output channel)
+//! and `B' = β − μ · γ/√(σ²+ε)`. Mirrors
+//! `python/compile/model.py::fold_bn`; the cross-language test feeds the
+//! same exported parameters through both and compares.
+
+use std::collections::HashMap;
+
+use super::Graph;
+use crate::tensor::Tensor;
+
+/// Matches the training-side BN epsilon (model.py BN_EPS).
+pub const BN_EPS: f32 = 1e-5;
+
+/// Folded parameters of one module: HWIO weights + per-channel bias.
+#[derive(Clone, Debug)]
+pub struct FoldedParams {
+    /// HWIO (conv) or (Cin, Cout) (dense) weights
+    pub w: Tensor,
+    /// per-output-channel bias
+    pub b: Vec<f32>,
+}
+
+/// Fold all BN layers of a model into conv weights/biases.
+///
+/// `params` is the raw exported parameter map (`{name}/w`,
+/// `{name}/bn/{gamma,beta,mean,var}` or `{name}/b`). Modules with BN
+/// stats get folded; modules with a plain bias pass through.
+pub fn fold_bn(
+    graph: &Graph,
+    params: &HashMap<String, Tensor>,
+) -> Result<HashMap<String, FoldedParams>, String> {
+    let mut out = HashMap::new();
+    for m in graph.weight_modules() {
+        let w = params
+            .get(&format!("{}/w", m.name))
+            .ok_or_else(|| format!("missing weights for '{}'", m.name))?;
+        let cout = *w.shape.dims().last().unwrap();
+        let folded = if let Some(gamma) = params.get(&format!("{}/bn/gamma", m.name)) {
+            let beta = params
+                .get(&format!("{}/bn/beta", m.name))
+                .ok_or_else(|| format!("{}: missing bn/beta", m.name))?;
+            let mean = params
+                .get(&format!("{}/bn/mean", m.name))
+                .ok_or_else(|| format!("{}: missing bn/mean", m.name))?;
+            let var = params
+                .get(&format!("{}/bn/var", m.name))
+                .ok_or_else(|| format!("{}: missing bn/var", m.name))?;
+            for t in [gamma, beta, mean, var] {
+                if t.numel() != cout {
+                    return Err(format!("{}: bn stat size != cout", m.name));
+                }
+            }
+            let scale: Vec<f32> = gamma
+                .data
+                .iter()
+                .zip(&var.data)
+                .map(|(g, v)| g / (v + BN_EPS).sqrt())
+                .collect();
+            // scale along the last (output-channel) axis
+            let mut wd = w.data.clone();
+            for chunk in wd.chunks_exact_mut(cout) {
+                for (x, s) in chunk.iter_mut().zip(&scale) {
+                    *x *= s;
+                }
+            }
+            let b: Vec<f32> = beta
+                .data
+                .iter()
+                .zip(&mean.data)
+                .zip(&scale)
+                .map(|((bt, mu), s)| bt - mu * s)
+                .collect();
+            FoldedParams { w: Tensor { shape: w.shape.clone(), data: wd }, b }
+        } else {
+            let b = params
+                .get(&format!("{}/b", m.name))
+                .ok_or_else(|| format!("{}: missing bias", m.name))?;
+            FoldedParams { w: w.clone(), b: b.data.clone() }
+        };
+        out.insert(m.name.clone(), folded);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ModuleKind, UnifiedModule};
+    use crate::tensor::ops::{self};
+    use crate::tensor::im2col::Padding;
+
+    fn graph_one_conv() -> Graph {
+        Graph {
+            name: "g".into(),
+            input_hwc: (4, 4, 2),
+            modules: vec![UnifiedModule {
+                name: "c".into(),
+                kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 3, stride: 1 },
+                src: "input".into(),
+                res: None,
+                relu: false,
+            }],
+        }
+    }
+
+    #[test]
+    fn folded_equals_bn_applied() {
+        let g = graph_one_conv();
+        let mut rng = crate::util::rng::Pcg::new(1);
+        let mut params = HashMap::new();
+        let w = Tensor::from_vec(
+            &[3, 3, 2, 3],
+            (0..54).map(|_| rng.normal_ms(0.0, 0.5)).collect(),
+        );
+        params.insert("c/w".to_string(), w.clone());
+        let gamma: Vec<f32> = (0..3).map(|_| rng.uniform(0.5, 1.5)).collect();
+        let beta: Vec<f32> = (0..3).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let mean: Vec<f32> = (0..3).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+        let var: Vec<f32> = (0..3).map(|_| rng.uniform(0.5, 2.0)).collect();
+        params.insert("c/bn/gamma".into(), Tensor::from_vec(&[3], gamma.clone()));
+        params.insert("c/bn/beta".into(), Tensor::from_vec(&[3], beta.clone()));
+        params.insert("c/bn/mean".into(), Tensor::from_vec(&[3], mean.clone()));
+        params.insert("c/bn/var".into(), Tensor::from_vec(&[3], var.clone()));
+
+        let folded = fold_bn(&g, &params).unwrap();
+        let fp = &folded["c"];
+
+        let x = Tensor::from_vec(
+            &[1, 4, 4, 2],
+            (0..32).map(|_| rng.normal()).collect(),
+        );
+        // folded path
+        let y_folded = ops::conv2d(&x, &fp.w, &fp.b, 1, Padding::Same);
+        // reference path: conv then BN
+        let y_raw = ops::conv2d(&x, &w, &[0.0; 3], 1, Padding::Same);
+        let mut y_bn = y_raw.clone();
+        let c = 3;
+        for chunk in y_bn.data.chunks_exact_mut(c) {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = gamma[j] * (*v - mean[j]) / (var[j] + BN_EPS).sqrt() + beta[j];
+            }
+        }
+        for (a, b) in y_folded.data.iter().zip(&y_bn.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn plain_bias_passthrough() {
+        let g = graph_one_conv();
+        let mut params = HashMap::new();
+        params.insert("c/w".into(), Tensor::zeros(&[3, 3, 2, 3]));
+        params.insert("c/b".into(), Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]));
+        let folded = fold_bn(&g, &params).unwrap();
+        assert_eq!(folded["c"].b, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn missing_params_error() {
+        let g = graph_one_conv();
+        let params = HashMap::new();
+        assert!(fold_bn(&g, &params).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! The fine-grained layer graph — the form a training framework exports,
+//! *before* the paper's dataflow restructuring. Every Conv, BatchNorm,
+//! ReLU, Add, pool and Dense is a separate node; a naive quantizer (e.g.
+//! DoReFa-style, which the paper contrasts with in §1.2.1) would place a
+//! quantization operation after every one of them.
+//!
+//! [`super::fuse`] rewrites this graph into the unified-module graph.
+
+/// A fine-grained layer operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerOp {
+    /// conv2d, SAME padding, bias-free (bias lives in BN or a Bias node)
+    Conv {
+        /// kernel h
+        kh: usize,
+        /// kernel w
+        kw: usize,
+        /// in channels
+        cin: usize,
+        /// out channels
+        cout: usize,
+        /// stride
+        stride: usize,
+    },
+    /// adds a per-channel bias (conv without BN)
+    Bias,
+    /// batch normalisation (inference form: per-channel affine)
+    BatchNorm,
+    /// rectified linear unit
+    Relu,
+    /// elementwise sum of two producers
+    Add {
+        /// the second operand
+        rhs: String,
+    },
+    /// global average pool
+    GlobalAvgPool,
+    /// fully connected (with bias)
+    Dense {
+        /// in features
+        cin: usize,
+        /// out features
+        cout: usize,
+    },
+}
+
+/// A node in the layer graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    /// unique name; conv weights are keyed by the *conv* node's name
+    pub name: String,
+    /// operation
+    pub op: LayerOp,
+    /// main input producer (`"input"` for the graph input)
+    pub src: String,
+}
+
+/// The pre-fusion graph.
+#[derive(Clone, Debug)]
+pub struct LayerGraph {
+    /// model name
+    pub name: String,
+    /// input (h, w, c)
+    pub input_hwc: (usize, usize, usize),
+    /// layers in topological order
+    pub layers: Vec<Layer>,
+}
+
+impl LayerGraph {
+    /// Validate dataflow (same contract as [`super::Graph::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        seen.insert("input".to_string());
+        for l in &self.layers {
+            if !seen.contains(&l.src) {
+                return Err(format!("{}: src '{}' not yet produced", l.name, l.src));
+            }
+            if let LayerOp::Add { rhs } = &l.op {
+                if !seen.contains(rhs) {
+                    return Err(format!("{}: rhs '{rhs}' not yet produced", l.name));
+                }
+            }
+            if !seen.insert(l.name.clone()) {
+                return Err(format!("duplicate layer '{}'", l.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of consumers of each value (used by the fusion pass: a conv
+    /// output consumed by more than one node cannot be fused past the
+    /// fan-out point).
+    pub fn consumer_counts(&self) -> std::collections::HashMap<String, usize> {
+        let mut counts = std::collections::HashMap::new();
+        for l in &self.layers {
+            *counts.entry(l.src.clone()).or_insert(0) += 1;
+            if let LayerOp::Add { rhs } = &l.op {
+                *counts.entry(rhs.clone()).or_insert(0) += 1;
+            }
+        }
+        counts
+    }
+
+    /// How many quantization operations a naive per-layer quantizer
+    /// would insert: one after every value-producing layer (the
+    /// "quantizes activations instantly after convolution" strategy the
+    /// paper improves on).
+    pub fn naive_quant_points(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| !matches!(l.op, LayerOp::BatchNorm | LayerOp::Bias))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn conv_bn_relu_chain() -> LayerGraph {
+        LayerGraph {
+            name: "chain".into(),
+            input_hwc: (8, 8, 3),
+            layers: vec![
+                Layer {
+                    name: "c0".into(),
+                    op: LayerOp::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                    src: "input".into(),
+                },
+                Layer { name: "c0_bn".into(), op: LayerOp::BatchNorm, src: "c0".into() },
+                Layer { name: "c0_relu".into(), op: LayerOp::Relu, src: "c0_bn".into() },
+            ],
+        }
+    }
+
+    #[test]
+    fn validate_ok_and_dup_detected() {
+        let g = conv_bn_relu_chain();
+        g.validate().unwrap();
+        let mut bad = conv_bn_relu_chain();
+        bad.layers[2].name = "c0".into();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn consumer_counts() {
+        let mut g = conv_bn_relu_chain();
+        g.layers.push(Layer {
+            name: "a".into(),
+            op: LayerOp::Add { rhs: "c0_relu".into() },
+            src: "c0_relu".into(),
+        });
+        let counts = g.consumer_counts();
+        assert_eq!(counts["c0_relu"], 2);
+        assert_eq!(counts["c0"], 1);
+    }
+
+    #[test]
+    fn naive_quant_points_counts_value_layers() {
+        // conv, relu count; bn folds away
+        assert_eq!(conv_bn_relu_chain().naive_quant_points(), 2);
+    }
+}

@@ -1,0 +1,306 @@
+//! Neural-network graph IR at two altitudes:
+//!
+//! * [`layers`] — the fine-grained pre-deployment graph (Conv, BatchNorm,
+//!   ReLU, Add, GlobalAvgPool, Dense as separate nodes), the form a
+//!   framework exports;
+//! * this module — the **unified-module** graph the paper deploys: after
+//!   BN folding ([`bn_fold`]) and dataflow fusion ([`fuse`]), each module
+//!   is one quantization point (Fig. 1 a–d).
+//!
+//! The fusion pass is the paper's central contribution expressed as a
+//! compiler pass; `fuse::quant_point_report` quantifies the "fewer
+//! quantization operations" hypothesis that motivates it.
+
+pub mod bn_fold;
+pub mod fuse;
+pub mod layers;
+
+use crate::util::json::Json;
+
+/// What a unified module computes (before the shared epilogue of
+/// bias-align, optional residual-align, optional ReLU, requantize).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModuleKind {
+    /// 2-D convolution with SAME padding.
+    Conv {
+        /// kernel height
+        kh: usize,
+        /// kernel width
+        kw: usize,
+        /// input channels
+        cin: usize,
+        /// output channels
+        cout: usize,
+        /// stride (both dims)
+        stride: usize,
+    },
+    /// Fully-connected layer.
+    Dense {
+        /// input features
+        cin: usize,
+        /// output features
+        cout: usize,
+    },
+    /// Global average pool (integer-exact: spatial size is a power of 2).
+    Gap,
+}
+
+/// One unified module = one quantization point (paper Fig. 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnifiedModule {
+    /// unique name (weight keys are `{name}/w`, `{name}/b`)
+    pub name: String,
+    /// the compute kind
+    pub kind: ModuleKind,
+    /// producer of the main input (`"input"` for the graph input)
+    pub src: String,
+    /// producer of the residual input, if any (Fig. 1 c/d)
+    pub res: Option<String>,
+    /// fused ReLU before the quantization point (Fig. 1 b/c)
+    pub relu: bool,
+}
+
+impl UnifiedModule {
+    /// Which Fig.-1 case this module is (for reporting).
+    pub fn fig1_case(&self) -> char {
+        match (self.res.is_some(), self.relu) {
+            (false, false) => 'a',
+            (false, true) => 'b',
+            (true, true) => 'c',
+            (true, false) => 'd',
+        }
+    }
+
+    /// Does the module carry weights?
+    pub fn has_weights(&self) -> bool {
+        !matches!(self.kind, ModuleKind::Gap)
+    }
+}
+
+/// The deployable unified-module graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// model name (e.g. `resnet_s`)
+    pub name: String,
+    /// input height/width/channels
+    pub input_hwc: (usize, usize, usize),
+    /// modules in execution (topological) order
+    pub modules: Vec<UnifiedModule>,
+}
+
+impl Graph {
+    /// Validate dataflow: every `src`/`res` must be a prior module (or
+    /// `input`), and names must be unique.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        seen.insert("input".to_string());
+        for m in &self.modules {
+            if !seen.contains(&m.src) {
+                return Err(format!("{}: src '{}' not yet produced", m.name, m.src));
+            }
+            if let Some(r) = &m.res {
+                if !seen.contains(r) {
+                    return Err(format!("{}: res '{r}' not yet produced", m.name));
+                }
+            }
+            if !seen.insert(m.name.clone()) {
+                return Err(format!("duplicate module '{}'", m.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Spatial dims of every value in the graph (name → (h, w, c);
+    /// rank-2 values use h = w = 1 with c = features).
+    pub fn shapes(&self) -> std::collections::HashMap<String, (usize, usize, usize)> {
+        let mut dims = std::collections::HashMap::new();
+        dims.insert("input".to_string(), self.input_hwc);
+        for m in &self.modules {
+            let (h, w, _c) = dims[&m.src];
+            let out = match &m.kind {
+                ModuleKind::Conv { cout, stride, .. } => {
+                    (h.div_ceil(*stride), w.div_ceil(*stride), *cout)
+                }
+                ModuleKind::Dense { cout, .. } => (1, 1, *cout),
+                ModuleKind::Gap => (1, 1, dims[&m.src].2),
+            };
+            dims.insert(m.name.clone(), out);
+        }
+        dims
+    }
+
+    /// Find a module by name.
+    pub fn module(&self, name: &str) -> Option<&UnifiedModule> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+
+    /// Modules that carry weights (conv + dense), in order.
+    pub fn weight_modules(&self) -> impl Iterator<Item = &UnifiedModule> {
+        self.modules.iter().filter(|m| m.has_weights())
+    }
+
+    /// Count of weighted layers (paper's "depth").
+    pub fn weight_layer_count(&self) -> usize {
+        self.weight_modules().count()
+    }
+
+    /// Total MACs for one input (paper's computation-cost accounting).
+    pub fn total_macs(&self) -> u64 {
+        let dims = self.shapes();
+        let mut total = 0u64;
+        for m in &self.modules {
+            let (oh, ow, _) = dims[&m.name];
+            total += match &m.kind {
+                ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                    (oh * ow * kh * kw * cin * cout) as u64
+                }
+                ModuleKind::Dense { cin, cout } => (cin * cout) as u64,
+                ModuleKind::Gap => 0,
+            };
+        }
+        total
+    }
+
+    /// Parse the `spec` object of the artifact manifest (the contract
+    /// with `python/compile/model.py`).
+    pub fn from_manifest_spec(name: &str, spec: &Json) -> Result<Graph, String> {
+        let input = spec.req("input")?;
+        let hwc = (
+            input.req("h")?.as_usize().ok_or("input.h")?,
+            input.req("w")?.as_usize().ok_or("input.w")?,
+            input.req("c")?.as_usize().ok_or("input.c")?,
+        );
+        let mut modules = Vec::new();
+        for m in spec.req("modules")?.as_arr().ok_or("modules not array")? {
+            let mname = m.req("name")?.as_str().ok_or("name")?.to_string();
+            let kind_s = m.req("kind")?.as_str().ok_or("kind")?;
+            let src = m.req("src")?.as_str().ok_or("src")?.to_string();
+            let res = m.get("res").and_then(|r| r.as_str()).map(String::from);
+            let relu = m.get("relu").and_then(|r| r.as_bool()).unwrap_or(false);
+            let kind = match kind_s {
+                "conv" => ModuleKind::Conv {
+                    kh: m.req("kh")?.as_usize().ok_or("kh")?,
+                    kw: m.req("kw")?.as_usize().ok_or("kw")?,
+                    cin: m.req("cin")?.as_usize().ok_or("cin")?,
+                    cout: m.req("cout")?.as_usize().ok_or("cout")?,
+                    stride: m.req("stride")?.as_usize().ok_or("stride")?,
+                },
+                "dense" => ModuleKind::Dense {
+                    cin: m.req("cin")?.as_usize().ok_or("cin")?,
+                    cout: m.req("cout")?.as_usize().ok_or("cout")?,
+                },
+                "gap" => ModuleKind::Gap,
+                other => return Err(format!("unknown module kind '{other}'")),
+            };
+            modules.push(UnifiedModule { name: mname, kind, src, res, relu });
+        }
+        let g = Graph { name: name.to_string(), input_hwc: hwc, modules };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        Graph {
+            name: "tiny".into(),
+            input_hwc: (8, 8, 3),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 4, cout: 4, stride: 2 },
+                    src: "c0".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c1".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 4, cout: 10 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn validates_and_infers_shapes() {
+        let g = tiny();
+        g.validate().unwrap();
+        let dims = g.shapes();
+        assert_eq!(dims["c0"], (8, 8, 4));
+        assert_eq!(dims["c1"], (4, 4, 4));
+        assert_eq!(dims["gap"], (1, 1, 4));
+        assert_eq!(dims["fc"], (1, 1, 10));
+    }
+
+    #[test]
+    fn rejects_bad_dataflow() {
+        let mut g = tiny();
+        g.modules[0].src = "nope".into();
+        assert!(g.validate().is_err());
+        let mut g2 = tiny();
+        g2.modules[1].name = "c0".into();
+        assert!(g2.validate().is_err());
+    }
+
+    #[test]
+    fn fig1_cases() {
+        let m = |res: Option<&str>, relu| UnifiedModule {
+            name: "x".into(),
+            kind: ModuleKind::Gap,
+            src: "input".into(),
+            res: res.map(String::from),
+            relu,
+        };
+        assert_eq!(m(None, false).fig1_case(), 'a');
+        assert_eq!(m(None, true).fig1_case(), 'b');
+        assert_eq!(m(Some("r"), true).fig1_case(), 'c');
+        assert_eq!(m(Some("r"), false).fig1_case(), 'd');
+    }
+
+    #[test]
+    fn macs_counted() {
+        let g = tiny();
+        // c0: 8*8*3*3*3*4 ; c1: 4*4*3*3*4*4 ; fc: 4*10
+        assert_eq!(g.total_macs(), (8 * 8 * 3 * 3 * 3 * 4 + 4 * 4 * 3 * 3 * 4 * 4 + 40) as u64);
+    }
+
+    #[test]
+    fn manifest_spec_roundtrip() {
+        let spec_json = r#"{
+            "input": {"h": 8, "w": 8, "c": 3},
+            "modules": [
+                {"name": "c0", "kind": "conv", "kh": 3, "kw": 3, "cin": 3,
+                 "cout": 4, "stride": 1, "relu": true, "src": "input",
+                 "res": null},
+                {"name": "gap", "kind": "gap", "src": "c0", "cin": 4},
+                {"name": "fc", "kind": "dense", "cin": 4, "cout": 10,
+                 "relu": false, "src": "gap"}
+            ]
+        }"#;
+        let j = Json::parse(spec_json).unwrap();
+        let g = Graph::from_manifest_spec("t", &j).unwrap();
+        assert_eq!(g.modules.len(), 3);
+        assert_eq!(g.modules[0].fig1_case(), 'b');
+        assert!(g.module("fc").is_some());
+    }
+}

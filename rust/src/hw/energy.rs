@@ -1,0 +1,230 @@
+//! Network-level energy & memory-traffic model: scales per-op costs to
+//! whole-model inference, backing two of the paper's claims:
+//!
+//! * §Introduction: "the 8-bit quantized model leads to less computation
+//!   and memory accesses by ∼4× compared to floating-point";
+//! * §2.4: in fixed-point the requantization op is a ~16×-bigger
+//!   multiplier than the 8-bit MAC datapath and "should not be ignored",
+//!   while in FP it is ~1/filter-size of conv cost (1–2%).
+//!
+//! Energy constants per op are the standard 45nm-class numbers from
+//! Horowitz (ISSCC'14), linearly rescaled — again, the claims live in
+//! the ratios.
+
+use crate::graph::Graph;
+
+/// Energy per operation, pJ (45nm-class, Horowitz ISSCC'14).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyTable {
+    /// 32-bit float multiply-add
+    pub fp32_mac_pj: f64,
+    /// 8-bit integer multiply-add
+    pub int8_mac_pj: f64,
+    /// 32-bit integer multiply (scaling-factor requant)
+    pub int32_mul_pj: f64,
+    /// 32-bit shift+round+clamp (bit-shift requant)
+    pub shift_pj: f64,
+    /// codebook lookup + multiply
+    pub codebook_pj: f64,
+    /// DRAM access per byte
+    pub dram_byte_pj: f64,
+    /// SRAM access per byte
+    pub sram_byte_pj: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        EnergyTable {
+            fp32_mac_pj: 4.6,   // 3.7 mul + 0.9 add
+            int8_mac_pj: 0.23,  // 0.2 mul + 0.03 add
+            int32_mul_pj: 3.1,
+            shift_pj: 0.13,     // barrel shift + increment + clamp
+            codebook_pj: 2.3,   // SRAM read + 8-bit mul dominated
+            dram_byte_pj: 650.0 / 4.0,
+            sram_byte_pj: 5.0 / 4.0,
+        }
+    }
+}
+
+/// Precision of the deployed network for the cost model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// 32-bit float
+    Fp32,
+    /// n-bit integer with a given requantization operator style
+    Int {
+        /// activation/weight bit-width
+        bits: u32,
+        /// requantization operator
+        requant: RequantStyle,
+    },
+}
+
+/// Requantization operator style for the energy model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequantStyle {
+    /// 32-bit multiplier per output element
+    ScalingFactor,
+    /// codebook lookup per output element
+    Codebook,
+    /// the paper's rounded shift
+    BitShift,
+}
+
+/// Whole-network inference cost estimate.
+#[derive(Clone, Debug)]
+pub struct NetworkCost {
+    /// MAC energy, µJ
+    pub mac_uj: f64,
+    /// requantization energy, µJ
+    pub requant_uj: f64,
+    /// weight + activation memory traffic, bytes
+    pub traffic_bytes: u64,
+    /// memory energy (weights from DRAM once, activations SRAM), µJ
+    pub mem_uj: f64,
+}
+
+impl NetworkCost {
+    /// Total energy, µJ.
+    pub fn total_uj(&self) -> f64 {
+        self.mac_uj + self.requant_uj + self.mem_uj
+    }
+
+    /// Requantization share of compute energy.
+    pub fn requant_share(&self) -> f64 {
+        self.requant_uj / (self.mac_uj + self.requant_uj)
+    }
+}
+
+/// Count the quantization points (= requant ops per output element site)
+/// and output elements of a graph.
+fn requant_elements(graph: &Graph) -> u64 {
+    let dims = graph.shapes();
+    graph
+        .modules
+        .iter()
+        .map(|m| {
+            let (h, w, c) = dims[&m.name];
+            (h * w * c) as u64
+        })
+        .sum()
+}
+
+/// Total parameter + activation bytes at a given element width.
+fn traffic(graph: &Graph, bytes_per_el: f64) -> u64 {
+    let dims = graph.shapes();
+    let mut elems = 0u64;
+    for m in &graph.modules {
+        let (h, w, c) = dims[&m.name];
+        elems += (h * w * c) as u64; // activation write
+        if let crate::graph::ModuleKind::Conv { kh, kw, cin, cout, .. } = &m.kind {
+            elems += (kh * kw * cin * cout) as u64;
+        }
+        if let crate::graph::ModuleKind::Dense { cin, cout } = &m.kind {
+            elems += (cin * cout) as u64;
+        }
+    }
+    (elems as f64 * bytes_per_el) as u64
+}
+
+/// Estimate one inference of `graph` at `precision`.
+pub fn estimate(graph: &Graph, precision: Precision, e: &EnergyTable) -> NetworkCost {
+    let macs = graph.total_macs() as f64;
+    let rq_sites = requant_elements(graph) as f64;
+    match precision {
+        Precision::Fp32 => NetworkCost {
+            mac_uj: macs * e.fp32_mac_pj * 1e-6,
+            requant_uj: 0.0,
+            traffic_bytes: traffic(graph, 4.0),
+            mem_uj: traffic(graph, 4.0) as f64 * e.sram_byte_pj * 1e-6,
+        },
+        Precision::Int { bits, requant } => {
+            let per_rq = match requant {
+                RequantStyle::ScalingFactor => e.int32_mul_pj,
+                RequantStyle::Codebook => e.codebook_pj,
+                RequantStyle::BitShift => e.shift_pj,
+            };
+            let bytes_per_el = bits as f64 / 8.0;
+            NetworkCost {
+                mac_uj: macs * e.int8_mac_pj * 1e-6,
+                requant_uj: rq_sites * per_rq * 1e-6,
+                traffic_bytes: traffic(graph, bytes_per_el),
+                mem_uj: traffic(graph, bytes_per_el) as f64 * e.sram_byte_pj * 1e-6,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ModuleKind, UnifiedModule};
+
+    fn toy() -> Graph {
+        Graph {
+            name: "toy".into(),
+            input_hwc: (16, 16, 3),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 16, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 16, cout: 16, stride: 1 },
+                    src: "c0".into(),
+                    res: None,
+                    relu: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn int8_memory_traffic_is_quarter_of_fp32() {
+        let g = toy();
+        let e = EnergyTable::default();
+        let fp = estimate(&g, Precision::Fp32, &e);
+        let q = estimate(
+            &g,
+            Precision::Int { bits: 8, requant: RequantStyle::BitShift },
+            &e,
+        );
+        let ratio = fp.traffic_bytes as f64 / q.traffic_bytes as f64;
+        assert!((3.9..4.1).contains(&ratio), "traffic ratio {ratio}");
+        // the paper's ~4x claim covers energy too
+        assert!(fp.total_uj() / q.total_uj() > 4.0);
+    }
+
+    #[test]
+    fn requant_share_not_ignorable_with_multiplier() {
+        // paper §2.4: with a 32-bit multiplier requant, quantization cost
+        // is significant; with bit-shift it is small
+        let g = toy();
+        let e = EnergyTable::default();
+        let sf = estimate(
+            &g,
+            Precision::Int { bits: 8, requant: RequantStyle::ScalingFactor },
+            &e,
+        );
+        let bs = estimate(
+            &g,
+            Precision::Int { bits: 8, requant: RequantStyle::BitShift },
+            &e,
+        );
+        assert!(sf.requant_share() > 5.0 * bs.requant_share());
+        assert!(bs.requant_share() < 0.05, "shift share {}", bs.requant_share());
+    }
+
+    #[test]
+    fn lower_bits_lower_traffic() {
+        let g = toy();
+        let e = EnergyTable::default();
+        let q8 = estimate(&g, Precision::Int { bits: 8, requant: RequantStyle::BitShift }, &e);
+        let q6 = estimate(&g, Precision::Int { bits: 6, requant: RequantStyle::BitShift }, &e);
+        assert!(q6.traffic_bytes < q8.traffic_bytes);
+    }
+}

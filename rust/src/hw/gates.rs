@@ -1,0 +1,161 @@
+//! Unit-gate cost primitives (Zimmermann-style gate-equivalent model).
+//!
+//! Conventions:
+//! * 1 gate-equivalent (GE) = one 2-input NAND;
+//! * a full adder = 11 GE (incl. lookahead overhead at these widths),
+//!   a 2:1 mux = 3 GE, a flip-flop = 6 GE;
+//! * each primitive also reports *power-weighted* GE (`pge`) — switching
+//!   activity differs per structure (an array multiplier glitches, a
+//!   barrel shifter mostly routes), which is what makes the paper's
+//!   power ratios exceed its area ratios.
+//!
+//! **Calibration**: the µm²/GE and mW/GE constants are anchored to a
+//! single point of the paper's UMC-40nm / 500 MHz synthesis — the
+//! bit-shifting design (198.2 µm², 15.5 mW). Everything else (the
+//! scaling-factor and codebook columns, the ratios the abstract quotes)
+//! then *emerges from gate structure*, which is the honest substitute
+//! for a synthesis flow we don't have (DESIGN.md §2).
+
+/// Area per gate-equivalent (µm²) — calibrated, see module docs.
+pub const GE_AREA_UM2: f64 = 0.278;
+/// Dynamic power per power-weighted GE at 500 MHz (mW) — calibrated.
+pub const GE_POWER_MW: f64 = 0.0218;
+/// SRAM bit cell area (µm², 40nm 6T).
+pub const SRAM_BIT_AREA_UM2: f64 = 0.35;
+/// SRAM dynamic read power per bit at 500 MHz (mW) — bitline swing makes
+/// per-bit toggling cost several logic GE.
+pub const SRAM_BIT_POWER_MW: f64 = 0.087;
+
+/// Gate counts for the structural building blocks.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GateCount {
+    /// logic gate-equivalents (area)
+    pub ge: f64,
+    /// power-weighted gate-equivalents (activity-scaled)
+    pub pge: f64,
+    /// SRAM bits (costed separately from logic)
+    pub sram_bits: f64,
+}
+
+impl GateCount {
+    fn logic(ge: f64, activity: f64) -> GateCount {
+        GateCount { ge, pge: ge * activity, sram_bits: 0.0 }
+    }
+
+    /// Sum of two counts.
+    pub fn plus(self, other: GateCount) -> GateCount {
+        GateCount {
+            ge: self.ge + other.ge,
+            pge: self.pge + other.pge,
+            sram_bits: self.sram_bits + other.sram_bits,
+        }
+    }
+
+    /// Scale (e.g. n parallel lanes).
+    pub fn times(self, k: f64) -> GateCount {
+        GateCount { ge: self.ge * k, pge: self.pge * k, sram_bits: self.sram_bits * k }
+    }
+
+    /// Area in µm².
+    pub fn area_um2(&self) -> f64 {
+        self.ge * GE_AREA_UM2 + self.sram_bits * SRAM_BIT_AREA_UM2
+    }
+
+    /// Dynamic power in mW at 500 MHz.
+    pub fn power_mw(&self) -> f64 {
+        self.pge * GE_POWER_MW + self.sram_bits * SRAM_BIT_POWER_MW
+    }
+}
+
+/// Adder of width `n` (11 GE/bit, nominal activity).
+pub fn adder(n: u32) -> GateCount {
+    GateCount::logic(11.0 * n as f64, 1.0)
+}
+
+/// Subtract-and-compare slice of width `n` (subtractor + sign logic) —
+/// the unit of a nearest-centroid search.
+pub fn comparator(n: u32) -> GateCount {
+    GateCount::logic(13.0 * n as f64, 1.15)
+}
+
+/// Array multiplier `n × m` with a carry-save reduction tree:
+/// n·m AND partial products (1.5 GE each) + ~(n·m − n) 4:2 compressor
+/// slices (4.5 GE) + the final adder. Glitch-prone: activity 1.0 on the
+/// tree is already pessimistic-neutral; we keep 1.0 so the
+/// scaling-vs-shift power ratio is carried by gate count alone.
+pub fn multiplier(n: u32, m: u32) -> GateCount {
+    let pp = (n * m) as f64 * 1.5;
+    let tree = ((n * m).saturating_sub(n)) as f64 * 4.5;
+    adder(n + m).plus(GateCount::logic(pp + tree, 1.0))
+}
+
+/// Barrel shifter: `n`-bit data, `ceil(log2 n)` stages of 2:1 muxes.
+/// Mostly wire routing — low switching activity.
+pub fn barrel_shifter(n: u32) -> GateCount {
+    let stages = (n as f64).log2().ceil();
+    GateCount::logic(3.0 * n as f64 * stages, 1.0)
+}
+
+/// Saturating clamp of an `n`-bit value to `m` bits.
+pub fn clamp(n: u32, m: u32) -> GateCount {
+    GateCount::logic(n as f64 + 3.0 * m as f64, 0.9)
+}
+
+/// Rounding incrementer (add 0.5 ulp): half-adder chain on `n` bits.
+pub fn rounder(n: u32) -> GateCount {
+    GateCount::logic(4.0 * n as f64, 0.9)
+}
+
+/// SRAM macro: `words × bits` storage + decoder + sense amps.
+pub fn sram(words: u32, bits: u32) -> GateCount {
+    let decode = 2.0 * (words as f64) * (words as f64).log2().max(1.0) / 4.0;
+    let sense = 6.0 * bits as f64;
+    GateCount { ge: decode + sense, pge: 1.2 * (decode + sense), sram_bits: (words * bits) as f64 }
+}
+
+/// Register of `n` flip-flops (clocked every cycle).
+pub fn register(n: u32) -> GateCount {
+    GateCount::logic(6.0 * n as f64, 0.6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplier_dwarfs_shifter() {
+        // the structural fact behind Table 5
+        let mult = multiplier(32, 8);
+        let shift = barrel_shifter(32);
+        assert!(mult.ge / shift.ge > 3.0, "ratio {}", mult.ge / shift.ge);
+    }
+
+    #[test]
+    fn adder_linear_in_width() {
+        assert_eq!(adder(32).ge, 2.0 * adder(16).ge);
+    }
+
+    #[test]
+    fn sram_scales_with_capacity() {
+        let small = sram(16, 8);
+        let big = sram(64, 8);
+        assert!(big.sram_bits == 4.0 * small.sram_bits);
+        assert!(big.area_um2() > small.area_um2());
+    }
+
+    #[test]
+    fn plus_and_times_compose() {
+        let a = adder(8);
+        let two = a.plus(a);
+        assert_eq!(two.ge, a.times(2.0).ge);
+        assert_eq!(two.pge, a.times(2.0).pge);
+    }
+
+    #[test]
+    fn area_power_positive() {
+        for gc in [adder(32), multiplier(8, 8), barrel_shifter(32), sram(16, 8), comparator(32)] {
+            assert!(gc.area_um2() > 0.0);
+            assert!(gc.power_mw() > 0.0);
+        }
+    }
+}

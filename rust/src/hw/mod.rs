@@ -1,0 +1,24 @@
+//! Hardware cost modelling — the substitute for the paper's UMC-40nm RTL
+//! synthesis flow (§2.4, Table 5).
+//!
+//! The paper synthesised an RTL model of each requantization operator
+//! (32-bit input, 8-bit output, 500 MHz) and reported power/area. We
+//! reproduce the comparison with a **gate-level analytic model**:
+//! [`gates`] provides unit-gate area/power constants anchored to
+//! published 40nm-class standard-cell data, [`units`] composes them into
+//! the three operator structures (scaling-factor multiplier, k-means
+//! codebook, barrel shifter), and [`synth`] "synthesises" the designs
+//! into Table-5-style mW/µm² rows at a given clock. [`energy`] scales
+//! per-op costs to whole-network energy/memory-traffic estimates (the
+//! paper's ~4× compute/memory claim and the 1–2% quantization-overhead
+//! discussion).
+//!
+//! What makes the *ratios* land where the paper's do is structural, not
+//! constant-tuning: a 32×32 multiplier is ~30× the gates of a 32-bit
+//! barrel shifter, and an SRAM codebook adds decode + storage + a
+//! multiplier on top.
+
+pub mod energy;
+pub mod gates;
+pub mod synth;
+pub mod units;

@@ -1,0 +1,73 @@
+//! "Synthesis": turn gate counts into Table-5-style power/area rows at a
+//! given clock, and check the paper's headline ratios.
+
+use super::units::{table5_ops, RequantOp};
+
+/// Reference clock of the paper's synthesis runs.
+pub const REF_CLOCK_MHZ: f64 = 500.0;
+
+/// One synthesized design's report.
+#[derive(Clone, Debug)]
+pub struct RtlReport {
+    /// operator label
+    pub op: String,
+    /// dynamic power, mW
+    pub power_mw: f64,
+    /// cell area, µm²
+    pub area_um2: f64,
+}
+
+/// Synthesize one operator at a clock (power scales linearly with f).
+pub fn synthesize(op: RequantOp, clock_mhz: f64) -> RtlReport {
+    let g = op.gate_count();
+    RtlReport {
+        op: op.label().to_string(),
+        power_mw: g.power_mw() * (clock_mhz / REF_CLOCK_MHZ),
+        area_um2: g.area_um2(),
+    }
+}
+
+/// The full Table-5 comparison at 500 MHz.
+pub fn table5() -> Vec<RtlReport> {
+    table5_ops().into_iter().map(|op| synthesize(op, REF_CLOCK_MHZ)).collect()
+}
+
+/// The abstract's headline: (power_ratio, area_ratio) of the codebook
+/// baseline over bit-shifting.
+pub fn headline_ratios() -> (f64, f64) {
+    let rows = table5();
+    let cb = rows.iter().find(|r| r.op == "codebook").unwrap();
+    let bs = rows.iter().find(|r| r.op == "bit-shifting").unwrap();
+    (cb.power_mw / bs.power_mw, cb.area_um2 / bs.area_um2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_scales_with_clock() {
+        let a = synthesize(RequantOp::BitShift, 500.0);
+        let b = synthesize(RequantOp::BitShift, 250.0);
+        assert!((a.power_mw / b.power_mw - 2.0).abs() < 1e-9);
+        assert_eq!(a.area_um2, b.area_um2); // area is clock-independent
+    }
+
+    #[test]
+    fn table5_has_three_rows_in_order() {
+        let rows = table5();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].op, "scaling factor");
+        assert_eq!(rows[1].op, "codebook");
+        assert_eq!(rows[2].op, "bit-shifting");
+    }
+
+    #[test]
+    fn headline_close_to_paper() {
+        // paper: ~14.8x power (which the abstract rounds to ~15x) and
+        // ~9x area for codebook vs bit-shifting
+        let (p, a) = headline_ratios();
+        assert!((6.0..25.0).contains(&p), "power ratio {p}");
+        assert!((5.0..16.0).contains(&a), "area ratio {a}");
+    }
+}

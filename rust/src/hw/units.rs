@@ -1,0 +1,143 @@
+//! The three requantization operator designs of Table 5, composed from
+//! [`super::gates`] primitives. All take a 32-bit accumulator in and
+//! produce an 8-bit code, exactly the paper's experimental constraint
+//! ("all implementations are constrained to 32-bit input and 8-bit
+//! output").
+
+use super::gates::{self, GateCount};
+
+/// Which requantization operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequantOp {
+    /// scaling-factor: 32-bit multiplier + clip (IOA / TensorRT style);
+    /// the zero-point variant adds an adder
+    ScalingFactor {
+        /// include the zero-point adder (IOA)
+        zero_point: bool,
+    },
+    /// k-means codebook: entry lookup + multiply + clip (Deep
+    /// Compression style)
+    Codebook {
+        /// index bits (4-bit codebook in the paper)
+        index_bits: u32,
+        /// entry width (8-bit entries in the paper)
+        entry_bits: u32,
+    },
+    /// the paper's bit-shifting operator: barrel shift + round + clip
+    BitShift,
+}
+
+impl RequantOp {
+    /// Human-readable label matching Table 5 columns.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequantOp::ScalingFactor { .. } => "scaling factor",
+            RequantOp::Codebook { .. } => "codebook",
+            RequantOp::BitShift => "bit-shifting",
+        }
+    }
+
+    /// Gate-level composition (32-bit in, 8-bit out).
+    pub fn gate_count(&self) -> GateCount {
+        let in_bits = 32u32;
+        let out_bits = 8u32;
+        match self {
+            RequantOp::ScalingFactor { zero_point } => {
+                // 32-bit-datapath multiply by the (8-bit-mantissa)
+                // fixed-point scale, clip to the rightmost 8 bits;
+                // the zero-point variant (IOA) adds input/output adders
+                let mut g = gates::multiplier(in_bits, out_bits)
+                    .plus(gates::clamp(in_bits, out_bits))
+                    .plus(gates::register(out_bits));
+                if *zero_point {
+                    g = g.plus(gates::adder(in_bits)).plus(gates::adder(out_bits));
+                }
+                g
+            }
+            RequantOp::Codebook { index_bits, entry_bits } => {
+                // the "intensive encoding-decoding" design: a
+                // nearest-centroid ENCODER (one subtract-compare slice
+                // per entry over the 32-bit input), the index decode
+                // mux, the SRAM entry store, the multiply by the looked-
+                // up entry, and the clip.
+                let entries = 1u32 << index_bits;
+                let encoder = gates::comparator(in_bits).times(entries as f64);
+                let decode_mux = GateCount::default()
+                    .plus(gates::register(*index_bits))
+                    .plus(gates::clamp(*index_bits, *index_bits))
+                    .plus(gates::barrel_shifter(*entry_bits)); // mux tree
+                encoder
+                    .plus(decode_mux)
+                    .plus(gates::sram(entries, *entry_bits))
+                    .plus(gates::multiplier(in_bits, *entry_bits))
+                    .plus(gates::clamp(in_bits + entry_bits, out_bits))
+                    .plus(gates::register(out_bits))
+            }
+            RequantOp::BitShift => {
+                // barrel shift right 1..10 + round-half-up + clip — the
+                // whole paper operator
+                gates::barrel_shifter(in_bits)
+                    .plus(gates::rounder(in_bits))
+                    .plus(gates::clamp(in_bits, out_bits))
+                    .plus(gates::register(out_bits))
+            }
+        }
+    }
+}
+
+/// Paper Table 5 configurations.
+pub fn table5_ops() -> Vec<RequantOp> {
+    vec![
+        RequantOp::ScalingFactor { zero_point: false },
+        RequantOp::Codebook { index_bits: 4, entry_bits: 8 },
+        RequantOp::BitShift,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_paper() {
+        // codebook > scaling factor > bit shift in both area and power
+        let sf = RequantOp::ScalingFactor { zero_point: false }.gate_count();
+        let cb = RequantOp::Codebook { index_bits: 4, entry_bits: 8 }.gate_count();
+        let bs = RequantOp::BitShift.gate_count();
+        assert!(cb.area_um2() > sf.area_um2());
+        assert!(sf.area_um2() > bs.area_um2());
+        assert!(cb.power_mw() > sf.power_mw());
+        assert!(sf.power_mw() > bs.power_mw());
+    }
+
+    #[test]
+    fn ratios_in_paper_ballpark() {
+        // paper: scaling/bit-shift ~ 2x power, ~2.5x area;
+        //        codebook/bit-shift ~ 14.8x power, ~9x area.
+        let sf = RequantOp::ScalingFactor { zero_point: false }.gate_count();
+        let cb = RequantOp::Codebook { index_bits: 4, entry_bits: 8 }.gate_count();
+        let bs = RequantOp::BitShift.gate_count();
+        let p_sf = sf.power_mw() / bs.power_mw();
+        let a_sf = sf.area_um2() / bs.area_um2();
+        let p_cb = cb.power_mw() / bs.power_mw();
+        let a_cb = cb.area_um2() / bs.area_um2();
+        assert!((1.5..4.0).contains(&p_sf), "scaling/shift power ratio {p_sf}");
+        assert!((1.5..4.5).contains(&a_sf), "scaling/shift area ratio {a_sf}");
+        assert!((6.0..25.0).contains(&p_cb), "codebook/shift power ratio {p_cb}");
+        assert!((5.0..16.0).contains(&a_cb), "codebook/shift area ratio {a_cb}");
+    }
+
+    #[test]
+    fn zero_point_costs_extra() {
+        let plain = RequantOp::ScalingFactor { zero_point: false }.gate_count();
+        let zp = RequantOp::ScalingFactor { zero_point: true }.gate_count();
+        assert!(zp.ge > plain.ge);
+    }
+
+    #[test]
+    fn bigger_codebook_costs_more() {
+        let small = RequantOp::Codebook { index_bits: 2, entry_bits: 8 }.gate_count();
+        let big = RequantOp::Codebook { index_bits: 8, entry_bits: 8 }.gate_count();
+        assert!(big.area_um2() > small.area_um2());
+    }
+}

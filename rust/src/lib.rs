@@ -1,0 +1,52 @@
+//! # dfq — Dataflow-based Joint Quantization of Weights and Activations
+//!
+//! A production-grade reproduction of Geng et al., 2019: a post-training
+//! quantization system that represents weights, biases and activations
+//! with power-of-two scales only (bit-shifting, no multipliers or
+//! codebooks), restructures the network dataflow into *unified modules*
+//! so fewer quantization points exist, and jointly searches the
+//! fractional bits per module by minimising the reconstruction error
+//! (paper Algorithm 1) — no fine-tuning.
+//!
+//! ## Layering
+//!
+//! * **L1/L2 (build-time python)** — Pallas kernels + JAX model graphs,
+//!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
+//! * **L3 (this crate)** — the deployment system: graph IR and dataflow
+//!   analysis ([`graph`]), the quantization scheme, Algorithm 1 and the
+//!   joint calibrator ([`quant`]), a bit-exact integer-only inference
+//!   engine ([`engine`]), the PJRT runtime that executes the AOT
+//!   artifacts ([`runtime`]), a parallel calibration/serving coordinator
+//!   ([`coordinator`]), the RTL-calibrated hardware cost model ([`hw`]),
+//!   and the paper-table regeneration drivers ([`report`]).
+//!
+//! Python never runs at inference time: after `make artifacts`, the `dfq`
+//! binary (and every example/bench) is self-contained.
+#![deny(missing_docs)]
+
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod graph;
+pub mod hw;
+pub mod metrics;
+pub mod models;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::data::artifacts::{Artifacts, ModelBundle};
+    pub use crate::data::dataset::{ClassificationSet, DetectionSet};
+    pub use crate::engine::fp::FpEngine;
+    pub use crate::engine::int::IntEngine;
+    pub use crate::graph::{Graph, ModuleKind, UnifiedModule};
+    pub use crate::quant::joint::{CalibConfig, JointCalibrator};
+    pub use crate::quant::params::{ModuleShifts, QuantSpec};
+    pub use crate::quant::scheme;
+    pub use crate::tensor::{Shape, Tensor, TensorI32};
+    pub use crate::util::rng::Pcg;
+}

@@ -1,0 +1,483 @@
+//! `dfq` — the deployment CLI for dataflow-based joint quantization.
+//!
+//! ```text
+//! dfq tables   [--table N|all] [--artifacts DIR] [--eval-n N] [--out DIR]
+//! dfq calibrate --model NAME [--bits B] [--tau T] [--images N] [--save F]
+//! dfq evaluate  --model NAME [--bits B] [--eval-n N] [--via-pjrt]
+//! dfq detect    [--bits B] [--eval-n N]
+//! dfq hwcost    [--clock MHZ]
+//! dfq inspect   --model NAME
+//! dfq serve     --model NAME [--requests N] [--engine int|pjrt]
+//! ```
+//!
+//! Everything runs from the AOT artifacts; python is never invoked.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dfq::coordinator::pool::Pool;
+use dfq::coordinator::serve::{Backend, InferenceService, ServeConfig};
+use dfq::data::artifacts::Artifacts;
+use dfq::engine::int::IntEngine;
+use dfq::graph::fuse;
+use dfq::models::resnet;
+use dfq::prelude::*;
+use dfq::quant::joint::CalibConfig;
+use dfq::report::experiments::{self, EvalOptions};
+use dfq::report::figures;
+use dfq::util::timer::Timer;
+
+/// Minimal flag parser: `--key value` pairs + a subcommand.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut key: Option<String> = None;
+        for a in it {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(k) = key.take() {
+                    flags.insert(k, "true".to_string()); // boolean flag
+                }
+                key = Some(stripped.to_string());
+            } else if let Some(k) = key.take() {
+                flags.insert(k, a);
+            } else {
+                eprintln!("unexpected argument: {a}");
+                std::process::exit(2);
+            }
+        }
+        if let Some(k) = key.take() {
+            flags.insert(k, "true".to_string());
+        }
+        Args { cmd, flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u32_or(&self, k: &str, default: u32) -> u32 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn str_or<'a>(&'a self, k: &str, default: &'a str) -> &'a str {
+        self.get(k).unwrap_or(default)
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn opt_from(args: &Args) -> EvalOptions {
+    EvalOptions {
+        eval_n: args.usize_or("eval-n", 1000),
+        batch: args.usize_or("batch", 50),
+        calib_n: args.usize_or("images", 1),
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let result = match args.cmd.as_str() {
+        "tables" => cmd_tables(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "detect" => cmd_detect(&args),
+        "hwcost" => cmd_hwcost(&args),
+        "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+dfq — dataflow-based joint quantization (Geng et al., 2019 reproduction)
+
+USAGE: dfq <command> [--flag value ...]
+
+COMMANDS:
+  tables     regenerate the paper's tables/figures (--table 1..5|fig2|ablation|headline|all)
+  calibrate  run Algorithm 1 joint calibration (--model, --bits, --tau, --images, --save)
+  evaluate   top-1 of FP vs quantized (--model, --bits, --eval-n, --via-pjrt)
+  detect     Table-4 style detection eval (--bits, --eval-n)
+  hwcost     RTL cost model (--clock MHz)
+  inspect    dataflow analysis + quant-point report (--model)
+  serve      batching inference service demo (--model, --requests, --engine int|pjrt)
+
+COMMON FLAGS:
+  --artifacts DIR   artifacts directory (default: artifacts)
+  --eval-n N        validation subset size (default 1000)
+  --batch N         evaluation batch (default 50)
+";
+
+fn cmd_tables(args: &Args) -> Result<(), String> {
+    let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
+    let opt = opt_from(args);
+    let which = args.str_or("table", "all");
+    let pool = Pool::auto();
+    let out_dir = args.get("out").map(std::path::PathBuf::from);
+    let save = |name: &str, text: &str, csv: Option<String>| {
+        println!("{text}");
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir).ok();
+            std::fs::write(dir.join(format!("{name}.txt")), text).ok();
+            if let Some(c) = csv {
+                std::fs::write(dir.join(format!("{name}.csv")), c).ok();
+            }
+        }
+    };
+    let all = which == "all";
+    if all || which == "1" {
+        let t = experiments::table1(&art, &pool, opt)?;
+        save("table1", &t.render(), Some(t.to_csv()));
+    }
+    if all || which == "2" {
+        let t = experiments::table2(&art, opt)?;
+        save("table2", &t.render(), Some(t.to_csv()));
+        let t = experiments::table2_ablation(&art, opt)?;
+        save("table2_ablation", &t.render(), Some(t.to_csv()));
+    }
+    if all || which == "3" {
+        let t = experiments::table3(&art, opt)?;
+        save("table3", &t.render(), Some(t.to_csv()));
+    }
+    if all || which == "4" {
+        let t = experiments::table4(&art, opt)?;
+        save("table4", &t.render(), Some(t.to_csv()));
+    }
+    if all || which == "5" {
+        let t = experiments::table5();
+        save("table5", &t.render(), Some(t.to_csv()));
+    }
+    if all || which == "headline" {
+        let bundle = art.load_model("resnet_l")?;
+        let t = experiments::headline(&bundle.graph);
+        save("headline", &t.render(), Some(t.to_csv()));
+    }
+    if all || which == "fig2" {
+        let (a, b) = experiments::fig2(&art, "resnet_l")?;
+        save(
+            "fig2a",
+            &figures::ascii_plot("Fig 2a: MSE vs residual block depth", &a, 60, 16),
+            Some(figures::series_csv(&a)),
+        );
+        save(
+            "fig2b",
+            &figures::ascii_plot("Fig 2b: shift bits vs layer depth", &b, 60, 16),
+            Some(figures::series_csv(&b)),
+        );
+    }
+    if all || which == "ablation" {
+        let t = experiments::dataflow_ablation(&art, "resnet_s", opt)?;
+        save("ablation", &t.render(), Some(t.to_csv()));
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
+    let model = args.get("model").ok_or("--model required")?;
+    let bundle = art.load_model(model)?;
+    let calib = art.calibration_images(args.usize_or("images", 1))?;
+    let cfg = CalibConfig {
+        n_bits: args.u32_or("bits", 8),
+        tau: args.usize_or("tau", 4) as i32,
+        images: args.usize_or("images", 1),
+        unfused: args.has("unfused"),
+    };
+    let pool = Pool::auto();
+    let t = Timer::start();
+    let out = dfq::coordinator::calib::calibrate_parallel(
+        &pool, cfg, &bundle.graph, &bundle.folded, &calib,
+    );
+    println!(
+        "calibrated {model} ({} modules) in {:.2}s on {} workers",
+        bundle.graph.modules.len(),
+        t.secs(),
+        pool.workers()
+    );
+    let (lo, med, hi) = out.stats.shift_summary();
+    println!("shift range [{lo}, {hi}], median {med} (paper Fig 2b: range [1,10])");
+    if let Some(path) = args.get("save") {
+        std::fs::write(path, out.spec.to_json().dump()).map_err(|e| e.to_string())?;
+        println!("saved spec to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<(), String> {
+    let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
+    let model = args.get("model").ok_or("--model required")?;
+    let opt = opt_from(args);
+    let bundle = art.load_model(model)?;
+    let ds = art.classification_set("synthimagenet_val")?;
+    let calib = art.calibration_images(opt.calib_n)?;
+    let fp = experiments::eval_fp(&bundle, &ds, opt);
+    let out = experiments::calibrate_ours(&bundle, &calib, args.u32_or("bits", 8));
+    let q = experiments::eval_quantized(&bundle, &out.spec, &ds, opt);
+    println!("{model}: FP {:.2}%  quantized {:.2}%  (drop {:.2}pp)",
+        fp * 100.0, q * 100.0, (fp - q) * 100.0);
+    if args.has("via-pjrt") {
+        let rt = dfq::runtime::Runtime::cpu()?;
+        let acc = pjrt_eval(&art, &rt, model, &bundle, &out.spec, &ds, opt)?;
+        println!("{model}: quantized via PJRT artifact {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+/// Evaluate the quantized model through the AOT q_logits artifact.
+fn pjrt_eval(
+    art: &Artifacts,
+    rt: &dfq::runtime::Runtime,
+    model: &str,
+    bundle: &dfq::data::artifacts::ModelBundle,
+    spec: &QuantSpec,
+    ds: &ClassificationSet,
+    opt: EvalOptions,
+) -> Result<f64, String> {
+    use dfq::runtime::ArgValue;
+    let exe = rt.load(&art.hlo_path(model, "q_logits")?)?;
+    let batch = art.artifact_batch(model, "q_logits")?;
+    let eng = IntEngine::new(&bundle.graph, &bundle.folded, spec);
+    let n = opt.eval_n.min(ds.len());
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut start = 0usize;
+    while start < n {
+        let take = batch.min(n - start);
+        let (x, labels) = ds.batch(start, take);
+        // pad to the artifact batch
+        let dims = x.shape.dims();
+        let per: usize = dims[1..].iter().product();
+        let mut data = vec![0.0f32; batch * per];
+        data[..take * per].copy_from_slice(&x.data);
+        let xp = Tensor::from_vec(&[batch, dims[1], dims[2], dims[3]], data);
+        let x_int = eng.quantize_input(&xp);
+        let mut argv = vec![ArgValue::I32(x_int)];
+        for m in bundle.graph.weight_modules() {
+            let qp = &eng.qparams()[&m.name];
+            argv.push(ArgValue::I32(qp.w.clone()));
+            argv.push(ArgValue::I32(dfq::tensor::TensorI32::from_vec(
+                &[qp.b.len()],
+                qp.b.clone(),
+            )));
+            argv.push(ArgValue::I32Vec(spec.shift_vector(&bundle.graph, &m.name).to_vec()));
+        }
+        let out = exe.run(&argv)?;
+        let logits = out[0].as_i32()?;
+        let c = logits.shape.dim(1);
+        for (i, &label) in labels.iter().enumerate() {
+            let row = &logits.data[i * c..(i + 1) * c];
+            let mut best = 0usize;
+            for (j, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = j;
+                }
+            }
+            if best as i32 == label {
+                correct += 1;
+            }
+        }
+        seen += take;
+        start += take;
+    }
+    Ok(correct as f64 / seen as f64)
+}
+
+fn cmd_detect(args: &Args) -> Result<(), String> {
+    let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
+    let mut opt = opt_from(args);
+    opt.eval_n = args.usize_or("eval-n", 300);
+    let t = experiments::table4(&art, opt)?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_hwcost(args: &Args) -> Result<(), String> {
+    let clock: f64 = args
+        .get("clock")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(dfq::hw::synth::REF_CLOCK_MHZ);
+    println!("{}", experiments::table5().render());
+    for op in dfq::hw::units::table5_ops() {
+        let r = dfq::hw::synth::synthesize(op, clock);
+        println!("{:>16} @ {clock} MHz: {:.2} mW, {:.1} um^2", r.op, r.power_mw, r.area_um2);
+    }
+    let (p, a) = dfq::hw::synth::headline_ratios();
+    println!("\ncodebook / bit-shift: power {p:.1}x, area {a:.1}x (paper: ~14.8x, ~9.0x)");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), String> {
+    let model = args.get("model").ok_or("--model required")?;
+    // native layer-graph form -> fusion pass -> report
+    let variant = model.strip_prefix("resnet_").ok_or("inspect supports resnet_{s,m,l}")?;
+    let n = resnet::blocks_for(variant).ok_or("unknown variant")?;
+    let lg = resnet::resnet_layers(model, n, 10);
+    let fused = fuse::fuse(&lg)?;
+    println!("{}", fuse::quant_point_report(&fused));
+    let dims = fused.graph.shapes();
+    println!("\n{:<14} {:>6} {:>12} {:>10}", "module", "case", "out shape", "MACs");
+    for m in &fused.graph.modules {
+        let (h, w, c) = dims[&m.name];
+        let macs = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => h * w * kh * kw * cin * cout,
+            ModuleKind::Dense { cin, cout } => cin * cout,
+            ModuleKind::Gap => 0,
+        };
+        println!(
+            "{:<14} {:>6} {:>12} {:>10}",
+            m.name,
+            m.fig1_case(),
+            format!("{h}x{w}x{c}"),
+            macs
+        );
+    }
+    println!("\ntotal MACs/image: {}", fused.graph.total_macs());
+    Ok(())
+}
+
+/// Backend adapters for the serve demo.
+struct IntBackend {
+    bundle: dfq::data::artifacts::ModelBundle,
+    spec: QuantSpec,
+    batch: usize,
+}
+
+impl Backend for IntBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
+        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
+        let out = eng.run(batch);
+        Ok(out.map_f32(|v| v as f32))
+    }
+}
+
+struct PjrtBackend {
+    worker: dfq::runtime::PjrtWorker,
+    path: std::path::PathBuf,
+    argv_tail: Vec<dfq::runtime::ArgValue>,
+    bundle: dfq::data::artifacts::ModelBundle,
+    spec: QuantSpec,
+    batch: usize,
+}
+
+impl Backend for PjrtBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
+        use dfq::runtime::ArgValue;
+        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
+        let x_int = eng.quantize_input(batch);
+        let mut argv = vec![ArgValue::I32(x_int)];
+        argv.extend(self.argv_tail.iter().cloned());
+        let out = self.worker.run(&self.path, argv)?;
+        Ok(out[0].as_i32()?.map_f32(|v| v as f32))
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
+    let model = args.str_or("model", "resnet_s");
+    let n_req = args.usize_or("requests", 64);
+    let bundle = art.load_model(model)?;
+    let calib = art.calibration_images(1)?;
+    let out = experiments::calibrate_ours(&bundle, &calib, 8);
+    let ds = art.classification_set("synthimagenet_val")?;
+    let engine_kind = args.str_or("engine", "int");
+
+    let backend: Arc<dyn Backend> = match engine_kind {
+        "pjrt" => {
+            let worker = dfq::runtime::PjrtWorker::start()?;
+            let path = art.hlo_path(model, "q_logits")?;
+            worker.warm(&path)?; // compile up front
+            let batch = art.artifact_batch(model, "q_logits")?;
+            let eng = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
+            let mut tail = Vec::new();
+            for m in bundle.graph.weight_modules() {
+                let qp = &eng.qparams()[&m.name];
+                tail.push(dfq::runtime::ArgValue::I32(qp.w.clone()));
+                tail.push(dfq::runtime::ArgValue::I32(
+                    dfq::tensor::TensorI32::from_vec(&[qp.b.len()], qp.b.clone()),
+                ));
+                tail.push(dfq::runtime::ArgValue::I32Vec(
+                    out.spec.shift_vector(&bundle.graph, &m.name).to_vec(),
+                ));
+            }
+            let bundle2 = art.load_model(model)?;
+            Arc::new(PjrtBackend {
+                worker,
+                path,
+                argv_tail: tail,
+                bundle: bundle2,
+                spec: out.spec.clone(),
+                batch,
+            })
+        }
+        _ => Arc::new(IntBackend { bundle: art.load_model(model)?, spec: out.spec.clone(), batch: 16 }),
+    };
+
+    let svc = Arc::new(InferenceService::start(backend, ServeConfig::default()));
+    let t = Timer::start();
+    let mut handles = Vec::new();
+    for i in 0..n_req {
+        let svc = svc.clone();
+        let (img, label) = {
+            let (x, labels) = ds.batch(i % ds.len(), 1);
+            (x, labels[0])
+        };
+        handles.push(std::thread::spawn(move || {
+            let out = svc.infer(img).unwrap();
+            let mut best = 0usize;
+            for (j, v) in out.iter().enumerate() {
+                if *v > out[best] {
+                    best = j;
+                }
+            }
+            (best as i32 == label) as usize
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let secs = t.secs();
+    let m = svc.metrics();
+    println!(
+        "served {n_req} requests in {secs:.2}s ({:.1} req/s), top-1 {:.1}%",
+        n_req as f64 / secs,
+        100.0 * correct as f64 / n_req as f64
+    );
+    println!(
+        "batches: {} (mean occupancy {:.1}), latency p50 {:.1} ms, p99 {:.1} ms",
+        m.batches,
+        m.mean_occupancy(),
+        m.latency_percentile(50.0) * 1e3,
+        m.latency_percentile(99.0) * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Top-1 classification accuracy.
+
+use crate::tensor::{Tensor, TensorI32};
+use crate::util::mathutil::argmax;
+
+/// Top-1 accuracy from f32 logits (batch-major `(N, classes)`).
+pub fn top1_f32(logits: &Tensor, labels: &[i32]) -> f64 {
+    let n = logits.shape.dim(0);
+    let c = logits.shape.dim(1);
+    assert_eq!(n, labels.len());
+    let mut correct = 0usize;
+    for i in 0..n {
+        if argmax(&logits.data[i * c..(i + 1) * c]) as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n.max(1) as f64
+}
+
+/// Top-1 accuracy from integer logit codes (scale is argmax-invariant).
+pub fn top1_i32(logits: &TensorI32, labels: &[i32]) -> f64 {
+    let n = logits.shape.dim(0);
+    let c = logits.shape.dim(1);
+    assert_eq!(n, labels.len());
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let mut best = 0usize;
+        for (j, v) in row.iter().enumerate() {
+            if *v > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_correct_rows() {
+        let logits = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 2.0, 3.0]);
+        assert!((top1_f32(&logits, &[0, 1, 1]) - 1.0).abs() < 1e-12);
+        assert!((top1_f32(&logits, &[1, 1, 1]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_matches_f32_ranking() {
+        let li = TensorI32::from_vec(&[2, 3], vec![5, -1, 2, 0, 7, 7]);
+        // ties break to the first max, matching argmax()
+        assert!((top1_i32(&li, &[0, 1]) - 1.0).abs() < 1e-12);
+    }
+}

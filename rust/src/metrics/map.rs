@@ -1,0 +1,219 @@
+//! Detection metrics for Table 4: per-class average precision with
+//! greedy IoU matching and 11-point interpolation (the PASCAL VOC
+//! protocol KITTI's AP follows), plus NMS for the decode path.
+
+/// An axis-aligned box in normalised coordinates (cx, cy, w, h).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BBox {
+    /// center x
+    pub cx: f32,
+    /// center y
+    pub cy: f32,
+    /// width
+    pub w: f32,
+    /// height
+    pub h: f32,
+}
+
+impl BBox {
+    /// Intersection-over-union.
+    pub fn iou(&self, o: &BBox) -> f32 {
+        let (ax0, ax1) = (self.cx - self.w / 2.0, self.cx + self.w / 2.0);
+        let (ay0, ay1) = (self.cy - self.h / 2.0, self.cy + self.h / 2.0);
+        let (bx0, bx1) = (o.cx - o.w / 2.0, o.cx + o.w / 2.0);
+        let (by0, by1) = (o.cy - o.h / 2.0, o.cy + o.h / 2.0);
+        let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+        let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+        let inter = ix * iy;
+        let union = self.w * self.h + o.w * o.h - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+}
+
+/// One detection: box + class + confidence + image id.
+#[derive(Clone, Copy, Debug)]
+pub struct Detection {
+    /// image index within the evaluation set
+    pub image: usize,
+    /// class id
+    pub class: usize,
+    /// confidence score
+    pub score: f32,
+    /// the box
+    pub bbox: BBox,
+}
+
+/// One ground-truth object.
+#[derive(Clone, Copy, Debug)]
+pub struct GroundTruth {
+    /// image index
+    pub image: usize,
+    /// class id
+    pub class: usize,
+    /// the box
+    pub bbox: BBox,
+}
+
+/// Greedy per-class non-maximum suppression.
+pub fn nms(mut dets: Vec<Detection>, iou_thr: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::new();
+    'outer: for d in dets {
+        for k in &keep {
+            if k.image == d.image && k.class == d.class && k.bbox.iou(&d.bbox) > iou_thr {
+                continue 'outer;
+            }
+        }
+        keep.push(d);
+    }
+    keep
+}
+
+/// 11-point interpolated AP for one class.
+pub fn average_precision(
+    dets: &[Detection],
+    gts: &[GroundTruth],
+    class: usize,
+    iou_thr: f32,
+) -> f64 {
+    let gt_total = gts.iter().filter(|g| g.class == class).count();
+    if gt_total == 0 {
+        return 0.0;
+    }
+    let mut cls_dets: Vec<&Detection> = dets.iter().filter(|d| d.class == class).collect();
+    cls_dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut matched: Vec<bool> = vec![false; gts.len()];
+    let mut tps = Vec::with_capacity(cls_dets.len());
+    for d in &cls_dets {
+        let mut best: Option<(usize, f32)> = None;
+        for (gi, g) in gts.iter().enumerate() {
+            if g.class != class || g.image != d.image || matched[gi] {
+                continue;
+            }
+            let iou = d.bbox.iou(&g.bbox);
+            if iou >= iou_thr && best.map(|(_, b)| iou > b).unwrap_or(true) {
+                best = Some((gi, iou));
+            }
+        }
+        if let Some((gi, _)) = best {
+            matched[gi] = true;
+            tps.push(true);
+        } else {
+            tps.push(false);
+        }
+    }
+    // precision-recall curve
+    let mut tp = 0usize;
+    let mut curve: Vec<(f64, f64)> = Vec::with_capacity(tps.len()); // (recall, precision)
+    for (i, &is_tp) in tps.iter().enumerate() {
+        if is_tp {
+            tp += 1;
+        }
+        curve.push((tp as f64 / gt_total as f64, tp as f64 / (i + 1) as f64));
+    }
+    // 11-point interpolation
+    let mut ap = 0.0;
+    for k in 0..=10 {
+        let r = k as f64 / 10.0;
+        let p = curve
+            .iter()
+            .filter(|(rec, _)| *rec >= r)
+            .map(|(_, p)| *p)
+            .fold(0.0f64, f64::max);
+        ap += p / 11.0;
+    }
+    ap
+}
+
+/// AP for every class id in `0..n_classes`.
+pub fn per_class_ap(
+    dets: &[Detection],
+    gts: &[GroundTruth],
+    n_classes: usize,
+    iou_thr: f32,
+) -> Vec<f64> {
+    (0..n_classes)
+        .map(|c| average_precision(dets, gts, c, iou_thr))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(cx: f32, cy: f32, w: f32, h: f32) -> BBox {
+        BBox { cx, cy, w, h }
+    }
+
+    #[test]
+    fn iou_basic() {
+        let a = b(0.5, 0.5, 0.2, 0.2);
+        assert!((a.iou(&a) - 1.0).abs() < 1e-6);
+        let disjoint = b(0.9, 0.9, 0.1, 0.1);
+        assert_eq!(a.iou(&disjoint), 0.0);
+        // half overlap in x
+        let shifted = b(0.6, 0.5, 0.2, 0.2);
+        let iou = a.iou(&shifted);
+        assert!((iou - (0.1 * 0.2) / (2.0 * 0.04 - 0.02)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perfect_detections_ap_one() {
+        let gts = vec![
+            GroundTruth { image: 0, class: 0, bbox: b(0.3, 0.3, 0.2, 0.2) },
+            GroundTruth { image: 1, class: 0, bbox: b(0.7, 0.7, 0.2, 0.2) },
+        ];
+        let dets = vec![
+            Detection { image: 0, class: 0, score: 0.9, bbox: b(0.3, 0.3, 0.2, 0.2) },
+            Detection { image: 1, class: 0, score: 0.8, bbox: b(0.7, 0.7, 0.2, 0.2) },
+        ];
+        let ap = average_precision(&dets, &gts, 0, 0.5);
+        assert!((ap - 1.0).abs() < 1e-9, "ap {ap}");
+    }
+
+    #[test]
+    fn false_positives_reduce_ap() {
+        let gts = vec![GroundTruth { image: 0, class: 0, bbox: b(0.3, 0.3, 0.2, 0.2) }];
+        let dets = vec![
+            Detection { image: 0, class: 0, score: 0.95, bbox: b(0.8, 0.8, 0.1, 0.1) }, // FP first
+            Detection { image: 0, class: 0, score: 0.90, bbox: b(0.3, 0.3, 0.2, 0.2) },
+        ];
+        let ap = average_precision(&dets, &gts, 0, 0.5);
+        assert!(ap < 0.6, "ap {ap}");
+    }
+
+    #[test]
+    fn duplicate_detections_count_once() {
+        let gts = vec![GroundTruth { image: 0, class: 0, bbox: b(0.3, 0.3, 0.2, 0.2) }];
+        let dets = vec![
+            Detection { image: 0, class: 0, score: 0.9, bbox: b(0.3, 0.3, 0.2, 0.2) },
+            Detection { image: 0, class: 0, score: 0.8, bbox: b(0.31, 0.3, 0.2, 0.2) },
+        ];
+        // second is a duplicate -> FP; 11-pt AP stays 1.0 since recall 1.0
+        // is reached at precision 1.0 first
+        let ap = average_precision(&dets, &gts, 0, 0.5);
+        assert!((ap - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nms_removes_overlaps_keeps_best() {
+        let dets = vec![
+            Detection { image: 0, class: 0, score: 0.5, bbox: b(0.3, 0.3, 0.2, 0.2) },
+            Detection { image: 0, class: 0, score: 0.9, bbox: b(0.31, 0.3, 0.2, 0.2) },
+            Detection { image: 0, class: 1, score: 0.4, bbox: b(0.3, 0.3, 0.2, 0.2) }, // other class
+            Detection { image: 1, class: 0, score: 0.3, bbox: b(0.3, 0.3, 0.2, 0.2) }, // other image
+        ];
+        let kept = nms(dets, 0.5);
+        assert_eq!(kept.len(), 3);
+        assert!((kept[0].score - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_class_ap_zero() {
+        assert_eq!(average_precision(&[], &[], 0, 0.5), 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Evaluation metrics: top-1 accuracy (Tables 1–3), detection AP
+//! (Table 4), MSE (Fig. 2a).
+
+pub mod accuracy;
+pub mod map;

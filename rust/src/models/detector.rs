@@ -1,0 +1,154 @@
+//! DetNet — the single-stage detector standing in for Faster R-CNN on
+//! KITTI (Table 4; DESIGN.md §2). A stride-8 conv backbone over 64x128
+//! scenes and a 1x1 head predicting, per grid cell:
+//! `[objectness, class scores x3, box (dx, dy, w, h)]`.
+//!
+//! Must stay name-for-name identical to
+//! `python/compile/model.py::detnet_spec`. Box decoding + NMS live here;
+//! the head's raw codes come out of either engine and are dequantized
+//! before the (floating-point) sigmoid/softmax post-processing — the
+//! same split real integer-only deployments use.
+
+use crate::graph::{Graph, ModuleKind, UnifiedModule};
+use crate::metrics::map::{nms, BBox, Detection};
+use crate::tensor::Tensor;
+use crate::util::mathutil::{sigmoid, softmax};
+
+/// (channels, stride) of the backbone convs — mirrors detnet_spec.
+pub const BACKBONE: [(usize, usize); 6] =
+    [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1), (96, 2)];
+
+/// Number of object classes (car / pedestrian / cyclist analogues).
+pub const N_CLASSES: usize = 3;
+
+/// Build the DetNet unified graph.
+pub fn detnet_graph() -> Graph {
+    let mut modules = Vec::new();
+    let mut prev = "input".to_string();
+    let mut cin = 3usize;
+    for (i, (c, s)) in BACKBONE.iter().enumerate() {
+        modules.push(UnifiedModule {
+            name: format!("bb{i}"),
+            kind: ModuleKind::Conv { kh: 3, kw: 3, cin, cout: *c, stride: *s },
+            src: prev.clone(),
+            res: None,
+            relu: true,
+        });
+        prev = format!("bb{i}");
+        cin = *c;
+    }
+    modules.push(UnifiedModule {
+        name: "head".into(),
+        kind: ModuleKind::Conv {
+            kh: 1,
+            kw: 1,
+            cin,
+            cout: 1 + N_CLASSES + 4,
+            stride: 1,
+        },
+        src: prev,
+        res: None,
+        relu: false, // raw logits, Fig. 1 (a)
+    });
+    let g = Graph { name: "detnet".into(), input_hwc: (64, 128, 3), modules };
+    g.validate().expect("detnet graph is valid by construction");
+    g
+}
+
+/// Decode head outputs (f32, `(N, gh, gw, 8)`) into detections.
+pub fn decode(
+    head: &Tensor,
+    score_thr: f32,
+    nms_iou: f32,
+    image_base: usize,
+) -> Vec<Detection> {
+    let (n, gh, gw, c) = (
+        head.shape.dim(0),
+        head.shape.dim(1),
+        head.shape.dim(2),
+        head.shape.dim(3),
+    );
+    assert_eq!(c, 1 + N_CLASSES + 4);
+    let mut dets = Vec::new();
+    for b in 0..n {
+        for gy in 0..gh {
+            for gx in 0..gw {
+                let base = ((b * gh + gy) * gw + gx) * c;
+                let cell = &head.data[base..base + c];
+                let obj = sigmoid(cell[0]);
+                if obj < score_thr {
+                    continue;
+                }
+                let probs = softmax(&cell[1..1 + N_CLASSES]);
+                let (class, pcls) = probs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, p)| (i, *p))
+                    .unwrap();
+                let bx = &cell[1 + N_CLASSES..];
+                let bbox = BBox {
+                    cx: (gx as f32 + sigmoid(bx[0])) / gw as f32,
+                    cy: (gy as f32 + sigmoid(bx[1])) / gh as f32,
+                    w: sigmoid(bx[2]),
+                    h: sigmoid(bx[3]),
+                };
+                dets.push(Detection {
+                    image: image_base + b,
+                    class,
+                    score: obj * pcls,
+                    bbox,
+                });
+            }
+        }
+    }
+    nms(dets, nms_iou)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_shape_and_grid() {
+        let g = detnet_graph();
+        g.validate().unwrap();
+        let dims = g.shapes();
+        assert_eq!(dims["head"], (8, 16, 8)); // stride 8 over 64x128
+        assert_eq!(g.weight_layer_count(), 7);
+    }
+
+    #[test]
+    fn decode_picks_confident_cells() {
+        // one confident cell at (gy=2, gx=5), class 1, centered box
+        let (gh, gw, c) = (8, 16, 8);
+        let mut data = vec![0.0f32; gh * gw * c];
+        // default cells: obj logit -10 (prob ~0)
+        for cell in data.chunks_exact_mut(c) {
+            cell[0] = -10.0;
+        }
+        let base = (2 * gw + 5) * c;
+        data[base] = 5.0; // obj
+        data[base + 2] = 4.0; // class 1 logit
+        data[base + 4] = 0.0; // dx -> 0.5
+        data[base + 5] = 0.0; // dy -> 0.5
+        data[base + 6] = -2.0; // w -> ~0.12
+        data[base + 7] = -2.0; // h
+        let head = Tensor::from_vec(&[1, gh, gw, c], data);
+        let dets = decode(&head, 0.3, 0.5, 7);
+        assert_eq!(dets.len(), 1);
+        let d = &dets[0];
+        assert_eq!(d.image, 7);
+        assert_eq!(d.class, 1);
+        assert!((d.bbox.cx - 5.5 / 16.0).abs() < 1e-6);
+        assert!((d.bbox.cy - 2.5 / 8.0).abs() < 1e-6);
+        assert!(d.score > 0.5);
+    }
+
+    #[test]
+    fn decode_threshold_filters_everything() {
+        let head = Tensor::zeros(&[1, 8, 16, 8]); // obj logit 0 -> p=.5
+        let dets = decode(&head, 0.6, 0.5, 0);
+        assert!(dets.is_empty());
+    }
+}

@@ -1,0 +1,7 @@
+//! Model builders mirroring `python/compile/model.py` — the rust side
+//! can construct the same graphs natively (for tests/examples without
+//! artifacts) and must agree exactly with the manifest specs (checked by
+//! `tests/integration_artifacts.rs`).
+
+pub mod detector;
+pub mod resnet;

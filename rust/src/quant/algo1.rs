@@ -1,0 +1,439 @@
+//! Algorithm 1 — per-module grid search for the optimal fractional bits
+//! `(N_w, N_b, N_o)` minimising the reconstruction error
+//! `‖O − Q(CONV(X, W, B); N_o)‖₂` (Eq. 5).
+//!
+//! The search space is narrowed as in the paper: the largest useful
+//! integer-bit count for a tensor is `ceil(log2(max|·| + 1)) + 1`
+//! (Eq. 6) and the window scans τ positions below it; `N = (n_bits−1) − i`
+//! converts integer bits `i` to fractional bits.
+//!
+//! Cost structure (an optimization over the naive τ³ loop, numerically
+//! identical): the conv accumulator depends only on `N_w`, the bias
+//! addition only on `(N_w, N_b)`, the requantization only on everything —
+//! so the inner loops reuse the accumulator, making the search
+//! `O(τ·Γ + τ³·|O|)` instead of `O(τ³·Γ)` (Γ = conv cost). The
+//! candidates for a given `N_w` can also be evaluated on independent
+//! threads (see `coordinator::calib`).
+
+use crate::graph::{ModuleKind, UnifiedModule};
+use crate::quant::params::ModuleShifts;
+use crate::quant::scheme;
+use crate::tensor::im2col::Padding;
+use crate::tensor::{ops_int, Tensor, TensorI32};
+use crate::util::mathutil::magnitude_bits;
+
+/// Search window for one tensor: fractional-bit candidates, highest
+/// precision first.
+pub fn frac_window(max_abs: f32, n_bits: u32, tau: i32) -> Vec<i32> {
+    let mag = magnitude_bits(max_abs);
+    let base = (n_bits as i32 - 1) - mag;
+    (0..=tau).map(|d| base + d).collect()
+}
+
+/// Inputs to the per-module search.
+pub struct ModuleProblem<'a> {
+    /// the module being calibrated
+    pub module: &'a UnifiedModule,
+    /// quantized input codes (from the already-calibrated prefix)
+    pub x_int: &'a TensorI32,
+    /// fractional bits of `x_int`
+    pub n_x: i32,
+    /// folded FP weights
+    pub w: &'a Tensor,
+    /// folded FP bias
+    pub b: &'a [f32],
+    /// residual codes + their fractional bits (Fig. 1 c/d)
+    pub res: Option<(&'a TensorI32, i32)>,
+    /// FP target activations `O` (Eq. 5)
+    pub target: &'a Tensor,
+}
+
+/// Search configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchConfig {
+    /// bit-width (8 in the paper's main results)
+    pub n_bits: u32,
+    /// window width τ (paper: 4)
+    pub tau: i32,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig { n_bits: 8, tau: 4 }
+    }
+}
+
+/// Result of the search.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchResult {
+    /// winning fractional bits
+    pub shifts: ModuleShifts,
+    /// achieved ‖O − O^q‖₂
+    pub error: f64,
+    /// number of (N_w, N_b, N_o) candidates evaluated
+    pub evaluated: usize,
+}
+
+/// im2col'd input patches, shared by every `N_w` branch (the conv's
+/// geometry never changes inside the search — hoisting this was §Perf
+/// iteration #3).
+fn prepare_patches(m: &UnifiedModule, x_int: &TensorI32) -> TensorI32 {
+    match &m.kind {
+        ModuleKind::Conv { kh, kw, stride, .. } => {
+            crate::tensor::im2col::im2col(x_int, *kh, *kw, *stride, Padding::Same).0
+        }
+        ModuleKind::Dense { .. } => x_int.reshape(&[
+            x_int.shape.dim(0),
+            x_int.numel() / x_int.shape.dim(0),
+        ]),
+        ModuleKind::Gap => panic!("gap modules have no parameters to search"),
+    }
+}
+
+/// Accumulator from prepared patches: a plain GEMM for both kinds.
+fn accumulate(m: &UnifiedModule, patches: &TensorI32, w_codes: &TensorI32) -> Vec<i32> {
+    let (mrows, k) = (patches.shape.dim(0), patches.shape.dim(1));
+    let cout = *w_codes.shape.dims().last().unwrap();
+    match &m.kind {
+        ModuleKind::Conv { kh, kw, cin, .. } => {
+            debug_assert_eq!(k, kh * kw * cin);
+            let wmat = &w_codes.data; // HWIO flattens to (kh*kw*cin, cout)
+            ops_int::gemm_i32(&patches.data, wmat, mrows, k, cout)
+        }
+        ModuleKind::Dense { .. } => {
+            ops_int::gemm_i32(&patches.data, &w_codes.data, mrows, k, cout)
+        }
+        ModuleKind::Gap => unreachable!(),
+    }
+}
+
+/// Evaluate one `N_w` branch of the grid (the unit of parallelism the
+/// coordinator fans across workers): the conv accumulator is computed
+/// once, then all `(N_b, N_o)` pairs are scored against it.
+pub fn search_nw(p: &ModuleProblem<'_>, cfg: SearchConfig, n_w: i32) -> SearchResult {
+    let patches = prepare_patches(p.module, p.x_int);
+    search_nw_prepared(p, &patches, cfg, n_w)
+}
+
+/// `search_nw` over pre-extracted patches (see [`search`], which hoists
+/// the im2col out of the `N_w` loop).
+pub fn search_nw_prepared(
+    p: &ModuleProblem<'_>,
+    patches: &TensorI32,
+    cfg: SearchConfig,
+    n_w: i32,
+) -> SearchResult {
+    let b_max = p.b.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let o_max = p.target.max_abs();
+    let b_cands = frac_window(b_max, cfg.n_bits, cfg.tau);
+    let o_cands = frac_window(o_max, cfg.n_bits, cfg.tau);
+    let w_codes = scheme::quantize_tensor(p.w, n_w, cfg.n_bits, false);
+    let acc0 = accumulate(p.module, patches, &w_codes);
+    // pre-align the residual once per N_w (it depends on N_w via the
+    // accumulator scale 2^-(N_x+N_w))
+    let res_acc: Option<Vec<i32>> = p.res.map(|(rt, n_r)| {
+        let rs = p.n_x + n_w - n_r;
+        rt.data.iter().map(|&v| scheme::align(v, rs)).collect()
+    });
+    let mut best: Option<SearchResult> = None;
+    let mut evaluated = 0usize;
+    let mut acc = vec![0i32; acc0.len()];
+    for &n_b in &b_cands {
+        let sp_bias = p.n_x + n_w - n_b;
+        let b_codes: Vec<i32> = p
+            .b
+            .iter()
+            .map(|&x| scheme::quantize_val(x, n_b, cfg.n_bits, false))
+            .collect();
+        let aligned: Vec<i32> =
+            b_codes.iter().map(|&v| scheme::align(v, sp_bias)).collect();
+        let cout = aligned.len();
+        // acc = acc0 + bias (+ residual), reusing one scratch buffer
+        acc.copy_from_slice(&acc0);
+        for (row, chunk) in acc.chunks_exact_mut(cout).enumerate() {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = v.wrapping_add(aligned[j]);
+                if let Some(r) = &res_acc {
+                    *v = v.wrapping_add(r[row * cout + j]);
+                }
+            }
+        }
+        // score every N_o in ONE pass over the accumulator (the error
+        // loop is memory-bound; §Perf iteration #4)
+        let errs = recon_errors_multi(
+            &acc,
+            &o_cands,
+            p.n_x + n_w,
+            cfg.n_bits,
+            p.module.relu,
+            &p.target.data,
+        );
+        for (&n_o, &err) in o_cands.iter().zip(&errs) {
+            evaluated += 1;
+            if best.map(|b| err < b.error).unwrap_or(true) {
+                best = Some(SearchResult {
+                    shifts: ModuleShifts { n_w, n_b, n_o },
+                    error: err,
+                    evaluated: 0,
+                });
+            }
+        }
+    }
+    let mut r = best.expect("non-empty search space");
+    r.evaluated = evaluated;
+    r
+}
+
+/// The `N_w` candidate list for a problem.
+pub fn weight_candidates(p: &ModuleProblem<'_>, cfg: SearchConfig) -> Vec<i32> {
+    frac_window(p.w.max_abs(), cfg.n_bits, cfg.tau)
+}
+
+/// Run Algorithm 1 for one module (serial over the `N_w` branches; the
+/// coordinator's parallel variant fans `search_nw` across a pool).
+pub fn search(p: &ModuleProblem<'_>, cfg: SearchConfig) -> SearchResult {
+    let patches = prepare_patches(p.module, p.x_int);
+    let mut best: Option<SearchResult> = None;
+    let mut evaluated = 0usize;
+    for n_w in weight_candidates(p, cfg) {
+        let r = search_nw_prepared(p, &patches, cfg, n_w);
+        evaluated += r.evaluated;
+        if best.map(|b| r.error < b.error).unwrap_or(true) {
+            best = Some(r);
+        }
+    }
+    let mut r = best.expect("non-empty search space");
+    r.evaluated = evaluated;
+    r
+}
+
+/// ‖O − deq(requant(acc))‖₂ without materialising the dequantized
+/// tensor. Reference implementation — the hot path uses
+/// [`recon_errors_multi`]; a unit test pins the two together.
+#[cfg(test)]
+fn recon_error(
+    acc: &[i32],
+    out_shift: i32,
+    n_o: i32,
+    n_bits: u32,
+    relu: bool,
+    target: &[f32],
+) -> f64 {
+    debug_assert_eq!(acc.len(), target.len());
+    let (qmin, qmax) = scheme::qrange(n_bits, relu);
+    let scale = scheme::exp2i(-n_o);
+    let mut sum = 0.0f64;
+    for (&a, &t) in acc.iter().zip(target) {
+        let code = scheme::shift_round(a, out_shift).clamp(qmin, qmax);
+        let d = (code as f32 * scale - t) as f64;
+        sum += d * d;
+    }
+    sum.sqrt()
+}
+
+/// All `N_o` candidates scored in a single pass over the accumulator
+/// (identical numerics to calling [`recon_error`] per candidate; the
+/// error loop is memory-bound, so reading `acc`/`target` once for all
+/// candidates is ~`len(o_cands)`× cheaper).
+fn recon_errors_multi(
+    acc: &[i32],
+    o_cands: &[i32],
+    nx_plus_nw: i32,
+    n_bits: u32,
+    relu: bool,
+    target: &[f32],
+) -> Vec<f64> {
+    debug_assert_eq!(acc.len(), target.len());
+    let (qmin, qmax) = scheme::qrange(n_bits, relu);
+    let params: Vec<(i32, f32)> = o_cands
+        .iter()
+        .map(|&n_o| (nx_plus_nw - n_o, scheme::exp2i(-n_o)))
+        .collect();
+    let mut sums = vec![0.0f64; o_cands.len()];
+    for (&a, &t) in acc.iter().zip(target) {
+        for (k, &(out_shift, scale)) in params.iter().enumerate() {
+            let code = scheme::shift_round(a, out_shift).clamp(qmin, qmax);
+            let d = (code as f32 * scale - t) as f64;
+            sums[k] += d * d;
+        }
+    }
+    sums.into_iter().map(f64::sqrt).collect()
+}
+
+/// Pick the fractional bits for the *graph input* by pure quantization
+/// error (the input has no conv to absorb error into).
+pub fn search_input_frac(x: &Tensor, n_bits: u32, tau: i32) -> i32 {
+    let cands = frac_window(x.max_abs(), n_bits, tau);
+    let mut best = (f64::INFINITY, cands[0]);
+    for &n in &cands {
+        let mut err = 0.0f64;
+        for &v in &x.data {
+            let d = (scheme::q(v, n, n_bits, false) - v) as f64;
+            err += d * d;
+        }
+        if err < best.0 {
+            best = (err, n);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::UnifiedModule;
+
+    #[test]
+    fn window_matches_paper_lines_3_to_5() {
+        // max|W| = 0.9 -> mag = 2 -> N in [7-2 .. 7-2+4] = [5..9]
+        assert_eq!(frac_window(0.9, 8, 4), vec![5, 6, 7, 8, 9]);
+        // max|O| = 20 -> mag = ceil(log2 21)+1 = 6 -> N in [1..5]
+        assert_eq!(frac_window(20.0, 8, 4), vec![1, 2, 3, 4, 5]);
+    }
+
+    fn conv_module(relu: bool, res: bool) -> UnifiedModule {
+        UnifiedModule {
+            name: "c".into(),
+            kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 3, stride: 1 },
+            src: "input".into(),
+            res: if res { Some("r".into()) } else { None },
+            relu,
+        }
+    }
+
+    /// Build a random problem whose FP target comes from the real float
+    /// conv, so the search has a meaningful optimum.
+    fn random_problem(
+        rng: &mut crate::util::rng::Pcg,
+        relu: bool,
+    ) -> (UnifiedModule, Tensor, TensorI32, Tensor, Vec<f32>, Tensor) {
+        let m = conv_module(relu, false);
+        let x = Tensor::from_vec(&[1, 6, 6, 2], (0..72).map(|_| rng.normal()).collect());
+        let n_x = 5;
+        let x_int = scheme::quantize_tensor(&x, n_x, 8, false);
+        let w = Tensor::from_vec(&[3, 3, 2, 3], (0..54).map(|_| rng.normal_ms(0.0, 0.4)).collect());
+        let b: Vec<f32> = (0..3).map(|_| rng.normal_ms(0.0, 0.2)).collect();
+        // FP target from the dequantized input (matching what the joint
+        // calibrator feeds) — keeps the testable error floor tiny
+        let xq = scheme::dequantize_tensor(&x_int, n_x);
+        let mut t = crate::tensor::ops::conv2d(&xq, &w, &b, 1, Padding::Same);
+        if relu {
+            crate::tensor::ops::relu_inplace(&mut t);
+        }
+        (m, x, x_int, w, b, t)
+    }
+
+    #[test]
+    fn search_finds_low_error_solution() {
+        let mut rng = crate::util::rng::Pcg::new(21);
+        for relu in [false, true] {
+            let (m, _x, x_int, w, b, target) = random_problem(&mut rng, relu);
+            let p = ModuleProblem {
+                module: &m,
+                x_int: &x_int,
+                n_x: 5,
+                w: &w,
+                b: &b,
+                res: None,
+                target: &target,
+            };
+            let r = search(&p, SearchConfig::default());
+            assert_eq!(r.evaluated, 125); // (τ+1)^3
+            // relative error under 5%
+            let tnorm = target.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(r.error < 0.05 * tnorm.max(1e-9), "err {} vs {}", r.error, tnorm);
+        }
+    }
+
+    #[test]
+    fn search_beats_window_edges() {
+        // the winning candidate must be at least as good as both window
+        // extremes evaluated directly
+        let mut rng = crate::util::rng::Pcg::new(22);
+        let (m, _x, x_int, w, b, target) = random_problem(&mut rng, false);
+        let p = ModuleProblem {
+            module: &m,
+            x_int: &x_int,
+            n_x: 5,
+            w: &w,
+            b: &b,
+            res: None,
+            target: &target,
+        };
+        let full = search(&p, SearchConfig::default());
+        let narrow = search(&p, SearchConfig { n_bits: 8, tau: 0 });
+        assert!(full.error <= narrow.error + 1e-9);
+    }
+
+    #[test]
+    fn input_frac_prefers_high_precision_for_small_values() {
+        // irrational-step values in [-0.5, 0.5): not exactly representable
+        // at any candidate N, so finer scales strictly reduce error until
+        // clipping kicks in at N = 9 (0.5 * 512 > 127).
+        let x = Tensor::from_vec(
+            &[64],
+            (0..64)
+                .map(|i| ((i as f32 * 0.7548776) % 1.0) - 0.5)
+                .collect(),
+        );
+        let n = search_input_frac(&x, 8, 4);
+        assert_eq!(n, 8, "n = {n}");
+    }
+
+    #[test]
+    fn residual_problem_accounts_for_shortcut() {
+        let mut rng = crate::util::rng::Pcg::new(23);
+        let m = conv_module(true, true);
+        let x = Tensor::from_vec(&[1, 4, 4, 2], (0..32).map(|_| rng.normal()).collect());
+        let x_int = scheme::quantize_tensor(&x, 5, 8, false);
+        let w = Tensor::from_vec(&[3, 3, 2, 3], (0..54).map(|_| rng.normal_ms(0.0, 0.3)).collect());
+        let b = vec![0.0f32; 3];
+        let res_f = Tensor::from_vec(&[1, 4, 4, 3], (0..48).map(|_| rng.uniform(0.0, 2.0)).collect());
+        let res_int = scheme::quantize_tensor(&res_f, 6, 8, true);
+        let xq = scheme::dequantize_tensor(&x_int, 5);
+        let rq = scheme::dequantize_tensor(&res_int, 6);
+        let conv = crate::tensor::ops::conv2d(&xq, &w, &b, 1, Padding::Same);
+        let mut t = crate::tensor::ops::add(&conv, &rq);
+        crate::tensor::ops::relu_inplace(&mut t);
+        let p = ModuleProblem {
+            module: &m,
+            x_int: &x_int,
+            n_x: 5,
+            w: &w,
+            b: &b,
+            res: Some((&res_int, 6)),
+            target: &t,
+        };
+        let r = search(&p, SearchConfig::default());
+        let tnorm = t.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(r.error < 0.08 * tnorm.max(1e-9), "err {} / {}", r.error, tnorm);
+    }
+}
+
+#[cfg(test)]
+mod perf_equivalence_tests {
+    use super::*;
+
+    #[test]
+    fn multi_candidate_scoring_matches_reference() {
+        let mut rng = crate::util::rng::Pcg::new(55);
+        let acc: Vec<i32> = (0..512)
+            .map(|_| rng.int_range(-(1 << 22), 1 << 22) as i32)
+            .collect();
+        let target: Vec<f32> = (0..512).map(|_| rng.normal_ms(0.0, 4.0)).collect();
+        let o_cands = vec![2, 3, 4, 5, 6];
+        let nx_nw = 12;
+        for relu in [false, true] {
+            let multi = recon_errors_multi(&acc, &o_cands, nx_nw, 8, relu, &target);
+            for (k, &n_o) in o_cands.iter().enumerate() {
+                let single = recon_error(&acc, nx_nw - n_o, n_o, 8, relu, &target);
+                assert!(
+                    (multi[k] - single).abs() < 1e-9 * (1.0 + single),
+                    "n_o={n_o}: {} vs {}",
+                    multi[k],
+                    single
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! k-means codebook weight quantization (Deep Compression [6], the
+//! weight-sharing half of CLIP-Q [16]; Table 3's 4-bit row and Table 5's
+//! "codebook" hardware column). Each weight tensor is clustered into
+//! `2^bits` centroids (1-D k-means with k-means++-style spread init);
+//! weights are replaced by their centroid. Activations stay FP32 (as in
+//! CLIP-Q).
+
+use std::collections::HashMap;
+
+use super::FakeQuant;
+use crate::graph::bn_fold::FoldedParams;
+use crate::util::rng::Pcg;
+
+/// k-means codebook fake-quantizer.
+pub struct CodebookQuant {
+    /// weight bits (codebook size = 2^bits)
+    pub w_bits: u32,
+    /// k-means iterations
+    pub iters: usize,
+}
+
+impl CodebookQuant {
+    /// New with defaults matching Deep Compression (typically converges
+    /// in well under 25 iterations for 1-D data).
+    pub fn new(w_bits: u32) -> Self {
+        CodebookQuant { w_bits, iters: 25 }
+    }
+}
+
+/// 1-D k-means. Returns the centroids.
+pub fn kmeans_1d(data: &[f32], k: usize, iters: usize, seed: u64) -> Vec<f32> {
+    assert!(k >= 1);
+    let mut rng = Pcg::new(seed);
+    let lo = data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    // linear-spread init (Deep Compression found linear init best)
+    let mut centroids: Vec<f32> = (0..k)
+        .map(|i| lo + (hi - lo) * (i as f32 + 0.5) / k as f32)
+        .collect();
+    let mut assign = vec![0usize; data.len()];
+    for _ in 0..iters {
+        // assignment (centroids are sorted: binary search the midpoints)
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, &v) in data.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bd = f32::INFINITY;
+            for (j, &c) in centroids.iter().enumerate() {
+                let d = (v - c).abs();
+                if d < bd {
+                    bd = d;
+                    best = j;
+                }
+            }
+            assign[i] = best;
+        }
+        // update
+        let mut sums = vec![0f64; k];
+        let mut counts = vec![0usize; k];
+        for (i, &v) in data.iter().enumerate() {
+            sums[assign[i]] += v as f64;
+            counts[assign[i]] += 1;
+        }
+        for j in 0..k {
+            if counts[j] > 0 {
+                centroids[j] = (sums[j] / counts[j] as f64) as f32;
+            } else {
+                // re-seed empty clusters randomly within the range
+                centroids[j] = rng.uniform(lo, hi);
+            }
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centroids
+}
+
+/// Map each value to its nearest centroid.
+pub fn assign_nearest(data: &mut [f32], centroids: &[f32]) {
+    for v in data.iter_mut() {
+        let mut best = centroids[0];
+        let mut bd = (*v - best).abs();
+        for &c in &centroids[1..] {
+            let d = (*v - c).abs();
+            if d < bd {
+                bd = d;
+                best = c;
+            }
+        }
+        *v = best;
+    }
+}
+
+impl FakeQuant for CodebookQuant {
+    fn name(&self) -> String {
+        format!("codebook w{}a32", self.w_bits)
+    }
+
+    fn quantize_weights(
+        &self,
+        folded: &HashMap<String, FoldedParams>,
+    ) -> HashMap<String, FoldedParams> {
+        let k = 1usize << self.w_bits;
+        folded
+            .iter()
+            .map(|(name, p)| {
+                let mut w = p.w.clone();
+                let centroids = kmeans_1d(&w.data, k.min(w.data.len()), self.iters, 17);
+                assign_nearest(&mut w.data, &centroids);
+                (name.clone(), FoldedParams { w, b: p.b.clone() })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_recovers_separated_clusters() {
+        let mut data = Vec::new();
+        for _ in 0..100 {
+            data.push(-1.0);
+            data.push(1.0);
+        }
+        let c = kmeans_1d(&data, 2, 10, 1);
+        assert!((c[0] + 1.0).abs() < 1e-3);
+        assert!((c[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn assignment_snaps_to_nearest() {
+        let mut d = vec![0.1f32, 0.9, -0.8];
+        assign_nearest(&mut d, &[-1.0, 0.0, 1.0]);
+        assert_eq!(d, vec![0.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn codebook_reduces_unique_values() {
+        let mut rng = Pcg::new(3);
+        let w = crate::tensor::Tensor::from_vec(
+            &[256],
+            (0..256).map(|_| rng.normal()).collect(),
+        );
+        let mut folded = HashMap::new();
+        folded.insert("m".to_string(), FoldedParams { w, b: vec![] });
+        let q = CodebookQuant::new(4);
+        let out = q.quantize_weights(&folded);
+        let mut uniq: Vec<f32> = out["m"].w.data.clone();
+        uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        uniq.dedup();
+        assert!(uniq.len() <= 16, "{} unique values", uniq.len());
+    }
+}

@@ -1,0 +1,110 @@
+//! INQ-style power-of-two weight quantization [17] (Table 3's 5-bit
+//! weights / FP activations row): every weight becomes `±2^p` (or 0),
+//! with the exponent range sized by the bit budget. We implement the
+//! *quantization scheme* (the incremental-retraining part of INQ needs
+//! fine-tuning, which the paper's comparison also omits — it reports
+//! INQ's published accuracy).
+
+use std::collections::HashMap;
+
+use super::FakeQuant;
+use crate::graph::bn_fold::FoldedParams;
+
+/// Power-of-two weight quantizer.
+pub struct InqQuant {
+    /// weight bits: 1 sign bit + (bits-1) exponent codes (one reserved
+    /// for zero), matching INQ's formulation
+    pub w_bits: u32,
+}
+
+impl InqQuant {
+    /// New with a bit budget.
+    pub fn new(w_bits: u32) -> Self {
+        InqQuant { w_bits }
+    }
+}
+
+/// Quantize one value to ±2^p or 0 given the exponent window
+/// `[p_min, p_max]`.
+pub fn pow2_quant(v: f32, p_min: i32, p_max: i32) -> f32 {
+    if v == 0.0 {
+        return 0.0;
+    }
+    let sign = v.signum();
+    let a = v.abs();
+    // INQ rounds in the log domain with a 1.5x threshold between levels
+    let mut best = 0.0f32;
+    let mut bd = a; // distance to zero
+    let mut p = p_min;
+    while p <= p_max {
+        let c = (2.0f32).powi(p);
+        let d = (a - c).abs();
+        if d < bd {
+            bd = d;
+            best = c;
+        }
+        p += 1;
+    }
+    sign * best
+}
+
+impl FakeQuant for InqQuant {
+    fn name(&self) -> String {
+        format!("inq-pow2 w{}a32", self.w_bits)
+    }
+
+    fn quantize_weights(
+        &self,
+        folded: &HashMap<String, FoldedParams>,
+    ) -> HashMap<String, FoldedParams> {
+        folded
+            .iter()
+            .map(|(name, p)| {
+                let mut w = p.w.clone();
+                let max = w.max_abs().max(1e-12);
+                // n1 = floor(log2(4*max/3)) — INQ's top exponent
+                let p_max = (4.0 * max / 3.0).log2().floor() as i32;
+                // 2^(bits-1) - 1 exponent codes below the top (1 code = 0)
+                let span = (1i32 << (self.w_bits - 1)) - 2;
+                let p_min = p_max - span.max(0);
+                for v in &mut w.data {
+                    *v = pow2_quant(*v, p_min, p_max);
+                }
+                (name.clone(), FoldedParams { w, b: p.b.clone() })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_snaps_to_powers() {
+        assert_eq!(pow2_quant(0.9, -4, 0), 1.0);
+        assert_eq!(pow2_quant(0.3, -4, 0), 0.25);
+        assert_eq!(pow2_quant(-0.6, -4, 0), -0.5);
+        assert_eq!(pow2_quant(0.0, -4, 0), 0.0);
+        // far below the window -> snaps to zero
+        assert_eq!(pow2_quant(0.01, -4, 0), 0.0);
+    }
+
+    #[test]
+    fn all_outputs_are_pow2_or_zero() {
+        let mut rng = crate::util::rng::Pcg::new(5);
+        let w = crate::tensor::Tensor::from_vec(
+            &[128],
+            (0..128).map(|_| rng.normal_ms(0.0, 0.3)).collect(),
+        );
+        let mut folded = HashMap::new();
+        folded.insert("m".to_string(), FoldedParams { w, b: vec![] });
+        let out = InqQuant::new(5).quantize_weights(&folded);
+        for &v in &out["m"].w.data {
+            if v != 0.0 {
+                let l = v.abs().log2();
+                assert!((l - l.round()).abs() < 1e-6, "{v} not a power of two");
+            }
+        }
+    }
+}

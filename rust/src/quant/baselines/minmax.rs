@@ -1,0 +1,108 @@
+//! Affine min-max ("scaling factor") quantization — the IOA [7] /
+//! TensorRT-default baseline of Table 1. Weights: per-tensor symmetric;
+//! activations: asymmetric with a zero point, ranges from a calibration
+//! batch. The zero point is what costs IOA its extra adders in Table 5's
+//! cost comparison; accuracy-wise it is a strong baseline.
+
+use std::collections::HashMap;
+
+use super::{affine_fake, symmetric_fake, FakeQuant};
+use crate::graph::bn_fold::FoldedParams;
+use crate::tensor::Tensor;
+
+/// Min-max affine fake-quantizer.
+pub struct MinMaxQuant {
+    /// weight bits
+    pub w_bits: u32,
+    /// activation bits (0 = leave activations FP)
+    pub a_bits: u32,
+    ranges: HashMap<String, (f32, f32)>,
+}
+
+impl MinMaxQuant {
+    /// New with the given bit-widths.
+    pub fn new(w_bits: u32, a_bits: u32) -> Self {
+        MinMaxQuant { w_bits, a_bits, ranges: HashMap::new() }
+    }
+}
+
+impl FakeQuant for MinMaxQuant {
+    fn name(&self) -> String {
+        format!("minmax-affine w{}a{}", self.w_bits, self.a_bits)
+    }
+
+    fn quantize_weights(
+        &self,
+        folded: &HashMap<String, FoldedParams>,
+    ) -> HashMap<String, FoldedParams> {
+        folded
+            .iter()
+            .map(|(k, p)| {
+                let mut w = p.w.clone();
+                let max = w.max_abs();
+                symmetric_fake(&mut w.data, max, self.w_bits);
+                // biases kept at 32-bit in IOA (one of the costs the
+                // paper's 8-bit-bias scheme avoids) — leave FP here.
+                (k.clone(), FoldedParams { w, b: p.b.clone() })
+            })
+            .collect()
+    }
+
+    fn calibrate_acts(&mut self, acts: &HashMap<String, Tensor>) {
+        if self.a_bits == 0 {
+            return;
+        }
+        for (name, t) in acts {
+            let lo = t.data.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = t.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            self.ranges.insert(name.clone(), (lo.min(0.0), hi.max(0.0)));
+        }
+    }
+
+    fn quantize_act(&self, module: &str, mut act: Tensor) -> Tensor {
+        if self.a_bits == 0 {
+            return act;
+        }
+        if let Some(&(lo, hi)) = self.ranges.get(module) {
+            affine_fake(&mut act.data, lo, hi, self.a_bits);
+        }
+        act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_error_below_half_step() {
+        let mut folded = HashMap::new();
+        let w = Tensor::from_vec(&[2, 2], vec![0.9, -0.5, 0.1, -0.88]);
+        folded.insert("m".to_string(), FoldedParams { w: w.clone(), b: vec![0.0, 0.0] });
+        let q = MinMaxQuant::new(8, 8);
+        let qw = q.quantize_weights(&folded);
+        let step = 0.9 / 127.0;
+        for (a, b) in qw["m"].w.data.iter().zip(&w.data) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn act_range_includes_zero() {
+        let mut q = MinMaxQuant::new(8, 8);
+        let mut acts = HashMap::new();
+        acts.insert("m".to_string(), Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]));
+        q.calibrate_acts(&acts);
+        assert_eq!(q.ranges["m"].0, 0.0); // lo clamped to include 0
+        let out = q.quantize_act("m", Tensor::from_vec(&[1], vec![0.0]));
+        assert_eq!(out.data[0], 0.0); // zero stays representable
+    }
+
+    #[test]
+    fn a_bits_zero_leaves_acts_alone() {
+        let q = MinMaxQuant::new(4, 0);
+        let t = Tensor::from_vec(&[2], vec![0.1234, -9.9]);
+        let out = q.quantize_act("m", t.clone());
+        assert_eq!(out.data, t.data);
+    }
+}

@@ -1,0 +1,121 @@
+//! Comparison baselines for Tables 1 and 3, implemented as
+//! fake-quantizers over the FP engine (the standard way to measure a
+//! scheme's *accuracy* impact; their *hardware* cost is measured
+//! separately by [`crate::hw`]):
+//!
+//! * [`minmax`] — affine min-max scaling-factor quantization with a
+//!   zero point (the IOA [7] / TensorRT-default style; Table 1's
+//!   "scaling factor" rows);
+//! * [`kl`] — KL-divergence-calibrated activation ranges
+//!   (TensorRT [15]);
+//! * [`codebook`] — k-means weight codebooks (Deep Compression [6] /
+//!   CLIP-Q [16]; Table 3, 4-bit weights, FP activations);
+//! * [`inq`] — power-of-two (shift-only) weight quantization, FP
+//!   activations (INQ [17]; Table 3, 5-bit);
+//! * [`ternary`] — block-wise ternary weights with 8-bit activations
+//!   (FGQ [19]; Table 3, 2-bit).
+//!
+//! All share the [`FakeQuant`] interface: transform folded weights once,
+//! then transform each module's activation during the forward pass.
+
+pub mod codebook;
+pub mod inq;
+pub mod kl;
+pub mod minmax;
+pub mod ternary;
+
+use std::collections::HashMap;
+
+use crate::graph::bn_fold::FoldedParams;
+use crate::graph::Graph;
+use crate::engine::fp::FpEngine;
+use crate::tensor::Tensor;
+
+/// A weight + activation fake-quantization scheme.
+pub trait FakeQuant {
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// Quantize-dequantize all weights (folded form, once).
+    fn quantize_weights(
+        &self,
+        folded: &HashMap<String, FoldedParams>,
+    ) -> HashMap<String, FoldedParams>;
+
+    /// Calibrate activation quantizers from FP activations on a
+    /// calibration batch. Default: no activation quantization.
+    fn calibrate_acts(&mut self, _acts: &HashMap<String, Tensor>) {}
+
+    /// Quantize-dequantize one module's activation at inference.
+    /// Default: identity (weight-only schemes).
+    fn quantize_act(&self, _module: &str, act: Tensor) -> Tensor {
+        act
+    }
+}
+
+/// Evaluate a baseline end-to-end: calibrate on `calib`, then run
+/// `batch` through the fake-quantized network and return the final
+/// outputs.
+pub fn run_fake_quant(
+    graph: &Graph,
+    folded: &HashMap<String, FoldedParams>,
+    q: &mut dyn FakeQuant,
+    calib: &Tensor,
+    batch: &Tensor,
+) -> Tensor {
+    let fp = FpEngine::new(graph, folded);
+    let calib_acts = fp.run_acts(calib);
+    q.calibrate_acts(&calib_acts);
+    let qw = q.quantize_weights(folded);
+    let engine = FpEngine::new(graph, &qw);
+    let mut acts = engine.run_acts_transformed(batch, |name, t| q.quantize_act(name, t));
+    acts.remove(&graph.modules.last().unwrap().name).unwrap()
+}
+
+/// Affine quantize-dequantize of a slice given (min, max) range.
+pub(crate) fn affine_fake(data: &mut [f32], lo: f32, hi: f32, bits: u32) {
+    let levels = ((1u64 << bits) - 1) as f32;
+    let (lo, hi) = if hi > lo { (lo, hi) } else { (lo, lo + 1e-6) };
+    let scale = (hi - lo) / levels;
+    for v in data.iter_mut() {
+        let q = ((*v - lo) / scale).round().clamp(0.0, levels);
+        *v = lo + q * scale;
+    }
+}
+
+/// Symmetric affine quantize-dequantize (zero-point = 0).
+pub(crate) fn symmetric_fake(data: &mut [f32], max_abs: f32, bits: u32) {
+    let qmax = ((1u64 << (bits - 1)) - 1) as f32;
+    let scale = if max_abs > 0.0 { max_abs / qmax } else { 1.0 };
+    for v in data.iter_mut() {
+        *v = (*v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affine_fake_is_idempotent_and_bounded() {
+        let mut a = vec![-1.0f32, -0.3, 0.0, 0.7, 2.0];
+        affine_fake(&mut a, -1.0, 2.0, 8);
+        let b = a.clone();
+        let mut c = a.clone();
+        affine_fake(&mut c, -1.0, 2.0, 8);
+        assert_eq!(b, c);
+        for v in &a {
+            assert!(*v >= -1.0 - 1e-6 && *v <= 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn symmetric_fake_keeps_zero_exact() {
+        let mut a = vec![0.0f32, 0.5, -0.5, 0.123];
+        symmetric_fake(&mut a, 0.5, 8);
+        assert_eq!(a[0], 0.0);
+        assert!((a[1] - 0.5).abs() < 1e-6);
+        // error bounded by half a step
+        assert!((a[3] - 0.123).abs() <= 0.5 * 0.5 / 127.0 + 1e-6);
+    }
+}

@@ -1,0 +1,108 @@
+//! FGQ-style fine-grained ternary weight quantization [19] (Table 3's
+//! 2-bit weights / 8-bit activations row): weights are split into small
+//! blocks, each block quantized to `{-t, 0, +t}` with a per-block
+//! threshold/magnitude chosen à la TWN (t = mean of |w| above 0.7·mean).
+//! Activations are 8-bit affine min-max.
+
+use std::collections::HashMap;
+
+use super::{affine_fake, FakeQuant};
+use crate::graph::bn_fold::FoldedParams;
+use crate::tensor::Tensor;
+
+/// Block-ternary fake-quantizer.
+pub struct TernaryQuant {
+    /// block size (FGQ uses fine-grained blocks; 64 is typical)
+    pub block: usize,
+    /// activation bits
+    pub a_bits: u32,
+    ranges: HashMap<String, (f32, f32)>,
+}
+
+impl TernaryQuant {
+    /// New with a block size and activation bits.
+    pub fn new(block: usize, a_bits: u32) -> Self {
+        TernaryQuant { block, a_bits, ranges: HashMap::new() }
+    }
+}
+
+/// Ternarize one block in place (TWN threshold rule).
+pub fn ternarize_block(block: &mut [f32]) {
+    let mean_abs: f32 =
+        block.iter().map(|v| v.abs()).sum::<f32>() / block.len().max(1) as f32;
+    let thr = 0.7 * mean_abs;
+    let kept: Vec<f32> = block.iter().map(|v| v.abs()).filter(|a| *a > thr).collect();
+    let t = if kept.is_empty() {
+        0.0
+    } else {
+        kept.iter().sum::<f32>() / kept.len() as f32
+    };
+    for v in block.iter_mut() {
+        *v = if v.abs() > thr { v.signum() * t } else { 0.0 };
+    }
+}
+
+impl FakeQuant for TernaryQuant {
+    fn name(&self) -> String {
+        format!("ternary-block{} w2a{}", self.block, self.a_bits)
+    }
+
+    fn quantize_weights(
+        &self,
+        folded: &HashMap<String, FoldedParams>,
+    ) -> HashMap<String, FoldedParams> {
+        folded
+            .iter()
+            .map(|(name, p)| {
+                let mut w = p.w.clone();
+                for chunk in w.data.chunks_mut(self.block) {
+                    ternarize_block(chunk);
+                }
+                (name.clone(), FoldedParams { w, b: p.b.clone() })
+            })
+            .collect()
+    }
+
+    fn calibrate_acts(&mut self, acts: &HashMap<String, Tensor>) {
+        for (name, t) in acts {
+            let lo = t.data.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = t.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            self.ranges.insert(name.clone(), (lo.min(0.0), hi.max(0.0)));
+        }
+    }
+
+    fn quantize_act(&self, module: &str, mut act: Tensor) -> Tensor {
+        if let Some(&(lo, hi)) = self.ranges.get(module) {
+            affine_fake(&mut act.data, lo, hi, self.a_bits);
+        }
+        act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ternarize_produces_three_levels() {
+        let mut b = vec![0.9f32, -0.85, 0.05, -0.1, 0.8, 0.02, -0.9, 0.87];
+        ternarize_block(&mut b);
+        let mut uniq: Vec<f32> = b.clone();
+        uniq.sort_by(|a, c| a.partial_cmp(c).unwrap());
+        uniq.dedup();
+        assert!(uniq.len() <= 3, "{uniq:?}");
+        // magnitudes symmetric
+        let pos = uniq.iter().cloned().fold(0.0f32, f32::max);
+        let neg = uniq.iter().cloned().fold(0.0f32, f32::min);
+        assert!((pos + neg).abs() < 1e-6);
+    }
+
+    #[test]
+    fn small_values_zeroed() {
+        let mut b = vec![0.01f32, -0.02, 1.0, 0.015];
+        ternarize_block(&mut b);
+        assert_eq!(b[0], 0.0);
+        assert_eq!(b[1], 0.0);
+        assert!(b[2] > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's quantization system: the power-of-two scheme ([`scheme`]),
+//! per-module shift parameters ([`params`]), Algorithm 1 ([`algo1`]), the
+//! dataflow-aware joint calibrator ([`joint`]), per-layer statistics for
+//! Fig. 2 ([`stats`]), and the comparison baselines ([`baselines`]).
+
+pub mod algo1;
+pub mod baselines;
+pub mod joint;
+pub mod params;
+pub mod scheme;
+pub mod stats;

@@ -1,0 +1,234 @@
+//! Calibrated quantization parameters (the output of Algorithm 1).
+//!
+//! Per unified module the paper stores fractional bits `N_w`, `N_b`,
+//! `N_o`; `N_x` is *derived* — it is the `N_o` of the producing module
+//! (the dataflow defines it, §1.1). In the deployed integer graph only
+//! the shift amounts are kept ("the bit-shifting values for data
+//! alignment ... but not the fractional bits", §1.2) — [`ModuleShifts`]
+//! carries the fractional bits and derives the shifts.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, ModuleKind};
+use crate::util::json::{self, Json};
+
+/// Fractional bits chosen for one weighted module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModuleShifts {
+    /// fractional bits of the weights
+    pub n_w: i32,
+    /// fractional bits of the bias
+    pub n_b: i32,
+    /// fractional bits of the output activation
+    pub n_o: i32,
+}
+
+impl ModuleShifts {
+    /// Bias alignment shift `(N_x + N_w) − N_b` (left shift when ≥ 0).
+    pub fn bias_shift(&self, n_x: i32) -> i32 {
+        n_x + self.n_w - self.n_b
+    }
+
+    /// Output requantization shift `(N_x + N_w) − N_o`.
+    pub fn out_shift(&self, n_x: i32) -> i32 {
+        n_x + self.n_w - self.n_o
+    }
+
+    /// Residual alignment shift `(N_x + N_w) − N_r`.
+    pub fn res_shift(&self, n_x: i32, n_r: i32) -> i32 {
+        n_x + self.n_w - n_r
+    }
+}
+
+/// Full calibrated state for a model.
+#[derive(Clone, Debug)]
+pub struct QuantSpec {
+    /// bit-width (paper uses 8; Tables 4 sweeps 6–8)
+    pub n_bits: u32,
+    /// fractional bits of the graph input
+    pub input_frac: i32,
+    /// per-module fractional bits
+    pub modules: HashMap<String, ModuleShifts>,
+}
+
+impl QuantSpec {
+    /// Empty spec with a given bit-width.
+    pub fn new(n_bits: u32) -> Self {
+        QuantSpec { n_bits, input_frac: 0, modules: HashMap::new() }
+    }
+
+    /// Fractional bits of the value produced under `name` (`"input"` or a
+    /// module name). Gap preserves its input's scale (the mean is an
+    /// exact shift).
+    pub fn value_frac(&self, graph: &Graph, name: &str) -> i32 {
+        if name == "input" {
+            return self.input_frac;
+        }
+        let m = graph
+            .module(name)
+            .unwrap_or_else(|| panic!("unknown value '{name}'"));
+        match m.kind {
+            ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => {
+                self.modules
+                    .get(name)
+                    .unwrap_or_else(|| panic!("module '{name}' not calibrated"))
+                    .n_o
+            }
+            ModuleKind::Gap => self.value_frac(graph, &m.src),
+        }
+    }
+
+    /// Whether the value under `name` is in the unsigned post-ReLU range.
+    pub fn value_unsigned(&self, graph: &Graph, name: &str) -> bool {
+        if name == "input" {
+            return false;
+        }
+        let m = graph.module(name).expect("unknown value");
+        match m.kind {
+            ModuleKind::Gap => self.value_unsigned(graph, &m.src),
+            _ => m.relu,
+        }
+    }
+
+    /// Serialize (for `dfq calibrate --save`).
+    pub fn to_json(&self) -> Json {
+        let mods: Vec<Json> = {
+            let mut names: Vec<&String> = self.modules.keys().collect();
+            names.sort();
+            names
+                .into_iter()
+                .map(|name| {
+                    let s = &self.modules[name];
+                    json::obj(vec![
+                        ("name", json::s(name)),
+                        ("n_w", json::num(s.n_w as f64)),
+                        ("n_b", json::num(s.n_b as f64)),
+                        ("n_o", json::num(s.n_o as f64)),
+                    ])
+                })
+                .collect()
+        };
+        json::obj(vec![
+            ("n_bits", json::num(self.n_bits as f64)),
+            ("input_frac", json::num(self.input_frac as f64)),
+            ("modules", Json::Arr(mods)),
+        ])
+    }
+
+    /// Parse a serialized spec.
+    pub fn from_json(j: &Json) -> Result<QuantSpec, String> {
+        let mut spec = QuantSpec::new(j.req("n_bits")?.as_i64().ok_or("n_bits")? as u32);
+        spec.input_frac = j.req("input_frac")?.as_i64().ok_or("input_frac")? as i32;
+        for m in j.req("modules")?.as_arr().ok_or("modules")? {
+            spec.modules.insert(
+                m.req("name")?.as_str().ok_or("name")?.to_string(),
+                ModuleShifts {
+                    n_w: m.req("n_w")?.as_i64().ok_or("n_w")? as i32,
+                    n_b: m.req("n_b")?.as_i64().ok_or("n_b")? as i32,
+                    n_o: m.req("n_o")?.as_i64().ok_or("n_o")? as i32,
+                },
+            );
+        }
+        Ok(spec)
+    }
+
+    /// The (3,) shift vector fed to the AOT q_logits artifact for one
+    /// module: `[bias_shift, out_shift, res_shift]` (res 0 when unused).
+    pub fn shift_vector(&self, graph: &Graph, name: &str) -> [i32; 3] {
+        let m = graph.module(name).expect("module");
+        let s = self.modules[name];
+        let n_x = self.value_frac(graph, &m.src);
+        let res_shift = m
+            .res
+            .as_ref()
+            .map(|r| s.res_shift(n_x, self.value_frac(graph, r)))
+            .unwrap_or(0);
+        [s.bias_shift(n_x), s.out_shift(n_x), res_shift]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::UnifiedModule;
+
+    fn graph() -> Graph {
+        Graph {
+            name: "g".into(),
+            input_hwc: (8, 8, 3),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c0".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 4, cout: 10 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        }
+    }
+
+    fn spec() -> QuantSpec {
+        let mut s = QuantSpec::new(8);
+        s.input_frac = 5;
+        s.modules.insert("c0".into(), ModuleShifts { n_w: 7, n_b: 6, n_o: 4 });
+        s.modules.insert("fc".into(), ModuleShifts { n_w: 6, n_b: 5, n_o: 2 });
+        s
+    }
+
+    #[test]
+    fn shifts_match_eq3() {
+        let s = ModuleShifts { n_w: 7, n_b: 6, n_o: 4 };
+        // N_x = 5: bias shift = 5+7-6 = 6; out shift = 5+7-4 = 8
+        assert_eq!(s.bias_shift(5), 6);
+        assert_eq!(s.out_shift(5), 8);
+        assert_eq!(s.res_shift(5, 3), 9);
+    }
+
+    #[test]
+    fn value_frac_flows_through_gap() {
+        let g = graph();
+        let s = spec();
+        assert_eq!(s.value_frac(&g, "input"), 5);
+        assert_eq!(s.value_frac(&g, "c0"), 4);
+        assert_eq!(s.value_frac(&g, "gap"), 4); // gap preserves scale
+        assert_eq!(s.value_frac(&g, "fc"), 2);
+        assert!(s.value_unsigned(&g, "c0"));
+        assert!(s.value_unsigned(&g, "gap"));
+        assert!(!s.value_unsigned(&g, "fc"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = spec();
+        let j = s.to_json();
+        let s2 = QuantSpec::from_json(&j).unwrap();
+        assert_eq!(s2.n_bits, 8);
+        assert_eq!(s2.input_frac, 5);
+        assert_eq!(s2.modules["c0"], s.modules["c0"]);
+        assert_eq!(s2.modules["fc"], s.modules["fc"]);
+    }
+
+    #[test]
+    fn shift_vector_for_artifact() {
+        let g = graph();
+        let s = spec();
+        assert_eq!(s.shift_vector(&g, "c0"), [6, 8, 0]);
+        // fc: n_x = frac(gap) = 4 -> bias 4+6-5=5, out 4+6-2=8
+        assert_eq!(s.shift_vector(&g, "fc"), [5, 8, 0]);
+    }
+}

@@ -1,0 +1,233 @@
+//! The quantization scheme (paper Eq. 1) and its integer-shift algebra
+//! (Eq. 3–4) — bit-exact mirror of `python/compile/kernels/ref.py`.
+//!
+//! Conventions shared across the whole stack (python oracle, Pallas
+//! kernels, this engine, the PJRT artifacts):
+//!
+//! * **round-half-up**: `round(x) = floor(x + 0.5)`;
+//! * `quantize_int(r, N, bits) = clamp(round(r * 2^N), qmin, qmax)`;
+//! * integer requantization by shift `s` uses
+//!   `(v + (1 << (s-1))) >> s` (arithmetic shift ≡ floor division),
+//!   exactly `floor(v / 2^s + 0.5)`; negative `s` left-shifts;
+//! * ReLU modules clamp to the **unsigned** range `[0, 2^bits - 1]`
+//!   (the paper's "[0, 255] if the bit-width is 8-bit"), other modules
+//!   to the signed range.
+
+use crate::tensor::{Tensor, TensorI32};
+
+/// Quantized-range limits for a bit-width.
+#[inline]
+pub fn qrange(n_bits: u32, unsigned: bool) -> (i32, i32) {
+    if unsigned {
+        (0, (1i32 << n_bits) - 1)
+    } else {
+        (-(1i32 << (n_bits - 1)), (1i32 << (n_bits - 1)) - 1)
+    }
+}
+
+/// Round-half-up: `floor(x + 0.5)`.
+#[inline]
+pub fn round_half_up(x: f32) -> f32 {
+    (x + 0.5).floor()
+}
+
+/// Float → integer code (paper Eq. 1 numerator).
+#[inline]
+pub fn quantize_val(r: f32, n_frac: i32, n_bits: u32, unsigned: bool) -> i32 {
+    let (qmin, qmax) = qrange(n_bits, unsigned);
+    let scaled = round_half_up(r * exp2i(n_frac));
+    // clamp in f32 space first to avoid i32 overflow on huge inputs
+    scaled.clamp(qmin as f32, qmax as f32) as i32
+}
+
+/// Integer code → float (`r^q = r^I * 2^-N`).
+#[inline]
+pub fn dequantize_val(v: i32, n_frac: i32) -> f32 {
+    v as f32 * exp2i(-n_frac)
+}
+
+/// `2^n` as f32 for |n| ≤ 126.
+#[inline]
+pub fn exp2i(n: i32) -> f32 {
+    debug_assert!((-126..=126).contains(&n));
+    f32::from_bits((((127 + n) as u32) << 23) & 0x7f80_0000)
+}
+
+/// The paper's `Q(r; N, n_bits)`: quantize then dequantize.
+#[inline]
+pub fn q(r: f32, n_frac: i32, n_bits: u32, unsigned: bool) -> f32 {
+    dequantize_val(quantize_val(r, n_frac, n_bits, unsigned), n_frac)
+}
+
+/// Rounded arithmetic right shift for `s >= 0` (`floor(v/2^s + 0.5)`),
+/// left shift for `s < 0`. This is the paper's Table-5 bit-shifting
+/// operator.
+#[inline]
+pub fn shift_round(v: i32, s: i32) -> i32 {
+    if s > 0 {
+        let half = 1i32 << (s - 1);
+        (v.wrapping_add(half)) >> s
+    } else if s == 0 {
+        v
+    } else {
+        v.wrapping_shl((-s) as u32)
+    }
+}
+
+/// Alignment into the accumulator domain (bias / residual): left shift
+/// for `s >= 0` (the common case — Eq. 3's `2^{(N_x+N_w)-N_b}`), rounded
+/// right shift otherwise.
+#[inline]
+pub fn align(v: i32, s: i32) -> i32 {
+    shift_round(v, -s)
+}
+
+/// Requantize an accumulator value: rounded shift then clamp
+/// (unsigned range when the module ends in ReLU).
+#[inline]
+pub fn requantize_val(acc: i32, out_shift: i32, n_bits: u32, relu: bool) -> i32 {
+    let (qmin, qmax) = qrange(n_bits, relu);
+    shift_round(acc, out_shift).clamp(qmin, qmax)
+}
+
+// ---------------------------------------------------------------------
+// Tensor-level helpers
+// ---------------------------------------------------------------------
+
+/// Quantize a whole f32 tensor to integer codes.
+pub fn quantize_tensor(t: &Tensor, n_frac: i32, n_bits: u32, unsigned: bool) -> TensorI32 {
+    t.map_i32(|x| quantize_val(x, n_frac, n_bits, unsigned))
+}
+
+/// Dequantize codes back to f32.
+pub fn dequantize_tensor(t: &TensorI32, n_frac: i32) -> Tensor {
+    let scale = exp2i(-n_frac);
+    t.map_f32(|v| v as f32 * scale)
+}
+
+/// Requantize a whole accumulator tensor.
+pub fn requantize_tensor(acc: &TensorI32, out_shift: i32, n_bits: u32, relu: bool) -> TensorI32 {
+    let (qmin, qmax) = qrange(n_bits, relu);
+    if out_shift > 0 {
+        let half = 1i32 << (out_shift - 1);
+        acc.map_i32_ref(|v| ((v.wrapping_add(half)) >> out_shift).clamp(qmin, qmax))
+    } else if out_shift == 0 {
+        acc.map_i32_ref(|v| v.clamp(qmin, qmax))
+    } else {
+        let sh = (-out_shift) as u32;
+        acc.map_i32_ref(|v| v.wrapping_shl(sh).clamp(qmin, qmax))
+    }
+}
+
+impl TensorI32 {
+    /// Elementwise i32 → i32 map (kept here to keep tensor/ generic).
+    pub fn map_i32_ref<F: Fn(i32) -> i32>(&self, f: F) -> TensorI32 {
+        TensorI32 {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2i_exact() {
+        assert_eq!(exp2i(0), 1.0);
+        assert_eq!(exp2i(5), 32.0);
+        assert_eq!(exp2i(-3), 0.125);
+        assert_eq!(exp2i(-20), (0.5f32).powi(20));
+    }
+
+    #[test]
+    fn round_half_up_semantics() {
+        // mirrors python/tests/test_quant_kernels.py
+        let cases = [(-1.5, -1.0), (-0.5, 0.0), (0.49, 0.0), (0.5, 1.0), (2.5, 3.0)];
+        for (x, want) in cases {
+            assert_eq!(round_half_up(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_matches_eq1() {
+        // r = 0.3, N = 5: round(0.3 * 32) = round(9.6) = 10
+        assert_eq!(quantize_val(0.3, 5, 8, false), 10);
+        assert_eq!(dequantize_val(10, 5), 0.3125);
+        // saturation
+        assert_eq!(quantize_val(100.0, 5, 8, false), 127);
+        assert_eq!(quantize_val(-100.0, 5, 8, false), -128);
+        // unsigned (post-ReLU) range
+        assert_eq!(quantize_val(10.0, 5, 8, true), 255);
+        assert_eq!(quantize_val(-1.0, 5, 8, true), 0);
+    }
+
+    #[test]
+    fn negative_fractional_bits_select_upper_digits() {
+        // N = -3: steps of 8 (paper §1.1)
+        assert_eq!(q(12.0, -3, 8, false), 16.0);
+        assert_eq!(q(20.0, -3, 8, false), 24.0);
+        assert_eq!(q(100.0, -3, 8, false), 104.0);
+    }
+
+    #[test]
+    fn shift_round_is_floor_half_up() {
+        for v in [-1000i32, -17, -9, -8, -7, -1, 0, 1, 7, 8, 9, 1000] {
+            for s in 0..12 {
+                let want = ((v as f64) / f64::powi(2.0, s) + 0.5).floor() as i32;
+                assert_eq!(shift_round(v, s), want, "v={v} s={s}");
+            }
+        }
+        assert_eq!(shift_round(3, -2), 12); // left shift
+    }
+
+    #[test]
+    fn align_is_inverse_direction() {
+        assert_eq!(align(3, 2), 12);
+        assert_eq!(align(12, -2), 3);
+        assert_eq!(align(13, -2), 3); // 13/4 = 3.25 -> 3
+        assert_eq!(align(14, -2), 4); // 3.5 -> 4 (half up)
+    }
+
+    #[test]
+    fn requantize_ranges() {
+        assert_eq!(requantize_val(1 << 20, 10, 8, false), 127);
+        assert_eq!(requantize_val(-(1 << 20), 10, 8, false), -128);
+        assert_eq!(requantize_val(-(1 << 20), 10, 8, true), 0);
+        assert_eq!(requantize_val(130 << 4, 4, 8, true), 130);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_vec(&[4], vec![0.1, -0.7, 1.9, -3.2]);
+        let q8 = quantize_tensor(&t, 5, 8, false);
+        assert_eq!(q8.data, vec![3, -22, 61, -102]);
+        let back = dequantize_tensor(&q8, 5);
+        for (orig, rec) in t.data.iter().zip(&back.data) {
+            assert!((orig - rec).abs() <= 0.5 / 32.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn requantize_tensor_matches_scalar() {
+        let acc = TensorI32::from_vec(&[6], vec![-5000, -7, 0, 7, 5000, 123456]);
+        for s in [-2, 0, 3, 9] {
+            let t = requantize_tensor(&acc, s, 8, false);
+            for (i, &v) in acc.data.iter().enumerate() {
+                assert_eq!(t.data[i], requantize_val(v, s, 8, false));
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_step() {
+        // within the representable range, |r - Q(r)| <= 2^-N / 2
+        let mut rng = crate::util::rng::Pcg::new(9);
+        for _ in 0..1000 {
+            let r = rng.uniform(-3.9, 3.9);
+            let e = (r - q(r, 5, 8, false)).abs();
+            assert!(e <= 0.5 * exp2i(-5) + 1e-6, "r={r} e={e}");
+        }
+    }
+}

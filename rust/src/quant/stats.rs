@@ -1,0 +1,123 @@
+//! Per-module calibration statistics — the data behind the paper's
+//! Fig. 2 (MSE vs residual-block depth, shifting bits vs layer depth)
+//! and the `dfq inspect` output.
+
+/// One calibrated module's record.
+#[derive(Clone, Debug)]
+pub struct ModuleStat {
+    /// module name
+    pub name: String,
+    /// Fig.-1 case (a–d)
+    pub fig1_case: char,
+    /// MSE between dequantized and FP activations
+    pub mse: f64,
+    /// chosen fractional bits
+    pub n_w: i32,
+    /// chosen bias fractional bits
+    pub n_b: i32,
+    /// chosen output fractional bits
+    pub n_o: i32,
+    /// the deployed requantization shift (N_x + N_w − N_o)
+    pub out_shift: i32,
+    /// Algorithm-1 reconstruction error ‖O − O^q‖₂
+    pub error: f64,
+}
+
+/// Statistics for a whole calibration run.
+#[derive(Clone, Debug, Default)]
+pub struct CalibStats {
+    /// per-module records in execution order
+    pub modules: Vec<ModuleStat>,
+}
+
+impl CalibStats {
+    /// Append a record.
+    pub fn push(&mut self, s: ModuleStat) {
+        self.modules.push(s);
+    }
+
+    /// Fig. 2a series: for residual modules (case c/d), the MSE by block
+    /// index, alongside the two preceding convs of the same block.
+    /// Returns (block_index, conv1_mse, conv2_or_add_mse).
+    pub fn residual_mse_series(&self) -> Vec<(usize, f64, f64)> {
+        let mut out = Vec::new();
+        let mut block = 0usize;
+        let mut last_conv_mse = 0.0;
+        for m in &self.modules {
+            match m.fig1_case {
+                'b' => last_conv_mse = m.mse,
+                'c' | 'd' => {
+                    out.push((block, last_conv_mse, m.mse));
+                    block += 1;
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Fig. 2b series: deployed shift value per weighted layer, in depth
+    /// order.
+    pub fn shift_series(&self) -> Vec<(usize, i32)> {
+        self.modules
+            .iter()
+            .filter(|m| m.fig1_case != 'g' && !(m.n_w == 0 && m.n_b == 0))
+            .enumerate()
+            .map(|(i, m)| (i, m.out_shift))
+            .collect()
+    }
+
+    /// Distribution of deployed shifts (min, median, max).
+    pub fn shift_summary(&self) -> (i32, i32, i32) {
+        let mut shifts: Vec<i32> = self.shift_series().iter().map(|(_, s)| *s).collect();
+        if shifts.is_empty() {
+            return (0, 0, 0);
+        }
+        shifts.sort_unstable();
+        (shifts[0], shifts[shifts.len() / 2], shifts[shifts.len() - 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(name: &str, case: char, mse: f64, out_shift: i32) -> ModuleStat {
+        ModuleStat {
+            name: name.into(),
+            fig1_case: case,
+            mse,
+            n_w: 7,
+            n_b: 7,
+            n_o: 4,
+            out_shift,
+            error: 0.0,
+        }
+    }
+
+    #[test]
+    fn residual_series_pairs_convs_with_adds() {
+        let mut s = CalibStats::default();
+        s.push(stat("c1", 'b', 0.1, 8));
+        s.push(stat("c2", 'c', 0.3, 9));
+        s.push(stat("c3", 'b', 0.15, 7));
+        s.push(stat("c4", 'd', 0.4, 6));
+        let series = s.residual_mse_series();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0], (0, 0.1, 0.3));
+        assert_eq!(series[1], (1, 0.15, 0.4));
+        // the paper's Fig. 2a observation: addition MSE > conv MSE
+        assert!(series.iter().all(|(_, c, a)| a > c));
+    }
+
+    #[test]
+    fn shift_summary_ranges() {
+        let mut s = CalibStats::default();
+        for (i, sh) in [3, 8, 5, 9, 2].iter().enumerate() {
+            s.push(stat(&format!("m{i}"), 'b', 0.1, *sh));
+        }
+        let (lo, med, hi) = s.shift_summary();
+        assert_eq!((lo, hi), (2, 9));
+        assert_eq!(med, 5);
+    }
+}

@@ -1,0 +1,535 @@
+//! Experiment drivers — one function per paper table/figure, shared by
+//! `dfq tables` and the benches (see DESIGN.md §4 for the mapping).
+
+use crate::coordinator::pool::Pool;
+use crate::data::artifacts::{Artifacts, ModelBundle};
+use crate::data::dataset::{ClassificationSet, DetectionSet};
+use crate::engine::fp::FpEngine;
+use crate::engine::int::IntEngine;
+use crate::graph::Graph;
+use crate::hw;
+use crate::metrics::accuracy::{top1_f32, top1_i32};
+use crate::metrics::map::{per_class_ap, Detection};
+use crate::models::detector;
+use crate::quant::baselines::{
+    codebook::CodebookQuant, inq::InqQuant, kl::KlQuant, minmax::MinMaxQuant,
+    ternary::TernaryQuant, FakeQuant,
+};
+use crate::quant::joint::{CalibConfig, CalibOutcome, JointCalibrator};
+use crate::quant::scheme;
+use crate::report::figures::Series;
+use crate::report::table::{pct, Table};
+use crate::tensor::Tensor;
+
+/// Shared evaluation options.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOptions {
+    /// how many validation images to score (subset for wall-clock)
+    pub eval_n: usize,
+    /// evaluation batch size
+    pub batch: usize,
+    /// calibration images (paper: 1)
+    pub calib_n: usize,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { eval_n: 1000, batch: 50, calib_n: 1 }
+    }
+}
+
+// -----------------------------------------------------------------------
+// shared evaluation helpers
+// -----------------------------------------------------------------------
+
+/// FP top-1 over a subset of a classification set.
+pub fn eval_fp(bundle: &ModelBundle, ds: &ClassificationSet, opt: EvalOptions) -> f64 {
+    let engine = FpEngine::new(&bundle.graph, &bundle.folded);
+    let n = opt.eval_n.min(ds.len());
+    let mut correct = 0.0;
+    let mut seen = 0usize;
+    let mut start = 0;
+    while start < n {
+        let (x, labels) = ds.batch(start, opt.batch.min(n - start));
+        let logits = engine.run(&x);
+        correct += top1_f32(&logits, labels) * labels.len() as f64;
+        seen += labels.len();
+        start += labels.len();
+    }
+    correct / seen as f64
+}
+
+/// Integer-engine top-1 with a calibrated spec.
+pub fn eval_quantized(
+    bundle: &ModelBundle,
+    spec: &crate::quant::params::QuantSpec,
+    ds: &ClassificationSet,
+    opt: EvalOptions,
+) -> f64 {
+    let engine = IntEngine::new(&bundle.graph, &bundle.folded, spec);
+    let n = opt.eval_n.min(ds.len());
+    let mut correct = 0.0;
+    let mut seen = 0usize;
+    let mut start = 0;
+    while start < n {
+        let (x, labels) = ds.batch(start, opt.batch.min(n - start));
+        let logits = engine.run(&x);
+        correct += top1_i32(&logits, labels) * labels.len() as f64;
+        seen += labels.len();
+        start += labels.len();
+    }
+    correct / seen as f64
+}
+
+/// Fake-quant baseline top-1.
+pub fn eval_baseline(
+    bundle: &ModelBundle,
+    q: &mut dyn FakeQuant,
+    calib: &Tensor,
+    ds: &ClassificationSet,
+    opt: EvalOptions,
+) -> f64 {
+    // calibrate once
+    let fp = FpEngine::new(&bundle.graph, &bundle.folded);
+    let calib_acts = fp.run_acts(calib);
+    q.calibrate_acts(&calib_acts);
+    let qw = q.quantize_weights(&bundle.folded);
+    let engine = FpEngine::new(&bundle.graph, &qw);
+    let n = opt.eval_n.min(ds.len());
+    let last = bundle.graph.modules.last().unwrap().name.clone();
+    let mut correct = 0.0;
+    let mut seen = 0usize;
+    let mut start = 0;
+    while start < n {
+        let (x, labels) = ds.batch(start, opt.batch.min(n - start));
+        let mut acts = engine.run_acts_transformed(&x, |name, t| q.quantize_act(name, t));
+        let logits = acts.remove(&last).unwrap();
+        correct += top1_f32(&logits, labels) * labels.len() as f64;
+        seen += labels.len();
+        start += labels.len();
+    }
+    correct / seen as f64
+}
+
+/// Calibrate "ours" for a bundle at a bit-width.
+pub fn calibrate_ours(
+    bundle: &ModelBundle,
+    calib: &Tensor,
+    n_bits: u32,
+) -> CalibOutcome {
+    JointCalibrator::new(CalibConfig { n_bits, ..Default::default() })
+        .calibrate(&bundle.graph, &bundle.folded, calib)
+}
+
+// -----------------------------------------------------------------------
+// Table 1 — FP vs 8-bit methods across depths
+// -----------------------------------------------------------------------
+
+/// Table 1: ResNet-S/M/L top-1 — FP / TensorRT-like (KL) / IOA-like
+/// (min-max affine) / Ours (bit-shifting).
+pub fn table1(art: &Artifacts, pool: &Pool, opt: EvalOptions) -> Result<Table, String> {
+    let ds = art.classification_set("synthimagenet_val")?;
+    let calib = art.calibration_images(opt.calib_n)?;
+    let models = ["resnet_s", "resnet_m", "resnet_l"];
+    let mut table = Table::new(
+        "Table 1: ResNet on SynthImageNet — FP vs 8-bit quantized (top-1)",
+        &["Model", "FP", "TensorRT-like(KL)", "IOA-like(minmax)", "Ours(bit-shift)"],
+    );
+    let rows = pool.run(
+        models
+            .iter()
+            .map(|name| {
+                let art = &art;
+                let ds = &ds;
+                let calib = &calib;
+                move || -> Result<Vec<String>, String> {
+                    let bundle = art.load_model(name)?;
+                    let fp = eval_fp(&bundle, ds, opt);
+                    let mut kl = KlQuant::new(8, 8);
+                    let a_kl = eval_baseline(&bundle, &mut kl, calib, ds, opt);
+                    let mut mm = MinMaxQuant::new(8, 8);
+                    let a_mm = eval_baseline(&bundle, &mut mm, calib, ds, opt);
+                    let ours = calibrate_ours(&bundle, calib, 8);
+                    let a_ours = eval_quantized(&bundle, &ours.spec, ds, opt);
+                    Ok(vec![name.to_string(), pct(fp), pct(a_kl), pct(a_mm), pct(a_ours)])
+                }
+            })
+            .collect(),
+    );
+    for r in rows {
+        table.row(r?);
+    }
+    table.row(vec![
+        "Quantization type".into(),
+        "N/A".into(),
+        "scaling factor".into(),
+        "scaling factor".into(),
+        "bit-shifting".into(),
+    ]);
+    Ok(table)
+}
+
+// -----------------------------------------------------------------------
+// Table 2 — calibration wall-clock
+// -----------------------------------------------------------------------
+
+/// Table 2: joint-quantization (calibration) time per depth, plus the τ
+/// and calibration-set-size ablations from DESIGN.md §7.
+pub fn table2(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+    let calib = art.calibration_images(opt.calib_n)?;
+    let mut table = Table::new(
+        "Table 2: joint-quantization time (seconds; paper reports minutes on V100)",
+        &["Model", "calib time (s)", "modules", "grid evals"],
+    );
+    for name in ["resnet_s", "resnet_m", "resnet_l"] {
+        let bundle = art.load_model(name)?;
+        let out = calibrate_ours(&bundle, &calib, 8);
+        let evals: usize = 125 * bundle.graph.weight_layer_count();
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", out.seconds),
+            format!("{}", bundle.graph.modules.len()),
+            format!("{evals}"),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 2 ablation: τ and calibration-set size vs time and accuracy.
+pub fn table2_ablation(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+    let ds = art.classification_set("synthimagenet_val")?;
+    let bundle = art.load_model("resnet_s")?;
+    let mut table = Table::new(
+        "Table 2 ablation: window width τ and calibration set size (ResNet-S)",
+        &["tau", "calib imgs", "time (s)", "top-1"],
+    );
+    for (tau, imgs) in [(1i32, 1usize), (2, 1), (4, 1), (6, 1), (4, 8), (4, 32)] {
+        let calib = art.calibration_images(imgs)?;
+        let out = JointCalibrator::new(CalibConfig { tau, images: imgs, ..Default::default() })
+            .calibrate(&bundle.graph, &bundle.folded, &calib);
+        let acc = eval_quantized(&bundle, &out.spec, &ds, opt);
+        table.row(vec![
+            format!("{tau}"),
+            format!("{imgs}"),
+            format!("{:.2}", out.seconds),
+            pct(acc),
+        ]);
+    }
+    Ok(table)
+}
+
+// -----------------------------------------------------------------------
+// Table 3 — methods at various bit-widths (ResNet-S)
+// -----------------------------------------------------------------------
+
+/// Table 3: method comparison at different bit-widths on ResNet-S.
+pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+    let ds = art.classification_set("synthimagenet_val")?;
+    let calib = art.calibration_images(opt.calib_n)?;
+    let bundle = art.load_model("resnet_s")?;
+    let mut table = Table::new(
+        "Table 3: ResNet-S accuracy across methods/bit-widths",
+        &["Method", "W bits", "A bits", "Quant type", "Top-1"],
+    );
+    let fp = eval_fp(&bundle, &ds, opt);
+    table.row(vec!["FP32".into(), "32".into(), "32".into(), "N/A".into(), pct(fp)]);
+    {
+        let mut q = CodebookQuant::new(4);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        table.row(vec![
+            "CLIP-Q-like".into(),
+            "4".into(),
+            "32".into(),
+            "codebook".into(),
+            pct(a),
+        ]);
+    }
+    {
+        let mut q = InqQuant::new(5);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        table.row(vec![
+            "INQ-like".into(),
+            "5".into(),
+            "32".into(),
+            "pow2 weights".into(),
+            pct(a),
+        ]);
+    }
+    {
+        let mut q = MinMaxQuant::new(5, 5);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        table.row(vec![
+            "ABC-net-like".into(),
+            "5".into(),
+            "5".into(),
+            "scaling factor".into(),
+            pct(a),
+        ]);
+    }
+    {
+        let mut q = TernaryQuant::new(64, 8);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        table.row(vec![
+            "FGQ-like".into(),
+            "2".into(),
+            "8".into(),
+            "scaling factor".into(),
+            pct(a),
+        ]);
+    }
+    {
+        let ours = calibrate_ours(&bundle, &calib, 8);
+        let a = eval_quantized(&bundle, &ours.spec, &ds, opt);
+        table.row(vec![
+            "Ours".into(),
+            "8".into(),
+            "8".into(),
+            "bit-shifting".into(),
+            pct(a),
+        ]);
+    }
+    Ok(table)
+}
+
+// -----------------------------------------------------------------------
+// Table 4 — detection vs bit-width
+// -----------------------------------------------------------------------
+
+/// Detection AP per class over the first `eval_n` images at a precision.
+pub fn eval_detection(
+    bundle: &ModelBundle,
+    spec: Option<&crate::quant::params::QuantSpec>,
+    ds: &DetectionSet,
+    opt: EvalOptions,
+) -> Vec<f64> {
+    let n = opt.eval_n.min(ds.len());
+    let gts = ds.ground_truths(0, n);
+    let mut dets: Vec<Detection> = Vec::new();
+    let mut start = 0usize;
+    let last = bundle.graph.modules.last().unwrap().name.clone();
+    while start < n {
+        let bsz = opt.batch.min(n - start);
+        let x = ds.batch(start, bsz);
+        let head = match spec {
+            None => FpEngine::new(&bundle.graph, &bundle.folded).run(&x),
+            Some(spec) => {
+                let eng = IntEngine::new(&bundle.graph, &bundle.folded, spec);
+                let out = eng.run(&x);
+                scheme::dequantize_tensor(&out, spec.value_frac(&bundle.graph, &last))
+            }
+        };
+        dets.extend(detector::decode(&head, 0.08, 0.45, start));
+        start += bsz;
+    }
+    per_class_ap(&dets, &gts, detector::N_CLASSES, 0.5)
+}
+
+/// Table 4: SynthKITTI detection AP at FP/8/7/6 bits.
+pub fn table4(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+    let ds = art.detection_set("synthkitti_val")?;
+    let bundle = art.load_model("detnet")?;
+    // calibrate on one detection image
+    let calib = ds.batch(0, opt.calib_n.max(1));
+    // the paper sweeps 8/7/6-bit; our substitute detector is ~5x
+    // shallower than F-RCNN/ResNet-152, so quantization error
+    // accumulates less and the collapse the paper sees at 6-bit shows
+    // up lower — we extend the sweep to 5/4-bit to exhibit the cliff
+    // (DESIGN.md (S)2).
+    let mut table = Table::new(
+        "Table 4: SynthKITTI detection AP vs precision (DetNet)",
+        &["Class", "FP", "8-bit", "7-bit", "6-bit", "5-bit", "4-bit"],
+    );
+    let fp_ap = eval_detection(&bundle, None, &ds, opt);
+    let mut cols: Vec<Vec<f64>> = vec![fp_ap];
+    for bits in [8u32, 7, 6, 5, 4] {
+        let out = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() })
+            .calibrate(&bundle.graph, &bundle.folded, &calib);
+        cols.push(eval_detection(&bundle, Some(&out.spec), &ds, opt));
+    }
+    for (c, cls) in ["Car", "Pedestrian", "Cyclist"].iter().enumerate() {
+        table.row(vec![
+            cls.to_string(),
+            pct(cols[0][c]),
+            pct(cols[1][c]),
+            pct(cols[2][c]),
+            pct(cols[3][c]),
+            pct(cols[4][c]),
+            pct(cols[5][c]),
+        ]);
+    }
+    Ok(table)
+}
+
+// -----------------------------------------------------------------------
+// Table 5 + headline claims — hardware cost
+// -----------------------------------------------------------------------
+
+/// Table 5: power/area of the three requantization operators.
+pub fn table5() -> Table {
+    let mut table = Table::new(
+        "Table 5: requantization operator cost (32-bit in, 8-bit out, 500 MHz)",
+        &["", "scaling factor", "codebook", "bit-shifting"],
+    );
+    let rows = hw::synth::table5();
+    let find = |op: &str| rows.iter().find(|r| r.op == op).unwrap();
+    let sf = find("scaling factor");
+    let cb = find("codebook");
+    let bs = find("bit-shifting");
+    table.row(vec![
+        "Power (mW)".into(),
+        format!("{:.1}", sf.power_mw),
+        format!("{:.1}", cb.power_mw),
+        format!("{:.1}", bs.power_mw),
+    ]);
+    table.row(vec![
+        "Area (um^2)".into(),
+        format!("{:.1}", sf.area_um2),
+        format!("{:.1}", cb.area_um2),
+        format!("{:.1}", bs.area_um2),
+    ]);
+    table
+}
+
+/// Headline claims: codebook/bit-shift ratios + the FP32-vs-int8 network
+/// energy/traffic ratios on ResNet-L.
+pub fn headline(graph: &Graph) -> Table {
+    let (p_ratio, a_ratio) = hw::synth::headline_ratios();
+    let e = hw::energy::EnergyTable::default();
+    let fp = hw::energy::estimate(graph, hw::energy::Precision::Fp32, &e);
+    let q8 = hw::energy::estimate(
+        graph,
+        hw::energy::Precision::Int { bits: 8, requant: hw::energy::RequantStyle::BitShift },
+        &e,
+    );
+    let q8sf = hw::energy::estimate(
+        graph,
+        hw::energy::Precision::Int { bits: 8, requant: hw::energy::RequantStyle::ScalingFactor },
+        &e,
+    );
+    let mut t = Table::new("Headline claims", &["claim", "paper", "measured"]);
+    t.row(vec![
+        "requant power vs codebook".into(),
+        "~15x".into(),
+        format!("{p_ratio:.1}x"),
+    ]);
+    t.row(vec![
+        "requant area vs codebook".into(),
+        "~9x".into(),
+        format!("{a_ratio:.1}x"),
+    ]);
+    t.row(vec![
+        "int8 vs FP32 memory traffic".into(),
+        "~4x".into(),
+        format!("{:.1}x", fp.traffic_bytes as f64 / q8.traffic_bytes as f64),
+    ]);
+    t.row(vec![
+        "int8 vs FP32 energy".into(),
+        "~4x (lower bound)".into(),
+        format!("{:.1}x", fp.total_uj() / q8.total_uj()),
+    ]);
+    t.row(vec![
+        "requant share (bit-shift)".into(),
+        "1-2%".into(),
+        pct(q8.requant_share()),
+    ]);
+    t.row(vec![
+        "requant share (scaling)".into(),
+        "not ignorable".into(),
+        pct(q8sf.requant_share()),
+    ]);
+    t
+}
+
+// -----------------------------------------------------------------------
+// Figure 2 — calibration statistics
+// -----------------------------------------------------------------------
+
+/// Figure 2 data from a calibration run: (a) MSE vs residual-block
+/// depth, (b) shift bits vs layer depth.
+pub fn fig2(art: &Artifacts, model: &str) -> Result<(Vec<Series>, Vec<Series>), String> {
+    let bundle = art.load_model(model)?;
+    let calib = art.calibration_images(1)?;
+    let out = calibrate_ours(&bundle, &calib, 8);
+    let res = out.stats.residual_mse_series();
+    let fig2a = vec![
+        Series {
+            label: "conv (pre-add)".into(),
+            points: res.iter().map(|(b, c, _)| (*b as f64, *c)).collect(),
+        },
+        Series {
+            label: "residual add".into(),
+            points: res.iter().map(|(b, _, a)| (*b as f64, *a)).collect(),
+        },
+    ];
+    let fig2b = vec![Series {
+        label: "out shift".into(),
+        points: out
+            .stats
+            .shift_series()
+            .iter()
+            .map(|(i, s)| (*i as f64, *s as f64))
+            .collect(),
+    }];
+    Ok((fig2a, fig2b))
+}
+
+// -----------------------------------------------------------------------
+// dataflow ablation (the paper's hypothesis, quantified)
+// -----------------------------------------------------------------------
+
+/// Ablation: fused unified modules vs per-layer (unfused) quantization
+/// points on a model — accuracy and quantization-op counts.
+pub fn dataflow_ablation(
+    art: &Artifacts,
+    model: &str,
+    opt: EvalOptions,
+) -> Result<Table, String> {
+    let ds = art.classification_set("synthimagenet_val")?;
+    let bundle = art.load_model(model)?;
+    let calib = art.calibration_images(opt.calib_n)?;
+    let layers = model
+        .strip_prefix("resnet_")
+        .and_then(crate::models::resnet::blocks_for)
+        .map(|n| crate::models::resnet::resnet_layers(model, n, 10));
+    let naive_points = layers.map(|l| l.naive_quant_points()).unwrap_or(0);
+    let mut t = Table::new(
+        &format!(
+            "Dataflow ablation ({model}): unified modules ({} quant points) vs \
+             per-layer DoReFa-style placement ({naive_points} points)",
+            bundle.graph.modules.len()
+        ),
+        &["bits", "unified (ours)", "per-layer", "delta (pp)"],
+    );
+    // the hypothesis discriminates at low precision, where every extra
+    // quantization operation costs real information
+    for bits in [8u32, 6, 5, 4] {
+        let cal = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() });
+        let out = cal.calibrate(&bundle.graph, &bundle.folded, &calib);
+        let fused_acc = eval_quantized(&bundle, &out.spec, &ds, opt);
+        let pre = cal.ablation_pre_fracs(&bundle.graph, &bundle.folded, &calib, &out.spec);
+        let engine_unfused = {
+            let mut e = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
+            e.pre_frac = Some(pre);
+            e
+        };
+        let n = opt.eval_n.min(ds.len());
+        let mut correct = 0.0;
+        let mut seen = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let (x, labels) = ds.batch(start, opt.batch.min(n - start));
+            let logits = engine_unfused.run(&x);
+            correct += top1_i32(&logits, labels) * labels.len() as f64;
+            seen += labels.len();
+            start += labels.len();
+        }
+        let unfused_acc = correct / seen as f64;
+        t.row(vec![
+            format!("{bits}"),
+            pct(fused_acc),
+            pct(unfused_acc),
+            format!("{:+.2}", (fused_acc - unfused_acc) * 100.0),
+        ]);
+    }
+    Ok(t)
+}

@@ -1,0 +1,120 @@
+//! ASCII scatter/line plots + CSV series export for the paper's figures.
+
+/// A named (x, y) series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// legend label
+    pub label: String,
+    /// points
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render one or more series as a fixed-size ASCII plot.
+pub fn ascii_plot(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let markers = ['*', 'o', '+', 'x', '#'];
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().cloned()).collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &all {
+        x0 = x0.min(*x);
+        x1 = x1.max(*x);
+        y0 = y0.min(*y);
+        y1 = y1.max(*y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let m = markers[si % markers.len()];
+        for (x, y) in &s.points {
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = m;
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("y: [{y0:.3}, {y1:.3}]\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("x: [{x0:.1}, {x1:.1}]   "));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", markers[si % markers.len()], s.label));
+    }
+    out.push('\n');
+    out
+}
+
+/// Export series as CSV: `x,label1,label2,...` (union of x values).
+pub fn series_csv(series: &[Series]) -> String {
+    let mut xs: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|(x, _)| *x))
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let mut out = String::from("x");
+    for s in series {
+        out.push(',');
+        out.push_str(&s.label);
+    }
+    out.push('\n');
+    for x in xs {
+        out.push_str(&format!("{x}"));
+        for s in series {
+            match s.points.iter().find(|(px, _)| (*px - x).abs() < 1e-12) {
+                Some((_, y)) => out.push_str(&format!(",{y}")),
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_contains_markers_and_ranges() {
+        let s = vec![
+            Series { label: "a".into(), points: vec![(0.0, 0.0), (1.0, 1.0)] },
+            Series { label: "b".into(), points: vec![(0.5, 0.5)] },
+        ];
+        let p = ascii_plot("T", &s, 20, 10);
+        assert!(p.contains('*'));
+        assert!(p.contains('o'));
+        assert!(p.contains("*=a"));
+        assert!(p.contains("x: [0.0, 1.0]"));
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        assert!(ascii_plot("T", &[], 10, 5).contains("no data"));
+    }
+
+    #[test]
+    fn csv_union_of_x() {
+        let s = vec![
+            Series { label: "a".into(), points: vec![(0.0, 1.0), (1.0, 2.0)] },
+            Series { label: "b".into(), points: vec![(1.0, 3.0)] },
+        ];
+        let csv = series_csv(&s);
+        assert!(csv.starts_with("x,a,b\n"));
+        assert!(csv.contains("0,1,\n"));
+        assert!(csv.contains("1,2,3\n"));
+    }
+}

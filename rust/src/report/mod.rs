@@ -1,0 +1,8 @@
+//! Paper-table regeneration: ASCII table rendering ([`table`]), simple
+//! ASCII plots + CSV export ([`figures`]) and the experiment drivers that
+//! reproduce every table and figure of the paper ([`experiments`]) —
+//! shared by the CLI (`dfq tables`) and the benches.
+
+pub mod experiments;
+pub mod figures;
+pub mod table;

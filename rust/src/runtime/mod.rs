@@ -1,0 +1,18 @@
+//! The PJRT runtime: loads the AOT-lowered HLO text artifacts and
+//! executes them on the request path through the `xla` crate's PJRT CPU
+//! client.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 protos with 64-bit
+//! instruction ids, while the text parser reassigns ids (see
+//! `python/compile/aot.py` and /opt/xla-example/README.md). Every
+//! artifact was lowered with `return_tuple=True`, so outputs arrive as a
+//! tuple literal and are decomposed here.
+
+pub mod exec;
+pub mod pjrt;
+pub mod worker;
+
+pub use exec::{ArgValue, LoadedExec};
+pub use pjrt::Runtime;
+pub use worker::PjrtWorker;

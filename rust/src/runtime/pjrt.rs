@@ -1,0 +1,56 @@
+//! PJRT client wrapper: one client per process, compile-once semantics,
+//! an executable cache keyed by artifact path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::exec::LoadedExec;
+
+/// A PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<LoadedExec>>>,
+}
+
+impl Runtime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Runtime, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        crate::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<LoadedExec>, String> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let t = crate::util::timer::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or("non-utf8 path")?,
+        )
+        .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {}: {e}", path.display()))?;
+        crate::debug!("compiled {} in {:.2}s", path.display(), t.secs());
+        let loaded = std::sync::Arc::new(LoadedExec::new(exe));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Number of cached executables.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT worker actor: the `xla` crate's client/executable handles are
+//! `Rc`-based and not `Send`, so multi-threaded users (the batching
+//! service, the pool) talk to a dedicated owner thread over channels.
+//! One worker = one PJRT client; executables stay cached inside.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Sender};
+use std::sync::Mutex;
+
+use super::exec::{ArgValue, OutValue};
+use super::pjrt::Runtime;
+
+enum Job {
+    Run {
+        path: PathBuf,
+        args: Vec<ArgValue>,
+        reply: Sender<Result<Vec<OutValue>, String>>,
+    },
+    Warm {
+        path: PathBuf,
+        reply: Sender<Result<(), String>>,
+    },
+}
+
+/// Thread-safe handle to a PJRT owner thread.
+pub struct PjrtWorker {
+    tx: Mutex<Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtWorker {
+    /// Spawn the owner thread and create the CPU client on it.
+    pub fn start() -> Result<PjrtWorker, String> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::spawn(move || {
+            let rt = match Runtime::cpu() {
+                Ok(rt) => {
+                    ready_tx.send(Ok(())).ok();
+                    rt
+                }
+                Err(e) => {
+                    ready_tx.send(Err(e)).ok();
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Run { path, args, reply } => {
+                        let out = rt.load(&path).and_then(|exe| exe.run(&args));
+                        reply.send(out).ok();
+                    }
+                    Job::Warm { path, reply } => {
+                        reply.send(rt.load(&path).map(|_| ())).ok();
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| "pjrt worker died during startup".to_string())??;
+        Ok(PjrtWorker { tx: Mutex::new(tx), handle: Some(handle) })
+    }
+
+    /// Compile an artifact ahead of time (cached inside the worker).
+    pub fn warm(&self, path: &std::path::Path) -> Result<(), String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Warm { path: path.to_path_buf(), reply: rtx })
+            .map_err(|_| "pjrt worker stopped".to_string())?;
+        rrx.recv().map_err(|_| "pjrt worker dropped job".to_string())?
+    }
+
+    /// Execute an artifact with typed args.
+    pub fn run(
+        &self,
+        path: &std::path::Path,
+        args: Vec<ArgValue>,
+    ) -> Result<Vec<OutValue>, String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Run { path: path.to_path_buf(), args, reply: rtx })
+            .map_err(|_| "pjrt worker stopped".to_string())?;
+        rrx.recv().map_err(|_| "pjrt worker dropped job".to_string())?
+    }
+}
+
+impl Drop for PjrtWorker {
+    fn drop(&mut self) {
+        // close the channel, then join the owner thread
+        {
+            let (tx_dummy, _) = mpsc::channel::<Job>();
+            let mut guard = self.tx.lock().unwrap();
+            *guard = tx_dummy;
+        }
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! im2col patch extraction (NHWC, SAME/VALID padding), the shared front
+//! half of both conv implementations. The (kh, kw, C)-minor patch layout
+//! matches HWIO filters flattened to (kh*kw*C, O) — the same ordering
+//! contract as `python/compile/kernels/ref.py::im2col_nhwc`, which the
+//! cross-language integration tests rely on.
+
+use super::{Shape, TensorBase};
+
+/// Padding policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    /// TensorFlow-style SAME: output spatial = ceil(input / stride).
+    Same,
+    /// No padding.
+    Valid,
+}
+
+/// Output spatial dims + top/left pad amounts for a conv config.
+pub fn conv_geometry(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> (usize, usize, usize, usize) {
+    match padding {
+        Padding::Same => {
+            let ho = h.div_ceil(stride);
+            let wo = w.div_ceil(stride);
+            let pad_h = ((ho - 1) * stride + kh).saturating_sub(h);
+            let pad_w = ((wo - 1) * stride + kw).saturating_sub(w);
+            (ho, wo, pad_h / 2, pad_w / 2)
+        }
+        Padding::Valid => ((h - kh) / stride + 1, (w - kw) / stride + 1, 0, 0),
+    }
+}
+
+/// Extract patches: input (N,H,W,C) -> (N*Ho*Wo, kh*kw*C), zero padding.
+/// `T::default()` is the padding value (0 for both f32 and i32 — and the
+/// quantized code for 0.0 is 0, so integer conv padding is exact).
+pub fn im2col<T: Copy + Default>(
+    x: &TensorBase<T>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> (TensorBase<T>, usize, usize) {
+    let (n, h, w, c) = (
+        x.shape.dim(0),
+        x.shape.dim(1),
+        x.shape.dim(2),
+        x.shape.dim(3),
+    );
+    let (ho, wo, pt, pl) = conv_geometry(h, w, kh, kw, stride, padding);
+    let k = kh * kw * c;
+    let mut out = vec![T::default(); n * ho * wo * k];
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((b * ho + oy) * wo + ox) * k;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // stays zero
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (ky * kw + kx) * c;
+                        out[dst..dst + c]
+                            .copy_from_slice(&x.data[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (
+        TensorBase { shape: Shape(vec![n * ho * wo, k]), data: out },
+        ho,
+        wo,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn geometry_same_matches_tf() {
+        // 32x32, k3 s1 -> 32x32 pad 1
+        assert_eq!(conv_geometry(32, 32, 3, 3, 1, Padding::Same),
+                   (32, 32, 1, 1));
+        // 32x32, k3 s2 -> 16x16, total pad 1 (top gets 0)
+        assert_eq!(conv_geometry(32, 32, 3, 3, 2, Padding::Same),
+                   (16, 16, 0, 0));
+        // odd size
+        assert_eq!(conv_geometry(9, 7, 3, 3, 2, Padding::Same), (5, 4, 1, 1));
+        // 1x1 s2
+        assert_eq!(conv_geometry(16, 16, 1, 1, 2, Padding::Same),
+                   (8, 8, 0, 0));
+    }
+
+    #[test]
+    fn identity_kernel_extracts_pixels() {
+        // 1x1 kernel stride 1: patches == input rows
+        let x = Tensor::from_vec(&[1, 2, 2, 3],
+                                 (0..12).map(|i| i as f32).collect());
+        let (p, ho, wo) = im2col(&x, 1, 1, 1, Padding::Same);
+        assert_eq!((ho, wo), (2, 2));
+        assert_eq!(p.shape.dims(), &[4, 3]);
+        assert_eq!(p.data, x.data);
+    }
+
+    #[test]
+    fn padding_zeros_at_border() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let (p, _, _) = im2col(&x, 3, 3, 1, Padding::Same);
+        // patch at (0,0): rows of the 3x3 window centered there
+        let first: Vec<f32> = p.data[0..9].to_vec();
+        assert_eq!(first, vec![0., 0., 0., 0., 1., 2., 0., 3., 4.]);
+    }
+
+    #[test]
+    fn patch_order_is_khkwc_minor() {
+        // 2 channels: within a patch, channel is fastest
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 10., 2., 20.]);
+        let (p, _, _) = im2col(&x, 1, 2, 1, Padding::Valid);
+        assert_eq!(p.shape.dims(), &[1, 4]);
+        assert_eq!(p.data, vec![1., 10., 2., 20.]);
+    }
+
+    #[test]
+    fn stride_two_subsamples() {
+        let x = Tensor::from_vec(&[1, 4, 4, 1],
+                                 (0..16).map(|i| i as f32).collect());
+        let (p, ho, wo) = im2col(&x, 1, 1, 2, Padding::Same);
+        assert_eq!((ho, wo), (2, 2));
+        assert_eq!(p.data, vec![0., 2., 8., 10.]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Dense tensors (NHWC activations, HWIO filters) and the reference
+//! numeric ops used by the FP oracle engine and the integer engine.
+//!
+//! Only what the system needs: rank ≤ 4, row-major contiguous storage,
+//! f32 and i32 element types. Convolutions go through im2col + GEMM
+//! microkernels (see [`ops`] / [`ops_int`]) — the same decomposition the
+//! L1 Pallas kernel uses for the MXU, which keeps the two implementations
+//! structurally comparable.
+
+pub mod im2col;
+pub mod ops;
+pub mod ops_int;
+
+/// A tensor shape (rank ≤ 4 in practice).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Rank.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Dimension `i`.
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+
+    /// As a slice.
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(d: &[usize]) -> Self {
+        Shape(d.to_vec())
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(d: Vec<usize>) -> Self {
+        Shape(d)
+    }
+}
+
+/// A dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorBase<T> {
+    /// shape
+    pub shape: Shape,
+    /// contiguous row-major data
+    pub data: Vec<T>,
+}
+
+/// f32 tensor (activations, weights before quantization).
+pub type Tensor = TensorBase<f32>;
+/// i32 tensor (quantized codes and accumulators).
+pub type TensorI32 = TensorBase<i32>;
+
+impl<T: Copy + Default> TensorBase<T> {
+    /// Allocate zero-filled.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape(dims.to_vec());
+        let n = shape.numel();
+        TensorBase { shape, data: vec![T::default(); n] }
+    }
+
+    /// Wrap existing data (length must match).
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Self {
+        let shape = Shape(dims.to_vec());
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {shape} does not match data length {}",
+            data.len()
+        );
+        TensorBase { shape, data }
+    }
+
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(&self, dims: &[usize]) -> Self {
+        let shape = Shape(dims.to_vec());
+        assert_eq!(shape.numel(), self.numel(), "reshape element mismatch");
+        TensorBase { shape, data: self.data.clone() }
+    }
+
+    /// Row-major linear index for a 4-D coordinate.
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        let s = &self.shape.0;
+        debug_assert_eq!(s.len(), 4);
+        ((a * s[1] + b) * s[2] + c) * s[3] + d
+    }
+
+    /// 4-D element access.
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> T {
+        self.data[self.idx4(a, b, c, d)]
+    }
+}
+
+impl Tensor {
+    /// Map elementwise into i32.
+    pub fn map_i32<F: Fn(f32) -> i32>(&self, f: F) -> TensorI32 {
+        TensorI32 {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Maximum absolute value (0 for empty).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+impl TensorI32 {
+    /// Map elementwise into f32.
+    pub fn map_f32<F: Fn(i32) -> f32>(&self, f: F) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_reshape() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.numel(), 120);
+        let r = t.reshape(&[6, 20]);
+        assert_eq!(r.shape.dims(), &[6, 20]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape element mismatch")]
+    fn reshape_mismatch_panics() {
+        Tensor::zeros(&[2, 2]).reshape(&[5]);
+    }
+
+    #[test]
+    fn idx4_row_major() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        let i = t.idx4(1, 2, 3, 4);
+        assert_eq!(i, 119);
+        t.data[i] = 7.0;
+        assert_eq!(t.at4(1, 2, 3, 4), 7.0);
+    }
+
+    #[test]
+    fn max_abs() {
+        let t = Tensor::from_vec(&[4], vec![-3.0, 1.0, 2.5, -0.5]);
+        assert_eq!(t.max_abs(), 3.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! f32 reference ops: GEMM, conv (im2col+GEMM), dense, pooling,
+//! elementwise. These power the FP oracle engine ([`crate::engine::fp`])
+//! that supplies the Eq.-5 calibration targets.
+
+use super::im2col::{im2col, Padding};
+use super::{Shape, Tensor};
+
+/// C(M,N) = A(M,K) * B(K,N). Row-major; (m, k, n) loop order keeps the
+/// inner loop streaming contiguously through B and C.
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// 2-D convolution, NHWC x HWIO -> NHWC (paper Eq. 2, plus bias).
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: usize,
+    padding: Padding,
+) -> Tensor {
+    let (kh, kw, cin, cout) = (
+        w.shape.dim(0),
+        w.shape.dim(1),
+        w.shape.dim(2),
+        w.shape.dim(3),
+    );
+    assert_eq!(x.shape.dim(3), cin, "channel mismatch");
+    assert_eq!(b.len(), cout);
+    let n = x.shape.dim(0);
+    let (patches, ho, wo) = im2col(x, kh, kw, stride, padding);
+    let m = n * ho * wo;
+    let k = kh * kw * cin;
+    let mut out = gemm_f32(&patches.data, &w.data, m, k, cout);
+    for row in out.chunks_exact_mut(cout) {
+        for (o, bias) in row.iter_mut().zip(b) {
+            *o += *bias;
+        }
+    }
+    Tensor { shape: Shape(vec![n, ho, wo, cout]), data: out }
+}
+
+/// Dense layer: (N, Cin) x (Cin, Cout) + bias.
+pub fn dense(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    let (n, cin) = (x.shape.dim(0), x.shape.dim(1));
+    let cout = w.shape.dim(1);
+    assert_eq!(w.shape.dim(0), cin);
+    let mut out = gemm_f32(&x.data, &w.data, n, cin, cout);
+    for row in out.chunks_exact_mut(cout) {
+        for (o, bias) in row.iter_mut().zip(b) {
+            *o += *bias;
+        }
+    }
+    Tensor { shape: Shape(vec![n, cout]), data: out }
+}
+
+/// In-place ReLU.
+pub fn relu_inplace(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Elementwise sum (shapes must match).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    Tensor {
+        shape: a.shape.clone(),
+        data: a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    }
+}
+
+/// Global average pool: (N,H,W,C) -> (N,C).
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (
+        x.shape.dim(0),
+        x.shape.dim(1),
+        x.shape.dim(2),
+        x.shape.dim(3),
+    );
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = vec![0.0f32; n * c];
+    for b in 0..n {
+        for y in 0..h {
+            for xx in 0..w {
+                let base = ((b * h + y) * w + xx) * c;
+                for ch in 0..c {
+                    out[b * c + ch] += x.data[base + ch];
+                }
+            }
+        }
+    }
+    for v in &mut out {
+        *v *= inv;
+    }
+    Tensor { shape: Shape(vec![n, c]), data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_small_known() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = gemm_f32(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        approx(&c, &[19., 22., 43., 50.], 1e-6);
+    }
+
+    #[test]
+    fn conv_identity_1x1() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2],
+                                 vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        // identity 1x1 conv: w[0,0,i,o] = delta(i,o)
+        let w = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 0., 0., 1.]);
+        let y = conv2d(&x, &w, &[0.0, 0.0], 1, Padding::Same);
+        approx(&y.data, &x.data, 1e-6);
+    }
+
+    #[test]
+    fn conv_sum_kernel_with_bias() {
+        // 3x3 all-ones kernel on constant image: interior = 9, with SAME
+        // padding corners see 4 pixels.
+        let x = Tensor::from_vec(&[1, 3, 3, 1], vec![1.0; 9]);
+        let w = Tensor::from_vec(&[3, 3, 1, 1], vec![1.0; 9]);
+        let y = conv2d(&x, &w, &[0.5], 1, Padding::Same);
+        assert_eq!(y.at4(0, 1, 1, 0), 9.5);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.5);
+    }
+
+    #[test]
+    fn conv_stride2_shape() {
+        let x = Tensor::zeros(&[2, 32, 32, 3]);
+        let w = Tensor::zeros(&[3, 3, 3, 8]);
+        let y = conv2d(&x, &w, &[0.0; 8], 2, Padding::Same);
+        assert_eq!(y.shape.dims(), &[2, 16, 16, 8]);
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        let x = Tensor::from_vec(&[1, 3], vec![1., 2., 3.]);
+        let w = Tensor::from_vec(&[3, 2], vec![1., 4., 2., 5., 3., 6.]);
+        let y = dense(&x, &w, &[10.0, 20.0]);
+        approx(&y.data, &[1. + 4. + 9. + 10., 4. + 10. + 18. + 20.], 1e-6);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut x = Tensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
+        relu_inplace(&mut x);
+        assert_eq!(x.data, vec![0.0, 0.0, 2.0]);
+        let y = add(&x, &x);
+        assert_eq!(y.data, vec![0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2],
+                                 vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let y = global_avg_pool(&x);
+        approx(&y.data, &[2.5, 25.0], 1e-6);
+    }
+}

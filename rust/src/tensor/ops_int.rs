@@ -1,0 +1,182 @@
+//! Integer ops: the i32-accumulator GEMM/conv that models the paper's
+//! custom MAC array (int8 codes held in i32 lanes, 32-bit accumulation —
+//! Eq. 3's `O_int32`). Requantization/alignment shifts live in
+//! [`crate::quant::scheme`]; the engine composes the two.
+
+use super::im2col::{im2col, Padding};
+use super::{Shape, TensorI32};
+
+/// C(M,N) = A(M,K) * B(K,N) with i32 accumulation.
+///
+/// Two regimes (§Perf iteration #5):
+/// * `n <= 64` (most of our conv channels): accumulate each output row in
+///   a fixed stack buffer so LLVM keeps it in vector registers across the
+///   whole K loop — one store per output element instead of one per MAC;
+/// * wider N: stream through B/C rows, skipping zero input codes (common
+///   after ReLU, where ~30–50% of codes are 0).
+pub fn gemm_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0i32; m * n];
+    // monomorphized register-blocked kernels for the channel widths our
+    // models actually use: the compile-time N fully unrolls the inner
+    // loop and pins the accumulators in vector registers
+    match n {
+        8 => return gemm_i32_rb::<8>(a, b, m, k),
+        10 => return gemm_i32_rb::<10>(a, b, m, k),
+        16 => return gemm_i32_rb::<16>(a, b, m, k),
+        32 => return gemm_i32_rb::<32>(a, b, m, k),
+        64 => return gemm_i32_rb::<64>(a, b, m, k),
+        96 => return gemm_i32_rb::<96>(a, b, m, k),
+        _ => {}
+    }
+    if n <= 64 {
+        let mut acc = [0i32; 64];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            acc[..n].fill(0);
+            // branch-free: a zero-skip test costs more than the (fully
+            // vectorized) multiply at these widths
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    acc[j] = acc[j].wrapping_add(av.wrapping_mul(brow[j]));
+                }
+            }
+            c[i * n..(i + 1) * n].copy_from_slice(&acc[..n]);
+        }
+        return c;
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue; // zero codes are common after ReLU
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
+            }
+        }
+    }
+    c
+}
+
+/// Register-blocked GEMM with compile-time N (fully unrolled inner loop).
+fn gemm_i32_rb<const N: usize>(a: &[i32], b: &[i32], m: usize, k: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * N];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut acc = [0i32; N];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * N..(p + 1) * N];
+            for j in 0..N {
+                acc[j] = acc[j].wrapping_add(av.wrapping_mul(brow[j]));
+            }
+        }
+        c[i * N..(i + 1) * N].copy_from_slice(&acc);
+    }
+    c
+}
+
+/// Integer conv accumulator: NHWC codes x HWIO codes -> NHWC i32
+/// (no bias, no requant — Eq. 3's inner sum).
+pub fn conv2d_acc(
+    x: &TensorI32,
+    w: &TensorI32,
+    stride: usize,
+    padding: Padding,
+) -> TensorI32 {
+    let (kh, kw, cin, cout) = (
+        w.shape.dim(0),
+        w.shape.dim(1),
+        w.shape.dim(2),
+        w.shape.dim(3),
+    );
+    assert_eq!(x.shape.dim(3), cin, "channel mismatch");
+    let n = x.shape.dim(0);
+    let (patches, ho, wo) = im2col(x, kh, kw, stride, padding);
+    let m = n * ho * wo;
+    let k = kh * kw * cin;
+    let out = gemm_i32(&patches.data, &w.data, m, k, cout);
+    TensorI32 { shape: Shape(vec![n, ho, wo, cout]), data: out }
+}
+
+/// Dense accumulator: (N, Cin) x (Cin, Cout) -> i32.
+pub fn dense_acc(x: &TensorI32, w: &TensorI32) -> TensorI32 {
+    let (n, cin) = (x.shape.dim(0), x.shape.dim(1));
+    let cout = w.shape.dim(1);
+    assert_eq!(w.shape.dim(0), cin);
+    let out = gemm_i32(&x.data, &w.data, n, cin, cout);
+    TensorI32 { shape: Shape(vec![n, cout]), data: out }
+}
+
+/// Global sum pool: (N,H,W,C) -> (N,C) i32 sums (the mean is taken by an
+/// exact rounded shift in the engine; H*W is a power of two by design).
+pub fn global_sum_pool(x: &TensorI32) -> TensorI32 {
+    let (n, h, w, c) = (
+        x.shape.dim(0),
+        x.shape.dim(1),
+        x.shape.dim(2),
+        x.shape.dim(3),
+    );
+    let mut out = vec![0i32; n * c];
+    for b in 0..n {
+        for y in 0..h {
+            for xx in 0..w {
+                let base = ((b * h + y) * w + xx) * c;
+                for ch in 0..c {
+                    out[b * c + ch] += x.data[base + ch];
+                }
+            }
+        }
+    }
+    TensorI32 { shape: Shape(vec![n, c]), data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_known() {
+        let c = gemm_i32(&[1, 2, 3, 4], &[5, 6, 7, 8], 2, 2, 2);
+        assert_eq!(c, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn conv_acc_counts_window() {
+        let x = TensorI32::from_vec(&[1, 3, 3, 1], vec![1; 9]);
+        let w = TensorI32::from_vec(&[3, 3, 1, 1], vec![1; 9]);
+        let y = conv2d_acc(&x, &w, 1, Padding::Same);
+        assert_eq!(y.at4(0, 1, 1, 0), 9);
+        assert_eq!(y.at4(0, 0, 0, 0), 4);
+    }
+
+    #[test]
+    fn max_magnitude_no_overflow() {
+        // worst case in our models: K = 3*3*64, |codes| <= 255 * 128
+        let x = TensorI32::from_vec(&[1, 3, 3, 64], vec![255; 9 * 64]);
+        let w = TensorI32::from_vec(&[3, 3, 64, 1], vec![-128; 9 * 64]);
+        let y = conv2d_acc(&x, &w, 1, Padding::Same);
+        let expect = 255i64 * -128 * (3 * 3 * 64) as i64;
+        assert!(expect.abs() < i32::MAX as i64);
+        assert_eq!(y.at4(0, 1, 1, 0) as i64, expect);
+    }
+
+    #[test]
+    fn dense_acc_matches_manual() {
+        let x = TensorI32::from_vec(&[1, 3], vec![1, 2, 3]);
+        let w = TensorI32::from_vec(&[3, 2], vec![1, 4, 2, 5, 3, 6]);
+        let y = dense_acc(&x, &w);
+        assert_eq!(y.data, vec![14, 32]);
+    }
+
+    #[test]
+    fn sum_pool() {
+        let x = TensorI32::from_vec(&[1, 2, 2, 2], vec![1, 10, 2, 20, 3, 30, 4, 40]);
+        let y = global_sum_pool(&x);
+        assert_eq!(y.data, vec![10, 100]);
+    }
+}

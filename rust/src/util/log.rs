@@ -1,0 +1,99 @@
+//! Tiny leveled logger writing to stderr; level set by `DFQ_LOG`
+//! (error|warn|info|debug|trace, default info) or programmatically.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// unrecoverable problems
+    Error = 0,
+    /// suspicious but continuing
+    Warn = 1,
+    /// progress reporting (default)
+    Info = 2,
+    /// verbose internals
+    Debug = 3,
+    /// very verbose
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn env_level() -> u8 {
+    match std::env::var("DFQ_LOG").ok().as_deref() {
+        Some("error") => 0,
+        Some("warn") => 1,
+        Some("debug") => 3,
+        Some("trace") => 4,
+        _ => 2,
+    }
+}
+
+/// Current level (lazily read from `DFQ_LOG`).
+pub fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l == u8::MAX {
+        let e = env_level();
+        LEVEL.store(e, Ordering::Relaxed);
+        e
+    } else {
+        l
+    }
+}
+
+/// Override the level programmatically.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// True if `l` would be printed.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+/// Emit a record (used by the macros).
+pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[dfq {tag}] {args}");
+    }
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,96 @@
+//! Small numeric helpers shared across modules.
+
+/// `ceil(log2(x + 1)) + 1` — the paper's Eq. 6 upper-bound for the
+/// integer bits needed to represent magnitude `x` (plus sign).
+pub fn magnitude_bits(x: f32) -> i32 {
+    ((x.abs() + 1.0).log2()).ceil() as i32 + 1
+}
+
+/// L2 norm of the elementwise difference.
+pub fn l2_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Numerically-stable softmax over a slice.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Index of the maximum element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn magnitude_bits_matches_eq6() {
+        // max|W| = 0.9 -> ceil(log2(1.9)) + 1 = 1 + 1 = 2
+        assert_eq!(magnitude_bits(0.9), 2);
+        // max|W| = 3.0 -> ceil(log2(4)) + 1 = 2 + 1 = 3
+        assert_eq!(magnitude_bits(3.0), 3);
+        // max|W| = 100 -> ceil(log2(101)) + 1 = 7 + 1 = 8
+        assert_eq!(magnitude_bits(100.0), 8);
+        assert_eq!(magnitude_bits(-3.0), 3); // symmetric in sign
+    }
+
+    #[test]
+    fn l2_and_mse() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 4.0, 3.0];
+        assert!((l2_err(&a, &b) - 2.0).abs() < 1e-12);
+        assert!((mse(&a, &b) - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[0.0, 5.0, 5.0, 1.0]), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained infrastructure: PRNG, JSON, logging, timing.
+//!
+//! The offline crate registry in this environment carries only the `xla`
+//! dependency closure (no serde / rand / clap / criterion), so the crate
+//! ships its own minimal, well-tested implementations. Each is scoped to
+//! exactly what the system needs and is covered by unit tests.
+
+pub mod json;
+pub mod log;
+pub mod mathutil;
+pub mod rng;
+pub mod timer;

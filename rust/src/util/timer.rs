@@ -1,0 +1,137 @@
+//! Wall-clock timing + robust summary statistics for the bench harness
+//! (criterion is not in the offline registry; benches use this instead).
+
+use std::time::Instant;
+
+/// A simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Summary statistics over repeated measurements.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// sorted samples, seconds
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    /// Build from raw samples (seconds).
+    pub fn from(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats { samples }
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    /// p-th percentile (0..=100), linear interpolation.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let k = (p / 100.0) * (self.samples.len() - 1) as f64;
+        let lo = k.floor() as usize;
+        let hi = k.ceil() as usize;
+        let frac = k - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    /// Median.
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    /// Minimum.
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Run `f` `iters` times after `warmup` warmup runs; return stats (secs).
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from(samples)
+}
+
+/// Pretty seconds: ns/µs/ms/s as appropriate.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Stats::from(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 4.0).abs() < 1e-12);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut count = 0;
+        let st = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(st.samples.len(), 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.5e-9).contains("ns"));
+        assert!(fmt_secs(2.5e-6).contains("µs"));
+        assert!(fmt_secs(2.5e-3).contains("ms"));
+        assert!(fmt_secs(2.5).contains("s"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Artifact-backed integration tests: everything `make artifacts`
+//! produced must agree with the rust side — manifest specs vs native
+//! builders, weight loading + BN folding, trained-model sanity, and the
+//! calibrated quantized model's accuracy staying close to FP.
+//!
+//! Skipped (with a message) when `artifacts/` is absent so `cargo test`
+//! works in a fresh checkout; CI runs `make artifacts` first.
+
+use dfq::models::{detector, resnet};
+use dfq::prelude::*;
+use dfq::report::experiments::{self, EvalOptions};
+
+fn art() -> Option<Artifacts> {
+    match Artifacts::open("artifacts") {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_specs_match_native_builders() {
+    let Some(art) = art() else { return };
+    for name in ["resnet_s", "resnet_m", "resnet_l"] {
+        let bundle = art.load_model(name).unwrap();
+        let native = resnet::by_name(name).unwrap();
+        assert_eq!(bundle.graph.modules.len(), native.modules.len(), "{name}");
+        for (a, b) in bundle.graph.modules.iter().zip(&native.modules) {
+            assert_eq!(a.name, b.name, "{name}");
+            assert_eq!(a.kind, b.kind, "{name}/{}", a.name);
+            assert_eq!(a.relu, b.relu, "{name}/{}", a.name);
+            assert_eq!(a.res, b.res, "{name}/{}", a.name);
+            assert_eq!(a.src, b.src, "{name}/{}", a.name);
+        }
+    }
+    let bundle = art.load_model("detnet").unwrap();
+    let native = detector::detnet_graph();
+    assert_eq!(bundle.graph.modules.len(), native.modules.len());
+}
+
+#[test]
+fn trained_models_beat_chance_by_far() {
+    let Some(art) = art() else { return };
+    let ds = art.classification_set("synthimagenet_val").unwrap();
+    assert!(ds.len() >= 500);
+    let opt = EvalOptions { eval_n: 200, batch: 50, calib_n: 1 };
+    for name in ["resnet_s", "resnet_l"] {
+        let bundle = art.load_model(name).unwrap();
+        let acc = experiments::eval_fp(&bundle, &ds, opt);
+        assert!(acc > 0.5, "{name} FP top-1 {acc} — training failed?");
+    }
+}
+
+#[test]
+fn quantized_within_few_points_of_fp() {
+    let Some(art) = art() else { return };
+    let ds = art.classification_set("synthimagenet_val").unwrap();
+    let opt = EvalOptions { eval_n: 200, batch: 50, calib_n: 1 };
+    let bundle = art.load_model("resnet_s").unwrap();
+    let calib = art.calibration_images(1).unwrap();
+    let fp = experiments::eval_fp(&bundle, &ds, opt);
+    let out = experiments::calibrate_ours(&bundle, &calib, 8);
+    let q = experiments::eval_quantized(&bundle, &out.spec, &ds, opt);
+    // paper: ~1.8pp drop; we allow 6pp on the 200-image subset
+    assert!(fp - q < 0.06, "drop too large: FP {fp} vs int8 {q}");
+}
+
+#[test]
+fn weights_cover_every_module() {
+    let Some(art) = art() else { return };
+    for name in art.model_names() {
+        let bundle = art.load_model(&name).unwrap();
+        for m in bundle.graph.weight_modules() {
+            assert!(bundle.folded.contains_key(&m.name), "{name}/{}", m.name);
+            let p = &bundle.folded[&m.name];
+            assert!(p.w.data.iter().all(|v| v.is_finite()), "{name}/{}", m.name);
+            assert!(p.b.iter().all(|v| v.is_finite()), "{name}/{}", m.name);
+        }
+    }
+}
+
+#[test]
+fn detection_set_loads_with_objects() {
+    let Some(art) = art() else { return };
+    let ds = art.detection_set("synthkitti_val").unwrap();
+    assert!(ds.len() >= 50);
+    let gts = ds.ground_truths(0, ds.len());
+    assert!(gts.len() >= ds.len(), "every image has >= 1 object");
+    // all three classes appear
+    for c in 0..3 {
+        assert!(gts.iter().any(|g| g.class == c), "class {c} missing");
+    }
+}
+
+#[test]
+fn calibration_shifts_in_hardware_range() {
+    let Some(art) = art() else { return };
+    let bundle = art.load_model("resnet_m").unwrap();
+    let calib = art.calibration_images(1).unwrap();
+    let out = experiments::calibrate_ours(&bundle, &calib, 8);
+    let (lo, med, hi) = out.stats.shift_summary();
+    // paper Fig 2b: deployed shifts live in [1, 10], values around 3-8
+    assert!(lo >= 0, "negative deployed shift {lo}");
+    assert!(hi <= 16, "shift {hi} too large");
+    assert!((1..=12).contains(&med), "median {med}");
+}

@@ -1,0 +1,221 @@
+//! Artifact-free integration tests: the whole pipeline (dataflow fusion →
+//! joint calibration → integer-only deployment) on natively-built models
+//! with synthetic weights. These run in any checkout; the artifact-backed
+//! tests live in integration_artifacts.rs / integration_pjrt.rs.
+
+use std::collections::HashMap;
+
+use dfq::engine::fp::FpEngine;
+use dfq::engine::int::IntEngine;
+use dfq::graph::bn_fold::{fold_bn, FoldedParams};
+use dfq::graph::fuse;
+use dfq::graph::ModuleKind;
+use dfq::models::{detector, resnet};
+use dfq::prelude::*;
+use dfq::quant::joint::{CalibConfig, JointCalibrator};
+use dfq::util::mathutil::mse;
+
+/// Random folded params for any graph.
+fn random_folded(graph: &Graph, seed: u64) -> HashMap<String, FoldedParams> {
+    let mut rng = Pcg::new(seed);
+    let mut out = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        out.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.05)).collect(),
+            },
+        );
+    }
+    out
+}
+
+#[test]
+fn full_pipeline_resnet_s_int_close_to_fp() {
+    let graph = resnet::resnet_graph("resnet_s", 1, 10);
+    let folded = random_folded(&graph, 1);
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 2);
+    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+
+    let x = dfq::data::dataset::synth_images(8, 32, 3, 3);
+    let fp = FpEngine::new(&graph, &folded).run(&x);
+    let eng = IntEngine::new(&graph, &folded, &out.spec);
+    let q = eng.run_dequant(&x);
+    let rel = mse(&q.data, &fp.data)
+        / (fp.data.iter().map(|v| (v * v) as f64).sum::<f64>() / fp.data.len() as f64).max(1e-12);
+    assert!(rel < 0.05, "relative logit MSE {rel}");
+
+    // argmax agreement on most images
+    let c = fp.shape.dim(1);
+    let mut agree = 0;
+    for i in 0..8 {
+        let am = |d: &[f32]| {
+            let mut b = 0;
+            for (j, v) in d.iter().enumerate() {
+                if *v > d[b] {
+                    b = j;
+                }
+            }
+            b
+        };
+        if am(&fp.data[i * c..(i + 1) * c]) == am(&q.data[i * c..(i + 1) * c]) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 7, "argmax agreement {agree}/8");
+}
+
+#[test]
+fn pipeline_from_layer_graph_via_fusion() {
+    // start at the fine-grained form with real BN stats, fold, calibrate
+    let lg = resnet::resnet_layers("resnet_s", 1, 10);
+    let fused = fuse::fuse(&lg).unwrap();
+    let graph = fused.graph;
+    // raw params with BN (random but well-conditioned)
+    let mut rng = Pcg::new(4);
+    let mut params: HashMap<String, Tensor> = HashMap::new();
+    for m in graph.weight_modules() {
+        match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                let n = kh * kw * cin * cout;
+                let std = (2.0 / (kh * kw * cin) as f32).sqrt();
+                params.insert(
+                    format!("{}/w", m.name),
+                    Tensor::from_vec(
+                        &[*kh, *kw, *cin, *cout],
+                        (0..n).map(|_| rng.normal_ms(0.0, std)).collect(),
+                    ),
+                );
+                for (k, lo, hi) in [
+                    ("gamma", 0.7f32, 1.3f32),
+                    ("beta", -0.2, 0.2),
+                    ("mean", -0.3, 0.3),
+                    ("var", 0.5, 1.5),
+                ] {
+                    params.insert(
+                        format!("{}/bn/{k}", m.name),
+                        Tensor::from_vec(
+                            &[*cout],
+                            (0..*cout).map(|_| rng.uniform(lo, hi)).collect(),
+                        ),
+                    );
+                }
+            }
+            ModuleKind::Dense { cin, cout } => {
+                let std = (2.0 / *cin as f32).sqrt();
+                params.insert(
+                    format!("{}/w", m.name),
+                    Tensor::from_vec(
+                        &[*cin, *cout],
+                        (0..cin * cout).map(|_| rng.normal_ms(0.0, std)).collect(),
+                    ),
+                );
+                params.insert(format!("{}/b", m.name), Tensor::zeros(&[*cout]));
+            }
+            ModuleKind::Gap => {}
+        }
+    }
+    let folded = fold_bn(&graph, &params).unwrap();
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 5);
+    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+    assert_eq!(out.spec.modules.len(), graph.weight_layer_count());
+    // shifts deployed in a hardware-plausible range (paper Fig 2b: [1,10])
+    let (lo, _med, hi) = out.stats.shift_summary();
+    assert!(lo >= -2 && hi <= 20, "shift range [{lo}, {hi}]");
+}
+
+#[test]
+fn detnet_pipeline_decodes() {
+    let graph = detector::detnet_graph();
+    let folded = random_folded(&graph, 6);
+    // detnet input is 64x128
+    let mut rng = Pcg::new(8);
+    let calib = Tensor::from_vec(
+        &[1, 64, 128, 3],
+        (0..64 * 128 * 3).map(|_| rng.normal()).collect(),
+    );
+    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+    let eng = IntEngine::new(&graph, &folded, &out.spec);
+    let x = Tensor::from_vec(
+        &[2, 64, 128, 3],
+        (0..2 * 64 * 128 * 3).map(|_| rng.normal()).collect(),
+    );
+    let head_int = eng.run(&x);
+    assert_eq!(head_int.shape.dims(), &[2, 8, 16, 8]);
+    let head = dfq::quant::scheme::dequantize_tensor(
+        &head_int,
+        out.spec.value_frac(&graph, "head"),
+    );
+    // decoding must not panic and must respect thresholds
+    let dets = detector::decode(&head, 0.99, 0.5, 0);
+    for d in &dets {
+        assert!(d.score >= 0.0 && d.score <= 1.0);
+    }
+}
+
+#[test]
+fn quant_spec_file_roundtrip() {
+    let graph = resnet::resnet_graph("resnet_s", 1, 10);
+    let folded = random_folded(&graph, 9);
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 10);
+    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+    let path = std::env::temp_dir().join("dfq_spec_roundtrip.json");
+    std::fs::write(&path, out.spec.to_json().dump()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let spec2 = QuantSpec::from_json(&dfq::util::json::Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(spec2.input_frac, out.spec.input_frac);
+    for (k, v) in &out.spec.modules {
+        assert_eq!(spec2.modules[k], *v);
+    }
+    // the round-tripped spec drives the engine identically
+    let x = dfq::data::dataset::synth_images(2, 32, 3, 11);
+    let a = IntEngine::new(&graph, &folded, &out.spec).run(&x);
+    let b = IntEngine::new(&graph, &folded, &spec2).run(&x);
+    assert_eq!(a.data, b.data);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bit_width_sweep_monotone_on_real_graph() {
+    let graph = resnet::resnet_graph("resnet_s", 1, 10);
+    let folded = random_folded(&graph, 12);
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 13);
+    let x = dfq::data::dataset::synth_images(4, 32, 3, 14);
+    let fp = FpEngine::new(&graph, &folded).run(&x);
+    let mut errs = Vec::new();
+    for bits in [8u32, 6, 4] {
+        let out = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() })
+            .calibrate(&graph, &folded, &calib);
+        let q = IntEngine::new(&graph, &folded, &out.spec).run_dequant(&x);
+        errs.push(mse(&q.data, &fp.data));
+    }
+    // Table-4 shape: error grows as precision drops
+    assert!(errs[0] < errs[2], "{errs:?}");
+}
+
+#[test]
+fn parallel_calibration_consistent_under_pool_sizes() {
+    let graph = resnet::resnet_graph("resnet_s", 1, 10);
+    let folded = random_folded(&graph, 15);
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 16);
+    let cfg = CalibConfig::default();
+    let base = JointCalibrator::new(cfg).calibrate(&graph, &folded, &calib);
+    for workers in [1usize, 2, 8] {
+        let pool = dfq::coordinator::pool::Pool::new(workers);
+        let par = dfq::coordinator::calib::calibrate_parallel(&pool, cfg, &graph, &folded, &calib);
+        for (k, v) in &base.spec.modules {
+            assert_eq!(par.spec.modules[k], *v, "workers={workers} module={k}");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Property tests over the graph layer: random fine-grained layer graphs
+//! through the fusion pass, shape inference, and BN folding invariants.
+
+use std::collections::HashMap;
+
+use dfq::graph::bn_fold::{fold_bn, BN_EPS};
+use dfq::graph::fuse::fuse;
+use dfq::graph::layers::{Layer, LayerGraph, LayerOp};
+use dfq::graph::ModuleKind;
+use dfq::prelude::*;
+use dfq::tensor::im2col::Padding;
+use dfq::tensor::ops;
+use dfq::util::rng::Pcg;
+
+/// Generate a random valid conv-chain layer graph with optional residual
+/// blocks — always inside the paper's pattern vocabulary.
+fn random_layer_graph(rng: &mut Pcg) -> LayerGraph {
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut prev = "input".to_string();
+    let mut cin = 3usize;
+    let n_units = rng.int_range(1, 5) as usize;
+    for u in 0..n_units {
+        let cout = [4usize, 8, 16][rng.int_range(0, 3) as usize];
+        let style = rng.int_range(0, 3);
+        match style {
+            0 => {
+                // conv (+bn) (+relu)
+                let name = format!("u{u}");
+                layers.push(Layer {
+                    name: name.clone(),
+                    op: LayerOp::Conv { kh: 3, kw: 3, cin, cout, stride: 1 },
+                    src: prev.clone(),
+                });
+                let mut cur = name.clone();
+                if rng.f32() < 0.8 {
+                    layers.push(Layer {
+                        name: format!("{name}.bn"),
+                        op: LayerOp::BatchNorm,
+                        src: cur.clone(),
+                    });
+                    cur = format!("{name}.bn");
+                } else {
+                    layers.push(Layer {
+                        name: format!("{name}.bias"),
+                        op: LayerOp::Bias,
+                        src: cur.clone(),
+                    });
+                    cur = format!("{name}.bias");
+                }
+                if rng.f32() < 0.7 {
+                    layers.push(Layer {
+                        name: format!("{name}.relu"),
+                        op: LayerOp::Relu,
+                        src: cur.clone(),
+                    });
+                    cur = format!("{name}.relu");
+                }
+                prev = cur;
+                cin = cout;
+            }
+            _ => {
+                // residual block: two convs + add (+relu), channel-preserving
+                let cout = cin;
+                let base = format!("u{u}");
+                layers.push(Layer {
+                    name: format!("{base}/c1"),
+                    op: LayerOp::Conv { kh: 3, kw: 3, cin, cout, stride: 1 },
+                    src: prev.clone(),
+                });
+                layers.push(Layer {
+                    name: format!("{base}/c1.bn"),
+                    op: LayerOp::BatchNorm,
+                    src: format!("{base}/c1"),
+                });
+                layers.push(Layer {
+                    name: format!("{base}/c1.relu"),
+                    op: LayerOp::Relu,
+                    src: format!("{base}/c1.bn"),
+                });
+                layers.push(Layer {
+                    name: format!("{base}/c2"),
+                    op: LayerOp::Conv { kh: 3, kw: 3, cin: cout, cout, stride: 1 },
+                    src: format!("{base}/c1.relu"),
+                });
+                layers.push(Layer {
+                    name: format!("{base}/c2.bn"),
+                    op: LayerOp::BatchNorm,
+                    src: format!("{base}/c2"),
+                });
+                layers.push(Layer {
+                    name: format!("{base}/add"),
+                    op: LayerOp::Add { rhs: prev.clone() },
+                    src: format!("{base}/c2.bn"),
+                });
+                let mut cur = format!("{base}/add");
+                if rng.f32() < 0.7 {
+                    layers.push(Layer {
+                        name: format!("{base}/out"),
+                        op: LayerOp::Relu,
+                        src: cur.clone(),
+                    });
+                    cur = format!("{base}/out");
+                }
+                prev = cur;
+            }
+        }
+    }
+    layers.push(Layer {
+        name: "gap".into(),
+        op: LayerOp::GlobalAvgPool,
+        src: prev,
+    });
+    layers.push(Layer {
+        name: "fc".into(),
+        op: LayerOp::Dense { cin, cout: 5 },
+        src: "gap".into(),
+    });
+    LayerGraph { name: "rand".into(), input_hwc: (8, 8, 3), layers }
+}
+
+#[test]
+fn prop_fusion_preserves_conv_count_and_validates() {
+    for seed in 0..60u64 {
+        let mut rng = Pcg::new(1000 + seed);
+        let lg = random_layer_graph(&mut rng);
+        lg.validate().unwrap();
+        let fused = fuse(&lg).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        fused.graph.validate().unwrap();
+        // every conv/dense survives as exactly one module
+        let conv_in = lg
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, LayerOp::Conv { .. } | LayerOp::Dense { .. }))
+            .count();
+        assert_eq!(fused.graph.weight_layer_count(), conv_in, "seed {seed}");
+        // fusion can only reduce quantization points
+        assert!(fused.fused_points <= fused.naive_points, "seed {seed}");
+        // no dangling residual references
+        let names: std::collections::HashSet<&str> = std::iter::once("input")
+            .chain(fused.graph.modules.iter().map(|m| m.name.as_str()))
+            .collect();
+        for m in &fused.graph.modules {
+            if let Some(r) = &m.res {
+                assert!(names.contains(r.as_str()), "seed {seed}: {r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shape_inference_consistent_with_execution() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg::new(2000 + seed);
+        let lg = random_layer_graph(&mut rng);
+        let fused = fuse(&lg).unwrap();
+        let graph = fused.graph;
+        // random folded weights
+        let mut folded = HashMap::new();
+        for m in graph.weight_modules() {
+            let shape: Vec<usize> = match &m.kind {
+                ModuleKind::Conv { kh, kw, cin, cout, .. } => vec![*kh, *kw, *cin, *cout],
+                ModuleKind::Dense { cin, cout } => vec![*cin, *cout],
+                ModuleKind::Gap => unreachable!(),
+            };
+            let n: usize = shape.iter().product();
+            let cout = *shape.last().unwrap();
+            folded.insert(
+                m.name.clone(),
+                dfq::graph::bn_fold::FoldedParams {
+                    w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, 0.2)).collect()),
+                    b: vec![0.0; cout],
+                },
+            );
+        }
+        let engine = dfq::engine::fp::FpEngine::new(&graph, &folded);
+        let x = Tensor::from_vec(&[2, 8, 8, 3], (0..384).map(|_| rng.normal()).collect());
+        let acts = engine.run_acts(&x);
+        let dims = graph.shapes();
+        for m in &graph.modules {
+            let t = &acts[&m.name];
+            let (h, w, c) = dims[&m.name];
+            let expect: usize = 2 * h * w * c;
+            assert_eq!(t.numel(), expect, "seed {seed} module {}", m.name);
+        }
+    }
+}
+
+#[test]
+fn prop_bn_fold_equals_unfolded_forward() {
+    // conv+BN(eval stats) == folded conv+bias, for random stats
+    for seed in 0..40u64 {
+        let mut rng = Pcg::new(3000 + seed);
+        let (cin, cout) = (rng.int_range(1, 4) as usize, rng.int_range(1, 5) as usize);
+        let graph = Graph {
+            name: "g".into(),
+            input_hwc: (5, 5, cin),
+            modules: vec![dfq::graph::UnifiedModule {
+                name: "c".into(),
+                kind: ModuleKind::Conv { kh: 3, kw: 3, cin, cout, stride: 1 },
+                src: "input".into(),
+                res: None,
+                relu: false,
+            }],
+        };
+        let n = 9 * cin * cout;
+        let w = Tensor::from_vec(
+            &[3, 3, cin, cout],
+            (0..n).map(|_| rng.normal_ms(0.0, 0.5)).collect(),
+        );
+        let mut params = HashMap::new();
+        params.insert("c/w".to_string(), w.clone());
+        let gamma: Vec<f32> = (0..cout).map(|_| rng.uniform(0.3, 1.8)).collect();
+        let beta: Vec<f32> = (0..cout).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+        let mean: Vec<f32> = (0..cout).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let var: Vec<f32> = (0..cout).map(|_| rng.uniform(0.2, 3.0)).collect();
+        params.insert("c/bn/gamma".into(), Tensor::from_vec(&[cout], gamma.clone()));
+        params.insert("c/bn/beta".into(), Tensor::from_vec(&[cout], beta.clone()));
+        params.insert("c/bn/mean".into(), Tensor::from_vec(&[cout], mean.clone()));
+        params.insert("c/bn/var".into(), Tensor::from_vec(&[cout], var.clone()));
+        let folded = fold_bn(&graph, &params).unwrap();
+        let x = Tensor::from_vec(
+            &[1, 5, 5, cin],
+            (0..25 * cin).map(|_| rng.normal()).collect(),
+        );
+        let y_folded = ops::conv2d(&x, &folded["c"].w, &folded["c"].b, 1, Padding::Same);
+        let y_raw = ops::conv2d(&x, &w, &vec![0.0; cout], 1, Padding::Same);
+        for (i, (yf, yr)) in y_folded.data.iter().zip(&y_raw.data).enumerate() {
+            let ch = i % cout;
+            let want = gamma[ch] * (yr - mean[ch]) / (var[ch] + BN_EPS).sqrt() + beta[ch];
+            assert!((yf - want).abs() < 1e-3, "seed {seed}: {yf} vs {want}");
+        }
+    }
+}

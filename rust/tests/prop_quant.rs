@@ -1,0 +1,306 @@
+//! Property-based tests over the quantization scheme, the integer
+//! engine and the dataflow pass — seeded Pcg sweeps standing in for
+//! proptest (absent from the offline registry). Each property runs a few
+//! hundred random cases and shrink-prints the failing seed.
+
+use std::collections::HashMap;
+
+use dfq::engine::fp::FpEngine;
+use dfq::engine::int::IntEngine;
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::graph::{ModuleKind, UnifiedModule};
+use dfq::prelude::*;
+use dfq::quant::algo1::{self, ModuleProblem, SearchConfig};
+use dfq::quant::params::ModuleShifts;
+use dfq::quant::scheme;
+use dfq::tensor::im2col::Padding;
+use dfq::tensor::{ops, ops_int};
+use dfq::util::rng::Pcg;
+
+/// Run `f` for many seeds, reporting the failing seed.
+fn forall(cases: u64, f: impl Fn(&mut Pcg)) {
+    for seed in 0..cases {
+        let mut rng = Pcg::new(seed * 2654435761 + 1);
+        f(&mut rng);
+    }
+}
+
+#[test]
+fn prop_quantize_error_bounded_or_saturated() {
+    // |r - Q(r)| <= 2^-N/2 whenever |r| is inside the representable
+    // range; outside it, Q saturates to the range edge.
+    forall(300, |rng| {
+        let n = rng.int_range(-4, 10) as i32;
+        let r = rng.normal_ms(0.0, 10.0);
+        let q = scheme::q(r, n, 8, false);
+        let step = scheme::exp2i(-n);
+        let max_code = 127.0 * step;
+        let min_code = -128.0 * step;
+        if r >= min_code - step / 2.0 && r <= max_code + step / 2.0 {
+            assert!((r - q).abs() <= step / 2.0 + step * 1e-4, "r={r} n={n} q={q}");
+        } else {
+            assert!(q == max_code || q == min_code, "saturation r={r} n={n} q={q}");
+        }
+    });
+}
+
+#[test]
+fn prop_shift_round_equals_float_round() {
+    forall(500, |rng| {
+        let v = rng.int_range(-(1 << 26), 1 << 26) as i32;
+        let s = rng.int_range(0, 16) as i32;
+        let got = scheme::shift_round(v, s);
+        let want = ((v as f64) / f64::powi(2.0, s) + 0.5).floor() as i32;
+        assert_eq!(got, want, "v={v} s={s}");
+    });
+}
+
+#[test]
+fn prop_requant_monotone_in_input() {
+    // requantization preserves order (monotone non-decreasing)
+    forall(200, |rng| {
+        let s = rng.int_range(0, 12) as i32;
+        let a = rng.int_range(-(1 << 20), 1 << 20) as i32;
+        let b = rng.int_range(-(1 << 20), 1 << 20) as i32;
+        let (lo, hi) = (a.min(b), a.max(b));
+        let qa = scheme::requantize_val(lo, s, 8, false);
+        let qb = scheme::requantize_val(hi, s, 8, false);
+        assert!(qa <= qb, "lo={lo} hi={hi} s={s}");
+    });
+}
+
+#[test]
+fn prop_int_conv_equals_fp_conv_on_integer_inputs() {
+    // for integer-valued inputs within exact-f32 range, the int engine's
+    // conv accumulator equals the f32 conv
+    forall(40, |rng| {
+        let (h, w, cin, cout) = (
+            rng.int_range(3, 9) as usize,
+            rng.int_range(3, 9) as usize,
+            rng.int_range(1, 4) as usize,
+            rng.int_range(1, 5) as usize,
+        );
+        let k = if rng.f32() < 0.5 { 1 } else { 3 };
+        let stride = if rng.f32() < 0.5 { 1 } else { 2 };
+        let xi = TensorI32::from_vec(
+            &[1, h, w, cin],
+            (0..h * w * cin).map(|_| rng.int_range(-128, 128) as i32).collect(),
+        );
+        let wi = TensorI32::from_vec(
+            &[k, k, cin, cout],
+            (0..k * k * cin * cout).map(|_| rng.int_range(-128, 128) as i32).collect(),
+        );
+        let acc = ops_int::conv2d_acc(&xi, &wi, stride, Padding::Same);
+        let xf = xi.map_f32(|v| v as f32);
+        let wf = wi.map_f32(|v| v as f32);
+        let accf = ops::conv2d(&xf, &wf, &vec![0.0; cout], stride, Padding::Same);
+        for (a, b) in acc.data.iter().zip(&accf.data) {
+            assert_eq!(*a as f32, *b, "int/fp conv divergence");
+        }
+    });
+}
+
+#[test]
+fn prop_algo1_result_is_grid_optimal() {
+    // the returned (N_w, N_b, N_o) must beat every candidate on a
+    // re-evaluation with an independent implementation of the objective
+    forall(8, |rng| {
+        let m = UnifiedModule {
+            name: "c".into(),
+            kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 3, stride: 1 },
+            src: "input".into(),
+            res: None,
+            relu: rng.f32() < 0.5,
+        };
+        let x = Tensor::from_vec(&[1, 5, 5, 2], (0..50).map(|_| rng.normal()).collect());
+        let x_int = scheme::quantize_tensor(&x, 5, 8, false);
+        let w = Tensor::from_vec(&[3, 3, 2, 3], (0..54).map(|_| rng.normal_ms(0.0, 0.4)).collect());
+        let b: Vec<f32> = (0..3).map(|_| rng.normal_ms(0.0, 0.2)).collect();
+        let xq = scheme::dequantize_tensor(&x_int, 5);
+        let mut target = ops::conv2d(&xq, &w, &b, 1, Padding::Same);
+        if m.relu {
+            ops::relu_inplace(&mut target);
+        }
+        let p = ModuleProblem {
+            module: &m,
+            x_int: &x_int,
+            n_x: 5,
+            w: &w,
+            b: &b,
+            res: None,
+            target: &target,
+        };
+        let cfg = SearchConfig { n_bits: 8, tau: 2 };
+        let best = algo1::search(&p, cfg);
+
+        // independent objective evaluation
+        let eval = |sh: ModuleShifts| -> f64 {
+            let wq = scheme::quantize_tensor(&w, sh.n_w, 8, false);
+            let mut acc = ops_int::conv2d_acc(&x_int, &wq, 1, Padding::Same);
+            for chunk in acc.data.chunks_exact_mut(3) {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    let bq = scheme::quantize_val(b[j], sh.n_b, 8, false);
+                    *v += scheme::align(bq, sh.bias_shift(5));
+                }
+            }
+            let out = scheme::requantize_tensor(&acc, sh.out_shift(5), 8, m.relu);
+            let deq = scheme::dequantize_tensor(&out, sh.n_o);
+            dfq::util::mathutil::l2_err(&deq.data, &target.data)
+        };
+        let best_err = eval(best.shifts);
+        assert!((best_err - best.error).abs() < 1e-6 * (1.0 + best_err));
+        for n_w in algo1::frac_window(w.max_abs(), 8, 2) {
+            for n_b in algo1::frac_window(
+                b.iter().fold(0.0f32, |m, &x| m.max(x.abs())),
+                8,
+                2,
+            ) {
+                for n_o in algo1::frac_window(target.max_abs(), 8, 2) {
+                    let e = eval(ModuleShifts { n_w, n_b, n_o });
+                    assert!(
+                        best_err <= e + 1e-9,
+                        "search missed better candidate ({n_w},{n_b},{n_o}): {e} < {best_err}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_engine_output_in_range_for_any_spec() {
+    // whatever (reasonable) shifts are deployed, outputs stay in the
+    // n-bit clamp range — no hidden overflow escapes the requantizer
+    forall(30, |rng| {
+        let graph = Graph {
+            name: "p".into(),
+            input_hwc: (6, 6, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 3, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 3, stride: 1 },
+                    src: "c0".into(),
+                    res: Some("c0".into()),
+                    relu: false,
+                },
+            ],
+        };
+        let mut folded = HashMap::new();
+        for m in graph.weight_modules() {
+            if let ModuleKind::Conv { kh, kw, cin, cout, .. } = m.kind {
+                let n = kh * kw * cin * cout;
+                folded.insert(
+                    m.name.clone(),
+                    FoldedParams {
+                        w: Tensor::from_vec(
+                            &[kh, kw, cin, cout],
+                            (0..n).map(|_| rng.normal_ms(0.0, 0.5)).collect(),
+                        ),
+                        b: (0..cout).map(|_| rng.normal_ms(0.0, 0.3)).collect(),
+                    },
+                );
+            }
+        }
+        let bits = [4u32, 6, 8][rng.int_range(0, 3) as usize];
+        let mut spec = QuantSpec::new(bits);
+        spec.input_frac = rng.int_range(2, 7) as i32;
+        for name in ["c0", "c1"] {
+            spec.modules.insert(
+                name.into(),
+                ModuleShifts {
+                    n_w: rng.int_range(3, 9) as i32,
+                    n_b: rng.int_range(3, 9) as i32,
+                    n_o: rng.int_range(2, 7) as i32,
+                },
+            );
+        }
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let x = Tensor::from_vec(&[1, 6, 6, 2], (0..72).map(|_| rng.normal()).collect());
+        let acts = eng.run_acts(&eng.quantize_input(&x));
+        let (qmin_u, qmax_u) = scheme::qrange(bits, true);
+        let (qmin_s, qmax_s) = scheme::qrange(bits, false);
+        for &v in &acts["c0"].data {
+            assert!(v >= qmin_u && v <= qmax_u);
+        }
+        for &v in &acts["c1"].data {
+            assert!(v >= qmin_s && v <= qmax_s);
+        }
+    });
+}
+
+#[test]
+fn prop_fused_never_worse_than_unfused_on_average() {
+    // the paper's hypothesis, tested across random models: averaged over
+    // seeds, the fused dataflow's output error is <= the unfused one's
+    let mut fused_total = 0.0f64;
+    let mut unfused_total = 0.0f64;
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(900 + seed);
+        let graph = Graph {
+            name: "p".into(),
+            input_hwc: (8, 8, 3),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 4, cout: 4, stride: 1 },
+                    src: "c0".into(),
+                    res: Some("c0".into()),
+                    relu: true,
+                },
+            ],
+        };
+        let mut folded = HashMap::new();
+        for m in graph.weight_modules() {
+            if let ModuleKind::Conv { kh, kw, cin, cout, .. } = m.kind {
+                let n = kh * kw * cin * cout;
+                let std = (2.0 / (kh * kw * cin) as f32).sqrt();
+                folded.insert(
+                    m.name.clone(),
+                    FoldedParams {
+                        w: Tensor::from_vec(
+                            &[kh, kw, cin, cout],
+                            (0..n).map(|_| rng.normal_ms(0.0, std)).collect(),
+                        ),
+                        b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+                    },
+                );
+            }
+        }
+        let calib = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
+        let cal = dfq::quant::joint::JointCalibrator::new(Default::default());
+        let out = cal.calibrate(&graph, &folded, &calib);
+        let fp = FpEngine::new(&graph, &folded).run_acts(&calib);
+        let eng = IntEngine::new(&graph, &folded, &out.spec);
+        let fused = dfq::util::mathutil::mse(
+            &eng.run_dequant(&calib).data,
+            &fp["c1"].data,
+        );
+        let pre = cal.ablation_pre_fracs(&graph, &folded, &calib, &out.spec);
+        let mut eng2 = IntEngine::new(&graph, &folded, &out.spec);
+        eng2.pre_frac = Some(pre);
+        let unfused = dfq::util::mathutil::mse(
+            &eng2.run_dequant(&calib).data,
+            &fp["c1"].data,
+        );
+        fused_total += fused;
+        unfused_total += unfused;
+    }
+    assert!(
+        fused_total <= unfused_total + 1e-12,
+        "fused {fused_total} vs unfused {unfused_total}"
+    );
+}
