@@ -1,18 +1,21 @@
 //! **The headline end-to-end driver** (EXPERIMENTS.md §E2E): the full
-//! Table-1 pipeline on real trained models —
+//! Table-1 pipeline on real trained models, through the unified
+//! `Session` API —
 //!
-//!   load trained ResNet-S/M/L from artifacts → fold BN → joint-calibrate
-//!   on ONE image (Algorithm 1) → deploy on the integer-only engine →
-//!   evaluate FP vs 8-bit top-1 on the SynthImageNet validation split,
-//!   plus both scaling-factor baselines.
+//!   `Session::from_artifacts` (load + fold BN) → `calibrate` on ONE
+//!   image (Algorithm 1) → `engine(EngineKind::{Fp, Int})` → top-1 on
+//!   the SynthImageNet validation split, alongside both scaling-factor
+//!   baselines — plus the calibration-cost table and the dataflow
+//!   ablation from the experiment drivers.
 //!
 //! Requires `make artifacts`.
 //!
 //!     cargo run --release --example imagenet_resnet [eval_n]
 
-use dfq::coordinator::pool::Pool;
 use dfq::prelude::*;
+use dfq::quant::baselines::{kl::KlQuant, minmax::MinMaxQuant};
 use dfq::report::experiments::{self, EvalOptions};
+use dfq::report::table::{pct, Table};
 
 fn main() {
     let eval_n: usize = std::env::args()
@@ -21,11 +24,41 @@ fn main() {
         .unwrap_or(1000);
     let art = Artifacts::open("artifacts").expect("run `make artifacts` first");
     let opt = EvalOptions { eval_n, ..Default::default() };
-    let pool = Pool::auto();
+    let ds = art.classification_set("synthimagenet_val").expect("dataset");
+    let calib = art.calibration_images(1).expect("calibration image");
 
-    println!("== Table 1 pipeline: FP vs 8-bit (eval_n = {eval_n}) ==\n");
-    let t = experiments::table1(&art, &pool, opt).expect("table1");
-    println!("{}", t.render());
+    println!("== Table 1 pipeline through Session (eval_n = {eval_n}) ==\n");
+    let mut table = Table::new(
+        "Table 1: ResNet on SynthImageNet — FP vs 8-bit methods (top-1, Session API)",
+        &["Model", "FP", "TensorRT-like(KL)", "IOA-like(minmax)", "Ours(bit-shift)", "calib (s)"],
+    );
+    for name in ["resnet_s", "resnet_m", "resnet_l"] {
+        // the canonical pipeline: session -> calibrated -> engines
+        let session = Session::from_artifacts(&art, name).expect("open session");
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &calib)
+            .expect("joint calibration");
+        let fp = experiments::eval_engine_top1(&*session.fp_engine(), &ds, opt)
+            .expect("fp eval");
+        let int = calibrated.engine(EngineKind::Int).expect("int engine");
+        let q = experiments::eval_engine_top1(&*int, &ds, opt).expect("int eval");
+        // the scaling-factor baselines stay on the low-level fake-quant
+        // surface (they simulate quantizers in f32, not deployments)
+        let bundle = art.load_model(name).expect("bundle for baselines");
+        let mut kl = KlQuant::new(8, 8);
+        let a_kl = experiments::eval_baseline(&bundle, &mut kl, &calib, &ds, opt);
+        let mut mm = MinMaxQuant::new(8, 8);
+        let a_mm = experiments::eval_baseline(&bundle, &mut mm, &calib, &ds, opt);
+        table.row(vec![
+            name.into(),
+            pct(fp),
+            pct(a_kl),
+            pct(a_mm),
+            pct(q),
+            format!("{:.2}", calibrated.seconds),
+        ]);
+    }
+    println!("{}", table.render());
 
     println!("== calibration cost (Table 2) ==\n");
     let t = experiments::table2(&art, opt).expect("table2");
@@ -35,7 +68,6 @@ fn main() {
     let t = experiments::dataflow_ablation(&art, "resnet_s", opt).expect("ablation");
     println!("{}", t.render());
 
-    // per-model drop summary
     println!("Paper shape check: 8-bit drop should be small (paper: ~1.6-1.8pp on ImageNet),");
     println!("and ours should be competitive with the scaling-factor baselines.");
 }

@@ -1,66 +1,72 @@
-//! Quickstart: the whole pipeline on a small model built in-process —
-//! no artifacts needed. Builds a ResNet-S graph with random "trained"
-//! weights, runs the dataflow analysis, joint-calibrates with Algorithm
-//! 1 on one image, and compares FP vs integer-only outputs.
+//! Quickstart: the whole pipeline through the unified `Session` API on
+//! a small model built in-process — no artifacts needed. Builds a
+//! ResNet-S *layer* graph with random "trained" weights, lets the
+//! session run the dataflow analysis + BN folding, joint-calibrates with
+//! Algorithm 1 on one image, and compares the FP and integer-only
+//! engines.
 //!
 //!     cargo run --release --example quickstart
 
 use std::collections::HashMap;
 
-use dfq::engine::fp::FpEngine;
-use dfq::engine::int::IntEngine;
-use dfq::graph::bn_fold::FoldedParams;
-use dfq::graph::fuse;
-use dfq::graph::ModuleKind;
+use dfq::graph::layers::LayerOp;
 use dfq::models::resnet;
 use dfq::prelude::*;
-use dfq::quant::joint::{CalibConfig, JointCalibrator};
 use dfq::util::mathutil::mse;
 
 fn main() {
-    // 1. the model, in the fine-grained form a framework would export
+    // 1. the model, in the fine-grained form a framework would export,
+    //    with random He-init parameters standing in for a trained model
+    //    (plain `{name}/w` + `{name}/b` keys — the raw export contract)
     let layers = resnet::resnet_layers("resnet_s", 1, 10);
-    let fused = fuse::fuse(&layers).expect("dataflow analysis");
-    println!("== dataflow restructuring (paper Fig. 1) ==");
-    println!("{}\n", fuse::quant_point_report(&fused));
-    let graph = fused.graph;
-
-    // 2. random He-init weights standing in for a trained model
     let mut rng = Pcg::new(7);
-    let mut folded: HashMap<String, FoldedParams> = HashMap::new();
-    for m in graph.weight_modules() {
-        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
-            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+    let mut params: HashMap<String, Tensor> = HashMap::new();
+    for l in &layers.layers {
+        let (shape, fan_in): (Vec<usize>, usize) = match &l.op {
+            LayerOp::Conv { kh, kw, cin, cout, .. } => {
                 (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
             }
-            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
-            ModuleKind::Gap => unreachable!(),
+            LayerOp::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            _ => continue,
         };
         let std = (2.0 / fan_in as f32).sqrt();
         let n: usize = shape.iter().product();
         let cout = *shape.last().unwrap();
-        folded.insert(
-            m.name.clone(),
-            FoldedParams {
-                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
-                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.05)).collect(),
-            },
+        params.insert(
+            format!("{}/w", l.name),
+            Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+        );
+        params.insert(
+            format!("{}/b", l.name),
+            Tensor::from_vec(&[cout], (0..cout).map(|_| rng.normal_ms(0.0, 0.05)).collect()),
         );
     }
 
+    // 2. one Session call runs dataflow fusion + BN folding internally
+    let session = Session::from_layers(&layers, &params).expect("build session");
+    println!("== dataflow restructuring (paper Fig. 1) ==");
+    println!("{}\n", session.fusion_report().expect("built from layers"));
+
     // 3. one calibration image (paper §2.1) + Algorithm 1 per module
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 42);
-    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+    let calibrated = session
+        .calibrate(CalibConfig::default(), &calib)
+        .expect("joint calibration");
     println!("== joint calibration (Algorithm 1, tau=4, 1 image) ==");
-    println!("calibrated {} modules in {:.2}s", out.spec.modules.len(), out.seconds);
-    let (lo, med, hi) = out.stats.shift_summary();
+    println!(
+        "calibrated {} modules in {:.2}s",
+        calibrated.spec().modules.len(),
+        calibrated.seconds
+    );
+    let (lo, med, hi) = calibrated.stats.shift_summary();
     println!("deployed shift range [{lo}, {hi}], median {med} (paper Fig 2b: [1, 10])\n");
 
-    // 4. FP oracle vs the integer-only engine on fresh images
+    // 4. FP oracle vs the integer-only engine on fresh images — both
+    //    are the same unified `Engine` surface
     let x = dfq::data::dataset::synth_images(4, 32, 3, 43);
-    let fp_logits = FpEngine::new(&graph, &folded).run(&x);
-    let eng = IntEngine::new(&graph, &folded, &out.spec);
-    let q_logits = eng.run_dequant(&x);
+    let fp_logits = session.fp_engine().run(&x).expect("fp engine");
+    let int_engine = calibrated.engine(EngineKind::Int).expect("int engine");
+    let q_logits = int_engine.run(&x).expect("int engine run");
     println!("== FP vs integer-only inference ==");
     println!("logit MSE: {:.6}", mse(&q_logits.data, &fp_logits.data));
     for i in 0..4 {

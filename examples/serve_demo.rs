@@ -1,61 +1,20 @@
 //! Serving demo: the batching inference service running the calibrated
-//! quantized ResNet-S through the **PJRT-compiled AOT artifact** on the
-//! request path — the deployment story end to end, python nowhere in
-//! sight. Falls back to the pure-rust integer engine with `int` as the
-//! first argument.
+//! quantized ResNet-S — the deployment story end to end, python nowhere
+//! in sight. The whole wiring is the `Session` pipeline: both the
+//! PJRT-compiled AOT artifact and the pure-rust integer engine come out
+//! of `calibrated.engine(kind)` as the same unified `Engine`, and every
+//! engine is a serving `Backend` via the blanket impl — zero glue.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` (and the `pjrt` cargo feature for the
+//! `pjrt` mode).
 //!
-//!     cargo run --release --example serve_demo [pjrt|int] [n_requests]
+//!     cargo run --release --example serve_demo [pjrt|int|fp] [n_requests]
 
 use std::sync::Arc;
 
-use dfq::coordinator::serve::{Backend, InferenceService, ServeConfig};
-use dfq::data::artifacts::ModelBundle;
-use dfq::engine::int::IntEngine;
+use dfq::coordinator::serve::{InferenceService, ServeConfig};
 use dfq::prelude::*;
-use dfq::report::experiments;
-use dfq::runtime::{ArgValue, PjrtWorker};
 use dfq::util::timer::Timer;
-
-struct PjrtBackend {
-    worker: PjrtWorker,
-    path: std::path::PathBuf,
-    tail: Vec<ArgValue>,
-    bundle: ModelBundle,
-    spec: QuantSpec,
-    batch: usize,
-}
-
-impl Backend for PjrtBackend {
-    fn batch_size(&self) -> usize {
-        self.batch
-    }
-
-    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
-        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
-        let mut argv = vec![ArgValue::I32(eng.quantize_input(batch))];
-        argv.extend(self.tail.iter().cloned());
-        let out = self.worker.run(&self.path, argv)?;
-        Ok(out[0].as_i32()?.map_f32(|v| v as f32))
-    }
-}
-
-struct IntBackend {
-    bundle: ModelBundle,
-    spec: QuantSpec,
-}
-
-impl Backend for IntBackend {
-    fn batch_size(&self) -> usize {
-        16
-    }
-
-    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
-        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
-        Ok(eng.run(batch).map_f32(|v| v as f32))
-    }
-}
 
 fn main() {
     let mode = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
@@ -63,47 +22,30 @@ fn main() {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(64);
+    let kind = EngineKind::parse(&mode).expect("mode must be fp|int|pjrt");
     let model = "resnet_s";
-    let art = Artifacts::open("artifacts").expect("run `make artifacts` first");
-    let bundle = art.load_model(model).unwrap();
-    let calib = art.calibration_images(1).unwrap();
-    let out = experiments::calibrate_ours(&bundle, &calib, 8);
-    println!("calibrated {model} in {:.2}s; starting {mode} backend", out.seconds);
 
-    let backend: Arc<dyn Backend> = if mode == "pjrt" {
-        let worker = PjrtWorker::start().expect("pjrt");
-        let path = art.hlo_path(model, "q_logits").unwrap();
-        let t = Timer::start();
-        worker.warm(&path).expect("compile artifact");
+    let art = Artifacts::open("artifacts").expect("run `make artifacts` first");
+    let session = Session::from_artifacts(&art, model).expect("open session");
+    let calib = art.calibration_images(1).unwrap();
+    let calibrated = session
+        .calibrate(CalibConfig::default(), &calib)
+        .expect("joint calibration");
+    println!(
+        "calibrated {model} in {:.2}s; starting {kind} backend",
+        calibrated.seconds
+    );
+
+    // one line from calibrated model to servable backend — works for
+    // the integer engine AND the PJRT runtime identically
+    let t = Timer::start();
+    let engine = calibrated.engine(kind).expect("build engine");
+    if kind == EngineKind::Pjrt {
         println!("compiled q_logits artifact in {:.2}s", t.secs());
-        let batch = art.artifact_batch(model, "q_logits").unwrap();
-        let eng = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
-        let mut tail = Vec::new();
-        for m in bundle.graph.weight_modules() {
-            let qp = &eng.qparams()[&m.name];
-            tail.push(ArgValue::I32(qp.w.clone()));
-            tail.push(ArgValue::I32(dfq::tensor::TensorI32::from_vec(
-                &[qp.b.len()],
-                qp.b.clone(),
-            )));
-            tail.push(ArgValue::I32Vec(
-                out.spec.shift_vector(&bundle.graph, &m.name).to_vec(),
-            ));
-        }
-        Arc::new(PjrtBackend {
-            worker,
-            path,
-            tail,
-            bundle: art.load_model(model).unwrap(),
-            spec: out.spec.clone(),
-            batch,
-        })
-    } else {
-        Arc::new(IntBackend { bundle: art.load_model(model).unwrap(), spec: out.spec.clone() })
-    };
+    }
+    let svc = Arc::new(InferenceService::start(engine, ServeConfig::default()));
 
     let ds = art.classification_set("synthimagenet_val").unwrap();
-    let svc = Arc::new(InferenceService::start(backend, ServeConfig::default()));
     let t = Timer::start();
     let mut handles = Vec::new();
     for i in 0..n_req {

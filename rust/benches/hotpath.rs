@@ -13,13 +13,10 @@
 
 use std::collections::HashMap;
 
-use dfq::engine::int::IntEngine;
 use dfq::graph::bn_fold::FoldedParams;
-use dfq::graph::ModuleKind;
 use dfq::models::resnet;
 use dfq::prelude::*;
 use dfq::quant::algo1::{self, ModuleProblem, SearchConfig};
-use dfq::quant::joint::{CalibConfig, JointCalibrator};
 use dfq::quant::scheme;
 use dfq::tensor::im2col::{im2col, Padding};
 use dfq::tensor::{ops_int, TensorI32};
@@ -108,9 +105,13 @@ fn main() {
         );
     }
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 1);
-    let spec = JointCalibrator::new(CalibConfig::default())
-        .calibrate(&graph, &folded, &calib)
-        .spec;
+    // the deployment path under test is the unified Session pipeline
+    let session =
+        Session::from_graph(graph.clone(), folded.clone()).expect("session");
+    let calibrated = session
+        .calibrate(CalibConfig::default(), &calib)
+        .expect("joint calibration");
+    let spec = calibrated.spec().clone();
     let eng = IntEngine::new(&graph, &folded, &spec);
     let xb = dfq::data::dataset::synth_images(8, 32, 3, 2);
     let macs = graph.total_macs() as f64 * 8.0;
@@ -123,6 +124,14 @@ fn main() {
         fmt_secs(st.median() / 8.0),
         8.0 / st.median()
     );
+
+    // --- the same e2e path through the Engine abstraction (measures
+    //     the session-surface overhead: per-batch requantize + dequant) ---
+    let engine = calibrated.engine(EngineKind::Int).expect("int engine");
+    let st = bench(1, 10, || {
+        std::hint::black_box(engine.run(&xb).expect("engine run"));
+    });
+    report("resnet_s int8 e2e via Engine (batch 8)", macs, "GMAC/s", &st);
 
     // --- Algorithm-1 single-module search (calibration inner loop) ---
     let module = graph.module("s0b0/c1").unwrap();

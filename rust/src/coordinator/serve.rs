@@ -1,14 +1,19 @@
 //! The batching inference service — the deployment request loop. Clients
 //! submit single images over a channel; a collector thread groups them
 //! into batches (up to the backend's batch size, bounded by a wait
-//! budget), runs the backend (PJRT executable or the integer engine) and
-//! fans responses back. Latency percentiles are tracked for the serve
-//! demo / perf pass.
+//! budget), runs the backend and fans responses back — including the
+//! error case: one failed batch reports to **every** waiting client.
+//! Latency percentiles are tracked for the serve demo / perf pass.
+//!
+//! Any [`crate::session::Engine`] is a [`Backend`] via a blanket impl,
+//! so `InferenceService::start(calibrated.engine(kind)?, cfg)` is the
+//! whole deployment story.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::error::DfqError;
 use crate::tensor::Tensor;
 
 /// Something that can run a fixed-size batch of normalised images and
@@ -17,7 +22,7 @@ pub trait Backend: Send + Sync {
     /// the batch size the backend expects (requests are padded to it)
     fn batch_size(&self) -> usize;
     /// run a full batch `(B, H, W, C)` -> `(B, out_dim)`
-    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String>;
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError>;
 }
 
 /// Service configuration.
@@ -35,7 +40,7 @@ impl Default for ServeConfig {
 
 struct Request {
     image: Tensor, // (1, H, W, C)
-    resp: Sender<Result<Vec<f32>, String>>,
+    resp: Sender<Result<Vec<f32>, DfqError>>,
     submitted: Instant,
 }
 
@@ -72,8 +77,14 @@ pub struct InferenceService {
 }
 
 impl InferenceService {
-    /// Start the collector thread over a backend.
-    pub fn start(backend: Arc<dyn Backend>, cfg: ServeConfig) -> InferenceService {
+    /// Start the collector thread over a backend. Accepts any
+    /// `Arc<impl Backend>` — including `Arc<dyn Engine>` handles from
+    /// [`crate::session::CalibratedModel::engine`], which are backends
+    /// through the blanket impl.
+    pub fn start<B>(backend: Arc<B>, cfg: ServeConfig) -> InferenceService
+    where
+        B: Backend + ?Sized + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let m2 = metrics.clone();
@@ -83,14 +94,15 @@ impl InferenceService {
 
     /// Submit one image (`(1, H, W, C)` normalised) and wait for its
     /// output row.
-    pub fn infer(&self, image: Tensor) -> Result<Vec<f32>, String> {
+    pub fn infer(&self, image: Tensor) -> Result<Vec<f32>, DfqError> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .as_ref()
             .expect("service running")
             .send(Request { image, resp: rtx, submitted: Instant::now() })
-            .map_err(|_| "service stopped".to_string())?;
-        rrx.recv().map_err(|_| "service dropped request".to_string())?
+            .map_err(|_| DfqError::serve("service stopped"))?;
+        rrx.recv()
+            .map_err(|_| DfqError::serve("service dropped request"))?
     }
 
     /// Snapshot the metrics.
@@ -118,9 +130,9 @@ impl Drop for InferenceService {
     }
 }
 
-fn collector(
+fn collector<B: Backend + ?Sized>(
     rx: Receiver<Request>,
-    backend: Arc<dyn Backend>,
+    backend: Arc<B>,
     cfg: ServeConfig,
     metrics: Arc<Mutex<ServeMetrics>>,
 ) {
@@ -144,13 +156,13 @@ fn collector(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        run_batch(&pending, backend.as_ref(), bsz, &metrics);
+        run_batch(&pending, &*backend, bsz, &metrics);
     }
 }
 
-fn run_batch(
+fn run_batch<B: Backend + ?Sized>(
     pending: &[Request],
-    backend: &dyn Backend,
+    backend: &B,
     bsz: usize,
     metrics: &Arc<Mutex<ServeMetrics>>,
 ) {
@@ -176,6 +188,7 @@ fn run_batch(
             }
         }
         Err(e) => {
+            // fan the one batch failure out to every waiter
             for r in pending {
                 r.resp.send(Err(e.clone())).ok();
             }
@@ -197,7 +210,7 @@ mod tests {
             self.batch
         }
 
-        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
             let b = batch.shape.dim(0);
             let per = batch.numel() / b;
             let mut out = Vec::with_capacity(b);
@@ -258,5 +271,112 @@ mod tests {
         svc.infer(img(1.0)).unwrap();
         let m = svc.shutdown();
         assert_eq!(m.completed, 1);
+    }
+
+    /// A backend that records the raw batches it receives (to observe
+    /// padding) while summing rows like [`SumBackend`].
+    struct PadProbe {
+        batch: usize,
+        seen_rows: Arc<Mutex<Vec<usize>>>,
+        seen_tail: Arc<Mutex<Vec<f32>>>,
+    }
+
+    impl Backend for PadProbe {
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            let b = batch.shape.dim(0);
+            let per = batch.numel() / b;
+            self.seen_rows.lock().unwrap().push(b);
+            self.seen_tail
+                .lock()
+                .unwrap()
+                .extend_from_slice(&batch.data[(b - 1) * per..]);
+            let mut out = Vec::with_capacity(b);
+            for i in 0..b {
+                out.push(batch.data[i * per..(i + 1) * per].iter().sum::<f32>());
+            }
+            Ok(Tensor::from_vec(&[b, 1], out))
+        }
+    }
+
+    #[test]
+    fn partial_batch_padded_to_batch_size_with_zeros() {
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let tail = Arc::new(Mutex::new(Vec::new()));
+        let svc = InferenceService::start(
+            Arc::new(PadProbe {
+                batch: 4,
+                seen_rows: rows.clone(),
+                seen_tail: tail.clone(),
+            }),
+            ServeConfig { max_wait: Duration::from_millis(1) },
+        );
+        // one request only: the backend must still see a full batch
+        let out = svc.infer(img(2.0)).unwrap();
+        assert_eq!(out, vec![8.0]);
+        svc.shutdown();
+        assert_eq!(rows.lock().unwrap().as_slice(), &[4]);
+        // the padded tail rows are zero-filled
+        assert!(tail.lock().unwrap().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn max_wait_flushes_partial_batch() {
+        // batch 8 can never fill from 3 requests; the wait budget must
+        // flush them anyway
+        let svc = Arc::new(InferenceService::start(
+            Arc::new(SumBackend { batch: 8 }),
+            ServeConfig { max_wait: Duration::from_millis(10) },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            let s = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                s.infer(img(i as f32)).unwrap()[0]
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 3);
+        assert!(m.batches >= 1);
+        assert!(m.mean_occupancy() <= 3.0);
+    }
+
+    /// A backend whose every batch fails.
+    struct FailBackend;
+
+    impl Backend for FailBackend {
+        fn batch_size(&self) -> usize {
+            4
+        }
+
+        fn run_batch(&self, _batch: &Tensor) -> Result<Tensor, DfqError> {
+            Err(DfqError::runtime("boom"))
+        }
+    }
+
+    #[test]
+    fn backend_error_fans_out_to_all_waiters() {
+        let svc = Arc::new(InferenceService::start(
+            Arc::new(FailBackend),
+            ServeConfig { max_wait: Duration::from_millis(20) },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let s = svc.clone();
+            handles.push(std::thread::spawn(move || s.infer(img(i as f32))));
+        }
+        for h in handles {
+            let err = h.join().unwrap().unwrap_err();
+            assert!(matches!(err, DfqError::Runtime(_)), "{err}");
+            assert!(err.to_string().contains("boom"));
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 0, "failed requests must not count as completed");
     }
 }

@@ -6,6 +6,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use crate::error::DfqError;
 use crate::graph::bn_fold::{fold_bn, FoldedParams};
 use crate::graph::Graph;
 use crate::tensor::Tensor;
@@ -32,12 +33,14 @@ pub struct ModelBundle {
 
 impl Artifacts {
     /// Open `root` (usually `artifacts/`) and parse the manifest.
-    pub fn open(root: impl AsRef<Path>) -> Result<Artifacts, String> {
+    pub fn open(root: impl AsRef<Path>) -> Result<Artifacts, DfqError> {
         let root = root.as_ref().to_path_buf();
         let mpath = root.join("manifest.json");
-        let text = std::fs::read_to_string(&mpath)
-            .map_err(|e| format!("read {}: {e} (run `make artifacts`)", mpath.display()))?;
-        let manifest = Json::parse(&text).map_err(|e| format!("manifest: {e}"))?;
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            DfqError::io(format!("read {} (run `make artifacts`)", mpath.display()), &e)
+        })?;
+        let manifest =
+            Json::parse(&text).map_err(|e| DfqError::manifest(format!("manifest: {e}")))?;
         Ok(Artifacts { root, manifest })
     }
 
@@ -61,15 +64,15 @@ impl Artifacts {
     }
 
     /// The manifest entry for one model.
-    pub fn model_entry(&self, name: &str) -> Result<&Json, String> {
+    pub fn model_entry(&self, name: &str) -> Result<&Json, DfqError> {
         self.manifest
             .req("models")?
             .get(name)
-            .ok_or_else(|| format!("model '{name}' not in manifest"))
+            .ok_or_else(|| DfqError::manifest(format!("model '{name}' not in manifest")))
     }
 
     /// Load a model: graph from the manifest spec + weights + folding.
-    pub fn load_model(&self, name: &str) -> Result<ModelBundle, String> {
+    pub fn load_model(&self, name: &str) -> Result<ModelBundle, DfqError> {
         let entry = self.model_entry(name)?;
         let graph = Graph::from_manifest_spec(name, entry.req("spec")?)?;
         let wrel = entry.req("weights")?.as_str().ok_or("weights path")?;
@@ -80,7 +83,7 @@ impl Artifacts {
 
     /// Absolute path of a model's HLO artifact of a given kind
     /// (`fp_logits`, `fp_acts`, `q_logits`).
-    pub fn hlo_path(&self, model: &str, kind: &str) -> Result<PathBuf, String> {
+    pub fn hlo_path(&self, model: &str, kind: &str) -> Result<PathBuf, DfqError> {
         let entry = self.model_entry(model)?;
         let rel = entry
             .req("artifacts")?
@@ -92,17 +95,17 @@ impl Artifacts {
     }
 
     /// The batch size an eval artifact was lowered with.
-    pub fn artifact_batch(&self, model: &str, kind: &str) -> Result<usize, String> {
+    pub fn artifact_batch(&self, model: &str, kind: &str) -> Result<usize, DfqError> {
         self.model_entry(model)?
             .req("artifacts")?
             .req(kind)?
             .req("batch")?
             .as_usize()
-            .ok_or_else(|| "batch".to_string())
+            .ok_or_else(|| DfqError::manifest("batch"))
     }
 
     /// Load a named dataset split.
-    pub fn classification_set(&self, key: &str) -> Result<ClassificationSet, String> {
+    pub fn classification_set(&self, key: &str) -> Result<ClassificationSet, DfqError> {
         let rel = self
             .manifest
             .req("datasets")?
@@ -113,7 +116,7 @@ impl Artifacts {
     }
 
     /// Load a detection dataset split.
-    pub fn detection_set(&self, key: &str) -> Result<DetectionSet, String> {
+    pub fn detection_set(&self, key: &str) -> Result<DetectionSet, DfqError> {
         let rel = self
             .manifest
             .req("datasets")?
@@ -125,17 +128,17 @@ impl Artifacts {
 
     /// First `n` validation images as one normalised batch — the
     /// calibration set (the paper uses n = 1).
-    pub fn calibration_images(&self, n: usize) -> Result<Tensor, String> {
+    pub fn calibration_images(&self, n: usize) -> Result<Tensor, DfqError> {
         let ds = self.classification_set("synthimagenet_val")?;
         Ok(ds.batch(0, n).0)
     }
 
     /// The per-shape qmodule artifact list (path + geometry).
-    pub fn qmodules(&self) -> Result<&[Json], String> {
+    pub fn qmodules(&self) -> Result<&[Json], DfqError> {
         self.manifest
             .req("qmodules")?
             .as_arr()
-            .ok_or_else(|| "qmodules".to_string())
+            .ok_or_else(|| DfqError::manifest("qmodules"))
     }
 }
 
@@ -208,6 +211,6 @@ mod tests {
             Err(e) => e,
             Ok(_) => panic!("expected error"),
         };
-        assert!(err.contains("make artifacts"));
+        assert!(err.to_string().contains("make artifacts"));
     }
 }

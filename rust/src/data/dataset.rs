@@ -5,6 +5,7 @@
 
 use std::path::Path;
 
+use crate::error::DfqError;
 use crate::metrics::map::{BBox, GroundTruth};
 use crate::tensor::{Tensor, TensorBase};
 use crate::util::rng::Pcg;
@@ -34,20 +35,23 @@ pub struct ClassificationSet {
 
 impl ClassificationSet {
     /// Load from a `.dfqt` written by the build pipeline.
-    pub fn load(path: &Path) -> Result<Self, String> {
+    pub fn load(path: &Path) -> Result<Self, DfqError> {
         let map = dfqt::read_dfqt_map(path)?;
         let images = map
             .get("images")
-            .ok_or("missing 'images'")?
+            .ok_or_else(|| DfqError::data("missing 'images'"))?
             .as_u8()?
             .clone();
-        let labels = match map.get("labels").ok_or("missing 'labels'")? {
+        let labels = match map
+            .get("labels")
+            .ok_or_else(|| DfqError::data("missing 'labels'"))?
+        {
             AnyTensor::I32(t) => t.data.clone(),
             AnyTensor::I64(t) => t.data.iter().map(|&v| v as i32).collect(),
-            _ => return Err("labels must be integer".into()),
+            _ => return Err(DfqError::data("labels must be integer")),
         };
         if images.shape.dim(0) != labels.len() {
-            return Err("image/label count mismatch".into());
+            return Err(DfqError::data("image/label count mismatch"));
         }
         Ok(ClassificationSet { images, labels })
     }
@@ -85,16 +89,16 @@ pub struct DetectionSet {
 
 impl DetectionSet {
     /// Load from `.dfqt`.
-    pub fn load(path: &Path) -> Result<Self, String> {
+    pub fn load(path: &Path) -> Result<Self, DfqError> {
         let map = dfqt::read_dfqt_map(path)?;
         let images = map
             .get("images")
-            .ok_or("missing 'images'")?
+            .ok_or_else(|| DfqError::data("missing 'images'"))?
             .as_u8()?
             .clone();
         let labels = map
             .get("labels")
-            .ok_or("missing 'labels'")?
+            .ok_or_else(|| DfqError::data("missing 'labels'"))?
             .as_f32()?
             .clone();
         Ok(DetectionSet { images, labels })

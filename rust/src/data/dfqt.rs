@@ -8,6 +8,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::error::DfqError;
 use crate::tensor::{Shape, Tensor, TensorBase, TensorI32};
 
 const MAGIC: &[u8; 6] = b"DFQT1\n";
@@ -28,14 +29,14 @@ pub enum Dtype {
 }
 
 impl Dtype {
-    fn from_code(c: u8) -> Result<Dtype, String> {
+    fn from_code(c: u8) -> Result<Dtype, DfqError> {
         Ok(match c {
             0 => Dtype::F32,
             1 => Dtype::I8,
             2 => Dtype::I32,
             3 => Dtype::U8,
             4 => Dtype::I64,
-            other => return Err(format!("unknown dtype code {other}")),
+            other => return Err(DfqError::data(format!("unknown dtype code {other}"))),
         })
     }
 
@@ -73,33 +74,34 @@ impl AnyTensor {
     }
 
     /// Unwrap f32 or error.
-    pub fn as_f32(&self) -> Result<&Tensor, String> {
+    pub fn as_f32(&self) -> Result<&Tensor, DfqError> {
         match self {
             AnyTensor::F32(t) => Ok(t),
-            _ => Err("expected f32 tensor".into()),
+            _ => Err(DfqError::data("expected f32 tensor")),
         }
     }
 
     /// Unwrap i32 or error.
-    pub fn as_i32(&self) -> Result<&TensorI32, String> {
+    pub fn as_i32(&self) -> Result<&TensorI32, DfqError> {
         match self {
             AnyTensor::I32(t) => Ok(t),
-            _ => Err("expected i32 tensor".into()),
+            _ => Err(DfqError::data("expected i32 tensor")),
         }
     }
 
     /// Unwrap u8 or error.
-    pub fn as_u8(&self) -> Result<&TensorBase<u8>, String> {
+    pub fn as_u8(&self) -> Result<&TensorBase<u8>, DfqError> {
         match self {
             AnyTensor::U8(t) => Ok(t),
-            _ => Err("expected u8 tensor".into()),
+            _ => Err(DfqError::data("expected u8 tensor")),
         }
     }
 }
 
-fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>, String> {
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>, DfqError> {
     let mut buf = vec![0u8; n];
-    r.read_exact(&mut buf).map_err(|e| e.to_string())?;
+    r.read_exact(&mut buf)
+        .map_err(|e| DfqError::io("read dfqt record", &e))?;
     Ok(buf)
 }
 
@@ -116,19 +118,19 @@ fn u64le(b: &[u8]) -> u64 {
 }
 
 /// Read a `.dfqt` file into an ordered name → tensor map.
-pub fn read_dfqt(path: &Path) -> Result<Vec<(String, AnyTensor)>, String> {
+pub fn read_dfqt(path: &Path) -> Result<Vec<(String, AnyTensor)>, DfqError> {
     let mut f = std::fs::File::open(path)
-        .map_err(|e| format!("open {}: {e}", path.display()))?;
+        .map_err(|e| DfqError::io(format!("open {}", path.display()), &e))?;
     let magic = read_exact(&mut f, 6)?;
     if magic != MAGIC {
-        return Err(format!("bad magic in {}", path.display()));
+        return Err(DfqError::data(format!("bad magic in {}", path.display())));
     }
     let count = u32le(&read_exact(&mut f, 4)?) as usize;
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
         let name_len = u16le(&read_exact(&mut f, 2)?) as usize;
         let name = String::from_utf8(read_exact(&mut f, name_len)?)
-            .map_err(|e| e.to_string())?;
+            .map_err(|e| DfqError::data(e.to_string()))?;
         let dtype = Dtype::from_code(read_exact(&mut f, 1)?[0])?;
         let ndim = read_exact(&mut f, 1)?[0] as usize;
         let mut dims = Vec::with_capacity(ndim);
@@ -138,7 +140,7 @@ pub fn read_dfqt(path: &Path) -> Result<Vec<(String, AnyTensor)>, String> {
         let nbytes = u64le(&read_exact(&mut f, 8)?) as usize;
         let numel: usize = dims.iter().product();
         if nbytes != numel * dtype.size() {
-            return Err(format!("{name}: byte count mismatch"));
+            return Err(DfqError::data(format!("{name}: byte count mismatch")));
         }
         let raw = read_exact(&mut f, nbytes)?;
         let t = match dtype {
@@ -174,15 +176,16 @@ pub fn read_dfqt(path: &Path) -> Result<Vec<(String, AnyTensor)>, String> {
 }
 
 /// Read into a hash map (order-insensitive access).
-pub fn read_dfqt_map(path: &Path) -> Result<HashMap<String, AnyTensor>, String> {
+pub fn read_dfqt_map(path: &Path) -> Result<HashMap<String, AnyTensor>, DfqError> {
     Ok(read_dfqt(path)?.into_iter().collect())
 }
 
 /// Write tensors (used by `dfq dump` and the golden-file tests).
-pub fn write_dfqt(path: &Path, tensors: &[(String, AnyTensor)]) -> Result<(), String> {
+pub fn write_dfqt(path: &Path, tensors: &[(String, AnyTensor)]) -> Result<(), DfqError> {
     let mut f = std::fs::File::create(path)
-        .map_err(|e| format!("create {}: {e}", path.display()))?;
-    let mut w = |bytes: &[u8]| f.write_all(bytes).map_err(|e| e.to_string());
+        .map_err(|e| DfqError::io(format!("create {}", path.display()), &e))?;
+    let mut w =
+        |bytes: &[u8]| f.write_all(bytes).map_err(|e| DfqError::io("write dfqt", &e));
     w(MAGIC)?;
     w(&(tensors.len() as u32).to_le_bytes())?;
     for (name, t) in tensors {
@@ -218,7 +221,7 @@ pub fn write_dfqt(path: &Path, tensors: &[(String, AnyTensor)]) -> Result<(), St
 }
 
 /// Load a weights file as f32 tensors (what the model loaders expect).
-pub fn read_weights(path: &Path) -> Result<HashMap<String, Tensor>, String> {
+pub fn read_weights(path: &Path) -> Result<HashMap<String, Tensor>, DfqError> {
     let mut out = HashMap::new();
     for (name, t) in read_dfqt(path)? {
         match t {
@@ -226,10 +229,10 @@ pub fn read_weights(path: &Path) -> Result<HashMap<String, Tensor>, String> {
                 out.insert(name, t);
             }
             other => {
-                return Err(format!(
+                return Err(DfqError::data(format!(
                     "{name}: expected f32 weights, got {:?}",
                     other.shape()
-                ))
+                )))
             }
         }
     }
@@ -279,7 +282,7 @@ mod tests {
     fn bad_magic_rejected() {
         let p = std::env::temp_dir().join("dfq_test_badmagic.dfqt");
         std::fs::write(&p, b"NOTDFQTxxxx").unwrap();
-        assert!(read_dfqt(&p).unwrap_err().contains("bad magic"));
+        assert!(read_dfqt(&p).unwrap_err().to_string().contains("bad magic"));
         std::fs::remove_file(&p).ok();
     }
 

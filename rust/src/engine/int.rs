@@ -67,7 +67,7 @@ pub fn quantize_params(
 pub struct IntEngine<'g> {
     graph: &'g Graph,
     spec: &'g QuantSpec,
-    qparams: HashMap<String, QuantizedParams>,
+    qparams: std::borrow::Cow<'g, HashMap<String, QuantizedParams>>,
     /// unfused ablation: per-module fractional bits of the intermediate
     /// (pre-ReLU / pre-add) quantization points
     pub pre_frac: Option<HashMap<String, i32>>,
@@ -80,8 +80,19 @@ impl<'g> IntEngine<'g> {
         folded: &HashMap<String, FoldedParams>,
         spec: &'g QuantSpec,
     ) -> Self {
-        let qparams = quantize_params(graph, folded, spec);
+        let qparams = std::borrow::Cow::Owned(quantize_params(graph, folded, spec));
         IntEngine { graph, spec, qparams, pre_frac: None }
+    }
+
+    /// Build over parameters already quantized by [`quantize_params`] —
+    /// lets long-lived callers (the serving engines) pay the weight
+    /// quantization once instead of per batch.
+    pub fn with_qparams(
+        graph: &'g Graph,
+        spec: &'g QuantSpec,
+        qparams: &'g HashMap<String, QuantizedParams>,
+    ) -> Self {
+        IntEngine { graph, spec, qparams: std::borrow::Cow::Borrowed(qparams), pre_frac: None }
     }
 
     /// Access the quantized parameters (the PJRT path feeds these to the

@@ -1,0 +1,142 @@
+//! The crate-wide typed error — `thiserror`-style by hand (the offline
+//! registry has no proc-macro crates), cloneable so the serving layer
+//! can fan one backend failure out to every waiting request.
+//!
+//! Every public fallible API in `graph/`, `quant/`, `runtime/`, `data/`,
+//! `coordinator/` and [`crate::session`] returns [`DfqError`]. The one
+//! deliberate exception is [`crate::util::json`], whose parser keeps
+//! plain `String` errors (it is self-contained infrastructure); callers
+//! classify those as [`DfqError::Manifest`] at the boundary — which is
+//! what the blanket `From<String>` impl below does.
+
+use std::fmt;
+
+/// What went wrong, by pipeline layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DfqError {
+    /// A filesystem operation failed.
+    Io {
+        /// what the operation was doing (usually includes the path)
+        context: String,
+        /// the stringified `std::io::Error`
+        message: String,
+    },
+    /// The artifact manifest or a serialized spec could not be parsed.
+    Manifest(String),
+    /// A dataflow graph is invalid or contains unfusable patterns.
+    Graph(String),
+    /// A dataset / weight container is malformed or incomplete.
+    Data(String),
+    /// The PJRT runtime is unavailable, or compiling/executing an AOT
+    /// artifact failed.
+    Runtime(String),
+    /// The serving pipeline failed (service stopped, batch dropped).
+    Serve(String),
+    /// User-supplied configuration is invalid.
+    InvalidInput(String),
+}
+
+impl DfqError {
+    /// An I/O failure with the operation it interrupted.
+    pub fn io(context: impl Into<String>, source: &std::io::Error) -> DfqError {
+        DfqError::Io { context: context.into(), message: source.to_string() }
+    }
+
+    /// A manifest / serialized-spec parse failure.
+    pub fn manifest(msg: impl Into<String>) -> DfqError {
+        DfqError::Manifest(msg.into())
+    }
+
+    /// An invalid or unfusable dataflow graph.
+    pub fn graph(msg: impl Into<String>) -> DfqError {
+        DfqError::Graph(msg.into())
+    }
+
+    /// A malformed dataset or weight container.
+    pub fn data(msg: impl Into<String>) -> DfqError {
+        DfqError::Data(msg.into())
+    }
+
+    /// A PJRT runtime failure.
+    pub fn runtime(msg: impl Into<String>) -> DfqError {
+        DfqError::Runtime(msg.into())
+    }
+
+    /// A serving-pipeline failure.
+    pub fn serve(msg: impl Into<String>) -> DfqError {
+        DfqError::Serve(msg.into())
+    }
+
+    /// Invalid user input / configuration.
+    pub fn invalid(msg: impl Into<String>) -> DfqError {
+        DfqError::InvalidInput(msg.into())
+    }
+}
+
+impl fmt::Display for DfqError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DfqError::Io { context, message } => write!(f, "{context}: {message}"),
+            DfqError::Manifest(m) => write!(f, "manifest/spec: {m}"),
+            DfqError::Graph(m) => write!(f, "graph: {m}"),
+            DfqError::Data(m) => write!(f, "data: {m}"),
+            DfqError::Runtime(m) => write!(f, "runtime: {m}"),
+            DfqError::Serve(m) => write!(f, "serve: {m}"),
+            DfqError::InvalidInput(m) => write!(f, "invalid input: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DfqError {}
+
+/// `util::json` (and only it) reports `String` errors; everywhere the
+/// JSON layer is used the payload is the artifact manifest or a
+/// serialized spec, so the boundary conversion classifies as
+/// [`DfqError::Manifest`].
+impl From<String> for DfqError {
+    fn from(msg: String) -> DfqError {
+        DfqError::Manifest(msg)
+    }
+}
+
+/// See the `From<String>` impl — same classification for `&str`
+/// (`Option::ok_or` sites in manifest plumbing).
+impl From<&str> for DfqError {
+    fn from(msg: &str) -> DfqError {
+        DfqError::Manifest(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_prefixed_by_layer() {
+        assert_eq!(
+            DfqError::graph("cycle at c0").to_string(),
+            "graph: cycle at c0"
+        );
+        let e = DfqError::io(
+            "read artifacts/manifest.json",
+            &std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.to_string().contains("read artifacts/manifest.json"));
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn json_string_errors_classify_as_manifest() {
+        let e: DfqError = String::from("missing key 'spec'").into();
+        assert_eq!(e, DfqError::Manifest("missing key 'spec'".into()));
+        let e: DfqError = "weights path".into();
+        assert!(matches!(e, DfqError::Manifest(_)));
+    }
+
+    #[test]
+    fn errors_are_cloneable_for_fanout() {
+        let e = DfqError::runtime("backend died");
+        let copies = vec![e.clone(), e.clone(), e];
+        assert!(copies.iter().all(|c| c.to_string().contains("backend died")));
+    }
+}

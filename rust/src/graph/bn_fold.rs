@@ -11,6 +11,7 @@
 use std::collections::HashMap;
 
 use super::Graph;
+use crate::error::DfqError;
 use crate::tensor::Tensor;
 
 /// Matches the training-side BN epsilon (model.py BN_EPS).
@@ -33,26 +34,26 @@ pub struct FoldedParams {
 pub fn fold_bn(
     graph: &Graph,
     params: &HashMap<String, Tensor>,
-) -> Result<HashMap<String, FoldedParams>, String> {
+) -> Result<HashMap<String, FoldedParams>, DfqError> {
     let mut out = HashMap::new();
     for m in graph.weight_modules() {
         let w = params
             .get(&format!("{}/w", m.name))
-            .ok_or_else(|| format!("missing weights for '{}'", m.name))?;
+            .ok_or_else(|| DfqError::data(format!("missing weights for '{}'", m.name)))?;
         let cout = *w.shape.dims().last().unwrap();
         let folded = if let Some(gamma) = params.get(&format!("{}/bn/gamma", m.name)) {
             let beta = params
                 .get(&format!("{}/bn/beta", m.name))
-                .ok_or_else(|| format!("{}: missing bn/beta", m.name))?;
+                .ok_or_else(|| DfqError::data(format!("{}: missing bn/beta", m.name)))?;
             let mean = params
                 .get(&format!("{}/bn/mean", m.name))
-                .ok_or_else(|| format!("{}: missing bn/mean", m.name))?;
+                .ok_or_else(|| DfqError::data(format!("{}: missing bn/mean", m.name)))?;
             let var = params
                 .get(&format!("{}/bn/var", m.name))
-                .ok_or_else(|| format!("{}: missing bn/var", m.name))?;
+                .ok_or_else(|| DfqError::data(format!("{}: missing bn/var", m.name)))?;
             for t in [gamma, beta, mean, var] {
                 if t.numel() != cout {
-                    return Err(format!("{}: bn stat size != cout", m.name));
+                    return Err(DfqError::data(format!("{}: bn stat size != cout", m.name)));
                 }
             }
             let scale: Vec<f32> = gamma
@@ -79,7 +80,7 @@ pub fn fold_bn(
         } else {
             let b = params
                 .get(&format!("{}/b", m.name))
-                .ok_or_else(|| format!("{}: missing bias", m.name))?;
+                .ok_or_else(|| DfqError::data(format!("{}: missing bias", m.name)))?;
             FoldedParams { w: w.clone(), b: b.data.clone() }
         };
         out.insert(m.name.clone(), folded);

@@ -17,6 +17,7 @@
 
 use super::layers::{LayerGraph, LayerOp};
 use super::{Graph, ModuleKind, UnifiedModule};
+use crate::error::DfqError;
 
 /// Result of fusing a layer graph.
 #[derive(Clone, Debug)]
@@ -33,7 +34,7 @@ pub struct FuseResult {
 ///
 /// Returns an error if the graph contains patterns outside the paper's
 /// vocabulary (e.g. an Add whose operands are not module outputs).
-pub fn fuse(lg: &LayerGraph) -> Result<FuseResult, String> {
+pub fn fuse(lg: &LayerGraph) -> Result<FuseResult, DfqError> {
     lg.validate()?;
     let consumers = lg.consumer_counts();
     // map fine-grained value name -> unified module name producing it
@@ -58,7 +59,7 @@ pub fn fuse(lg: &LayerGraph) -> Result<FuseResult, String> {
                     },
                     src: alias
                         .get(&l.src)
-                        .ok_or_else(|| format!("{}: unknown src", l.name))?
+                        .ok_or_else(|| DfqError::graph(format!("{}: unknown src", l.name)))?
                         .clone(),
                     res: None,
                     relu: false,
@@ -81,7 +82,10 @@ pub fn fuse(lg: &LayerGraph) -> Result<FuseResult, String> {
                                 alias
                                     .get(rhs)
                                     .ok_or_else(|| {
-                                        format!("{}: add rhs not a module output", layers[j].name)
+                                        DfqError::graph(format!(
+                                            "{}: add rhs not a module output",
+                                            layers[j].name
+                                        ))
                                     })?
                                     .clone(),
                             );
@@ -123,17 +127,17 @@ pub fn fuse(lg: &LayerGraph) -> Result<FuseResult, String> {
                 i += 1;
             }
             LayerOp::Relu | LayerOp::Add { .. } => {
-                return Err(format!(
+                return Err(DfqError::graph(format!(
                     "{}: {} not preceded by a fusable producer",
                     l.name,
                     match &l.op {
                         LayerOp::Relu => "relu",
                         _ => "add",
                     }
-                ));
+                )));
             }
             LayerOp::BatchNorm | LayerOp::Bias => {
-                return Err(format!("{}: dangling bn/bias", l.name));
+                return Err(DfqError::graph(format!("{}: dangling bn/bias", l.name)));
             }
         }
     }

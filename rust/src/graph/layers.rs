@@ -6,6 +6,8 @@
 //!
 //! [`super::fuse`] rewrites this graph into the unified-module graph.
 
+use crate::error::DfqError;
+
 /// A fine-grained layer operation.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LayerOp {
@@ -68,20 +70,26 @@ pub struct LayerGraph {
 
 impl LayerGraph {
     /// Validate dataflow (same contract as [`super::Graph::validate`]).
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), DfqError> {
         let mut seen = std::collections::HashSet::new();
         seen.insert("input".to_string());
         for l in &self.layers {
             if !seen.contains(&l.src) {
-                return Err(format!("{}: src '{}' not yet produced", l.name, l.src));
+                return Err(DfqError::graph(format!(
+                    "{}: src '{}' not yet produced",
+                    l.name, l.src
+                )));
             }
             if let LayerOp::Add { rhs } = &l.op {
                 if !seen.contains(rhs) {
-                    return Err(format!("{}: rhs '{rhs}' not yet produced", l.name));
+                    return Err(DfqError::graph(format!(
+                        "{}: rhs '{rhs}' not yet produced",
+                        l.name
+                    )));
                 }
             }
             if !seen.insert(l.name.clone()) {
-                return Err(format!("duplicate layer '{}'", l.name));
+                return Err(DfqError::graph(format!("duplicate layer '{}'", l.name)));
             }
         }
         Ok(())

@@ -15,6 +15,7 @@ pub mod bn_fold;
 pub mod fuse;
 pub mod layers;
 
+use crate::error::DfqError;
 use crate::util::json::Json;
 
 /// What a unified module computes (before the shared epilogue of
@@ -91,20 +92,26 @@ pub struct Graph {
 impl Graph {
     /// Validate dataflow: every `src`/`res` must be a prior module (or
     /// `input`), and names must be unique.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), DfqError> {
         let mut seen = std::collections::HashSet::new();
         seen.insert("input".to_string());
         for m in &self.modules {
             if !seen.contains(&m.src) {
-                return Err(format!("{}: src '{}' not yet produced", m.name, m.src));
+                return Err(DfqError::graph(format!(
+                    "{}: src '{}' not yet produced",
+                    m.name, m.src
+                )));
             }
             if let Some(r) = &m.res {
                 if !seen.contains(r) {
-                    return Err(format!("{}: res '{r}' not yet produced", m.name));
+                    return Err(DfqError::graph(format!(
+                        "{}: res '{r}' not yet produced",
+                        m.name
+                    )));
                 }
             }
             if !seen.insert(m.name.clone()) {
-                return Err(format!("duplicate module '{}'", m.name));
+                return Err(DfqError::graph(format!("duplicate module '{}'", m.name)));
             }
         }
         Ok(())
@@ -163,7 +170,7 @@ impl Graph {
 
     /// Parse the `spec` object of the artifact manifest (the contract
     /// with `python/compile/model.py`).
-    pub fn from_manifest_spec(name: &str, spec: &Json) -> Result<Graph, String> {
+    pub fn from_manifest_spec(name: &str, spec: &Json) -> Result<Graph, DfqError> {
         let input = spec.req("input")?;
         let hwc = (
             input.req("h")?.as_usize().ok_or("input.h")?,
@@ -190,7 +197,9 @@ impl Graph {
                     cout: m.req("cout")?.as_usize().ok_or("cout")?,
                 },
                 "gap" => ModuleKind::Gap,
-                other => return Err(format!("unknown module kind '{other}'")),
+                other => {
+                    return Err(DfqError::manifest(format!("unknown module kind '{other}'")))
+                }
             };
             modules.push(UnifiedModule { name: mname, kind, src, res, relu });
         }

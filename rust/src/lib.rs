@@ -8,25 +8,55 @@
 //! fractional bits per module by minimising the reconstruction error
 //! (paper Algorithm 1) — no fine-tuning.
 //!
+//! ## The `Session` pipeline
+//!
+//! The whole dataflow is one typed pipeline ([`session`]):
+//!
+//! ```no_run
+//! use dfq::prelude::*;
+//! # fn main() -> Result<(), DfqError> {
+//! let art = Artifacts::open("artifacts")?;
+//! let session = Session::from_artifacts(&art, "resnet_s")?; // fuse + BN-fold inside
+//! let calibrated = session.calibrate(CalibConfig::default(), &art.calibration_images(1)?)?;
+//! let engine = calibrated.engine(EngineKind::Int)?; // or EngineKind::{Fp, Pjrt}
+//! let _scores = engine.run(&art.calibration_images(4)?)?; // (B, out_dim) f32
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`Session::from_layers`] starts instead from a fine-grained framework
+//! export (running dataflow fusion and BN folding internally), and
+//! [`Session::from_graph`] from an already-unified graph. Every
+//! [`session::Engine`] doubles as a [`coordinator::serve::Backend`]
+//! through a blanket impl, so
+//! `InferenceService::start(engine, ServeConfig::default())` deploys any
+//! engine behind the batching service with zero glue. Fallible APIs
+//! across the crate return the typed [`error::DfqError`].
+//!
 //! ## Layering
 //!
 //! * **L1/L2 (build-time python)** — Pallas kernels + JAX model graphs,
 //!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
 //! * **L3 (this crate)** — the deployment system: graph IR and dataflow
 //!   analysis ([`graph`]), the quantization scheme, Algorithm 1 and the
-//!   joint calibrator ([`quant`]), a bit-exact integer-only inference
-//!   engine ([`engine`]), the PJRT runtime that executes the AOT
-//!   artifacts ([`runtime`]), a parallel calibration/serving coordinator
+//!   joint calibrator ([`quant`]), the unified pipeline ([`session`]), a
+//!   bit-exact integer-only inference engine ([`engine`]), the PJRT
+//!   runtime that executes the AOT artifacts ([`runtime`], behind the
+//!   `pjrt` cargo feature), a parallel calibration/serving coordinator
 //!   ([`coordinator`]), the RTL-calibrated hardware cost model ([`hw`]),
 //!   and the paper-table regeneration drivers ([`report`]).
 //!
 //! Python never runs at inference time: after `make artifacts`, the `dfq`
 //! binary (and every example/bench) is self-contained.
+//!
+//! [`Session::from_layers`]: session::Session::from_layers
+//! [`Session::from_graph`]: session::Session::from_graph
 #![deny(missing_docs)]
 
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod error;
 pub mod graph;
 pub mod hw;
 pub mod metrics;
@@ -34,19 +64,24 @@ pub mod models;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod util;
 
-/// Convenient re-exports for examples and downstream users.
+/// Convenient re-exports for examples and downstream users — centred on
+/// the [`session`] pipeline (`Session` → `CalibratedModel` → `Engine`),
+/// with the lower-level building blocks alongside.
 pub mod prelude {
     pub use crate::data::artifacts::{Artifacts, ModelBundle};
     pub use crate::data::dataset::{ClassificationSet, DetectionSet};
     pub use crate::engine::fp::FpEngine;
     pub use crate::engine::int::IntEngine;
+    pub use crate::error::DfqError;
     pub use crate::graph::{Graph, ModuleKind, UnifiedModule};
     pub use crate::quant::joint::{CalibConfig, JointCalibrator};
     pub use crate::quant::params::{ModuleShifts, QuantSpec};
     pub use crate::quant::scheme;
+    pub use crate::session::{CalibratedModel, Engine, EngineKind, Session};
     pub use crate::tensor::{Shape, Tensor, TensorI32};
     pub use crate::util::rng::Pcg;
 }

@@ -7,27 +7,39 @@
 //! dfq detect    [--bits B] [--eval-n N]
 //! dfq hwcost    [--clock MHZ]
 //! dfq inspect   --model NAME
-//! dfq serve     --model NAME [--requests N] [--engine int|pjrt]
+//! dfq serve     --model NAME [--requests N] [--engine fp|int|pjrt]
 //! ```
 //!
-//! Everything runs from the AOT artifacts; python is never invoked.
+//! Everything runs from the AOT artifacts through the unified
+//! `Session` pipeline; python is never invoked.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use dfq::coordinator::pool::Pool;
-use dfq::coordinator::serve::{Backend, InferenceService, ServeConfig};
-use dfq::data::artifacts::Artifacts;
-use dfq::engine::int::IntEngine;
+use dfq::coordinator::serve::{InferenceService, ServeConfig};
 use dfq::graph::fuse;
 use dfq::models::resnet;
 use dfq::prelude::*;
-use dfq::quant::joint::CalibConfig;
 use dfq::report::experiments::{self, EvalOptions};
 use dfq::report::figures;
 use dfq::util::timer::Timer;
 
-/// Minimal flag parser: `--key value` pairs + a subcommand.
+/// Commands and the flags each accepts (anything else exits 2 naming
+/// the offending flag).
+const COMMANDS: &[(&str, &[&str])] = &[
+    ("tables", &["table", "artifacts", "eval-n", "batch", "images", "out"]),
+    ("calibrate", &["model", "bits", "tau", "images", "save", "unfused", "artifacts"]),
+    ("evaluate", &["model", "bits", "eval-n", "batch", "images", "via-pjrt", "artifacts"]),
+    ("detect", &["bits", "eval-n", "batch", "images", "artifacts"]),
+    ("hwcost", &["clock"]),
+    ("inspect", &["model"]),
+    ("serve", &["model", "requests", "engine", "artifacts"]),
+];
+
+/// Minimal flag parser: `--key value` pairs + a subcommand, validated
+/// against [`COMMANDS`]. `help`/`--help`/`-h`/no arguments and unknown
+/// subcommands print usage and exit 0; unknown flags exit 2.
 struct Args {
     cmd: String,
     flags: HashMap<String, String>,
@@ -36,24 +48,42 @@ struct Args {
 impl Args {
     fn parse() -> Args {
         let mut it = std::env::args().skip(1);
-        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let Some(cmd) = it.next() else {
+            print!("{HELP}");
+            std::process::exit(0);
+        };
+        if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+            print!("{HELP}");
+            std::process::exit(0);
+        }
+        let Some((_, known)) = COMMANDS.iter().find(|(c, _)| *c == cmd) else {
+            println!("unknown command '{cmd}'\n\n{HELP}");
+            std::process::exit(0);
+        };
         let mut flags = HashMap::new();
+        let mut push = |k: String, v: String| {
+            if !known.contains(&k.as_str()) {
+                eprintln!("unknown flag '--{k}' for '{cmd}' (known: {})", known.join(", "));
+                std::process::exit(2);
+            }
+            flags.insert(k, v);
+        };
         let mut key: Option<String> = None;
         for a in it {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some(k) = key.take() {
-                    flags.insert(k, "true".to_string()); // boolean flag
+                    push(k, "true".to_string()); // boolean flag
                 }
                 key = Some(stripped.to_string());
             } else if let Some(k) = key.take() {
-                flags.insert(k, a);
+                push(k, a);
             } else {
                 eprintln!("unexpected argument: {a}");
                 std::process::exit(2);
             }
         }
         if let Some(k) = key.take() {
-            flags.insert(k, "true".to_string());
+            push(k, "true".to_string());
         }
         Args { cmd, flags }
     }
@@ -97,14 +127,7 @@ fn main() {
         "hwcost" => cmd_hwcost(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
-        "help" | "--help" | "-h" => {
-            print!("{}", HELP);
-            Ok(())
-        }
-        other => {
-            eprintln!("unknown command '{other}'\n{HELP}");
-            std::process::exit(2);
-        }
+        other => unreachable!("Args::parse admitted unknown command '{other}'"),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
@@ -124,7 +147,7 @@ COMMANDS:
   detect     Table-4 style detection eval (--bits, --eval-n)
   hwcost     RTL cost model (--clock MHz)
   inspect    dataflow analysis + quant-point report (--model)
-  serve      batching inference service demo (--model, --requests, --engine int|pjrt)
+  serve      batching inference service demo (--model, --requests, --engine fp|int|pjrt)
 
 COMMON FLAGS:
   --artifacts DIR   artifacts directory (default: artifacts)
@@ -132,7 +155,7 @@ COMMON FLAGS:
   --batch N         evaluation batch (default 50)
 ";
 
-fn cmd_tables(args: &Args) -> Result<(), String> {
+fn cmd_tables(args: &Args) -> Result<(), DfqError> {
     let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
     let opt = opt_from(args);
     let which = args.str_or("table", "all");
@@ -196,10 +219,12 @@ fn cmd_tables(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_calibrate(args: &Args) -> Result<(), String> {
+fn cmd_calibrate(args: &Args) -> Result<(), DfqError> {
     let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
-    let model = args.get("model").ok_or("--model required")?;
-    let bundle = art.load_model(model)?;
+    let model = args
+        .get("model")
+        .ok_or_else(|| DfqError::invalid("--model required"))?;
+    let session = Session::from_artifacts(&art, model)?;
     let calib = art.calibration_images(args.usize_or("images", 1))?;
     let cfg = CalibConfig {
         n_bits: args.u32_or("bits", 8),
@@ -209,104 +234,50 @@ fn cmd_calibrate(args: &Args) -> Result<(), String> {
     };
     let pool = Pool::auto();
     let t = Timer::start();
-    let out = dfq::coordinator::calib::calibrate_parallel(
-        &pool, cfg, &bundle.graph, &bundle.folded, &calib,
-    );
+    let calibrated = session.calibrate_on(&pool, cfg, &calib)?;
     println!(
         "calibrated {model} ({} modules) in {:.2}s on {} workers",
-        bundle.graph.modules.len(),
+        session.graph().modules.len(),
         t.secs(),
         pool.workers()
     );
-    let (lo, med, hi) = out.stats.shift_summary();
+    let (lo, med, hi) = calibrated.stats.shift_summary();
     println!("shift range [{lo}, {hi}], median {med} (paper Fig 2b: range [1,10])");
     if let Some(path) = args.get("save") {
-        std::fs::write(path, out.spec.to_json().dump()).map_err(|e| e.to_string())?;
+        calibrated.save_spec(path)?;
         println!("saved spec to {path}");
     }
     Ok(())
 }
 
-fn cmd_evaluate(args: &Args) -> Result<(), String> {
+fn cmd_evaluate(args: &Args) -> Result<(), DfqError> {
     let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
-    let model = args.get("model").ok_or("--model required")?;
+    let model = args
+        .get("model")
+        .ok_or_else(|| DfqError::invalid("--model required"))?;
     let opt = opt_from(args);
-    let bundle = art.load_model(model)?;
+    let session = Session::from_artifacts(&art, model)?;
     let ds = art.classification_set("synthimagenet_val")?;
     let calib = art.calibration_images(opt.calib_n)?;
-    let fp = experiments::eval_fp(&bundle, &ds, opt);
-    let out = experiments::calibrate_ours(&bundle, &calib, args.u32_or("bits", 8));
-    let q = experiments::eval_quantized(&bundle, &out.spec, &ds, opt);
-    println!("{model}: FP {:.2}%  quantized {:.2}%  (drop {:.2}pp)",
-        fp * 100.0, q * 100.0, (fp - q) * 100.0);
+    let cfg = CalibConfig { n_bits: args.u32_or("bits", 8), ..Default::default() };
+    let calibrated = session.calibrate(cfg, &calib)?;
+    let fp = experiments::eval_engine_top1(&*session.fp_engine(), &ds, opt)?;
+    let q = experiments::eval_engine_top1(&*calibrated.engine(EngineKind::Int)?, &ds, opt)?;
+    println!(
+        "{model}: FP {:.2}%  quantized {:.2}%  (drop {:.2}pp)",
+        fp * 100.0,
+        q * 100.0,
+        (fp - q) * 100.0
+    );
     if args.has("via-pjrt") {
-        let rt = dfq::runtime::Runtime::cpu()?;
-        let acc = pjrt_eval(&art, &rt, model, &bundle, &out.spec, &ds, opt)?;
+        let pjrt = calibrated.engine(EngineKind::Pjrt)?;
+        let acc = experiments::eval_engine_top1(&*pjrt, &ds, opt)?;
         println!("{model}: quantized via PJRT artifact {:.2}%", acc * 100.0);
     }
     Ok(())
 }
 
-/// Evaluate the quantized model through the AOT q_logits artifact.
-fn pjrt_eval(
-    art: &Artifacts,
-    rt: &dfq::runtime::Runtime,
-    model: &str,
-    bundle: &dfq::data::artifacts::ModelBundle,
-    spec: &QuantSpec,
-    ds: &ClassificationSet,
-    opt: EvalOptions,
-) -> Result<f64, String> {
-    use dfq::runtime::ArgValue;
-    let exe = rt.load(&art.hlo_path(model, "q_logits")?)?;
-    let batch = art.artifact_batch(model, "q_logits")?;
-    let eng = IntEngine::new(&bundle.graph, &bundle.folded, spec);
-    let n = opt.eval_n.min(ds.len());
-    let mut correct = 0usize;
-    let mut seen = 0usize;
-    let mut start = 0usize;
-    while start < n {
-        let take = batch.min(n - start);
-        let (x, labels) = ds.batch(start, take);
-        // pad to the artifact batch
-        let dims = x.shape.dims();
-        let per: usize = dims[1..].iter().product();
-        let mut data = vec![0.0f32; batch * per];
-        data[..take * per].copy_from_slice(&x.data);
-        let xp = Tensor::from_vec(&[batch, dims[1], dims[2], dims[3]], data);
-        let x_int = eng.quantize_input(&xp);
-        let mut argv = vec![ArgValue::I32(x_int)];
-        for m in bundle.graph.weight_modules() {
-            let qp = &eng.qparams()[&m.name];
-            argv.push(ArgValue::I32(qp.w.clone()));
-            argv.push(ArgValue::I32(dfq::tensor::TensorI32::from_vec(
-                &[qp.b.len()],
-                qp.b.clone(),
-            )));
-            argv.push(ArgValue::I32Vec(spec.shift_vector(&bundle.graph, &m.name).to_vec()));
-        }
-        let out = exe.run(&argv)?;
-        let logits = out[0].as_i32()?;
-        let c = logits.shape.dim(1);
-        for (i, &label) in labels.iter().enumerate() {
-            let row = &logits.data[i * c..(i + 1) * c];
-            let mut best = 0usize;
-            for (j, v) in row.iter().enumerate() {
-                if *v > row[best] {
-                    best = j;
-                }
-            }
-            if best as i32 == label {
-                correct += 1;
-            }
-        }
-        seen += take;
-        start += take;
-    }
-    Ok(correct as f64 / seen as f64)
-}
-
-fn cmd_detect(args: &Args) -> Result<(), String> {
+fn cmd_detect(args: &Args) -> Result<(), DfqError> {
     let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
     let mut opt = opt_from(args);
     opt.eval_n = args.usize_or("eval-n", 300);
@@ -315,7 +286,7 @@ fn cmd_detect(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_hwcost(args: &Args) -> Result<(), String> {
+fn cmd_hwcost(args: &Args) -> Result<(), DfqError> {
     let clock: f64 = args
         .get("clock")
         .and_then(|v| v.parse().ok())
@@ -330,11 +301,16 @@ fn cmd_hwcost(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_inspect(args: &Args) -> Result<(), String> {
-    let model = args.get("model").ok_or("--model required")?;
+fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
+    let model = args
+        .get("model")
+        .ok_or_else(|| DfqError::invalid("--model required"))?;
     // native layer-graph form -> fusion pass -> report
-    let variant = model.strip_prefix("resnet_").ok_or("inspect supports resnet_{s,m,l}")?;
-    let n = resnet::blocks_for(variant).ok_or("unknown variant")?;
+    let variant = model
+        .strip_prefix("resnet_")
+        .ok_or_else(|| DfqError::invalid("inspect supports resnet_{s,m,l}"))?;
+    let n = resnet::blocks_for(variant)
+        .ok_or_else(|| DfqError::invalid(format!("unknown variant '{variant}'")))?;
     let lg = resnet::resnet_layers(model, n, 10);
     let fused = fuse::fuse(&lg)?;
     println!("{}", fuse::quant_point_report(&fused));
@@ -359,92 +335,22 @@ fn cmd_inspect(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Backend adapters for the serve demo.
-struct IntBackend {
-    bundle: dfq::data::artifacts::ModelBundle,
-    spec: QuantSpec,
-    batch: usize,
-}
-
-impl Backend for IntBackend {
-    fn batch_size(&self) -> usize {
-        self.batch
-    }
-
-    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
-        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
-        let out = eng.run(batch);
-        Ok(out.map_f32(|v| v as f32))
-    }
-}
-
-struct PjrtBackend {
-    worker: dfq::runtime::PjrtWorker,
-    path: std::path::PathBuf,
-    argv_tail: Vec<dfq::runtime::ArgValue>,
-    bundle: dfq::data::artifacts::ModelBundle,
-    spec: QuantSpec,
-    batch: usize,
-}
-
-impl Backend for PjrtBackend {
-    fn batch_size(&self) -> usize {
-        self.batch
-    }
-
-    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, String> {
-        use dfq::runtime::ArgValue;
-        let eng = IntEngine::new(&self.bundle.graph, &self.bundle.folded, &self.spec);
-        let x_int = eng.quantize_input(batch);
-        let mut argv = vec![ArgValue::I32(x_int)];
-        argv.extend(self.argv_tail.iter().cloned());
-        let out = self.worker.run(&self.path, argv)?;
-        Ok(out[0].as_i32()?.map_f32(|v| v as f32))
-    }
-}
-
-fn cmd_serve(args: &Args) -> Result<(), String> {
+fn cmd_serve(args: &Args) -> Result<(), DfqError> {
     let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
     let model = args.str_or("model", "resnet_s");
     let n_req = args.usize_or("requests", 64);
-    let bundle = art.load_model(model)?;
+    let kind = EngineKind::parse(args.str_or("engine", "int"))
+        .ok_or_else(|| DfqError::invalid("--engine must be fp|int|pjrt"))?;
+
+    // the whole deployment pipeline: session -> calibrate -> engine ->
+    // service (any engine serves via the blanket Backend impl)
+    let session = Session::from_artifacts(&art, model)?;
     let calib = art.calibration_images(1)?;
-    let out = experiments::calibrate_ours(&bundle, &calib, 8);
+    let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
+    let engine = calibrated.engine(kind)?;
+    let svc = Arc::new(InferenceService::start(engine, ServeConfig::default()));
+
     let ds = art.classification_set("synthimagenet_val")?;
-    let engine_kind = args.str_or("engine", "int");
-
-    let backend: Arc<dyn Backend> = match engine_kind {
-        "pjrt" => {
-            let worker = dfq::runtime::PjrtWorker::start()?;
-            let path = art.hlo_path(model, "q_logits")?;
-            worker.warm(&path)?; // compile up front
-            let batch = art.artifact_batch(model, "q_logits")?;
-            let eng = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
-            let mut tail = Vec::new();
-            for m in bundle.graph.weight_modules() {
-                let qp = &eng.qparams()[&m.name];
-                tail.push(dfq::runtime::ArgValue::I32(qp.w.clone()));
-                tail.push(dfq::runtime::ArgValue::I32(
-                    dfq::tensor::TensorI32::from_vec(&[qp.b.len()], qp.b.clone()),
-                ));
-                tail.push(dfq::runtime::ArgValue::I32Vec(
-                    out.spec.shift_vector(&bundle.graph, &m.name).to_vec(),
-                ));
-            }
-            let bundle2 = art.load_model(model)?;
-            Arc::new(PjrtBackend {
-                worker,
-                path,
-                argv_tail: tail,
-                bundle: bundle2,
-                spec: out.spec.clone(),
-                batch,
-            })
-        }
-        _ => Arc::new(IntBackend { bundle: art.load_model(model)?, spec: out.spec.clone(), batch: 16 }),
-    };
-
-    let svc = Arc::new(InferenceService::start(backend, ServeConfig::default()));
     let t = Timer::start();
     let mut handles = Vec::new();
     for i in 0..n_req {
@@ -468,7 +374,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let secs = t.secs();
     let m = svc.metrics();
     println!(
-        "served {n_req} requests in {secs:.2}s ({:.1} req/s), top-1 {:.1}%",
+        "served {n_req} requests via {kind} engine in {secs:.2}s ({:.1} req/s), top-1 {:.1}%",
         n_req as f64 / secs,
         100.0 * correct as f64 / n_req as f64
     );

@@ -9,6 +9,7 @@
 
 use std::collections::HashMap;
 
+use crate::error::DfqError;
 use crate::graph::{Graph, ModuleKind};
 use crate::util::json::{self, Json};
 
@@ -116,7 +117,7 @@ impl QuantSpec {
     }
 
     /// Parse a serialized spec.
-    pub fn from_json(j: &Json) -> Result<QuantSpec, String> {
+    pub fn from_json(j: &Json) -> Result<QuantSpec, DfqError> {
         let mut spec = QuantSpec::new(j.req("n_bits")?.as_i64().ok_or("n_bits")? as u32);
         spec.input_frac = j.req("input_frac")?.as_i64().ok_or("input_frac")? as i32;
         for m in j.req("modules")?.as_arr().ok_or("modules")? {

@@ -3,6 +3,7 @@
 
 use crate::coordinator::pool::Pool;
 use crate::data::artifacts::{Artifacts, ModelBundle};
+use crate::error::DfqError;
 use crate::data::dataset::{ClassificationSet, DetectionSet};
 use crate::engine::fp::FpEngine;
 use crate::engine::int::IntEngine;
@@ -19,6 +20,7 @@ use crate::quant::joint::{CalibConfig, CalibOutcome, JointCalibrator};
 use crate::quant::scheme;
 use crate::report::figures::Series;
 use crate::report::table::{pct, Table};
+use crate::session::Engine;
 use crate::tensor::Tensor;
 
 /// Shared evaluation options.
@@ -57,6 +59,30 @@ pub fn eval_fp(bundle: &ModelBundle, ds: &ClassificationSet, opt: EvalOptions) -
         start += labels.len();
     }
     correct / seen as f64
+}
+
+/// Top-1 of any unified [`Engine`] over a classification subset — the
+/// engine-agnostic evaluation loop behind `dfq evaluate` (FP, integer
+/// and PJRT paths all come through here since every engine returns
+/// `(B, out_dim)` f32 scores).
+pub fn eval_engine_top1(
+    engine: &dyn Engine,
+    ds: &ClassificationSet,
+    opt: EvalOptions,
+) -> Result<f64, DfqError> {
+    let n = opt.eval_n.min(ds.len());
+    let step = opt.batch.max(1); // batch 0 must not loop forever
+    let mut correct = 0.0;
+    let mut seen = 0usize;
+    let mut start = 0usize;
+    while start < n {
+        let (x, labels) = ds.batch(start, step.min(n - start));
+        let logits = engine.run(&x)?;
+        correct += top1_f32(&logits, labels) * labels.len() as f64;
+        seen += labels.len();
+        start += labels.len();
+    }
+    Ok(correct / seen.max(1) as f64)
 }
 
 /// Integer-engine top-1 with a calibrated spec.
@@ -127,7 +153,7 @@ pub fn calibrate_ours(
 
 /// Table 1: ResNet-S/M/L top-1 — FP / TensorRT-like (KL) / IOA-like
 /// (min-max affine) / Ours (bit-shifting).
-pub fn table1(art: &Artifacts, pool: &Pool, opt: EvalOptions) -> Result<Table, String> {
+pub fn table1(art: &Artifacts, pool: &Pool, opt: EvalOptions) -> Result<Table, DfqError> {
     let ds = art.classification_set("synthimagenet_val")?;
     let calib = art.calibration_images(opt.calib_n)?;
     let models = ["resnet_s", "resnet_m", "resnet_l"];
@@ -142,7 +168,7 @@ pub fn table1(art: &Artifacts, pool: &Pool, opt: EvalOptions) -> Result<Table, S
                 let art = &art;
                 let ds = &ds;
                 let calib = &calib;
-                move || -> Result<Vec<String>, String> {
+                move || -> Result<Vec<String>, DfqError> {
                     let bundle = art.load_model(name)?;
                     let fp = eval_fp(&bundle, ds, opt);
                     let mut kl = KlQuant::new(8, 8);
@@ -175,7 +201,7 @@ pub fn table1(art: &Artifacts, pool: &Pool, opt: EvalOptions) -> Result<Table, S
 
 /// Table 2: joint-quantization (calibration) time per depth, plus the τ
 /// and calibration-set-size ablations from DESIGN.md §7.
-pub fn table2(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+pub fn table2(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     let calib = art.calibration_images(opt.calib_n)?;
     let mut table = Table::new(
         "Table 2: joint-quantization time (seconds; paper reports minutes on V100)",
@@ -196,7 +222,7 @@ pub fn table2(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
 }
 
 /// Table 2 ablation: τ and calibration-set size vs time and accuracy.
-pub fn table2_ablation(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+pub fn table2_ablation(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     let ds = art.classification_set("synthimagenet_val")?;
     let bundle = art.load_model("resnet_s")?;
     let mut table = Table::new(
@@ -223,7 +249,7 @@ pub fn table2_ablation(art: &Artifacts, opt: EvalOptions) -> Result<Table, Strin
 // -----------------------------------------------------------------------
 
 /// Table 3: method comparison at different bit-widths on ResNet-S.
-pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     let ds = art.classification_set("synthimagenet_val")?;
     let calib = art.calibration_images(opt.calib_n)?;
     let bundle = art.load_model("resnet_s")?;
@@ -325,7 +351,7 @@ pub fn eval_detection(
 }
 
 /// Table 4: SynthKITTI detection AP at FP/8/7/6 bits.
-pub fn table4(art: &Artifacts, opt: EvalOptions) -> Result<Table, String> {
+pub fn table4(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     let ds = art.detection_set("synthkitti_val")?;
     let bundle = art.load_model("detnet")?;
     // calibrate on one detection image
@@ -446,7 +472,7 @@ pub fn headline(graph: &Graph) -> Table {
 
 /// Figure 2 data from a calibration run: (a) MSE vs residual-block
 /// depth, (b) shift bits vs layer depth.
-pub fn fig2(art: &Artifacts, model: &str) -> Result<(Vec<Series>, Vec<Series>), String> {
+pub fn fig2(art: &Artifacts, model: &str) -> Result<(Vec<Series>, Vec<Series>), DfqError> {
     let bundle = art.load_model(model)?;
     let calib = art.calibration_images(1)?;
     let out = calibrate_ours(&bundle, &calib, 8);
@@ -483,7 +509,7 @@ pub fn dataflow_ablation(
     art: &Artifacts,
     model: &str,
     opt: EvalOptions,
-) -> Result<Table, String> {
+) -> Result<Table, DfqError> {
     let ds = art.classification_set("synthimagenet_val")?;
     let bundle = art.load_model(model)?;
     let calib = art.calibration_images(opt.calib_n)?;

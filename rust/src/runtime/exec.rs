@@ -1,33 +1,25 @@
 //! Typed execution over a compiled PJRT executable: tensor-in /
 //! tensor-out with shape bookkeeping, hiding the Literal plumbing.
 
+use crate::error::DfqError;
+
+use super::values::{ArgValue, OutValue};
 use crate::tensor::{Tensor, TensorI32};
 
-/// An argument buffer for an executable.
-#[derive(Clone, Debug)]
-pub enum ArgValue {
-    /// f32 tensor
-    F32(Tensor),
-    /// i32 tensor
-    I32(TensorI32),
-    /// i32 scalar-ish vector (shift vectors, fractional bits)
-    I32Vec(Vec<i32>),
-}
-
 impl ArgValue {
-    fn to_literal(&self) -> Result<xla::Literal, String> {
+    fn to_literal(&self) -> Result<xla::Literal, DfqError> {
         let lit = match self {
             ArgValue::F32(t) => {
                 let dims: Vec<i64> = t.shape.dims().iter().map(|&d| d as i64).collect();
                 xla::Literal::vec1(&t.data)
                     .reshape(&dims)
-                    .map_err(|e| format!("reshape f32 arg: {e}"))?
+                    .map_err(|e| DfqError::runtime(format!("reshape f32 arg: {e}")))?
             }
             ArgValue::I32(t) => {
                 let dims: Vec<i64> = t.shape.dims().iter().map(|&d| d as i64).collect();
                 xla::Literal::vec1(&t.data)
                     .reshape(&dims)
-                    .map_err(|e| format!("reshape i32 arg: {e}"))?
+                    .map_err(|e| DfqError::runtime(format!("reshape i32 arg: {e}")))?
             }
             ArgValue::I32Vec(v) => xla::Literal::vec1(v),
         };
@@ -35,46 +27,21 @@ impl ArgValue {
     }
 }
 
-/// Output tensor (f32 or i32, shape recovered from the result literal).
-#[derive(Clone, Debug)]
-pub enum OutValue {
-    /// f32 tensor
-    F32(Tensor),
-    /// i32 tensor
-    I32(TensorI32),
-}
-
-impl OutValue {
-    /// Unwrap f32.
-    pub fn as_f32(&self) -> Result<&Tensor, String> {
-        match self {
-            OutValue::F32(t) => Ok(t),
-            _ => Err("expected f32 output".into()),
-        }
-    }
-
-    /// Unwrap i32.
-    pub fn as_i32(&self) -> Result<&TensorI32, String> {
-        match self {
-            OutValue::I32(t) => Ok(t),
-            _ => Err("expected i32 output".into()),
-        }
-    }
-}
-
-fn literal_to_out(lit: &xla::Literal) -> Result<OutValue, String> {
-    let shape = lit.array_shape().map_err(|e| e.to_string())?;
+fn literal_to_out(lit: &xla::Literal) -> Result<OutValue, DfqError> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| DfqError::runtime(e.to_string()))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     match shape.ty() {
         xla::ElementType::F32 => {
-            let v: Vec<f32> = lit.to_vec().map_err(|e| e.to_string())?;
+            let v: Vec<f32> = lit.to_vec().map_err(|e| DfqError::runtime(e.to_string()))?;
             Ok(OutValue::F32(Tensor::from_vec(&dims, v)))
         }
         xla::ElementType::S32 => {
-            let v: Vec<i32> = lit.to_vec().map_err(|e| e.to_string())?;
+            let v: Vec<i32> = lit.to_vec().map_err(|e| DfqError::runtime(e.to_string()))?;
             Ok(OutValue::I32(TensorI32::from_vec(&dims, v)))
         }
-        other => Err(format!("unsupported output type {other:?}")),
+        other => Err(DfqError::runtime(format!("unsupported output type {other:?}"))),
     }
 }
 
@@ -89,7 +56,7 @@ impl LoadedExec {
     }
 
     /// Execute with typed args; returns the decomposed output tuple.
-    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<OutValue>, String> {
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<OutValue>, DfqError> {
         let literals: Vec<xla::Literal> = args
             .iter()
             .map(|a| a.to_literal())
@@ -97,11 +64,13 @@ impl LoadedExec {
         let result = self
             .exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| format!("execute: {e}"))?[0][0]
+            .map_err(|e| DfqError::runtime(format!("execute: {e}")))?[0][0]
             .to_literal_sync()
-            .map_err(|e| format!("fetch result: {e}"))?;
+            .map_err(|e| DfqError::runtime(format!("fetch result: {e}")))?;
         // artifacts are lowered with return_tuple=True
-        let parts = result.to_tuple().map_err(|e| format!("untuple: {e}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| DfqError::runtime(format!("untuple: {e}")))?;
         parts.iter().map(literal_to_out).collect()
     }
 }

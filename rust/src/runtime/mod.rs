@@ -8,11 +8,40 @@
 //! `python/compile/aot.py` and /opt/xla-example/README.md). Every
 //! artifact was lowered with `return_tuple=True`, so outputs arrive as a
 //! tuple literal and are decomposed here.
+//!
+//! The `xla` crate exists only in the build image's offline registry, so
+//! the real client is gated behind the **`pjrt` cargo feature**. Without
+//! it, [`stub`] supplies API-compatible types whose operations return
+//! [`crate::error::DfqError::Runtime`] — the rest of the crate (Session,
+//! engines, serving) builds and runs dependency-free.
 
+pub mod values;
+
+#[cfg(feature = "pjrt")]
 pub mod exec;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod worker;
 
-pub use exec::{ArgValue, LoadedExec};
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+pub use values::{ArgValue, OutValue};
+
+#[cfg(feature = "pjrt")]
+pub use exec::LoadedExec;
+#[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;
+#[cfg(feature = "pjrt")]
 pub use worker::PjrtWorker;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedExec, PjrtWorker, Runtime};
+
+/// True when the crate was built with the real PJRT client (`pjrt`
+/// feature); false when the [`stub`] types are in place. Artifact-backed
+/// tests use this to skip instead of failing.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}

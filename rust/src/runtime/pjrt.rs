@@ -5,6 +5,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+use crate::error::DfqError;
+
 use super::exec::LoadedExec;
 
 /// A PJRT CPU runtime with an executable cache.
@@ -15,8 +17,9 @@ pub struct Runtime {
 
 impl Runtime {
     /// Create the CPU client.
-    pub fn cpu() -> Result<Runtime, String> {
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+    pub fn cpu() -> Result<Runtime, DfqError> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| DfqError::runtime(format!("pjrt cpu client: {e}")))?;
         crate::info!(
             "PJRT client up: platform={} devices={}",
             client.platform_name(),
@@ -26,20 +29,21 @@ impl Runtime {
     }
 
     /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<LoadedExec>, String> {
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<LoadedExec>, DfqError> {
         if let Some(e) = self.cache.lock().unwrap().get(path) {
             return Ok(e.clone());
         }
         let t = crate::util::timer::Timer::start();
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or("non-utf8 path")?,
+            path.to_str()
+                .ok_or_else(|| DfqError::runtime("non-utf8 path"))?,
         )
-        .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        .map_err(|e| DfqError::runtime(format!("parse {}: {e}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| format!("compile {}: {e}", path.display()))?;
+            .map_err(|e| DfqError::runtime(format!("compile {}: {e}", path.display())))?;
         crate::debug!("compiled {} in {:.2}s", path.display(), t.secs());
         let loaded = std::sync::Arc::new(LoadedExec::new(exe));
         self.cache

@@ -1,0 +1,94 @@
+//! API-compatible stand-ins for the PJRT runtime, compiled when the
+//! `pjrt` feature is off (the `xla` crate lives only in the build
+//! image's offline registry). Construction and execution report
+//! [`DfqError::Runtime`]; everything that does not touch XLA — the
+//! Session pipeline, the integer engine, the serving loop — works
+//! unchanged, and `dfq serve --engine pjrt` degrades to a typed error
+//! instead of a build break.
+
+use std::path::Path;
+
+use crate::error::DfqError;
+
+use super::values::{ArgValue, OutValue};
+
+fn unavailable() -> DfqError {
+    DfqError::runtime(
+        "built without the 'pjrt' feature: rebuild with `--features pjrt` \
+         (requires the offline `xla` crate) to execute AOT artifacts",
+    )
+}
+
+/// Stub for the PJRT CPU runtime (always fails to construct).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Reports that the PJRT runtime is unavailable in this build.
+    pub fn cpu() -> Result<Runtime, DfqError> {
+        Err(unavailable())
+    }
+
+    /// Unreachable in practice (no `Runtime` can be constructed); kept
+    /// for API parity.
+    pub fn load(&self, _path: &Path) -> Result<std::sync::Arc<LoadedExec>, DfqError> {
+        Err(unavailable())
+    }
+
+    /// Number of cached executables (always 0).
+    pub fn cached(&self) -> usize {
+        0
+    }
+}
+
+/// Stub for a compiled executable (cannot be obtained in this build).
+pub struct LoadedExec {
+    _private: (),
+}
+
+impl LoadedExec {
+    /// Reports that the PJRT runtime is unavailable in this build.
+    pub fn run(&self, _args: &[ArgValue]) -> Result<Vec<OutValue>, DfqError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub for the PJRT owner-thread actor (always fails to start).
+pub struct PjrtWorker {
+    _private: (),
+}
+
+impl PjrtWorker {
+    /// Reports that the PJRT runtime is unavailable in this build.
+    pub fn start() -> Result<PjrtWorker, DfqError> {
+        Err(unavailable())
+    }
+
+    /// Kept for API parity; unreachable in practice.
+    pub fn warm(&self, _path: &Path) -> Result<(), DfqError> {
+        Err(unavailable())
+    }
+
+    /// Kept for API parity; unreachable in practice.
+    pub fn run(
+        &self,
+        _path: &Path,
+        _args: Vec<ArgValue>,
+    ) -> Result<Vec<OutValue>, DfqError> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_feature_gate() {
+        let err = PjrtWorker::start().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(matches!(err, DfqError::Runtime(_)));
+        assert!(Runtime::cpu().is_err());
+    }
+}

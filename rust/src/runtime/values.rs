@@ -1,0 +1,59 @@
+//! Typed argument/output buffers for AOT executables — compiled
+//! unconditionally so the [`crate::session::Engine`] surface and the
+//! serve demo type-check with or without the `pjrt` feature.
+
+use crate::error::DfqError;
+use crate::tensor::{Tensor, TensorI32};
+
+/// An argument buffer for an executable.
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    /// f32 tensor
+    F32(Tensor),
+    /// i32 tensor
+    I32(TensorI32),
+    /// i32 scalar-ish vector (shift vectors, fractional bits)
+    I32Vec(Vec<i32>),
+}
+
+/// Output tensor (f32 or i32, shape recovered from the result literal).
+#[derive(Clone, Debug)]
+pub enum OutValue {
+    /// f32 tensor
+    F32(Tensor),
+    /// i32 tensor
+    I32(TensorI32),
+}
+
+impl OutValue {
+    /// Unwrap f32.
+    pub fn as_f32(&self) -> Result<&Tensor, DfqError> {
+        match self {
+            OutValue::F32(t) => Ok(t),
+            _ => Err(DfqError::runtime("expected f32 output")),
+        }
+    }
+
+    /// Unwrap i32.
+    pub fn as_i32(&self) -> Result<&TensorI32, DfqError> {
+        match self {
+            OutValue::I32(t) => Ok(t),
+            _ => Err(DfqError::runtime("expected i32 output")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_helpers_are_typed() {
+        let f = OutValue::F32(Tensor::zeros(&[2]));
+        assert!(f.as_f32().is_ok());
+        assert!(matches!(f.as_i32(), Err(DfqError::Runtime(_))));
+        let i = OutValue::I32(TensorI32::zeros(&[2]));
+        assert!(i.as_i32().is_ok());
+        assert!(i.as_f32().is_err());
+    }
+}

@@ -7,18 +7,20 @@ use std::path::PathBuf;
 use std::sync::mpsc::{self, Sender};
 use std::sync::Mutex;
 
-use super::exec::{ArgValue, OutValue};
+use crate::error::DfqError;
+
 use super::pjrt::Runtime;
+use super::values::{ArgValue, OutValue};
 
 enum Job {
     Run {
         path: PathBuf,
         args: Vec<ArgValue>,
-        reply: Sender<Result<Vec<OutValue>, String>>,
+        reply: Sender<Result<Vec<OutValue>, DfqError>>,
     },
     Warm {
         path: PathBuf,
-        reply: Sender<Result<(), String>>,
+        reply: Sender<Result<(), DfqError>>,
     },
 }
 
@@ -30,9 +32,9 @@ pub struct PjrtWorker {
 
 impl PjrtWorker {
     /// Spawn the owner thread and create the CPU client on it.
-    pub fn start() -> Result<PjrtWorker, String> {
+    pub fn start() -> Result<PjrtWorker, DfqError> {
         let (tx, rx) = mpsc::channel::<Job>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), DfqError>>();
         let handle = std::thread::spawn(move || {
             let rt = match Runtime::cpu() {
                 Ok(rt) => {
@@ -58,19 +60,20 @@ impl PjrtWorker {
         });
         ready_rx
             .recv()
-            .map_err(|_| "pjrt worker died during startup".to_string())??;
+            .map_err(|_| DfqError::runtime("pjrt worker died during startup"))??;
         Ok(PjrtWorker { tx: Mutex::new(tx), handle: Some(handle) })
     }
 
     /// Compile an artifact ahead of time (cached inside the worker).
-    pub fn warm(&self, path: &std::path::Path) -> Result<(), String> {
+    pub fn warm(&self, path: &std::path::Path) -> Result<(), DfqError> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .lock()
             .unwrap()
             .send(Job::Warm { path: path.to_path_buf(), reply: rtx })
-            .map_err(|_| "pjrt worker stopped".to_string())?;
-        rrx.recv().map_err(|_| "pjrt worker dropped job".to_string())?
+            .map_err(|_| DfqError::runtime("pjrt worker stopped"))?;
+        rrx.recv()
+            .map_err(|_| DfqError::runtime("pjrt worker dropped job"))?
     }
 
     /// Execute an artifact with typed args.
@@ -78,14 +81,15 @@ impl PjrtWorker {
         &self,
         path: &std::path::Path,
         args: Vec<ArgValue>,
-    ) -> Result<Vec<OutValue>, String> {
+    ) -> Result<Vec<OutValue>, DfqError> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .lock()
             .unwrap()
             .send(Job::Run { path: path.to_path_buf(), args, reply: rtx })
-            .map_err(|_| "pjrt worker stopped".to_string())?;
-        rrx.recv().map_err(|_| "pjrt worker dropped job".to_string())?
+            .map_err(|_| DfqError::runtime("pjrt worker stopped"))?;
+        rrx.recv()
+            .map_err(|_| DfqError::runtime("pjrt worker dropped job"))?
     }
 }
 

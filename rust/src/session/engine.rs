@@ -1,0 +1,332 @@
+//! The unified [`Engine`] abstraction over the three deployment paths
+//! (FP oracle, bit-exact integer engine, PJRT-compiled AOT artifact),
+//! plus the blanket impl that makes **every engine a serving backend**
+//! with zero glue.
+//!
+//! All engines share one contract: NHWC f32 batches in, `(B, out_dim)`
+//! f32 score rows out (quantized paths dequantize their final codes, so
+//! argmax and metrics code is engine-agnostic).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::serve::Backend;
+use crate::engine::fp::FpEngine;
+use crate::engine::int::IntEngine;
+use crate::error::DfqError;
+use crate::graph::bn_fold::FoldedParams;
+use crate::graph::Graph;
+use crate::quant::params::QuantSpec;
+use crate::quant::scheme;
+use crate::runtime::{ArgValue, PjrtWorker};
+use crate::tensor::{Tensor, TensorI32};
+
+use super::CalibratedModel;
+
+/// Default serving batch for the shape-flexible (FP / integer) engines.
+const DEFAULT_SERVE_BATCH: usize = 16;
+
+/// Which deployment engine to build from a [`CalibratedModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// the f32 oracle over folded weights (calibration targets, FP rows)
+    Fp,
+    /// the bit-exact integer-only engine (Eq. 3–4)
+    Int,
+    /// the AOT-lowered `q_logits` artifact through the PJRT runtime
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Parse a CLI spelling (`fp` | `int` | `pjrt`).
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "fp" => Some(EngineKind::Fp),
+            "int" => Some(EngineKind::Int),
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Fp => write!(f, "fp"),
+            EngineKind::Int => write!(f, "int"),
+            EngineKind::Pjrt => write!(f, "pjrt"),
+        }
+    }
+}
+
+/// A deployable inference engine over a (calibrated) model.
+///
+/// Obtained from [`CalibratedModel::engine`] (or
+/// [`super::Session::fp_engine`] for the uncalibrated oracle). Every
+/// `Engine` is also a [`Backend`], so
+/// `InferenceService::start(engine, cfg)` works directly.
+pub trait Engine: Send + Sync {
+    /// Which deployment path this engine is.
+    fn kind(&self) -> EngineKind;
+
+    /// Flattened output features per image (`run` returns
+    /// `(B, out_dim)`).
+    fn out_dim(&self) -> usize;
+
+    /// The batch the serving layer should pad to. For the PJRT engine
+    /// this is the artifact's lowered batch; the other engines accept
+    /// any batch and advertise a serving-friendly default.
+    fn batch_size(&self) -> usize;
+
+    /// Run one serving batch: `(B, H, W, C)` normalised images to
+    /// `(B, out_dim)` f32 scores. The PJRT engine requires
+    /// `B == batch_size()` (the service guarantees it by padding); the
+    /// other engines accept any `B`.
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError>;
+
+    /// Run any number of images, chunking/padding internally where the
+    /// backing executable has a fixed batch.
+    fn run(&self, x: &Tensor) -> Result<Tensor, DfqError> {
+        // fully qualified: `Backend::run_batch` also applies via the
+        // blanket impl below
+        Engine::run_batch(self, x)
+    }
+}
+
+/// Every [`Engine`] serves: the batching inference service needs exactly
+/// the engine contract, so any engine — including `Arc<dyn Engine>`
+/// handles from [`CalibratedModel::engine`] — is a [`Backend`] with zero
+/// glue code.
+impl<E: Engine + ?Sized> Backend for E {
+    fn batch_size(&self) -> usize {
+        Engine::batch_size(self)
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+        Engine::run_batch(self, batch)
+    }
+}
+
+/// Flattened feature count of the graph's final module.
+fn out_features(graph: &Graph) -> usize {
+    let dims = graph.shapes();
+    let last = &graph.modules.last().expect("non-empty graph").name;
+    let (h, w, c) = dims[last];
+    h * w * c
+}
+
+// ---------------------------------------------------------------------
+// FP oracle
+// ---------------------------------------------------------------------
+
+pub(crate) struct FpDeployEngine {
+    graph: Arc<Graph>,
+    folded: Arc<HashMap<String, FoldedParams>>,
+    out_dim: usize,
+}
+
+impl FpDeployEngine {
+    pub(crate) fn new(
+        graph: Arc<Graph>,
+        folded: Arc<HashMap<String, FoldedParams>>,
+    ) -> FpDeployEngine {
+        let out_dim = out_features(&graph);
+        FpDeployEngine { graph, folded, out_dim }
+    }
+}
+
+impl Engine for FpDeployEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Fp
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn batch_size(&self) -> usize {
+        DEFAULT_SERVE_BATCH
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+        let b = batch.shape.dim(0);
+        let out = FpEngine::new(&self.graph, &self.folded).run(batch);
+        Ok(out.reshape(&[b, self.out_dim]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// bit-exact integer engine
+// ---------------------------------------------------------------------
+
+pub(crate) struct IntDeployEngine {
+    graph: Arc<Graph>,
+    spec: Arc<QuantSpec>,
+    /// weights/biases quantized once at build time — the serving hot
+    /// path must not re-quantize the model per batch
+    qparams: HashMap<String, crate::engine::int::QuantizedParams>,
+    out_dim: usize,
+}
+
+impl Engine for IntDeployEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Int
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn batch_size(&self) -> usize {
+        DEFAULT_SERVE_BATCH
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+        let b = batch.shape.dim(0);
+        let eng = IntEngine::with_qparams(&self.graph, &self.spec, &self.qparams);
+        let out = eng.run_dequant(batch);
+        Ok(out.reshape(&[b, self.out_dim]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT AOT artifact
+// ---------------------------------------------------------------------
+
+pub(crate) struct PjrtDeployEngine {
+    worker: PjrtWorker,
+    hlo_path: PathBuf,
+    /// quantized weights / biases / shift vectors, in artifact order
+    tail: Vec<ArgValue>,
+    spec: Arc<QuantSpec>,
+    /// fractional bits of the artifact's output codes
+    out_frac: i32,
+    batch: usize,
+    out_dim: usize,
+}
+
+impl Engine for PjrtDeployEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Pjrt
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+        let b = batch.shape.dim(0);
+        if b != self.batch {
+            return Err(DfqError::serve(format!(
+                "q_logits artifact was lowered for batch {}, got {b}",
+                self.batch
+            )));
+        }
+        let x_int = scheme::quantize_tensor(batch, self.spec.input_frac, self.spec.n_bits, false);
+        let mut argv = Vec::with_capacity(1 + self.tail.len());
+        argv.push(ArgValue::I32(x_int));
+        argv.extend(self.tail.iter().cloned());
+        let out = self.worker.run(&self.hlo_path, argv)?;
+        let codes = out
+            .first()
+            .ok_or_else(|| DfqError::runtime("q_logits artifact returned no outputs"))?
+            .as_i32()?;
+        Ok(scheme::dequantize_tensor(codes, self.out_frac).reshape(&[b, self.out_dim]))
+    }
+
+    fn run(&self, x: &Tensor) -> Result<Tensor, DfqError> {
+        let dims = x.shape.dims();
+        if dims.len() != 4 {
+            return Err(DfqError::invalid(format!(
+                "expected an NHWC batch, got shape {}",
+                x.shape
+            )));
+        }
+        let b = dims[0];
+        let per: usize = dims[1..].iter().product();
+        let mut out = Vec::with_capacity(b * self.out_dim);
+        let mut start = 0usize;
+        while start < b {
+            let take = self.batch.min(b - start);
+            let mut data = vec![0.0f32; self.batch * per];
+            data[..take * per].copy_from_slice(&x.data[start * per..(start + take) * per]);
+            let chunk = Tensor::from_vec(&[self.batch, dims[1], dims[2], dims[3]], data);
+            let res = Engine::run_batch(self, &chunk)?;
+            out.extend_from_slice(&res.data[..take * self.out_dim]);
+            start += take;
+        }
+        Ok(Tensor::from_vec(&[b, self.out_dim], out))
+    }
+}
+
+/// Build an engine over a calibrated model (the implementation behind
+/// [`CalibratedModel::engine`]).
+pub(crate) fn build(
+    cm: &CalibratedModel,
+    kind: EngineKind,
+) -> Result<Arc<dyn Engine>, DfqError> {
+    match kind {
+        EngineKind::Fp => Ok(Arc::new(FpDeployEngine::new(
+            cm.graph.clone(),
+            cm.folded.clone(),
+        ))),
+        EngineKind::Int => Ok(Arc::new(IntDeployEngine {
+            qparams: crate::engine::int::quantize_params(&cm.graph, &cm.folded, &cm.spec),
+            graph: cm.graph.clone(),
+            spec: cm.spec.clone(),
+            out_dim: out_features(&cm.graph),
+        })),
+        EngineKind::Pjrt => {
+            let src = cm.artifact.as_ref().ok_or_else(|| {
+                DfqError::runtime(
+                    "session has no q_logits artifact — open the model with \
+                     Session::from_artifacts over a directory built by `make artifacts`",
+                )
+            })?;
+            let worker = PjrtWorker::start()?;
+            worker.warm(&src.hlo_path)?; // compile up front
+            let eng = IntEngine::new(&cm.graph, &cm.folded, &cm.spec);
+            let mut tail = Vec::new();
+            for m in cm.graph.weight_modules() {
+                let qp = &eng.qparams()[&m.name];
+                tail.push(ArgValue::I32(qp.w.clone()));
+                tail.push(ArgValue::I32(TensorI32::from_vec(
+                    &[qp.b.len()],
+                    qp.b.clone(),
+                )));
+                tail.push(ArgValue::I32Vec(
+                    cm.spec.shift_vector(&cm.graph, &m.name).to_vec(),
+                ));
+            }
+            let last = &cm.graph.modules.last().expect("non-empty graph").name;
+            Ok(Arc::new(PjrtDeployEngine {
+                worker,
+                hlo_path: src.hlo_path.clone(),
+                tail,
+                out_frac: cm.spec.value_frac(&cm.graph, last),
+                spec: cm.spec.clone(),
+                batch: src.batch,
+                out_dim: out_features(&cm.graph),
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parses_cli_spellings() {
+        assert_eq!(EngineKind::parse("fp"), Some(EngineKind::Fp));
+        assert_eq!(EngineKind::parse("int"), Some(EngineKind::Int));
+        assert_eq!(EngineKind::parse("pjrt"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("tpu"), None);
+        assert_eq!(EngineKind::Pjrt.to_string(), "pjrt");
+    }
+}

@@ -1,0 +1,419 @@
+//! The unified `Session` API — **one typed pipeline** from a model's
+//! layers to a calibrated spec to a deployable engine to the serving
+//! loop:
+//!
+//! ```text
+//! LayerGraph ─┐
+//! Graph ──────┼─> Session ─calibrate─> CalibratedModel ─engine─> Engine
+//! artifacts ──┘      │                      │                      │
+//!                (fusion +             (QuantSpec +           (run/run_batch,
+//!                 BN fold)              Fig.-2 stats)          serves as a
+//!                                                             Backend with
+//!                                                             zero glue)
+//! ```
+//!
+//! Before this module the caller wired `fuse::fuse` →
+//! `HashMap<String, FoldedParams>` → `JointCalibrator` →
+//! `FpEngine`/`IntEngine`/PJRT → `coordinator::serve::Backend` by hand,
+//! with each surface using its own conventions. `Session` runs dataflow
+//! fusion and BN folding internally, [`Session::calibrate`] runs the
+//! paper's Algorithm 1 joint search, and [`CalibratedModel::engine`]
+//! yields a unified [`Engine`] trait object that the batching inference
+//! service accepts directly (every `Engine` is a
+//! [`crate::coordinator::serve::Backend`] via a blanket impl).
+
+pub mod engine;
+
+pub use engine::{Engine, EngineKind};
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::pool::Pool;
+use crate::data::artifacts::Artifacts;
+use crate::error::DfqError;
+use crate::graph::bn_fold::{fold_bn, FoldedParams};
+use crate::graph::fuse;
+use crate::graph::layers::LayerGraph;
+use crate::graph::Graph;
+use crate::quant::joint::{CalibConfig, CalibOutcome, JointCalibrator};
+use crate::quant::params::QuantSpec;
+use crate::quant::stats::CalibStats;
+use crate::tensor::Tensor;
+
+/// Where a session's AOT `q_logits` artifact lives (recorded by
+/// [`Session::from_artifacts`] so [`EngineKind::Pjrt`] needs no extra
+/// wiring).
+#[derive(Clone, Debug)]
+pub(crate) struct ArtifactSource {
+    pub(crate) hlo_path: PathBuf,
+    pub(crate) batch: usize,
+}
+
+/// A model ready to calibrate: the unified-module graph plus its folded
+/// parameters, with provenance (fusion statistics, artifact paths) kept
+/// for the later pipeline stages.
+pub struct Session {
+    graph: Arc<Graph>,
+    folded: Arc<HashMap<String, FoldedParams>>,
+    /// (naive, fused) quantization-point counts when built from layers
+    fusion: Option<(usize, usize)>,
+    artifact: Option<ArtifactSource>,
+}
+
+impl Session {
+    /// Open a session over an already-deployable unified graph and its
+    /// folded parameters (e.g. a natively built model with synthetic
+    /// weights). Validates the dataflow and parameter coverage.
+    pub fn from_graph(
+        graph: Graph,
+        folded: HashMap<String, FoldedParams>,
+    ) -> Result<Session, DfqError> {
+        graph.validate()?;
+        if graph.modules.is_empty() {
+            return Err(DfqError::graph("empty graph: no modules to deploy"));
+        }
+        for m in graph.weight_modules() {
+            if !folded.contains_key(&m.name) {
+                return Err(DfqError::data(format!(
+                    "module '{}' has no folded parameters",
+                    m.name
+                )));
+            }
+        }
+        Ok(Session {
+            graph: Arc::new(graph),
+            folded: Arc::new(folded),
+            fusion: None,
+            artifact: None,
+        })
+    }
+
+    /// Open a session from a fine-grained framework export: runs the
+    /// paper's dataflow fusion (§1.2.1) and BN folding internally.
+    /// `params` is the raw parameter map (`{conv}/w`,
+    /// `{conv}/bn/{gamma,beta,mean,var}` or `{conv}/b`).
+    pub fn from_layers(
+        layers: &LayerGraph,
+        params: &HashMap<String, Tensor>,
+    ) -> Result<Session, DfqError> {
+        let fused = fuse::fuse(layers)?;
+        let folded = fold_bn(&fused.graph, params)?;
+        let mut s = Session::from_graph(fused.graph, folded)?;
+        s.fusion = Some((fused.naive_points, fused.fused_points));
+        Ok(s)
+    }
+
+    /// Open a session for a trained model in an artifacts directory
+    /// (graph from the manifest spec, weights loaded and BN-folded). If
+    /// the model has a `q_logits` AOT artifact its path is kept so
+    /// [`EngineKind::Pjrt`] works without further wiring.
+    pub fn from_artifacts(art: &Artifacts, model: &str) -> Result<Session, DfqError> {
+        let bundle = art.load_model(model)?;
+        let artifact = match (
+            art.hlo_path(model, "q_logits"),
+            art.artifact_batch(model, "q_logits"),
+        ) {
+            (Ok(hlo_path), Ok(batch)) => Some(ArtifactSource { hlo_path, batch }),
+            (Err(e), _) | (_, Err(e)) => {
+                // a model without a q_logits artifact is fine (Fp/Int
+                // engines still work) — but say why Pjrt won't be
+                crate::warn_!(
+                    "model '{model}': q_logits artifact unavailable ({e}); \
+                     EngineKind::Pjrt will not be buildable from this session"
+                );
+                None
+            }
+        };
+        let mut s = Session::from_graph(bundle.graph, bundle.folded)?;
+        s.artifact = artifact;
+        Ok(s)
+    }
+
+    /// The deployable unified-module graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The quantization-point report (paper Fig. 1 accounting) — `Some`
+    /// only when the session ran the fusion pass itself
+    /// ([`Session::from_layers`]).
+    pub fn fusion_report(&self) -> Option<String> {
+        self.fusion.map(|(naive_points, fused_points)| {
+            fuse::quant_point_report(&fuse::FuseResult {
+                graph: (*self.graph).clone(),
+                naive_points,
+                fused_points,
+            })
+        })
+    }
+
+    /// The floating-point oracle engine (needs no calibration) — the FP
+    /// rows of the paper's tables.
+    pub fn fp_engine(&self) -> Arc<dyn Engine> {
+        Arc::new(engine::FpDeployEngine::new(
+            self.graph.clone(),
+            self.folded.clone(),
+        ))
+    }
+
+    /// Joint-calibrate with Algorithm 1 (serial). `calib` is the
+    /// normalised NHWC calibration batch (the paper uses one image).
+    pub fn calibrate(
+        &self,
+        cfg: CalibConfig,
+        calib: &Tensor,
+    ) -> Result<CalibratedModel, DfqError> {
+        self.check_calib(calib)?;
+        let out = JointCalibrator::new(cfg).calibrate(&self.graph, &self.folded, calib);
+        Ok(self.wrap(out))
+    }
+
+    /// Joint-calibrate with the per-module grid search fanned across a
+    /// worker pool — numerically identical to [`Session::calibrate`].
+    pub fn calibrate_on(
+        &self,
+        pool: &Pool,
+        cfg: CalibConfig,
+        calib: &Tensor,
+    ) -> Result<CalibratedModel, DfqError> {
+        self.check_calib(calib)?;
+        let out = crate::coordinator::calib::calibrate_parallel(
+            pool,
+            cfg,
+            &self.graph,
+            &self.folded,
+            calib,
+        );
+        Ok(self.wrap(out))
+    }
+
+    fn check_calib(&self, calib: &Tensor) -> Result<(), DfqError> {
+        let (h, w, c) = self.graph.input_hwc;
+        let d = calib.shape.dims();
+        if d.len() != 4 || d[0] == 0 || d[1] != h || d[2] != w || d[3] != c {
+            return Err(DfqError::invalid(format!(
+                "calibration batch {} does not match the model input (N,{h},{w},{c})",
+                calib.shape
+            )));
+        }
+        Ok(())
+    }
+
+    fn wrap(&self, out: CalibOutcome) -> CalibratedModel {
+        CalibratedModel {
+            graph: self.graph.clone(),
+            folded: self.folded.clone(),
+            artifact: self.artifact.clone(),
+            spec: Arc::new(out.spec),
+            stats: out.stats,
+            seconds: out.seconds,
+        }
+    }
+}
+
+/// A calibrated model: the session's graph and parameters plus the
+/// [`QuantSpec`] Algorithm 1 chose. Engines built from it share the
+/// underlying data (cheap `Arc` clones).
+pub struct CalibratedModel {
+    pub(crate) graph: Arc<Graph>,
+    pub(crate) folded: Arc<HashMap<String, FoldedParams>>,
+    pub(crate) artifact: Option<ArtifactSource>,
+    pub(crate) spec: Arc<QuantSpec>,
+    /// per-module reconstruction statistics (paper Fig. 2)
+    pub stats: CalibStats,
+    /// calibration wall-clock seconds (paper Table 2)
+    pub seconds: f64,
+}
+
+impl CalibratedModel {
+    /// The calibrated quantization parameters.
+    pub fn spec(&self) -> &QuantSpec {
+        &self.spec
+    }
+
+    /// The deployable unified-module graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Serialize the spec to a JSON file (`dfq calibrate --save`).
+    pub fn save_spec(&self, path: impl AsRef<std::path::Path>) -> Result<(), DfqError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.spec.to_json().dump())
+            .map_err(|e| DfqError::io(format!("write {}", path.display()), &e))
+    }
+
+    /// Build a deployable [`Engine`]. Any engine can be handed straight
+    /// to [`crate::coordinator::serve::InferenceService::start`] — every
+    /// `Engine` is a serving `Backend` via the blanket impl.
+    pub fn engine(&self, kind: EngineKind) -> Result<Arc<dyn Engine>, DfqError> {
+        engine::build(self, kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::{InferenceService, ServeConfig};
+    use crate::graph::{ModuleKind, UnifiedModule};
+    use crate::util::rng::Pcg;
+
+    /// A small conv -> gap -> fc model with random folded weights.
+    fn tiny() -> (Graph, HashMap<String, FoldedParams>) {
+        let graph = Graph {
+            name: "tiny".into(),
+            input_hwc: (8, 8, 3),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c0".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 4, cout: 5 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut rng = Pcg::new(21);
+        let mut folded = HashMap::new();
+        for m in graph.weight_modules() {
+            let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+                ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                    (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+                }
+                ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+                ModuleKind::Gap => unreachable!(),
+            };
+            let std = (2.0 / fan_in as f32).sqrt();
+            let n: usize = shape.iter().product();
+            let cout = *shape.last().unwrap();
+            folded.insert(
+                m.name.clone(),
+                FoldedParams {
+                    w: Tensor::from_vec(
+                        &shape,
+                        (0..n).map(|_| rng.normal_ms(0.0, std)).collect(),
+                    ),
+                    b: (0..cout).map(|_| rng.normal_ms(0.0, 0.05)).collect(),
+                },
+            );
+        }
+        (graph, folded)
+    }
+
+    fn calib_batch(seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed);
+        Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn from_graph_rejects_missing_params() {
+        let (graph, mut folded) = tiny();
+        folded.remove("fc");
+        let err = Session::from_graph(graph, folded).unwrap_err();
+        assert!(err.to_string().contains("fc"), "{err}");
+    }
+
+    #[test]
+    fn from_graph_rejects_bad_dataflow() {
+        let (mut graph, folded) = tiny();
+        graph.modules[0].src = "nope".into();
+        assert!(matches!(
+            Session::from_graph(graph, folded),
+            Err(DfqError::Graph(_))
+        ));
+    }
+
+    #[test]
+    fn calibrate_rejects_mismatched_input() {
+        let (graph, folded) = tiny();
+        let session = Session::from_graph(graph, folded).unwrap();
+        let bad = Tensor::zeros(&[1, 4, 4, 3]);
+        assert!(matches!(
+            session.calibrate(CalibConfig::default(), &bad),
+            Err(DfqError::InvalidInput(_))
+        ));
+    }
+
+    #[test]
+    fn pipeline_fp_and_int_engines_agree() {
+        let (graph, folded) = tiny();
+        let session = Session::from_graph(graph, folded).unwrap();
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &calib_batch(22))
+            .unwrap();
+        assert_eq!(calibrated.spec().modules.len(), 2);
+        let mut rng = Pcg::new(23);
+        let x = Tensor::from_vec(&[3, 8, 8, 3], (0..576).map(|_| rng.normal()).collect());
+        let fp = session.fp_engine().run(&x).unwrap();
+        let int = calibrated.engine(EngineKind::Int).unwrap();
+        let q = int.run(&x).unwrap();
+        assert_eq!(fp.shape.dims(), &[3, 5]);
+        assert_eq!(q.shape.dims(), &[3, 5]);
+        assert_eq!(int.out_dim(), 5);
+        let mse = crate::util::mathutil::mse(&q.data, &fp.data);
+        assert!(mse < 0.05, "int engine diverged: mse {mse}");
+    }
+
+    #[test]
+    fn parallel_calibration_matches_serial() {
+        let (graph, folded) = tiny();
+        let session = Session::from_graph(graph, folded).unwrap();
+        let calib = calib_batch(24);
+        let a = session.calibrate(CalibConfig::default(), &calib).unwrap();
+        let b = session
+            .calibrate_on(&Pool::new(4), CalibConfig::default(), &calib)
+            .unwrap();
+        assert_eq!(a.spec().input_frac, b.spec().input_frac);
+        for (k, v) in &a.spec().modules {
+            assert_eq!(b.spec().modules[k], *v, "module {k}");
+        }
+    }
+
+    #[test]
+    fn pjrt_engine_without_artifact_is_a_typed_error() {
+        let (graph, folded) = tiny();
+        let session = Session::from_graph(graph, folded).unwrap();
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &calib_batch(25))
+            .unwrap();
+        assert!(matches!(
+            calibrated.engine(EngineKind::Pjrt),
+            Err(DfqError::Runtime(_))
+        ));
+    }
+
+    #[test]
+    fn any_engine_serves_via_blanket_backend_impl() {
+        let (graph, folded) = tiny();
+        let session = Session::from_graph(graph, folded).unwrap();
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &calib_batch(26))
+            .unwrap();
+        let engine = calibrated.engine(EngineKind::Int).unwrap();
+        let mut rng = Pcg::new(27);
+        let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
+        let want = engine.run(&x).unwrap();
+        // zero glue: the Arc<dyn Engine> goes straight into the service
+        let svc = InferenceService::start(engine, ServeConfig::default());
+        let got = svc.infer(x).unwrap();
+        assert_eq!(got, want.data);
+        let m = svc.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+}

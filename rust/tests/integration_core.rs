@@ -1,18 +1,15 @@
 //! Artifact-free integration tests: the whole pipeline (dataflow fusion →
-//! joint calibration → integer-only deployment) on natively-built models
-//! with synthetic weights. These run in any checkout; the artifact-backed
-//! tests live in integration_artifacts.rs / integration_pjrt.rs.
+//! joint calibration → integer-only deployment) through the unified
+//! `Session` API on natively-built models with synthetic weights. These
+//! run in any checkout; the artifact-backed tests live in
+//! integration_artifacts.rs / integration_pjrt.rs.
 
 use std::collections::HashMap;
 
-use dfq::engine::fp::FpEngine;
-use dfq::engine::int::IntEngine;
-use dfq::graph::bn_fold::{fold_bn, FoldedParams};
-use dfq::graph::fuse;
-use dfq::graph::ModuleKind;
+use dfq::coordinator::pool::Pool;
+use dfq::graph::bn_fold::FoldedParams;
 use dfq::models::{detector, resnet};
 use dfq::prelude::*;
-use dfq::quant::joint::{CalibConfig, JointCalibrator};
 use dfq::util::mathutil::mse;
 
 /// Random folded params for any graph.
@@ -45,13 +42,16 @@ fn random_folded(graph: &Graph, seed: u64) -> HashMap<String, FoldedParams> {
 fn full_pipeline_resnet_s_int_close_to_fp() {
     let graph = resnet::resnet_graph("resnet_s", 1, 10);
     let folded = random_folded(&graph, 1);
+    let session = Session::from_graph(graph, folded).unwrap();
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 2);
-    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+    let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
 
     let x = dfq::data::dataset::synth_images(8, 32, 3, 3);
-    let fp = FpEngine::new(&graph, &folded).run(&x);
-    let eng = IntEngine::new(&graph, &folded, &out.spec);
-    let q = eng.run_dequant(&x);
+    let fp = session.fp_engine().run(&x).unwrap();
+    let engine = calibrated.engine(EngineKind::Int).unwrap();
+    let q = engine.run(&x).unwrap();
+    assert_eq!(fp.shape.dims(), &[8, 10]);
+    assert_eq!(q.shape.dims(), &[8, 10]);
     let rel = mse(&q.data, &fp.data)
         / (fp.data.iter().map(|v| (v * v) as f64).sum::<f64>() / fp.data.len() as f64).max(1e-12);
     assert!(rel < 0.05, "relative logit MSE {rel}");
@@ -78,20 +78,20 @@ fn full_pipeline_resnet_s_int_close_to_fp() {
 
 #[test]
 fn pipeline_from_layer_graph_via_fusion() {
-    // start at the fine-grained form with real BN stats, fold, calibrate
+    // start at the fine-grained form with real BN stats; the session
+    // runs the fusion pass and BN folding internally
     let lg = resnet::resnet_layers("resnet_s", 1, 10);
-    let fused = fuse::fuse(&lg).unwrap();
-    let graph = fused.graph;
-    // raw params with BN (random but well-conditioned)
+    // raw params with BN (random but well-conditioned), keyed by the
+    // conv/dense layer names (= unified module names after fusion)
     let mut rng = Pcg::new(4);
     let mut params: HashMap<String, Tensor> = HashMap::new();
-    for m in graph.weight_modules() {
-        match &m.kind {
-            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+    for l in &lg.layers {
+        match &l.op {
+            dfq::graph::layers::LayerOp::Conv { kh, kw, cin, cout, .. } => {
                 let n = kh * kw * cin * cout;
                 let std = (2.0 / (kh * kw * cin) as f32).sqrt();
                 params.insert(
-                    format!("{}/w", m.name),
+                    format!("{}/w", l.name),
                     Tensor::from_vec(
                         &[*kh, *kw, *cin, *cout],
                         (0..n).map(|_| rng.normal_ms(0.0, std)).collect(),
@@ -104,7 +104,7 @@ fn pipeline_from_layer_graph_via_fusion() {
                     ("var", 0.5, 1.5),
                 ] {
                     params.insert(
-                        format!("{}/bn/{k}", m.name),
+                        format!("{}/bn/{k}", l.name),
                         Tensor::from_vec(
                             &[*cout],
                             (0..*cout).map(|_| rng.uniform(lo, hi)).collect(),
@@ -112,26 +112,36 @@ fn pipeline_from_layer_graph_via_fusion() {
                     );
                 }
             }
-            ModuleKind::Dense { cin, cout } => {
+            dfq::graph::layers::LayerOp::Dense { cin, cout } => {
                 let std = (2.0 / *cin as f32).sqrt();
                 params.insert(
-                    format!("{}/w", m.name),
+                    format!("{}/w", l.name),
                     Tensor::from_vec(
                         &[*cin, *cout],
                         (0..cin * cout).map(|_| rng.normal_ms(0.0, std)).collect(),
                     ),
                 );
-                params.insert(format!("{}/b", m.name), Tensor::zeros(&[*cout]));
+                params.insert(format!("{}/b", l.name), Tensor::zeros(&[*cout]));
             }
-            ModuleKind::Gap => {}
+            _ => {}
         }
     }
-    let folded = fold_bn(&graph, &params).unwrap();
+    let session = Session::from_layers(&lg, &params).unwrap();
+    // the session kept the fusion accounting
+    let report = session.fusion_report().expect("built from layers");
+    assert!(report.contains("unified modules"), "{report}");
+    // fused graph must equal the native builder's deployable graph
+    let native = resnet::resnet_graph("resnet_s", 1, 10);
+    assert_eq!(session.graph().modules, native.modules);
+
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 5);
-    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
-    assert_eq!(out.spec.modules.len(), graph.weight_layer_count());
+    let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
+    assert_eq!(
+        calibrated.spec().modules.len(),
+        session.graph().weight_layer_count()
+    );
     // shifts deployed in a hardware-plausible range (paper Fig 2b: [1,10])
-    let (lo, _med, hi) = out.stats.shift_summary();
+    let (lo, _med, hi) = calibrated.stats.shift_summary();
     assert!(lo >= -2 && hi <= 20, "shift range [{lo}, {hi}]");
 }
 
@@ -139,24 +149,24 @@ fn pipeline_from_layer_graph_via_fusion() {
 fn detnet_pipeline_decodes() {
     let graph = detector::detnet_graph();
     let folded = random_folded(&graph, 6);
+    let session = Session::from_graph(graph, folded).unwrap();
     // detnet input is 64x128
     let mut rng = Pcg::new(8);
     let calib = Tensor::from_vec(
         &[1, 64, 128, 3],
         (0..64 * 128 * 3).map(|_| rng.normal()).collect(),
     );
-    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
-    let eng = IntEngine::new(&graph, &folded, &out.spec);
+    let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
+    let engine = calibrated.engine(EngineKind::Int).unwrap();
     let x = Tensor::from_vec(
         &[2, 64, 128, 3],
         (0..2 * 64 * 128 * 3).map(|_| rng.normal()).collect(),
     );
-    let head_int = eng.run(&x);
-    assert_eq!(head_int.shape.dims(), &[2, 8, 16, 8]);
-    let head = dfq::quant::scheme::dequantize_tensor(
-        &head_int,
-        out.spec.value_frac(&graph, "head"),
-    );
+    // engines return flattened (B, out_dim) rows, already dequantized
+    let head_flat = engine.run(&x).unwrap();
+    assert_eq!(engine.out_dim(), 8 * 16 * 8);
+    assert_eq!(head_flat.shape.dims(), &[2, 8 * 16 * 8]);
+    let head = head_flat.reshape(&[2, 8, 16, 8]);
     // decoding must not panic and must respect thresholds
     let dets = detector::decode(&head, 0.99, 0.5, 0);
     for d in &dets {
@@ -168,19 +178,20 @@ fn detnet_pipeline_decodes() {
 fn quant_spec_file_roundtrip() {
     let graph = resnet::resnet_graph("resnet_s", 1, 10);
     let folded = random_folded(&graph, 9);
+    let session = Session::from_graph(graph.clone(), folded.clone()).unwrap();
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 10);
-    let out = JointCalibrator::new(CalibConfig::default()).calibrate(&graph, &folded, &calib);
+    let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
     let path = std::env::temp_dir().join("dfq_spec_roundtrip.json");
-    std::fs::write(&path, out.spec.to_json().dump()).unwrap();
+    calibrated.save_spec(&path).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     let spec2 = QuantSpec::from_json(&dfq::util::json::Json::parse(&text).unwrap()).unwrap();
-    assert_eq!(spec2.input_frac, out.spec.input_frac);
-    for (k, v) in &out.spec.modules {
+    assert_eq!(spec2.input_frac, calibrated.spec().input_frac);
+    for (k, v) in &calibrated.spec().modules {
         assert_eq!(spec2.modules[k], *v);
     }
     // the round-tripped spec drives the engine identically
     let x = dfq::data::dataset::synth_images(2, 32, 3, 11);
-    let a = IntEngine::new(&graph, &folded, &out.spec).run(&x);
+    let a = IntEngine::new(&graph, &folded, calibrated.spec()).run(&x);
     let b = IntEngine::new(&graph, &folded, &spec2).run(&x);
     assert_eq!(a.data, b.data);
     std::fs::remove_file(&path).ok();
@@ -190,14 +201,16 @@ fn quant_spec_file_roundtrip() {
 fn bit_width_sweep_monotone_on_real_graph() {
     let graph = resnet::resnet_graph("resnet_s", 1, 10);
     let folded = random_folded(&graph, 12);
+    let session = Session::from_graph(graph, folded).unwrap();
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 13);
     let x = dfq::data::dataset::synth_images(4, 32, 3, 14);
-    let fp = FpEngine::new(&graph, &folded).run(&x);
+    let fp = session.fp_engine().run(&x).unwrap();
     let mut errs = Vec::new();
     for bits in [8u32, 6, 4] {
-        let out = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() })
-            .calibrate(&graph, &folded, &calib);
-        let q = IntEngine::new(&graph, &folded, &out.spec).run_dequant(&x);
+        let calibrated = session
+            .calibrate(CalibConfig { n_bits: bits, ..Default::default() }, &calib)
+            .unwrap();
+        let q = calibrated.engine(EngineKind::Int).unwrap().run(&x).unwrap();
         errs.push(mse(&q.data, &fp.data));
     }
     // Table-4 shape: error grows as precision drops
@@ -208,14 +221,42 @@ fn bit_width_sweep_monotone_on_real_graph() {
 fn parallel_calibration_consistent_under_pool_sizes() {
     let graph = resnet::resnet_graph("resnet_s", 1, 10);
     let folded = random_folded(&graph, 15);
+    let session = Session::from_graph(graph, folded).unwrap();
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 16);
     let cfg = CalibConfig::default();
-    let base = JointCalibrator::new(cfg).calibrate(&graph, &folded, &calib);
+    let base = session.calibrate(cfg, &calib).unwrap();
     for workers in [1usize, 2, 8] {
-        let pool = dfq::coordinator::pool::Pool::new(workers);
-        let par = dfq::coordinator::calib::calibrate_parallel(&pool, cfg, &graph, &folded, &calib);
-        for (k, v) in &base.spec.modules {
-            assert_eq!(par.spec.modules[k], *v, "workers={workers} module={k}");
+        let par = session
+            .calibrate_on(&Pool::new(workers), cfg, &calib)
+            .unwrap();
+        for (k, v) in &base.spec().modules {
+            assert_eq!(par.spec().modules[k], *v, "workers={workers} module={k}");
         }
     }
+}
+
+#[test]
+fn session_engine_serves_through_inference_service() {
+    use dfq::coordinator::serve::{InferenceService, ServeConfig};
+    use std::sync::Arc;
+
+    let graph = resnet::resnet_graph("resnet_s", 1, 10);
+    let folded = random_folded(&graph, 17);
+    let session = Session::from_graph(graph, folded).unwrap();
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 18);
+    let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
+    let engine = calibrated.engine(EngineKind::Int).unwrap();
+    let x = dfq::data::dataset::synth_images(3, 32, 3, 19);
+    let want = engine.run(&x).unwrap();
+
+    // the blanket Backend impl: the Arc<dyn Engine> is the backend
+    let svc = Arc::new(InferenceService::start(engine, ServeConfig::default()));
+    let per = 32 * 32 * 3;
+    for i in 0..3 {
+        let img = Tensor::from_vec(&[1, 32, 32, 3], x.data[i * per..(i + 1) * per].to_vec());
+        let row = svc.infer(img).unwrap();
+        assert_eq!(row, want.data[i * 10..(i + 1) * 10].to_vec(), "image {i}");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 3);
 }

@@ -4,16 +4,20 @@
 //!
 //!     rust scheme == jnp ref == Pallas kernel == HLO artifact == engine
 //!
-//! Skipped when `artifacts/` is absent.
+//! Skipped when `artifacts/` is absent, or when the crate was built
+//! without the `pjrt` feature (the stub runtime cannot execute HLO).
 
 use dfq::data::artifacts::Artifacts;
-use dfq::engine::int::IntEngine;
 use dfq::prelude::*;
 use dfq::quant::scheme;
 use dfq::runtime::{ArgValue, PjrtWorker};
 use dfq::util::rng::Pcg;
 
 fn art() -> Option<Artifacts> {
+    if !dfq::runtime::pjrt_enabled() {
+        eprintln!("SKIP (built without the 'pjrt' feature)");
+        return None;
+    }
     match Artifacts::open("artifacts") {
         Ok(a) => Some(a),
         Err(e) => {
@@ -198,6 +202,24 @@ fn q_logits_artifact_matches_int_engine() {
     let want = acts.remove(&bundle.graph.modules.last().unwrap().name).unwrap();
     assert_eq!(got.shape.dims(), want.shape.dims());
     assert_eq!(got.data, want.data, "PJRT artifact != integer engine");
+}
+
+#[test]
+fn session_pjrt_engine_matches_int_engine() {
+    // the Session surface: both engines come from the same calibrated
+    // model, dequantize the same codes, and must agree exactly — even
+    // when the requested batch is not the artifact's lowered batch
+    // (the PJRT engine pads/chunks internally).
+    let Some(art) = art() else { return };
+    let session = Session::from_artifacts(&art, "resnet_s").unwrap();
+    let calib = art.calibration_images(1).unwrap();
+    let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
+    let ds = art.classification_set("synthimagenet_val").unwrap();
+    let (x, _) = ds.batch(0, 5);
+    let a = calibrated.engine(EngineKind::Int).unwrap().run(&x).unwrap();
+    let b = calibrated.engine(EngineKind::Pjrt).unwrap().run(&x).unwrap();
+    assert_eq!(a.shape.dims(), b.shape.dims());
+    assert_eq!(a.data, b.data, "PJRT engine != integer engine");
 }
 
 #[test]
