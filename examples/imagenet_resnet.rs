@@ -40,7 +40,9 @@ fn main() {
             .expect("joint calibration");
         let fp = experiments::eval_engine_top1(&*session.fp_engine(), &ds, opt)
             .expect("fp eval");
-        let int = calibrated.engine(EngineKind::Int).expect("int engine");
+        let int = calibrated
+            .engine(EngineKind::Int { threads: 0 })
+            .expect("int engine");
         let q = experiments::eval_engine_top1(&*int, &ds, opt).expect("int eval");
         // the scaling-factor baselines stay on the low-level fake-quant
         // surface (they simulate quantizers in f32, not deployments)

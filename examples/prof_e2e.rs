@@ -17,14 +17,14 @@ fn main() {
     let (x, _) = ds.batch(0, 8);
     let xq = eng.quantize_input(&x);
     // warm
-    for _ in 0..3 { eng.run_acts(&xq); }
+    for _ in 0..3 { eng.run_acts(&xq).expect("calibrated model runs"); }
     let mut per: HashMap<String, f64> = HashMap::new();
     for _ in 0..10 {
         let mut acts: HashMap<String, dfq::tensor::TensorI32> = HashMap::new();
         acts.insert("input".to_string(), xq.clone());
         for m in &bundle.graph.modules {
             let t = std::time::Instant::now();
-            let o = eng.run_module(m, &acts);
+            let o = eng.run_module(m, &acts).expect("calibrated model runs");
             *per.entry(m.name.clone()).or_default() += t.elapsed().as_secs_f64();
             acts.insert(m.name.clone(), o);
         }

@@ -65,7 +65,10 @@ fn main() {
     //    are the same unified `Engine` surface
     let x = dfq::data::dataset::synth_images(4, 32, 3, 43);
     let fp_logits = session.fp_engine().run(&x).expect("fp engine");
-    let int_engine = calibrated.engine(EngineKind::Int).expect("int engine");
+    // threads: 0 shards batches across all cores (bit-identical to serial)
+    let int_engine = calibrated
+        .engine(EngineKind::Int { threads: 0 })
+        .expect("int engine");
     let q_logits = int_engine.run(&x).expect("int engine run");
     println!("== FP vs integer-only inference ==");
     println!("logit MSE: {:.6}", mse(&q_logits.data, &fp_logits.data));

@@ -6,9 +6,11 @@
 //! engine is a serving `Backend` via the blanket impl — zero glue.
 //!
 //! Requires `make artifacts` (and the `pjrt` cargo feature for the
-//! `pjrt` mode).
+//! `pjrt` mode). The `int` modes run the data-parallel integer engine:
+//! `int` is serial, `int:N` shards batches across N workers, `int:auto`
+//! sizes to the machine — all bit-identical.
 //!
-//!     cargo run --release --example serve_demo [pjrt|int|fp] [n_requests]
+//!     cargo run --release --example serve_demo [pjrt|int|int:N|int:auto|fp] [n_requests]
 
 use std::sync::Arc;
 
@@ -22,7 +24,7 @@ fn main() {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(64);
-    let kind = EngineKind::parse(&mode).expect("mode must be fp|int|pjrt");
+    let kind = EngineKind::parse(&mode).expect("mode must be fp|int|int:N|int:auto|pjrt");
     let model = "resnet_s";
 
     let art = Artifacts::open("artifacts").expect("run `make artifacts` first");

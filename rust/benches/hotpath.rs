@@ -116,7 +116,7 @@ fn main() {
     let xb = dfq::data::dataset::synth_images(8, 32, 3, 2);
     let macs = graph.total_macs() as f64 * 8.0;
     let st = bench(1, 10, || {
-        std::hint::black_box(eng.run(&xb));
+        std::hint::black_box(eng.run(&xb).expect("int engine run"));
     });
     report("resnet_s int8 e2e (batch 8)", macs, "GMAC/s", &st);
     println!(
@@ -127,11 +127,50 @@ fn main() {
 
     // --- the same e2e path through the Engine abstraction (measures
     //     the session-surface overhead: per-batch requantize + dequant) ---
-    let engine = calibrated.engine(EngineKind::Int).expect("int engine");
+    let engine = calibrated
+        .engine(EngineKind::Int { threads: 1 })
+        .expect("int engine");
     let st = bench(1, 10, || {
         std::hint::black_box(engine.run(&xb).expect("engine run"));
     });
     report("resnet_s int8 e2e via Engine (batch 8)", macs, "GMAC/s", &st);
+
+    // --- data-parallel integer engine: batch sharded along N across the
+    //     coordinator pool (bit-identical to serial by construction;
+    //     asserted here and property-tested in tests/prop_engine.rs) ---
+    let xb16 = dfq::data::dataset::synth_images(16, 32, 3, 4);
+    let macs16 = graph.total_macs() as f64 * 16.0;
+    let serial = calibrated
+        .engine(EngineKind::Int { threads: 1 })
+        .expect("serial int engine");
+    let st_serial = bench(1, 10, || {
+        std::hint::black_box(serial.run(&xb16).expect("serial run"));
+    });
+    report("int8 serve batch 16, serial", macs16, "GMAC/s", &st_serial);
+    let want = serial.run(&xb16).expect("serial run");
+    for threads in [2usize, 4] {
+        let par = calibrated
+            .engine(EngineKind::Int { threads })
+            .expect("parallel int engine");
+        assert_eq!(
+            par.run(&xb16).expect("parallel run").data,
+            want.data,
+            "parallel engine must be bit-identical"
+        );
+        let st_par = bench(1, 10, || {
+            std::hint::black_box(par.run(&xb16).expect("parallel run"));
+        });
+        report(
+            &format!("int8 serve batch 16, {threads} threads"),
+            macs16,
+            "GMAC/s",
+            &st_par,
+        );
+        println!(
+            "  -> {:.2}x batch-inference speedup vs serial ({threads} threads)",
+            st_serial.median() / st_par.median()
+        );
+    }
 
     // --- Algorithm-1 single-module search (calibration inner loop) ---
     let module = graph.module("s0b0/c1").unwrap();
@@ -140,6 +179,7 @@ fn main() {
         let mut acts = HashMap::new();
         acts.insert("input".to_string(), x_int.clone());
         eng.run_module(graph.module("stem").unwrap(), &acts)
+            .expect("stem runs")
     };
     let p = &folded["s0b0/c1"];
     let fp_engine = dfq::engine::fp::FpEngine::new(&graph, &folded);

@@ -46,7 +46,9 @@ pub fn calibrate_parallel(
         match &m.kind {
             ModuleKind::Gap => {
                 let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                let out = eng.run_module(m, &iacts);
+                let out = eng
+                    .run_module(m, &iacts)
+                    .expect("calibration prefix covers every executed module");
                 let n = spec.value_frac(graph, &m.src);
                 let deq = scheme::dequantize_tensor(&out, n);
                 stats.push(ModuleStat {
@@ -96,7 +98,9 @@ pub fn calibrate_parallel(
                 let _ = evaluated;
                 spec.modules.insert(m.name.clone(), best.shifts);
                 let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                let out = eng.run_module(m, &iacts);
+                let out = eng
+                    .run_module(m, &iacts)
+                    .expect("calibration prefix covers every executed module");
                 let deq = scheme::dequantize_tensor(&out, best.shifts.n_o);
                 stats.push(ModuleStat {
                     name: m.name.clone(),

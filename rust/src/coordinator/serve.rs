@@ -21,6 +21,13 @@ use crate::tensor::Tensor;
 pub trait Backend: Send + Sync {
     /// the batch size the backend expects (requests are padded to it)
     fn batch_size(&self) -> usize;
+    /// per-image `(H, W, C)` the backend expects, when known — lets the
+    /// collector answer mismatched requests individually instead of
+    /// letting one of them poison (or panic) a whole batch. `None`
+    /// accepts any uniform single-image shape.
+    fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+        None
+    }
     /// run a full batch `(B, H, W, C)` -> `(B, out_dim)`
     fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError>;
 }
@@ -166,21 +173,55 @@ fn run_batch<B: Backend + ?Sized>(
     bsz: usize,
     metrics: &Arc<Mutex<ServeMetrics>>,
 ) {
+    // a malformed request must fail individually with a typed error —
+    // never panic the collector thread (which would strand every later
+    // request with "service stopped"). The batch takes its shape from
+    // the first well-formed single-image request — one that matches the
+    // backend's expected image shape when it declares one — and anything
+    // that can't share that shape is answered on its own.
+    let hwc = backend.input_hwc();
+    let well_formed = |d: &[usize]| {
+        d.len() == 4
+            && d[0] == 1
+            && hwc.map_or(true, |(h, w, c)| d[1] == h && d[2] == w && d[3] == c)
+    };
+    let lead: Option<Vec<usize>> = pending
+        .iter()
+        .map(|r| r.image.shape.dims())
+        .find(|d| well_formed(d))
+        .map(|d| d.to_vec());
+    let mut rows: Vec<&Request> = Vec::with_capacity(pending.len());
+    for r in pending {
+        match &lead {
+            Some(l) if r.image.shape.dims() == l.as_slice() => rows.push(r),
+            _ => {
+                r.resp
+                    .send(Err(DfqError::invalid(format!(
+                        "request image shape {} cannot join this batch \
+                         (expected a single NHWC image matching the batch \
+                         leader)",
+                        r.image.shape
+                    ))))
+                    .ok();
+            }
+        }
+    }
+    // when a lead exists it is itself in `rows`, so `rows` is non-empty
+    let Some(lead) = lead else { return };
     // assemble, padding the tail with zeros
-    let dims = pending[0].image.shape.dims().to_vec();
-    let per = dims[1] * dims[2] * dims[3];
+    let per = lead[1] * lead[2] * lead[3];
     let mut data = vec![0.0f32; bsz * per];
-    for (i, r) in pending.iter().enumerate() {
+    for (i, r) in rows.iter().enumerate() {
         data[i * per..(i + 1) * per].copy_from_slice(&r.image.data);
     }
-    let batch = Tensor::from_vec(&[bsz, dims[1], dims[2], dims[3]], data);
+    let batch = Tensor::from_vec(&[bsz, lead[1], lead[2], lead[3]], data);
     match backend.run_batch(&batch) {
         Ok(out) => {
             let odim = out.numel() / bsz;
             let mut m = metrics.lock().unwrap();
             m.batches += 1;
-            m.occupancy_sum += pending.len();
-            for (i, r) in pending.iter().enumerate() {
+            m.occupancy_sum += rows.len();
+            for (i, r) in rows.iter().enumerate() {
                 let row = out.data[i * odim..(i + 1) * odim].to_vec();
                 m.completed += 1;
                 m.latencies.push(r.submitted.elapsed().as_secs_f64());
@@ -189,7 +230,7 @@ fn run_batch<B: Backend + ?Sized>(
         }
         Err(e) => {
             // fan the one batch failure out to every waiter
-            for r in pending {
+            for r in rows {
                 r.resp.send(Err(e.clone())).ok();
             }
         }
@@ -345,6 +386,89 @@ mod tests {
         assert_eq!(m.completed, 3);
         assert!(m.batches >= 1);
         assert!(m.mean_occupancy() <= 3.0);
+    }
+
+    #[test]
+    fn malformed_request_fails_typed_and_service_survives() {
+        // regression: a wrong-rank or wrong-shape image used to panic the
+        // collector thread during batch assembly, stranding every later
+        // request with "service stopped"
+        let svc = InferenceService::start(
+            Arc::new(SumBackend { batch: 4 }),
+            ServeConfig { max_wait: Duration::from_millis(1) },
+        );
+        let bad_rank = Tensor::from_vec(&[2, 2], vec![1.0; 4]);
+        let err = svc.infer(bad_rank).unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        let other_shape = Tensor::from_vec(&[1, 4, 4, 1], vec![1.0; 16]);
+        // a batch leader defines the shape; alone in its batch this one
+        // is simply served (16 pixels of 1.0)
+        let out = svc.infer(other_shape).unwrap();
+        assert_eq!(out, vec![16.0]);
+        // the collector is still alive and serving well-formed requests
+        let out = svc.infer(img(2.0)).unwrap();
+        assert_eq!(out, vec![8.0]);
+        let m = svc.shutdown();
+        assert_eq!(m.completed, 2);
+    }
+
+    /// [`SumBackend`] that also declares its expected image shape.
+    struct StrictSumBackend;
+
+    impl Backend for StrictSumBackend {
+        fn batch_size(&self) -> usize {
+            4
+        }
+
+        fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+            Some((2, 2, 1))
+        }
+
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            SumBackend { batch: 4 }.run_batch(batch)
+        }
+    }
+
+    #[test]
+    fn declared_input_shape_rejects_wrong_shape_leader_individually() {
+        // a rank-4 single-image request of the WRONG model shape must
+        // neither lead a batch nor be served — and a concurrent valid
+        // request in the same window must still come back correct
+        let svc = Arc::new(InferenceService::start(
+            Arc::new(StrictSumBackend),
+            ServeConfig { max_wait: Duration::from_millis(60) },
+        ));
+        let s = svc.clone();
+        let bad = std::thread::spawn(move || {
+            s.infer(Tensor::from_vec(&[1, 4, 4, 1], vec![1.0; 16]))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let s = svc.clone();
+        let good = std::thread::spawn(move || s.infer(img(5.0)));
+        let err = bad.join().unwrap().unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        assert_eq!(good.join().unwrap().unwrap(), vec![20.0]);
+    }
+
+    #[test]
+    fn malformed_batch_leader_does_not_poison_valid_requests() {
+        // the bad request arrives first; the valid one sharing its batch
+        // window must still be served (the leader is the first
+        // WELL-FORMED request, not pending[0])
+        let svc = Arc::new(InferenceService::start(
+            Arc::new(SumBackend { batch: 8 }),
+            ServeConfig { max_wait: Duration::from_millis(60) },
+        ));
+        let s = svc.clone();
+        let bad = std::thread::spawn(move || {
+            s.infer(Tensor::from_vec(&[2, 2], vec![1.0; 4]))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let s = svc.clone();
+        let good = std::thread::spawn(move || s.infer(img(3.0)));
+        let err = bad.join().unwrap().unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        assert_eq!(good.join().unwrap().unwrap(), vec![12.0]);
     }
 
     /// A backend whose every batch fails.

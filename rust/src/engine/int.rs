@@ -15,6 +15,25 @@
 //! Pallas kernels and the AOT artifacts) — integration tests chain all
 //! three.
 //!
+//! ## Execution model
+//!
+//! [`IntEngine::run`] walks the graph with an **activation-liveness**
+//! pass: each module's output is dropped (and its buffer recycled) right
+//! after its last consumer, instead of retaining every activation for
+//! the whole forward pass. Paired with a reusable [`Scratch`] arena for
+//! im2col patches and GEMM output, a warm engine performs zero large
+//! allocations per batch — the software analogue of the paper's fixed
+//! on-chip buffers. [`IntEngine::with_threads`] additionally splits the
+//! GEMM over row-blocks (bit-exact; rows are independent); batch-level
+//! data parallelism lives one layer up, in the session's
+//! `EngineKind::Int { threads }` deploy engine, which shards the NHWC
+//! batch along N across the coordinator pool.
+//!
+//! Malformed inputs (a spec that doesn't cover a module, a dangling
+//! `src`/`res` name, a non-power-of-two pooling window, a residual shape
+//! mismatch) surface as [`DfqError`] — never a silent wrong answer, in
+//! release builds included.
+//!
 //! The engine also supports the **unfused** ablation (DESIGN.md §7):
 //! quantization immediately after the conv accumulator and again after
 //! the residual add — the strategy the paper's Fig.-1 restructuring
@@ -22,13 +41,15 @@
 //! the ablation calibrator.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::{Graph, ModuleKind};
 use crate::quant::params::QuantSpec;
 use crate::quant::scheme;
 use crate::tensor::im2col::Padding;
-use crate::tensor::{ops_int, Tensor, TensorI32};
+use crate::tensor::{ops_int, Shape, Tensor, TensorI32};
 
 /// Quantized parameters of one module, ready for the integer engine.
 #[derive(Clone, Debug)]
@@ -63,14 +84,95 @@ pub fn quantize_params(
     out
 }
 
+/// Reusable working memory for one engine pass: the im2col patch matrix
+/// plus a free-list of recycled activation/accumulator buffers. A warm
+/// scratch makes repeated [`IntEngine::run_scratch`] calls allocation-free
+/// for the large tensors.
+///
+/// A `Scratch` is plain owned memory — `Send` but deliberately not
+/// shared: one scratch serves one pass at a time (the parallel deploy
+/// engine keeps a pool of them, one per in-flight shard).
+#[derive(Default)]
+pub struct Scratch {
+    patches: Vec<i32>,
+    free: Vec<Vec<i32>>,
+}
+
+impl Scratch {
+    /// An empty arena (buffers grow on first use).
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Return a buffer to the free list for reuse by a later module or
+    /// pass (no-op for buffers that never allocated).
+    pub fn recycle(&mut self, buf: Vec<i32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// A buffer of exactly `len` elements, reusing freed capacity when
+    /// available. Only newly grown capacity is zeroed — reused contents
+    /// are unspecified, which is fine because every consumer (the GEMM
+    /// regimes, the epilogues, input quantization) overwrites the full
+    /// buffer; this avoids a redundant memset per module on the
+    /// steady-state hot path.
+    pub fn take(&mut self, len: usize) -> Vec<i32> {
+        match self.free.pop() {
+            Some(mut v) => {
+                v.truncate(len);
+                v.resize(len, 0);
+                v
+            }
+            None => vec![0; len],
+        }
+    }
+}
+
 /// The integer-only executor.
 pub struct IntEngine<'g> {
     graph: &'g Graph,
     spec: &'g QuantSpec,
     qparams: std::borrow::Cow<'g, HashMap<String, QuantizedParams>>,
+    /// per-module list of activation names whose last consumer is that
+    /// module — what [`IntEngine::run`] drops after executing it
+    /// (shared so the deploy layer computes it once, not per shard)
+    drop_after: Arc<Vec<Vec<String>>>,
+    /// row-block GEMM parallelism (1 = serial)
+    threads: usize,
     /// unfused ablation: per-module fractional bits of the intermediate
     /// (pre-ReLU / pre-add) quantization points
     pub pre_frac: Option<HashMap<String, i32>>,
+}
+
+/// For each module index, the values whose last use is that module (the
+/// liveness pass behind [`IntEngine::run`]). The final module's output
+/// is the result and is never dropped; a module no consumer ever reads
+/// is dropped immediately after it runs. Depends only on the graph, so
+/// long-lived callers compute it once and share it via
+/// `IntEngine::with_qparams_shared`.
+pub(crate) fn liveness(graph: &Graph) -> Vec<Vec<String>> {
+    let mut last_use: HashMap<&str, usize> = HashMap::new();
+    for (i, m) in graph.modules.iter().enumerate() {
+        last_use.insert(m.src.as_str(), i);
+        if let Some(r) = &m.res {
+            last_use.insert(r.as_str(), i);
+        }
+    }
+    let last_name = graph.modules.last().map(|m| m.name.as_str());
+    let mut drop_after = vec![Vec::new(); graph.modules.len()];
+    for (i, m) in graph.modules.iter().enumerate() {
+        if Some(m.name.as_str()) != last_name && !last_use.contains_key(m.name.as_str()) {
+            drop_after[i].push(m.name.clone()); // dead output
+        }
+    }
+    for (name, i) in last_use {
+        if Some(name) != last_name {
+            drop_after[i].push(name.to_string());
+        }
+    }
+    drop_after
 }
 
 impl<'g> IntEngine<'g> {
@@ -81,7 +183,14 @@ impl<'g> IntEngine<'g> {
         spec: &'g QuantSpec,
     ) -> Self {
         let qparams = std::borrow::Cow::Owned(quantize_params(graph, folded, spec));
-        IntEngine { graph, spec, qparams, pre_frac: None }
+        IntEngine {
+            graph,
+            spec,
+            qparams,
+            drop_after: Arc::new(liveness(graph)),
+            threads: 1,
+            pre_frac: None,
+        }
     }
 
     /// Build over parameters already quantized by [`quantize_params`] —
@@ -92,7 +201,41 @@ impl<'g> IntEngine<'g> {
         spec: &'g QuantSpec,
         qparams: &'g HashMap<String, QuantizedParams>,
     ) -> Self {
-        IntEngine { graph, spec, qparams: std::borrow::Cow::Borrowed(qparams), pre_frac: None }
+        IntEngine {
+            graph,
+            spec,
+            qparams: std::borrow::Cow::Borrowed(qparams),
+            drop_after: Arc::new(liveness(graph)),
+            threads: 1,
+            pre_frac: None,
+        }
+    }
+
+    /// [`IntEngine::with_qparams`] with a liveness table precomputed by
+    /// [`liveness`] — the serving hot path constructs one engine per
+    /// shard per batch, so the table must not be rebuilt each time.
+    pub(crate) fn with_qparams_shared(
+        graph: &'g Graph,
+        spec: &'g QuantSpec,
+        qparams: &'g HashMap<String, QuantizedParams>,
+        drop_after: Arc<Vec<Vec<String>>>,
+    ) -> Self {
+        IntEngine {
+            graph,
+            spec,
+            qparams: std::borrow::Cow::Borrowed(qparams),
+            drop_after,
+            threads: 1,
+            pre_frac: None,
+        }
+    }
+
+    /// Split each GEMM over `threads` row-blocks (bit-exact — output
+    /// rows are independent). Useful when the batch is too small for the
+    /// deploy layer to shard along N.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Access the quantized parameters (the PJRT path feeds these to the
@@ -106,15 +249,19 @@ impl<'g> IntEngine<'g> {
         scheme::quantize_tensor(x, self.spec.input_frac, self.spec.n_bits, false)
     }
 
-    /// Run on input codes, returning every module's codes.
-    pub fn run_acts(&self, x_int: &TensorI32) -> HashMap<String, TensorI32> {
+    /// Run on input codes, returning every module's codes (no liveness —
+    /// calibration and the cross-language tests read intermediates).
+    pub fn run_acts(
+        &self,
+        x_int: &TensorI32,
+    ) -> Result<HashMap<String, TensorI32>, DfqError> {
         let mut acts: HashMap<String, TensorI32> = HashMap::new();
         acts.insert("input".to_string(), x_int.clone());
         for m in &self.graph.modules {
-            let out = self.run_module(m, &acts);
+            let out = self.run_module(m, &acts)?;
             acts.insert(m.name.clone(), out);
         }
-        acts
+        Ok(acts)
     }
 
     /// Execute one module given the activations so far.
@@ -122,33 +269,121 @@ impl<'g> IntEngine<'g> {
         &self,
         m: &crate::graph::UnifiedModule,
         acts: &HashMap<String, TensorI32>,
-    ) -> TensorI32 {
-        let src = &acts[&m.src];
+    ) -> Result<TensorI32, DfqError> {
+        let mut scratch = Scratch::new();
+        self.run_module_scratch(m, acts, &mut scratch)
+    }
+
+    /// [`IntEngine::run_module`] through a reusable [`Scratch`] arena.
+    pub fn run_module_scratch(
+        &self,
+        m: &crate::graph::UnifiedModule,
+        acts: &HashMap<String, TensorI32>,
+        scratch: &mut Scratch,
+    ) -> Result<TensorI32, DfqError> {
+        let src = acts.get(&m.src).ok_or_else(|| {
+            DfqError::graph(format!("{}: missing input activation '{}'", m.name, m.src))
+        })?;
         let n_bits = self.spec.n_bits;
         match &m.kind {
             ModuleKind::Gap => {
+                if src.shape.rank() != 4 {
+                    return Err(DfqError::graph(format!(
+                        "{}: global average pool needs an NHWC activation, \
+                         '{}' has rank {}",
+                        m.name,
+                        m.src,
+                        src.shape.rank()
+                    )));
+                }
+                let (h, w) = (src.shape.dim(1), src.shape.dim(2));
+                let hw = h * w;
+                // the mean is an exact rounded shift ONLY for a
+                // power-of-two window; anything else must be a typed
+                // error, not a garbage shift from trailing_zeros
+                if !hw.is_power_of_two() {
+                    return Err(DfqError::graph(format!(
+                        "{}: global average pool needs a power-of-two spatial \
+                         size for the exact rounded-shift mean, got {h}x{w}",
+                        m.name
+                    )));
+                }
                 let sum = ops_int::global_sum_pool(src);
-                let hw = src.shape.dim(1) * src.shape.dim(2);
-                debug_assert!(hw.is_power_of_two());
                 let s = hw.trailing_zeros() as i32;
-                let unsigned = self.spec.value_unsigned(self.graph, &m.src);
+                let unsigned = self.spec.try_value_unsigned(self.graph, &m.src)?;
                 let (qmin, qmax) = scheme::qrange(n_bits, unsigned);
-                sum.map_i32_ref(|v| scheme::shift_round(v, s).clamp(qmin, qmax))
+                Ok(sum.map_i32_ref(|v| scheme::shift_round(v, s).clamp(qmin, qmax)))
             }
             ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => {
-                let sp = self.spec.modules[&m.name];
-                let n_x = self.spec.value_frac(self.graph, &m.src);
-                let qp = &self.qparams[&m.name];
+                let sp = *self.spec.modules.get(&m.name).ok_or_else(|| {
+                    DfqError::graph(format!(
+                        "module '{}' is not covered by the calibrated spec",
+                        m.name
+                    ))
+                })?;
+                let n_x = self.spec.try_value_frac(self.graph, &m.src)?;
+                let qp = self.qparams.get(&m.name).ok_or_else(|| {
+                    DfqError::graph(format!(
+                        "module '{}' has no quantized parameters",
+                        m.name
+                    ))
+                })?;
                 let mut acc = match &m.kind {
-                    ModuleKind::Conv { stride, .. } => {
-                        ops_int::conv2d_acc(src, &qp.w, *stride, Padding::Same)
+                    ModuleKind::Conv { kh, kw, cin, cout, stride } => {
+                        if src.shape.rank() != 4 || src.shape.dim(3) != *cin {
+                            return Err(DfqError::graph(format!(
+                                "{}: conv expects an NHWC activation with \
+                                 {cin} channels, '{}' has shape {}",
+                                m.name, m.src, src.shape
+                            )));
+                        }
+                        // exact-size take: a warm scratch hands back a
+                        // same-sized buffer, so no element is rewritten
+                        // before the GEMM fills it
+                        let (ho, wo, _, _) = crate::tensor::im2col::conv_geometry(
+                            src.shape.dim(1),
+                            src.shape.dim(2),
+                            *kh,
+                            *kw,
+                            *stride,
+                            Padding::Same,
+                        );
+                        let mut out =
+                            scratch.take(src.shape.dim(0) * ho * wo * *cout);
+                        let shape = ops_int::conv2d_acc_into(
+                            src,
+                            &qp.w,
+                            *stride,
+                            Padding::Same,
+                            &mut scratch.patches,
+                            &mut out,
+                            self.threads,
+                        );
+                        TensorI32 { shape, data: out }
                     }
                     ModuleKind::Dense { .. } => {
-                        let flat = src.reshape(&[
-                            src.shape.dim(0),
-                            src.numel() / src.shape.dim(0),
-                        ]);
-                        ops_int::dense_acc(&flat, &qp.w)
+                        let rows = src.shape.dim(0);
+                        let cin = if rows == 0 { 0 } else { src.numel() / rows };
+                        if qp.w.shape.dim(0) != cin {
+                            return Err(DfqError::graph(format!(
+                                "{}: dense weight expects {} input features, \
+                                 activation provides {cin}",
+                                m.name,
+                                qp.w.shape.dim(0)
+                            )));
+                        }
+                        let cout = qp.w.shape.dim(1);
+                        let mut out = scratch.take(rows * cout);
+                        ops_int::gemm_i32_into(
+                            &src.data,
+                            &qp.w.data,
+                            rows,
+                            cin,
+                            cout,
+                            &mut out,
+                            self.threads,
+                        );
+                        TensorI32 { shape: Shape(vec![rows, cout]), data: out }
                     }
                     ModuleKind::Gap => unreachable!(),
                 };
@@ -173,10 +408,24 @@ impl<'g> IntEngine<'g> {
                 let (qmin, qmax) = scheme::qrange(n_bits, m.relu);
                 match &m.res {
                     Some(r) => {
-                        let n_r = self.spec.value_frac(self.graph, r);
+                        let rt = acts.get(r).ok_or_else(|| {
+                            DfqError::graph(format!(
+                                "{}: missing residual activation '{r}'",
+                                m.name
+                            ))
+                        })?;
+                        // full shape equality: an equal element count with a
+                        // different layout (e.g. (N,4,4,8) vs (N,8,8,2))
+                        // would silently add misaligned channels
+                        if rt.shape != acc.shape {
+                            return Err(DfqError::graph(format!(
+                                "{}: residual '{r}' shape {} does not match \
+                                 output shape {}",
+                                m.name, rt.shape, acc.shape
+                            )));
+                        }
+                        let n_r = self.spec.try_value_frac(self.graph, r)?;
                         let rs = sp.res_shift(n_x, n_r);
-                        let rt = &acts[r];
-                        debug_assert_eq!(rt.numel(), acc.numel());
                         for (row, chunk) in acc.data.chunks_exact_mut(cout).enumerate() {
                             let rrow = &rt.data[row * cout..(row + 1) * cout];
                             for (j, v) in chunk.iter_mut().enumerate() {
@@ -196,7 +445,7 @@ impl<'g> IntEngine<'g> {
                         }
                     }
                 }
-                acc
+                Ok(acc)
             }
         }
     }
@@ -213,7 +462,7 @@ impl<'g> IntEngine<'g> {
         pre: &HashMap<String, i32>,
         n_x: i32,
         sp: crate::quant::params::ModuleShifts,
-    ) -> TensorI32 {
+    ) -> Result<TensorI32, DfqError> {
         let n_bits = self.spec.n_bits;
         let n_pre = *pre.get(&m.name).unwrap_or(&sp.n_o);
         // quant point #1: conv output -> codes at scale n_pre (signed)
@@ -221,8 +470,16 @@ impl<'g> IntEngine<'g> {
             scheme::requantize_tensor(&acc, n_x + sp.n_w - n_pre, n_bits, false);
         let mut cur = conv_codes;
         if let Some(r) = &m.res {
-            let n_r = self.spec.value_frac(self.graph, r);
-            let rt = &acts[r];
+            let rt = acts.get(r).ok_or_else(|| {
+                DfqError::graph(format!("{}: missing residual activation '{r}'", m.name))
+            })?;
+            if rt.shape != cur.shape {
+                return Err(DfqError::graph(format!(
+                    "{}: residual '{r}' shape {} does not match output shape {}",
+                    m.name, rt.shape, cur.shape
+                )));
+            }
+            let n_r = self.spec.try_value_frac(self.graph, r)?;
             // align residual codes to n_pre and add, then quant point #2
             let mut sum: Vec<i32> = cur
                 .data
@@ -238,21 +495,77 @@ impl<'g> IntEngine<'g> {
         }
         // final requant to n_o (+relu clamp) — quant point #2/#3
         let (qmin, qmax) = scheme::qrange(n_bits, m.relu);
-        cur.map_i32_ref(|v| scheme::shift_round(v, n_pre - sp.n_o).clamp(qmin, qmax))
+        Ok(cur.map_i32_ref(|v| scheme::shift_round(v, n_pre - sp.n_o).clamp(qmin, qmax)))
     }
 
-    /// Full pipeline from a normalised f32 batch to final output codes.
-    pub fn run(&self, x: &Tensor) -> TensorI32 {
-        let xq = self.quantize_input(x);
-        let mut acts = self.run_acts(&xq);
-        acts.remove(&self.graph.modules.last().unwrap().name).unwrap()
+    /// Full pipeline from a normalised f32 batch to final output codes,
+    /// dropping dead activations as it goes (liveness pass).
+    pub fn run(&self, x: &Tensor) -> Result<TensorI32, DfqError> {
+        let mut scratch = Scratch::new();
+        self.run_scratch(x, &mut scratch)
+    }
+
+    /// [`IntEngine::run`] through a caller-owned [`Scratch`]: the input
+    /// is quantized into a recycled buffer and dead activations return
+    /// to the arena, so a warm scratch makes steady-state serving
+    /// allocation-free for the large buffers.
+    pub fn run_scratch(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+    ) -> Result<TensorI32, DfqError> {
+        let mut codes = scratch.take(x.numel());
+        for (dst, &v) in codes.iter_mut().zip(&x.data) {
+            *dst = scheme::quantize_val(v, self.spec.input_frac, self.spec.n_bits, false);
+        }
+        let xq = TensorI32 { shape: x.shape.clone(), data: codes };
+        self.run_codes_scratch(xq, scratch)
+    }
+
+    /// [`IntEngine::run_scratch`] from already-quantized input codes —
+    /// the input tensor is consumed so its buffer joins the recycling
+    /// pool once dead (callers can feed a buffer taken from the same
+    /// scratch and close the loop entirely).
+    pub fn run_codes_scratch(
+        &self,
+        x_int: TensorI32,
+        scratch: &mut Scratch,
+    ) -> Result<TensorI32, DfqError> {
+        let last = self
+            .graph
+            .modules
+            .last()
+            .ok_or_else(|| DfqError::graph("empty graph: nothing to run"))?
+            .name
+            .clone();
+        let mut acts: HashMap<String, TensorI32> = HashMap::new();
+        acts.insert("input".to_string(), x_int);
+        for (i, m) in self.graph.modules.iter().enumerate() {
+            let out = self.run_module_scratch(m, &acts, scratch)?;
+            acts.insert(m.name.clone(), out);
+            for name in &self.drop_after[i] {
+                if let Some(t) = acts.remove(name) {
+                    scratch.recycle(t.data);
+                }
+            }
+        }
+        acts.remove(&last)
+            .ok_or_else(|| DfqError::graph(format!("missing final activation '{last}'")))
     }
 
     /// Final logits dequantized to f32 (for metrics that need scores).
-    pub fn run_dequant(&self, x: &Tensor) -> Tensor {
-        let last = &self.graph.modules.last().unwrap().name;
-        let out = self.run(x);
-        scheme::dequantize_tensor(&out, self.spec.value_frac(self.graph, last))
+    pub fn run_dequant(&self, x: &Tensor) -> Result<Tensor, DfqError> {
+        let last = &self
+            .graph
+            .modules
+            .last()
+            .ok_or_else(|| DfqError::graph("empty graph: nothing to run"))?
+            .name;
+        let out = self.run(x)?;
+        Ok(scheme::dequantize_tensor(
+            &out,
+            self.spec.try_value_frac(self.graph, last)?,
+        ))
     }
 }
 
@@ -288,11 +601,11 @@ mod tests {
         let eng = IntEngine::new(&graph, &folded, &spec);
         // x = 1.25 -> code 20; w = 0.75 -> code 48; b = 0.5 -> code 16
         let x = Tensor::from_vec(&[1, 1, 1, 1], vec![1.25]);
-        let out = eng.run(&x);
+        let out = eng.run(&x).unwrap();
         // acc = 20*48 + (16 << (4+6-5)) = 960 + 512 = 1472 at scale 2^-10
         // out = round(1472 / 2^(10-3)) = round(11.5) = 12 -> 1.5 at 2^-3
         assert_eq!(out.data[0], 12);
-        let deq = eng.run_dequant(&x);
+        let deq = eng.run_dequant(&x).unwrap();
         assert!((deq.data[0] - 1.5).abs() < 1e-6);
     }
 
@@ -339,7 +652,7 @@ mod tests {
         spec.modules.insert("c1".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
         let eng = IntEngine::new(&graph, &folded, &spec);
         let x = Tensor::from_vec(&[1, 4, 4, 2], (0..32).map(|_| rng.normal()).collect());
-        let acts = eng.run_acts(&eng.quantize_input(&x));
+        let acts = eng.run_acts(&eng.quantize_input(&x)).unwrap();
         // every activation is inside its clamp range
         for name in ["c0", "c1"] {
             let (qmin, qmax) = scheme::qrange(8, true);
@@ -386,13 +699,210 @@ mod tests {
         spec.modules.insert("c0".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 5 });
         let mut eng = IntEngine::new(&graph, &folded, &spec);
         let x = Tensor::from_vec(&[1, 4, 4, 2], (0..32).map(|_| rng.normal()).collect());
-        let fused = eng.run(&x);
+        let fused = eng.run(&x).unwrap();
         let mut pre = HashMap::new();
         pre.insert("c0".to_string(), 3); // coarse intermediate scale
         eng.pre_frac = Some(pre);
-        let unfused = eng.run(&x);
+        let unfused = eng.run(&x).unwrap();
         assert_eq!(fused.shape, unfused.shape);
         // coarse pre-quantization loses information vs the fused path
         assert_ne!(fused.data, unfused.data);
+    }
+
+    /// Residual graph for the liveness / error-path tests.
+    fn resnet_like() -> (Graph, HashMap<String, FoldedParams>, QuantSpec) {
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (4, 4, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "c0".into(),
+                    res: Some("c0".into()),
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c1".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 2, cout: 3 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut rng = crate::util::rng::Pcg::new(17);
+        let mut folded = HashMap::new();
+        for m in graph.weight_modules() {
+            let (shape, cout): (Vec<usize>, usize) = match &m.kind {
+                ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                    (vec![*kh, *kw, *cin, *cout], *cout)
+                }
+                ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cout),
+                ModuleKind::Gap => unreachable!(),
+            };
+            let n: usize = shape.iter().product();
+            folded.insert(
+                m.name.clone(),
+                FoldedParams {
+                    w: Tensor::from_vec(
+                        &shape,
+                        (0..n).map(|_| rng.normal_ms(0.0, 0.3)).collect(),
+                    ),
+                    b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+                },
+            );
+        }
+        let mut spec = QuantSpec::new(8);
+        spec.input_frac = 5;
+        for name in ["c0", "c1", "fc"] {
+            spec.modules.insert(name.into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        }
+        (graph, folded, spec)
+    }
+
+    #[test]
+    fn liveness_run_matches_retain_everything_run_acts() {
+        let (graph, folded, spec) = resnet_like();
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let mut rng = crate::util::rng::Pcg::new(18);
+        let x = Tensor::from_vec(&[2, 4, 4, 2], (0..64).map(|_| rng.normal()).collect());
+        let mut acts = eng.run_acts(&eng.quantize_input(&x)).unwrap();
+        let want = acts.remove("fc").unwrap();
+        let got = eng.run(&x).unwrap();
+        assert_eq!(want, got);
+        // a warm scratch over repeated runs stays bit-stable
+        let mut scratch = Scratch::new();
+        for _ in 0..3 {
+            assert_eq!(eng.run_scratch(&x, &mut scratch).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn gemm_threads_are_bit_exact_through_the_engine() {
+        let (graph, folded, spec) = resnet_like();
+        let mut rng = crate::util::rng::Pcg::new(19);
+        // batch 8 -> 128 conv output rows, enough for real row-blocking
+        let x = Tensor::from_vec(&[8, 4, 4, 2], (0..256).map(|_| rng.normal()).collect());
+        let want = IntEngine::new(&graph, &folded, &spec).run(&x).unwrap();
+        for threads in [2usize, 4] {
+            let eng = IntEngine::new(&graph, &folded, &spec).with_threads(threads);
+            assert_eq!(eng.run(&x).unwrap(), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_gap_is_typed_error_not_garbage() {
+        // regression: this was a debug_assert!, so release builds computed
+        // a garbage shift from trailing_zeros(12) and served wrong answers
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (3, 4, 2),
+            modules: vec![UnifiedModule {
+                name: "gap".into(),
+                kind: ModuleKind::Gap,
+                src: "input".into(),
+                res: None,
+                relu: false,
+            }],
+        };
+        let folded = HashMap::new();
+        let spec = QuantSpec::new(8);
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let x = Tensor::zeros(&[1, 3, 4, 2]);
+        let err = eng.run(&x).unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        assert!(err.to_string().contains("power-of-two"), "{err}");
+    }
+
+    #[test]
+    fn conv_over_non_spatial_activation_is_typed_error() {
+        // conv fed a rank-2 activation (e.g. a dense output) must be a
+        // typed error, not an index panic inside im2col
+        let (graph, folded, spec) = resnet_like();
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let mut acts = HashMap::new();
+        // "gap" is a graph value (so scale lookup succeeds) whose
+        // activation is legitimately rank 2
+        acts.insert("gap".to_string(), TensorI32::zeros(&[1, 2]));
+        let mut m = graph.modules[1].clone(); // conv c1
+        m.src = "gap".into();
+        m.res = None;
+        let err = eng.run_module(&m, &acts).unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        assert!(err.to_string().contains("NHWC"), "{err}");
+    }
+
+    #[test]
+    fn gap_over_non_spatial_activation_is_typed_error() {
+        // gap after dense: the activation is rank 2, so there is no
+        // pooling window — must be a typed error, not an index panic
+        let (graph, folded, spec) = resnet_like();
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let mut acts = HashMap::new();
+        acts.insert("flat".to_string(), TensorI32::zeros(&[1, 4]));
+        let mut m = graph.modules[2].clone(); // the gap module
+        m.src = "flat".into();
+        let err = eng.run_module(&m, &acts).unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        assert!(err.to_string().contains("rank"), "{err}");
+    }
+
+    #[test]
+    fn uncovered_module_is_typed_error_not_panic() {
+        // regression: quantize_params deliberately skips modules the spec
+        // doesn't cover, and run_module used to panic on the map lookup
+        let (graph, folded, mut spec) = resnet_like();
+        spec.modules.remove("c1");
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let x = Tensor::zeros(&[1, 4, 4, 2]);
+        let err = eng.run(&x).unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        assert!(err.to_string().contains("c1"), "{err}");
+    }
+
+    #[test]
+    fn dangling_names_are_typed_errors_not_panics() {
+        let (graph, folded, spec) = resnet_like();
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        // missing src
+        let acts: HashMap<String, TensorI32> = HashMap::new();
+        let err = eng.run_module(&graph.modules[0], &acts).unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        // missing residual
+        let mut acts = HashMap::new();
+        acts.insert("c0".to_string(), TensorI32::zeros(&[1, 4, 4, 2]));
+        let mut m = graph.modules[1].clone();
+        m.res = Some("nope".into());
+        let err = eng.run_module(&m, &acts).unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn residual_shape_mismatch_is_typed_error() {
+        let (graph, folded, spec) = resnet_like();
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let mut acts = HashMap::new();
+        acts.insert("c0".to_string(), TensorI32::zeros(&[1, 4, 4, 2]));
+        // residual with the wrong element count
+        acts.insert("bad".to_string(), TensorI32::zeros(&[1, 2, 2, 2]));
+        let mut m = graph.modules[1].clone();
+        m.res = Some("bad".into());
+        let err = eng.run_module(&m, &acts).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
     }
 }

@@ -6,6 +6,10 @@
 //!   accumulation, shift-based alignment/requantization. Models the
 //!   paper's custom hardware unit bit-exactly — cross-validated against
 //!   the Pallas kernels via the PJRT artifacts in the integration tests.
+//!   Executes with an activation-liveness pass and a reusable scratch
+//!   arena ([`int::Scratch`]); the session layer adds batch-level data
+//!   parallelism on top (`EngineKind::Int { threads }`), bit-identical
+//!   for every thread count.
 
 pub mod fp;
 pub mod int;

@@ -18,7 +18,8 @@
 //! let art = Artifacts::open("artifacts")?;
 //! let session = Session::from_artifacts(&art, "resnet_s")?; // fuse + BN-fold inside
 //! let calibrated = session.calibrate(CalibConfig::default(), &art.calibration_images(1)?)?;
-//! let engine = calibrated.engine(EngineKind::Int)?; // or EngineKind::{Fp, Pjrt}
+//! // threads: 0 = machine-sized data parallelism (1 = serial, bit-identical)
+//! let engine = calibrated.engine(EngineKind::Int { threads: 0 })?; // or EngineKind::{Fp, Pjrt}
 //! let _scores = engine.run(&art.calibration_images(4)?)?; // (B, out_dim) f32
 //! # Ok(())
 //! # }
@@ -32,6 +33,14 @@
 //! `InferenceService::start(engine, ServeConfig::default())` deploys any
 //! engine behind the batching service with zero glue. Fallible APIs
 //! across the crate return the typed [`error::DfqError`].
+//!
+//! The integer deploy engine is **data-parallel**: it shards each batch
+//! along N across the coordinator pool and reuses per-shard scratch
+//! arenas (im2col patches, GEMM output, recycled activations), so
+//! steady-state serving performs no large allocations; batches too small
+//! to shard fall back to row-blocked GEMM. Output is bit-identical to
+//! the serial engine for every thread count — image rows are
+//! independent. `run_batch` on any engine is safe to call concurrently.
 //!
 //! ## Layering
 //!

@@ -30,11 +30,14 @@ use dfq::util::timer::Timer;
 const COMMANDS: &[(&str, &[&str])] = &[
     ("tables", &["table", "artifacts", "eval-n", "batch", "images", "out"]),
     ("calibrate", &["model", "bits", "tau", "images", "save", "unfused", "artifacts"]),
-    ("evaluate", &["model", "bits", "eval-n", "batch", "images", "via-pjrt", "artifacts"]),
+    (
+        "evaluate",
+        &["model", "bits", "eval-n", "batch", "images", "via-pjrt", "artifacts", "threads"],
+    ),
     ("detect", &["bits", "eval-n", "batch", "images", "artifacts"]),
     ("hwcost", &["clock"]),
     ("inspect", &["model"]),
-    ("serve", &["model", "requests", "engine", "artifacts"]),
+    ("serve", &["model", "requests", "engine", "artifacts", "threads"]),
 ];
 
 /// Minimal flag parser: `--key value` pairs + a subcommand, validated
@@ -143,16 +146,19 @@ USAGE: dfq <command> [--flag value ...]
 COMMANDS:
   tables     regenerate the paper's tables/figures (--table 1..5|fig2|ablation|headline|all)
   calibrate  run Algorithm 1 joint calibration (--model, --bits, --tau, --images, --save)
-  evaluate   top-1 of FP vs quantized (--model, --bits, --eval-n, --via-pjrt)
+  evaluate   top-1 of FP vs quantized (--model, --bits, --eval-n, --via-pjrt, --threads)
   detect     Table-4 style detection eval (--bits, --eval-n)
   hwcost     RTL cost model (--clock MHz)
   inspect    dataflow analysis + quant-point report (--model)
-  serve      batching inference service demo (--model, --requests, --engine fp|int|pjrt)
+  serve      batching inference service demo
+             (--model, --requests, --engine fp|int|int:N|int:auto|pjrt, --threads)
 
 COMMON FLAGS:
   --artifacts DIR   artifacts directory (default: artifacts)
   --eval-n N        validation subset size (default 1000)
   --batch N         evaluation batch (default 50)
+  --threads N       integer-engine data parallelism (0 = machine-sized;
+                    serve defaults to machine-sized, evaluate to 0 -> auto)
 ";
 
 fn cmd_tables(args: &Args) -> Result<(), DfqError> {
@@ -261,8 +267,9 @@ fn cmd_evaluate(args: &Args) -> Result<(), DfqError> {
     let calib = art.calibration_images(opt.calib_n)?;
     let cfg = CalibConfig { n_bits: args.u32_or("bits", 8), ..Default::default() };
     let calibrated = session.calibrate(cfg, &calib)?;
+    let int_kind = EngineKind::Int { threads: args.usize_or("threads", 0) };
     let fp = experiments::eval_engine_top1(&*session.fp_engine(), &ds, opt)?;
-    let q = experiments::eval_engine_top1(&*calibrated.engine(EngineKind::Int)?, &ds, opt)?;
+    let q = experiments::eval_engine_top1(&*calibrated.engine(int_kind)?, &ds, opt)?;
     println!(
         "{model}: FP {:.2}%  quantized {:.2}%  (drop {:.2}pp)",
         fp * 100.0,
@@ -339,8 +346,21 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
     let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
     let model = args.str_or("model", "resnet_s");
     let n_req = args.usize_or("requests", 64);
-    let kind = EngineKind::parse(args.str_or("engine", "int"))
-        .ok_or_else(|| DfqError::invalid("--engine must be fp|int|pjrt"))?;
+    // the serve hot path defaults to the machine-sized data-parallel
+    // integer engine; --engine int pins it serial, --threads overrides
+    let mut kind = EngineKind::parse(args.str_or("engine", "int:auto"))
+        .ok_or_else(|| DfqError::invalid("--engine must be fp|int|int:N|int:auto|pjrt"))?;
+    if let Some(t) = args.get("threads") {
+        if !matches!(kind, EngineKind::Int { .. }) {
+            return Err(DfqError::invalid(format!(
+                "--threads only applies to the int engine, not '{kind}'"
+            )));
+        }
+        let threads = t
+            .parse()
+            .map_err(|_| DfqError::invalid("--threads must be a number (0 = auto)"))?;
+        kind = EngineKind::Int { threads };
+    }
 
     // the whole deployment pipeline: session -> calibrate -> engine ->
     // service (any engine serves via the blanket Backend impl)

@@ -91,9 +91,13 @@ impl JointCalibrator {
         for m in &graph.modules {
             match &m.kind {
                 ModuleKind::Gap => {
-                    // no parameters; execute and record
+                    // no parameters; execute and record (the prefix is
+                    // always covered, so a failure here is a caller bug —
+                    // Session validates graphs before calibration)
                     let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                    let out = eng.run_module(m, &iacts);
+                    let out = eng
+                        .run_module(m, &iacts)
+                        .expect("calibration prefix covers every executed module");
                     let n = spec.value_frac(graph, &m.src);
                     let deq = scheme::dequantize_tensor(&out, n);
                     stats.push(ModuleStat {
@@ -132,7 +136,9 @@ impl JointCalibrator {
                     // execute the module with the winning shifts so the
                     // next module calibrates against real quantized input
                     let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                    let out = eng.run_module(m, &iacts);
+                    let out = eng
+                        .run_module(m, &iacts)
+                        .expect("calibration prefix covers every executed module");
                     let deq = scheme::dequantize_tensor(&out, r.shifts.n_o);
                     stats.push(ModuleStat {
                         name: m.name.clone(),
@@ -295,7 +301,7 @@ mod tests {
         let fp = crate::engine::fp::FpEngine::new(&graph, &folded);
         let want = fp.run(&x);
         let eng = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
-        let got = eng.run_dequant(&x);
+        let got = eng.run_dequant(&x).unwrap();
         let rel = crate::util::mathutil::mse(&got.data, &want.data)
             / want.data.iter().map(|v| v * v).sum::<f32>().max(1e-9) as f64
             * want.data.len() as f64;
@@ -327,7 +333,7 @@ mod tests {
             let out = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() })
                 .calibrate(&graph, &folded, &x);
             let eng = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
-            let got = eng.run_dequant(&x);
+            let got = eng.run_dequant(&x).unwrap();
             errs.push(crate::util::mathutil::mse(&got.data, &want.data));
         }
         assert!(errs[0] <= errs[1] * 1.5 + 1e-12, "{errs:?}");
@@ -348,12 +354,12 @@ mod tests {
         let cal = JointCalibrator::new(CalibConfig::default());
         let out = cal.calibrate(&graph, &folded, &x);
         let eng = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
-        let fused_mse = crate::util::mathutil::mse(&eng.run_dequant(&x).data, &want.data);
+        let fused_mse = crate::util::mathutil::mse(&eng.run_dequant(&x).unwrap().data, &want.data);
 
         let pre = cal.ablation_pre_fracs(&graph, &folded, &x, &out.spec);
         let mut eng2 = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
         eng2.pre_frac = Some(pre);
-        let unfused_mse = crate::util::mathutil::mse(&eng2.run_dequant(&x).data, &want.data);
+        let unfused_mse = crate::util::mathutil::mse(&eng2.run_dequant(&x).unwrap().data, &want.data);
         assert!(
             fused_mse <= unfused_mse + 1e-12,
             "fused {fused_mse} vs unfused {unfused_mse}"

@@ -60,34 +60,56 @@ impl QuantSpec {
 
     /// Fractional bits of the value produced under `name` (`"input"` or a
     /// module name). Gap preserves its input's scale (the mean is an
-    /// exact shift).
+    /// exact shift). Panics on unknown/uncalibrated names — the engine
+    /// hot path uses [`QuantSpec::try_value_frac`] instead.
     pub fn value_frac(&self, graph: &Graph, name: &str) -> i32 {
+        self.try_value_frac(graph, name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`QuantSpec::value_frac`] with a typed error for a name the graph
+    /// or the spec does not cover (a dangling `src`/`res`, or a module
+    /// the calibration prefix skipped).
+    pub fn try_value_frac(&self, graph: &Graph, name: &str) -> Result<i32, DfqError> {
         if name == "input" {
-            return self.input_frac;
+            return Ok(self.input_frac);
         }
         let m = graph
             .module(name)
-            .unwrap_or_else(|| panic!("unknown value '{name}'"));
+            .ok_or_else(|| DfqError::graph(format!("unknown value '{name}'")))?;
         match m.kind {
-            ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => {
-                self.modules
-                    .get(name)
-                    .unwrap_or_else(|| panic!("module '{name}' not calibrated"))
-                    .n_o
-            }
-            ModuleKind::Gap => self.value_frac(graph, &m.src),
+            ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => self
+                .modules
+                .get(name)
+                .map(|s| s.n_o)
+                .ok_or_else(|| {
+                    DfqError::graph(format!(
+                        "module '{name}' is not covered by the calibrated spec"
+                    ))
+                }),
+            ModuleKind::Gap => self.try_value_frac(graph, &m.src),
         }
     }
 
     /// Whether the value under `name` is in the unsigned post-ReLU range.
+    /// Panics on unknown names — see [`QuantSpec::try_value_unsigned`].
     pub fn value_unsigned(&self, graph: &Graph, name: &str) -> bool {
+        self.try_value_unsigned(graph, name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`QuantSpec::value_unsigned`] with a typed error for a name the
+    /// graph does not contain.
+    pub fn try_value_unsigned(&self, graph: &Graph, name: &str) -> Result<bool, DfqError> {
         if name == "input" {
-            return false;
+            return Ok(false);
         }
-        let m = graph.module(name).expect("unknown value");
+        let m = graph
+            .module(name)
+            .ok_or_else(|| DfqError::graph(format!("unknown value '{name}'")))?;
         match m.kind {
-            ModuleKind::Gap => self.value_unsigned(graph, &m.src),
-            _ => m.relu,
+            ModuleKind::Gap => self.try_value_unsigned(graph, &m.src),
+            _ => Ok(m.relu),
         }
     }
 

@@ -99,7 +99,7 @@ pub fn eval_quantized(
     let mut start = 0;
     while start < n {
         let (x, labels) = ds.batch(start, opt.batch.min(n - start));
-        let logits = engine.run(&x);
+        let logits = engine.run(&x).expect("calibrated spec covers the model");
         correct += top1_i32(&logits, labels) * labels.len() as f64;
         seen += labels.len();
         start += labels.len();
@@ -340,7 +340,7 @@ pub fn eval_detection(
             None => FpEngine::new(&bundle.graph, &bundle.folded).run(&x),
             Some(spec) => {
                 let eng = IntEngine::new(&bundle.graph, &bundle.folded, spec);
-                let out = eng.run(&x);
+                let out = eng.run(&x).expect("calibrated spec covers the model");
                 scheme::dequantize_tensor(&out, spec.value_frac(&bundle.graph, &last))
             }
         };
@@ -544,7 +544,7 @@ pub fn dataflow_ablation(
         let mut start = 0usize;
         while start < n {
             let (x, labels) = ds.batch(start, opt.batch.min(n - start));
-            let logits = engine_unfused.run(&x);
+            let logits = engine_unfused.run(&x).expect("calibrated spec covers the model");
             correct += top1_i32(&logits, labels) * labels.len() as f64;
             seen += labels.len();
             start += labels.len();

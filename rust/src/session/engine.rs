@@ -9,18 +9,19 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::coordinator::pool::Pool;
 use crate::coordinator::serve::Backend;
 use crate::engine::fp::FpEngine;
-use crate::engine::int::IntEngine;
+use crate::engine::int::{IntEngine, Scratch};
 use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::Graph;
 use crate::quant::params::QuantSpec;
 use crate::quant::scheme;
 use crate::runtime::{ArgValue, PjrtWorker};
-use crate::tensor::{Tensor, TensorI32};
+use crate::tensor::{Shape, Tensor, TensorI32};
 
 use super::CalibratedModel;
 
@@ -32,20 +33,31 @@ const DEFAULT_SERVE_BATCH: usize = 16;
 pub enum EngineKind {
     /// the f32 oracle over folded weights (calibration targets, FP rows)
     Fp,
-    /// the bit-exact integer-only engine (Eq. 3–4)
-    Int,
+    /// the bit-exact integer-only engine (Eq. 3–4), data-parallel across
+    /// the coordinator pool — bit-identical for every thread count
+    Int {
+        /// worker threads: batches shard along N across the pool, and a
+        /// batch too small to shard falls back to row-blocked GEMM.
+        /// `1` = serial, `0` = auto-size to the machine.
+        threads: usize,
+    },
     /// the AOT-lowered `q_logits` artifact through the PJRT runtime
     Pjrt,
 }
 
 impl EngineKind {
-    /// Parse a CLI spelling (`fp` | `int` | `pjrt`).
+    /// Parse a CLI spelling: `fp` | `pjrt` | `int` (serial) |
+    /// `int:N` (N threads) | `int:auto` (machine-sized).
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s {
             "fp" => Some(EngineKind::Fp),
-            "int" => Some(EngineKind::Int),
+            "int" => Some(EngineKind::Int { threads: 1 }),
+            "int:auto" => Some(EngineKind::Int { threads: 0 }),
             "pjrt" => Some(EngineKind::Pjrt),
-            _ => None,
+            _ => {
+                let t = s.strip_prefix("int:")?.parse().ok()?;
+                Some(EngineKind::Int { threads: t })
+            }
         }
     }
 }
@@ -54,7 +66,9 @@ impl std::fmt::Display for EngineKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             EngineKind::Fp => write!(f, "fp"),
-            EngineKind::Int => write!(f, "int"),
+            EngineKind::Int { threads: 0 } => write!(f, "int:auto"),
+            EngineKind::Int { threads: 1 } => write!(f, "int"),
+            EngineKind::Int { threads } => write!(f, "int:{threads}"),
             EngineKind::Pjrt => write!(f, "pjrt"),
         }
     }
@@ -78,6 +92,13 @@ pub trait Engine: Send + Sync {
     /// this is the artifact's lowered batch; the other engines accept
     /// any batch and advertise a serving-friendly default.
     fn batch_size(&self) -> usize;
+
+    /// Per-image `(H, W, C)` this engine accepts, when known — the
+    /// serving collector uses it to answer mismatched requests
+    /// individually instead of batching them.
+    fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+        None
+    }
 
     /// Run one serving batch: `(B, H, W, C)` normalised images to
     /// `(B, out_dim)` f32 scores. The PJRT engine requires
@@ -103,6 +124,10 @@ impl<E: Engine + ?Sized> Backend for E {
         Engine::batch_size(self)
     }
 
+    fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+        Engine::input_hwc(self)
+    }
+
     fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
         Engine::run_batch(self, batch)
     }
@@ -114,6 +139,20 @@ fn out_features(graph: &Graph) -> usize {
     let last = &graph.modules.last().expect("non-empty graph").name;
     let (h, w, c) = dims[last];
     h * w * c
+}
+
+/// A malformed batch must be a typed error fanned back to the waiters —
+/// never a panic that kills the serving collector thread.
+fn check_batch_input(batch: &Tensor, graph: &Graph) -> Result<(), DfqError> {
+    let dims = batch.shape.dims();
+    let (h, w, c) = graph.input_hwc;
+    if dims.len() != 4 || dims[1] != h || dims[2] != w || dims[3] != c {
+        return Err(DfqError::invalid(format!(
+            "batch shape {} does not match the model input (N,{h},{w},{c})",
+            batch.shape
+        )));
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -149,7 +188,12 @@ impl Engine for FpDeployEngine {
         DEFAULT_SERVE_BATCH
     }
 
+    fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+        Some(self.graph.input_hwc)
+    }
+
     fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+        check_batch_input(batch, &self.graph)?;
         let b = batch.shape.dim(0);
         let out = FpEngine::new(&self.graph, &self.folded).run(batch);
         Ok(out.reshape(&[b, self.out_dim]))
@@ -157,9 +201,16 @@ impl Engine for FpDeployEngine {
 }
 
 // ---------------------------------------------------------------------
-// bit-exact integer engine
+// bit-exact integer engine (data-parallel)
 // ---------------------------------------------------------------------
 
+/// The integer deploy engine: shards each NHWC batch along N across the
+/// coordinator pool (rows are independent, so the result is bit-identical
+/// to the serial engine by construction), falls back to row-blocked GEMM
+/// when the batch is too small to shard, and recycles per-shard
+/// [`Scratch`] arenas so steady-state serving performs no large
+/// allocations. `run_batch` is safe to call concurrently: each call
+/// checks scratches out of the shared pool and returns them when done.
 pub(crate) struct IntDeployEngine {
     graph: Arc<Graph>,
     spec: Arc<QuantSpec>,
@@ -167,11 +218,46 @@ pub(crate) struct IntDeployEngine {
     /// path must not re-quantize the model per batch
     qparams: HashMap<String, crate::engine::int::QuantizedParams>,
     out_dim: usize,
+    /// fractional bits of the final module's codes (dequant per shard)
+    out_frac: i32,
+    /// resolved worker count (>= 1)
+    threads: usize,
+    pool: Pool,
+    /// recycled per-shard arenas; grows to the peak concurrent shards
+    scratch: Mutex<Vec<Scratch>>,
+    /// liveness table computed once and shared by every shard engine
+    liveness: Arc<Vec<Vec<String>>>,
+}
+
+impl IntDeployEngine {
+    pub(crate) fn build(
+        cm: &CalibratedModel,
+        threads: usize,
+    ) -> Result<IntDeployEngine, DfqError> {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let last = &cm.graph.modules.last().expect("non-empty graph").name;
+        let out_frac = cm.spec.try_value_frac(&cm.graph, last)?;
+        Ok(IntDeployEngine {
+            qparams: crate::engine::int::quantize_params(&cm.graph, &cm.folded, &cm.spec),
+            graph: cm.graph.clone(),
+            spec: cm.spec.clone(),
+            out_dim: out_features(&cm.graph),
+            out_frac,
+            threads,
+            pool: Pool::new(threads),
+            scratch: Mutex::new(Vec::new()),
+            liveness: Arc::new(crate::engine::int::liveness(&cm.graph)),
+        })
+    }
 }
 
 impl Engine for IntDeployEngine {
     fn kind(&self) -> EngineKind {
-        EngineKind::Int
+        EngineKind::Int { threads: self.threads }
     }
 
     fn out_dim(&self) -> usize {
@@ -179,14 +265,98 @@ impl Engine for IntDeployEngine {
     }
 
     fn batch_size(&self) -> usize {
+        // deliberately NOT scaled with the thread count: padding every
+        // batch to the core count would make light-traffic requests pay
+        // for the whole machine; 16 rows shard across up to 16 workers
+        // and row-blocked GEMM absorbs any cores beyond that
         DEFAULT_SERVE_BATCH
     }
 
+    fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+        Some(self.graph.input_hwc)
+    }
+
     fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
-        let b = batch.shape.dim(0);
-        let eng = IntEngine::with_qparams(&self.graph, &self.spec, &self.qparams);
-        let out = eng.run_dequant(batch);
-        Ok(out.reshape(&[b, self.out_dim]))
+        check_batch_input(batch, &self.graph)?;
+        let dims = batch.shape.dims();
+        let b = dims[0];
+        if b == 0 {
+            return Ok(Tensor::from_vec(&[0, self.out_dim], Vec::new()));
+        }
+        let per: usize = dims[1..].iter().product();
+        // batch-level sharding first; leftover parallelism goes to
+        // row-blocked GEMM inside each shard (e.g. N=1 with 4 threads
+        // runs one shard whose GEMMs split 4 ways)
+        let shards = self.threads.min(b);
+        let inner = (self.threads / shards).max(1);
+        let base = b / shards;
+        let rem = b % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for i in 0..shards {
+            let take = base + usize::from(i < rem);
+            ranges.push((start, take));
+            start += take;
+        }
+        let jobs: Vec<_> = ranges
+            .into_iter()
+            .map(|(start, take)| {
+                move || -> Result<Vec<f32>, DfqError> {
+                    let mut scratch =
+                        self.scratch.lock().unwrap().pop().unwrap_or_default();
+                    // quantize this shard's rows straight into a recycled
+                    // code buffer — no f32 sub-batch copy, and the input
+                    // codes rejoin the arena once the liveness pass drops
+                    // them
+                    let mut codes = scratch.take(take * per);
+                    for (dst, &v) in codes
+                        .iter_mut()
+                        .zip(&batch.data[start * per..(start + take) * per])
+                    {
+                        *dst = scheme::quantize_val(
+                            v,
+                            self.spec.input_frac,
+                            self.spec.n_bits,
+                            false,
+                        );
+                    }
+                    let xq = TensorI32 {
+                        shape: Shape(vec![take, dims[1], dims[2], dims[3]]),
+                        data: codes,
+                    };
+                    let eng = IntEngine::with_qparams_shared(
+                        &self.graph,
+                        &self.spec,
+                        &self.qparams,
+                        self.liveness.clone(),
+                    )
+                    .with_threads(inner);
+                    let res = eng.run_codes_scratch(xq, &mut scratch);
+                    let out = match res {
+                        Ok(codes) => {
+                            let deq = scheme::dequantize_tensor(&codes, self.out_frac);
+                            scratch.recycle(codes.data);
+                            Ok(deq.data)
+                        }
+                        Err(e) => Err(e),
+                    };
+                    self.scratch.lock().unwrap().push(scratch);
+                    out
+                }
+            })
+            .collect();
+        let mut out = Vec::with_capacity(b * self.out_dim);
+        for rows in self.pool.run(jobs) {
+            out.extend_from_slice(&rows?);
+        }
+        if out.len() != b * self.out_dim {
+            return Err(DfqError::serve(format!(
+                "integer engine produced {} values for a {b}x{} batch",
+                out.len(),
+                self.out_dim
+            )));
+        }
+        Ok(Tensor::from_vec(&[b, self.out_dim], out))
     }
 }
 
@@ -204,6 +374,8 @@ pub(crate) struct PjrtDeployEngine {
     out_frac: i32,
     batch: usize,
     out_dim: usize,
+    /// per-image shape the artifact was lowered for
+    input_hwc: (usize, usize, usize),
 }
 
 impl Engine for PjrtDeployEngine {
@@ -217,6 +389,10 @@ impl Engine for PjrtDeployEngine {
 
     fn batch_size(&self) -> usize {
         self.batch
+    }
+
+    fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+        Some(self.input_hwc)
     }
 
     fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
@@ -275,12 +451,9 @@ pub(crate) fn build(
             cm.graph.clone(),
             cm.folded.clone(),
         ))),
-        EngineKind::Int => Ok(Arc::new(IntDeployEngine {
-            qparams: crate::engine::int::quantize_params(&cm.graph, &cm.folded, &cm.spec),
-            graph: cm.graph.clone(),
-            spec: cm.spec.clone(),
-            out_dim: out_features(&cm.graph),
-        })),
+        EngineKind::Int { threads } => {
+            Ok(Arc::new(IntDeployEngine::build(cm, threads)?))
+        }
         EngineKind::Pjrt => {
             let src = cm.artifact.as_ref().ok_or_else(|| {
                 DfqError::runtime(
@@ -312,6 +485,7 @@ pub(crate) fn build(
                 spec: cm.spec.clone(),
                 batch: src.batch,
                 out_dim: out_features(&cm.graph),
+                input_hwc: cm.graph.input_hwc,
             }))
         }
     }
@@ -324,9 +498,15 @@ mod tests {
     #[test]
     fn engine_kind_parses_cli_spellings() {
         assert_eq!(EngineKind::parse("fp"), Some(EngineKind::Fp));
-        assert_eq!(EngineKind::parse("int"), Some(EngineKind::Int));
+        assert_eq!(EngineKind::parse("int"), Some(EngineKind::Int { threads: 1 }));
+        assert_eq!(EngineKind::parse("int:4"), Some(EngineKind::Int { threads: 4 }));
+        assert_eq!(EngineKind::parse("int:auto"), Some(EngineKind::Int { threads: 0 }));
         assert_eq!(EngineKind::parse("pjrt"), Some(EngineKind::Pjrt));
         assert_eq!(EngineKind::parse("tpu"), None);
+        assert_eq!(EngineKind::parse("int:x"), None);
         assert_eq!(EngineKind::Pjrt.to_string(), "pjrt");
+        assert_eq!(EngineKind::Int { threads: 1 }.to_string(), "int");
+        assert_eq!(EngineKind::Int { threads: 8 }.to_string(), "int:8");
+        assert_eq!(EngineKind::Int { threads: 0 }.to_string(), "int:auto");
     }
 }

@@ -21,6 +21,15 @@
 //! yields a unified [`Engine`] trait object that the batching inference
 //! service accepts directly (every `Engine` is a
 //! [`crate::coordinator::serve::Backend`] via a blanket impl).
+//!
+//! The integer path is **data-parallel**:
+//! `EngineKind::Int { threads }` shards each batch along N across the
+//! coordinator pool (bit-identical to the serial engine for every thread
+//! count — image rows are independent), falls back to row-blocked GEMM
+//! when the batch is too small to shard, and reuses per-shard scratch
+//! arenas so steady-state serving performs no large allocations.
+//! `threads: 0` auto-sizes to the machine; `run_batch` is safe to call
+//! concurrently.
 
 pub mod engine;
 
@@ -36,7 +45,7 @@ use crate::error::DfqError;
 use crate::graph::bn_fold::{fold_bn, FoldedParams};
 use crate::graph::fuse;
 use crate::graph::layers::LayerGraph;
-use crate::graph::Graph;
+use crate::graph::{Graph, ModuleKind};
 use crate::quant::joint::{CalibConfig, CalibOutcome, JointCalibrator};
 use crate::quant::params::QuantSpec;
 use crate::quant::stats::CalibStats;
@@ -80,6 +89,35 @@ impl Session {
                     "module '{}' has no folded parameters",
                     m.name
                 )));
+            }
+        }
+        // the integer engine's global-average-pool is an exact rounded
+        // shift over an NHWC window — reject non-spatial sources and
+        // non-power-of-two windows at construction so neither can
+        // surface mid-serving
+        let dims = graph.shapes();
+        for m in &graph.modules {
+            if matches!(m.kind, ModuleKind::Gap) {
+                let spatial = m.src == "input"
+                    || graph
+                        .module(&m.src)
+                        .is_some_and(|s| matches!(s.kind, ModuleKind::Conv { .. }));
+                if !spatial {
+                    return Err(DfqError::graph(format!(
+                        "module '{}': global average pool needs a spatial (NHWC) \
+                         source, but '{}' produces a flat activation",
+                        m.name, m.src
+                    )));
+                }
+                let (h, w, _) = dims[&m.src];
+                if !(h * w).is_power_of_two() {
+                    return Err(DfqError::graph(format!(
+                        "module '{}': global average pool needs a power-of-two \
+                         spatial size, got {h}x{w} (the integer mean is an exact \
+                         rounded shift)",
+                        m.name
+                    )));
+                }
             }
         }
         Ok(Session {
@@ -361,13 +399,72 @@ mod tests {
         let mut rng = Pcg::new(23);
         let x = Tensor::from_vec(&[3, 8, 8, 3], (0..576).map(|_| rng.normal()).collect());
         let fp = session.fp_engine().run(&x).unwrap();
-        let int = calibrated.engine(EngineKind::Int).unwrap();
+        let int = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap();
         let q = int.run(&x).unwrap();
         assert_eq!(fp.shape.dims(), &[3, 5]);
         assert_eq!(q.shape.dims(), &[3, 5]);
         assert_eq!(int.out_dim(), 5);
         let mse = crate::util::mathutil::mse(&q.data, &fp.data);
         assert!(mse < 0.05, "int engine diverged: mse {mse}");
+        // the data-parallel engine is bit-identical to the serial one
+        for threads in [2usize, 4, 0] {
+            let par = calibrated.engine(EngineKind::Int { threads }).unwrap();
+            assert_eq!(par.run(&x).unwrap().data, q.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn int_engine_rejects_mismatched_batch_shape() {
+        // a malformed request must come back as a typed error (the serve
+        // layer fans it to the waiters), never a panic in a pool worker
+        let (graph, folded) = tiny();
+        let session = Session::from_graph(graph, folded).unwrap();
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &calib_batch(28))
+            .unwrap();
+        let engine = calibrated.engine(EngineKind::Int { threads: 2 }).unwrap();
+        for bad in [
+            Tensor::zeros(&[1, 8, 8, 4]), // wrong channels
+            Tensor::zeros(&[1, 4, 4, 3]), // wrong spatial size
+            Tensor::zeros(&[8, 8, 3]),    // wrong rank
+        ] {
+            let err = engine.run(&bad).unwrap_err();
+            assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        }
+    }
+
+    #[test]
+    fn from_graph_rejects_non_power_of_two_gap() {
+        // 8x8 input through a stride-3 conv -> 3x3 pooling window: the
+        // integer mean cannot be an exact shift, so the session refuses
+        let graph = Graph {
+            name: "bad".into(),
+            input_hwc: (8, 8, 3),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 3 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c0".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut folded = HashMap::new();
+        folded.insert(
+            "c0".to_string(),
+            FoldedParams { w: Tensor::zeros(&[3, 3, 3, 4]), b: vec![0.0; 4] },
+        );
+        let err = Session::from_graph(graph, folded).unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        assert!(err.to_string().contains("power-of-two"), "{err}");
     }
 
     #[test]
@@ -405,7 +502,7 @@ mod tests {
         let calibrated = session
             .calibrate(CalibConfig::default(), &calib_batch(26))
             .unwrap();
-        let engine = calibrated.engine(EngineKind::Int).unwrap();
+        let engine = calibrated.engine(EngineKind::Int { threads: 2 }).unwrap();
         let mut rng = Pcg::new(27);
         let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
         let want = engine.run(&x).unwrap();

@@ -46,6 +46,28 @@ pub fn im2col<T: Copy + Default>(
     stride: usize,
     padding: Padding,
 ) -> (TensorBase<T>, usize, usize) {
+    let mut out = Vec::new();
+    let (ho, wo) = im2col_into(x, kh, kw, stride, padding, &mut out);
+    let k = kh * kw * x.shape.dim(3);
+    (
+        TensorBase { shape: Shape(vec![x.shape.dim(0) * ho * wo, k]), data: out },
+        ho,
+        wo,
+    )
+}
+
+/// [`im2col`] into a caller-owned buffer (the integer engine's scratch
+/// arena): the buffer is cleared and resized to `N*Ho*Wo × kh*kw*C`, so
+/// a buffer reused across calls performs no allocation once it has grown
+/// to the largest patch matrix in the model. Returns `(Ho, Wo)`.
+pub fn im2col_into<T: Copy + Default>(
+    x: &TensorBase<T>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+    out: &mut Vec<T>,
+) -> (usize, usize) {
     let (n, h, w, c) = (
         x.shape.dim(0),
         x.shape.dim(1),
@@ -54,7 +76,10 @@ pub fn im2col<T: Copy + Default>(
     );
     let (ho, wo, pt, pl) = conv_geometry(h, w, kh, kw, stride, padding);
     let k = kh * kw * c;
-    let mut out = vec![T::default(); n * ho * wo * k];
+    // clear + resize rewrites every element with the padding value, so a
+    // dirty recycled buffer cannot leak stale codes into the padding
+    out.clear();
+    out.resize(n * ho * wo * k, T::default());
     for b in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -78,11 +103,7 @@ pub fn im2col<T: Copy + Default>(
             }
         }
     }
-    (
-        TensorBase { shape: Shape(vec![n * ho * wo, k]), data: out },
-        ho,
-        wo,
-    )
+    (ho, wo)
 }
 
 #[cfg(test)]
@@ -132,6 +153,18 @@ mod tests {
         let (p, _, _) = im2col(&x, 1, 2, 1, Padding::Valid);
         assert_eq!(p.shape.dims(), &[1, 4]);
         assert_eq!(p.data, vec![1., 10., 2., 20.]);
+    }
+
+    #[test]
+    fn into_with_dirty_buffer_matches_fresh() {
+        // a recycled buffer full of garbage must produce the exact same
+        // patches (padding regions rewritten, not assumed zero)
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let (fresh, ho, wo) = im2col(&x, 3, 3, 1, Padding::Same);
+        let mut buf = vec![9.5f32; 1024];
+        let (ho2, wo2) = im2col_into(&x, 3, 3, 1, Padding::Same, &mut buf);
+        assert_eq!((ho, wo), (ho2, wo2));
+        assert_eq!(buf, fresh.data);
     }
 
     #[test]

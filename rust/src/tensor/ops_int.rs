@@ -2,11 +2,72 @@
 //! custom MAC array (int8 codes held in i32 lanes, 32-bit accumulation —
 //! Eq. 3's `O_int32`). Requantization/alignment shifts live in
 //! [`crate::quant::scheme`]; the engine composes the two.
+//!
+//! Every op uses **wrapping** i32 arithmetic — the fixed-width-register
+//! semantics of the paper's RTL accumulators — so debug and release
+//! builds compute identical values (calibration keeps real models inside
+//! the 32-bit range; see `max_magnitude_no_overflow`).
+//!
+//! The GEMM has `_into` forms that write a caller-owned buffer (the
+//! engine's scratch arena reuses them) and an optional second level of
+//! parallelism: row-blocks of C are computed on scoped threads, which is
+//! bit-exact by construction since output rows are independent.
 
-use super::im2col::{im2col, Padding};
+use super::im2col::{im2col, im2col_into, Padding};
 use super::{Shape, TensorI32};
 
-/// C(M,N) = A(M,K) * B(K,N) with i32 accumulation.
+/// Below this many output rows per worker, scoped-thread spawn overhead
+/// beats the win — the row-block split degrades to fewer workers.
+const PAR_MIN_ROWS_PER_THREAD: usize = 32;
+
+/// C(M,N) = A(M,K) * B(K,N) with i32 accumulation (single-threaded,
+/// allocating — see [`gemm_i32_into`] for the scratch/parallel form).
+pub fn gemm_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    gemm_i32_into(a, b, m, k, n, &mut c, 1);
+    c
+}
+
+/// C(M,N) = A(M,K) * B(K,N) into a caller-owned buffer, optionally
+/// split into row-blocks across `threads` scoped threads (used by the
+/// integer engine when the serving batch is too small to shard along N).
+/// Every element of `c` is overwritten; the split is over output rows,
+/// so the result is bit-identical for any thread count.
+pub fn gemm_i32_into(
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [i32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0);
+        return;
+    }
+    let threads = threads.clamp(1, (m / PAR_MIN_ROWS_PER_THREAD).max(1));
+    if threads == 1 {
+        gemm_serial_into(a, b, m, k, n, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (i, cb) in c.chunks_mut(rows_per * n).enumerate() {
+            let rows = cb.len() / n;
+            let ab = &a[i * rows_per * k..i * rows_per * k + rows * k];
+            s.spawn(move || gemm_serial_into(ab, b, rows, k, n, cb));
+        }
+    });
+}
+
+/// The single-threaded kernel behind [`gemm_i32_into`].
 ///
 /// Two regimes (§Perf iteration #5):
 /// * `n <= 64` (most of our conv channels): accumulate each output row in
@@ -14,20 +75,17 @@ use super::{Shape, TensorI32};
 ///   whole K loop — one store per output element instead of one per MAC;
 /// * wider N: stream through B/C rows, skipping zero input codes (common
 ///   after ReLU, where ~30–50% of codes are 0).
-pub fn gemm_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    let mut c = vec![0i32; m * n];
+fn gemm_serial_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, c: &mut [i32]) {
     // monomorphized register-blocked kernels for the channel widths our
     // models actually use: the compile-time N fully unrolls the inner
     // loop and pins the accumulators in vector registers
     match n {
-        8 => return gemm_i32_rb::<8>(a, b, m, k),
-        10 => return gemm_i32_rb::<10>(a, b, m, k),
-        16 => return gemm_i32_rb::<16>(a, b, m, k),
-        32 => return gemm_i32_rb::<32>(a, b, m, k),
-        64 => return gemm_i32_rb::<64>(a, b, m, k),
-        96 => return gemm_i32_rb::<96>(a, b, m, k),
+        8 => return gemm_i32_rb::<8>(a, b, m, k, c),
+        10 => return gemm_i32_rb::<10>(a, b, m, k, c),
+        16 => return gemm_i32_rb::<16>(a, b, m, k, c),
+        32 => return gemm_i32_rb::<32>(a, b, m, k, c),
+        64 => return gemm_i32_rb::<64>(a, b, m, k, c),
+        96 => return gemm_i32_rb::<96>(a, b, m, k, c),
         _ => {}
     }
     if n <= 64 {
@@ -45,11 +103,12 @@ pub fn gemm_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> 
             }
             c[i * n..(i + 1) * n].copy_from_slice(&acc[..n]);
         }
-        return c;
+        return;
     }
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0);
         for (p, &av) in arow.iter().enumerate() {
             if av == 0 {
                 continue; // zero codes are common after ReLU
@@ -60,12 +119,10 @@ pub fn gemm_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> 
             }
         }
     }
-    c
 }
 
 /// Register-blocked GEMM with compile-time N (fully unrolled inner loop).
-fn gemm_i32_rb<const N: usize>(a: &[i32], b: &[i32], m: usize, k: usize) -> Vec<i32> {
-    let mut c = vec![0i32; m * N];
+fn gemm_i32_rb<const N: usize>(a: &[i32], b: &[i32], m: usize, k: usize, c: &mut [i32]) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let mut acc = [0i32; N];
@@ -77,7 +134,6 @@ fn gemm_i32_rb<const N: usize>(a: &[i32], b: &[i32], m: usize, k: usize) -> Vec<
         }
         c[i * N..(i + 1) * N].copy_from_slice(&acc);
     }
-    c
 }
 
 /// Integer conv accumulator: NHWC codes x HWIO codes -> NHWC i32
@@ -103,6 +159,39 @@ pub fn conv2d_acc(
     TensorI32 { shape: Shape(vec![n, ho, wo, cout]), data: out }
 }
 
+/// [`conv2d_acc`] through caller-owned scratch buffers: `patches` holds
+/// the im2col matrix and `out` receives the accumulator — capacity is
+/// never released, so steady-state reuse performs no allocation (and the
+/// accumulator skips the zero fill; the GEMM overwrites every element).
+/// Returns the output shape `(N, Ho, Wo, Cout)`.
+pub fn conv2d_acc_into(
+    x: &TensorI32,
+    w: &TensorI32,
+    stride: usize,
+    padding: Padding,
+    patches: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+    threads: usize,
+) -> Shape {
+    let (kh, kw, cin, cout) = (
+        w.shape.dim(0),
+        w.shape.dim(1),
+        w.shape.dim(2),
+        w.shape.dim(3),
+    );
+    assert_eq!(x.shape.dim(3), cin, "channel mismatch");
+    let n = x.shape.dim(0);
+    let (ho, wo) = im2col_into(x, kh, kw, stride, padding, patches);
+    let m = n * ho * wo;
+    let k = kh * kw * cin;
+    // size without zeroing the kept prefix: the GEMM overwrites every
+    // element, so only newly grown capacity needs the zero fill
+    out.truncate(m * cout);
+    out.resize(m * cout, 0);
+    gemm_i32_into(&patches[..m * k], &w.data, m, k, cout, out, threads);
+    Shape(vec![n, ho, wo, cout])
+}
+
 /// Dense accumulator: (N, Cin) x (Cin, Cout) -> i32.
 pub fn dense_acc(x: &TensorI32, w: &TensorI32) -> TensorI32 {
     let (n, cin) = (x.shape.dim(0), x.shape.dim(1));
@@ -113,7 +202,9 @@ pub fn dense_acc(x: &TensorI32, w: &TensorI32) -> TensorI32 {
 }
 
 /// Global sum pool: (N,H,W,C) -> (N,C) i32 sums (the mean is taken by an
-/// exact rounded shift in the engine; H*W is a power of two by design).
+/// exact rounded shift in the engine, which requires H*W to be a power of
+/// two). Accumulation wraps like every other integer op, so debug and
+/// release builds agree.
 pub fn global_sum_pool(x: &TensorI32) -> TensorI32 {
     let (n, h, w, c) = (
         x.shape.dim(0),
@@ -127,7 +218,7 @@ pub fn global_sum_pool(x: &TensorI32) -> TensorI32 {
             for xx in 0..w {
                 let base = ((b * h + y) * w + xx) * c;
                 for ch in 0..c {
-                    out[b * c + ch] += x.data[base + ch];
+                    out[b * c + ch] = out[b * c + ch].wrapping_add(x.data[base + ch]);
                 }
             }
         }
@@ -138,11 +229,29 @@ pub fn global_sum_pool(x: &TensorI32) -> TensorI32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg;
 
     #[test]
     fn gemm_known() {
         let c = gemm_i32(&[1, 2, 3, 4], &[5, 6, 7, 8], 2, 2, 2);
         assert_eq!(c, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn gemm_into_parallel_matches_serial_exactly() {
+        // row-block parallelism must be bit-identical for every thread
+        // count and for every N regime (rb kernel, small-N, wide-N)
+        let mut rng = Pcg::new(77);
+        for &(m, k, n) in &[(130usize, 9usize, 16usize), (97, 31, 37), (256, 12, 128)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.int_range(-128, 128) as i32).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.int_range(-128, 128) as i32).collect();
+            let want = gemm_i32(&a, &b, m, k, n);
+            for threads in [2usize, 3, 4, 8] {
+                let mut c = vec![7i32; m * n]; // dirty buffer
+                gemm_i32_into(&a, &b, m, k, n, &mut c, threads);
+                assert_eq!(c, want, "m={m} k={k} n={n} threads={threads}");
+            }
+        }
     }
 
     #[test]
@@ -155,6 +264,25 @@ mod tests {
     }
 
     #[test]
+    fn conv_acc_into_reuses_buffers() {
+        let mut rng = Pcg::new(78);
+        let x = TensorI32::from_vec(
+            &[2, 5, 5, 3],
+            (0..150).map(|_| rng.int_range(-128, 128) as i32).collect(),
+        );
+        let w = TensorI32::from_vec(
+            &[3, 3, 3, 4],
+            (0..108).map(|_| rng.int_range(-128, 128) as i32).collect(),
+        );
+        let want = conv2d_acc(&x, &w, 1, Padding::Same);
+        let mut patches = vec![42i32; 7]; // dirty, wrong-sized scratch
+        let mut out = vec![42i32; 9999];
+        let shape = conv2d_acc_into(&x, &w, 1, Padding::Same, &mut patches, &mut out, 2);
+        assert_eq!(shape, want.shape);
+        assert_eq!(out, want.data);
+    }
+
+    #[test]
     fn max_magnitude_no_overflow() {
         // worst case in our models: K = 3*3*64, |codes| <= 255 * 128
         let x = TensorI32::from_vec(&[1, 3, 3, 64], vec![255; 9 * 64]);
@@ -163,6 +291,21 @@ mod tests {
         let expect = 255i64 * -128 * (3 * 3 * 64) as i64;
         assert!(expect.abs() < i32::MAX as i64);
         assert_eq!(y.at4(0, 1, 1, 0) as i64, expect);
+        // pooling worst case: |codes| <= 255 summed over a 32x32 window —
+        // three orders of magnitude inside the i32 range
+        let xp = TensorI32::from_vec(&[1, 32, 32, 1], vec![255; 1024]);
+        let p = global_sum_pool(&xp);
+        assert_eq!(p.data, vec![255 * 1024]);
+        assert!((255i64 * 1024) < i32::MAX as i64);
+    }
+
+    #[test]
+    fn global_sum_pool_wraps_like_gemm() {
+        // out-of-range sums wrap (fixed-width register semantics) instead
+        // of panicking in debug builds — same contract as the GEMM
+        let x = TensorI32::from_vec(&[1, 1, 2, 1], vec![i32::MAX, i32::MAX]);
+        let y = global_sum_pool(&x);
+        assert_eq!(y.data, vec![i32::MAX.wrapping_add(i32::MAX)]);
     }
 
     #[test]

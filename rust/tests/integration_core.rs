@@ -48,7 +48,7 @@ fn full_pipeline_resnet_s_int_close_to_fp() {
 
     let x = dfq::data::dataset::synth_images(8, 32, 3, 3);
     let fp = session.fp_engine().run(&x).unwrap();
-    let engine = calibrated.engine(EngineKind::Int).unwrap();
+    let engine = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap();
     let q = engine.run(&x).unwrap();
     assert_eq!(fp.shape.dims(), &[8, 10]);
     assert_eq!(q.shape.dims(), &[8, 10]);
@@ -157,7 +157,7 @@ fn detnet_pipeline_decodes() {
         (0..64 * 128 * 3).map(|_| rng.normal()).collect(),
     );
     let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
-    let engine = calibrated.engine(EngineKind::Int).unwrap();
+    let engine = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap();
     let x = Tensor::from_vec(
         &[2, 64, 128, 3],
         (0..2 * 64 * 128 * 3).map(|_| rng.normal()).collect(),
@@ -191,8 +191,8 @@ fn quant_spec_file_roundtrip() {
     }
     // the round-tripped spec drives the engine identically
     let x = dfq::data::dataset::synth_images(2, 32, 3, 11);
-    let a = IntEngine::new(&graph, &folded, calibrated.spec()).run(&x);
-    let b = IntEngine::new(&graph, &folded, &spec2).run(&x);
+    let a = IntEngine::new(&graph, &folded, calibrated.spec()).run(&x).unwrap();
+    let b = IntEngine::new(&graph, &folded, &spec2).run(&x).unwrap();
     assert_eq!(a.data, b.data);
     std::fs::remove_file(&path).ok();
 }
@@ -210,7 +210,7 @@ fn bit_width_sweep_monotone_on_real_graph() {
         let calibrated = session
             .calibrate(CalibConfig { n_bits: bits, ..Default::default() }, &calib)
             .unwrap();
-        let q = calibrated.engine(EngineKind::Int).unwrap().run(&x).unwrap();
+        let q = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap().run(&x).unwrap();
         errs.push(mse(&q.data, &fp.data));
     }
     // Table-4 shape: error grows as precision drops
@@ -245,7 +245,7 @@ fn session_engine_serves_through_inference_service() {
     let session = Session::from_graph(graph, folded).unwrap();
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 18);
     let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
-    let engine = calibrated.engine(EngineKind::Int).unwrap();
+    let engine = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap();
     let x = dfq::data::dataset::synth_images(3, 32, 3, 19);
     let want = engine.run(&x).unwrap();
 

@@ -198,7 +198,7 @@ fn q_logits_artifact_matches_int_engine() {
     let pjrt_out = worker.run(&path, args).unwrap();
     let got = pjrt_out[0].as_i32().unwrap();
 
-    let mut acts = eng.run_acts(&x_int);
+    let mut acts = eng.run_acts(&x_int).unwrap();
     let want = acts.remove(&bundle.graph.modules.last().unwrap().name).unwrap();
     assert_eq!(got.shape.dims(), want.shape.dims());
     assert_eq!(got.data, want.data, "PJRT artifact != integer engine");
@@ -216,7 +216,7 @@ fn session_pjrt_engine_matches_int_engine() {
     let calibrated = session.calibrate(CalibConfig::default(), &calib).unwrap();
     let ds = art.classification_set("synthimagenet_val").unwrap();
     let (x, _) = ds.batch(0, 5);
-    let a = calibrated.engine(EngineKind::Int).unwrap().run(&x).unwrap();
+    let a = calibrated.engine(EngineKind::Int { threads: 2 }).unwrap().run(&x).unwrap();
     let b = calibrated.engine(EngineKind::Pjrt).unwrap().run(&x).unwrap();
     assert_eq!(a.shape.dims(), b.shape.dims());
     assert_eq!(a.data, b.data, "PJRT engine != integer engine");

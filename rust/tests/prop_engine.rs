@@ -1,0 +1,177 @@
+//! Property tests for the data-parallel integer execution core: the
+//! sharded/row-blocked engine must be **bit-identical** to the serial
+//! `IntEngine` across random graphs, batch sizes (including N=1 and N
+//! not divisible by the shard count) and thread counts — and the serve
+//! path must hold that contract under concurrent submitters.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dfq::coordinator::serve::{InferenceService, ServeConfig};
+use dfq::engine::int::{IntEngine, Scratch};
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::prelude::*;
+
+/// A random residual CNN over an 8x8x3 input. Strides keep the spatial
+/// size a power of two (8 -> 4 -> 2 -> 1 via div_ceil), so an optional
+/// gap+dense head is always integer-exact.
+fn random_model(rng: &mut Pcg) -> (Graph, HashMap<String, FoldedParams>) {
+    let mut modules = Vec::new();
+    let mut ch = rng.int_range(2, 5) as usize;
+    modules.push(UnifiedModule {
+        name: "stem".into(),
+        kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: ch, stride: 1 },
+        src: "input".into(),
+        res: None,
+        relu: true,
+    });
+    let mut prev = "stem".to_string();
+    let n_blocks = rng.int_range(1, 4);
+    for i in 0..n_blocks {
+        let name = format!("c{i}");
+        let stride = if rng.f32() < 0.3 { 2 } else { 1 };
+        let cout = if stride == 1 && rng.f32() < 0.5 {
+            ch
+        } else {
+            rng.int_range(2, 6) as usize
+        };
+        // a residual needs matching shapes: stride 1 and unchanged width
+        let res = (stride == 1 && cout == ch && rng.f32() < 0.6).then(|| prev.clone());
+        let k = if rng.f32() < 0.5 { 1 } else { 3 };
+        modules.push(UnifiedModule {
+            name: name.clone(),
+            kind: ModuleKind::Conv { kh: k, kw: k, cin: ch, cout, stride },
+            src: prev.clone(),
+            res,
+            relu: rng.f32() < 0.7,
+        });
+        ch = cout;
+        prev = name;
+    }
+    if rng.f32() < 0.7 {
+        modules.push(UnifiedModule {
+            name: "gap".into(),
+            kind: ModuleKind::Gap,
+            src: prev.clone(),
+            res: None,
+            relu: false,
+        });
+        modules.push(UnifiedModule {
+            name: "fc".into(),
+            kind: ModuleKind::Dense { cin: ch, cout: 5 },
+            src: "gap".into(),
+            res: None,
+            relu: false,
+        });
+    }
+    let graph = Graph { name: "rand".into(), input_hwc: (8, 8, 3), modules };
+    let mut folded = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+            },
+        );
+    }
+    (graph, folded)
+}
+
+fn images(rng: &mut Pcg, n: usize) -> Tensor {
+    Tensor::from_vec(&[n, 8, 8, 3], (0..n * 192).map(|_| rng.normal()).collect())
+}
+
+#[test]
+fn prop_parallel_engine_bit_identical_to_serial() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg::new(7000 + seed * 131);
+        let (graph, folded) = random_model(&mut rng);
+        let session = Session::from_graph(graph, folded).unwrap();
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &images(&mut rng, 1))
+            .unwrap();
+        let serial = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap();
+        let engines: Vec<_> = [2usize, 3, 4, 0]
+            .iter()
+            .map(|&t| {
+                (t, calibrated.engine(EngineKind::Int { threads: t }).unwrap())
+            })
+            .collect();
+        // N=1 (too small to shard), N not divisible by the shard count
+        // (3, 5), N divisible (8)
+        for &b in &[1usize, 2, 3, 5, 8] {
+            let x = images(&mut rng, b);
+            let want = serial.run(&x).unwrap();
+            assert_eq!(want.shape.dims(), &[b, serial.out_dim()]);
+            for (t, par) in &engines {
+                let got = par.run(&x).unwrap();
+                assert_eq!(want.shape.dims(), got.shape.dims());
+                assert_eq!(want.data, got.data, "seed {seed} batch {b} threads {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scratch_reuse_is_bit_stable() {
+    // a warm scratch arena (recycled buffers across passes) must not
+    // change a single bit of the output
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(8100 + seed * 97);
+        let (graph, folded) = random_model(&mut rng);
+        let session = Session::from_graph(graph.clone(), folded.clone()).unwrap();
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &images(&mut rng, 1))
+            .unwrap();
+        let eng = IntEngine::new(&graph, &folded, calibrated.spec());
+        let mut scratch = Scratch::new();
+        for round in 0..4 {
+            let x = images(&mut rng, 3);
+            let fresh = eng.run(&x).unwrap();
+            let warm = eng.run_scratch(&x, &mut scratch).unwrap();
+            assert_eq!(fresh, warm, "seed {seed} round {round}");
+        }
+    }
+}
+
+#[test]
+fn parallel_engine_serves_concurrent_submitters_bit_exactly() {
+    let mut rng = Pcg::new(9000);
+    let (graph, folded) = random_model(&mut rng);
+    let session = Session::from_graph(graph, folded).unwrap();
+    let calibrated = session
+        .calibrate(CalibConfig::default(), &images(&mut rng, 1))
+        .unwrap();
+    let serial = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap();
+    let parallel = calibrated.engine(EngineKind::Int { threads: 4 }).unwrap();
+
+    let svc = Arc::new(InferenceService::start(parallel, ServeConfig::default()));
+    let mut handles = Vec::new();
+    for i in 0..24u64 {
+        let svc = svc.clone();
+        let mut rng = Pcg::new(9100 + i);
+        let img = images(&mut rng, 1);
+        handles.push(std::thread::spawn(move || {
+            let row = svc.infer(img.clone()).unwrap();
+            (img, row)
+        }));
+    }
+    for h in handles {
+        let (img, row) = h.join().unwrap();
+        let want = serial.run(&img).unwrap();
+        assert_eq!(row, want.data, "served row != serial engine");
+    }
+    let m = Arc::try_unwrap(svc).ok().expect("all clients joined").shutdown();
+    assert_eq!(m.completed, 24);
+}

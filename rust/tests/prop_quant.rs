@@ -223,7 +223,7 @@ fn prop_engine_output_in_range_for_any_spec() {
         }
         let eng = IntEngine::new(&graph, &folded, &spec);
         let x = Tensor::from_vec(&[1, 6, 6, 2], (0..72).map(|_| rng.normal()).collect());
-        let acts = eng.run_acts(&eng.quantize_input(&x));
+        let acts = eng.run_acts(&eng.quantize_input(&x)).unwrap();
         let (qmin_u, qmax_u) = scheme::qrange(bits, true);
         let (qmin_s, qmax_s) = scheme::qrange(bits, false);
         for &v in &acts["c0"].data {
@@ -286,14 +286,14 @@ fn prop_fused_never_worse_than_unfused_on_average() {
         let fp = FpEngine::new(&graph, &folded).run_acts(&calib);
         let eng = IntEngine::new(&graph, &folded, &out.spec);
         let fused = dfq::util::mathutil::mse(
-            &eng.run_dequant(&calib).data,
+            &eng.run_dequant(&calib).unwrap().data,
             &fp["c1"].data,
         );
         let pre = cal.ablation_pre_fracs(&graph, &folded, &calib, &out.spec);
         let mut eng2 = IntEngine::new(&graph, &folded, &out.spec);
         eng2.pre_frac = Some(pre);
         let unfused = dfq::util::mathutil::mse(
-            &eng2.run_dequant(&calib).data,
+            &eng2.run_dequant(&calib).unwrap().data,
             &fp["c1"].data,
         );
         fused_total += fused;
