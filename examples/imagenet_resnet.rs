@@ -48,9 +48,11 @@ fn main() {
         // surface (they simulate quantizers in f32, not deployments)
         let bundle = art.load_model(name).expect("bundle for baselines");
         let mut kl = KlQuant::new(8, 8);
-        let a_kl = experiments::eval_baseline(&bundle, &mut kl, &calib, &ds, opt);
+        let a_kl = experiments::eval_baseline(&bundle, &mut kl, &calib, &ds, opt)
+            .expect("kl baseline");
         let mut mm = MinMaxQuant::new(8, 8);
-        let a_mm = experiments::eval_baseline(&bundle, &mut mm, &calib, &ds, opt);
+        let a_mm = experiments::eval_baseline(&bundle, &mut mm, &calib, &ds, opt)
+            .expect("minmax baseline");
         table.row(vec![
             name.into(),
             pct(fp),

@@ -11,7 +11,8 @@ fn main() {
     let art = Artifacts::open("artifacts").unwrap();
     let bundle = art.load_model("resnet_s").unwrap();
     let calib = art.calibration_images(1).unwrap();
-    let out = dfq::report::experiments::calibrate_ours(&bundle, &calib, 8);
+    let out = dfq::report::experiments::calibrate_ours(&bundle, &calib, 8)
+        .expect("calibration runs");
     let eng = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
     let ds = art.classification_set("synthimagenet_val").unwrap();
     let (x, _) = ds.batch(0, 8);

@@ -6,6 +6,8 @@
 //!   * the requantization shift (Table 5's operator, in software),
 //!   * im2col patch extraction,
 //!   * a full unified module through the engine,
+//!   * ExecPlan compilation (the one-time lowering cost) and the
+//!     compile-once vs per-run-graph-walk e2e comparison,
 //!   * one Algorithm-1 module search (the calibration inner loop),
 //!   * end-to-end ResNet-S integer inference per image.
 //!
@@ -125,6 +127,41 @@ fn main() {
         8.0 / st.median()
     );
 
+    // --- the plan win: compile-once vs per-run graph walk ---
+    // ExecPlan::compile is the one-time lowering (name/shape/spec
+    // resolution + slot assignment); eng.run() above pays it per batch
+    // (the interpreter-era behaviour), the cached-plan path below pays
+    // it never.
+    let st_compile = bench(3, 50, || {
+        std::hint::black_box(eng.plan().expect("plan compiles"));
+    });
+    println!(
+        "{:<42} median {:>10}  p95 {:>10}  ({} steps, {} slots)",
+        "ExecPlan::compile resnet_s",
+        fmt_secs(st_compile.median()),
+        fmt_secs(st_compile.percentile(95.0)),
+        eng.plan().expect("plan compiles").len(),
+        eng.plan().expect("plan compiles").slot_count(),
+    );
+    let plan = eng.plan().expect("plan compiles");
+    let mut plan_scratch = dfq::engine::int::Scratch::new();
+    let st_cached = bench(1, 10, || {
+        std::hint::black_box(
+            eng.run_plan_scratch(&plan, &xb, &mut plan_scratch)
+                .expect("cached-plan run"),
+        );
+    });
+    report("resnet_s int8 e2e, cached plan (batch 8)", macs, "GMAC/s", &st_cached);
+    println!(
+        "  -> {:.2}x vs per-run compile+walk",
+        st.median() / st_cached.median()
+    );
+    assert_eq!(
+        eng.run_plan_scratch(&plan, &xb, &mut plan_scratch).expect("cached run").data,
+        eng.run(&xb).expect("per-run compile run").data,
+        "cached plan must be bit-identical to per-run compilation"
+    );
+
     // --- the same e2e path through the Engine abstraction (measures
     //     the session-surface overhead: per-batch requantize + dequant) ---
     let engine = calibrated
@@ -183,7 +220,7 @@ fn main() {
     };
     let p = &folded["s0b0/c1"];
     let fp_engine = dfq::engine::fp::FpEngine::new(&graph, &folded);
-    let facts = fp_engine.run_acts(&calib);
+    let facts = fp_engine.run_acts(&calib).expect("fp oracle runs");
     let problem = ModuleProblem {
         module,
         x_int: &stem_out,

@@ -41,11 +41,14 @@ fn main() {
     let calib = art.calibration_images(1).unwrap();
     let cfg = CalibConfig::default();
     let serial = bench(1, 3, || {
-        JointCalibrator::new(cfg).calibrate(&bundle.graph, &bundle.folded, &calib);
+        JointCalibrator::new(cfg)
+            .calibrate(&bundle.graph, &bundle.folded, &calib)
+            .expect("calibration runs");
     });
     let pool = Pool::auto();
     let par = bench(1, 3, || {
-        calibrate_parallel(&pool, cfg, &bundle.graph, &bundle.folded, &calib);
+        calibrate_parallel(&pool, cfg, &bundle.graph, &bundle.folded, &calib)
+            .expect("calibration runs");
     });
     println!(
         "resnet_m calibration: serial {} | parallel({} workers) {}",

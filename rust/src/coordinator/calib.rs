@@ -7,6 +7,7 @@
 use std::collections::HashMap;
 
 use crate::coordinator::pool::Pool;
+use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::{Graph, ModuleKind};
 use crate::quant::algo1::{self, ModuleProblem, SearchConfig};
@@ -27,11 +28,11 @@ pub fn calibrate_parallel(
     graph: &Graph,
     folded: &HashMap<String, FoldedParams>,
     calib: &Tensor,
-) -> CalibOutcome {
+) -> Result<CalibOutcome, DfqError> {
     let timer = Timer::start();
     let scfg = SearchConfig { n_bits: cfg.n_bits, tau: cfg.tau };
     let fp = crate::engine::fp::FpEngine::new(graph, folded);
-    let fp_acts = fp.run_acts(calib);
+    let fp_acts = fp.run_acts(calib)?;
 
     let mut spec = QuantSpec::new(cfg.n_bits);
     spec.input_frac = algo1::search_input_frac(calib, cfg.n_bits, cfg.tau);
@@ -43,18 +44,19 @@ pub fn calibrate_parallel(
     );
 
     for m in &graph.modules {
+        let target = fp_acts.get(&m.name).ok_or_else(|| {
+            DfqError::data(format!("module '{}' has no FP target activation", m.name))
+        })?;
         match &m.kind {
             ModuleKind::Gap => {
                 let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                let out = eng
-                    .run_module(m, &iacts)
-                    .expect("calibration prefix covers every executed module");
-                let n = spec.value_frac(graph, &m.src);
+                let out = eng.run_module(m, &iacts)?;
+                let n = spec.try_value_frac(graph, &m.src)?;
                 let deq = scheme::dequantize_tensor(&out, n);
                 stats.push(ModuleStat {
                     name: m.name.clone(),
                     fig1_case: m.fig1_case(),
-                    mse: mse(&deq.data, &fp_acts[&m.name].data),
+                    mse: mse(&deq.data, &target.data),
                     n_w: 0,
                     n_b: 0,
                     n_o: n,
@@ -64,17 +66,38 @@ pub fn calibrate_parallel(
                 iacts.insert(m.name.clone(), out);
             }
             _ => {
-                let p = &folded[&m.name];
-                let n_x = spec.value_frac(graph, &m.src);
-                let res = m.res.as_ref().map(|r| (&iacts[r], spec.value_frac(graph, r)));
+                let p = folded.get(&m.name).ok_or_else(|| {
+                    DfqError::data(format!(
+                        "module '{}' has no folded parameters",
+                        m.name
+                    ))
+                })?;
+                let n_x = spec.try_value_frac(graph, &m.src)?;
+                let res = match m.res.as_ref() {
+                    Some(r) => {
+                        let rt = iacts.get(r).ok_or_else(|| {
+                            DfqError::graph(format!(
+                                "{}: missing residual activation '{r}'",
+                                m.name
+                            ))
+                        })?;
+                        Some((rt, spec.try_value_frac(graph, r)?))
+                    }
+                    None => None,
+                };
                 let problem = ModuleProblem {
                     module: m,
-                    x_int: &iacts[&m.src],
+                    x_int: iacts.get(&m.src).ok_or_else(|| {
+                        DfqError::graph(format!(
+                            "{}: missing input activation '{}'",
+                            m.name, m.src
+                        ))
+                    })?,
                     n_x,
                     w: &p.w,
                     b: &p.b,
                     res,
-                    target: &fp_acts[&m.name],
+                    target,
                 };
                 // fan the N_w branches across the pool
                 let cands = algo1::weight_candidates(&problem, scfg);
@@ -98,14 +121,12 @@ pub fn calibrate_parallel(
                 let _ = evaluated;
                 spec.modules.insert(m.name.clone(), best.shifts);
                 let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                let out = eng
-                    .run_module(m, &iacts)
-                    .expect("calibration prefix covers every executed module");
+                let out = eng.run_module(m, &iacts)?;
                 let deq = scheme::dequantize_tensor(&out, best.shifts.n_o);
                 stats.push(ModuleStat {
                     name: m.name.clone(),
                     fig1_case: m.fig1_case(),
-                    mse: mse(&deq.data, &fp_acts[&m.name].data),
+                    mse: mse(&deq.data, &target.data),
                     n_w: best.shifts.n_w,
                     n_b: best.shifts.n_b,
                     n_o: best.shifts.n_o,
@@ -116,7 +137,7 @@ pub fn calibrate_parallel(
             }
         }
     }
-    CalibOutcome { spec, stats, seconds: timer.secs() }
+    Ok(CalibOutcome { spec, stats, seconds: timer.secs() })
 }
 
 /// A named calibration job for table-level fan-out.
@@ -135,7 +156,10 @@ pub struct CalibJob<'a> {
 
 /// Run many calibrations concurrently (one worker per job; each job's
 /// inner search stays serial to avoid nested pools).
-pub fn calibrate_many(pool: &Pool, jobs: Vec<CalibJob<'_>>) -> Vec<(String, CalibOutcome)> {
+pub fn calibrate_many(
+    pool: &Pool,
+    jobs: Vec<CalibJob<'_>>,
+) -> Vec<(String, Result<CalibOutcome, DfqError>)> {
     pool.run(
         jobs.into_iter()
             .map(|job| {
@@ -200,9 +224,9 @@ mod tests {
     fn parallel_matches_serial_exactly() {
         let (graph, folded, x) = toy();
         let cfg = CalibConfig::default();
-        let serial = JointCalibrator::new(cfg).calibrate(&graph, &folded, &x);
+        let serial = JointCalibrator::new(cfg).calibrate(&graph, &folded, &x).unwrap();
         let pool = Pool::new(4);
-        let par = calibrate_parallel(&pool, cfg, &graph, &folded, &x);
+        let par = calibrate_parallel(&pool, cfg, &graph, &folded, &x).unwrap();
         assert_eq!(par.spec.input_frac, serial.spec.input_frac);
         for (k, v) in &serial.spec.modules {
             assert_eq!(par.spec.modules[k], *v, "module {k}");
@@ -232,6 +256,6 @@ mod tests {
         let out = calibrate_many(&pool, jobs);
         assert_eq!(out[0].0, "a");
         assert_eq!(out[1].0, "b");
-        assert_eq!(out[1].1.spec.n_bits, 6);
+        assert_eq!(out[1].1.as_ref().unwrap().spec.n_bits, 6);
     }
 }

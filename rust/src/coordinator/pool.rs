@@ -1,20 +1,105 @@
-//! A small fixed-size thread pool over `std::thread::scope` — no
-//! external dependencies (the offline registry has no rayon/tokio).
-//! Jobs are closures pulled from a shared queue; results return in
-//! submission order.
+//! A small fixed-size thread pool with **persistent parked workers** —
+//! no external dependencies (the offline registry has no rayon/tokio).
+//!
+//! Workers are spawned once at construction and park on a condvar
+//! between [`Pool::run`] calls, so the serving hot path pays a wake-up
+//! instead of a thread spawn per batch (the per-batch scoped-thread
+//! spawn this replaces was flagged in ROADMAP PR-3 notes). Jobs are
+//! closures pulled from a shared queue; results return in submission
+//! order; dropping the pool shuts the workers down and joins them.
+//!
+//! `run` still accepts borrowing (non-`'static`) closures: it erases
+//! their lifetime to hand them to the resident workers, which is sound
+//! because `run` blocks until every one of its jobs has completed (a
+//! per-call latch) before any borrow can dangle — the classic scoped
+//! worker-pool construction. Panics inside jobs are caught on the
+//! worker, carried back, and resumed on the caller (fail fast —
+//! calibration must not silently lose a candidate).
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// Fixed-size scoped thread pool.
+/// A type-erased job as stored on the shared queue. Lifetime-erased by
+/// `Pool::run`, which guarantees completion before its borrows expire.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here; notified on enqueue and on shutdown
+    work_cv: Condvar,
+    /// live worker count — observable for the shutdown-on-drop test
+    alive: Mutex<usize>,
+}
+
+/// Count-down latch: one `run` call waits for its own jobs only.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    /// Wait until the count reaches zero or `dur` elapses; returns
+    /// whether the latch is done.
+    fn wait_timeout(&self, dur: std::time::Duration) -> bool {
+        let left = self.remaining.lock().unwrap();
+        if *left == 0 {
+            return true;
+        }
+        let (left, _timed_out) = self.cv.wait_timeout(left, dur).unwrap();
+        *left == 0
+    }
+}
+
+/// Fixed-size persistent thread pool.
 pub struct Pool {
     workers: usize,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl Pool {
-    /// Pool with `workers` threads (min 1).
+    /// Pool with `workers` threads (min 1), parked until work arrives.
+    /// A single-worker pool spawns no threads — `run` executes inline.
     pub fn new(workers: usize) -> Self {
-        Pool { workers: workers.max(1) }
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            alive: Mutex::new(0),
+        });
+        let mut handles = Vec::new();
+        if workers > 1 {
+            // counted at spawn time so live_workers() is deterministic
+            *shared.alive.lock().unwrap() = workers;
+            for _ in 0..workers {
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || worker_loop(&sh)));
+            }
+        }
+        Pool { workers, shared, handles }
     }
 
     /// Pool sized to the machine.
@@ -30,7 +115,13 @@ impl Pool {
         self.workers
     }
 
-    /// Run all jobs; returns results in submission order. Panics in jobs
+    /// Run all jobs; returns results in submission order. Blocks until
+    /// every submitted job has completed, so jobs may freely borrow from
+    /// the caller's stack. Safe to call from several threads at once
+    /// (the serving engines do — jobs interleave on the shared workers,
+    /// each call waits on its own latch), and reentrantly from inside a
+    /// job (waiters help drain the queue, so a nested `run` makes
+    /// progress even with every worker occupied). Panics in jobs
     /// propagate (fail fast — calibration must not silently lose a
     /// candidate).
     pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
@@ -42,32 +133,111 @@ impl Pool {
         if n == 0 {
             return Vec::new();
         }
-        // single worker or single job: run inline (no thread overhead)
+        // single worker or single job: run inline (no wake-up overhead)
         if self.workers == 1 || n == 1 {
             return jobs.into_iter().map(|j| j()).collect();
         }
-        let queue: Mutex<VecDeque<(usize, F)>> =
-            Mutex::new(jobs.into_iter().enumerate().collect());
-        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..self.workers.min(n) {
-                s.spawn(|| loop {
-                    let job = queue.lock().unwrap().pop_front();
-                    match job {
-                        Some((i, f)) => {
-                            let out = f();
-                            *results[i].lock().unwrap() = Some(out);
-                        }
-                        None => break,
-                    }
-                });
+        let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let latch = Latch::new(n);
+        {
+            // erase each job to a queue entry that records its result
+            // and counts the latch down — catching panics so a worker
+            // never dies and the latch always resolves
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = jobs
+                .into_iter()
+                .enumerate()
+                .map(|(i, f)| {
+                    let results = &results;
+                    let latch = &latch;
+                    Box::new(move || {
+                        let out = catch_unwind(AssertUnwindSafe(f));
+                        *results[i].lock().unwrap() = Some(out);
+                        latch.count_down();
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            // SAFETY: the erased closures borrow `results` and `latch`
+            // from this stack frame; the wait loop below blocks until
+            // every closure has finished running, so no borrow outlives
+            // this scope. Box<dyn FnOnce> layouts are lifetime-invariant.
+            let tasks: Vec<Job> = unsafe { std::mem::transmute(tasks) };
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                st.jobs.extend(tasks);
             }
-        });
+            self.shared.work_cv.notify_all();
+            // Wait for our latch, HELPING drain the shared queue in the
+            // meantime: if every worker is busy (or blocked inside a job
+            // that itself called `run` on this pool — reentrancy), the
+            // waiter executes queued jobs on its own thread, so progress
+            // is guaranteed and a nested `run` cannot deadlock. Stealing
+            // another call's job is sound for the same reason ours are:
+            // its `run` frame outlives execution via its own latch.
+            loop {
+                if latch.is_done() {
+                    break;
+                }
+                let stolen = self.shared.state.lock().unwrap().jobs.pop_front();
+                match stolen {
+                    Some(j) => j(),
+                    None => {
+                        if latch.wait_timeout(std::time::Duration::from_millis(1)) {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
         results
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("job completed"))
+            .map(|m| match m.into_inner().unwrap().expect("job completed") {
+                Ok(v) => v,
+                Err(payload) => resume_unwind(payload),
+            })
             .collect()
     }
+
+    /// Live worker-thread count (0 once the pool has shut down) — for
+    /// tests and diagnostics.
+    pub fn live_workers(&self) -> usize {
+        *self.shared.alive.lock().unwrap()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break Some(j);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = sh.work_cv.wait(st).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(), // panics are caught inside the erased job
+            None => break,
+        }
+    }
+    *sh.alive.lock().unwrap() -= 1;
 }
 
 #[cfg(test)]
@@ -120,5 +290,100 @@ mod tests {
     #[test]
     fn auto_pool_has_workers() {
         assert!(Pool::auto().workers() >= 1);
+    }
+
+    #[test]
+    fn workers_stay_parked_between_runs() {
+        // the same resident threads serve many run() calls — no
+        // spawn-per-batch (distinct thread ids would still pass this,
+        // but alive count proves the pool neither grows nor leaks)
+        let pool = Pool::new(3);
+        for round in 0..20 {
+            let out = pool.run((0..6).map(|i| move || i + round).collect::<Vec<_>>());
+            assert_eq!(out, (0..6).map(|i| i + round).collect::<Vec<_>>());
+            assert_eq!(pool.live_workers(), 3, "round {round}");
+        }
+    }
+
+    #[test]
+    fn jobs_may_borrow_caller_state() {
+        // the lifetime-erasure contract: borrowing jobs complete before
+        // run() returns
+        let data: Vec<u64> = (0..64).collect();
+        let pool = Pool::new(4);
+        let sums = pool.run(
+            data.chunks(8)
+                .map(|c| move || c.iter().sum::<u64>())
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn shutdown_on_drop_joins_all_workers() {
+        let pool = Pool::new(4);
+        pool.run((0..8).map(|i| move || i * 2).collect::<Vec<_>>());
+        let shared = pool.shared.clone();
+        assert_eq!(*shared.alive.lock().unwrap(), 4);
+        drop(pool); // joins inside Drop
+        assert_eq!(*shared.alive.lock().unwrap(), 0, "workers exited on drop");
+        assert!(shared.state.lock().unwrap().jobs.is_empty());
+    }
+
+    #[test]
+    fn concurrent_run_calls_share_the_workers() {
+        let pool = Arc::new(Pool::new(4));
+        let mut handles = Vec::new();
+        for t in 0..6u64 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let out = pool.run(
+                    (0..16u64).map(|i| move || i * t).collect::<Vec<_>>(),
+                );
+                assert_eq!(out, (0..16u64).map(|i| i * t).collect::<Vec<_>>());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn reentrant_run_from_inside_a_job_completes() {
+        // every worker occupied by a job that itself calls pool.run:
+        // the waiters help drain the queue, so this must complete
+        // instead of deadlocking
+        let pool = Arc::new(Pool::new(2));
+        let out = pool.run(
+            (0..4u64)
+                .map(|i| {
+                    let pool = pool.clone();
+                    move || pool.run((0..3u64).map(|j| move || i * 10 + j).collect::<Vec<_>>())
+                })
+                .collect::<Vec<_>>(),
+        );
+        for (i, inner) in out.iter().enumerate() {
+            assert_eq!(
+                *inner,
+                (0..3u64).map(|j| i as u64 * 10 + j).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn panics_propagate_without_killing_workers() {
+        let pool = Pool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(
+                (0..4)
+                    .map(|i| move || if i == 2 { panic!("job 2 failed") } else { i })
+                    .collect::<Vec<_>>(),
+            );
+        }));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // the pool survives and keeps serving
+        assert_eq!(pool.live_workers(), 2);
+        let out = pool.run((0..4).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, vec![0, 1, 2, 3]);
     }
 }

@@ -7,7 +7,11 @@
 //!
 //! Any [`crate::session::Engine`] is a [`Backend`] via a blanket impl,
 //! so `InferenceService::start(calibrated.engine(kind)?, cfg)` is the
-//! whole deployment story.
+//! whole deployment story. The FP/int engines behind it execute a
+//! **cached** [`crate::engine::plan::ExecPlan`], so the per-batch path
+//! under this collector does no graph walking — just slot-addressed
+//! kernels over recycled arenas, sharded across the persistent
+//! coordinator pool.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};

@@ -1,0 +1,568 @@
+//! Plan **executors**: the generic step loop + buffer-slot arena that
+//! runs a compiled [`ExecPlan`], and the two kernel domains it is
+//! generic over — `IntDomain` (i32 codes, Eq. 3–4 shift epilogues) and
+//! `FpDomain` (f32 oracle arithmetic, bit-identical to the historical
+//! interpreter's op order).
+//!
+//! The executor performs **no name or shape resolution**: every step
+//! addresses integer buffer slots assigned at compile time, so a single
+//! in-flight pass owns exactly `plan.slot_count()` live buffers (one
+//! [`Scratch`] arena per executor — the buffer-reuse contract). Kernels
+//! are shared with the per-module interpreter path
+//! ([`crate::engine::int::IntEngine::run_module`], kept for the
+//! calibrator's prefix probing), so the two paths cannot drift.
+
+use std::collections::HashMap;
+
+use crate::engine::int::QuantizedParams;
+use crate::engine::plan::{ConvOp, DenseOp, ExecPlan, GapOp, GemmStep, Op};
+use crate::error::DfqError;
+use crate::quant::scheme;
+use crate::tensor::im2col::{im2col_slice_into, Padding};
+use crate::tensor::{ops, ops_int};
+
+// ---------------------------------------------------------------------
+// the scratch arena
+// ---------------------------------------------------------------------
+
+/// Reusable working memory for one executor pass: the im2col patch
+/// matrix plus a free-list of recycled activation/accumulator buffers.
+/// A warm scratch makes repeated passes allocation-free for the large
+/// tensors.
+///
+/// A `Scratch` is plain owned memory — `Send` but deliberately not
+/// shared: one scratch serves one pass at a time (the parallel deploy
+/// engine keeps a pool of them, one per in-flight shard).
+pub struct Scratch<T = i32> {
+    pub(crate) patches: Vec<T>,
+    free: Vec<Vec<T>>,
+}
+
+impl<T> Default for Scratch<T> {
+    fn default() -> Self {
+        Scratch { patches: Vec::new(), free: Vec::new() }
+    }
+}
+
+impl<T: Copy + Default> Scratch<T> {
+    /// An empty arena (buffers grow on first use).
+    pub fn new() -> Scratch<T> {
+        Scratch::default()
+    }
+
+    /// Return a buffer to the free list for reuse by a later step or
+    /// pass (no-op for buffers that never allocated).
+    pub fn recycle(&mut self, buf: Vec<T>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// A buffer of exactly `len` elements, **every element zeroed**
+    /// (`T::default()`). Use for consumers that accumulate in place
+    /// (e.g. the pooling sums); full-overwrite consumers should call
+    /// [`Scratch::take_uninit`] and skip the redundant fill.
+    pub fn take(&mut self, len: usize) -> Vec<T> {
+        match self.free.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, T::default());
+                v
+            }
+            None => vec![T::default(); len],
+        }
+    }
+
+    /// A buffer of exactly `len` elements whose reused prefix holds
+    /// **unspecified (stale) contents** — still safe, never
+    /// uninitialized memory, but only correct when the caller's contract
+    /// guarantees every element is overwritten before it is read (the
+    /// GEMM regimes, im2col, input quantization). Skips the redundant
+    /// per-step memset on the steady-state hot path.
+    pub fn take_uninit(&mut self, len: usize) -> Vec<T> {
+        match self.free.pop() {
+            Some(mut v) => {
+                v.truncate(len);
+                v.resize(len, T::default());
+                v
+            }
+            None => vec![T::default(); len],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the kernel domain + generic executor
+// ---------------------------------------------------------------------
+
+/// One numeric kernel domain the plan executor is generic over: the
+/// element type plus the three compute kernels (each reads the resolved
+/// instruction plus raw slices — no names, no shape checks).
+#[allow(clippy::too_many_arguments)]
+pub(crate) trait Domain {
+    /// element type flowing through the buffers
+    type Elem: Copy + Default;
+
+    /// im2col conv + epilogue into `out` (`n * ho * wo * cout` elems).
+    fn conv(
+        &self,
+        c: &ConvOp,
+        n: usize,
+        src: &[Self::Elem],
+        res: Option<&[Self::Elem]>,
+        out: &mut Vec<Self::Elem>,
+        patches: &mut Vec<Self::Elem>,
+        threads: usize,
+    );
+
+    /// dense GEMM + epilogue into `out` (`n * cout` elems).
+    fn dense(
+        &self,
+        d: &DenseOp,
+        n: usize,
+        src: &[Self::Elem],
+        res: Option<&[Self::Elem]>,
+        out: &mut Vec<Self::Elem>,
+        threads: usize,
+    );
+
+    /// global average pool into `out` (`n * c` elems, pre-zeroed).
+    fn gap(&self, g: &GapOp, n: usize, src: &[Self::Elem], out: &mut [Self::Elem]);
+}
+
+/// Run a compiled plan over one batch: `input` is the input value's
+/// buffer (`n * plan.input_elems`, already in the domain's element
+/// type), and the returned buffer is the final value's
+/// (`n * plan.out_elems()`). Dead buffers are recycled into `scratch`
+/// as their last consumer retires, so a warm scratch makes steady-state
+/// execution allocation-free.
+pub(crate) fn execute<D: Domain>(
+    plan: &ExecPlan,
+    dom: &D,
+    input: Vec<D::Elem>,
+    n: usize,
+    scratch: &mut Scratch<D::Elem>,
+    threads: usize,
+) -> Result<Vec<D::Elem>, DfqError> {
+    let want = n * plan.input_shape.elems();
+    if input.len() != want {
+        return Err(DfqError::invalid(format!(
+            "plan input has {} elements, expected {want} (batch {n} of {})",
+            input.len(),
+            plan.input_shape
+        )));
+    }
+    let mut slots: Vec<Option<Vec<D::Elem>>> =
+        (0..plan.slot_count).map(|_| None).collect();
+    slots[plan.input_slot] = Some(input);
+    for step in &plan.steps {
+        let out_len = n * step.out.elems();
+        // Gap accumulates in place and needs zeros; the GEMM steps
+        // overwrite every element (take_uninit contract)
+        let mut out = match &step.op {
+            Op::Gap(_) => scratch.take(out_len),
+            _ => scratch.take_uninit(out_len),
+        };
+        // detach the patch buffer so the kernel can borrow it mutably
+        // alongside the immutable slot views
+        let mut patches = std::mem::take(&mut scratch.patches);
+        {
+            let src = slots[step.src].as_deref().expect("plan: src slot live");
+            let res = step
+                .res
+                .map(|s| slots[s].as_deref().expect("plan: res slot live"));
+            match &step.op {
+                Op::Conv(c) => dom.conv(c, n, src, res, &mut out, &mut patches, threads),
+                Op::Dense(d) => dom.dense(d, n, src, res, &mut out, threads),
+                Op::Gap(g) => dom.gap(g, n, src, &mut out),
+            }
+        }
+        scratch.patches = patches;
+        slots[step.dst] = Some(out);
+        for &s in &step.release {
+            if let Some(buf) = slots[s].take() {
+                scratch.recycle(buf);
+            }
+        }
+    }
+    Ok(slots[plan.out_slot].take().expect("plan: output slot live"))
+}
+
+// ---------------------------------------------------------------------
+// integer domain (Eq. 3–4)
+// ---------------------------------------------------------------------
+
+/// One weighted step's bound integer parameters: weight codes plus the
+/// bias codes **pre-aligned** into the accumulator domain (the
+/// `align(b, bias_shift)` the interpreter recomputed per batch).
+#[derive(Clone, Copy)]
+pub(crate) struct IntStepView<'a> {
+    /// weight codes, flattened `(K, cout)` row-major
+    pub w: &'a [i32],
+    /// accumulator-domain bias codes, one per output channel
+    pub b: &'a [i32],
+}
+
+/// The i32 kernel domain: parameter views indexed by the plan's
+/// parameter table.
+pub(crate) struct IntDomain<'a> {
+    /// per-param views, in [`ExecPlan::param_names`] order
+    pub params: &'a [IntStepView<'a>],
+}
+
+/// Validate a quantized parameter map against a plan and produce the
+/// accumulator-aligned bias vectors, one per parameter-table entry.
+/// All coverage/shape errors surface here (bind time), not per batch.
+pub(crate) fn aligned_biases(
+    plan: &ExecPlan,
+    qparams: &HashMap<String, QuantizedParams>,
+) -> Result<Vec<Vec<i32>>, DfqError> {
+    let mut out = vec![Vec::new(); plan.param_names().len()];
+    for step in &plan.steps {
+        let g = match &step.op {
+            Op::Conv(c) => &c.g,
+            Op::Dense(d) => &d.g,
+            Op::Gap(_) => continue,
+        };
+        let name = &plan.param_names()[g.param];
+        let qp = qparams.get(name).ok_or_else(|| {
+            DfqError::graph(format!("module '{name}' has no quantized parameters"))
+        })?;
+        if qp.w.data.len() != g.kdim * g.cout {
+            return Err(DfqError::graph(format!(
+                "module '{name}': weight shape {} does not match the plan's \
+                 {}x{} GEMM",
+                qp.w.shape, g.kdim, g.cout
+            )));
+        }
+        if qp.b.len() != g.cout {
+            return Err(DfqError::graph(format!(
+                "module '{name}': {} bias codes for {} output channels",
+                qp.b.len(),
+                g.cout
+            )));
+        }
+        let q = g.q.expect("integer plans carry quant constants");
+        out[g.param] = qp.b.iter().map(|&b| scheme::align(b, q.bias_shift)).collect();
+    }
+    Ok(out)
+}
+
+/// Build the per-param views over a quantized parameter map and the
+/// aligned biases from [`aligned_biases`]. Infallible once bound.
+pub(crate) fn int_views<'a>(
+    plan: &ExecPlan,
+    qparams: &'a HashMap<String, QuantizedParams>,
+    biases: &'a [Vec<i32>],
+) -> Vec<IntStepView<'a>> {
+    plan.param_names()
+        .iter()
+        .zip(biases)
+        .map(|(name, b)| IntStepView { w: &qparams[name].w.data, b })
+        .collect()
+}
+
+/// The shared integer GEMM epilogue — fused (bias + residual align +
+/// shift + clamp in one in-place pass) or the unfused ablation. Called
+/// by both the plan executor and the per-module interpreter path, so the
+/// two cannot drift.
+pub(crate) fn int_epilogue(
+    g: &GemmStep,
+    b_aligned: &[i32],
+    res: Option<&[i32]>,
+    acc: &mut [i32],
+) {
+    let q = g.q.expect("integer plans carry quant constants");
+    let cout = g.cout;
+    if let Some(u) = q.unfused {
+        // ----- unfused ablation: extra quantization points -----
+        for chunk in acc.chunks_exact_mut(cout) {
+            for (v, b) in chunk.iter_mut().zip(b_aligned) {
+                *v = v.wrapping_add(*b);
+            }
+        }
+        // quant point #1: accumulator -> codes at the intermediate scale
+        for v in acc.iter_mut() {
+            *v = scheme::shift_round(*v, u.pre_shift).clamp(u.pre_qmin, u.pre_qmax);
+        }
+        if let Some(r) = res {
+            // align residual codes to the intermediate scale and add,
+            // clamped to the 9-bit intermediate
+            for (v, &rv) in acc.iter_mut().zip(r) {
+                *v = v
+                    .wrapping_add(scheme::shift_round(rv, u.res_align))
+                    .clamp(u.mid_qmin, u.mid_qmax);
+            }
+        }
+        // final requant to n_o (+relu clamp) — quant point #2/#3
+        for v in acc.iter_mut() {
+            *v = scheme::shift_round(*v, u.final_shift).clamp(q.qmin, q.qmax);
+        }
+        return;
+    }
+    // fused epilogue: bias-add (+ residual-align-add) + shift + clamp in
+    // ONE pass over the accumulator, in place — the software analogue of
+    // the paper's "without writing the convolution output back to memory"
+    match res {
+        Some(r) => {
+            for (row, chunk) in acc.chunks_exact_mut(cout).enumerate() {
+                let rrow = &r[row * cout..(row + 1) * cout];
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    let a = v
+                        .wrapping_add(b_aligned[j])
+                        .wrapping_add(scheme::align(rrow[j], q.res_shift));
+                    *v = scheme::shift_round(a, q.out_shift).clamp(q.qmin, q.qmax);
+                }
+            }
+        }
+        None => {
+            for chunk in acc.chunks_exact_mut(cout) {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    let a = v.wrapping_add(b_aligned[j]);
+                    *v = scheme::shift_round(a, q.out_shift).clamp(q.qmin, q.qmax);
+                }
+            }
+        }
+    }
+}
+
+/// The shared integer pooling kernel: wrapping sums over the window into
+/// the pre-zeroed `out`, then the exact rounded-shift mean + clamp.
+pub(crate) fn int_gap(g: &GapOp, n: usize, src: &[i32], out: &mut [i32]) {
+    sum_pool(n, g.h, g.w, g.c, src, out, |a, b| a.wrapping_add(b));
+    let (qmin, qmax) = g.clamp.expect("integer plans carry quant constants");
+    for v in out.iter_mut() {
+        *v = scheme::shift_round(*v, g.shift).clamp(qmin, qmax);
+    }
+}
+
+impl Domain for IntDomain<'_> {
+    type Elem = i32;
+
+    fn conv(
+        &self,
+        c: &ConvOp,
+        n: usize,
+        src: &[i32],
+        res: Option<&[i32]>,
+        out: &mut Vec<i32>,
+        patches: &mut Vec<i32>,
+        threads: usize,
+    ) {
+        let p = &self.params[c.g.param];
+        im2col_slice_into(
+            src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
+        );
+        let m = n * c.ho * c.wo;
+        // exact-size take_uninit upstream: the GEMM overwrites every
+        // element, no zero fill needed
+        debug_assert_eq!(out.len(), m * c.g.cout);
+        ops_int::gemm_i32_into(
+            &patches[..m * c.g.kdim],
+            p.w,
+            m,
+            c.g.kdim,
+            c.g.cout,
+            out,
+            threads,
+        );
+        int_epilogue(&c.g, p.b, res, out);
+    }
+
+    fn dense(
+        &self,
+        d: &DenseOp,
+        n: usize,
+        src: &[i32],
+        res: Option<&[i32]>,
+        out: &mut Vec<i32>,
+        threads: usize,
+    ) {
+        let p = &self.params[d.g.param];
+        ops_int::gemm_i32_into(src, p.w, n, d.g.kdim, d.g.cout, out, threads);
+        int_epilogue(&d.g, p.b, res, out);
+    }
+
+    fn gap(&self, g: &GapOp, n: usize, src: &[i32], out: &mut [i32]) {
+        int_gap(g, n, src, out);
+    }
+}
+
+// ---------------------------------------------------------------------
+// floating-point domain (the oracle)
+// ---------------------------------------------------------------------
+
+/// One weighted step's folded f32 parameters.
+#[derive(Clone, Copy)]
+pub(crate) struct FpStepView<'a> {
+    /// folded weights, flattened `(K, cout)` row-major
+    pub w: &'a [f32],
+    /// folded bias, one per output channel
+    pub b: &'a [f32],
+}
+
+/// The f32 kernel domain. Arithmetic order is identical to the
+/// historical interpreter (`gemm`, then `+bias`, then `+residual`, then
+/// ReLU), so plan execution is bit-identical to
+/// [`crate::engine::fp::FpEngine::run_acts`].
+pub(crate) struct FpDomain<'a> {
+    /// per-param views, in [`ExecPlan::param_names`] order
+    pub params: &'a [FpStepView<'a>],
+}
+
+/// Validate a folded parameter map against a plan and produce the
+/// per-param views. All coverage/shape errors surface here (bind time).
+pub(crate) fn fp_views<'a>(
+    plan: &ExecPlan,
+    folded: &'a HashMap<String, crate::graph::bn_fold::FoldedParams>,
+) -> Result<Vec<FpStepView<'a>>, DfqError> {
+    let mut out = Vec::with_capacity(plan.param_names().len());
+    for step in &plan.steps {
+        let g = match &step.op {
+            Op::Conv(c) => &c.g,
+            Op::Dense(d) => &d.g,
+            Op::Gap(_) => continue,
+        };
+        let name = &plan.param_names()[g.param];
+        let p = folded.get(name).ok_or_else(|| {
+            DfqError::data(format!("module '{name}' has no folded parameters"))
+        })?;
+        if p.w.data.len() != g.kdim * g.cout {
+            return Err(DfqError::graph(format!(
+                "module '{name}': weight shape {} does not match the plan's \
+                 {}x{} GEMM",
+                p.w.shape, g.kdim, g.cout
+            )));
+        }
+        if p.b.len() != g.cout {
+            return Err(DfqError::graph(format!(
+                "module '{name}': {} bias values for {} output channels",
+                p.b.len(),
+                g.cout
+            )));
+        }
+        debug_assert_eq!(out.len(), g.param);
+        out.push(FpStepView { w: &p.w.data, b: &p.b });
+    }
+    Ok(out)
+}
+
+/// The f32 epilogue, in the interpreter's exact op order: `+bias`
+/// (per channel), then `+residual`, then ReLU.
+fn fp_epilogue(g: &GemmStep, b: &[f32], res: Option<&[f32]>, out: &mut [f32]) {
+    for chunk in out.chunks_exact_mut(g.cout) {
+        for (o, bias) in chunk.iter_mut().zip(b) {
+            *o += *bias;
+        }
+    }
+    if let Some(r) = res {
+        for (o, &rv) in out.iter_mut().zip(r) {
+            *o += rv;
+        }
+    }
+    if g.relu {
+        for o in out.iter_mut() {
+            if *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+}
+
+impl Domain for FpDomain<'_> {
+    type Elem = f32;
+
+    fn conv(
+        &self,
+        c: &ConvOp,
+        n: usize,
+        src: &[f32],
+        res: Option<&[f32]>,
+        out: &mut Vec<f32>,
+        patches: &mut Vec<f32>,
+        _threads: usize,
+    ) {
+        let p = &self.params[c.g.param];
+        im2col_slice_into(
+            src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
+        );
+        let m = n * c.ho * c.wo;
+        ops::gemm_f32_into(&patches[..m * c.g.kdim], p.w, m, c.g.kdim, c.g.cout, out);
+        fp_epilogue(&c.g, p.b, res, out);
+    }
+
+    fn dense(
+        &self,
+        d: &DenseOp,
+        n: usize,
+        src: &[f32],
+        res: Option<&[f32]>,
+        out: &mut Vec<f32>,
+        _threads: usize,
+    ) {
+        let p = &self.params[d.g.param];
+        ops::gemm_f32_into(src, p.w, n, d.g.kdim, d.g.cout, out);
+        fp_epilogue(&d.g, p.b, res, out);
+    }
+
+    fn gap(&self, g: &GapOp, n: usize, src: &[f32], out: &mut [f32]) {
+        // sum then scale, in ops::global_avg_pool's exact order
+        sum_pool(n, g.h, g.w, g.c, src, out, |a, b| a + b);
+        let inv = 1.0 / (g.h * g.w) as f32;
+        for v in out.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Shared (N,H,W,C) → (N,C) window sum over a pre-zeroed output.
+fn sum_pool<T: Copy>(
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    src: &[T],
+    out: &mut [T],
+    add: impl Fn(T, T) -> T,
+) {
+    for b in 0..n {
+        for y in 0..h {
+            for x in 0..w {
+                let base = ((b * h + y) * w + x) * c;
+                for ch in 0..c {
+                    out[b * c + ch] = add(out[b * c + ch], src[base + ch]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_take_uninit_keeps_capacity() {
+        let mut s: Scratch<i32> = Scratch::new();
+        s.recycle(vec![7; 16]);
+        // the reused prefix of take_uninit is unspecified (here: stale)
+        let v = s.take_uninit(8);
+        assert_eq!(v.len(), 8);
+        s.recycle(v);
+        // take always hands back zeros, even from a dirty recycled buffer
+        let v = s.take(8);
+        assert_eq!(v, vec![0; 8]);
+        s.recycle(v);
+        // growth beyond the recycled capacity zero-fills the extension
+        let v = s.take_uninit(32);
+        assert_eq!(v.len(), 32);
+        assert!(v[16..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn recycle_ignores_unallocated() {
+        let mut s: Scratch<f32> = Scratch::new();
+        s.recycle(Vec::new());
+        assert_eq!(s.free.len(), 0);
+    }
+}

@@ -1,12 +1,30 @@
 //! The FP oracle engine: executes the unified graph on folded weights in
-//! f32, recording every module's activation (the `O` of Eq. 5).
+//! f32, supplying the `O` of Eq. 5 (calibration targets) and the FP rows
+//! of the paper's tables.
+//!
+//! [`FpEngine::run`] executes the same compiled [`ExecPlan`] as the
+//! integer engine — shape-resolved steps over statically assigned buffer
+//! slots — so dead activations are dropped (and their buffers recycled)
+//! as their last consumer retires instead of retaining every activation
+//! for the whole pass. [`FpEngine::run_acts`] deliberately keeps the
+//! retain-everything interpreter: calibration and the fake-quant
+//! baselines read every intermediate (and the transform hook must fire
+//! per module). The two paths use identical arithmetic order and are
+//! bit-identical (`rust/tests/prop_plan.rs`).
+//!
+//! Malformed graphs (dangling names, missing parameters, shape
+//! mismatches) surface as typed [`DfqError`]s — this engine no longer
+//! panics on them.
 
 use std::collections::HashMap;
 
+use crate::engine::exec::{self, Scratch};
+use crate::engine::plan::ExecPlan;
+use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::{Graph, ModuleKind};
 use crate::tensor::im2col::Padding;
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{ops, Shape, Tensor};
 
 /// Floating-point executor over a unified-module graph.
 pub struct FpEngine<'g> {
@@ -20,52 +38,139 @@ impl<'g> FpEngine<'g> {
         FpEngine { graph, folded }
     }
 
+    /// Compile the graph into the flat [`ExecPlan`] the run path
+    /// executes (all structural validation happens here).
+    pub fn plan(&self) -> Result<ExecPlan, DfqError> {
+        ExecPlan::compile_fp(self.graph, self.graph.input_hwc)
+    }
+
     /// Run a batch, applying `transform(module_name, act)` to every
     /// module output before it is recorded/consumed downstream. This is
     /// the fake-quantization hook used by the comparison baselines
     /// (`quant::baselines`): simulating a quantizer in f32 while the
-    /// dataflow stays exactly the real graph's.
-    pub fn run_acts_transformed<F>(&self, x: &Tensor, transform: F) -> HashMap<String, Tensor>
+    /// dataflow stays exactly the real graph's. Retains every activation
+    /// by design (the hook and the calibrator read them all).
+    pub fn run_acts_transformed<F>(
+        &self,
+        x: &Tensor,
+        transform: F,
+    ) -> Result<HashMap<String, Tensor>, DfqError>
     where
         F: Fn(&str, Tensor) -> Tensor,
     {
         let mut acts: HashMap<String, Tensor> = HashMap::new();
         acts.insert("input".to_string(), transform("input", x.clone()));
         for m in &self.graph.modules {
-            let src = &acts[&m.src];
+            let src = acts.get(&m.src).ok_or_else(|| {
+                DfqError::graph(format!(
+                    "{}: missing input activation '{}'",
+                    m.name, m.src
+                ))
+            })?;
             let mut out = match &m.kind {
-                ModuleKind::Conv { stride, .. } => {
-                    let p = &self.folded[&m.name];
+                ModuleKind::Conv { cin, stride, .. } => {
+                    if src.shape.rank() != 4 || src.shape.dim(3) != *cin {
+                        return Err(DfqError::graph(format!(
+                            "{}: conv expects an NHWC activation with {cin} \
+                             channels, '{}' has shape {}",
+                            m.name, m.src, src.shape
+                        )));
+                    }
+                    let p = self.param(&m.name)?;
                     ops::conv2d(src, &p.w, &p.b, *stride, Padding::Same)
                 }
                 ModuleKind::Dense { .. } => {
-                    let p = &self.folded[&m.name];
-                    let flat = src.reshape(&[src.shape.dim(0), src.numel() / src.shape.dim(0)]);
+                    let p = self.param(&m.name)?;
+                    let rows = src.shape.dim(0);
+                    let cin = if rows == 0 { 0 } else { src.numel() / rows };
+                    if p.w.shape.dim(0) != cin {
+                        return Err(DfqError::graph(format!(
+                            "{}: dense weight expects {} input features, \
+                             activation provides {cin}",
+                            m.name,
+                            p.w.shape.dim(0)
+                        )));
+                    }
+                    let flat = src.reshape(&[rows, cin]);
                     ops::dense(&flat, &p.w, &p.b)
                 }
-                ModuleKind::Gap => ops::global_avg_pool(src),
+                ModuleKind::Gap => {
+                    if src.shape.rank() != 4 {
+                        return Err(DfqError::graph(format!(
+                            "{}: global average pool needs an NHWC activation, \
+                             '{}' has rank {}",
+                            m.name,
+                            m.src,
+                            src.shape.rank()
+                        )));
+                    }
+                    ops::global_avg_pool(src)
+                }
             };
             if let Some(r) = &m.res {
-                out = ops::add(&out, &acts[r]);
+                let rt = acts.get(r).ok_or_else(|| {
+                    DfqError::graph(format!(
+                        "{}: missing residual activation '{r}'",
+                        m.name
+                    ))
+                })?;
+                if rt.shape != out.shape {
+                    return Err(DfqError::graph(format!(
+                        "{}: residual '{r}' shape {} does not match output \
+                         shape {}",
+                        m.name, rt.shape, out.shape
+                    )));
+                }
+                out = ops::add(&out, rt);
             }
             if m.relu {
                 ops::relu_inplace(&mut out);
             }
             acts.insert(m.name.clone(), transform(&m.name, out));
         }
-        acts
+        Ok(acts)
+    }
+
+    fn param(&self, name: &str) -> Result<&FoldedParams, DfqError> {
+        self.folded.get(name).ok_or_else(|| {
+            DfqError::data(format!("module '{name}' has no folded parameters"))
+        })
     }
 
     /// Run a batch, returning all activations keyed by module name
     /// (plus `"input"`). `x` is NHWC, already normalised.
-    pub fn run_acts(&self, x: &Tensor) -> HashMap<String, Tensor> {
+    pub fn run_acts(&self, x: &Tensor) -> Result<HashMap<String, Tensor>, DfqError> {
         self.run_acts_transformed(x, |_, t| t)
     }
 
-    /// Run a batch, returning only the final output.
-    pub fn run(&self, x: &Tensor) -> Tensor {
-        let mut acts = self.run_acts(x);
-        acts.remove(&self.graph.modules.last().unwrap().name).unwrap()
+    /// Run a batch, returning only the final output — through the
+    /// compiled plan, so dead activations recycle as the pass advances
+    /// instead of accumulating in a map.
+    pub fn run(&self, x: &Tensor) -> Result<Tensor, DfqError> {
+        let plan = self.plan()?;
+        self.run_plan(&plan, x, &mut Scratch::new())
+    }
+
+    /// Execute a plan previously compiled by [`FpEngine::plan`] — the
+    /// compile-once hot path (no name or shape resolution per batch).
+    pub fn run_plan(
+        &self,
+        plan: &ExecPlan,
+        x: &Tensor,
+        scratch: &mut Scratch<f32>,
+    ) -> Result<Tensor, DfqError> {
+        plan.check_input(&x.shape)?;
+        let views = exec::fp_views(plan, self.folded)?;
+        let n = x.shape.dim(0);
+        let out = exec::execute(
+            plan,
+            &exec::FpDomain { params: &views },
+            x.data.clone(),
+            n,
+            scratch,
+            1,
+        )?;
+        Ok(Tensor { shape: Shape(plan.out_dims(n)), data: out })
     }
 }
 
@@ -106,7 +211,7 @@ mod tests {
         );
         let eng = FpEngine::new(&graph, &folded);
         let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, -2.0, 0.5, 0.0]);
-        let acts = eng.run_acts(&x);
+        let acts = eng.run_acts(&x).unwrap();
         // c = relu(2x - 1 + x) = relu(3x - 1)
         let want = [2.0f32, 0.0, 0.5, 0.0];
         for (a, b) in acts["c"].data.iter().zip(&want) {
@@ -114,6 +219,9 @@ mod tests {
         }
         assert_eq!(acts["gap"].shape.dims(), &[1, 1]);
         assert!((acts["gap"].data[0] - 0.625).abs() < 1e-6);
+        // the plan path produces bit-identical output
+        let via_plan = eng.run(&x).unwrap();
+        assert_eq!(via_plan.data, acts["gap"].data);
     }
 
     #[test]
@@ -148,8 +256,32 @@ mod tests {
         );
         let eng = FpEngine::new(&graph, &folded);
         let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
-        let y = eng.run(&x);
+        let y = eng.run(&x).unwrap();
         // gap = [4, 5]; fc = [4, 5, 10]
         assert_eq!(y.data, vec![4.0, 5.0, 10.0]);
+    }
+
+    #[test]
+    fn malformed_graph_is_typed_error_not_panic() {
+        // the last non-typed error surface: FpEngine used to panic on a
+        // dangling src / missing params
+        let graph = Graph {
+            name: "t".into(),
+            input_hwc: (2, 2, 1),
+            modules: vec![UnifiedModule {
+                name: "c".into(),
+                kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 1, cout: 1, stride: 1 },
+                src: "input".into(),
+                res: None,
+                relu: false,
+            }],
+        };
+        let folded = HashMap::new(); // no params for 'c'
+        let eng = FpEngine::new(&graph, &folded);
+        let x = Tensor::zeros(&[1, 2, 2, 1]);
+        let err = eng.run(&x).unwrap_err();
+        assert!(matches!(err, DfqError::Data(_)), "{err}");
+        let err = eng.run_acts(&x).unwrap_err();
+        assert!(matches!(err, DfqError::Data(_)), "{err}");
     }
 }

@@ -17,17 +17,25 @@
 //!
 //! ## Execution model
 //!
-//! [`IntEngine::run`] walks the graph with an **activation-liveness**
-//! pass: each module's output is dropped (and its buffer recycled) right
-//! after its last consumer, instead of retaining every activation for
-//! the whole forward pass. Paired with a reusable [`Scratch`] arena for
-//! im2col patches and GEMM output, a warm engine performs zero large
-//! allocations per batch — the software analogue of the paper's fixed
-//! on-chip buffers. [`IntEngine::with_threads`] additionally splits the
-//! GEMM over row-blocks (bit-exact; rows are independent); batch-level
-//! data parallelism lives one layer up, in the session's
-//! `EngineKind::Int { threads }` deploy engine, which shards the NHWC
-//! batch along N across the coordinator pool.
+//! The batch entry points ([`IntEngine::run`], [`IntEngine::run_scratch`],
+//! [`IntEngine::run_codes_scratch`]) lower the graph into a flat
+//! [`ExecPlan`] — shape-resolved steps over statically assigned buffer
+//! slots — and execute it through the shared executor in
+//! [`crate::engine::exec`]. All name/shape resolution, spec-coverage
+//! checks and `Gap` power-of-two validation happen in
+//! [`ExecPlan::compile`]; the executor touches only slot indices and
+//! resolved constants. Long-lived callers compile once
+//! ([`IntEngine::plan`]) and reuse the plan via
+//! [`IntEngine::run_plan_scratch`] — the serving deploy engine does
+//! exactly that, with one [`Scratch`] arena per in-flight shard, so a
+//! warm engine performs zero large allocations per batch (the software
+//! analogue of the paper's fixed on-chip buffers).
+//!
+//! [`IntEngine::run_module`] keeps the dynamic per-module path the joint
+//! calibrator needs (it probes prefixes of a partially calibrated
+//! graph); it shares the epilogue kernels with the plan executor, so the
+//! two paths are bit-identical by construction
+//! (`rust/tests/prop_plan.rs` asserts it over random graphs).
 //!
 //! Malformed inputs (a spec that doesn't cover a module, a dangling
 //! `src`/`res` name, a non-power-of-two pooling window, a residual shape
@@ -41,8 +49,9 @@
 //! the ablation calibrator.
 
 use std::collections::HashMap;
-use std::sync::Arc;
 
+use crate::engine::exec;
+use crate::engine::plan::{ExecPlan, GapOp, GemmStep, QuantEpi};
 use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::{Graph, ModuleKind};
@@ -50,6 +59,8 @@ use crate::quant::params::QuantSpec;
 use crate::quant::scheme;
 use crate::tensor::im2col::Padding;
 use crate::tensor::{ops_int, Shape, Tensor, TensorI32};
+
+pub use crate::engine::exec::Scratch;
 
 /// Quantized parameters of one module, ready for the integer engine.
 #[derive(Clone, Debug)]
@@ -84,95 +95,16 @@ pub fn quantize_params(
     out
 }
 
-/// Reusable working memory for one engine pass: the im2col patch matrix
-/// plus a free-list of recycled activation/accumulator buffers. A warm
-/// scratch makes repeated [`IntEngine::run_scratch`] calls allocation-free
-/// for the large tensors.
-///
-/// A `Scratch` is plain owned memory — `Send` but deliberately not
-/// shared: one scratch serves one pass at a time (the parallel deploy
-/// engine keeps a pool of them, one per in-flight shard).
-#[derive(Default)]
-pub struct Scratch {
-    patches: Vec<i32>,
-    free: Vec<Vec<i32>>,
-}
-
-impl Scratch {
-    /// An empty arena (buffers grow on first use).
-    pub fn new() -> Scratch {
-        Scratch::default()
-    }
-
-    /// Return a buffer to the free list for reuse by a later module or
-    /// pass (no-op for buffers that never allocated).
-    pub fn recycle(&mut self, buf: Vec<i32>) {
-        if buf.capacity() > 0 {
-            self.free.push(buf);
-        }
-    }
-
-    /// A buffer of exactly `len` elements, reusing freed capacity when
-    /// available. Only newly grown capacity is zeroed — reused contents
-    /// are unspecified, which is fine because every consumer (the GEMM
-    /// regimes, the epilogues, input quantization) overwrites the full
-    /// buffer; this avoids a redundant memset per module on the
-    /// steady-state hot path.
-    pub fn take(&mut self, len: usize) -> Vec<i32> {
-        match self.free.pop() {
-            Some(mut v) => {
-                v.truncate(len);
-                v.resize(len, 0);
-                v
-            }
-            None => vec![0; len],
-        }
-    }
-}
-
 /// The integer-only executor.
 pub struct IntEngine<'g> {
     graph: &'g Graph,
     spec: &'g QuantSpec,
     qparams: std::borrow::Cow<'g, HashMap<String, QuantizedParams>>,
-    /// per-module list of activation names whose last consumer is that
-    /// module — what [`IntEngine::run`] drops after executing it
-    /// (shared so the deploy layer computes it once, not per shard)
-    drop_after: Arc<Vec<Vec<String>>>,
     /// row-block GEMM parallelism (1 = serial)
     threads: usize,
     /// unfused ablation: per-module fractional bits of the intermediate
     /// (pre-ReLU / pre-add) quantization points
     pub pre_frac: Option<HashMap<String, i32>>,
-}
-
-/// For each module index, the values whose last use is that module (the
-/// liveness pass behind [`IntEngine::run`]). The final module's output
-/// is the result and is never dropped; a module no consumer ever reads
-/// is dropped immediately after it runs. Depends only on the graph, so
-/// long-lived callers compute it once and share it via
-/// `IntEngine::with_qparams_shared`.
-pub(crate) fn liveness(graph: &Graph) -> Vec<Vec<String>> {
-    let mut last_use: HashMap<&str, usize> = HashMap::new();
-    for (i, m) in graph.modules.iter().enumerate() {
-        last_use.insert(m.src.as_str(), i);
-        if let Some(r) = &m.res {
-            last_use.insert(r.as_str(), i);
-        }
-    }
-    let last_name = graph.modules.last().map(|m| m.name.as_str());
-    let mut drop_after = vec![Vec::new(); graph.modules.len()];
-    for (i, m) in graph.modules.iter().enumerate() {
-        if Some(m.name.as_str()) != last_name && !last_use.contains_key(m.name.as_str()) {
-            drop_after[i].push(m.name.clone()); // dead output
-        }
-    }
-    for (name, i) in last_use {
-        if Some(name) != last_name {
-            drop_after[i].push(name.to_string());
-        }
-    }
-    drop_after
 }
 
 impl<'g> IntEngine<'g> {
@@ -183,14 +115,7 @@ impl<'g> IntEngine<'g> {
         spec: &'g QuantSpec,
     ) -> Self {
         let qparams = std::borrow::Cow::Owned(quantize_params(graph, folded, spec));
-        IntEngine {
-            graph,
-            spec,
-            qparams,
-            drop_after: Arc::new(liveness(graph)),
-            threads: 1,
-            pre_frac: None,
-        }
+        IntEngine { graph, spec, qparams, threads: 1, pre_frac: None }
     }
 
     /// Build over parameters already quantized by [`quantize_params`] —
@@ -205,26 +130,6 @@ impl<'g> IntEngine<'g> {
             graph,
             spec,
             qparams: std::borrow::Cow::Borrowed(qparams),
-            drop_after: Arc::new(liveness(graph)),
-            threads: 1,
-            pre_frac: None,
-        }
-    }
-
-    /// [`IntEngine::with_qparams`] with a liveness table precomputed by
-    /// [`liveness`] — the serving hot path constructs one engine per
-    /// shard per batch, so the table must not be rebuilt each time.
-    pub(crate) fn with_qparams_shared(
-        graph: &'g Graph,
-        spec: &'g QuantSpec,
-        qparams: &'g HashMap<String, QuantizedParams>,
-        drop_after: Arc<Vec<Vec<String>>>,
-    ) -> Self {
-        IntEngine {
-            graph,
-            spec,
-            qparams: std::borrow::Cow::Borrowed(qparams),
-            drop_after,
             threads: 1,
             pre_frac: None,
         }
@@ -242,6 +147,23 @@ impl<'g> IntEngine<'g> {
     /// q_logits artifact).
     pub fn qparams(&self) -> &HashMap<String, QuantizedParams> {
         &self.qparams
+    }
+
+    /// Compile the graph into the flat [`ExecPlan`] this engine executes
+    /// (honouring the current `pre_frac` ablation setting). All
+    /// graph/spec validation errors surface here; batch entry points
+    /// compile per call, so long-lived callers should cache the plan and
+    /// use [`IntEngine::run_plan_scratch`].
+    pub fn plan(&self) -> Result<ExecPlan, DfqError> {
+        match &self.pre_frac {
+            Some(pre) => ExecPlan::compile_unfused(
+                self.graph,
+                self.spec,
+                pre,
+                self.graph.input_hwc,
+            ),
+            None => ExecPlan::compile(self.graph, self.spec, self.graph.input_hwc),
+        }
     }
 
     /// Quantize a normalised f32 input batch into codes.
@@ -264,7 +186,10 @@ impl<'g> IntEngine<'g> {
         Ok(acts)
     }
 
-    /// Execute one module given the activations so far.
+    /// Execute one module given the activations so far — the dynamic
+    /// per-module path the joint calibrator uses to probe prefixes of a
+    /// partially calibrated graph. Shares its kernels with the plan
+    /// executor, so it is bit-identical to [`IntEngine::run`].
     pub fn run_module(
         &self,
         m: &crate::graph::UnifiedModule,
@@ -296,7 +221,12 @@ impl<'g> IntEngine<'g> {
                         src.shape.rank()
                     )));
                 }
-                let (h, w) = (src.shape.dim(1), src.shape.dim(2));
+                let (n, h, w, c) = (
+                    src.shape.dim(0),
+                    src.shape.dim(1),
+                    src.shape.dim(2),
+                    src.shape.dim(3),
+                );
                 let hw = h * w;
                 // the mean is an exact rounded shift ONLY for a
                 // power-of-two window; anything else must be a typed
@@ -308,27 +238,29 @@ impl<'g> IntEngine<'g> {
                         m.name
                     )));
                 }
-                let sum = ops_int::global_sum_pool(src);
-                let s = hw.trailing_zeros() as i32;
                 let unsigned = self.spec.try_value_unsigned(self.graph, &m.src)?;
-                let (qmin, qmax) = scheme::qrange(n_bits, unsigned);
-                Ok(sum.map_i32_ref(|v| scheme::shift_round(v, s).clamp(qmin, qmax)))
+                let g = GapOp {
+                    h,
+                    w,
+                    c,
+                    shift: hw.trailing_zeros() as i32,
+                    clamp: Some(scheme::qrange(n_bits, unsigned)),
+                };
+                let mut out = scratch.take(n * c); // pre-zeroed: gap sums in place
+                exec::int_gap(&g, n, &src.data, &mut out);
+                Ok(TensorI32 { shape: Shape(vec![n, c]), data: out })
             }
             ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => {
-                let sp = *self.spec.modules.get(&m.name).ok_or_else(|| {
-                    DfqError::graph(format!(
-                        "module '{}' is not covered by the calibrated spec",
-                        m.name
-                    ))
-                })?;
-                let n_x = self.spec.try_value_frac(self.graph, &m.src)?;
+                // coverage first (error-precedence: an uncovered module
+                // reports as such, not as missing quantized parameters)
+                self.spec.try_module(&m.name)?;
                 let qp = self.qparams.get(&m.name).ok_or_else(|| {
                     DfqError::graph(format!(
                         "module '{}' has no quantized parameters",
                         m.name
                     ))
                 })?;
-                let mut acc = match &m.kind {
+                let (mut acc, kdim) = match &m.kind {
                     ModuleKind::Conv { kh, kw, cin, cout, stride } => {
                         if src.shape.rank() != 4 || src.shape.dim(3) != *cin {
                             return Err(DfqError::graph(format!(
@@ -337,9 +269,8 @@ impl<'g> IntEngine<'g> {
                                 m.name, m.src, src.shape
                             )));
                         }
-                        // exact-size take: a warm scratch hands back a
-                        // same-sized buffer, so no element is rewritten
-                        // before the GEMM fills it
+                        // exact-size take: the GEMM overwrites every
+                        // element, so the stale reused prefix never leaks
                         let (ho, wo, _, _) = crate::tensor::im2col::conv_geometry(
                             src.shape.dim(1),
                             src.shape.dim(2),
@@ -349,7 +280,7 @@ impl<'g> IntEngine<'g> {
                             Padding::Same,
                         );
                         let mut out =
-                            scratch.take(src.shape.dim(0) * ho * wo * *cout);
+                            scratch.take_uninit(src.shape.dim(0) * ho * wo * *cout);
                         let shape = ops_int::conv2d_acc_into(
                             src,
                             &qp.w,
@@ -359,7 +290,7 @@ impl<'g> IntEngine<'g> {
                             &mut out,
                             self.threads,
                         );
-                        TensorI32 { shape, data: out }
+                        (TensorI32 { shape, data: out }, kh * kw * cin)
                     }
                     ModuleKind::Dense { .. } => {
                         let rows = src.shape.dim(0);
@@ -373,7 +304,7 @@ impl<'g> IntEngine<'g> {
                             )));
                         }
                         let cout = qp.w.shape.dim(1);
-                        let mut out = scratch.take(rows * cout);
+                        let mut out = scratch.take_uninit(rows * cout);
                         ops_int::gemm_i32_into(
                             &src.data,
                             &qp.w.data,
@@ -383,30 +314,15 @@ impl<'g> IntEngine<'g> {
                             &mut out,
                             self.threads,
                         );
-                        TensorI32 { shape: Shape(vec![rows, cout]), data: out }
+                        (TensorI32 { shape: Shape(vec![rows, cout]), data: out }, cin)
                     }
                     ModuleKind::Gap => unreachable!(),
                 };
-                let bias_shift = sp.bias_shift(n_x);
                 let cout = *acc.shape.dims().last().unwrap();
-                let aligned: Vec<i32> =
-                    qp.b.iter().map(|&b| scheme::align(b, bias_shift)).collect();
-                if let Some(pre) = &self.pre_frac {
-                    // ----- unfused ablation: extra quantization points -----
-                    for chunk in acc.data.chunks_exact_mut(cout) {
-                        for (v, a) in chunk.iter_mut().zip(&aligned) {
-                            *v = v.wrapping_add(*a);
-                        }
-                    }
-                    return self.run_epilogue_unfused(m, acc, acts, pre, n_x, sp);
-                }
-                // fused epilogue: bias-add (+ residual-align-add) + shift
-                // + clamp in ONE pass over the accumulator, in place —
-                // the software analogue of the paper's "without writing
-                // the convolution output back to memory" (§Perf log #2).
-                let out_shift = sp.out_shift(n_x);
-                let (qmin, qmax) = scheme::qrange(n_bits, m.relu);
-                match &m.res {
+                // resolve the residual (name + full shape equality: an
+                // equal element count with a different layout would
+                // silently add misaligned channels)
+                let res = match &m.res {
                     Some(r) => {
                         let rt = acts.get(r).ok_or_else(|| {
                             DfqError::graph(format!(
@@ -414,9 +330,6 @@ impl<'g> IntEngine<'g> {
                                 m.name
                             ))
                         })?;
-                        // full shape equality: an equal element count with a
-                        // different layout (e.g. (N,4,4,8) vs (N,8,8,2))
-                        // would silently add misaligned channels
                         if rt.shape != acc.shape {
                             return Err(DfqError::graph(format!(
                                 "{}: residual '{r}' shape {} does not match \
@@ -424,82 +337,44 @@ impl<'g> IntEngine<'g> {
                                 m.name, rt.shape, acc.shape
                             )));
                         }
-                        let n_r = self.spec.try_value_frac(self.graph, r)?;
-                        let rs = sp.res_shift(n_x, n_r);
-                        for (row, chunk) in acc.data.chunks_exact_mut(cout).enumerate() {
-                            let rrow = &rt.data[row * cout..(row + 1) * cout];
-                            for (j, v) in chunk.iter_mut().enumerate() {
-                                let a = v
-                                    .wrapping_add(aligned[j])
-                                    .wrapping_add(scheme::align(rrow[j], rs));
-                                *v = scheme::shift_round(a, out_shift).clamp(qmin, qmax);
-                            }
-                        }
+                        Some(rt)
                     }
-                    None => {
-                        for chunk in acc.data.chunks_exact_mut(cout) {
-                            for (j, v) in chunk.iter_mut().enumerate() {
-                                let a = v.wrapping_add(aligned[j]);
-                                *v = scheme::shift_round(a, out_shift).clamp(qmin, qmax);
-                            }
-                        }
-                    }
-                }
+                    None => None,
+                };
+                // the ONE shared folding of the Eq. 3–4 epilogue
+                // constants (the plan compiler calls the same resolver)
+                let q = QuantEpi::resolve(
+                    self.spec,
+                    self.graph,
+                    m,
+                    self.pre_frac.as_ref(),
+                )?;
+                let g = GemmStep {
+                    param: 0, // unused by the epilogue
+                    kdim,
+                    cout,
+                    relu: m.relu,
+                    q: Some(q),
+                };
+                let aligned: Vec<i32> = qp
+                    .b
+                    .iter()
+                    .map(|&b| scheme::align(b, q.bias_shift))
+                    .collect();
+                exec::int_epilogue(
+                    &g,
+                    &aligned,
+                    res.map(|rt| rt.data.as_slice()),
+                    &mut acc.data,
+                );
                 Ok(acc)
             }
         }
     }
 
-    /// The ablation epilogue: requantize the conv output immediately
-    /// (extra quantization op), then align + add the residual in the
-    /// *code* domain, then requantize again (another extra op) — the
-    /// "quantize instantly after convolution" dataflow of prior work.
-    fn run_epilogue_unfused(
-        &self,
-        m: &crate::graph::UnifiedModule,
-        acc: TensorI32,
-        acts: &HashMap<String, TensorI32>,
-        pre: &HashMap<String, i32>,
-        n_x: i32,
-        sp: crate::quant::params::ModuleShifts,
-    ) -> Result<TensorI32, DfqError> {
-        let n_bits = self.spec.n_bits;
-        let n_pre = *pre.get(&m.name).unwrap_or(&sp.n_o);
-        // quant point #1: conv output -> codes at scale n_pre (signed)
-        let conv_codes =
-            scheme::requantize_tensor(&acc, n_x + sp.n_w - n_pre, n_bits, false);
-        let mut cur = conv_codes;
-        if let Some(r) = &m.res {
-            let rt = acts.get(r).ok_or_else(|| {
-                DfqError::graph(format!("{}: missing residual activation '{r}'", m.name))
-            })?;
-            if rt.shape != cur.shape {
-                return Err(DfqError::graph(format!(
-                    "{}: residual '{r}' shape {} does not match output shape {}",
-                    m.name, rt.shape, cur.shape
-                )));
-            }
-            let n_r = self.spec.try_value_frac(self.graph, r)?;
-            // align residual codes to n_pre and add, then quant point #2
-            let mut sum: Vec<i32> = cur
-                .data
-                .iter()
-                .zip(&rt.data)
-                .map(|(&a, &b)| a.wrapping_add(scheme::shift_round(b, n_r - n_pre)))
-                .collect();
-            let (qmin, qmax) = scheme::qrange(n_bits, false);
-            for v in &mut sum {
-                *v = (*v).clamp(qmin * 2, qmax * 2); // 9-bit intermediate
-            }
-            cur = TensorI32 { shape: cur.shape.clone(), data: sum };
-        }
-        // final requant to n_o (+relu clamp) — quant point #2/#3
-        let (qmin, qmax) = scheme::qrange(n_bits, m.relu);
-        Ok(cur.map_i32_ref(|v| scheme::shift_round(v, n_pre - sp.n_o).clamp(qmin, qmax)))
-    }
-
-    /// Full pipeline from a normalised f32 batch to final output codes,
-    /// dropping dead activations as it goes (liveness pass).
+    /// Full pipeline from a normalised f32 batch to final output codes
+    /// through the compiled plan (dead activations recycle as their last
+    /// consumer retires).
     pub fn run(&self, x: &Tensor) -> Result<TensorI32, DfqError> {
         let mut scratch = Scratch::new();
         self.run_scratch(x, &mut scratch)
@@ -508,18 +383,32 @@ impl<'g> IntEngine<'g> {
     /// [`IntEngine::run`] through a caller-owned [`Scratch`]: the input
     /// is quantized into a recycled buffer and dead activations return
     /// to the arena, so a warm scratch makes steady-state serving
-    /// allocation-free for the large buffers.
+    /// allocation-free for the large buffers. Compiles the plan per
+    /// call; cache it with [`IntEngine::plan`] +
+    /// [`IntEngine::run_plan_scratch`] on hot paths.
     pub fn run_scratch(
         &self,
         x: &Tensor,
         scratch: &mut Scratch,
     ) -> Result<TensorI32, DfqError> {
-        let mut codes = scratch.take(x.numel());
+        let plan = self.plan()?;
+        self.run_plan_scratch(&plan, x, scratch)
+    }
+
+    /// Execute a plan previously compiled by [`IntEngine::plan`] — the
+    /// compile-once hot path (no name or shape resolution per batch).
+    pub fn run_plan_scratch(
+        &self,
+        plan: &ExecPlan,
+        x: &Tensor,
+        scratch: &mut Scratch,
+    ) -> Result<TensorI32, DfqError> {
+        plan.check_input(&x.shape)?;
+        let mut codes = scratch.take_uninit(x.numel());
         for (dst, &v) in codes.iter_mut().zip(&x.data) {
             *dst = scheme::quantize_val(v, self.spec.input_frac, self.spec.n_bits, false);
         }
-        let xq = TensorI32 { shape: x.shape.clone(), data: codes };
-        self.run_codes_scratch(xq, scratch)
+        self.execute_codes(plan, codes, x.shape.dim(0), scratch)
     }
 
     /// [`IntEngine::run_scratch`] from already-quantized input codes —
@@ -531,26 +420,30 @@ impl<'g> IntEngine<'g> {
         x_int: TensorI32,
         scratch: &mut Scratch,
     ) -> Result<TensorI32, DfqError> {
-        let last = self
-            .graph
-            .modules
-            .last()
-            .ok_or_else(|| DfqError::graph("empty graph: nothing to run"))?
-            .name
-            .clone();
-        let mut acts: HashMap<String, TensorI32> = HashMap::new();
-        acts.insert("input".to_string(), x_int);
-        for (i, m) in self.graph.modules.iter().enumerate() {
-            let out = self.run_module_scratch(m, &acts, scratch)?;
-            acts.insert(m.name.clone(), out);
-            for name in &self.drop_after[i] {
-                if let Some(t) = acts.remove(name) {
-                    scratch.recycle(t.data);
-                }
-            }
-        }
-        acts.remove(&last)
-            .ok_or_else(|| DfqError::graph(format!("missing final activation '{last}'")))
+        let plan = self.plan()?;
+        plan.check_input(&x_int.shape)?;
+        let n = x_int.shape.dim(0);
+        self.execute_codes(&plan, x_int.data, n, scratch)
+    }
+
+    fn execute_codes(
+        &self,
+        plan: &ExecPlan,
+        codes: Vec<i32>,
+        n: usize,
+        scratch: &mut Scratch,
+    ) -> Result<TensorI32, DfqError> {
+        let biases = exec::aligned_biases(plan, &self.qparams)?;
+        let views = exec::int_views(plan, &self.qparams, &biases);
+        let out = exec::execute(
+            plan,
+            &exec::IntDomain { params: &views },
+            codes,
+            n,
+            scratch,
+            self.threads,
+        )?;
+        Ok(TensorI32 { shape: Shape(plan.out_dims(n)), data: out })
     }
 
     /// Final logits dequantized to f32 (for metrics that need scores).
@@ -662,7 +555,7 @@ mod tests {
         }
         // and c1's codes dequantize close to the FP engine's output
         let fpe = crate::engine::fp::FpEngine::new(&graph, &folded);
-        let facts = fpe.run_acts(&x);
+        let facts = fpe.run_acts(&x).unwrap();
         let deq = scheme::dequantize_tensor(&acts["c1"], 4);
         let mse = crate::util::mathutil::mse(&deq.data, &facts["c1"].data);
         assert!(mse < 0.01, "integer path diverged: mse={mse}");
@@ -785,10 +678,13 @@ mod tests {
         let want = acts.remove("fc").unwrap();
         let got = eng.run(&x).unwrap();
         assert_eq!(want, got);
-        // a warm scratch over repeated runs stays bit-stable
+        // a warm scratch over repeated runs stays bit-stable, through a
+        // cached plan too
+        let plan = eng.plan().unwrap();
         let mut scratch = Scratch::new();
         for _ in 0..3 {
             assert_eq!(eng.run_scratch(&x, &mut scratch).unwrap(), want);
+            assert_eq!(eng.run_plan_scratch(&plan, &x, &mut scratch).unwrap(), want);
         }
     }
 
@@ -865,13 +761,17 @@ mod tests {
     #[test]
     fn uncovered_module_is_typed_error_not_panic() {
         // regression: quantize_params deliberately skips modules the spec
-        // doesn't cover, and run_module used to panic on the map lookup
+        // doesn't cover, and run_module used to panic on the map lookup;
+        // with the plan the error now surfaces at compile()
         let (graph, folded, mut spec) = resnet_like();
         spec.modules.remove("c1");
         let eng = IntEngine::new(&graph, &folded, &spec);
+        let err = eng.plan().unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        assert!(err.to_string().contains("c1"), "{err}");
+        // ...and run() surfaces the same compile error
         let x = Tensor::zeros(&[1, 4, 4, 2]);
         let err = eng.run(&x).unwrap_err();
-        assert!(matches!(err, DfqError::Graph(_)), "{err}");
         assert!(err.to_string().contains("c1"), "{err}");
     }
 
@@ -904,5 +804,16 @@ mod tests {
         m.res = Some("bad".into());
         let err = eng.run_module(&m, &acts).unwrap_err();
         assert!(err.to_string().contains("does not match"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_input_resolution_is_typed_error() {
+        // the plan is resolved for the graph's declared input; a batch at
+        // another resolution must be a typed error, not a silent garbage
+        // geometry
+        let (graph, folded, spec) = resnet_like();
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let err = eng.run(&Tensor::zeros(&[1, 8, 8, 2])).unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
     }
 }

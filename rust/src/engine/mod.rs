@@ -1,15 +1,26 @@
-//! Inference engines over the unified-module graph:
+//! Inference engines over the unified-module graph, all executing one
+//! compiled IR:
 //!
+//! * [`plan`] — the flat **`ExecPlan`**: the graph lowered once into
+//!   shape-resolved steps over statically assigned buffer slots, with
+//!   every name lookup, shape check, `Gap` power-of-two validation and
+//!   quantization constant resolved at `compile()` time;
+//! * [`exec`] — the generic plan executor (one [`exec::Scratch`] arena
+//!   per in-flight pass) and the two kernel domains it runs:
+//!   `i32` (Eq. 3–4) and `f32`;
 //! * [`fp`] — the floating-point oracle (folded weights), supplying the
 //!   Eq.-5 calibration targets and the FP rows of Tables 1/3/4;
 //! * [`int`] — the integer-only engine (Eq. 3–4): i8-range codes, i32
 //!   accumulation, shift-based alignment/requantization. Models the
 //!   paper's custom hardware unit bit-exactly — cross-validated against
 //!   the Pallas kernels via the PJRT artifacts in the integration tests.
-//!   Executes with an activation-liveness pass and a reusable scratch
-//!   arena ([`int::Scratch`]); the session layer adds batch-level data
-//!   parallelism on top (`EngineKind::Int { threads }`), bit-identical
-//!   for every thread count.
+//!
+//! Both engines are thin executors over the same lowering path, so the
+//! numeric domains cannot drift; the session layer adds batch-level data
+//! parallelism on top (`EngineKind::Int { threads }`) over **cached**
+//! plans, bit-identical for every thread count.
 
+pub mod exec;
 pub mod fp;
 pub mod int;
+pub mod plan;

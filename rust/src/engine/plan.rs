@@ -1,0 +1,848 @@
+//! The flat **`ExecPlan` IR** — the unified-module graph lowered once
+//! into a shape-resolved, statically-buffered schedule that both the
+//! floating-point and the integer engine execute.
+//!
+//! The paper restructures the network into unified modules so the whole
+//! dataflow can be optimized as one object; this module is the runtime
+//! mirror of that move. [`ExecPlan::compile`] walks the graph **once**
+//! and produces a `Vec` of steps in which
+//!
+//! * every `src`/`res` **name is resolved** to a buffer-slot index,
+//! * every **shape is resolved** (conv geometry, dense fan-in, pooling
+//!   windows) for the declared input resolution — only the batch
+//!   dimension stays dynamic,
+//! * every **quantization constant** (bias/out/residual shifts, clamp
+//!   ranges, the `Gap` power-of-two shift) is folded in from the
+//!   calibrated [`QuantSpec`], and
+//! * **buffer slots** are assigned by an activation-liveness pass, so an
+//!   executor needs exactly `slot_count` live buffers (one arena per
+//!   in-flight pass) instead of a name-keyed map of every activation.
+//!
+//! All graph/spec validation errors — a spec that doesn't cover a
+//! module, a dangling `src`/`res`, a residual shape mismatch, a
+//! non-power-of-two pooling window, a conv over a flat activation —
+//! surface here as typed [`DfqError`]s, **at compile time**. The
+//! executors in [`crate::engine::exec`] perform no name or shape
+//! resolution on the hot path.
+//!
+//! The same plan drives both numeric domains: [`ExecPlan::compile`]
+//! resolves the integer epilogue constants, [`ExecPlan::compile_fp`]
+//! lowers the identical schedule without them for the f32 oracle.
+//! Later scaling layers (multi-node sharding, NUMA pinning, fused-kernel
+//! emission) target this IR rather than re-walking the graph.
+
+use std::collections::HashMap;
+
+use crate::error::DfqError;
+use crate::graph::{Graph, ModuleKind};
+use crate::quant::params::QuantSpec;
+use crate::quant::scheme;
+use crate::tensor::im2col::{conv_geometry, Padding};
+
+/// Per-image shape of a value in the plan (the batch dimension is the
+/// executor's runtime parameter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValShape {
+    /// A spatial NHWC activation: per-image `h × w × c`.
+    Spatial {
+        /// height
+        h: usize,
+        /// width
+        w: usize,
+        /// channels
+        c: usize,
+    },
+    /// A flat feature vector (dense / pooled output).
+    Flat {
+        /// features per image
+        features: usize,
+    },
+}
+
+impl ValShape {
+    /// Elements per image.
+    pub fn elems(&self) -> usize {
+        match *self {
+            ValShape::Spatial { h, w, c } => h * w * c,
+            ValShape::Flat { features } => features,
+        }
+    }
+
+    /// Full tensor dims for a batch of `n`.
+    pub(crate) fn dims(&self, n: usize) -> Vec<usize> {
+        match *self {
+            ValShape::Spatial { h, w, c } => vec![n, h, w, c],
+            ValShape::Flat { features } => vec![n, features],
+        }
+    }
+}
+
+impl std::fmt::Display for ValShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ValShape::Spatial { h, w, c } => write!(f, "{h}x{w}x{c}"),
+            ValShape::Flat { features } => write!(f, "{features}"),
+        }
+    }
+}
+
+/// Integer epilogue constants of one weighted step, fully resolved from
+/// the calibrated spec at compile time (Eq. 3–4).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct QuantEpi {
+    /// bias alignment shift `(N_x + N_w) − N_b` (left shift when ≥ 0)
+    pub bias_shift: i32,
+    /// output requantization shift `(N_x + N_w) − N_o`
+    pub out_shift: i32,
+    /// residual alignment shift `(N_x + N_w) − N_r` (0 when unused)
+    pub res_shift: i32,
+    /// output clamp range (unsigned after a fused ReLU)
+    pub qmin: i32,
+    /// see `qmin`
+    pub qmax: i32,
+    /// the unfused-ablation epilogue, when compiled with `pre_frac`
+    pub unfused: Option<UnfusedEpi>,
+}
+
+impl QuantEpi {
+    /// Resolve the full integer epilogue for one weighted module from
+    /// the calibrated spec — the ONE place the Eq. 3–4 shift/clamp
+    /// algebra is folded. Used by both the plan compiler and the
+    /// per-module interpreter path, so the two cannot drift.
+    pub(crate) fn resolve(
+        spec: &QuantSpec,
+        graph: &Graph,
+        m: &crate::graph::UnifiedModule,
+        pre_frac: Option<&HashMap<String, i32>>,
+    ) -> Result<QuantEpi, DfqError> {
+        let sp = spec.try_module(&m.name)?;
+        let n_x = spec.try_value_frac(graph, &m.src)?;
+        let n_r = match &m.res {
+            Some(r) => Some(spec.try_value_frac(graph, r)?),
+            None => None,
+        };
+        let (qmin, qmax) = scheme::qrange(spec.n_bits, m.relu);
+        let unfused = pre_frac.map(|pre| {
+            let n_pre = *pre.get(&m.name).unwrap_or(&sp.n_o);
+            let (pq_min, pq_max) = scheme::qrange(spec.n_bits, false);
+            UnfusedEpi {
+                pre_shift: n_x + sp.n_w - n_pre,
+                pre_qmin: pq_min,
+                pre_qmax: pq_max,
+                res_align: n_r.map(|n_r| n_r - n_pre).unwrap_or(0),
+                mid_qmin: pq_min * 2,
+                mid_qmax: pq_max * 2,
+                final_shift: n_pre - sp.n_o,
+            }
+        });
+        Ok(QuantEpi {
+            bias_shift: sp.bias_shift(n_x),
+            out_shift: sp.out_shift(n_x),
+            res_shift: n_r.map(|n_r| sp.res_shift(n_x, n_r)).unwrap_or(0),
+            qmin,
+            qmax,
+            unfused,
+        })
+    }
+}
+
+/// The unfused-ablation epilogue (DESIGN.md §7): quantize immediately
+/// after the accumulator, align/add the residual in the *code* domain,
+/// requantize again — the dataflow the paper's restructuring removes.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct UnfusedEpi {
+    /// accumulator → intermediate codes: shift `(N_x + N_w) − N_pre`
+    pub pre_shift: i32,
+    /// intermediate clamp (signed range)
+    pub pre_qmin: i32,
+    /// see `pre_qmin`
+    pub pre_qmax: i32,
+    /// residual codes → intermediate scale: shift `N_r − N_pre`
+    pub res_align: i32,
+    /// 9-bit intermediate clamp after the residual add
+    pub mid_qmin: i32,
+    /// see `mid_qmin`
+    pub mid_qmax: i32,
+    /// intermediate → output codes: shift `N_pre − N_o`
+    pub final_shift: i32,
+}
+
+/// Shared fields of the two GEMM-backed steps (conv, dense).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct GemmStep {
+    /// index into the plan's parameter table ([`ExecPlan::param_names`])
+    pub param: usize,
+    /// the K dimension of the GEMM (`kh*kw*cin` for conv, `cin` dense)
+    pub kdim: usize,
+    /// output channels / features
+    pub cout: usize,
+    /// fused ReLU (the fp executor applies it; the int executor bakes it
+    /// into the clamp range)
+    pub relu: bool,
+    /// integer epilogue constants — `Some` iff compiled with a spec
+    pub q: Option<QuantEpi>,
+}
+
+/// An im2col convolution step with compile-time geometry.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ConvOp {
+    /// kernel height
+    pub kh: usize,
+    /// kernel width
+    pub kw: usize,
+    /// input channels
+    pub cin: usize,
+    /// stride (both dims, SAME padding)
+    pub stride: usize,
+    /// input spatial height
+    pub in_h: usize,
+    /// input spatial width
+    pub in_w: usize,
+    /// output spatial height
+    pub ho: usize,
+    /// output spatial width
+    pub wo: usize,
+    /// the GEMM + epilogue
+    pub g: GemmStep,
+}
+
+/// A dense (fully-connected) step; the source is read as a flat
+/// `(N, kdim)` matrix.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct DenseOp {
+    /// the GEMM + epilogue
+    pub g: GemmStep,
+}
+
+/// A global-average-pool step (integer-exact rounded shift).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct GapOp {
+    /// source spatial height
+    pub h: usize,
+    /// source spatial width
+    pub w: usize,
+    /// channels
+    pub c: usize,
+    /// `log2(h*w)` — the exact rounded-shift mean
+    pub shift: i32,
+    /// integer clamp range — `Some` iff compiled with a spec
+    pub clamp: Option<(i32, i32)>,
+}
+
+/// What one step computes.
+#[derive(Clone, Debug)]
+pub(crate) enum Op {
+    /// im2col convolution + epilogue
+    Conv(ConvOp),
+    /// dense GEMM + epilogue
+    Dense(DenseOp),
+    /// global average pool
+    Gap(GapOp),
+}
+
+/// One shape-resolved, slot-addressed instruction of the plan.
+#[derive(Clone, Debug)]
+pub(crate) struct Step {
+    /// module name — debug/dump only, never read on the hot path
+    pub name: String,
+    /// the operation
+    pub op: Op,
+    /// input buffer slot
+    pub src: usize,
+    /// residual buffer slot, if any
+    pub res: Option<usize>,
+    /// output buffer slot (always distinct from `src`/`res`)
+    pub dst: usize,
+    /// per-image output shape
+    pub out: ValShape,
+    /// slots whose values die at this step — recycled after it runs
+    pub release: Vec<usize>,
+}
+
+/// Quantization bookkeeping of an integer plan.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PlanQuant {
+    /// bit-width of every code
+    pub n_bits: u32,
+    /// fractional bits of the graph input
+    pub input_frac: i32,
+    /// fractional bits of the final output codes
+    pub out_frac: i32,
+}
+
+/// A compiled execution plan: the flat, shape-resolved, statically
+/// buffered schedule shared by the fp and int engines. Obtained from
+/// [`ExecPlan::compile`] (integer) or [`ExecPlan::compile_fp`] (f32);
+/// executed by the engines in [`crate::engine`]. `Display` renders the
+/// full schedule (`dfq inspect --plan`).
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    pub(crate) steps: Vec<Step>,
+    /// number of buffer slots a single in-flight executor needs
+    pub(crate) slot_count: usize,
+    pub(crate) input_slot: usize,
+    pub(crate) input_shape: ValShape,
+    pub(crate) out_slot: usize,
+    pub(crate) out_shape: ValShape,
+    /// weighted-module names in parameter-table order
+    pub(crate) params: Vec<String>,
+    pub(crate) quant: Option<PlanQuant>,
+    graph_name: String,
+}
+
+impl ExecPlan {
+    /// Lower a graph into an **integer** plan for the calibrated `spec`:
+    /// all name/shape resolution, `Gap` power-of-two validation and
+    /// spec-coverage checks happen here, and every shift/clamp constant
+    /// is folded in. `input_hwc` is the per-image input resolution the
+    /// schedule is resolved for (normally `graph.input_hwc`).
+    pub fn compile(
+        graph: &Graph,
+        spec: &QuantSpec,
+        input_hwc: (usize, usize, usize),
+    ) -> Result<ExecPlan, DfqError> {
+        Self::lower(graph, Some(spec), None, input_hwc)
+    }
+
+    /// [`ExecPlan::compile`] with the unfused-ablation epilogue: every
+    /// weighted module gains the extra per-layer quantization points at
+    /// the `pre_frac` intermediate scales (default: its own `n_o`).
+    pub fn compile_unfused(
+        graph: &Graph,
+        spec: &QuantSpec,
+        pre_frac: &HashMap<String, i32>,
+        input_hwc: (usize, usize, usize),
+    ) -> Result<ExecPlan, DfqError> {
+        Self::lower(graph, Some(spec), Some(pre_frac), input_hwc)
+    }
+
+    /// Lower the identical schedule without quantization constants — the
+    /// floating-point oracle's plan. Shares every structural check with
+    /// the integer compile (shape resolution, slot assignment, `Gap`
+    /// power-of-two windows).
+    pub fn compile_fp(
+        graph: &Graph,
+        input_hwc: (usize, usize, usize),
+    ) -> Result<ExecPlan, DfqError> {
+        Self::lower(graph, None, None, input_hwc)
+    }
+
+    fn lower(
+        graph: &Graph,
+        spec: Option<&QuantSpec>,
+        pre_frac: Option<&HashMap<String, i32>>,
+        input_hwc: (usize, usize, usize),
+    ) -> Result<ExecPlan, DfqError> {
+        graph.validate()?;
+        if graph.modules.is_empty() {
+            return Err(DfqError::graph("empty graph: nothing to run"));
+        }
+        let n_modules = graph.modules.len();
+        // value indices: 0 = input, i+1 = output of module i
+        let mut value_of: HashMap<&str, usize> = HashMap::new();
+        value_of.insert("input", 0);
+        for (i, m) in graph.modules.iter().enumerate() {
+            value_of.insert(m.name.as_str(), i + 1);
+        }
+        // liveness: last step that reads each value; a value nobody reads
+        // dies right after the step that produces it (the input is always
+        // read by module 0 — its src must be "input")
+        let mut last_use: Vec<usize> = (0..=n_modules).map(|v| v.saturating_sub(1)).collect();
+        for (i, m) in graph.modules.iter().enumerate() {
+            last_use[value_of[m.src.as_str()]] = i;
+            if let Some(r) = &m.res {
+                last_use[value_of[r.as_str()]] = i;
+            }
+        }
+        let out_value = n_modules; // the final module's output
+
+        // slot assignment: greedy reuse over the liveness intervals
+        let mut free: Vec<usize> = Vec::new();
+        let mut next_slot = 0usize;
+        let mut alloc = |free: &mut Vec<usize>| {
+            free.pop().unwrap_or_else(|| {
+                next_slot += 1;
+                next_slot - 1
+            })
+        };
+        let mut slot_of: Vec<usize> = vec![usize::MAX; n_modules + 1];
+        slot_of[0] = alloc(&mut free);
+
+        let mut shapes: Vec<ValShape> = vec![ValShape::Spatial {
+            h: input_hwc.0,
+            w: input_hwc.1,
+            c: input_hwc.2,
+        }];
+        let mut params: Vec<String> = Vec::new();
+        let mut steps: Vec<Step> = Vec::with_capacity(n_modules);
+
+        for (i, m) in graph.modules.iter().enumerate() {
+            let src_v = value_of[m.src.as_str()];
+            let src_shape = shapes[src_v];
+            let n_bits = spec.map(|s| s.n_bits).unwrap_or(0);
+            // integer epilogue constants for a weighted module — the one
+            // shared folding of the Eq. 3–4 algebra
+            let quant_for = || -> Result<Option<QuantEpi>, DfqError> {
+                match spec {
+                    Some(spec) => Ok(Some(QuantEpi::resolve(spec, graph, m, pre_frac)?)),
+                    None => Ok(None),
+                }
+            };
+            let (op, out) = match &m.kind {
+                ModuleKind::Conv { kh, kw, cin, cout, stride } => {
+                    let ValShape::Spatial { h, w, c } = src_shape else {
+                        return Err(DfqError::graph(format!(
+                            "{}: conv expects an NHWC activation with {cin} \
+                             channels, but '{}' produces a flat value",
+                            m.name, m.src
+                        )));
+                    };
+                    if c != *cin {
+                        return Err(DfqError::graph(format!(
+                            "{}: conv expects an NHWC activation with {cin} \
+                             channels, '{}' has {c}",
+                            m.name, m.src
+                        )));
+                    }
+                    let (ho, wo, _, _) =
+                        conv_geometry(h, w, *kh, *kw, *stride, Padding::Same);
+                    let g = GemmStep {
+                        param: params.len(),
+                        kdim: kh * kw * cin,
+                        cout: *cout,
+                        relu: m.relu,
+                        q: quant_for()?,
+                    };
+                    params.push(m.name.clone());
+                    (
+                        Op::Conv(ConvOp {
+                            kh: *kh,
+                            kw: *kw,
+                            cin: *cin,
+                            stride: *stride,
+                            in_h: h,
+                            in_w: w,
+                            ho,
+                            wo,
+                            g,
+                        }),
+                        ValShape::Spatial { h: ho, w: wo, c: *cout },
+                    )
+                }
+                ModuleKind::Dense { cin, cout } => {
+                    let feats = src_shape.elems();
+                    if feats != *cin {
+                        return Err(DfqError::graph(format!(
+                            "{}: dense weight expects {cin} input features, \
+                             activation '{}' provides {feats}",
+                            m.name, m.src
+                        )));
+                    }
+                    let g = GemmStep {
+                        param: params.len(),
+                        kdim: *cin,
+                        cout: *cout,
+                        relu: m.relu,
+                        q: quant_for()?,
+                    };
+                    params.push(m.name.clone());
+                    (Op::Dense(DenseOp { g }), ValShape::Flat { features: *cout })
+                }
+                ModuleKind::Gap => {
+                    let ValShape::Spatial { h, w, c } = src_shape else {
+                        return Err(DfqError::graph(format!(
+                            "{}: global average pool needs a spatial (NHWC) \
+                             source, but '{}' produces a flat value",
+                            m.name, m.src
+                        )));
+                    };
+                    let hw = h * w;
+                    // the mean is an exact rounded shift ONLY for a
+                    // power-of-two window; anything else must be a typed
+                    // compile error, not a garbage shift at run time
+                    if !hw.is_power_of_two() {
+                        return Err(DfqError::graph(format!(
+                            "{}: global average pool needs a power-of-two \
+                             spatial size for the exact rounded-shift mean, \
+                             got {h}x{w}",
+                            m.name
+                        )));
+                    }
+                    let clamp = match spec {
+                        None => None,
+                        Some(spec) => Some(scheme::qrange(
+                            n_bits,
+                            spec.try_value_unsigned(graph, &m.src)?,
+                        )),
+                    };
+                    (
+                        Op::Gap(GapOp {
+                            h,
+                            w,
+                            c,
+                            shift: hw.trailing_zeros() as i32,
+                            clamp,
+                        }),
+                        ValShape::Flat { features: c },
+                    )
+                }
+            };
+            // residual: full per-image shape equality — an equal element
+            // count with a different layout would silently add misaligned
+            // channels (the engine contract predating the plan)
+            let res_v = match &m.res {
+                // the interpreter ignored residuals on Gap modules; the
+                // plan preserves that (fusion never emits them)
+                Some(_) if matches!(m.kind, ModuleKind::Gap) => None,
+                Some(r) => {
+                    let rv = value_of[r.as_str()];
+                    if shapes[rv] != out {
+                        return Err(DfqError::graph(format!(
+                            "{}: residual '{r}' shape [{}] does not match \
+                             output shape [{}]",
+                            m.name, shapes[rv], out
+                        )));
+                    }
+                    Some(rv)
+                }
+                None => None,
+            };
+            shapes.push(out);
+            // capture input slots while their values are live, THEN
+            // allocate dst (so it never aliases a live input), THEN mark
+            // dying values for release after the step
+            let src_slot = slot_of[src_v];
+            let res_slot = res_v.map(|v| slot_of[v]);
+            let dst = alloc(&mut free);
+            slot_of[i + 1] = dst;
+            let mut release: Vec<usize> = Vec::new();
+            for v in 0..=i + 1 {
+                if last_use[v] == i && v != out_value && slot_of[v] != usize::MAX {
+                    let s = slot_of[v];
+                    if !release.contains(&s) {
+                        release.push(s);
+                        free.push(s);
+                    }
+                    slot_of[v] = usize::MAX; // value is dead
+                }
+            }
+            steps.push(Step {
+                name: m.name.clone(),
+                op,
+                src: src_slot,
+                res: res_slot,
+                dst,
+                out,
+                release,
+            });
+        }
+        let out_shape = shapes[out_value];
+        let out_slot = slot_of[out_value];
+        debug_assert_ne!(out_slot, usize::MAX, "final value is never released");
+        let quant = match spec {
+            None => None,
+            Some(spec) => Some(PlanQuant {
+                n_bits: spec.n_bits,
+                input_frac: spec.input_frac,
+                out_frac: spec.try_value_frac(
+                    graph,
+                    &graph.modules[n_modules - 1].name,
+                )?,
+            }),
+        };
+        Ok(ExecPlan {
+            steps,
+            slot_count: next_slot,
+            input_slot: 0,
+            input_shape: shapes[0],
+            out_slot,
+            out_shape,
+            params,
+            quant,
+            graph_name: graph.name.clone(),
+        })
+    }
+
+    /// Validate a batch's shape against the plan's resolved input
+    /// resolution — the only shape check left on the run path (shared by
+    /// both engines).
+    pub fn check_input(&self, shape: &crate::tensor::Shape) -> Result<(), DfqError> {
+        let (h, w, c) = self.input_hwc();
+        let d = shape.dims();
+        if d.len() != 4 || d[1] != h || d[2] != w || d[3] != c {
+            return Err(DfqError::invalid(format!(
+                "input shape {shape} does not match the compiled plan's \
+                 input (N,{h},{w},{c})"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Per-image input resolution the plan was compiled for.
+    pub fn input_hwc(&self) -> (usize, usize, usize) {
+        match self.input_shape {
+            ValShape::Spatial { h, w, c } => (h, w, c),
+            ValShape::Flat { features } => (1, 1, features),
+        }
+    }
+
+    /// Number of steps (one per unified module).
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// A plan is never empty (compile rejects empty graphs).
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Buffer slots one in-flight executor needs — the static memory
+    /// assignment (the software analogue of fixed on-chip buffers).
+    pub fn slot_count(&self) -> usize {
+        self.slot_count
+    }
+
+    /// Flattened output features per image.
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.elems()
+    }
+
+    /// Full output dims for a batch of `n`.
+    pub(crate) fn out_dims(&self, n: usize) -> Vec<usize> {
+        self.out_shape.dims(n)
+    }
+
+    /// Weighted-module names in parameter-table order (the binding
+    /// contract for executors).
+    pub(crate) fn param_names(&self) -> &[String] {
+        &self.params
+    }
+}
+
+impl std::fmt::Display for ExecPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let domain = match &self.quant {
+            Some(q) => format!(
+                "int{} (input_frac {}, out_frac {})",
+                q.n_bits, q.input_frac, q.out_frac
+            ),
+            None => "f32".to_string(),
+        };
+        writeln!(
+            f,
+            "ExecPlan '{}': {} steps, {} buffer slots, {domain}",
+            self.graph_name,
+            self.steps.len(),
+            self.slot_count
+        )?;
+        writeln!(
+            f,
+            "  s{} = input [{}]",
+            self.input_slot, self.input_shape
+        )?;
+        for (i, s) in self.steps.iter().enumerate() {
+            let (kind, detail) = match &s.op {
+                Op::Conv(c) => (
+                    "conv",
+                    format!("k{}x{}/{} K={}", c.kh, c.kw, c.stride, c.g.kdim),
+                ),
+                Op::Dense(d) => ("dense", format!("K={}", d.g.kdim)),
+                Op::Gap(g) => ("gap", format!(">>{}", g.shift)),
+            };
+            let relu = match &s.op {
+                Op::Conv(ConvOp { g, .. }) | Op::Dense(DenseOp { g }) if g.relu => {
+                    " relu"
+                }
+                _ => "",
+            };
+            let res = match s.res {
+                Some(r) => format!(" +s{r}"),
+                None => String::new(),
+            };
+            let shifts = match &s.op {
+                Op::Conv(ConvOp { g, .. }) | Op::Dense(DenseOp { g }) => match g.q {
+                    Some(q) => format!(
+                        "  shifts(b={} o={} r={})",
+                        q.bias_shift, q.out_shift, q.res_shift
+                    ),
+                    None => String::new(),
+                },
+                Op::Gap(_) => String::new(),
+            };
+            let freed = if s.release.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "  free[{}]",
+                    s.release
+                        .iter()
+                        .map(|r| format!("s{r}"))
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )
+            };
+            writeln!(
+                f,
+                "  {i:>3} {kind:<5} {:<16} s{}{res} -> s{} [{}]  {detail}{relu}{shifts}{freed}",
+                s.name, s.src, s.dst, s.out
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::UnifiedModule;
+    use crate::quant::params::ModuleShifts;
+
+    fn resnet_like() -> Graph {
+        Graph {
+            name: "t".into(),
+            input_hwc: (4, 4, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "c0".into(),
+                    res: Some("c0".into()),
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c1".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 2, cout: 3 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        }
+    }
+
+    fn spec() -> QuantSpec {
+        let mut s = QuantSpec::new(8);
+        s.input_frac = 5;
+        for name in ["c0", "c1", "fc"] {
+            s.modules.insert(name.into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        }
+        s
+    }
+
+    #[test]
+    fn compiles_and_reuses_slots() {
+        let g = resnet_like();
+        let plan = ExecPlan::compile(&g, &spec(), g.input_hwc).unwrap();
+        assert_eq!(plan.len(), 4);
+        // input, c0 (live across c1 as residual), c1, gap, fc — greedy
+        // reuse needs at most 3 concurrent buffers here
+        assert!(plan.slot_count() <= 3, "slots: {}", plan.slot_count());
+        assert_eq!(plan.out_elems(), 3);
+        assert_eq!(plan.input_hwc(), (4, 4, 2));
+        // a step's dst never aliases its live inputs
+        for s in &plan.steps {
+            assert_ne!(s.dst, s.src, "{}", s.name);
+            if let Some(r) = s.res {
+                assert_ne!(s.dst, r, "{}", s.name);
+            }
+        }
+        // the dump names every step
+        let dump = plan.to_string();
+        for name in ["c0", "c1", "gap", "fc"] {
+            assert!(dump.contains(name), "{dump}");
+        }
+    }
+
+    #[test]
+    fn quant_constants_resolved_at_compile() {
+        let g = resnet_like();
+        let plan = ExecPlan::compile(&g, &spec(), g.input_hwc).unwrap();
+        let Op::Conv(c1) = &plan.steps[1].op else { panic!("c1 is conv") };
+        let q = c1.g.q.expect("int plan carries quant constants");
+        // n_x = n_o(c0) = 4: out shift = 4 + 7 - 4 = 7; res vs c0 same
+        assert_eq!(q.out_shift, 7);
+        assert_eq!(q.res_shift, 7);
+        assert_eq!((q.qmin, q.qmax), (0, 255)); // fused relu -> unsigned
+        assert_eq!(plan.quant.unwrap().out_frac, 4);
+    }
+
+    #[test]
+    fn uncovered_module_fails_at_compile() {
+        let g = resnet_like();
+        let mut s = spec();
+        s.modules.remove("c1");
+        let err = ExecPlan::compile(&g, &s, g.input_hwc).unwrap_err();
+        assert!(matches!(err, DfqError::Graph(_)), "{err}");
+        assert!(err.to_string().contains("c1"), "{err}");
+    }
+
+    #[test]
+    fn non_pow2_gap_fails_at_compile() {
+        let mut g = resnet_like();
+        g.input_hwc = (3, 4, 2);
+        let err = ExecPlan::compile_fp(&g, g.input_hwc).unwrap_err();
+        assert!(err.to_string().contains("power-of-two"), "{err}");
+    }
+
+    #[test]
+    fn dangling_res_fails_at_compile() {
+        let mut g = resnet_like();
+        g.modules[1].res = Some("nope".into());
+        let err = ExecPlan::compile_fp(&g, g.input_hwc).unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn conv_over_flat_value_fails_at_compile() {
+        let mut g = resnet_like();
+        // a conv reading the gap output (flat) is a shape error
+        g.modules.push(UnifiedModule {
+            name: "bad".into(),
+            kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 2, cout: 2, stride: 1 },
+            src: "gap".into(),
+            res: None,
+            relu: false,
+        });
+        let err = ExecPlan::compile_fp(&g, g.input_hwc).unwrap_err();
+        assert!(err.to_string().contains("NHWC"), "{err}");
+    }
+
+    #[test]
+    fn dense_fan_in_mismatch_fails_at_compile() {
+        let mut g = resnet_like();
+        g.modules[3].kind = ModuleKind::Dense { cin: 5, cout: 3 };
+        let err = ExecPlan::compile_fp(&g, g.input_hwc).unwrap_err();
+        assert!(err.to_string().contains("features"), "{err}");
+    }
+
+    #[test]
+    fn residual_shape_mismatch_fails_at_compile() {
+        let mut g = resnet_like();
+        // stride-2 conv with a full-resolution residual
+        g.modules[1].kind = ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 2 };
+        // drop gap+fc so the only error is the residual mismatch
+        g.modules.truncate(2);
+        let err = ExecPlan::compile_fp(&g, g.input_hwc).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
+    }
+
+    #[test]
+    fn empty_graph_fails_at_compile() {
+        let g = Graph { name: "e".into(), input_hwc: (2, 2, 1), modules: vec![] };
+        assert!(ExecPlan::compile_fp(&g, g.input_hwc).is_err());
+    }
+}

@@ -14,6 +14,14 @@
 //! versus the naive per-layer placement — the quantitative form of the
 //! paper's "fewer quantization operations → less information loss"
 //! hypothesis.
+//!
+//! **Ordering contract:** fusion is a single forward walk, so the fused
+//! modules come out in the producing layers' order — deterministic and
+//! topological. [`crate::engine::plan::ExecPlan::compile`] lowers
+//! modules in exactly this order (step *i* executes module *i*), and the
+//! liveness-based buffer-slot assignment depends on it; a fusion change
+//! that reordered modules would silently change every compiled schedule
+//! (a test below pins the contract).
 
 use super::layers::{LayerGraph, LayerOp};
 use super::{Graph, ModuleKind, UnifiedModule};
@@ -271,6 +279,31 @@ mod tests {
             layers: vec![layer("r", LayerOp::Relu, "input")],
         };
         assert!(fuse(&lg).is_err());
+    }
+
+    #[test]
+    fn fused_order_is_stable_producer_order() {
+        // the lowering contract: module i of the fused graph is the
+        // i-th producing (conv/dense/gap) layer of the input — the plan
+        // compiler's step order and slot assignment both lean on this
+        let lg = LayerGraph {
+            name: "order".into(),
+            input_hwc: (8, 8, 4),
+            layers: vec![
+                conv("c1", "input", 4, 4, 1),
+                layer("c1_bn", LayerOp::BatchNorm, "c1"),
+                layer("c1_relu", LayerOp::Relu, "c1_bn"),
+                conv("c2", "c1_relu", 4, 4, 1),
+                layer("add", LayerOp::Add { rhs: "c1_relu".into() }, "c2"),
+                layer("gap", LayerOp::GlobalAvgPool, "add"),
+                layer("fc", LayerOp::Dense { cin: 4, cout: 10 }, "gap"),
+            ],
+        };
+        let r = fuse(&lg).unwrap();
+        let names: Vec<&str> = r.graph.modules.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["c1", "c2", "gap", "fc"]);
+        // and every src points at an earlier module (topological)
+        r.graph.validate().unwrap();
     }
 
     #[test]

@@ -34,13 +34,30 @@
 //! engine behind the batching service with zero glue. Fallible APIs
 //! across the crate return the typed [`error::DfqError`].
 //!
+//! ## The `ExecPlan` IR
+//!
+//! Both engines execute one compiled IR ([`engine::plan::ExecPlan`]):
+//! the unified-module graph is lowered **once** into a flat vector of
+//! shape-resolved steps over buffer slots assigned by a liveness pass —
+//! name lookups, shape checks, `Gap` power-of-two validation,
+//! spec-coverage errors and every shift/clamp constant move into
+//! `ExecPlan::compile(..) -> Result<_, DfqError>`, leaving the hot path
+//! free of graph work. The FP and integer engines are thin executors
+//! over the same lowering (generic over an `i32`/`f32` kernel domain),
+//! property-tested bit-identical to per-module interpretation; `dfq
+//! inspect --plan` dumps the schedule. One [`engine::exec::Scratch`]
+//! arena serves one in-flight executor — the buffer-reuse contract.
+//!
 //! The integer deploy engine is **data-parallel**: it shards each batch
-//! along N across the coordinator pool and reuses per-shard scratch
-//! arenas (im2col patches, GEMM output, recycled activations), so
-//! steady-state serving performs no large allocations; batches too small
-//! to shard fall back to row-blocked GEMM. Output is bit-identical to
-//! the serial engine for every thread count — image rows are
-//! independent. `run_batch` on any engine is safe to call concurrently.
+//! along N across the coordinator pool (persistent parked workers — no
+//! spawn per batch) and reuses per-shard scratch arenas (im2col patches,
+//! GEMM output, recycled activations), so steady-state serving performs
+//! no large allocations; batches too small to shard fall back to
+//! row-blocked GEMM. Output is bit-identical to the serial engine for
+//! every thread count — image rows are independent. `run_batch` on any
+//! engine is safe to call concurrently. Future scaling layers
+//! (multi-node sharding, NUMA pinning, fused-kernel emission) target the
+//! plan IR.
 //!
 //! ## Layering
 //!
@@ -85,6 +102,7 @@ pub mod prelude {
     pub use crate::data::dataset::{ClassificationSet, DetectionSet};
     pub use crate::engine::fp::FpEngine;
     pub use crate::engine::int::IntEngine;
+    pub use crate::engine::plan::ExecPlan;
     pub use crate::error::DfqError;
     pub use crate::graph::{Graph, ModuleKind, UnifiedModule};
     pub use crate::quant::joint::{CalibConfig, JointCalibrator};

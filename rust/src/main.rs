@@ -36,7 +36,7 @@ const COMMANDS: &[(&str, &[&str])] = &[
     ),
     ("detect", &["bits", "eval-n", "batch", "images", "artifacts"]),
     ("hwcost", &["clock"]),
-    ("inspect", &["model"]),
+    ("inspect", &["model", "plan"]),
     ("serve", &["model", "requests", "engine", "artifacts", "threads"]),
 ];
 
@@ -149,7 +149,7 @@ COMMANDS:
   evaluate   top-1 of FP vs quantized (--model, --bits, --eval-n, --via-pjrt, --threads)
   detect     Table-4 style detection eval (--bits, --eval-n)
   hwcost     RTL cost model (--clock MHz)
-  inspect    dataflow analysis + quant-point report (--model)
+  inspect    dataflow analysis + quant-point report (--model [--plan])
   serve      batching inference service demo
              (--model, --requests, --engine fp|int|int:N|int:auto|pjrt, --threads)
 
@@ -320,6 +320,20 @@ fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
         .ok_or_else(|| DfqError::invalid(format!("unknown variant '{variant}'")))?;
     let lg = resnet::resnet_layers(model, n, 10);
     let fused = fuse::fuse(&lg)?;
+    if args.has("plan") {
+        // the lowered ExecPlan: shape-resolved steps over statically
+        // assigned buffer slots — what both engines execute
+        let plan = dfq::engine::plan::ExecPlan::compile_fp(
+            &fused.graph,
+            fused.graph.input_hwc,
+        )?;
+        print!("{plan}");
+        println!(
+            "(integer plans additionally fold in the calibrated shift/clamp \
+             constants; run `dfq calibrate` to produce a spec)"
+        );
+        return Ok(());
+    }
     println!("{}", fuse::quant_point_report(&fused));
     let dims = fused.graph.shapes();
     println!("\n{:<14} {:>6} {:>12} {:>10}", "module", "case", "out shape", "MACs");

@@ -26,9 +26,10 @@ pub mod ternary;
 
 use std::collections::HashMap;
 
+use crate::engine::fp::FpEngine;
+use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::Graph;
-use crate::engine::fp::FpEngine;
 use crate::tensor::Tensor;
 
 /// A weight + activation fake-quantization scheme.
@@ -62,14 +63,21 @@ pub fn run_fake_quant(
     q: &mut dyn FakeQuant,
     calib: &Tensor,
     batch: &Tensor,
-) -> Tensor {
+) -> Result<Tensor, DfqError> {
     let fp = FpEngine::new(graph, folded);
-    let calib_acts = fp.run_acts(calib);
+    let calib_acts = fp.run_acts(calib)?;
     q.calibrate_acts(&calib_acts);
     let qw = q.quantize_weights(folded);
     let engine = FpEngine::new(graph, &qw);
-    let mut acts = engine.run_acts_transformed(batch, |name, t| q.quantize_act(name, t));
-    acts.remove(&graph.modules.last().unwrap().name).unwrap()
+    let mut acts =
+        engine.run_acts_transformed(batch, |name, t| q.quantize_act(name, t))?;
+    let last = &graph
+        .modules
+        .last()
+        .ok_or_else(|| DfqError::graph("empty graph: nothing to run"))?
+        .name;
+    acts.remove(last)
+        .ok_or_else(|| DfqError::graph(format!("missing final activation '{last}'")))
 }
 
 /// Affine quantize-dequantize of a slice given (min, max) range.

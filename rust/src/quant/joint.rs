@@ -11,6 +11,7 @@
 
 use std::collections::HashMap;
 
+use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::{Graph, ModuleKind};
 use crate::quant::algo1::{self, ModuleProblem, SearchConfig};
@@ -66,14 +67,15 @@ impl JointCalibrator {
     /// `cfg.images`), given its graph, folded params and the FP oracle
     /// activations produced by [`crate::engine::fp::FpEngine::run_acts`]
     /// (or fetched through the PJRT `fp_acts` artifact — both are
-    /// accepted since they agree to f32 precision).
+    /// accepted since they agree to f32 precision). Malformed inputs
+    /// (dangling names, missing params/targets) are typed errors.
     pub fn calibrate_with_targets(
         &self,
         graph: &Graph,
         folded: &HashMap<String, FoldedParams>,
         calib: &Tensor,
         fp_acts: &HashMap<String, Tensor>,
-    ) -> CalibOutcome {
+    ) -> Result<CalibOutcome, DfqError> {
         let timer = Timer::start();
         let cfg = self.cfg;
         let scfg = SearchConfig { n_bits: cfg.n_bits, tau: cfg.tau };
@@ -89,21 +91,23 @@ impl JointCalibrator {
         );
 
         for m in &graph.modules {
+            let target = fp_acts.get(&m.name).ok_or_else(|| {
+                DfqError::data(format!(
+                    "module '{}' has no FP target activation",
+                    m.name
+                ))
+            })?;
             match &m.kind {
                 ModuleKind::Gap => {
-                    // no parameters; execute and record (the prefix is
-                    // always covered, so a failure here is a caller bug —
-                    // Session validates graphs before calibration)
+                    // no parameters; execute and record
                     let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                    let out = eng
-                        .run_module(m, &iacts)
-                        .expect("calibration prefix covers every executed module");
-                    let n = spec.value_frac(graph, &m.src);
+                    let out = eng.run_module(m, &iacts)?;
+                    let n = spec.try_value_frac(graph, &m.src)?;
                     let deq = scheme::dequantize_tensor(&out, n);
                     stats.push(ModuleStat {
                         name: m.name.clone(),
                         fig1_case: m.fig1_case(),
-                        mse: mse(&deq.data, &fp_acts[&m.name].data),
+                        mse: mse(&deq.data, &target.data),
                         n_w: 0,
                         n_b: 0,
                         n_o: n,
@@ -113,19 +117,38 @@ impl JointCalibrator {
                     iacts.insert(m.name.clone(), out);
                 }
                 ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => {
-                    let p = &folded[&m.name];
-                    let n_x = spec.value_frac(graph, &m.src);
-                    let res = m.res.as_ref().map(|r| {
-                        (&iacts[r], spec.value_frac(graph, r))
-                    });
+                    let p = folded.get(&m.name).ok_or_else(|| {
+                        DfqError::data(format!(
+                            "module '{}' has no folded parameters",
+                            m.name
+                        ))
+                    })?;
+                    let n_x = spec.try_value_frac(graph, &m.src)?;
+                    let res = match m.res.as_ref() {
+                        Some(r) => {
+                            let rt = iacts.get(r).ok_or_else(|| {
+                                DfqError::graph(format!(
+                                    "{}: missing residual activation '{r}'",
+                                    m.name
+                                ))
+                            })?;
+                            Some((rt, spec.try_value_frac(graph, r)?))
+                        }
+                        None => None,
+                    };
                     let problem = ModuleProblem {
                         module: m,
-                        x_int: &iacts[&m.src],
+                        x_int: iacts.get(&m.src).ok_or_else(|| {
+                            DfqError::graph(format!(
+                                "{}: missing input activation '{}'",
+                                m.name, m.src
+                            ))
+                        })?,
                         n_x,
                         w: &p.w,
                         b: &p.b,
                         res,
-                        target: &fp_acts[&m.name],
+                        target,
                     };
                     let r = if cfg.unfused {
                         self.search_unfused(&problem, scfg)
@@ -136,14 +159,12 @@ impl JointCalibrator {
                     // execute the module with the winning shifts so the
                     // next module calibrates against real quantized input
                     let eng = crate::engine::int::IntEngine::new(graph, folded, &spec);
-                    let out = eng
-                        .run_module(m, &iacts)
-                        .expect("calibration prefix covers every executed module");
+                    let out = eng.run_module(m, &iacts)?;
                     let deq = scheme::dequantize_tensor(&out, r.shifts.n_o);
                     stats.push(ModuleStat {
                         name: m.name.clone(),
                         fig1_case: m.fig1_case(),
-                        mse: mse(&deq.data, &fp_acts[&m.name].data),
+                        mse: mse(&deq.data, &target.data),
                         n_w: r.shifts.n_w,
                         n_b: r.shifts.n_b,
                         n_o: r.shifts.n_o,
@@ -154,7 +175,7 @@ impl JointCalibrator {
                 }
             }
         }
-        CalibOutcome { spec, stats, seconds: timer.secs() }
+        Ok(CalibOutcome { spec, stats, seconds: timer.secs() })
     }
 
     /// Convenience: compute the FP targets with the rust oracle engine
@@ -164,9 +185,9 @@ impl JointCalibrator {
         graph: &Graph,
         folded: &HashMap<String, FoldedParams>,
         calib: &Tensor,
-    ) -> CalibOutcome {
+    ) -> Result<CalibOutcome, DfqError> {
         let fp = crate::engine::fp::FpEngine::new(graph, folded);
-        let acts = fp.run_acts(calib);
+        let acts = fp.run_acts(calib)?;
         self.calibrate_with_targets(graph, folded, calib, &acts)
     }
 
@@ -194,9 +215,9 @@ impl JointCalibrator {
         folded: &HashMap<String, FoldedParams>,
         calib: &Tensor,
         spec: &QuantSpec,
-    ) -> HashMap<String, i32> {
+    ) -> Result<HashMap<String, i32>, DfqError> {
         let fp = crate::engine::fp::FpEngine::new(graph, folded);
-        let acts = fp.run_acts(calib);
+        let acts = fp.run_acts(calib)?;
         let mut out = HashMap::new();
         for m in graph.weight_modules() {
             // pre-activation range ~ range of the module output before
@@ -206,7 +227,7 @@ impl JointCalibrator {
             let cands = algo1::frac_window(max, spec.n_bits, self.cfg.tau);
             out.insert(m.name.clone(), cands[self.cfg.tau as usize / 2]);
         }
-        out
+        Ok(out)
     }
 }
 
@@ -295,11 +316,12 @@ mod tests {
         let mut rng = crate::util::rng::Pcg::new(32);
         let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
         let out = JointCalibrator::new(CalibConfig::default())
-            .calibrate(&graph, &folded, &x);
+            .calibrate(&graph, &folded, &x)
+            .unwrap();
         assert_eq!(out.spec.modules.len(), 5); // gap has no params
         // quantized final output close to FP final output
         let fp = crate::engine::fp::FpEngine::new(&graph, &folded);
-        let want = fp.run(&x);
+        let want = fp.run(&x).unwrap();
         let eng = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
         let got = eng.run_dequant(&x).unwrap();
         let rel = crate::util::mathutil::mse(&got.data, &want.data)
@@ -317,7 +339,8 @@ mod tests {
         let mut rng = crate::util::rng::Pcg::new(33);
         let x = Tensor::from_vec(&[2, 8, 8, 3], (0..384).map(|_| rng.normal()).collect());
         let out = JointCalibrator::new(CalibConfig { images: 2, ..Default::default() })
-            .calibrate(&graph, &folded, &x);
+            .calibrate(&graph, &folded, &x)
+            .unwrap();
         assert_eq!(out.spec.modules.len(), 5);
     }
 
@@ -327,11 +350,12 @@ mod tests {
         let mut rng = crate::util::rng::Pcg::new(34);
         let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
         let fp = crate::engine::fp::FpEngine::new(&graph, &folded);
-        let want = fp.run(&x);
+        let want = fp.run(&x).unwrap();
         let mut errs = Vec::new();
         for bits in [8u32, 6, 4] {
             let out = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() })
-                .calibrate(&graph, &folded, &x);
+                .calibrate(&graph, &folded, &x)
+                .unwrap();
             let eng = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
             let got = eng.run_dequant(&x).unwrap();
             errs.push(crate::util::mathutil::mse(&got.data, &want.data));
@@ -349,14 +373,14 @@ mod tests {
         let mut rng = crate::util::rng::Pcg::new(35);
         let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
         let fp = crate::engine::fp::FpEngine::new(&graph, &folded);
-        let want = fp.run(&x);
+        let want = fp.run(&x).unwrap();
 
         let cal = JointCalibrator::new(CalibConfig::default());
-        let out = cal.calibrate(&graph, &folded, &x);
+        let out = cal.calibrate(&graph, &folded, &x).unwrap();
         let eng = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
         let fused_mse = crate::util::mathutil::mse(&eng.run_dequant(&x).unwrap().data, &want.data);
 
-        let pre = cal.ablation_pre_fracs(&graph, &folded, &x, &out.spec);
+        let pre = cal.ablation_pre_fracs(&graph, &folded, &x, &out.spec).unwrap();
         let mut eng2 = crate::engine::int::IntEngine::new(&graph, &folded, &out.spec);
         eng2.pre_frac = Some(pre);
         let unfused_mse = crate::util::mathutil::mse(&eng2.run_dequant(&x).unwrap().data, &want.data);

@@ -58,6 +58,17 @@ impl QuantSpec {
         QuantSpec { n_bits, input_frac: 0, modules: HashMap::new() }
     }
 
+    /// The calibrated shifts of a weighted module, with the typed
+    /// uncovered-module error shared by the plan compiler and the
+    /// per-module engine path.
+    pub fn try_module(&self, name: &str) -> Result<ModuleShifts, DfqError> {
+        self.modules.get(name).copied().ok_or_else(|| {
+            DfqError::graph(format!(
+                "module '{name}' is not covered by the calibrated spec"
+            ))
+        })
+    }
+
     /// Fractional bits of the value produced under `name` (`"input"` or a
     /// module name). Gap preserves its input's scale (the mean is an
     /// exact shift). Panics on unknown/uncalibrated names — the engine

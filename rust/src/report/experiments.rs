@@ -45,20 +45,26 @@ impl Default for EvalOptions {
 // -----------------------------------------------------------------------
 
 /// FP top-1 over a subset of a classification set.
-pub fn eval_fp(bundle: &ModelBundle, ds: &ClassificationSet, opt: EvalOptions) -> f64 {
+pub fn eval_fp(
+    bundle: &ModelBundle,
+    ds: &ClassificationSet,
+    opt: EvalOptions,
+) -> Result<f64, DfqError> {
     let engine = FpEngine::new(&bundle.graph, &bundle.folded);
+    let plan = engine.plan()?; // compile once, reuse across batches
+    let mut scratch = crate::engine::exec::Scratch::new();
     let n = opt.eval_n.min(ds.len());
     let mut correct = 0.0;
     let mut seen = 0usize;
     let mut start = 0;
     while start < n {
         let (x, labels) = ds.batch(start, opt.batch.min(n - start));
-        let logits = engine.run(&x);
+        let logits = engine.run_plan(&plan, &x, &mut scratch)?;
         correct += top1_f32(&logits, labels) * labels.len() as f64;
         seen += labels.len();
         start += labels.len();
     }
-    correct / seen as f64
+    Ok(correct / seen as f64)
 }
 
 /// Top-1 of any unified [`Engine`] over a classification subset — the
@@ -91,20 +97,22 @@ pub fn eval_quantized(
     spec: &crate::quant::params::QuantSpec,
     ds: &ClassificationSet,
     opt: EvalOptions,
-) -> f64 {
+) -> Result<f64, DfqError> {
     let engine = IntEngine::new(&bundle.graph, &bundle.folded, spec);
+    let plan = engine.plan()?; // compile once, reuse across batches
+    let mut scratch = crate::engine::exec::Scratch::new();
     let n = opt.eval_n.min(ds.len());
     let mut correct = 0.0;
     let mut seen = 0usize;
     let mut start = 0;
     while start < n {
         let (x, labels) = ds.batch(start, opt.batch.min(n - start));
-        let logits = engine.run(&x).expect("calibrated spec covers the model");
+        let logits = engine.run_plan_scratch(&plan, &x, &mut scratch)?;
         correct += top1_i32(&logits, labels) * labels.len() as f64;
         seen += labels.len();
         start += labels.len();
     }
-    correct / seen as f64
+    Ok(correct / seen as f64)
 }
 
 /// Fake-quant baseline top-1.
@@ -114,10 +122,10 @@ pub fn eval_baseline(
     calib: &Tensor,
     ds: &ClassificationSet,
     opt: EvalOptions,
-) -> f64 {
+) -> Result<f64, DfqError> {
     // calibrate once
     let fp = FpEngine::new(&bundle.graph, &bundle.folded);
-    let calib_acts = fp.run_acts(calib);
+    let calib_acts = fp.run_acts(calib)?;
     q.calibrate_acts(&calib_acts);
     let qw = q.quantize_weights(&bundle.folded);
     let engine = FpEngine::new(&bundle.graph, &qw);
@@ -128,13 +136,14 @@ pub fn eval_baseline(
     let mut start = 0;
     while start < n {
         let (x, labels) = ds.batch(start, opt.batch.min(n - start));
-        let mut acts = engine.run_acts_transformed(&x, |name, t| q.quantize_act(name, t));
+        let mut acts =
+            engine.run_acts_transformed(&x, |name, t| q.quantize_act(name, t))?;
         let logits = acts.remove(&last).unwrap();
         correct += top1_f32(&logits, labels) * labels.len() as f64;
         seen += labels.len();
         start += labels.len();
     }
-    correct / seen as f64
+    Ok(correct / seen as f64)
 }
 
 /// Calibrate "ours" for a bundle at a bit-width.
@@ -142,7 +151,7 @@ pub fn calibrate_ours(
     bundle: &ModelBundle,
     calib: &Tensor,
     n_bits: u32,
-) -> CalibOutcome {
+) -> Result<CalibOutcome, DfqError> {
     JointCalibrator::new(CalibConfig { n_bits, ..Default::default() })
         .calibrate(&bundle.graph, &bundle.folded, calib)
 }
@@ -170,13 +179,13 @@ pub fn table1(art: &Artifacts, pool: &Pool, opt: EvalOptions) -> Result<Table, D
                 let calib = &calib;
                 move || -> Result<Vec<String>, DfqError> {
                     let bundle = art.load_model(name)?;
-                    let fp = eval_fp(&bundle, ds, opt);
+                    let fp = eval_fp(&bundle, ds, opt)?;
                     let mut kl = KlQuant::new(8, 8);
-                    let a_kl = eval_baseline(&bundle, &mut kl, calib, ds, opt);
+                    let a_kl = eval_baseline(&bundle, &mut kl, calib, ds, opt)?;
                     let mut mm = MinMaxQuant::new(8, 8);
-                    let a_mm = eval_baseline(&bundle, &mut mm, calib, ds, opt);
-                    let ours = calibrate_ours(&bundle, calib, 8);
-                    let a_ours = eval_quantized(&bundle, &ours.spec, ds, opt);
+                    let a_mm = eval_baseline(&bundle, &mut mm, calib, ds, opt)?;
+                    let ours = calibrate_ours(&bundle, calib, 8)?;
+                    let a_ours = eval_quantized(&bundle, &ours.spec, ds, opt)?;
                     Ok(vec![name.to_string(), pct(fp), pct(a_kl), pct(a_mm), pct(a_ours)])
                 }
             })
@@ -209,7 +218,7 @@ pub fn table2(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     );
     for name in ["resnet_s", "resnet_m", "resnet_l"] {
         let bundle = art.load_model(name)?;
-        let out = calibrate_ours(&bundle, &calib, 8);
+        let out = calibrate_ours(&bundle, &calib, 8)?;
         let evals: usize = 125 * bundle.graph.weight_layer_count();
         table.row(vec![
             name.into(),
@@ -232,8 +241,8 @@ pub fn table2_ablation(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqEr
     for (tau, imgs) in [(1i32, 1usize), (2, 1), (4, 1), (6, 1), (4, 8), (4, 32)] {
         let calib = art.calibration_images(imgs)?;
         let out = JointCalibrator::new(CalibConfig { tau, images: imgs, ..Default::default() })
-            .calibrate(&bundle.graph, &bundle.folded, &calib);
-        let acc = eval_quantized(&bundle, &out.spec, &ds, opt);
+            .calibrate(&bundle.graph, &bundle.folded, &calib)?;
+        let acc = eval_quantized(&bundle, &out.spec, &ds, opt)?;
         table.row(vec![
             format!("{tau}"),
             format!("{imgs}"),
@@ -257,11 +266,11 @@ pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
         "Table 3: ResNet-S accuracy across methods/bit-widths",
         &["Method", "W bits", "A bits", "Quant type", "Top-1"],
     );
-    let fp = eval_fp(&bundle, &ds, opt);
+    let fp = eval_fp(&bundle, &ds, opt)?;
     table.row(vec!["FP32".into(), "32".into(), "32".into(), "N/A".into(), pct(fp)]);
     {
         let mut q = CodebookQuant::new(4);
-        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt)?;
         table.row(vec![
             "CLIP-Q-like".into(),
             "4".into(),
@@ -272,7 +281,7 @@ pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     }
     {
         let mut q = InqQuant::new(5);
-        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt)?;
         table.row(vec![
             "INQ-like".into(),
             "5".into(),
@@ -283,7 +292,7 @@ pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     }
     {
         let mut q = MinMaxQuant::new(5, 5);
-        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt)?;
         table.row(vec![
             "ABC-net-like".into(),
             "5".into(),
@@ -294,7 +303,7 @@ pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
     }
     {
         let mut q = TernaryQuant::new(64, 8);
-        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt);
+        let a = eval_baseline(&bundle, &mut q, &calib, &ds, opt)?;
         table.row(vec![
             "FGQ-like".into(),
             "2".into(),
@@ -304,8 +313,8 @@ pub fn table3(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
         ]);
     }
     {
-        let ours = calibrate_ours(&bundle, &calib, 8);
-        let a = eval_quantized(&bundle, &ours.spec, &ds, opt);
+        let ours = calibrate_ours(&bundle, &calib, 8)?;
+        let a = eval_quantized(&bundle, &ours.spec, &ds, opt)?;
         table.row(vec![
             "Ours".into(),
             "8".into(),
@@ -327,27 +336,43 @@ pub fn eval_detection(
     spec: Option<&crate::quant::params::QuantSpec>,
     ds: &DetectionSet,
     opt: EvalOptions,
-) -> Vec<f64> {
+) -> Result<Vec<f64>, DfqError> {
     let n = opt.eval_n.min(ds.len());
     let gts = ds.ground_truths(0, n);
     let mut dets: Vec<Detection> = Vec::new();
     let mut start = 0usize;
     let last = bundle.graph.modules.last().unwrap().name.clone();
+    // build the engine and compile the plan once for the whole sweep
+    let fpe = FpEngine::new(&bundle.graph, &bundle.folded);
+    let inte = spec.map(|s| IntEngine::new(&bundle.graph, &bundle.folded, s));
+    let fp_plan = match &inte {
+        None => Some(fpe.plan()?),
+        Some(_) => None,
+    };
+    let int_plan = match &inte {
+        Some(e) => Some(e.plan()?),
+        None => None,
+    };
+    let out_frac = match spec {
+        Some(s) => s.try_value_frac(&bundle.graph, &last)?,
+        None => 0,
+    };
+    let mut fp_scratch = crate::engine::exec::Scratch::new();
+    let mut int_scratch = crate::engine::exec::Scratch::new();
     while start < n {
         let bsz = opt.batch.min(n - start);
         let x = ds.batch(start, bsz);
-        let head = match spec {
-            None => FpEngine::new(&bundle.graph, &bundle.folded).run(&x),
-            Some(spec) => {
-                let eng = IntEngine::new(&bundle.graph, &bundle.folded, spec);
-                let out = eng.run(&x).expect("calibrated spec covers the model");
-                scheme::dequantize_tensor(&out, spec.value_frac(&bundle.graph, &last))
+        let head = match (&inte, &int_plan) {
+            (Some(eng), Some(plan)) => {
+                let out = eng.run_plan_scratch(plan, &x, &mut int_scratch)?;
+                scheme::dequantize_tensor(&out, out_frac)
             }
+            _ => fpe.run_plan(fp_plan.as_ref().expect("fp plan"), &x, &mut fp_scratch)?,
         };
         dets.extend(detector::decode(&head, 0.08, 0.45, start));
         start += bsz;
     }
-    per_class_ap(&dets, &gts, detector::N_CLASSES, 0.5)
+    Ok(per_class_ap(&dets, &gts, detector::N_CLASSES, 0.5))
 }
 
 /// Table 4: SynthKITTI detection AP at FP/8/7/6 bits.
@@ -365,12 +390,12 @@ pub fn table4(art: &Artifacts, opt: EvalOptions) -> Result<Table, DfqError> {
         "Table 4: SynthKITTI detection AP vs precision (DetNet)",
         &["Class", "FP", "8-bit", "7-bit", "6-bit", "5-bit", "4-bit"],
     );
-    let fp_ap = eval_detection(&bundle, None, &ds, opt);
+    let fp_ap = eval_detection(&bundle, None, &ds, opt)?;
     let mut cols: Vec<Vec<f64>> = vec![fp_ap];
     for bits in [8u32, 7, 6, 5, 4] {
         let out = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() })
-            .calibrate(&bundle.graph, &bundle.folded, &calib);
-        cols.push(eval_detection(&bundle, Some(&out.spec), &ds, opt));
+            .calibrate(&bundle.graph, &bundle.folded, &calib)?;
+        cols.push(eval_detection(&bundle, Some(&out.spec), &ds, opt)?);
     }
     for (c, cls) in ["Car", "Pedestrian", "Cyclist"].iter().enumerate() {
         table.row(vec![
@@ -475,7 +500,7 @@ pub fn headline(graph: &Graph) -> Table {
 pub fn fig2(art: &Artifacts, model: &str) -> Result<(Vec<Series>, Vec<Series>), DfqError> {
     let bundle = art.load_model(model)?;
     let calib = art.calibration_images(1)?;
-    let out = calibrate_ours(&bundle, &calib, 8);
+    let out = calibrate_ours(&bundle, &calib, 8)?;
     let res = out.stats.residual_mse_series();
     let fig2a = vec![
         Series {
@@ -530,21 +555,24 @@ pub fn dataflow_ablation(
     // quantization operation costs real information
     for bits in [8u32, 6, 5, 4] {
         let cal = JointCalibrator::new(CalibConfig { n_bits: bits, ..Default::default() });
-        let out = cal.calibrate(&bundle.graph, &bundle.folded, &calib);
-        let fused_acc = eval_quantized(&bundle, &out.spec, &ds, opt);
-        let pre = cal.ablation_pre_fracs(&bundle.graph, &bundle.folded, &calib, &out.spec);
+        let out = cal.calibrate(&bundle.graph, &bundle.folded, &calib)?;
+        let fused_acc = eval_quantized(&bundle, &out.spec, &ds, opt)?;
+        let pre = cal.ablation_pre_fracs(&bundle.graph, &bundle.folded, &calib, &out.spec)?;
         let engine_unfused = {
             let mut e = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
             e.pre_frac = Some(pre);
             e
         };
+        // compile the unfused plan once for the whole sweep
+        let plan = engine_unfused.plan()?;
+        let mut scratch = crate::engine::exec::Scratch::new();
         let n = opt.eval_n.min(ds.len());
         let mut correct = 0.0;
         let mut seen = 0usize;
         let mut start = 0usize;
         while start < n {
             let (x, labels) = ds.batch(start, opt.batch.min(n - start));
-            let logits = engine_unfused.run(&x).expect("calibrated spec covers the model");
+            let logits = engine_unfused.run_plan_scratch(&plan, &x, &mut scratch)?;
             correct += top1_i32(&logits, labels) * labels.len() as f64;
             seen += labels.len();
             start += labels.len();

@@ -6,6 +6,11 @@
 //! All engines share one contract: NHWC f32 batches in, `(B, out_dim)`
 //! f32 score rows out (quantized paths dequantize their final codes, so
 //! argmax and metrics code is engine-agnostic).
+//!
+//! The FP and integer deploy engines hold a **cached [`ExecPlan`]**,
+//! compiled once at build time: the serving hot path performs no graph
+//! walk, name lookup or shape resolution per batch — each shard executes
+//! the flat plan over its own recycled [`Scratch`] arena.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -13,15 +18,15 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::pool::Pool;
 use crate::coordinator::serve::Backend;
-use crate::engine::fp::FpEngine;
-use crate::engine::int::{IntEngine, Scratch};
+use crate::engine::exec::{self, Scratch};
+use crate::engine::int::IntEngine;
+use crate::engine::plan::ExecPlan;
 use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::Graph;
-use crate::quant::params::QuantSpec;
 use crate::quant::scheme;
 use crate::runtime::{ArgValue, PjrtWorker};
-use crate::tensor::{Shape, Tensor, TensorI32};
+use crate::tensor::{Tensor, TensorI32};
 
 use super::CalibratedModel;
 
@@ -133,14 +138,6 @@ impl<E: Engine + ?Sized> Backend for E {
     }
 }
 
-/// Flattened feature count of the graph's final module.
-fn out_features(graph: &Graph) -> usize {
-    let dims = graph.shapes();
-    let last = &graph.modules.last().expect("non-empty graph").name;
-    let (h, w, c) = dims[last];
-    h * w * c
-}
-
 /// A malformed batch must be a typed error fanned back to the waiters —
 /// never a panic that kills the serving collector thread.
 fn check_batch_input(batch: &Tensor, graph: &Graph) -> Result<(), DfqError> {
@@ -162,16 +159,21 @@ fn check_batch_input(batch: &Tensor, graph: &Graph) -> Result<(), DfqError> {
 pub(crate) struct FpDeployEngine {
     graph: Arc<Graph>,
     folded: Arc<HashMap<String, FoldedParams>>,
+    /// compiled once when the session opened — no per-batch graph walk
+    plan: Arc<ExecPlan>,
     out_dim: usize,
+    /// recycled arenas, same contract as the integer deploy engine
+    scratch: Mutex<Vec<Scratch<f32>>>,
 }
 
 impl FpDeployEngine {
     pub(crate) fn new(
         graph: Arc<Graph>,
         folded: Arc<HashMap<String, FoldedParams>>,
+        plan: Arc<ExecPlan>,
     ) -> FpDeployEngine {
-        let out_dim = out_features(&graph);
-        FpDeployEngine { graph, folded, out_dim }
+        let out_dim = plan.out_elems();
+        FpDeployEngine { graph, folded, plan, out_dim, scratch: Mutex::new(Vec::new()) }
     }
 }
 
@@ -195,8 +197,18 @@ impl Engine for FpDeployEngine {
     fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
         check_batch_input(batch, &self.graph)?;
         let b = batch.shape.dim(0);
-        let out = FpEngine::new(&self.graph, &self.folded).run(batch);
-        Ok(out.reshape(&[b, self.out_dim]))
+        let views = exec::fp_views(&self.plan, &self.folded)?;
+        let mut scratch = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        let res = exec::execute(
+            &self.plan,
+            &exec::FpDomain { params: &views },
+            batch.data.clone(),
+            b,
+            &mut scratch,
+            1,
+        );
+        self.scratch.lock().unwrap().push(scratch);
+        Ok(Tensor::from_vec(&[b, self.out_dim], res?))
     }
 }
 
@@ -204,29 +216,34 @@ impl Engine for FpDeployEngine {
 // bit-exact integer engine (data-parallel)
 // ---------------------------------------------------------------------
 
-/// The integer deploy engine: shards each NHWC batch along N across the
-/// coordinator pool (rows are independent, so the result is bit-identical
-/// to the serial engine by construction), falls back to row-blocked GEMM
-/// when the batch is too small to shard, and recycles per-shard
-/// [`Scratch`] arenas so steady-state serving performs no large
-/// allocations. `run_batch` is safe to call concurrently: each call
-/// checks scratches out of the shared pool and returns them when done.
+/// The integer deploy engine: executes a **cached** [`ExecPlan`] with
+/// parameters bound once at build time (weights in parameter-table
+/// order, biases pre-aligned into the accumulator domain). Each NHWC
+/// batch shards along N across the coordinator pool (rows are
+/// independent, so the result is bit-identical to the serial engine by
+/// construction), falls back to row-blocked GEMM when the batch is too
+/// small to shard, and recycles per-shard [`Scratch`] arenas so
+/// steady-state serving performs no large allocations. `run_batch` is
+/// safe to call concurrently: each call checks scratches out of the
+/// shared pool and returns them when done.
 pub(crate) struct IntDeployEngine {
     graph: Arc<Graph>,
-    spec: Arc<QuantSpec>,
-    /// weights/biases quantized once at build time — the serving hot
-    /// path must not re-quantize the model per batch
-    qparams: HashMap<String, crate::engine::int::QuantizedParams>,
+    plan: ExecPlan,
+    /// weight codes in the plan's parameter-table order
+    weights: Vec<TensorI32>,
+    /// accumulator-aligned bias codes, same order
+    biases: Vec<Vec<i32>>,
     out_dim: usize,
     /// fractional bits of the final module's codes (dequant per shard)
     out_frac: i32,
+    /// quantization of the graph input
+    input_frac: i32,
+    n_bits: u32,
     /// resolved worker count (>= 1)
     threads: usize,
     pool: Pool,
     /// recycled per-shard arenas; grows to the peak concurrent shards
     scratch: Mutex<Vec<Scratch>>,
-    /// liveness table computed once and shared by every shard engine
-    liveness: Arc<Vec<Vec<String>>>,
 }
 
 impl IntDeployEngine {
@@ -239,18 +256,30 @@ impl IntDeployEngine {
         } else {
             threads
         };
-        let last = &cm.graph.modules.last().expect("non-empty graph").name;
-        let out_frac = cm.spec.try_value_frac(&cm.graph, last)?;
+        // compile once: every name/shape/spec error surfaces here, not
+        // on the serving hot path
+        let plan = ExecPlan::compile(&cm.graph, &cm.spec, cm.graph.input_hwc)?;
+        let mut qparams =
+            crate::engine::int::quantize_params(&cm.graph, &cm.folded, &cm.spec);
+        let biases = exec::aligned_biases(&plan, &qparams)?;
+        let weights = plan
+            .param_names()
+            .iter()
+            .map(|name| qparams.remove(name).expect("aligned_biases validated").w)
+            .collect();
+        let pq = plan.quant.expect("integer plans carry quant bookkeeping");
         Ok(IntDeployEngine {
-            qparams: crate::engine::int::quantize_params(&cm.graph, &cm.folded, &cm.spec),
+            out_dim: plan.out_elems(),
+            out_frac: pq.out_frac,
+            input_frac: pq.input_frac,
+            n_bits: pq.n_bits,
             graph: cm.graph.clone(),
-            spec: cm.spec.clone(),
-            out_dim: out_features(&cm.graph),
-            out_frac,
+            plan,
+            weights,
+            biases,
             threads,
             pool: Pool::new(threads),
             scratch: Mutex::new(Vec::new()),
-            liveness: Arc::new(crate::engine::int::liveness(&cm.graph)),
         })
     }
 }
@@ -284,6 +313,14 @@ impl Engine for IntDeployEngine {
             return Ok(Tensor::from_vec(&[0, self.out_dim], Vec::new()));
         }
         let per: usize = dims[1..].iter().product();
+        // bind the cached parameters once per batch (a Vec of slice
+        // views — no copies), shared by every shard
+        let views: Vec<exec::IntStepView<'_>> = self
+            .weights
+            .iter()
+            .zip(&self.biases)
+            .map(|(w, bias)| exec::IntStepView { w: &w.data, b: bias })
+            .collect();
         // batch-level sharding first; leftover parallelism goes to
         // row-blocked GEMM inside each shard (e.g. N=1 with 4 threads
         // runs one shard whose GEMMs split 4 ways)
@@ -301,42 +338,41 @@ impl Engine for IntDeployEngine {
         let jobs: Vec<_> = ranges
             .into_iter()
             .map(|(start, take)| {
+                let views = &views;
                 move || -> Result<Vec<f32>, DfqError> {
                     let mut scratch =
                         self.scratch.lock().unwrap().pop().unwrap_or_default();
                     // quantize this shard's rows straight into a recycled
                     // code buffer — no f32 sub-batch copy, and the input
-                    // codes rejoin the arena once the liveness pass drops
-                    // them
-                    let mut codes = scratch.take(take * per);
+                    // codes rejoin the arena once their last consumer
+                    // retires
+                    let mut codes = scratch.take_uninit(take * per);
                     for (dst, &v) in codes
                         .iter_mut()
                         .zip(&batch.data[start * per..(start + take) * per])
                     {
                         *dst = scheme::quantize_val(
                             v,
-                            self.spec.input_frac,
-                            self.spec.n_bits,
+                            self.input_frac,
+                            self.n_bits,
                             false,
                         );
                     }
-                    let xq = TensorI32 {
-                        shape: Shape(vec![take, dims[1], dims[2], dims[3]]),
-                        data: codes,
-                    };
-                    let eng = IntEngine::with_qparams_shared(
-                        &self.graph,
-                        &self.spec,
-                        &self.qparams,
-                        self.liveness.clone(),
-                    )
-                    .with_threads(inner);
-                    let res = eng.run_codes_scratch(xq, &mut scratch);
+                    let res = exec::execute(
+                        &self.plan,
+                        &exec::IntDomain { params: views },
+                        codes,
+                        take,
+                        &mut scratch,
+                        inner,
+                    );
                     let out = match res {
                         Ok(codes) => {
-                            let deq = scheme::dequantize_tensor(&codes, self.out_frac);
-                            scratch.recycle(codes.data);
-                            Ok(deq.data)
+                            let scale = scheme::exp2i(-self.out_frac);
+                            let deq: Vec<f32> =
+                                codes.iter().map(|&v| v as f32 * scale).collect();
+                            scratch.recycle(codes);
+                            Ok(deq)
                         }
                         Err(e) => Err(e),
                     };
@@ -369,7 +405,7 @@ pub(crate) struct PjrtDeployEngine {
     hlo_path: PathBuf,
     /// quantized weights / biases / shift vectors, in artifact order
     tail: Vec<ArgValue>,
-    spec: Arc<QuantSpec>,
+    spec: Arc<crate::quant::params::QuantSpec>,
     /// fractional bits of the artifact's output codes
     out_frac: i32,
     batch: usize,
@@ -450,6 +486,7 @@ pub(crate) fn build(
         EngineKind::Fp => Ok(Arc::new(FpDeployEngine::new(
             cm.graph.clone(),
             cm.folded.clone(),
+            cm.fp_plan.clone(),
         ))),
         EngineKind::Int { threads } => {
             Ok(Arc::new(IntDeployEngine::build(cm, threads)?))
@@ -484,7 +521,11 @@ pub(crate) fn build(
                 out_frac: cm.spec.value_frac(&cm.graph, last),
                 spec: cm.spec.clone(),
                 batch: src.batch,
-                out_dim: out_features(&cm.graph),
+                out_dim: {
+                    let dims = cm.graph.shapes();
+                    let (h, w, c) = dims[last];
+                    h * w * c
+                },
                 input_hwc: cm.graph.input_hwc,
             }))
         }

@@ -41,11 +41,12 @@ use std::sync::Arc;
 
 use crate::coordinator::pool::Pool;
 use crate::data::artifacts::Artifacts;
+use crate::engine::plan::ExecPlan;
 use crate::error::DfqError;
 use crate::graph::bn_fold::{fold_bn, FoldedParams};
 use crate::graph::fuse;
 use crate::graph::layers::LayerGraph;
-use crate::graph::{Graph, ModuleKind};
+use crate::graph::Graph;
 use crate::quant::joint::{CalibConfig, CalibOutcome, JointCalibrator};
 use crate::quant::params::QuantSpec;
 use crate::quant::stats::CalibStats;
@@ -66,6 +67,10 @@ pub(crate) struct ArtifactSource {
 pub struct Session {
     graph: Arc<Graph>,
     folded: Arc<HashMap<String, FoldedParams>>,
+    /// the graph lowered once into the flat fp [`ExecPlan`] — shared by
+    /// every FP engine built from this session (the integer engines
+    /// compile their own plan against the calibrated spec)
+    fp_plan: Arc<ExecPlan>,
     /// (naive, fused) quantization-point counts when built from layers
     fusion: Option<(usize, usize)>,
     artifact: Option<ArtifactSource>,
@@ -91,38 +96,16 @@ impl Session {
                 )));
             }
         }
-        // the integer engine's global-average-pool is an exact rounded
-        // shift over an NHWC window — reject non-spatial sources and
-        // non-power-of-two windows at construction so neither can
-        // surface mid-serving
-        let dims = graph.shapes();
-        for m in &graph.modules {
-            if matches!(m.kind, ModuleKind::Gap) {
-                let spatial = m.src == "input"
-                    || graph
-                        .module(&m.src)
-                        .is_some_and(|s| matches!(s.kind, ModuleKind::Conv { .. }));
-                if !spatial {
-                    return Err(DfqError::graph(format!(
-                        "module '{}': global average pool needs a spatial (NHWC) \
-                         source, but '{}' produces a flat activation",
-                        m.name, m.src
-                    )));
-                }
-                let (h, w, _) = dims[&m.src];
-                if !(h * w).is_power_of_two() {
-                    return Err(DfqError::graph(format!(
-                        "module '{}': global average pool needs a power-of-two \
-                         spatial size, got {h}x{w} (the integer mean is an exact \
-                         rounded shift)",
-                        m.name
-                    )));
-                }
-            }
-        }
+        // lowering the graph into the flat plan performs every
+        // structural check the engines rely on — shape resolution,
+        // spatial sources and power-of-two windows for the exact
+        // rounded-shift pooling mean, residual layout equality — so
+        // none of them can surface mid-serving
+        let fp_plan = Arc::new(ExecPlan::compile_fp(&graph, graph.input_hwc)?);
         Ok(Session {
             graph: Arc::new(graph),
             folded: Arc::new(folded),
+            fp_plan,
             fusion: None,
             artifact: None,
         })
@@ -193,6 +176,7 @@ impl Session {
         Arc::new(engine::FpDeployEngine::new(
             self.graph.clone(),
             self.folded.clone(),
+            self.fp_plan.clone(),
         ))
     }
 
@@ -204,7 +188,7 @@ impl Session {
         calib: &Tensor,
     ) -> Result<CalibratedModel, DfqError> {
         self.check_calib(calib)?;
-        let out = JointCalibrator::new(cfg).calibrate(&self.graph, &self.folded, calib);
+        let out = JointCalibrator::new(cfg).calibrate(&self.graph, &self.folded, calib)?;
         Ok(self.wrap(out))
     }
 
@@ -223,7 +207,7 @@ impl Session {
             &self.graph,
             &self.folded,
             calib,
-        );
+        )?;
         Ok(self.wrap(out))
     }
 
@@ -243,6 +227,7 @@ impl Session {
         CalibratedModel {
             graph: self.graph.clone(),
             folded: self.folded.clone(),
+            fp_plan: self.fp_plan.clone(),
             artifact: self.artifact.clone(),
             spec: Arc::new(out.spec),
             stats: out.stats,
@@ -257,6 +242,7 @@ impl Session {
 pub struct CalibratedModel {
     pub(crate) graph: Arc<Graph>,
     pub(crate) folded: Arc<HashMap<String, FoldedParams>>,
+    pub(crate) fp_plan: Arc<ExecPlan>,
     pub(crate) artifact: Option<ArtifactSource>,
     pub(crate) spec: Arc<QuantSpec>,
     /// per-module reconstruction statistics (paper Fig. 2)

@@ -68,12 +68,36 @@ pub fn im2col_into<T: Copy + Default>(
     padding: Padding,
     out: &mut Vec<T>,
 ) -> (usize, usize) {
-    let (n, h, w, c) = (
+    im2col_slice_into(
+        &x.data,
         x.shape.dim(0),
         x.shape.dim(1),
         x.shape.dim(2),
         x.shape.dim(3),
-    );
+        kh,
+        kw,
+        stride,
+        padding,
+        out,
+    )
+}
+
+/// [`im2col_into`] over a raw NHWC slice with explicit dims — the plan
+/// executor's form, where activations live in shape-resolved buffer
+/// slots rather than shaped tensors.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_slice_into<T: Copy + Default>(
+    data: &[T],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+    out: &mut Vec<T>,
+) -> (usize, usize) {
     let (ho, wo, pt, pl) = conv_geometry(h, w, kh, kw, stride, padding);
     let k = kh * kw * c;
     // clear + resize rewrites every element with the padding value, so a
@@ -96,8 +120,7 @@ pub fn im2col_into<T: Copy + Default>(
                         }
                         let src = ((b * h + iy as usize) * w + ix as usize) * c;
                         let dst = row + (ky * kw + kx) * c;
-                        out[dst..dst + c]
-                            .copy_from_slice(&x.data[src..src + c]);
+                        out[dst..dst + c].copy_from_slice(&data[src..src + c]);
                     }
                 }
             }

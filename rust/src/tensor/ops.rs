@@ -8,9 +8,19 @@ use super::{Shape, Tensor};
 /// C(M,N) = A(M,K) * B(K,N). Row-major; (m, k, n) loop order keeps the
 /// inner loop streaming contiguously through B and C.
 pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = Vec::new();
+    gemm_f32_into(a, b, m, k, n, &mut c);
+    c
+}
+
+/// [`gemm_f32`] into a caller-owned buffer (cleared and resized to
+/// `m*n`) — the plan executor's form. Identical accumulation order, so
+/// results are bit-identical to the allocating variant.
+pub fn gemm_f32_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut Vec<f32>) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * n];
+    c.clear();
+    c.resize(m * n, 0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -24,7 +34,6 @@ pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> 
             }
         }
     }
-    c
 }
 
 /// 2-D convolution, NHWC x HWIO -> NHWC (paper Eq. 2, plus bias).

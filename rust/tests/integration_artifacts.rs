@@ -48,7 +48,7 @@ fn trained_models_beat_chance_by_far() {
     let opt = EvalOptions { eval_n: 200, batch: 50, calib_n: 1 };
     for name in ["resnet_s", "resnet_l"] {
         let bundle = art.load_model(name).unwrap();
-        let acc = experiments::eval_fp(&bundle, &ds, opt);
+        let acc = experiments::eval_fp(&bundle, &ds, opt).unwrap();
         assert!(acc > 0.5, "{name} FP top-1 {acc} — training failed?");
     }
 }
@@ -60,9 +60,9 @@ fn quantized_within_few_points_of_fp() {
     let opt = EvalOptions { eval_n: 200, batch: 50, calib_n: 1 };
     let bundle = art.load_model("resnet_s").unwrap();
     let calib = art.calibration_images(1).unwrap();
-    let fp = experiments::eval_fp(&bundle, &ds, opt);
-    let out = experiments::calibrate_ours(&bundle, &calib, 8);
-    let q = experiments::eval_quantized(&bundle, &out.spec, &ds, opt);
+    let fp = experiments::eval_fp(&bundle, &ds, opt).unwrap();
+    let out = experiments::calibrate_ours(&bundle, &calib, 8).unwrap();
+    let q = experiments::eval_quantized(&bundle, &out.spec, &ds, opt).unwrap();
     // paper: ~1.8pp drop; we allow 6pp on the 200-image subset
     assert!(fp - q < 0.06, "drop too large: FP {fp} vs int8 {q}");
 }
@@ -99,7 +99,7 @@ fn calibration_shifts_in_hardware_range() {
     let Some(art) = art() else { return };
     let bundle = art.load_model("resnet_m").unwrap();
     let calib = art.calibration_images(1).unwrap();
-    let out = experiments::calibrate_ours(&bundle, &calib, 8);
+    let out = experiments::calibrate_ours(&bundle, &calib, 8).unwrap();
     let (lo, med, hi) = out.stats.shift_summary();
     // paper Fig 2b: deployed shifts live in [1, 10], values around 3-8
     assert!(lo >= 0, "negative deployed shift {lo}");

@@ -177,7 +177,7 @@ fn q_logits_artifact_matches_int_engine() {
     let model = "resnet_s";
     let bundle = art.load_model(model).unwrap();
     let calib = art.calibration_images(1).unwrap();
-    let out = dfq::report::experiments::calibrate_ours(&bundle, &calib, 8);
+    let out = dfq::report::experiments::calibrate_ours(&bundle, &calib, 8).unwrap();
     let eng = IntEngine::new(&bundle.graph, &bundle.folded, &out.spec);
 
     let batch = art.artifact_batch(model, "q_logits").unwrap();
@@ -242,7 +242,7 @@ fn fp_logits_artifact_matches_fp_engine() {
     let out = worker.run(&path, args).unwrap();
     let got = out[0].as_f32().unwrap();
 
-    let want = dfq::engine::fp::FpEngine::new(&bundle.graph, &bundle.folded).run(&x);
+    let want = dfq::engine::fp::FpEngine::new(&bundle.graph, &bundle.folded).run(&x).unwrap();
     assert_eq!(got.shape.dims(), want.shape.dims());
     let mse = dfq::util::mathutil::mse(&got.data, &want.data);
     assert!(mse < 1e-6, "FP paths diverged: mse {mse}");

@@ -174,7 +174,7 @@ fn prop_shape_inference_consistent_with_execution() {
         }
         let engine = dfq::engine::fp::FpEngine::new(&graph, &folded);
         let x = Tensor::from_vec(&[2, 8, 8, 3], (0..384).map(|_| rng.normal()).collect());
-        let acts = engine.run_acts(&x);
+        let acts = engine.run_acts(&x).unwrap();
         let dims = graph.shapes();
         for m in &graph.modules {
             let t = &acts[&m.name];

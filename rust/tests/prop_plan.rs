@@ -1,0 +1,269 @@
+//! Property tests for the compiled `ExecPlan`: executing the flat,
+//! shape-resolved, statically-buffered schedule must be **bit-identical**
+//! to the pre-refactor interpreter semantics (module-by-module
+//! execution over a name-keyed activation map) for random fused graphs
+//! × batch sizes × thread counts, in both numeric domains and in the
+//! unfused ablation — and every graph/spec validation error must
+//! surface at `compile()`, not at run time.
+
+use std::collections::HashMap;
+
+use dfq::engine::fp::FpEngine;
+use dfq::engine::int::{IntEngine, Scratch};
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::prelude::*;
+
+/// A random residual CNN over an 8x8x3 input. Strides keep the spatial
+/// size a power of two (8 -> 4 -> 2 -> 1 via div_ceil), so an optional
+/// gap+dense head is always integer-exact.
+fn random_model(rng: &mut Pcg) -> (Graph, HashMap<String, FoldedParams>) {
+    let mut modules = Vec::new();
+    let mut ch = rng.int_range(2, 5) as usize;
+    modules.push(UnifiedModule {
+        name: "stem".into(),
+        kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: ch, stride: 1 },
+        src: "input".into(),
+        res: None,
+        relu: true,
+    });
+    let mut prev = "stem".to_string();
+    let n_blocks = rng.int_range(1, 4);
+    for i in 0..n_blocks {
+        let name = format!("c{i}");
+        let stride = if rng.f32() < 0.3 { 2 } else { 1 };
+        let cout = if stride == 1 && rng.f32() < 0.5 {
+            ch
+        } else {
+            rng.int_range(2, 6) as usize
+        };
+        // a residual needs matching shapes: stride 1 and unchanged width
+        let res = (stride == 1 && cout == ch && rng.f32() < 0.6).then(|| prev.clone());
+        let k = if rng.f32() < 0.5 { 1 } else { 3 };
+        modules.push(UnifiedModule {
+            name: name.clone(),
+            kind: ModuleKind::Conv { kh: k, kw: k, cin: ch, cout, stride },
+            src: prev.clone(),
+            res,
+            relu: rng.f32() < 0.7,
+        });
+        ch = cout;
+        prev = name;
+    }
+    if rng.f32() < 0.7 {
+        modules.push(UnifiedModule {
+            name: "gap".into(),
+            kind: ModuleKind::Gap,
+            src: prev.clone(),
+            res: None,
+            relu: false,
+        });
+        modules.push(UnifiedModule {
+            name: "fc".into(),
+            kind: ModuleKind::Dense { cin: ch, cout: 5 },
+            src: "gap".into(),
+            res: None,
+            relu: false,
+        });
+    }
+    let graph = Graph { name: "rand".into(), input_hwc: (8, 8, 3), modules };
+    let mut folded = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+            },
+        );
+    }
+    (graph, folded)
+}
+
+fn images(rng: &mut Pcg, n: usize) -> Tensor {
+    Tensor::from_vec(&[n, 8, 8, 3], (0..n * 192).map(|_| rng.normal()).collect())
+}
+
+fn calibrated_spec(
+    graph: &Graph,
+    folded: &HashMap<String, FoldedParams>,
+    rng: &mut Pcg,
+) -> QuantSpec {
+    let session = Session::from_graph(graph.clone(), folded.clone()).unwrap();
+    let cm = session.calibrate(CalibConfig::default(), &images(rng, 1)).unwrap();
+    cm.spec().clone()
+}
+
+/// The pre-refactor interpreter semantics: execute module by module over
+/// a name-keyed activation map (the dynamic `run_module` path, which the
+/// calibrator still uses), retaining everything.
+fn interpret(eng: &IntEngine<'_>, graph: &Graph, x_int: &TensorI32) -> TensorI32 {
+    let mut acts: HashMap<String, TensorI32> = HashMap::new();
+    acts.insert("input".to_string(), x_int.clone());
+    for m in &graph.modules {
+        let out = eng.run_module(m, &acts).unwrap();
+        acts.insert(m.name.clone(), out);
+    }
+    acts.remove(&graph.modules.last().unwrap().name).unwrap()
+}
+
+#[test]
+fn prop_plan_bit_identical_to_interpreter_across_batches_and_threads() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg::new(43000 + seed * 257);
+        let (graph, folded) = random_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+        for &b in &[1usize, 2, 5] {
+            let x = images(&mut rng, b);
+            let serial = IntEngine::new(&graph, &folded, &spec);
+            let want = interpret(&serial, &graph, &serial.quantize_input(&x));
+            for &threads in &[1usize, 2, 4] {
+                let eng =
+                    IntEngine::new(&graph, &folded, &spec).with_threads(threads);
+                let got = eng.run(&x).unwrap();
+                assert_eq!(
+                    want, got,
+                    "seed {seed} batch {b} threads {threads}: plan != interpreter"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cached_plan_with_warm_scratch_is_bit_stable() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(47000 + seed * 131);
+        let (graph, folded) = random_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let plan = eng.plan().unwrap();
+        let mut scratch = Scratch::new();
+        for round in 0..4 {
+            let x = images(&mut rng, 3);
+            let fresh = eng.run(&x).unwrap();
+            let warm = eng.run_plan_scratch(&plan, &x, &mut scratch).unwrap();
+            assert_eq!(fresh, warm, "seed {seed} round {round}");
+        }
+    }
+}
+
+#[test]
+fn prop_fp_plan_bit_identical_to_interpreter() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg::new(51000 + seed * 97);
+        let (graph, folded) = random_model(&mut rng);
+        let eng = FpEngine::new(&graph, &folded);
+        for &b in &[1usize, 3] {
+            let x = images(&mut rng, b);
+            // interpreter path (retain-everything map)
+            let mut acts = eng.run_acts(&x).unwrap();
+            let want = acts.remove(&graph.modules.last().unwrap().name).unwrap();
+            // plan path (slot-reusing executor) — exact f32 bit equality
+            let got = eng.run(&x).unwrap();
+            assert_eq!(want.shape.numel(), got.shape.numel());
+            assert_eq!(want.data, got.data, "seed {seed} batch {b}: fp plan diverged");
+        }
+    }
+}
+
+#[test]
+fn prop_unfused_plan_bit_identical_to_interpreter() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(53000 + seed * 71);
+        let (graph, folded) = random_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+        // arbitrary-but-valid intermediate scales for the ablation
+        let mut pre = HashMap::new();
+        for m in graph.weight_modules() {
+            pre.insert(m.name.clone(), rng.int_range(2, 6) as i32);
+        }
+        let mut eng = IntEngine::new(&graph, &folded, &spec);
+        eng.pre_frac = Some(pre);
+        let x = images(&mut rng, 2);
+        let want = interpret(&eng, &graph, &eng.quantize_input(&x));
+        let got = eng.run(&x).unwrap();
+        assert_eq!(want, got, "seed {seed}: unfused plan != interpreter");
+    }
+}
+
+#[test]
+fn compile_errors_surface_at_compile_not_run() {
+    let mut rng = Pcg::new(59000);
+    let (graph, folded) = random_model(&mut rng);
+    let mut spec = calibrated_spec(&graph, &folded, &mut rng);
+
+    // uncovered module: the spec loses a module -> compile() names it
+    spec.modules.remove("stem");
+    let err = ExecPlan::compile(&graph, &spec, graph.input_hwc).unwrap_err();
+    assert!(err.to_string().contains("stem"), "{err}");
+    let eng = IntEngine::new(&graph, &folded, &spec);
+    assert!(eng.plan().is_err());
+    // run() reports the same compile error without touching a kernel
+    let err = eng.run(&images(&mut rng, 1)).unwrap_err();
+    assert!(err.to_string().contains("stem"), "{err}");
+
+    // dangling residual name -> compile() rejects (graph validation)
+    let mut g2 = graph.clone();
+    g2.modules[1].res = Some("ghost".into());
+    let err = ExecPlan::compile_fp(&g2, g2.input_hwc).unwrap_err();
+    assert!(err.to_string().contains("ghost"), "{err}");
+
+    // non-power-of-two Gap window -> compile() rejects
+    let g3 = Graph {
+        name: "bad".into(),
+        input_hwc: (3, 4, 2),
+        modules: vec![UnifiedModule {
+            name: "gap".into(),
+            kind: ModuleKind::Gap,
+            src: "input".into(),
+            res: None,
+            relu: false,
+        }],
+    };
+    let err = ExecPlan::compile_fp(&g3, g3.input_hwc).unwrap_err();
+    assert!(err.to_string().contains("power-of-two"), "{err}");
+}
+
+#[test]
+fn deploy_engines_share_the_lowering_with_the_direct_engines() {
+    // the session's Fp and Int deploy engines execute cached plans; both
+    // must match the direct engines bit-for-bit (after the deploy
+    // layer's (B, out_dim) flatten + dequant)
+    for seed in 0..4u64 {
+        let mut rng = Pcg::new(61000 + seed * 37);
+        let (graph, folded) = random_model(&mut rng);
+        let session = Session::from_graph(graph.clone(), folded.clone()).unwrap();
+        let cm = session.calibrate(CalibConfig::default(), &images(&mut rng, 1)).unwrap();
+        let x = images(&mut rng, 4);
+
+        let fp_direct = FpEngine::new(&graph, &folded).run(&x).unwrap();
+        let fp_deploy = session.fp_engine().run(&x).unwrap();
+        assert_eq!(fp_direct.data, fp_deploy.data, "seed {seed}: fp deploy diverged");
+
+        let int_direct = IntEngine::new(&graph, &folded, cm.spec()).run(&x).unwrap();
+        let out_frac = cm
+            .spec()
+            .try_value_frac(&graph, &graph.modules.last().unwrap().name)
+            .unwrap();
+        for threads in [1usize, 3] {
+            let int_deploy = cm.engine(EngineKind::Int { threads }).unwrap();
+            let got = int_deploy.run(&x).unwrap();
+            let want: Vec<f32> = int_direct
+                .data
+                .iter()
+                .map(|&v| v as f32 * (0.5f32).powi(out_frac))
+                .collect();
+            assert_eq!(got.data, want, "seed {seed} threads {threads}");
+        }
+    }
+}

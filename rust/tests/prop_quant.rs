@@ -282,14 +282,14 @@ fn prop_fused_never_worse_than_unfused_on_average() {
         }
         let calib = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
         let cal = dfq::quant::joint::JointCalibrator::new(Default::default());
-        let out = cal.calibrate(&graph, &folded, &calib);
-        let fp = FpEngine::new(&graph, &folded).run_acts(&calib);
+        let out = cal.calibrate(&graph, &folded, &calib).unwrap();
+        let fp = FpEngine::new(&graph, &folded).run_acts(&calib).unwrap();
         let eng = IntEngine::new(&graph, &folded, &out.spec);
         let fused = dfq::util::mathutil::mse(
             &eng.run_dequant(&calib).unwrap().data,
             &fp["c1"].data,
         );
-        let pre = cal.ablation_pre_fracs(&graph, &folded, &calib, &out.spec);
+        let pre = cal.ablation_pre_fracs(&graph, &folded, &calib, &out.spec).unwrap();
         let mut eng2 = IntEngine::new(&graph, &folded, &out.spec);
         eng2.pre_frac = Some(pre);
         let unfused = dfq::util::mathutil::mse(
