@@ -1,9 +1,12 @@
-//! Serving demo: the batching inference service running the calibrated
-//! quantized ResNet-S — the deployment story end to end, python nowhere
-//! in sight. The whole wiring is the `Session` pipeline: both the
-//! PJRT-compiled AOT artifact and the pure-rust integer engine come out
-//! of `calibrated.engine(kind)` as the same unified `Engine`, and every
-//! engine is a serving `Backend` via the blanket impl — zero glue.
+//! Serving demo: the multi-model `ModelServer` running two calibrated
+//! quantized ResNets side by side — the deployment story end to end,
+//! python nowhere in sight. The whole wiring is the `Session` pipeline:
+//! every engine out of `calibrated.engine(kind)` registers as a named
+//! endpoint with zero glue, a cloneable `Client` routes requests by
+//! model name, and mid-traffic the demo **re-calibrates** resnet_s to
+//! 4 bits and hot-swaps the endpoint atomically — zero downtime, zero
+//! dropped requests, and every post-swap answer is bit-exact against
+//! the new engine.
 //!
 //! Requires `make artifacts` (and the `pjrt` cargo feature for the
 //! `pjrt` mode). The `int` modes run the data-parallel integer engine:
@@ -12,74 +15,145 @@
 //!
 //!     cargo run --release --example serve_demo [pjrt|int|int:N|int:auto|fp] [n_requests]
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use dfq::coordinator::serve::{InferenceService, ServeConfig};
 use dfq::prelude::*;
 use dfq::util::timer::Timer;
 
 fn main() {
-    let mode = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "int:auto".into());
     let n_req: usize = std::env::args()
         .nth(2)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(64);
+        .unwrap_or(128);
     let kind = EngineKind::parse(&mode).expect("mode must be fp|int|int:N|int:auto|pjrt");
-    let model = "resnet_s";
+    let models = ["resnet_s", "resnet_m"];
 
     let art = Artifacts::open("artifacts").expect("run `make artifacts` first");
-    let session = Session::from_artifacts(&art, model).expect("open session");
     let calib = art.calibration_images(1).unwrap();
-    let calibrated = session
-        .calibrate(CalibConfig::default(), &calib)
-        .expect("joint calibration");
-    println!(
-        "calibrated {model} in {:.2}s; starting {kind} backend",
-        calibrated.seconds
-    );
 
-    // one line from calibrated model to servable backend — works for
-    // the integer engine AND the PJRT runtime identically
-    let t = Timer::start();
-    let engine = calibrated.engine(kind).expect("build engine");
-    if kind == EngineKind::Pjrt {
-        println!("compiled q_logits artifact in {:.2}s", t.secs());
+    // registry: one named endpoint per model, same Session pipeline for
+    // each — session -> calibrate -> engine -> register
+    let server = ModelServer::new(ServeConfig::default());
+    let mut sessions = Vec::new();
+    for model in models {
+        let session = Session::from_artifacts(&art, model).expect("open session");
+        let calibrated = session
+            .calibrate(CalibConfig::default(), &calib)
+            .expect("joint calibration");
+        println!("calibrated {model} in {:.2}s", calibrated.seconds);
+        let t = Timer::start();
+        calibrated
+            .deploy_into(&server, model, kind)
+            .expect("build + register engine");
+        if kind == EngineKind::Pjrt {
+            println!("compiled {model} q_logits artifact in {:.2}s", t.secs());
+        }
+        sessions.push(session);
     }
-    let svc = Arc::new(InferenceService::start(engine, ServeConfig::default()));
+    println!("serving {:?} behind one server, routed by name", server.models());
 
+    // route: interleaved traffic to both models from concurrent clients
     let ds = art.classification_set("synthimagenet_val").unwrap();
+    let swapped = Arc::new(AtomicBool::new(false));
     let t = Timer::start();
     let mut handles = Vec::new();
     for i in 0..n_req {
-        let svc = svc.clone();
+        let client = server.client();
+        let model = models[i % models.len()];
+        let swapped = swapped.clone();
         let (img, label) = {
             let (x, labels) = ds.batch(i % ds.len(), 1);
             (x, labels[0])
         };
         handles.push(std::thread::spawn(move || {
-            let logits = svc.infer(img).unwrap();
+            let after_swap = swapped.load(Ordering::SeqCst);
+            let logits = match client.infer(model, img) {
+                Ok(logits) => logits,
+                // large n_requests can saturate the admission queue:
+                // that is backpressure working, not a demo failure
+                Err(DfqError::Overloaded { .. }) => return (0, model, after_swap, None),
+                Err(e) => panic!("serve failed: {e}"),
+            };
             let mut best = 0usize;
             for (j, v) in logits.iter().enumerate() {
                 if *v > logits[best] {
                     best = j;
                 }
             }
-            (best as i32 == label) as usize
+            ((best as i32 == label) as usize, model, after_swap, Some(logits))
         }));
     }
-    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+    // swap: mid-traffic, re-calibrate resnet_s down to 4 bits and cut
+    // the endpoint over atomically — in-flight batches on the old
+    // engine drain, nothing is dropped
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    let recal = sessions[0]
+        .calibrate(CalibConfig { n_bits: 4, ..Default::default() }, &calib)
+        .expect("re-calibration");
+    let t_swap = Timer::start();
+    let new_engine = recal
+        .deploy_into(&server, "resnet_s", kind)
+        .expect("hot-swap");
+    swapped.store(true, Ordering::SeqCst);
+    println!("hot-swapped resnet_s to a 4-bit spec in {:.1} ms", t_swap.millis());
+
+    let mut correct = 0usize;
+    let mut shed = 0usize;
+    let mut post_swap_checked = 0usize;
+    let mut results = Vec::with_capacity(n_req);
+    for h in handles {
+        results.push(h.join().unwrap());
+    }
+    // snapshot serving time before the (serial) verification re-runs
     let secs = t.secs();
-    let m = svc.metrics();
+    for (i, (ok, model, after_swap, logits)) in results.into_iter().enumerate() {
+        correct += ok;
+        let Some(logits) = logits else {
+            shed += 1;
+            continue;
+        };
+        // every request admitted after the swap returned must be served
+        // by the new engine, bit-exactly
+        if after_swap && model == "resnet_s" {
+            let (x, _) = ds.batch(i % ds.len(), 1);
+            let want = new_engine.run(&x).unwrap();
+            assert_eq!(logits, want.data, "post-swap output is not the new engine's");
+            post_swap_checked += 1;
+        }
+    }
+    let served = n_req - shed;
+    // fast engines can drain every request while the re-calibration is
+    // still running, leaving the mid-traffic check vacuous — so always
+    // verify the cutover with a few dedicated post-swap requests too
+    let client = server.client();
+    for i in 0..4 {
+        let (x, _) = ds.batch(i, 1);
+        let logits = client.infer("resnet_s", x.clone()).unwrap();
+        let want = new_engine.run(&x).unwrap();
+        assert_eq!(logits, want.data, "post-swap output is not the new engine's");
+        post_swap_checked += 1;
+    }
     println!(
-        "served {n_req} requests in {secs:.2}s -> {:.1} req/s, top-1 {:.1}%",
-        n_req as f64 / secs,
-        100.0 * correct as f64 / n_req as f64
+        "served {served} requests in {secs:.2}s -> {:.1} req/s, top-1 {:.1}%, \
+         {shed} shed by admission control, \
+         {post_swap_checked} post-swap responses verified bit-exact vs the 4-bit engine",
+        served as f64 / secs,
+        100.0 * correct as f64 / served.max(1) as f64
     );
-    println!(
-        "batches {}, mean occupancy {:.1}, latency p50 {:.1} ms / p99 {:.1} ms",
-        m.batches,
-        m.mean_occupancy(),
-        m.latency_percentile(50.0) * 1e3,
-        m.latency_percentile(99.0) * 1e3
-    );
+    for (name, m) in server.shutdown() {
+        println!(
+            "  {name}: {} completed / {} rejected, {} swaps, {} batches \
+             (mean occupancy {:.1}), latency p50 {:.1} ms / p99 {:.1} ms",
+            m.completed,
+            m.rejected,
+            m.swaps,
+            m.batches,
+            m.mean_occupancy(),
+            m.latency_percentile(50.0) * 1e3,
+            m.latency_percentile(99.0) * 1e3
+        );
+    }
 }

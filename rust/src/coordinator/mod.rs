@@ -1,9 +1,12 @@
 //! The L3 coordinator: a work-stealing thread pool ([`pool`]), the
 //! parallel calibration orchestrator ([`calib`]) that fans Algorithm-1
 //! candidate branches and whole-model jobs across workers, and the
-//! batching inference service ([`serve`]) that owns the request loop at
-//! deployment time (python is nowhere in this path).
+//! deployment-time serving layer (python is nowhere in this path) —
+//! shared batching primitives in [`serve`] and the multi-model
+//! [`server::ModelServer`] (named routing, atomic hot-swap, admission
+//! control) that owns the request loops.
 
 pub mod calib;
 pub mod pool;
 pub mod serve;
+pub mod server;

@@ -1,24 +1,27 @@
-//! The batching inference service — the deployment request loop. Clients
-//! submit single images over a channel; a collector thread groups them
-//! into batches (up to the backend's batch size, bounded by a wait
-//! budget), runs the backend and fans responses back — including the
-//! error case: one failed batch reports to **every** waiting client.
-//! Latency percentiles are tracked for the serve demo / perf pass.
+//! Shared serving primitives: the [`Backend`] contract, the service
+//! configuration, bounded [`ServeMetrics`], and the batch runner that
+//! assembles pending requests into a padded batch, runs the backend and
+//! fans responses back — including the error case: one failed batch
+//! reports to **every** waiting client.
 //!
-//! Any [`crate::session::Engine`] is a [`Backend`] via a blanket impl,
-//! so `InferenceService::start(calibrated.engine(kind)?, cfg)` is the
-//! whole deployment story. The FP/int engines behind it execute a
+//! The serving surface itself is [`crate::coordinator::server::ModelServer`]
+//! (re-exported through `dfq::session`): a registry of named endpoints
+//! with per-model batch collectors, atomic hot-swap and admission
+//! control. Any [`crate::session::Engine`] is a [`Backend`] via a
+//! blanket impl, so `server.register("name", calibrated.engine(kind)?)`
+//! is the whole deployment story. The FP/int engines behind it execute a
 //! **cached** [`crate::engine::plan::ExecPlan`], so the per-batch path
-//! under this collector does no graph walking — just slot-addressed
+//! under the collectors does no graph walking — just slot-addressed
 //! kernels over recycled arenas, sharded across the persistent
 //! coordinator pool.
 
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::DfqError;
 use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
 
 /// Something that can run a fixed-size batch of normalised images and
 /// return per-image outputs (e.g. logits).
@@ -36,42 +39,115 @@ pub trait Backend: Send + Sync {
     fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError>;
 }
 
-/// Service configuration.
+/// Service configuration, shared by every model endpoint.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// max time to wait for a batch to fill
     pub max_wait: Duration,
+    /// Admission-control bound: the maximum number of requests a model
+    /// endpoint holds **waiting in its channel** before submissions are
+    /// rejected with [`DfqError::Overloaded`] instead of growing the
+    /// queue without bound. The batch the collector has already popped
+    /// (being collected, then executed) is on top of this, so the true
+    /// backlog ceiling is `queue_depth + batch_size` requests. Must be at
+    /// least 1 (validated when a model is registered);
+    /// `dfq serve --queue-depth N` sets it from the CLI.
+    pub queue_depth: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_wait: Duration::from_millis(5) }
+        ServeConfig { max_wait: Duration::from_millis(5), queue_depth: 256 }
     }
 }
 
-struct Request {
-    image: Tensor, // (1, H, W, C)
-    resp: Sender<Result<Vec<f32>, DfqError>>,
-    submitted: Instant,
+/// One queued inference request: a single normalised image and the
+/// channel its output row (or typed error) is fanned back on.
+pub(crate) struct Request {
+    /// `(1, H, W, C)` normalised image
+    pub(crate) image: Tensor,
+    pub(crate) resp: Sender<Result<Vec<f32>, DfqError>>,
+    pub(crate) submitted: Instant,
 }
 
-/// Latency/throughput counters.
+/// How many latency samples a [`ServeMetrics`] retains. Beyond this the
+/// recorder switches to uniform reservoir sampling, so a long-running
+/// server's memory stays flat while percentiles remain unbiased
+/// estimates over the whole run.
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// Bounded uniform reservoir of latency samples (Vitter's Algorithm R
+/// with a deterministic [`Pcg`] stream): every recorded latency has
+/// equal probability of being in the reservoir, and memory is capped at
+/// [`LATENCY_RESERVOIR_CAP`] samples no matter how long the server runs.
+#[derive(Clone, Debug)]
+pub struct LatencyReservoir {
+    samples: Vec<f64>,
+    seen: usize,
+    rng: Pcg,
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        LatencyReservoir {
+            samples: Vec::new(),
+            seen: 0,
+            rng: Pcg::new(0x1a7e_9c1e),
+        }
+    }
+}
+
+impl LatencyReservoir {
+    /// Record one latency (seconds).
+    pub fn record(&mut self, secs: f64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR_CAP {
+            self.samples.push(secs);
+        } else {
+            let j = (self.rng.next_u64() % self.seen as u64) as usize;
+            if j < LATENCY_RESERVOIR_CAP {
+                self.samples[j] = secs;
+            }
+        }
+    }
+
+    /// Total latencies ever recorded (not just the retained sample).
+    pub fn count(&self) -> usize {
+        self.seen
+    }
+
+    /// p-th percentile (0..=100) over the retained sample, in seconds
+    /// (`NaN` when nothing was recorded). The copy handed to
+    /// [`crate::util::timer::Stats`] is at most
+    /// [`LATENCY_RESERVOIR_CAP`] values — O(1) memory and work
+    /// regardless of server uptime (the unbounded `latencies.clone()`
+    /// this replaces grew with every request).
+    pub fn percentile(&self, p: f64) -> f64 {
+        crate::util::timer::Stats::from(self.samples.clone()).percentile(p)
+    }
+}
+
+/// Latency/throughput counters for one model endpoint.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     /// completed requests
     pub completed: usize,
     /// executed batches
     pub batches: usize,
-    /// per-request latencies (seconds)
-    pub latencies: Vec<f64>,
+    /// requests rejected by admission control ([`DfqError::Overloaded`])
+    pub rejected: usize,
+    /// hot-swaps performed on this endpoint
+    pub swaps: usize,
     /// batch occupancy sum (for mean occupancy)
     pub occupancy_sum: usize,
+    /// bounded per-request latency reservoir (seconds)
+    pub latency: LatencyReservoir,
 }
 
 impl ServeMetrics {
-    /// p-th latency percentile in seconds.
+    /// p-th latency percentile in seconds (over the bounded reservoir).
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        crate::util::timer::Stats::from(self.latencies.clone()).percentile(p)
+        self.latency.percentile(p)
     }
 
     /// Mean batch occupancy.
@@ -80,98 +156,12 @@ impl ServeMetrics {
     }
 }
 
-/// Handle to a running service.
-pub struct InferenceService {
-    tx: Option<Sender<Request>>,
-    worker: Option<std::thread::JoinHandle<()>>,
-    metrics: Arc<Mutex<ServeMetrics>>,
-}
-
-impl InferenceService {
-    /// Start the collector thread over a backend. Accepts any
-    /// `Arc<impl Backend>` — including `Arc<dyn Engine>` handles from
-    /// [`crate::session::CalibratedModel::engine`], which are backends
-    /// through the blanket impl.
-    pub fn start<B>(backend: Arc<B>, cfg: ServeConfig) -> InferenceService
-    where
-        B: Backend + ?Sized + 'static,
-    {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || collector(rx, backend, cfg, m2));
-        InferenceService { tx: Some(tx), worker: Some(worker), metrics }
-    }
-
-    /// Submit one image (`(1, H, W, C)` normalised) and wait for its
-    /// output row.
-    pub fn infer(&self, image: Tensor) -> Result<Vec<f32>, DfqError> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("service running")
-            .send(Request { image, resp: rtx, submitted: Instant::now() })
-            .map_err(|_| DfqError::serve("service stopped"))?;
-        rrx.recv()
-            .map_err(|_| DfqError::serve("service dropped request"))?
-    }
-
-    /// Snapshot the metrics.
-    pub fn metrics(&self) -> ServeMetrics {
-        self.metrics.lock().unwrap().clone()
-    }
-
-    /// Stop and join.
-    pub fn shutdown(mut self) -> ServeMetrics {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            w.join().ok();
-        }
-        let m = self.metrics.lock().unwrap().clone();
-        m
-    }
-}
-
-impl Drop for InferenceService {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            w.join().ok();
-        }
-    }
-}
-
-fn collector<B: Backend + ?Sized>(
-    rx: Receiver<Request>,
-    backend: Arc<B>,
-    cfg: ServeConfig,
-    metrics: Arc<Mutex<ServeMetrics>>,
-) {
-    let bsz = backend.batch_size().max(1);
-    loop {
-        // block for the first request of a batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        while pending.len() < bsz {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        run_batch(&pending, &*backend, bsz, &metrics);
-    }
-}
-
-fn run_batch<B: Backend + ?Sized>(
+/// Assemble `pending` into a zero-padded batch of `bsz` rows, run the
+/// backend and fan each output row (or the shared typed error) back to
+/// its waiter. Shared by every [`ModelServer`] endpoint collector.
+///
+/// [`ModelServer`]: crate::coordinator::server::ModelServer
+pub(crate) fn run_batch<B: Backend + ?Sized>(
     pending: &[Request],
     backend: &B,
     bsz: usize,
@@ -212,7 +202,11 @@ fn run_batch<B: Backend + ?Sized>(
     }
     // when a lead exists it is itself in `rows`, so `rows` is non-empty
     let Some(lead) = lead else { return };
-    // assemble, padding the tail with zeros
+    // assemble, padding the tail with zeros. The collector chunks its
+    // pending requests to the backend's current batch size, so
+    // `rows.len() <= bsz` there; the max() keeps a future caller that
+    // breaks that contract from panicking in the copy below
+    let bsz = bsz.max(rows.len());
     let per = lead[1] * lead[2] * lead[3];
     let mut data = vec![0.0f32; bsz * per];
     for (i, r) in rows.iter().enumerate() {
@@ -228,7 +222,7 @@ fn run_batch<B: Backend + ?Sized>(
             for (i, r) in rows.iter().enumerate() {
                 let row = out.data[i * odim..(i + 1) * odim].to_vec();
                 m.completed += 1;
-                m.latencies.push(r.submitted.elapsed().as_secs_f64());
+                m.latency.record(r.submitted.elapsed().as_secs_f64());
                 r.resp.send(Ok(row)).ok();
             }
         }
@@ -245,266 +239,50 @@ fn run_batch<B: Backend + ?Sized>(
 mod tests {
     use super::*;
 
-    /// A backend that sums each image's pixels.
-    struct SumBackend {
-        batch: usize,
-    }
-
-    impl Backend for SumBackend {
-        fn batch_size(&self) -> usize {
-            self.batch
-        }
-
-        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
-            let b = batch.shape.dim(0);
-            let per = batch.numel() / b;
-            let mut out = Vec::with_capacity(b);
-            for i in 0..b {
-                out.push(batch.data[i * per..(i + 1) * per].iter().sum::<f32>());
-            }
-            Ok(Tensor::from_vec(&[b, 1], out))
-        }
-    }
-
-    fn img(v: f32) -> Tensor {
-        Tensor::from_vec(&[1, 2, 2, 1], vec![v; 4])
+    #[test]
+    fn default_config_has_bounded_queue() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.queue_depth > 0);
+        assert!(cfg.max_wait > Duration::ZERO);
     }
 
     #[test]
-    fn single_request_roundtrip() {
-        let svc = InferenceService::start(
-            Arc::new(SumBackend { batch: 4 }),
-            ServeConfig { max_wait: Duration::from_millis(1) },
-        );
-        let out = svc.infer(img(1.5)).unwrap();
-        assert_eq!(out, vec![6.0]);
-        let m = svc.shutdown();
-        assert_eq!(m.completed, 1);
-        assert_eq!(m.batches, 1);
+    fn reservoir_stays_bounded_and_counts_everything() {
+        let mut r = LatencyReservoir::default();
+        for i in 0..(LATENCY_RESERVOIR_CAP * 4) {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), LATENCY_RESERVOIR_CAP * 4);
+        assert_eq!(r.samples.len(), LATENCY_RESERVOIR_CAP);
     }
 
     #[test]
-    fn concurrent_requests_batched() {
-        let svc = Arc::new(InferenceService::start(
-            Arc::new(SumBackend { batch: 8 }),
-            ServeConfig { max_wait: Duration::from_millis(30) },
-        ));
-        let mut handles = Vec::new();
-        for i in 0..8 {
-            let s = svc.clone();
-            handles.push(std::thread::spawn(move || {
-                s.infer(img(i as f32)).unwrap()[0]
-            }));
+    fn reservoir_percentile_interpolates_below_cap() {
+        let mut r = LatencyReservoir::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.record(v);
         }
-        let outs: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-        for (i, o) in outs.iter().enumerate() {
-            assert_eq!(*o, 4.0 * i as f32);
-        }
-        let m = svc.metrics();
-        assert_eq!(m.completed, 8);
-        // batching happened: fewer batches than requests
-        assert!(m.batches < 8, "batches {}", m.batches);
-        assert!(m.mean_occupancy() > 1.0);
+        assert!((r.percentile(50.0) - 2.5).abs() < 1e-12);
+        assert!((r.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((r.percentile(100.0) - 4.0).abs() < 1e-12);
     }
 
     #[test]
-    fn shutdown_drains_cleanly() {
-        let svc = InferenceService::start(
-            Arc::new(SumBackend { batch: 2 }),
-            ServeConfig::default(),
-        );
-        svc.infer(img(1.0)).unwrap();
-        let m = svc.shutdown();
-        assert_eq!(m.completed, 1);
-    }
-
-    /// A backend that records the raw batches it receives (to observe
-    /// padding) while summing rows like [`SumBackend`].
-    struct PadProbe {
-        batch: usize,
-        seen_rows: Arc<Mutex<Vec<usize>>>,
-        seen_tail: Arc<Mutex<Vec<f32>>>,
-    }
-
-    impl Backend for PadProbe {
-        fn batch_size(&self) -> usize {
-            self.batch
+    fn reservoir_percentile_tracks_distribution_past_cap() {
+        // feed a uniform ramp several times the cap: the sampled median
+        // must stay near the true median (the reservoir is unbiased)
+        let n = LATENCY_RESERVOIR_CAP * 8;
+        let mut r = LatencyReservoir::default();
+        for i in 0..n {
+            r.record(i as f64 / n as f64);
         }
-
-        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
-            let b = batch.shape.dim(0);
-            let per = batch.numel() / b;
-            self.seen_rows.lock().unwrap().push(b);
-            self.seen_tail
-                .lock()
-                .unwrap()
-                .extend_from_slice(&batch.data[(b - 1) * per..]);
-            let mut out = Vec::with_capacity(b);
-            for i in 0..b {
-                out.push(batch.data[i * per..(i + 1) * per].iter().sum::<f32>());
-            }
-            Ok(Tensor::from_vec(&[b, 1], out))
-        }
+        let med = r.percentile(50.0);
+        assert!((med - 0.5).abs() < 0.05, "median drifted: {med}");
     }
 
     #[test]
-    fn partial_batch_padded_to_batch_size_with_zeros() {
-        let rows = Arc::new(Mutex::new(Vec::new()));
-        let tail = Arc::new(Mutex::new(Vec::new()));
-        let svc = InferenceService::start(
-            Arc::new(PadProbe {
-                batch: 4,
-                seen_rows: rows.clone(),
-                seen_tail: tail.clone(),
-            }),
-            ServeConfig { max_wait: Duration::from_millis(1) },
-        );
-        // one request only: the backend must still see a full batch
-        let out = svc.infer(img(2.0)).unwrap();
-        assert_eq!(out, vec![8.0]);
-        svc.shutdown();
-        assert_eq!(rows.lock().unwrap().as_slice(), &[4]);
-        // the padded tail rows are zero-filled
-        assert!(tail.lock().unwrap().iter().all(|v| *v == 0.0));
-    }
-
-    #[test]
-    fn max_wait_flushes_partial_batch() {
-        // batch 8 can never fill from 3 requests; the wait budget must
-        // flush them anyway
-        let svc = Arc::new(InferenceService::start(
-            Arc::new(SumBackend { batch: 8 }),
-            ServeConfig { max_wait: Duration::from_millis(10) },
-        ));
-        let mut handles = Vec::new();
-        for i in 0..3 {
-            let s = svc.clone();
-            handles.push(std::thread::spawn(move || {
-                s.infer(img(i as f32)).unwrap()[0]
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        let m = svc.metrics();
-        assert_eq!(m.completed, 3);
-        assert!(m.batches >= 1);
-        assert!(m.mean_occupancy() <= 3.0);
-    }
-
-    #[test]
-    fn malformed_request_fails_typed_and_service_survives() {
-        // regression: a wrong-rank or wrong-shape image used to panic the
-        // collector thread during batch assembly, stranding every later
-        // request with "service stopped"
-        let svc = InferenceService::start(
-            Arc::new(SumBackend { batch: 4 }),
-            ServeConfig { max_wait: Duration::from_millis(1) },
-        );
-        let bad_rank = Tensor::from_vec(&[2, 2], vec![1.0; 4]);
-        let err = svc.infer(bad_rank).unwrap_err();
-        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
-        let other_shape = Tensor::from_vec(&[1, 4, 4, 1], vec![1.0; 16]);
-        // a batch leader defines the shape; alone in its batch this one
-        // is simply served (16 pixels of 1.0)
-        let out = svc.infer(other_shape).unwrap();
-        assert_eq!(out, vec![16.0]);
-        // the collector is still alive and serving well-formed requests
-        let out = svc.infer(img(2.0)).unwrap();
-        assert_eq!(out, vec![8.0]);
-        let m = svc.shutdown();
-        assert_eq!(m.completed, 2);
-    }
-
-    /// [`SumBackend`] that also declares its expected image shape.
-    struct StrictSumBackend;
-
-    impl Backend for StrictSumBackend {
-        fn batch_size(&self) -> usize {
-            4
-        }
-
-        fn input_hwc(&self) -> Option<(usize, usize, usize)> {
-            Some((2, 2, 1))
-        }
-
-        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
-            SumBackend { batch: 4 }.run_batch(batch)
-        }
-    }
-
-    #[test]
-    fn declared_input_shape_rejects_wrong_shape_leader_individually() {
-        // a rank-4 single-image request of the WRONG model shape must
-        // neither lead a batch nor be served — and a concurrent valid
-        // request in the same window must still come back correct
-        let svc = Arc::new(InferenceService::start(
-            Arc::new(StrictSumBackend),
-            ServeConfig { max_wait: Duration::from_millis(60) },
-        ));
-        let s = svc.clone();
-        let bad = std::thread::spawn(move || {
-            s.infer(Tensor::from_vec(&[1, 4, 4, 1], vec![1.0; 16]))
-        });
-        std::thread::sleep(Duration::from_millis(10));
-        let s = svc.clone();
-        let good = std::thread::spawn(move || s.infer(img(5.0)));
-        let err = bad.join().unwrap().unwrap_err();
-        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
-        assert_eq!(good.join().unwrap().unwrap(), vec![20.0]);
-    }
-
-    #[test]
-    fn malformed_batch_leader_does_not_poison_valid_requests() {
-        // the bad request arrives first; the valid one sharing its batch
-        // window must still be served (the leader is the first
-        // WELL-FORMED request, not pending[0])
-        let svc = Arc::new(InferenceService::start(
-            Arc::new(SumBackend { batch: 8 }),
-            ServeConfig { max_wait: Duration::from_millis(60) },
-        ));
-        let s = svc.clone();
-        let bad = std::thread::spawn(move || {
-            s.infer(Tensor::from_vec(&[2, 2], vec![1.0; 4]))
-        });
-        std::thread::sleep(Duration::from_millis(10));
-        let s = svc.clone();
-        let good = std::thread::spawn(move || s.infer(img(3.0)));
-        let err = bad.join().unwrap().unwrap_err();
-        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
-        assert_eq!(good.join().unwrap().unwrap(), vec![12.0]);
-    }
-
-    /// A backend whose every batch fails.
-    struct FailBackend;
-
-    impl Backend for FailBackend {
-        fn batch_size(&self) -> usize {
-            4
-        }
-
-        fn run_batch(&self, _batch: &Tensor) -> Result<Tensor, DfqError> {
-            Err(DfqError::runtime("boom"))
-        }
-    }
-
-    #[test]
-    fn backend_error_fans_out_to_all_waiters() {
-        let svc = Arc::new(InferenceService::start(
-            Arc::new(FailBackend),
-            ServeConfig { max_wait: Duration::from_millis(20) },
-        ));
-        let mut handles = Vec::new();
-        for i in 0..4 {
-            let s = svc.clone();
-            handles.push(std::thread::spawn(move || s.infer(img(i as f32))));
-        }
-        for h in handles {
-            let err = h.join().unwrap().unwrap_err();
-            assert!(matches!(err, DfqError::Runtime(_)), "{err}");
-            assert!(err.to_string().contains("boom"));
-        }
-        let m = svc.metrics();
-        assert_eq!(m.completed, 0, "failed requests must not count as completed");
+    fn empty_reservoir_percentile_is_nan() {
+        assert!(LatencyReservoir::default().percentile(50.0).is_nan());
+        assert!(ServeMetrics::default().latency_percentile(99.0).is_nan());
     }
 }

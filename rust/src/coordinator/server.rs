@@ -1,0 +1,1000 @@
+//! [`ModelServer`] — the multi-model serving surface: a registry of
+//! **named endpoints**, each with its own batch collector thread,
+//! bounded admission queue and hot-swappable backend.
+//!
+//! ```text
+//!                        ┌────────────────────────────────────────┐
+//! Client::infer(name, x) │ ModelServer                            │
+//!   ──route by name────> │  "resnet_s" ─ queue ─ collector ─ A ───┼─> rows
+//!                        │  "resnet_m" ─ queue ─ collector ─ B ───┼─> rows
+//!                        └────────────▲───────────────────────────┘
+//!                                swap("resnet_s", A')   (atomic, drains A)
+//! ```
+//!
+//! * **Routing** — [`ModelServer::register`] binds a name to any
+//!   [`Backend`] (every [`crate::session::Engine`] qualifies via the
+//!   blanket impl); [`Client::infer`] routes a request to the endpoint
+//!   by name, and [`ModelHandle`] pins one endpoint for lookup-free
+//!   submission on a hot path.
+//! * **Atomic hot-swap** — [`ModelServer::swap`] installs a new backend
+//!   and then waits for the batch in flight on the old one to retire:
+//!   no request is dropped, every request submitted after `swap`
+//!   returns executes on the new backend, and the returned old backend
+//!   can be torn down safely. [`crate::session::CalibratedModel::deploy_into`]
+//!   builds on this for zero-downtime re-calibration.
+//! * **Admission control** — each endpoint holds at most
+//!   [`ServeConfig::queue_depth`] waiting requests (the batch being
+//!   collected or executed is on top); the excess is rejected with
+//!   [`DfqError::Overloaded`] instead of growing an unbounded channel
+//!   until memory runs out.
+//! * **Graceful shutdown** — [`ModelServer::shutdown`] stops admission,
+//!   lets every collector drain its queue, joins the threads and
+//!   reports per-model [`ServeMetrics`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::error::DfqError;
+use crate::tensor::Tensor;
+
+use super::serve::{run_batch, Backend, Request, ServeConfig, ServeMetrics};
+
+/// Adapter so `Arc<B>` for any `B: Backend + ?Sized` (notably
+/// `Arc<dyn Engine>` handles from [`crate::session::CalibratedModel::engine`])
+/// can live in the registry as one `Arc<dyn Backend>`.
+struct SharedBackend<B: ?Sized>(Arc<B>);
+
+impl<B: Backend + ?Sized> Backend for SharedBackend<B> {
+    fn batch_size(&self) -> usize {
+        self.0.batch_size()
+    }
+
+    fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+        self.0.input_hwc()
+    }
+
+    fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+        self.0.run_batch(batch)
+    }
+}
+
+fn erase<B: Backend + ?Sized + 'static>(backend: Arc<B>) -> Arc<dyn Backend> {
+    Arc::new(SharedBackend(backend))
+}
+
+/// The state a collector thread shares with submitters and `swap`.
+struct EndpointShared {
+    name: String,
+    /// requests sitting in the channel (admission-controlled); the
+    /// collector decrements as it pops requests into a batch
+    queued: AtomicUsize,
+    /// the current backend; `swap` replaces it atomically and new
+    /// batches pick it up before executing
+    backend: RwLock<Arc<dyn Backend>>,
+    /// held by the collector for the duration of one batch execution;
+    /// `swap` acquires it after installing the new backend to *drain*
+    /// the batch still running on the old one
+    run_gate: Mutex<()>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+}
+
+/// One named model endpoint: its shared state, submit channel and
+/// collector thread.
+struct Endpoint {
+    shared: Arc<EndpointShared>,
+    /// `None` once shutdown stopped admission. An `RwLock` so
+    /// submitters share it (`Sender` is `Sync`; the admission counter
+    /// does the bounding) while shutdown's exclusive take still
+    /// serializes against every in-flight submit.
+    tx: RwLock<Option<Sender<Request>>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    queue_depth: usize,
+}
+
+impl Endpoint {
+    /// Admission-controlled submit: reject with
+    /// [`DfqError::Overloaded`] when the queue is full, otherwise
+    /// enqueue and wait for the output row.
+    fn infer(&self, image: Tensor) -> Result<Vec<f32>, DfqError> {
+        let shared = &self.shared;
+        let (rtx, rrx) = mpsc::channel();
+        {
+            // admission and enqueue happen under a shared read lock on
+            // the sender (concurrent submitters don't serialize — the
+            // atomic counter does the bounding); shutdown takes the
+            // write lock, so it can never observe a counted request
+            // whose send is still in flight
+            let guard = self.tx.read().unwrap();
+            let Some(tx) = guard.as_ref() else {
+                return Err(DfqError::serve(format!(
+                    "model '{}' has been shut down",
+                    shared.name
+                )));
+            };
+            let prev = shared.queued.fetch_add(1, Ordering::SeqCst);
+            if prev >= self.queue_depth {
+                shared.queued.fetch_sub(1, Ordering::SeqCst);
+                drop(guard);
+                shared.metrics.lock().unwrap().rejected += 1;
+                return Err(DfqError::overloaded(shared.name.as_str(), self.queue_depth));
+            }
+            if tx
+                .send(Request { image, resp: rtx, submitted: Instant::now() })
+                .is_err()
+            {
+                shared.queued.fetch_sub(1, Ordering::SeqCst);
+                return Err(DfqError::serve(format!(
+                    "model '{}' has been shut down",
+                    shared.name
+                )));
+            }
+        }
+        rrx.recv().map_err(|_| {
+            DfqError::serve(format!("model '{}' dropped the request", shared.name))
+        })?
+    }
+
+    /// Stop admission, drain the queue and join the collector.
+    fn stop(&self) -> ServeMetrics {
+        drop(self.tx.write().unwrap().take());
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            w.join().ok();
+        }
+        self.shared.metrics.lock().unwrap().clone()
+    }
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    models: RwLock<HashMap<String, Arc<Endpoint>>>,
+    /// set once shutdown drained the registry, so a retained [`Client`]
+    /// reports the real lifecycle state instead of "no model registered"
+    stopped: AtomicBool,
+}
+
+impl Inner {
+    fn endpoint(&self, model: &str) -> Result<Arc<Endpoint>, DfqError> {
+        let models = self.models.read().unwrap();
+        if let Some(ep) = models.get(model) {
+            return Ok(ep.clone());
+        }
+        if self.stopped.load(Ordering::SeqCst) {
+            return Err(DfqError::serve(format!(
+                "model '{model}': the server has been shut down"
+            )));
+        }
+        let mut known: Vec<&str> = models.keys().map(|s| s.as_str()).collect();
+        known.sort_unstable();
+        Err(DfqError::serve(format!(
+            "no model '{model}' registered (registered: [{}])",
+            known.join(", ")
+        )))
+    }
+}
+
+/// The multi-model serving surface. See the [module docs](self) for the
+/// architecture; the short version:
+///
+/// ```no_run
+/// # use std::sync::Arc;
+/// # use dfq::prelude::*;
+/// # use dfq::coordinator::serve::ServeConfig;
+/// # fn demo(a: Arc<dyn Engine>, a2: Arc<dyn Engine>, b: Arc<dyn Engine>,
+/// #         img: Tensor) -> Result<(), DfqError> {
+/// let server = ModelServer::new(ServeConfig::default());
+/// server.register("resnet_s", a)?;
+/// server.register("resnet_m", b)?;
+/// let client = server.client();
+/// let row = client.infer("resnet_s", img)?;   // routed by name
+/// server.swap("resnet_s", a2)?;               // atomic, zero downtime
+/// for (name, m) in server.shutdown() {
+///     println!("{name}: {} completed", m.completed);
+/// }
+/// # Ok(())
+/// # }
+/// ```
+pub struct ModelServer {
+    inner: Arc<Inner>,
+}
+
+impl ModelServer {
+    /// Create an empty server; `cfg` applies to every endpoint
+    /// registered into it.
+    pub fn new(cfg: ServeConfig) -> ModelServer {
+        ModelServer {
+            inner: Arc::new(Inner {
+                cfg,
+                models: RwLock::new(HashMap::new()),
+                stopped: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// A zero queue depth would reject every request before it could
+    /// ever reach the collector — a misconfiguration, caught where
+    /// endpoints are created.
+    fn check_cfg(&self) -> Result<(), DfqError> {
+        if self.inner.cfg.queue_depth == 0 {
+            return Err(DfqError::invalid(
+                "ServeConfig::queue_depth must be at least 1",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Register a new named endpoint over `backend` and start its batch
+    /// collector. Errors if `name` is already registered — use
+    /// [`ModelServer::swap`] (or [`ModelServer::deploy`]) to replace a
+    /// live model.
+    pub fn register<B>(&self, name: &str, backend: Arc<B>) -> Result<(), DfqError>
+    where
+        B: Backend + ?Sized + 'static,
+    {
+        self.check_cfg()?;
+        let mut models = self.inner.models.write().unwrap();
+        if models.contains_key(name) {
+            return Err(DfqError::invalid(format!(
+                "model '{name}' is already registered (use swap to replace it)"
+            )));
+        }
+        models.insert(name.to_string(), start_endpoint(name, erase(backend), self.inner.cfg));
+        Ok(())
+    }
+
+    /// Atomically replace `name`'s backend: new traffic cuts over to
+    /// `backend` immediately, the batch in flight on the old backend is
+    /// drained before this returns, and **no queued request is
+    /// dropped** (queued requests simply execute on the new backend).
+    /// Returns the old backend, now guaranteed idle.
+    pub fn swap<B>(&self, name: &str, backend: Arc<B>) -> Result<Arc<dyn Backend>, DfqError>
+    where
+        B: Backend + ?Sized + 'static,
+    {
+        self.swap_erased(name, erase(backend))
+    }
+
+    fn swap_erased(
+        &self,
+        name: &str,
+        backend: Arc<dyn Backend>,
+    ) -> Result<Arc<dyn Backend>, DfqError> {
+        let ep = self.inner.endpoint(name)?;
+        let old = {
+            let mut slot = ep.shared.backend.write().unwrap();
+            std::mem::replace(&mut *slot, backend)
+        };
+        // drain: once we can take the run gate, the batch that may still
+        // have been executing on the old backend has retired, and every
+        // later batch re-reads the slot — i.e. runs the new backend.
+        // The gate guards no data, so a poisoned lock (a collector that
+        // somehow died mid-batch) must not fail the swap that repairs
+        // the endpoint.
+        drop(ep.shared.run_gate.lock().unwrap_or_else(|e| e.into_inner()));
+        ep.shared.metrics.lock().unwrap().swaps += 1;
+        Ok(old)
+    }
+
+    /// Register-or-swap: deploy `backend` under `name`, hot-swapping if
+    /// the name is live (the [`CalibratedModel::deploy_into`] path).
+    ///
+    /// [`CalibratedModel::deploy_into`]: crate::session::CalibratedModel::deploy_into
+    pub fn deploy<B>(&self, name: &str, backend: Arc<B>) -> Result<(), DfqError>
+    where
+        B: Backend + ?Sized + 'static,
+    {
+        self.check_cfg()?;
+        let backend = erase(backend);
+        {
+            // decide-and-register under one write lock so two concurrent
+            // deploys of a fresh name can't both pick the register path
+            let mut models = self.inner.models.write().unwrap();
+            if !models.contains_key(name) {
+                models.insert(
+                    name.to_string(),
+                    start_endpoint(name, backend, self.inner.cfg),
+                );
+                return Ok(());
+            }
+        }
+        self.swap_erased(name, backend)?;
+        Ok(())
+    }
+
+    /// A cheap, cloneable routing handle for submitter threads.
+    pub fn client(&self) -> Client {
+        Client { inner: self.inner.clone() }
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.inner.models.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Snapshot one model's metrics.
+    pub fn metrics(&self, name: &str) -> Result<ServeMetrics, DfqError> {
+        let ep = self.inner.endpoint(name)?;
+        let m = ep.shared.metrics.lock().unwrap().clone();
+        Ok(m)
+    }
+
+    /// Requests currently waiting in `name`'s admission queue — an
+    /// instantaneous gauge for load monitoring; admission rejects when
+    /// it reaches [`ServeConfig::queue_depth`]. Requests the collector
+    /// has already popped into its current batch (at most one batch's
+    /// worth, collecting or executing) are no longer counted here.
+    pub fn queue_len(&self, name: &str) -> Result<usize, DfqError> {
+        Ok(self.inner.endpoint(name)?.shared.queued.load(Ordering::SeqCst))
+    }
+
+    /// Graceful shutdown: stop admission on every endpoint, let each
+    /// collector drain its remaining queue, join the threads and report
+    /// per-model metrics (sorted by name).
+    pub fn shutdown(self) -> Vec<(String, ServeMetrics)> {
+        self.inner.stopped.store(true, Ordering::SeqCst);
+        let endpoints: Vec<(String, Arc<Endpoint>)> = {
+            let mut models = self.inner.models.write().unwrap();
+            models.drain().collect()
+        };
+        let mut out: Vec<(String, ServeMetrics)> = endpoints
+            .into_iter()
+            .map(|(name, ep)| {
+                let m = ep.stop();
+                (name, m)
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        self.inner.stopped.store(true, Ordering::SeqCst);
+        let endpoints: Vec<Arc<Endpoint>> = {
+            let mut models = self.inner.models.write().unwrap();
+            models.drain().map(|(_, ep)| ep).collect()
+        };
+        for ep in endpoints {
+            ep.stop();
+        }
+    }
+}
+
+/// A cloneable handle that routes requests to a [`ModelServer`]'s
+/// endpoints by model name. Obtained from [`ModelServer::client`];
+/// remains valid (returning typed errors) after the server shuts down.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<Inner>,
+}
+
+impl Client {
+    /// Submit one `(1, H, W, C)` normalised image to the named model
+    /// and wait for its output row. Typed failures: unknown model,
+    /// [`DfqError::Overloaded`] when its queue is full, or the
+    /// backend's own error.
+    pub fn infer(&self, model: &str, image: Tensor) -> Result<Vec<f32>, DfqError> {
+        self.inner.endpoint(model)?.infer(image)
+    }
+
+    /// Pin one model's endpoint for lookup-free submission. The handle
+    /// follows hot-swaps (the endpoint is replaced in place) and errors
+    /// typed-ly once the server shuts down.
+    pub fn handle(&self, model: &str) -> Result<ModelHandle, DfqError> {
+        Ok(ModelHandle { endpoint: self.inner.endpoint(model)? })
+    }
+}
+
+/// A handle pinned to one registered model — same submission contract
+/// as [`Client::infer`] without the per-request name lookup.
+pub struct ModelHandle {
+    endpoint: Arc<Endpoint>,
+}
+
+impl ModelHandle {
+    /// Submit one image to the pinned model and wait for its row.
+    pub fn infer(&self, image: Tensor) -> Result<Vec<f32>, DfqError> {
+        self.endpoint.infer(image)
+    }
+}
+
+/// Spawn one endpoint: channel, shared state and collector thread.
+fn start_endpoint(name: &str, backend: Arc<dyn Backend>, cfg: ServeConfig) -> Arc<Endpoint> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let shared = Arc::new(EndpointShared {
+        name: name.to_string(),
+        queued: AtomicUsize::new(0),
+        backend: RwLock::new(backend),
+        run_gate: Mutex::new(()),
+        metrics: Arc::new(Mutex::new(ServeMetrics::default())),
+    });
+    let s2 = shared.clone();
+    let worker = std::thread::spawn(move || collector(rx, s2, cfg));
+    Arc::new(Endpoint {
+        shared,
+        tx: RwLock::new(Some(tx)),
+        worker: Mutex::new(Some(worker)),
+        // validated >= 1 by ModelServer::{register,deploy}
+        queue_depth: cfg.queue_depth,
+    })
+}
+
+/// Per-endpoint collector loop: batch up to the current backend's batch
+/// size (bounded by the wait budget), then execute under the run gate —
+/// re-reading the backend slot so a swap that landed during collection
+/// takes effect before the batch runs.
+fn collector(rx: Receiver<Request>, shared: Arc<EndpointShared>, cfg: ServeConfig) {
+    loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // admission stopped and the queue is drained
+        };
+        shared.queued.fetch_sub(1, Ordering::SeqCst);
+        let bsz = shared.backend.read().unwrap().batch_size().max(1);
+        let mut pending = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < bsz {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => {
+                    shared.queued.fetch_sub(1, Ordering::SeqCst);
+                    pending.push(r);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // the gate makes the (re-read backend, run batch) pair atomic
+        // with respect to swap's drain: swap installs the new backend
+        // first, so once it holds this gate no later batch can see the
+        // old one
+        let gate = shared.run_gate.lock().unwrap_or_else(|e| e.into_inner());
+        let backend = shared.backend.read().unwrap().clone();
+        // a swap during collection may have changed the batch size; the
+        // backend contract is per-call, so chunk to its current size
+        let bsz = backend.batch_size().max(1);
+        for chunk in pending.chunks(bsz) {
+            // a panicking backend must not kill the collector (stranding
+            // every queued request) or poison the run gate (which would
+            // panic the swap that tries to replace the broken model):
+            // catch it and answer the chunk with a typed error instead.
+            // For any request run_batch already answered, its real reply
+            // is ordered first in the response channel and the waiter
+            // takes only that first message — the duplicate send below
+            // is ignored (or fails once the waiter hung up).
+            let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_batch(chunk, &*backend, bsz, &shared.metrics);
+            }));
+            if ran.is_err() {
+                for r in chunk {
+                    r.resp
+                        .send(Err(DfqError::serve(format!(
+                            "model '{}': backend panicked while executing a batch",
+                            shared.name
+                        ))))
+                        .ok();
+                }
+            }
+        }
+        drop(gate);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// A backend that sums each image's pixels (scaled by `k` so two
+    /// instances are distinguishable bit-exactly).
+    struct SumBackend {
+        batch: usize,
+        k: f32,
+    }
+
+    impl SumBackend {
+        fn plain(batch: usize) -> SumBackend {
+            SumBackend { batch, k: 1.0 }
+        }
+    }
+
+    impl Backend for SumBackend {
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            let b = batch.shape.dim(0);
+            let per = batch.numel() / b;
+            let mut out = Vec::with_capacity(b);
+            for i in 0..b {
+                out.push(
+                    self.k * batch.data[i * per..(i + 1) * per].iter().sum::<f32>(),
+                );
+            }
+            Ok(Tensor::from_vec(&[b, 1], out))
+        }
+    }
+
+    fn img(v: f32) -> Tensor {
+        Tensor::from_vec(&[1, 2, 2, 1], vec![v; 4])
+    }
+
+    fn cfg_ms(ms: u64) -> ServeConfig {
+        ServeConfig { max_wait: Duration::from_millis(ms), ..Default::default() }
+    }
+
+    fn single(backend: impl Backend + 'static, cfg: ServeConfig) -> ModelServer {
+        let server = ModelServer::new(cfg);
+        server.register("m", Arc::new(backend)).unwrap();
+        server
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = single(SumBackend::plain(4), cfg_ms(1));
+        let out = server.client().infer("m", img(1.5)).unwrap();
+        assert_eq!(out, vec![6.0]);
+        let report = server.shutdown();
+        assert_eq!(report.len(), 1);
+        let (name, m) = &report[0];
+        assert_eq!(name, "m");
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.batches, 1);
+    }
+
+    #[test]
+    fn unknown_model_is_a_typed_error() {
+        let server = single(SumBackend::plain(4), cfg_ms(1));
+        let client = server.client();
+        let err = client.infer("nope", img(1.0)).unwrap_err();
+        assert!(matches!(err, DfqError::Serve(_)), "{err}");
+        assert!(err.to_string().contains("nope"), "{err}");
+        assert!(err.to_string().contains('m'), "names the registry: {err}");
+        assert!(client.handle("nope").is_err());
+    }
+
+    #[test]
+    fn duplicate_register_rejected_swap_of_unknown_rejected() {
+        let server = single(SumBackend::plain(4), cfg_ms(1));
+        let err = server.register("m", Arc::new(SumBackend::plain(4))).unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        let err = server.swap("ghost", Arc::new(SumBackend::plain(4))).unwrap_err();
+        assert!(matches!(err, DfqError::Serve(_)), "{err}");
+    }
+
+    #[test]
+    fn concurrent_requests_batched() {
+        let server = Arc::new(single(SumBackend::plain(8), cfg_ms(30)));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let c = server.client();
+            handles.push(std::thread::spawn(move || {
+                c.infer("m", img(i as f32)).unwrap()[0]
+            }));
+        }
+        let outs: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(*o, 4.0 * i as f32);
+        }
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 8);
+        // batching happened: fewer batches than requests
+        assert!(m.batches < 8, "batches {}", m.batches);
+        assert!(m.mean_occupancy() > 1.0);
+    }
+
+    /// A backend that records the raw batches it receives (to observe
+    /// padding) while summing rows like [`SumBackend`].
+    struct PadProbe {
+        batch: usize,
+        seen_rows: Arc<Mutex<Vec<usize>>>,
+        seen_tail: Arc<Mutex<Vec<f32>>>,
+    }
+
+    impl Backend for PadProbe {
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            let b = batch.shape.dim(0);
+            let per = batch.numel() / b;
+            self.seen_rows.lock().unwrap().push(b);
+            self.seen_tail
+                .lock()
+                .unwrap()
+                .extend_from_slice(&batch.data[(b - 1) * per..]);
+            SumBackend::plain(self.batch).run_batch(batch)
+        }
+    }
+
+    #[test]
+    fn partial_batch_padded_to_batch_size_with_zeros() {
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let tail = Arc::new(Mutex::new(Vec::new()));
+        let server = single(
+            PadProbe { batch: 4, seen_rows: rows.clone(), seen_tail: tail.clone() },
+            cfg_ms(1),
+        );
+        // one request only: the backend must still see a full batch
+        let out = server.client().infer("m", img(2.0)).unwrap();
+        assert_eq!(out, vec![8.0]);
+        server.shutdown();
+        assert_eq!(rows.lock().unwrap().as_slice(), &[4]);
+        // the padded tail rows are zero-filled
+        assert!(tail.lock().unwrap().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn max_wait_flushes_partial_batch() {
+        // batch 8 can never fill from 3 requests; the wait budget must
+        // flush them anyway
+        let server = Arc::new(single(SumBackend::plain(8), cfg_ms(10)));
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            let c = server.client();
+            handles.push(std::thread::spawn(move || {
+                c.infer("m", img(i as f32)).unwrap()[0]
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 3);
+        assert!(m.batches >= 1);
+        assert!(m.mean_occupancy() <= 3.0);
+    }
+
+    #[test]
+    fn malformed_request_fails_typed_and_endpoint_survives() {
+        // regression: a wrong-rank or wrong-shape image used to panic
+        // the collector thread during batch assembly, stranding every
+        // later request
+        let server = single(SumBackend::plain(4), cfg_ms(1));
+        let client = server.client();
+        let bad_rank = Tensor::from_vec(&[2, 2], vec![1.0; 4]);
+        let err = client.infer("m", bad_rank).unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        let other_shape = Tensor::from_vec(&[1, 4, 4, 1], vec![1.0; 16]);
+        // a batch leader defines the shape; alone in its batch this one
+        // is simply served (16 pixels of 1.0)
+        let out = client.infer("m", other_shape).unwrap();
+        assert_eq!(out, vec![16.0]);
+        // the collector is still alive and serving well-formed requests
+        let out = client.infer("m", img(2.0)).unwrap();
+        assert_eq!(out, vec![8.0]);
+        let report = server.shutdown();
+        assert_eq!(report[0].1.completed, 2);
+    }
+
+    /// [`SumBackend`] that also declares its expected image shape.
+    struct StrictSumBackend;
+
+    impl Backend for StrictSumBackend {
+        fn batch_size(&self) -> usize {
+            4
+        }
+
+        fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+            Some((2, 2, 1))
+        }
+
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            SumBackend::plain(4).run_batch(batch)
+        }
+    }
+
+    #[test]
+    fn declared_input_shape_rejects_wrong_shape_leader_individually() {
+        // a rank-4 single-image request of the WRONG model shape must
+        // neither lead a batch nor be served — and a concurrent valid
+        // request in the same window must still come back correct
+        let server = Arc::new(single(StrictSumBackend, cfg_ms(60)));
+        let c = server.client();
+        let bad = std::thread::spawn(move || {
+            c.infer("m", Tensor::from_vec(&[1, 4, 4, 1], vec![1.0; 16]))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let c = server.client();
+        let good = std::thread::spawn(move || c.infer("m", img(5.0)));
+        let err = bad.join().unwrap().unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        assert_eq!(good.join().unwrap().unwrap(), vec![20.0]);
+    }
+
+    /// A backend whose every batch fails.
+    struct FailBackend;
+
+    impl Backend for FailBackend {
+        fn batch_size(&self) -> usize {
+            4
+        }
+
+        fn run_batch(&self, _batch: &Tensor) -> Result<Tensor, DfqError> {
+            Err(DfqError::runtime("boom"))
+        }
+    }
+
+    #[test]
+    fn backend_error_fans_out_to_all_waiters() {
+        let server = Arc::new(single(FailBackend, cfg_ms(20)));
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let c = server.client();
+            handles.push(std::thread::spawn(move || c.infer("m", img(i as f32))));
+        }
+        for h in handles {
+            let err = h.join().unwrap().unwrap_err();
+            assert!(matches!(err, DfqError::Runtime(_)), "{err}");
+            assert!(err.to_string().contains("boom"));
+        }
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 0, "failed requests must not count as completed");
+    }
+
+    #[test]
+    fn two_models_route_independently() {
+        let server = ModelServer::new(cfg_ms(1));
+        server.register("double", Arc::new(SumBackend { batch: 4, k: 2.0 })).unwrap();
+        server.register("triple", Arc::new(SumBackend { batch: 4, k: 3.0 })).unwrap();
+        assert_eq!(server.models(), vec!["double".to_string(), "triple".to_string()]);
+        let client = server.client();
+        assert_eq!(client.infer("double", img(1.0)).unwrap(), vec![8.0]);
+        assert_eq!(client.infer("triple", img(1.0)).unwrap(), vec![12.0]);
+        // the pinned handle routes identically
+        let h = client.handle("triple").unwrap();
+        assert_eq!(h.infer(img(2.0)).unwrap(), vec![24.0]);
+        let report = server.shutdown();
+        let m: HashMap<_, _> = report.into_iter().collect();
+        assert_eq!(m["double"].completed, 1);
+        assert_eq!(m["triple"].completed, 2);
+    }
+
+    #[test]
+    fn swap_cuts_traffic_over_and_returns_drained_old_backend() {
+        let server = single(SumBackend { batch: 4, k: 1.0 }, cfg_ms(1));
+        let client = server.client();
+        assert_eq!(client.infer("m", img(1.0)).unwrap(), vec![4.0]);
+        let old = server.swap("m", Arc::new(SumBackend { batch: 4, k: 10.0 })).unwrap();
+        // the returned old backend is idle and still usable directly
+        assert_eq!(old.run_batch(&img(1.0)).unwrap().data, vec![4.0]);
+        // post-swap traffic runs the new backend, bit-exactly
+        assert_eq!(client.infer("m", img(1.0)).unwrap(), vec![40.0]);
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.swaps, 1);
+        assert_eq!(m.completed, 2);
+    }
+
+    #[test]
+    fn handle_survives_hot_swap() {
+        let server = single(SumBackend { batch: 4, k: 1.0 }, cfg_ms(1));
+        let h = server.client().handle("m").unwrap();
+        assert_eq!(h.infer(img(1.0)).unwrap(), vec![4.0]);
+        server.swap("m", Arc::new(SumBackend { batch: 4, k: 5.0 })).unwrap();
+        assert_eq!(h.infer(img(1.0)).unwrap(), vec![20.0]);
+    }
+
+    #[test]
+    fn infer_after_shutdown_is_typed() {
+        let server = single(SumBackend::plain(4), cfg_ms(1));
+        let client = server.client();
+        server.shutdown();
+        let err = client.infer("m", img(1.0)).unwrap_err();
+        assert!(matches!(err, DfqError::Serve(_)), "{err}");
+        // the message names the lifecycle state, not a registration bug
+        assert!(err.to_string().contains("shut down"), "{err}");
+    }
+
+    /// A backend that blocks each batch until the test releases it —
+    /// makes queue saturation deterministic.
+    struct GatedBackend {
+        started: Sender<()>,
+        release: Mutex<Receiver<()>>,
+    }
+
+    impl Backend for GatedBackend {
+        fn batch_size(&self) -> usize {
+            1
+        }
+
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            self.started.send(()).ok();
+            self.release.lock().unwrap().recv().ok();
+            SumBackend::plain(1).run_batch(batch)
+        }
+    }
+
+    #[test]
+    fn saturated_queue_rejects_with_overloaded() {
+        let depth = 3usize;
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        let server = Arc::new(single(
+            GatedBackend { started: started_tx, release: Mutex::new(release_rx) },
+            ServeConfig {
+                max_wait: Duration::from_millis(1),
+                queue_depth: depth,
+            },
+        ));
+        // first request: popped by the collector, now blocked executing
+        let c = server.client();
+        let busy = std::thread::spawn(move || c.infer("m", img(1.0)));
+        started_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // fill the admission queue exactly to depth
+        let mut admitted = Vec::new();
+        for _ in 0..depth {
+            let c = server.client();
+            admitted.push(std::thread::spawn(move || c.infer("m", img(1.0))));
+        }
+        // wait until all `depth` requests are actually enqueued (the
+        // public gauge counts them as their submitters admit them)
+        let t0 = Instant::now();
+        while server.queue_len("m").unwrap() < depth {
+            assert!(t0.elapsed() < Duration::from_secs(5), "queue never filled");
+            std::thread::yield_now();
+        }
+        // the collector is blocked in run_batch, so these must all be
+        // rejected — synchronously, without enqueueing anything
+        for _ in 0..4 {
+            let err = server.client().infer("m", img(9.0)).unwrap_err();
+            assert!(matches!(err, DfqError::Overloaded { .. }), "{err}");
+            assert!(err.to_string().contains("'m'"), "{err}");
+        }
+        // release every admitted batch; all admitted requests complete
+        for _ in 0..=depth {
+            release_tx.send(()).unwrap();
+        }
+        assert_eq!(busy.join().unwrap().unwrap(), vec![4.0]);
+        for h in admitted {
+            assert_eq!(h.join().unwrap().unwrap(), vec![4.0]);
+        }
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, depth + 1);
+        assert_eq!(m.rejected, 4);
+        // drop the last release sender so the gated backend never hangs
+        // a drain (nothing is queued at this point anyway)
+        drop(release_tx);
+        match Arc::try_unwrap(server) {
+            Ok(s) => {
+                s.shutdown();
+            }
+            Err(_) => panic!("all clients joined"),
+        }
+    }
+
+    /// A swap under continuous concurrent load: nothing is lost, every
+    /// response is from one of the two backends, and every request
+    /// submitted after `swap` returned is served by the new backend.
+    #[test]
+    fn hot_swap_under_load_loses_nothing_and_cuts_over() {
+        let server = Arc::new(single(
+            SumBackend { batch: 4, k: 1.0 },
+            cfg_ms(2),
+        ));
+        let swapped = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for t in 0..24 {
+            let c = server.client();
+            let swapped = swapped.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut results = Vec::new();
+                for i in 0..20 {
+                    let after = swapped.load(Ordering::SeqCst);
+                    let out = c.infer("m", img((t * 100 + i) as f32)).unwrap();
+                    results.push((t * 100 + i, after, out[0]));
+                    // keep traffic flowing across the swap point
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                results
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(15));
+        server.swap("m", Arc::new(SumBackend { batch: 4, k: 1000.0 })).unwrap();
+        swapped.store(true, Ordering::SeqCst);
+        let mut total = 0usize;
+        for h in handles {
+            for (v, after, out) in h.join().unwrap() {
+                total += 1;
+                let old = 4.0 * v as f32;
+                let new = 4000.0 * v as f32;
+                if after {
+                    // submitted strictly after swap returned: must be
+                    // the new backend, bit-exactly
+                    assert_eq!(out, new, "request {v} ran on the old backend post-swap");
+                } else {
+                    assert!(
+                        out == old || out == new,
+                        "request {v}: {out} is neither backend's output"
+                    );
+                }
+            }
+        }
+        assert_eq!(total, 24 * 20, "zero requests dropped");
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 24 * 20);
+        assert_eq!(m.swaps, 1);
+    }
+
+    /// A backend whose every batch panics (the one failure class
+    /// [`run_batch`]'s shape pre-validation cannot catch).
+    struct PanicBackend;
+
+    impl Backend for PanicBackend {
+        fn batch_size(&self) -> usize {
+            2
+        }
+
+        fn run_batch(&self, _batch: &Tensor) -> Result<Tensor, DfqError> {
+            panic!("backend bug");
+        }
+    }
+
+    #[test]
+    fn panicking_backend_answers_typed_and_endpoint_is_swappable() {
+        let server = single(PanicBackend, cfg_ms(1));
+        let client = server.client();
+        // the waiter gets a typed error, not a hang or a dead collector
+        let err = client.infer("m", img(1.0)).unwrap_err();
+        assert!(matches!(err, DfqError::Serve(_)), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // the repair path: hot-swap the broken model for a working one —
+        // must not panic on a poisoned gate, and traffic must recover
+        server.swap("m", Arc::new(SumBackend::plain(4))).unwrap();
+        assert_eq!(client.infer("m", img(1.0)).unwrap(), vec![4.0]);
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.swaps, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        // requests sitting in the queue when shutdown starts must still
+        // be answered (drain, not drop)
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        let server = Arc::new(single(
+            GatedBackend { started: started_tx, release: Mutex::new(release_rx) },
+            ServeConfig { max_wait: Duration::from_millis(1), queue_depth: 16 },
+        ));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = server.client();
+            handles.push(std::thread::spawn(move || c.infer("m", img(1.0))));
+        }
+        started_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // one request is executing; wait until the other three are
+        // actually enqueued before cutting admission off
+        let t0 = Instant::now();
+        while server.queue_len("m").unwrap() < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "queue never filled");
+            std::thread::yield_now();
+        }
+        // release batches as they start, from a helper thread, while
+        // shutdown drains
+        let releaser = std::thread::spawn(move || {
+            release_tx.send(()).ok();
+            while started_rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+                release_tx.send(()).ok();
+            }
+        });
+        let server = Arc::try_unwrap(server).ok().expect("no other refs");
+        let report = server.shutdown();
+        for h in handles {
+            assert_eq!(h.join().unwrap().unwrap(), vec![4.0]);
+        }
+        releaser.join().unwrap();
+        assert_eq!(report[0].1.completed, 4);
+    }
+}

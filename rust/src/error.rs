@@ -32,6 +32,14 @@ pub enum DfqError {
     Runtime(String),
     /// The serving pipeline failed (service stopped, batch dropped).
     Serve(String),
+    /// A model's admission queue is full — the request was rejected
+    /// instead of growing the queue without bound. Back off and retry.
+    Overloaded {
+        /// the model whose queue was saturated
+        model: String,
+        /// the configured admission-queue depth that was exceeded
+        depth: usize,
+    },
     /// User-supplied configuration is invalid.
     InvalidInput(String),
 }
@@ -67,6 +75,12 @@ impl DfqError {
         DfqError::Serve(msg.into())
     }
 
+    /// An admission-control rejection: the named model's bounded queue
+    /// is full.
+    pub fn overloaded(model: impl Into<String>, depth: usize) -> DfqError {
+        DfqError::Overloaded { model: model.into(), depth }
+    }
+
     /// Invalid user input / configuration.
     pub fn invalid(msg: impl Into<String>) -> DfqError {
         DfqError::InvalidInput(msg.into())
@@ -82,6 +96,10 @@ impl fmt::Display for DfqError {
             DfqError::Data(m) => write!(f, "data: {m}"),
             DfqError::Runtime(m) => write!(f, "runtime: {m}"),
             DfqError::Serve(m) => write!(f, "serve: {m}"),
+            DfqError::Overloaded { model, depth } => write!(
+                f,
+                "overloaded: model '{model}' admission queue is full (depth {depth})"
+            ),
             DfqError::InvalidInput(m) => write!(f, "invalid input: {m}"),
         }
     }
@@ -131,6 +149,14 @@ mod tests {
         assert_eq!(e, DfqError::Manifest("missing key 'spec'".into()));
         let e: DfqError = "weights path".into();
         assert!(matches!(e, DfqError::Manifest(_)));
+    }
+
+    #[test]
+    fn overloaded_names_model_and_depth() {
+        let e = DfqError::overloaded("resnet_s", 64);
+        assert_eq!(e, DfqError::Overloaded { model: "resnet_s".into(), depth: 64 });
+        assert!(e.to_string().contains("resnet_s"));
+        assert!(e.to_string().contains("64"));
     }
 
     #[test]

@@ -27,12 +27,55 @@
 //!
 //! [`Session::from_layers`] starts instead from a fine-grained framework
 //! export (running dataflow fusion and BN folding internally), and
-//! [`Session::from_graph`] from an already-unified graph. Every
-//! [`session::Engine`] doubles as a [`coordinator::serve::Backend`]
-//! through a blanket impl, so
-//! `InferenceService::start(engine, ServeConfig::default())` deploys any
-//! engine behind the batching service with zero glue. Fallible APIs
+//! [`Session::from_graph`] from an already-unified graph. Fallible APIs
 //! across the crate return the typed [`error::DfqError`].
+//!
+//! ## Deployment: the `ModelServer`
+//!
+//! Serving is a **multi-model registry**
+//! ([`coordinator::server::ModelServer`], re-exported through
+//! [`session`]): register each calibrated engine under a name, route
+//! requests by name through a cloneable [`coordinator::server::Client`],
+//! and hot-swap any endpoint atomically — the pattern is
+//! *registry → route → swap*:
+//!
+//! ```no_run
+//! # use dfq::prelude::*;
+//! # fn main() -> Result<(), DfqError> {
+//! # let art = Artifacts::open("artifacts")?;
+//! # let calib = art.calibration_images(1)?;
+//! # let small = Session::from_artifacts(&art, "resnet_s")?
+//! #     .calibrate(CalibConfig::default(), &calib)?;
+//! # let large = Session::from_artifacts(&art, "resnet_l")?
+//! #     .calibrate(CalibConfig::default(), &calib)?;
+//! let server = ModelServer::new(ServeConfig::default());
+//! server.register("resnet_s", small.engine(EngineKind::Int { threads: 0 })?)?;
+//! server.register("resnet_l", large.engine(EngineKind::Int { threads: 0 })?)?;
+//! let row = server.client().infer("resnet_s", art.calibration_images(1)?)?;
+//! // live re-calibration: swap in a fresh spec with zero downtime
+//! # let session = Session::from_artifacts(&art, "resnet_s")?;
+//! let recal = session.calibrate(CalibConfig { n_bits: 4, ..Default::default() }, &calib)?;
+//! recal.deploy_into(&server, "resnet_s", EngineKind::Int { threads: 0 })?;
+//! for (name, m) in server.shutdown() {
+//!     println!("{name}: {} ok, {} rejected", m.completed, m.rejected);
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Every [`session::Engine`] doubles as a [`coordinator::serve::Backend`]
+//! through a blanket impl, so registration needs zero glue. Each
+//! endpoint batches its own traffic (padded to the engine's batch size,
+//! bounded by [`session::ServeConfig::max_wait`]) and admits at most
+//! [`session::ServeConfig::queue_depth`] queued requests — beyond that,
+//! submissions fail fast with [`error::DfqError::Overloaded`] instead of
+//! growing the queue without bound. [`coordinator::server::ModelServer::swap`]
+//! drains the in-flight batch on the old engine before returning, so the
+//! old engine can be dropped and every post-swap request runs the new
+//! one; requests already queued are never dropped. Shutdown drains every
+//! queue and reports bounded per-model [`session::ServeMetrics`]
+//! (latency percentiles come from a fixed-size reservoir, so a
+//! long-running server's memory stays flat).
 //!
 //! ## The `ExecPlan` IR
 //!
@@ -108,7 +151,10 @@ pub mod prelude {
     pub use crate::quant::joint::{CalibConfig, JointCalibrator};
     pub use crate::quant::params::{ModuleShifts, QuantSpec};
     pub use crate::quant::scheme;
-    pub use crate::session::{CalibratedModel, Engine, EngineKind, Session};
+    pub use crate::session::{
+        CalibratedModel, Client, Engine, EngineKind, ModelHandle, ModelServer,
+        ServeConfig, ServeMetrics, Session,
+    };
     pub use crate::tensor::{Shape, Tensor, TensorI32};
     pub use crate::util::rng::Pcg;
 }

@@ -7,17 +7,16 @@
 //! dfq detect    [--bits B] [--eval-n N]
 //! dfq hwcost    [--clock MHZ]
 //! dfq inspect   --model NAME
-//! dfq serve     --model NAME [--requests N] [--engine fp|int|pjrt]
+//! dfq serve     [--model NAME[=KIND]]... [--requests N] [--engine KIND]
+//!               [--max-wait MS] [--queue-depth N]
 //! ```
 //!
 //! Everything runs from the AOT artifacts through the unified
 //! `Session` pipeline; python is never invoked.
 
 use std::collections::HashMap;
-use std::sync::Arc;
 
 use dfq::coordinator::pool::Pool;
-use dfq::coordinator::serve::{InferenceService, ServeConfig};
 use dfq::graph::fuse;
 use dfq::models::resnet;
 use dfq::prelude::*;
@@ -37,15 +36,20 @@ const COMMANDS: &[(&str, &[&str])] = &[
     ("detect", &["bits", "eval-n", "batch", "images", "artifacts"]),
     ("hwcost", &["clock"]),
     ("inspect", &["model", "plan"]),
-    ("serve", &["model", "requests", "engine", "artifacts", "threads"]),
+    (
+        "serve",
+        &["model", "requests", "engine", "artifacts", "threads", "max-wait", "queue-depth"],
+    ),
 ];
 
 /// Minimal flag parser: `--key value` pairs + a subcommand, validated
-/// against [`COMMANDS`]. `help`/`--help`/`-h`/no arguments and unknown
-/// subcommands print usage and exit 0; unknown flags exit 2.
+/// against [`COMMANDS`]. Flags are repeatable (`--model a --model b`
+/// collects both; single-value accessors take the last occurrence).
+/// `help`/`--help`/`-h`/no arguments and unknown subcommands print usage
+/// and exit 0; unknown flags exit 2.
 struct Args {
     cmd: String,
-    flags: HashMap<String, String>,
+    flags: HashMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -63,13 +67,13 @@ impl Args {
             println!("unknown command '{cmd}'\n\n{HELP}");
             std::process::exit(0);
         };
-        let mut flags = HashMap::new();
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
         let mut push = |k: String, v: String| {
             if !known.contains(&k.as_str()) {
                 eprintln!("unknown flag '--{k}' for '{cmd}' (known: {})", known.join(", "));
                 std::process::exit(2);
             }
-            flags.insert(k, v);
+            flags.entry(k).or_default().push(v);
         };
         let mut key: Option<String> = None;
         for a in it {
@@ -92,7 +96,12 @@ impl Args {
     }
 
     fn get(&self, k: &str) -> Option<&str> {
-        self.flags.get(k).map(|s| s.as_str())
+        self.flags.get(k).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in order.
+    fn all(&self, k: &str) -> &[String] {
+        self.flags.get(k).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     fn usize_or(&self, k: &str, default: usize) -> usize {
@@ -150,8 +159,11 @@ COMMANDS:
   detect     Table-4 style detection eval (--bits, --eval-n)
   hwcost     RTL cost model (--clock MHz)
   inspect    dataflow analysis + quant-point report (--model [--plan])
-  serve      batching inference service demo
-             (--model, --requests, --engine fp|int|int:N|int:auto|pjrt, --threads)
+  serve      multi-model batching server demo: registers every --model as a
+             named endpoint, routes interleaved traffic by name
+             (--model NAME[=KIND] repeatable, --requests,
+              --engine fp|int|int:N|int:auto|pjrt  default KIND,
+              --threads, --max-wait MS, --queue-depth N)
 
 COMMON FLAGS:
   --artifacts DIR   artifacts directory (default: artifacts)
@@ -159,6 +171,10 @@ COMMON FLAGS:
   --batch N         evaluation batch (default 50)
   --threads N       integer-engine data parallelism (0 = machine-sized;
                     serve defaults to machine-sized, evaluate to 0 -> auto)
+  --max-wait MS     serve: max milliseconds a batch waits to fill (default 5)
+  --queue-depth N   serve: per-model admission bound — beyond N queued
+                    requests submissions are rejected as overloaded
+                    instead of growing the queue (default 256)
 ";
 
 fn cmd_tables(args: &Args) -> Result<(), DfqError> {
@@ -356,68 +372,152 @@ fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
     Ok(())
 }
 
+/// Parse one `--model` occurrence: `NAME` (serves with the default
+/// engine kind) or `NAME=KIND` (e.g. `resnet_s=int:4`, `resnet_m=fp`).
+fn parse_model_spec(spec: &str, default: EngineKind) -> Result<(String, EngineKind), DfqError> {
+    match spec.split_once('=') {
+        None => Ok((spec.to_string(), default)),
+        Some((name, kind)) => {
+            let kind = EngineKind::parse(kind).ok_or_else(|| {
+                DfqError::invalid(format!(
+                    "--model {name}={kind}: engine kind must be fp|int|int:N|int:auto|pjrt"
+                ))
+            })?;
+            Ok((name.to_string(), kind))
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<(), DfqError> {
     let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
-    let model = args.str_or("model", "resnet_s");
     let n_req = args.usize_or("requests", 64);
     // the serve hot path defaults to the machine-sized data-parallel
     // integer engine; --engine int pins it serial, --threads overrides
-    let mut kind = EngineKind::parse(args.str_or("engine", "int:auto"))
+    let default_kind = EngineKind::parse(args.str_or("engine", "int:auto"))
         .ok_or_else(|| DfqError::invalid("--engine must be fp|int|int:N|int:auto|pjrt"))?;
-    if let Some(t) = args.get("threads") {
-        if !matches!(kind, EngineKind::Int { .. }) {
+    let threads: Option<usize> = match args.get("threads") {
+        Some(t) => Some(
+            t.parse()
+                .map_err(|_| DfqError::invalid("--threads must be a number (0 = auto)"))?,
+        ),
+        None => None,
+    };
+    let defaults = ServeConfig::default();
+    let max_wait = match args.get("max-wait") {
+        Some(ms) => std::time::Duration::from_millis(
+            ms.parse()
+                .map_err(|_| DfqError::invalid("--max-wait must be milliseconds"))?,
+        ),
+        None => defaults.max_wait,
+    };
+    let queue_depth = match args.get("queue-depth") {
+        Some(d) => d
+            .parse()
+            .map_err(|_| DfqError::invalid("--queue-depth must be a number >= 1"))?,
+        None => defaults.queue_depth,
+    };
+    let cfg = ServeConfig { max_wait, queue_depth };
+
+    // every --model NAME[=KIND] becomes a named endpoint (default: one
+    // resnet_s endpoint, exactly the old single-model behaviour)
+    let mut specs: Vec<(String, EngineKind)> = if args.all("model").is_empty() {
+        vec![("resnet_s".to_string(), default_kind)]
+    } else {
+        args.all("model")
+            .iter()
+            .map(|s| parse_model_spec(s, default_kind))
+            .collect::<Result<_, _>>()?
+    };
+    // a duplicate name would silently register-then-hot-swap into one
+    // endpoint; reject the mistake instead
+    for i in 1..specs.len() {
+        if specs[..i].iter().any(|(n, _)| *n == specs[i].0) {
             return Err(DfqError::invalid(format!(
-                "--threads only applies to the int engine, not '{kind}'"
+                "--model '{}' given more than once",
+                specs[i].0
             )));
         }
-        let threads = t
-            .parse()
-            .map_err(|_| DfqError::invalid("--threads must be a number (0 = auto)"))?;
-        kind = EngineKind::Int { threads };
+    }
+    // --threads overrides the worker count of every integer endpoint,
+    // whether its kind came from --engine or a per-model NAME=KIND spec
+    if let Some(t) = threads {
+        let mut applied = false;
+        for (_, kind) in &mut specs {
+            if matches!(kind, EngineKind::Int { .. }) {
+                *kind = EngineKind::Int { threads: t };
+                applied = true;
+            }
+        }
+        if !applied {
+            return Err(DfqError::invalid(
+                "--threads only applies to int engines, and none are being served",
+            ));
+        }
     }
 
-    // the whole deployment pipeline: session -> calibrate -> engine ->
-    // service (any engine serves via the blanket Backend impl)
-    let session = Session::from_artifacts(&art, model)?;
+    // the whole deployment pipeline, once per model: session ->
+    // calibrate -> engine -> named endpoint (any engine serves via the
+    // blanket Backend impl)
     let calib = art.calibration_images(1)?;
-    let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
-    let engine = calibrated.engine(kind)?;
-    let svc = Arc::new(InferenceService::start(engine, ServeConfig::default()));
+    let server = ModelServer::new(cfg);
+    for (name, kind) in &specs {
+        let session = Session::from_artifacts(&art, name)?;
+        let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
+        calibrated.deploy_into(&server, name, *kind)?;
+        println!("registered '{name}' ({kind} engine)");
+    }
 
     let ds = art.classification_set("synthimagenet_val")?;
     let t = Timer::start();
     let mut handles = Vec::new();
     for i in 0..n_req {
-        let svc = svc.clone();
+        // interleave traffic across every registered model
+        let (name, _) = specs[i % specs.len()].clone();
+        let client = server.client();
         let (img, label) = {
             let (x, labels) = ds.batch(i % ds.len(), 1);
             (x, labels[0])
         };
         handles.push(std::thread::spawn(move || {
-            let out = svc.infer(img).unwrap();
+            let out = match client.infer(&name, img) {
+                Ok(out) => out,
+                Err(DfqError::Overloaded { .. }) => return (0usize, 1usize),
+                Err(e) => panic!("serve failed: {e}"),
+            };
             let mut best = 0usize;
             for (j, v) in out.iter().enumerate() {
                 if *v > out[best] {
                     best = j;
                 }
             }
-            (best as i32 == label) as usize
+            ((best as i32 == label) as usize, 0usize)
         }));
     }
-    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let (correct, shed): (usize, usize) = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .fold((0, 0), |(c, s), (hit, rej)| (c + hit, s + rej));
     let secs = t.secs();
-    let m = svc.metrics();
     println!(
-        "served {n_req} requests via {kind} engine in {secs:.2}s ({:.1} req/s), top-1 {:.1}%",
-        n_req as f64 / secs,
-        100.0 * correct as f64 / n_req as f64
+        "served {} requests across {} model(s) in {secs:.2}s ({:.1} req/s), \
+         top-1 {:.1}%{}",
+        n_req - shed,
+        specs.len(),
+        (n_req - shed) as f64 / secs,
+        100.0 * correct as f64 / (n_req - shed).max(1) as f64,
+        if shed > 0 { format!(", {shed} shed by admission control") } else { String::new() }
     );
-    println!(
-        "batches: {} (mean occupancy {:.1}), latency p50 {:.1} ms, p99 {:.1} ms",
-        m.batches,
-        m.mean_occupancy(),
-        m.latency_percentile(50.0) * 1e3,
-        m.latency_percentile(99.0) * 1e3
-    );
+    for (name, m) in server.shutdown() {
+        println!(
+            "  {name}: {} ok / {} rejected, {} batches (mean occupancy {:.1}), \
+             latency p50 {:.1} ms / p99 {:.1} ms",
+            m.completed,
+            m.rejected,
+            m.batches,
+            m.mean_occupancy(),
+            m.latency_percentile(50.0) * 1e3,
+            m.latency_percentile(99.0) * 1e3
+        );
+    }
     Ok(())
 }

@@ -84,7 +84,8 @@ impl std::fmt::Display for EngineKind {
 /// Obtained from [`CalibratedModel::engine`] (or
 /// [`super::Session::fp_engine`] for the uncalibrated oracle). Every
 /// `Engine` is also a [`Backend`], so
-/// `InferenceService::start(engine, cfg)` works directly.
+/// `server.register(name, engine)` on a
+/// [`crate::coordinator::server::ModelServer`] works directly.
 pub trait Engine: Send + Sync {
     /// Which deployment path this engine is.
     fn kind(&self) -> EngineKind;
@@ -120,10 +121,12 @@ pub trait Engine: Send + Sync {
     }
 }
 
-/// Every [`Engine`] serves: the batching inference service needs exactly
+/// Every [`Engine`] serves: a [`ModelServer`] endpoint needs exactly
 /// the engine contract, so any engine — including `Arc<dyn Engine>`
 /// handles from [`CalibratedModel::engine`] — is a [`Backend`] with zero
 /// glue code.
+///
+/// [`ModelServer`]: crate::coordinator::server::ModelServer
 impl<E: Engine + ?Sized> Backend for E {
     fn batch_size(&self) -> usize {
         Engine::batch_size(self)

@@ -18,9 +18,11 @@
 //! with each surface using its own conventions. `Session` runs dataflow
 //! fusion and BN folding internally, [`Session::calibrate`] runs the
 //! paper's Algorithm 1 joint search, and [`CalibratedModel::engine`]
-//! yields a unified [`Engine`] trait object that the batching inference
-//! service accepts directly (every `Engine` is a
-//! [`crate::coordinator::serve::Backend`] via a blanket impl).
+//! yields a unified [`Engine`] trait object that deploys directly into
+//! the multi-model [`ModelServer`] (every `Engine` is a
+//! [`crate::coordinator::serve::Backend`] via a blanket impl, and
+//! [`CalibratedModel::deploy_into`] registers — or atomically
+//! hot-swaps — a named endpoint for zero-downtime re-calibration).
 //!
 //! The integer path is **data-parallel**:
 //! `EngineKind::Int { threads }` shards each batch along N across the
@@ -34,6 +36,11 @@
 pub mod engine;
 
 pub use engine::{Engine, EngineKind};
+
+// the deployment surface rides along with the pipeline that feeds it:
+// `Session` -> `CalibratedModel` -> `Engine` -> `ModelServer`
+pub use crate::coordinator::serve::{ServeConfig, ServeMetrics};
+pub use crate::coordinator::server::{Client, ModelHandle, ModelServer};
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -269,18 +276,46 @@ impl CalibratedModel {
             .map_err(|e| DfqError::io(format!("write {}", path.display()), &e))
     }
 
-    /// Build a deployable [`Engine`]. Any engine can be handed straight
-    /// to [`crate::coordinator::serve::InferenceService::start`] — every
-    /// `Engine` is a serving `Backend` via the blanket impl.
+    /// Build a deployable [`Engine`]. Any engine can be registered
+    /// straight into a [`ModelServer`] — every `Engine` is a serving
+    /// `Backend` via the blanket impl.
     pub fn engine(&self, kind: EngineKind) -> Result<Arc<dyn Engine>, DfqError> {
         engine::build(self, kind)
+    }
+
+    /// Deploy this calibrated model into a running [`ModelServer`] under
+    /// `name`: builds the `kind` engine and registers it, **hot-swapping
+    /// atomically** if `name` is already live — the zero-downtime
+    /// re-calibration path:
+    ///
+    /// ```no_run
+    /// # use dfq::prelude::*;
+    /// # fn recal(session: &Session, server: &ModelServer, fresh: &Tensor)
+    /// #     -> Result<(), DfqError> {
+    /// // traffic keeps flowing on the old spec while this runs…
+    /// let recalibrated = session.calibrate(CalibConfig::default(), fresh)?;
+    /// // …and cuts over without dropping a request
+    /// recalibrated.deploy_into(server, "resnet_s", EngineKind::Int { threads: 0 })?;
+    /// # Ok(())
+    /// # }
+    /// ```
+    ///
+    /// Returns the engine it deployed (e.g. for direct `run` checks).
+    pub fn deploy_into(
+        &self,
+        server: &ModelServer,
+        name: &str,
+        kind: EngineKind,
+    ) -> Result<Arc<dyn Engine>, DfqError> {
+        let engine = self.engine(kind)?;
+        server.deploy(name, engine.clone())?;
+        Ok(engine)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::serve::{InferenceService, ServeConfig};
     use crate::graph::{ModuleKind, UnifiedModule};
     use crate::util::rng::Pcg;
 
@@ -492,11 +527,45 @@ mod tests {
         let mut rng = Pcg::new(27);
         let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
         let want = engine.run(&x).unwrap();
-        // zero glue: the Arc<dyn Engine> goes straight into the service
-        let svc = InferenceService::start(engine, ServeConfig::default());
-        let got = svc.infer(x).unwrap();
+        // zero glue: the Arc<dyn Engine> registers straight into the server
+        let server = ModelServer::new(ServeConfig::default());
+        server.register("tiny", engine).unwrap();
+        let got = server.client().infer("tiny", x).unwrap();
         assert_eq!(got, want.data);
-        let m = svc.shutdown();
-        assert_eq!(m.completed, 1);
+        let report = server.shutdown();
+        assert_eq!(report[0].0, "tiny");
+        assert_eq!(report[0].1.completed, 1);
+    }
+
+    #[test]
+    fn deploy_into_registers_then_hot_swaps() {
+        let (graph, folded) = tiny();
+        let session = Session::from_graph(graph, folded).unwrap();
+        let server = ModelServer::new(ServeConfig::default());
+        let mut rng = Pcg::new(29);
+        let x = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
+
+        // first deployment: registers the endpoint
+        let first = session
+            .calibrate(CalibConfig::default(), &calib_batch(30))
+            .unwrap();
+        let eng1 = first
+            .deploy_into(&server, "tiny", EngineKind::Int { threads: 1 })
+            .unwrap();
+        let client = server.client();
+        assert_eq!(client.infer("tiny", x.clone()).unwrap(), eng1.run(&x).unwrap().data);
+
+        // re-calibration with a different spec: deploy_into hot-swaps
+        let recal = session
+            .calibrate(CalibConfig { n_bits: 4, ..Default::default() }, &calib_batch(30))
+            .unwrap();
+        let eng2 = recal
+            .deploy_into(&server, "tiny", EngineKind::Int { threads: 1 })
+            .unwrap();
+        let served = client.infer("tiny", x.clone()).unwrap();
+        assert_eq!(served, eng2.run(&x).unwrap().data, "post-swap != new engine");
+        let m = server.metrics("tiny").unwrap();
+        assert_eq!(m.swaps, 1);
+        assert_eq!(m.completed, 2);
     }
 }

@@ -236,10 +236,7 @@ fn parallel_calibration_consistent_under_pool_sizes() {
 }
 
 #[test]
-fn session_engine_serves_through_inference_service() {
-    use dfq::coordinator::serve::{InferenceService, ServeConfig};
-    use std::sync::Arc;
-
+fn session_engine_serves_through_model_server() {
     let graph = resnet::resnet_graph("resnet_s", 1, 10);
     let folded = random_folded(&graph, 17);
     let session = Session::from_graph(graph, folded).unwrap();
@@ -249,14 +246,16 @@ fn session_engine_serves_through_inference_service() {
     let x = dfq::data::dataset::synth_images(3, 32, 3, 19);
     let want = engine.run(&x).unwrap();
 
-    // the blanket Backend impl: the Arc<dyn Engine> is the backend
-    let svc = Arc::new(InferenceService::start(engine, ServeConfig::default()));
+    // the blanket Backend impl: the Arc<dyn Engine> is the endpoint
+    let server = ModelServer::new(ServeConfig::default());
+    server.register("resnet_s", engine).unwrap();
+    let client = server.client();
     let per = 32 * 32 * 3;
     for i in 0..3 {
         let img = Tensor::from_vec(&[1, 32, 32, 3], x.data[i * per..(i + 1) * per].to_vec());
-        let row = svc.infer(img).unwrap();
+        let row = client.infer("resnet_s", img).unwrap();
         assert_eq!(row, want.data[i * 10..(i + 1) * 10].to_vec(), "image {i}");
     }
-    let m = svc.metrics();
+    let m = server.metrics("resnet_s").unwrap();
     assert_eq!(m.completed, 3);
 }

@@ -1,0 +1,223 @@
+//! Integration tests for the multi-model serving surface: named
+//! routing across two registered models and atomic hot-swap under
+//! concurrent load (zero dropped requests, bit-exact cutover) — all
+//! over real `Session`-built engines, no artifacts required.
+//! (Admission-control backpressure choreography is unit-tested in
+//! `coordinator::server`.)
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::prelude::*;
+
+/// A small conv -> gap -> fc model over an 8x8x3 input with random
+/// folded weights; distinct seeds give models with distinct outputs.
+fn tiny_model(seed: u64) -> (Graph, HashMap<String, FoldedParams>) {
+    let graph = Graph {
+        name: format!("tiny{seed}"),
+        input_hwc: (8, 8, 3),
+        modules: vec![
+            UnifiedModule {
+                name: "c0".into(),
+                kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                src: "input".into(),
+                res: None,
+                relu: true,
+            },
+            UnifiedModule {
+                name: "gap".into(),
+                kind: ModuleKind::Gap,
+                src: "c0".into(),
+                res: None,
+                relu: false,
+            },
+            UnifiedModule {
+                name: "fc".into(),
+                kind: ModuleKind::Dense { cin: 4, cout: 5 },
+                src: "gap".into(),
+                res: None,
+                relu: false,
+            },
+        ],
+    };
+    let mut rng = Pcg::new(seed);
+    let mut folded = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.05)).collect(),
+            },
+        );
+    }
+    (graph, folded)
+}
+
+fn calibrated(seed: u64, cfg: CalibConfig) -> CalibratedModel {
+    let (graph, folded) = tiny_model(seed);
+    let session = Session::from_graph(graph, folded).unwrap();
+    let mut rng = Pcg::new(seed ^ 0xc0ffee);
+    let calib = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
+    session.calibrate(cfg, &calib).unwrap()
+}
+
+fn image(seed: u64) -> Tensor {
+    let mut rng = Pcg::new(seed);
+    Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect())
+}
+
+/// The acceptance-criteria flow in one test: two models on one server,
+/// interleaved traffic routed by name (verified bit-exact against each
+/// engine run directly), a mid-traffic hot-swap of one model with zero
+/// dropped requests, and bit-exact routing before and after the swap.
+#[test]
+fn two_models_route_interleaved_and_hot_swap_mid_traffic() {
+    let cm_a = calibrated(11, CalibConfig::default());
+    let cm_b = calibrated(22, CalibConfig::default());
+    let eng_a = cm_a.engine(EngineKind::Int { threads: 1 }).unwrap();
+    let eng_b = cm_b.engine(EngineKind::Int { threads: 2 }).unwrap();
+    // the swap target: the SAME model re-calibrated to 4 bits — the
+    // live re-calibration story — with observably different outputs
+    let cm_a4 = calibrated(11, CalibConfig { n_bits: 4, ..Default::default() });
+    let eng_a4 = cm_a4.engine(EngineKind::Int { threads: 1 }).unwrap();
+
+    let server = ModelServer::new(ServeConfig::default());
+    server.register("alpha", eng_a.clone()).unwrap();
+    server.register("beta", eng_b.clone()).unwrap();
+    assert_eq!(server.models(), vec!["alpha".to_string(), "beta".to_string()]);
+
+    // phase 1: interleaved traffic to both models — every response must
+    // be bit-exact against the owning engine run directly
+    let client = server.client();
+    for i in 0..10u64 {
+        let x = image(1000 + i);
+        let (name, engine) =
+            if i % 2 == 0 { ("alpha", &eng_a) } else { ("beta", &eng_b) };
+        let served = client.infer(name, x.clone()).unwrap();
+        assert_eq!(served, engine.run(&x).unwrap().data, "pre-swap routing {name}");
+    }
+
+    // phase 2: hot-swap alpha under 24 concurrent submitters; count
+    // every response — zero may be dropped or failed
+    let server = Arc::new(server);
+    let swapped = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for t in 0..24u64 {
+        let client = server.client();
+        let swapped = swapped.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for i in 0..8u64 {
+                let seed = 2000 + t * 100 + i;
+                let after = swapped.load(Ordering::SeqCst);
+                let row = client.infer("alpha", image(seed)).unwrap();
+                out.push((seed, after, row));
+                // pace the submitters so traffic spans the swap point
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            out
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(8));
+    server.swap("alpha", eng_a4.clone()).unwrap();
+    swapped.store(true, Ordering::SeqCst);
+
+    let mut total = 0usize;
+    for h in handles {
+        for (seed, after, row) in h.join().unwrap() {
+            total += 1;
+            let x = image(seed);
+            let old = eng_a.run(&x).unwrap().data;
+            let new = eng_a4.run(&x).unwrap().data;
+            if after {
+                assert_eq!(row, new, "request {seed} post-swap must run the 4-bit engine");
+            } else {
+                assert!(row == old || row == new, "request {seed}: foreign output");
+            }
+        }
+    }
+    assert_eq!(total, 24 * 8, "a request was dropped during the swap");
+
+    // phase 3: post-swap routing is bit-exact for both names — alpha on
+    // the new engine, beta untouched
+    for i in 0..6u64 {
+        let x = image(3000 + i);
+        assert_eq!(
+            client.infer("alpha", x.clone()).unwrap(),
+            eng_a4.run(&x).unwrap().data,
+            "post-swap alpha"
+        );
+        assert_eq!(
+            client.infer("beta", x.clone()).unwrap(),
+            eng_b.run(&x).unwrap().data,
+            "post-swap beta"
+        );
+    }
+
+    let server = Arc::try_unwrap(server).ok().expect("all submitters joined");
+    let report: HashMap<String, ServeMetrics> = server.shutdown().into_iter().collect();
+    assert_eq!(report["alpha"].swaps, 1);
+    assert_eq!(report["alpha"].completed, 5 + 24 * 8 + 6);
+    assert_eq!(report["beta"].completed, 5 + 6);
+    assert_eq!(report["alpha"].rejected, 0, "no admission rejections expected");
+}
+
+/// Handles pinned before a swap keep working and observe the cutover.
+#[test]
+fn pinned_handle_follows_hot_swap() {
+    let cm = calibrated(33, CalibConfig::default());
+    let eng8 = cm.engine(EngineKind::Int { threads: 1 }).unwrap();
+    let cm4 = calibrated(33, CalibConfig { n_bits: 4, ..Default::default() });
+    let eng4 = cm4.engine(EngineKind::Int { threads: 1 }).unwrap();
+
+    let server = ModelServer::new(ServeConfig::default());
+    server.register("m", eng8.clone()).unwrap();
+    let handle = server.client().handle("m").unwrap();
+    let x = image(4001);
+    assert_eq!(handle.infer(x.clone()).unwrap(), eng8.run(&x).unwrap().data);
+    let old = server.swap("m", eng4.clone()).unwrap();
+    assert_eq!(handle.infer(x.clone()).unwrap(), eng4.run(&x).unwrap().data);
+    // the drained old backend is still privately usable (e.g. shadow
+    // evaluation) even though it no longer receives traffic
+    assert_eq!(old.run_batch(&x).unwrap().data, eng8.run(&x).unwrap().data);
+}
+
+// Backpressure choreography (deterministic queue saturation with a
+// gated backend, Overloaded for the excess, every admitted request
+// completing) is covered once, in the unit tests of
+// `coordinator::server` — which can also reach the endpoint internals
+// for precise gauge assertions. Duplicating that channel dance here
+// would just be a second copy to keep in sync.
+
+/// Per-model metrics stay isolated and the latency reservoir is bounded.
+#[test]
+fn per_model_metrics_and_bounded_latencies() {
+    let cm = calibrated(55, CalibConfig::default());
+    let eng = cm.engine(EngineKind::Int { threads: 1 }).unwrap();
+    let server = ModelServer::new(ServeConfig::default());
+    server.register("only", eng).unwrap();
+    let client = server.client();
+    for i in 0..12u64 {
+        client.infer("only", image(6000 + i)).unwrap();
+    }
+    let m = server.metrics("only").unwrap();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.latency.count(), 12);
+    assert!(m.latency_percentile(50.0) >= 0.0);
+    assert!(m.latency_percentile(99.0) >= m.latency_percentile(0.0));
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.swaps, 0);
+}

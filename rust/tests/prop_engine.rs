@@ -5,9 +5,7 @@
 //! path must hold that contract under concurrent submitters.
 
 use std::collections::HashMap;
-use std::sync::Arc;
 
-use dfq::coordinator::serve::{InferenceService, ServeConfig};
 use dfq::engine::int::{IntEngine, Scratch};
 use dfq::graph::bn_fold::FoldedParams;
 use dfq::prelude::*;
@@ -156,14 +154,15 @@ fn parallel_engine_serves_concurrent_submitters_bit_exactly() {
     let serial = calibrated.engine(EngineKind::Int { threads: 1 }).unwrap();
     let parallel = calibrated.engine(EngineKind::Int { threads: 4 }).unwrap();
 
-    let svc = Arc::new(InferenceService::start(parallel, ServeConfig::default()));
+    let server = ModelServer::new(ServeConfig::default());
+    server.register("rand", parallel).unwrap();
     let mut handles = Vec::new();
     for i in 0..24u64 {
-        let svc = svc.clone();
+        let client = server.client();
         let mut rng = Pcg::new(9100 + i);
         let img = images(&mut rng, 1);
         handles.push(std::thread::spawn(move || {
-            let row = svc.infer(img.clone()).unwrap();
+            let row = client.infer("rand", img.clone()).unwrap();
             (img, row)
         }));
     }
@@ -172,6 +171,6 @@ fn parallel_engine_serves_concurrent_submitters_bit_exactly() {
         let want = serial.run(&img).unwrap();
         assert_eq!(row, want.data, "served row != serial engine");
     }
-    let m = Arc::try_unwrap(svc).ok().expect("all clients joined").shutdown();
-    assert_eq!(m.completed, 24);
+    let report = server.shutdown();
+    assert_eq!(report[0].1.completed, 24);
 }

@@ -1,0 +1,212 @@
+//! **Compile-only stub** of the `xla` crate's API surface used by
+//! `dfq`'s PJRT runtime (`rust/src/runtime/{pjrt,exec,worker}.rs`).
+//!
+//! The real crate lives only in the build image's offline registry, so
+//! without this stub the `pjrt` cargo feature could not even be
+//! *type-checked* on a normal checkout — and the feature-gated runtime
+//! would silently rot. This crate mirrors exactly the types and method
+//! signatures `dfq` calls; every fallible operation returns
+//! [`Error::unavailable`] at run time, and the client/executable
+//! handles are `!Send` (an `Rc` marker) just like the real crate's
+//! `Rc`-based handles, so the worker-thread ownership discipline is
+//! enforced at compile time too.
+//!
+//! To run against the real PJRT client, swap the path dependency in the
+//! root `Cargo.toml` for the offline-registry `xla = "0.5"`.
+
+use std::rc::Rc;
+
+/// The stub error: every operation fails with it.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: xla stub (offline registry not available; this build \
+             type-checks the PJRT runtime but cannot execute artifacts)"
+        ))
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate's convention.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the runtime decomposes (the real enum is larger).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    /// 1-bit predicate
+    Pred,
+    /// signed 32-bit
+    S32,
+    /// signed 64-bit
+    S64,
+    /// 32-bit float
+    F32,
+    /// 64-bit float
+    F64,
+}
+
+/// Marker for element types a [`Literal`] can be built from.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// An array shape: dimensions plus element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element type.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side literal value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    /// The literal's array shape.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::unavailable("Literal::array_shape"))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// A parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text file.
+    pub fn from_text_file(path: impl AsRef<std::path::Path>) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-side buffer handle (`!Send`, like the real crate).
+pub struct PjRtBuffer {
+    _nosend: Rc<()>,
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to a host literal, synchronously.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable (`!Send`, like the real crate).
+pub struct PjRtLoadedExecutable {
+    _nosend: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed literals; one result row per device.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client handle (`!Send`, like the real crate).
+pub struct PjRtClient {
+    _nosend: Rc<()>,
+}
+
+impl PjRtClient {
+    /// Create the CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// The backing platform's name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_errs_with_a_helpful_message() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline registry"));
+        assert!(Literal::vec1(&[1.0f32]).to_vec::<f32>().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
