@@ -11,101 +11,128 @@
 //!   * one Algorithm-1 module search (the calibration inner loop),
 //!   * end-to-end ResNet-S integer inference per image.
 //!
-//!     cargo bench --bench hotpath
+//!     cargo bench --bench hotpath [-- --quick] [-- --json PATH]
+//!
+//! `--quick` trims warmup/iteration counts (CI smoke lanes); `--json
+//! PATH` additionally writes the measurements as a schema-versioned
+//! `BENCH_hotpath.json` document (see `dfq::report::bench`), validated
+//! by `dfq benchcheck`.
 
 use std::collections::HashMap;
 
-use dfq::graph::bn_fold::FoldedParams;
 use dfq::models::resnet;
 use dfq::prelude::*;
 use dfq::quant::algo1::{self, ModuleProblem, SearchConfig};
 use dfq::quant::scheme;
+use dfq::report::bench::{hotpath_json, BenchEntry};
 use dfq::tensor::im2col::{im2col, Padding};
 use dfq::tensor::{ops_int, TensorI32};
 use dfq::util::timer::{bench, fmt_secs, Stats};
 
-fn report(name: &str, macs_or_elems: f64, unit: &str, st: &Stats) {
-    println!(
-        "{name:<42} median {:>10}  p95 {:>10}  {:>8.2} {unit}",
-        fmt_secs(st.median()),
-        fmt_secs(st.percentile(95.0)),
-        macs_or_elems / st.median() / 1e9,
-    );
+/// Prints each measurement like the bench always has, and accumulates
+/// the same numbers as [`BenchEntry`]s for the optional `--json` dump.
+struct Recorder {
+    entries: Vec<BenchEntry>,
+}
+
+impl Recorder {
+    fn report(&mut self, name: &str, macs_or_elems: f64, unit: &str, st: &Stats) {
+        let median = st.median();
+        println!(
+            "{name:<42} median {:>10}  p95 {:>10}  {:>8.2} {unit}",
+            fmt_secs(median),
+            fmt_secs(st.percentile(95.0)),
+            macs_or_elems / median / 1e9,
+        );
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            median_s: median,
+            // small samples can interpolate p95 a hair under the median;
+            // clamp so the emitted document always validates
+            p95_s: st.percentile(95.0).max(median),
+            rate: macs_or_elems / median / 1e9,
+            unit: unit.to_string(),
+        });
+    }
 }
 
 fn main() {
+    // cargo passes `--bench` to harness-less bench binaries; skip it
+    let mut json_out: Option<String> = None;
+    let mut quick = false;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "--json" => {
+                json_out = Some(argv.next().unwrap_or_else(|| {
+                    eprintln!("--json needs a path");
+                    std::process::exit(2);
+                }));
+            }
+            "--quick" => quick = true,
+            "--bench" => {}
+            other => eprintln!("hotpath: ignoring unknown argument '{other}'"),
+        }
+    }
+    // (warmup, iters) per tier; --quick is the CI smoke configuration
+    let micro = if quick { (1usize, 5usize) } else { (3, 20) };
+    let e2e = if quick { (0usize, 2usize) } else { (1, 10) };
+    let compile_iters = if quick { (1usize, 5usize) } else { (3, 50) };
+    let mut rec = Recorder { entries: Vec::new() };
+
     let mut rng = Pcg::new(99);
 
     // --- integer GEMM (im2col'd 3x3x64 conv over a 16x16x64 fmap) ---
     let (m, k, n) = (256usize, 576usize, 64usize);
     let a: Vec<i32> = (0..m * k).map(|_| rng.int_range(0, 256) as i32).collect();
     let b: Vec<i32> = (0..k * n).map(|_| rng.int_range(-128, 128) as i32).collect();
-    let st = bench(3, 20, || {
+    let st = bench(micro.0, micro.1, || {
         std::hint::black_box(ops_int::gemm_i32(&a, &b, m, k, n));
     });
-    report("int GEMM 256x576x64", (m * k * n) as f64, "GMAC/s", &st);
+    rec.report("int GEMM 256x576x64", (m * k * n) as f64, "GMAC/s", &st);
 
     // --- f32 GEMM, same shape (the FP oracle's core) ---
     let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
     let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
-    let st = bench(3, 20, || {
+    let st = bench(micro.0, micro.1, || {
         std::hint::black_box(dfq::tensor::ops::gemm_f32(&af, &bf, m, k, n));
     });
-    report("f32 GEMM 256x576x64", (m * k * n) as f64, "GFLOP/s", &st);
+    rec.report("f32 GEMM 256x576x64", (m * k * n) as f64, "GFLOP/s", &st);
 
     // --- requantization shift over 1M accumulators ---
     let acc = TensorI32::from_vec(
         &[1 << 20],
         (0..1 << 20).map(|_| rng.int_range(-(1 << 24), 1 << 24) as i32).collect(),
     );
-    let st = bench(3, 20, || {
+    let st = bench(micro.0, micro.1, || {
         std::hint::black_box(scheme::requantize_tensor(&acc, 9, 8, true));
     });
-    report("requantize 1M accumulators", (1 << 20) as f64, "Gelem/s", &st);
+    rec.report("requantize 1M accumulators", (1 << 20) as f64, "Gelem/s", &st);
 
     // --- im2col 32x32x16, k3 ---
     let x = TensorI32::from_vec(
         &[1, 32, 32, 16],
         (0..32 * 32 * 16).map(|_| rng.int_range(0, 256) as i32).collect(),
     );
-    let st = bench(3, 20, || {
+    let st = bench(micro.0, micro.1, || {
         std::hint::black_box(im2col(&x, 3, 3, 1, Padding::Same));
     });
-    report("im2col 32x32x16 k3", (32 * 32 * 16 * 9) as f64, "Gelem/s", &st);
+    rec.report("im2col 32x32x16 k3", (32 * 32 * 16 * 9) as f64, "Gelem/s", &st);
 
     // --- one unified module (conv+bias+relu+requant) ---
     let w = TensorI32::from_vec(
         &[3, 3, 16, 16],
         (0..9 * 256).map(|_| rng.int_range(-128, 128) as i32).collect(),
     );
-    let st = bench(3, 20, || {
+    let st = bench(micro.0, micro.1, || {
         let acc = ops_int::conv2d_acc(&x, &w, 1, Padding::Same);
         std::hint::black_box(scheme::requantize_tensor(&acc, 9, 8, true));
     });
-    report("unified module 32x32x16->16 k3", (32 * 32 * 9 * 256) as f64, "GMAC/s", &st);
+    rec.report("unified module 32x32x16->16 k3", (32 * 32 * 9 * 256) as f64, "GMAC/s", &st);
 
     // --- the whole models, FP weights from He-init ---
     let graph = resnet::resnet_graph("resnet_s", 1, 10);
-    let mut folded: HashMap<String, FoldedParams> = HashMap::new();
-    for md in graph.weight_modules() {
-        let (shape, fan_in): (Vec<usize>, usize) = match &md.kind {
-            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
-                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
-            }
-            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
-            ModuleKind::Gap => unreachable!(),
-        };
-        let stdv = (2.0 / fan_in as f32).sqrt();
-        let numel: usize = shape.iter().product();
-        let cout = *shape.last().unwrap();
-        folded.insert(
-            md.name.clone(),
-            FoldedParams {
-                w: Tensor::from_vec(&shape, (0..numel).map(|_| rng.normal_ms(0.0, stdv)).collect()),
-                b: vec![0.0; cout],
-            },
-        );
-    }
+    let folded = resnet::synth_folded(&graph, 99);
     let calib = dfq::data::dataset::synth_images(1, 32, 3, 1);
     // the deployment path under test is the unified Session pipeline
     let session =
@@ -117,10 +144,10 @@ fn main() {
     let eng = IntEngine::new(&graph, &folded, &spec);
     let xb = dfq::data::dataset::synth_images(8, 32, 3, 2);
     let macs = graph.total_macs() as f64 * 8.0;
-    let st = bench(1, 10, || {
+    let st = bench(e2e.0, e2e.1, || {
         std::hint::black_box(eng.run(&xb).expect("int engine run"));
     });
-    report("resnet_s int8 e2e (batch 8)", macs, "GMAC/s", &st);
+    rec.report("resnet_s int8 e2e (batch 8)", macs, "GMAC/s", &st);
     println!(
         "  -> per image {}  ({:.1} img/s)",
         fmt_secs(st.median() / 8.0),
@@ -132,7 +159,7 @@ fn main() {
     // resolution + slot assignment); eng.run() above pays it per batch
     // (the interpreter-era behaviour), the cached-plan path below pays
     // it never.
-    let st_compile = bench(3, 50, || {
+    let st_compile = bench(compile_iters.0, compile_iters.1, || {
         std::hint::black_box(eng.plan().expect("plan compiles"));
     });
     println!(
@@ -143,15 +170,22 @@ fn main() {
         eng.plan().expect("plan compiles").len(),
         eng.plan().expect("plan compiles").slot_count(),
     );
+    rec.entries.push(BenchEntry {
+        name: "ExecPlan::compile resnet_s".to_string(),
+        median_s: st_compile.median(),
+        p95_s: st_compile.percentile(95.0).max(st_compile.median()),
+        rate: 1.0 / st_compile.median() / 1e9,
+        unit: "Gplan/s".to_string(),
+    });
     let plan = eng.plan().expect("plan compiles");
     let mut plan_scratch = dfq::engine::int::Scratch::new();
-    let st_cached = bench(1, 10, || {
+    let st_cached = bench(e2e.0, e2e.1, || {
         std::hint::black_box(
             eng.run_plan_scratch(&plan, &xb, &mut plan_scratch)
                 .expect("cached-plan run"),
         );
     });
-    report("resnet_s int8 e2e, cached plan (batch 8)", macs, "GMAC/s", &st_cached);
+    rec.report("resnet_s int8 e2e, cached plan (batch 8)", macs, "GMAC/s", &st_cached);
     println!(
         "  -> {:.2}x vs per-run compile+walk",
         st.median() / st_cached.median()
@@ -167,10 +201,10 @@ fn main() {
     let engine = calibrated
         .engine(EngineKind::Int { threads: 1 })
         .expect("int engine");
-    let st = bench(1, 10, || {
+    let st = bench(e2e.0, e2e.1, || {
         std::hint::black_box(engine.run(&xb).expect("engine run"));
     });
-    report("resnet_s int8 e2e via Engine (batch 8)", macs, "GMAC/s", &st);
+    rec.report("resnet_s int8 e2e via Engine (batch 8)", macs, "GMAC/s", &st);
 
     // --- data-parallel integer engine: batch sharded along N across the
     //     coordinator pool (bit-identical to serial by construction;
@@ -180,10 +214,10 @@ fn main() {
     let serial = calibrated
         .engine(EngineKind::Int { threads: 1 })
         .expect("serial int engine");
-    let st_serial = bench(1, 10, || {
+    let st_serial = bench(e2e.0, e2e.1, || {
         std::hint::black_box(serial.run(&xb16).expect("serial run"));
     });
-    report("int8 serve batch 16, serial", macs16, "GMAC/s", &st_serial);
+    rec.report("int8 serve batch 16, serial", macs16, "GMAC/s", &st_serial);
     let want = serial.run(&xb16).expect("serial run");
     for threads in [2usize, 4] {
         let par = calibrated
@@ -194,10 +228,10 @@ fn main() {
             want.data,
             "parallel engine must be bit-identical"
         );
-        let st_par = bench(1, 10, || {
+        let st_par = bench(e2e.0, e2e.1, || {
             std::hint::black_box(par.run(&xb16).expect("parallel run"));
         });
-        report(
+        rec.report(
             &format!("int8 serve batch 16, {threads} threads"),
             macs16,
             "GMAC/s",
@@ -230,8 +264,17 @@ fn main() {
         res: None,
         target: &facts["s0b0/c1"],
     };
-    let st = bench(1, 10, || {
+    let st = bench(e2e.0, e2e.1, || {
         std::hint::black_box(algo1::search(&problem, SearchConfig::default()));
     });
-    report("Algorithm-1 search (one module, tau=4)", 125.0, "kcand/s", &st);
+    rec.report("Algorithm-1 search (one module, tau=4)", 125.0, "kcand/s", &st);
+
+    // --- optional machine-readable dump for the perf trajectory ---
+    if let Some(path) = json_out {
+        let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+        let doc = hotpath_json(profile, &rec.entries);
+        dfq::report::bench::validate(&doc).expect("emitted document validates");
+        std::fs::write(&path, doc.dump() + "\n").expect("write --json output");
+        println!("wrote {} entries ({profile}) to {path}", rec.entries.len());
+    }
 }

@@ -216,7 +216,9 @@ pub(crate) fn run_batch<B: Backend + ?Sized>(
     match backend.run_batch(&batch) {
         Ok(out) => {
             let odim = out.numel() / bsz;
-            let mut m = metrics.lock().unwrap();
+            // counters survive a poisoner: they are monotonic snapshots,
+            // always safe to take even if a holder panicked mid-update
+            let mut m = metrics.lock().unwrap_or_else(|e| e.into_inner());
             m.batches += 1;
             m.occupancy_sum += rows.len();
             for (i, r) in rows.iter().enumerate() {

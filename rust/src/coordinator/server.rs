@@ -107,7 +107,7 @@ impl Endpoint {
             // atomic counter does the bounding); shutdown takes the
             // write lock, so it can never observe a counted request
             // whose send is still in flight
-            let guard = self.tx.read().unwrap();
+            let guard = self.tx.read().unwrap_or_else(|e| e.into_inner());
             let Some(tx) = guard.as_ref() else {
                 return Err(DfqError::serve(format!(
                     "model '{}' has been shut down",
@@ -118,7 +118,11 @@ impl Endpoint {
             if prev >= self.queue_depth {
                 shared.queued.fetch_sub(1, Ordering::SeqCst);
                 drop(guard);
-                shared.metrics.lock().unwrap().rejected += 1;
+                shared
+                    .metrics
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .rejected += 1;
                 return Err(DfqError::overloaded(shared.name.as_str(), self.queue_depth));
             }
             if tx
@@ -139,11 +143,13 @@ impl Endpoint {
 
     /// Stop admission, drain the queue and join the collector.
     fn stop(&self) -> ServeMetrics {
-        drop(self.tx.write().unwrap().take());
-        if let Some(w) = self.worker.lock().unwrap().take() {
+        drop(self.tx.write().unwrap_or_else(|e| e.into_inner()).take());
+        if let Some(w) =
+            self.worker.lock().unwrap_or_else(|e| e.into_inner()).take()
+        {
             w.join().ok();
         }
-        self.shared.metrics.lock().unwrap().clone()
+        self.shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 }
 
@@ -157,7 +163,7 @@ struct Inner {
 
 impl Inner {
     fn endpoint(&self, model: &str) -> Result<Arc<Endpoint>, DfqError> {
-        let models = self.models.read().unwrap();
+        let models = self.models.read().unwrap_or_else(|e| e.into_inner());
         if let Some(ep) = models.get(model) {
             return Ok(ep.clone());
         }
@@ -234,7 +240,7 @@ impl ModelServer {
         B: Backend + ?Sized + 'static,
     {
         self.check_cfg()?;
-        let mut models = self.inner.models.write().unwrap();
+        let mut models = self.inner.models.write().unwrap_or_else(|e| e.into_inner());
         if models.contains_key(name) {
             return Err(DfqError::invalid(format!(
                 "model '{name}' is already registered (use swap to replace it)"
@@ -263,7 +269,8 @@ impl ModelServer {
     ) -> Result<Arc<dyn Backend>, DfqError> {
         let ep = self.inner.endpoint(name)?;
         let old = {
-            let mut slot = ep.shared.backend.write().unwrap();
+            let mut slot =
+                ep.shared.backend.write().unwrap_or_else(|e| e.into_inner());
             std::mem::replace(&mut *slot, backend)
         };
         // drain: once we can take the run gate, the batch that may still
@@ -273,7 +280,7 @@ impl ModelServer {
         // somehow died mid-batch) must not fail the swap that repairs
         // the endpoint.
         drop(ep.shared.run_gate.lock().unwrap_or_else(|e| e.into_inner()));
-        ep.shared.metrics.lock().unwrap().swaps += 1;
+        ep.shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).swaps += 1;
         Ok(old)
     }
 
@@ -290,7 +297,7 @@ impl ModelServer {
         {
             // decide-and-register under one write lock so two concurrent
             // deploys of a fresh name can't both pick the register path
-            let mut models = self.inner.models.write().unwrap();
+            let mut models = self.inner.models.write().unwrap_or_else(|e| e.into_inner());
             if !models.contains_key(name) {
                 models.insert(
                     name.to_string(),
@@ -311,7 +318,13 @@ impl ModelServer {
     /// Registered model names, sorted.
     pub fn models(&self) -> Vec<String> {
         let mut names: Vec<String> =
-            self.inner.models.read().unwrap().keys().cloned().collect();
+            self.inner
+                .models
+                .read()
+                .unwrap_or_else(|e| e.into_inner())
+                .keys()
+                .cloned()
+                .collect();
         names.sort();
         names
     }
@@ -319,7 +332,8 @@ impl ModelServer {
     /// Snapshot one model's metrics.
     pub fn metrics(&self, name: &str) -> Result<ServeMetrics, DfqError> {
         let ep = self.inner.endpoint(name)?;
-        let m = ep.shared.metrics.lock().unwrap().clone();
+        let m =
+            ep.shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone();
         Ok(m)
     }
 
@@ -338,7 +352,7 @@ impl ModelServer {
     pub fn shutdown(self) -> Vec<(String, ServeMetrics)> {
         self.inner.stopped.store(true, Ordering::SeqCst);
         let endpoints: Vec<(String, Arc<Endpoint>)> = {
-            let mut models = self.inner.models.write().unwrap();
+            let mut models = self.inner.models.write().unwrap_or_else(|e| e.into_inner());
             models.drain().collect()
         };
         let mut out: Vec<(String, ServeMetrics)> = endpoints
@@ -357,7 +371,7 @@ impl Drop for ModelServer {
     fn drop(&mut self) {
         self.inner.stopped.store(true, Ordering::SeqCst);
         let endpoints: Vec<Arc<Endpoint>> = {
-            let mut models = self.inner.models.write().unwrap();
+            let mut models = self.inner.models.write().unwrap_or_else(|e| e.into_inner());
             models.drain().map(|(_, ep)| ep).collect()
         };
         for ep in endpoints {
@@ -437,7 +451,12 @@ fn collector(rx: Receiver<Request>, shared: Arc<EndpointShared>, cfg: ServeConfi
             Err(_) => return, // admission stopped and the queue is drained
         };
         shared.queued.fetch_sub(1, Ordering::SeqCst);
-        let bsz = shared.backend.read().unwrap().batch_size().max(1);
+        let bsz = shared
+            .backend
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .batch_size()
+            .max(1);
         let mut pending = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
         while pending.len() < bsz {
@@ -459,7 +478,8 @@ fn collector(rx: Receiver<Request>, shared: Arc<EndpointShared>, cfg: ServeConfi
         // first, so once it holds this gate no later batch can see the
         // old one
         let gate = shared.run_gate.lock().unwrap_or_else(|e| e.into_inner());
-        let backend = shared.backend.read().unwrap().clone();
+        let backend =
+            shared.backend.read().unwrap_or_else(|e| e.into_inner()).clone();
         // a swap during collection may have changed the batch size; the
         // backend contract is per-call, so chunk to its current size
         let bsz = backend.batch_size().max(1);
@@ -956,6 +976,41 @@ mod tests {
         let m = server.metrics("m").unwrap();
         assert_eq!(m.completed, 1);
         assert_eq!(m.swaps, 1);
+    }
+
+    #[test]
+    fn poisoned_metrics_lock_recovers_instead_of_cascading() {
+        // regression: every lock acquisition used to be a bare
+        // `.unwrap()`, so one panicking holder cascaded panics through
+        // metrics(), queue_len(), infer() and shutdown() on unrelated
+        // paths. The state under these locks is counters and registry
+        // snapshots — always safe to take — so acquisition now recovers
+        // with `unwrap_or_else(|e| e.into_inner())`.
+        let server = single(SumBackend::plain(4), cfg_ms(1));
+        let metrics = {
+            let models =
+                server.inner.models.read().unwrap_or_else(|e| e.into_inner());
+            models.get("m").unwrap().shared.metrics.clone()
+        };
+        let m2 = metrics.clone();
+        std::thread::spawn(move || {
+            let _held = m2.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join()
+        .unwrap_err();
+        assert!(metrics.is_poisoned(), "test setup: mutex must be poisoned");
+        // every public surface still works over the poisoned lock
+        let client = server.client();
+        assert_eq!(client.infer("m", img(1.0)).unwrap(), vec![4.0]);
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 1);
+        assert_eq!(server.queue_len("m").unwrap(), 0);
+        server.swap("m", Arc::new(SumBackend { batch: 4, k: 2.0 })).unwrap();
+        assert_eq!(client.infer("m", img(1.0)).unwrap(), vec![8.0]);
+        let report = server.shutdown();
+        assert_eq!(report[0].1.completed, 2);
+        assert_eq!(report[0].1.swaps, 1);
     }
 
     #[test]

@@ -42,6 +42,80 @@ pub enum DfqError {
     },
     /// User-supplied configuration is invalid.
     InvalidInput(String),
+    /// A `dfq::wire` protocol violation or transport failure, by
+    /// [`WireFault`] kind — what a `dfq serve --listen` server or a
+    /// [`crate::wire::WireClient`] reports when a peer sends garbage,
+    /// truncates a frame, or the socket fails.
+    Wire {
+        /// the protocol-level fault class
+        fault: WireFault,
+        /// human-readable detail
+        message: String,
+    },
+}
+
+/// How a wire frame (or the stream carrying it) was invalid. Carried by
+/// [`DfqError::Wire`]; every decoder rejection is one of these, so tests
+/// and retry policies can match on the class instead of parsing strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// the frame did not start with the `dfq1` magic bytes
+    BadMagic,
+    /// the peer speaks a different protocol version
+    BadVersion,
+    /// an unknown frame-type byte
+    UnknownFrame,
+    /// the stream ended (or stalled past its budget) inside a frame
+    Truncated,
+    /// the declared payload length exceeds the hard frame-size cap
+    Oversized,
+    /// the payload bytes do not parse as the declared frame type
+    Malformed,
+    /// a socket-level failure (connect, read, write, timeout)
+    Io,
+}
+
+impl WireFault {
+    /// Stable one-word label (used in `Display` and on the wire).
+    pub fn label(&self) -> &'static str {
+        match self {
+            WireFault::BadMagic => "bad-magic",
+            WireFault::BadVersion => "bad-version",
+            WireFault::UnknownFrame => "unknown-frame",
+            WireFault::Truncated => "truncated",
+            WireFault::Oversized => "oversized",
+            WireFault::Malformed => "malformed",
+            WireFault::Io => "io",
+        }
+    }
+
+    /// Stable numeric code for the wire encoding of error frames.
+    pub fn code(&self) -> u32 {
+        match self {
+            WireFault::BadMagic => 1,
+            WireFault::BadVersion => 2,
+            WireFault::UnknownFrame => 3,
+            WireFault::Truncated => 4,
+            WireFault::Oversized => 5,
+            WireFault::Malformed => 6,
+            WireFault::Io => 7,
+        }
+    }
+
+    /// Inverse of [`WireFault::code`] (`None` for unknown codes, so a
+    /// newer peer's fault class degrades gracefully).
+    pub fn from_code(code: u32) -> Option<WireFault> {
+        Some(match code {
+            1 => WireFault::BadMagic,
+            2 => WireFault::BadVersion,
+            3 => WireFault::UnknownFrame,
+            4 => WireFault::Truncated,
+            5 => WireFault::Oversized,
+            6 => WireFault::Malformed,
+            7 => WireFault::Io,
+            _ => return None,
+        })
+    }
 }
 
 impl DfqError {
@@ -85,6 +159,11 @@ impl DfqError {
     pub fn invalid(msg: impl Into<String>) -> DfqError {
         DfqError::InvalidInput(msg.into())
     }
+
+    /// A wire-protocol violation or transport failure.
+    pub fn wire(fault: WireFault, msg: impl Into<String>) -> DfqError {
+        DfqError::Wire { fault, message: msg.into() }
+    }
 }
 
 impl fmt::Display for DfqError {
@@ -101,6 +180,9 @@ impl fmt::Display for DfqError {
                 "overloaded: model '{model}' admission queue is full (depth {depth})"
             ),
             DfqError::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            DfqError::Wire { fault, message } => {
+                write!(f, "wire/{}: {message}", fault.label())
+            }
         }
     }
 }
@@ -157,6 +239,26 @@ mod tests {
         assert_eq!(e, DfqError::Overloaded { model: "resnet_s".into(), depth: 64 });
         assert!(e.to_string().contains("resnet_s"));
         assert!(e.to_string().contains("64"));
+    }
+
+    #[test]
+    fn wire_fault_codes_roundtrip() {
+        for fault in [
+            WireFault::BadMagic,
+            WireFault::BadVersion,
+            WireFault::UnknownFrame,
+            WireFault::Truncated,
+            WireFault::Oversized,
+            WireFault::Malformed,
+            WireFault::Io,
+        ] {
+            assert_eq!(WireFault::from_code(fault.code()), Some(fault));
+        }
+        assert_eq!(WireFault::from_code(0), None);
+        assert_eq!(WireFault::from_code(999), None);
+        let e = DfqError::wire(WireFault::Oversized, "payload 99MB > cap");
+        assert!(e.to_string().contains("oversized"), "{e}");
+        assert!(e.to_string().contains("99MB"), "{e}");
     }
 
     #[test]

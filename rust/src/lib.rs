@@ -77,6 +77,23 @@
 //! (latency percentiles come from a fixed-size reservoir, so a
 //! long-running server's memory stays flat).
 //!
+//! ## Cross-process serving: the wire layer
+//!
+//! [`wire`] puts a network boundary in front of the `ModelServer` with
+//! **zero new dependencies** (std sockets only): `dfq serve --listen
+//! HOST:PORT` / `--uds PATH` speaks a versioned, length-prefixed binary
+//! protocol ([`wire::frame`], specified byte-for-byte) carrying
+//! inference, metrics snapshots, model listing and graceful shutdown.
+//! Remote requests submit through the same in-process [`session::Client`]
+//! path, so admission control, batching and hot-swap apply unchanged,
+//! and results are bit-identical to in-process execution; overload comes
+//! back as a typed [`error::DfqError::Overloaded`] frame. The client
+//! side is [`wire::WireClient`] (`dfq client`), and `dfq loadgen` drives
+//! open-loop traffic against a live server, recording throughput,
+//! latency percentiles and shed rate to `BENCH_serve.json`
+//! ([`report::bench`] keeps that file and `BENCH_hotpath.json`
+//! schema-checked, so the perf trajectory stays machine-readable).
+//!
 //! ## The `ExecPlan` IR
 //!
 //! Both engines execute one compiled IR ([`engine::plan::ExecPlan`]):
@@ -136,6 +153,7 @@ pub mod runtime;
 pub mod session;
 pub mod tensor;
 pub mod util;
+pub mod wire;
 
 /// Convenient re-exports for examples and downstream users — centred on
 /// the [`session`] pipeline (`Session` → `CalibratedModel` → `Engine`),
@@ -157,4 +175,7 @@ pub mod prelude {
     };
     pub use crate::tensor::{Shape, Tensor, TensorI32};
     pub use crate::util::rng::Pcg;
+    pub use crate::wire::{
+        WireAddr, WireClient, WireClientConfig, WireServer, WireServerConfig,
+    };
 }

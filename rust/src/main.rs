@@ -9,12 +9,21 @@
 //! dfq inspect   --model NAME
 //! dfq serve     [--model NAME[=KIND]]... [--requests N] [--engine KIND]
 //!               [--max-wait MS] [--queue-depth N]
+//!               [--listen HOST:PORT | --uds PATH] [--synthetic]
+//! dfq client    --connect ADDR [infer|metrics|list|shutdown] [--model NAME]
+//! dfq loadgen   --connect ADDR [--rps N] [--duration S] [--burst]
+//! dfq benchcheck --file BENCH_x.json ...
 //! ```
 //!
 //! Everything runs from the AOT artifacts through the unified
-//! `Session` pipeline; python is never invoked.
+//! `Session` pipeline; python is never invoked. `--synthetic` swaps the
+//! artifacts for deterministic He-initialised weights, so the wire
+//! stack (`serve --listen`, `client`, `loadgen`) runs anywhere — CI
+//! included — with zero build-time inputs.
 
 use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
 
 use dfq::coordinator::pool::Pool;
 use dfq::graph::fuse;
@@ -38,18 +47,33 @@ const COMMANDS: &[(&str, &[&str])] = &[
     ("inspect", &["model", "plan"]),
     (
         "serve",
-        &["model", "requests", "engine", "artifacts", "threads", "max-wait", "queue-depth"],
+        &[
+            "model", "requests", "engine", "artifacts", "threads", "max-wait", "queue-depth",
+            "listen", "uds", "synthetic", "seed", "max-connections",
+        ],
     ),
+    ("client", &["connect", "model", "count", "seed", "timeout-ms", "hw", "channels"]),
+    (
+        "loadgen",
+        &[
+            "connect", "model", "rps", "duration", "connections", "burst", "out", "seed", "hw",
+            "channels", "timeout-ms",
+        ],
+    ),
+    ("benchcheck", &["file"]),
 ];
 
 /// Minimal flag parser: `--key value` pairs + a subcommand, validated
 /// against [`COMMANDS`]. Flags are repeatable (`--model a --model b`
 /// collects both; single-value accessors take the last occurrence).
-/// `help`/`--help`/`-h`/no arguments and unknown subcommands print usage
-/// and exit 0; unknown flags exit 2.
+/// Bare words that don't follow a flag are collected as positionals
+/// (`dfq client --connect ... infer`). `help`/`--help`/`-h`/no
+/// arguments and unknown subcommands print usage and exit 0; unknown
+/// flags exit 2.
 struct Args {
     cmd: String,
     flags: HashMap<String, Vec<String>>,
+    pos: Vec<String>,
 }
 
 impl Args {
@@ -76,6 +100,7 @@ impl Args {
             flags.entry(k).or_default().push(v);
         };
         let mut key: Option<String> = None;
+        let mut pos: Vec<String> = Vec::new();
         for a in it {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some(k) = key.take() {
@@ -85,14 +110,13 @@ impl Args {
             } else if let Some(k) = key.take() {
                 push(k, a);
             } else {
-                eprintln!("unexpected argument: {a}");
-                std::process::exit(2);
+                pos.push(a);
             }
         }
         if let Some(k) = key.take() {
             push(k, "true".to_string());
         }
-        Args { cmd, flags }
+        Args { cmd, flags, pos }
     }
 
     fn get(&self, k: &str) -> Option<&str> {
@@ -139,6 +163,9 @@ fn main() {
         "hwcost" => cmd_hwcost(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "loadgen" => cmd_loadgen(&args),
+        "benchcheck" => cmd_benchcheck(&args),
         other => unreachable!("Args::parse admitted unknown command '{other}'"),
     };
     if let Err(e) = result {
@@ -159,11 +186,25 @@ COMMANDS:
   detect     Table-4 style detection eval (--bits, --eval-n)
   hwcost     RTL cost model (--clock MHz)
   inspect    dataflow analysis + quant-point report (--model [--plan])
-  serve      multi-model batching server demo: registers every --model as a
+  serve      multi-model batching server: registers every --model as a
              named endpoint, routes interleaved traffic by name
              (--model NAME[=KIND] repeatable, --requests,
               --engine fp|int|int:N|int:auto|pjrt  default KIND,
-              --threads, --max-wait MS, --queue-depth N)
+              --threads, --max-wait MS, --queue-depth N).
+             With --listen HOST:PORT or --uds PATH it serves remote
+             clients over the dfq wire protocol instead of running the
+             local demo traffic (--max-connections bounds the acceptor
+             pool); --synthetic [--seed N] uses deterministic
+             He-initialised weights instead of the AOT artifacts.
+  client     talk to a running wire server: dfq client --connect ADDR
+             [infer|metrics|list|shutdown]  (infer: --model, --count,
+              --seed, --hw, --channels; --timeout-ms bounds each call)
+  loadgen    open-loop load generator against a wire server
+             (--connect ADDR, --model, --rps, --duration S,
+              --connections, --burst, --seed, --out FILE; writes the
+              schema-versioned BENCH_serve.json report)
+  benchcheck validate BENCH_*.json documents against the bench schema
+             (--file PATH, repeatable; non-zero exit on any failure)
 
 COMMON FLAGS:
   --artifacts DIR   artifacts directory (default: artifacts)
@@ -389,7 +430,6 @@ fn parse_model_spec(spec: &str, default: EngineKind) -> Result<(String, EngineKi
 }
 
 fn cmd_serve(args: &Args) -> Result<(), DfqError> {
-    let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
     let n_req = args.usize_or("requests", 64);
     // the serve hot path defaults to the machine-sized data-parallel
     // integer engine; --engine int pins it serial, --threads overrides
@@ -457,16 +497,57 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
 
     // the whole deployment pipeline, once per model: session ->
     // calibrate -> engine -> named endpoint (any engine serves via the
-    // blanket Backend impl)
-    let calib = art.calibration_images(1)?;
+    // blanket Backend impl). --synthetic swaps the AOT artifacts for
+    // deterministic He-init weights, so the wire stack stands up with
+    // zero build-time inputs (CI smoke lanes).
+    let synthetic = args.has("synthetic");
+    let seed = args.usize_or("seed", 7) as u64;
     let server = ModelServer::new(cfg);
-    for (name, kind) in &specs {
-        let session = Session::from_artifacts(&art, name)?;
-        let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
-        calibrated.deploy_into(&server, name, *kind)?;
-        println!("registered '{name}' ({kind} engine)");
+    let art = if synthetic {
+        let calib = dfq::data::dataset::synth_images(1, 32, 3, seed);
+        for (name, kind) in &specs {
+            let graph = resnet::by_name(name).ok_or_else(|| {
+                DfqError::invalid(format!(
+                    "--synthetic serves the built-in resnet_{{s,m,l}} graphs; \
+                     '{name}' is not one"
+                ))
+            })?;
+            let folded = resnet::synth_folded(&graph, seed);
+            let session = Session::from_graph(graph, folded)?;
+            let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
+            calibrated.deploy_into(&server, name, *kind)?;
+            println!("registered '{name}' ({kind} engine, synthetic weights)");
+        }
+        None
+    } else {
+        let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
+        let calib = art.calibration_images(1)?;
+        for (name, kind) in &specs {
+            let session = Session::from_artifacts(&art, name)?;
+            let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
+            calibrated.deploy_into(&server, name, *kind)?;
+            println!("registered '{name}' ({kind} engine)");
+        }
+        Some(art)
+    };
+
+    // --listen/--uds: expose the registry to remote clients over the
+    // wire protocol instead of running the local demo traffic
+    match (args.get("listen"), args.get("uds")) {
+        (Some(_), Some(_)) => {
+            return Err(DfqError::invalid("--listen and --uds are mutually exclusive"))
+        }
+        (Some(hp), None) => return serve_wire(args, WireAddr::Tcp(hp.to_string()), server),
+        (None, Some(path)) => return serve_wire(args, WireAddr::Uds(path.into()), server),
+        (None, None) => {}
     }
 
+    let art = art.ok_or_else(|| {
+        DfqError::invalid(
+            "the local serve demo measures top-1 against the artifacts dataset; \
+             combine --synthetic with --listen or --uds",
+        )
+    })?;
     let ds = art.classification_set("synthimagenet_val")?;
     let t = Timer::start();
     let mut handles = Vec::new();
@@ -479,45 +560,268 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
             (x, labels[0])
         };
         handles.push(std::thread::spawn(move || {
-            let out = match client.infer(&name, img) {
-                Ok(out) => out,
-                Err(DfqError::Overloaded { .. }) => return (0usize, 1usize),
-                Err(e) => panic!("serve failed: {e}"),
-            };
-            let mut best = 0usize;
-            for (j, v) in out.iter().enumerate() {
-                if *v > out[best] {
-                    best = j;
+            // a failed request is a counted outcome, not a panic: one
+            // bad request must never take down its load-driving thread
+            match client.infer(&name, img) {
+                Ok(out) => {
+                    let mut best = 0usize;
+                    for (j, v) in out.iter().enumerate() {
+                        if *v > out[best] {
+                            best = j;
+                        }
+                    }
+                    ((best as i32 == label) as usize, 0usize, 0usize, None)
                 }
+                Err(DfqError::Overloaded { .. }) => (0, 1, 0, None),
+                Err(e) => (0, 0, 1, Some(e.to_string())),
             }
-            ((best as i32 == label) as usize, 0usize)
         }));
     }
-    let (correct, shed): (usize, usize) = handles
-        .into_iter()
-        .map(|h| h.join().unwrap())
-        .fold((0, 0), |(c, s), (hit, rej)| (c + hit, s + rej));
+    let mut correct = 0usize;
+    let mut shed = 0usize;
+    let mut failed = 0usize;
+    let mut first_error: Option<String> = None;
+    for h in handles {
+        let (hit, rej, err, msg) = h
+            .join()
+            .unwrap_or_else(|_| (0, 0, 1, Some("request thread panicked".into())));
+        correct += hit;
+        shed += rej;
+        failed += err;
+        if first_error.is_none() {
+            first_error = msg;
+        }
+    }
+    let served = n_req - shed - failed;
     let secs = t.secs();
     println!(
-        "served {} requests across {} model(s) in {secs:.2}s ({:.1} req/s), \
-         top-1 {:.1}%{}",
-        n_req - shed,
+        "served {served} requests across {} model(s) in {secs:.2}s ({:.1} req/s), \
+         top-1 {:.1}%{}{}",
         specs.len(),
-        (n_req - shed) as f64 / secs,
-        100.0 * correct as f64 / (n_req - shed).max(1) as f64,
-        if shed > 0 { format!(", {shed} shed by admission control") } else { String::new() }
+        served as f64 / secs,
+        100.0 * correct as f64 / served.max(1) as f64,
+        if shed > 0 { format!(", {shed} shed by admission control") } else { String::new() },
+        if failed > 0 { format!(", {failed} failed") } else { String::new() }
     );
+    if let Some(e) = first_error {
+        println!("  first failure: {e}");
+    }
     for (name, m) in server.shutdown() {
-        println!(
-            "  {name}: {} ok / {} rejected, {} batches (mean occupancy {:.1}), \
-             latency p50 {:.1} ms / p99 {:.1} ms",
-            m.completed,
-            m.rejected,
-            m.batches,
-            m.mean_occupancy(),
-            m.latency_percentile(50.0) * 1e3,
-            m.latency_percentile(99.0) * 1e3
-        );
+        print_endpoint_metrics(&name, &m);
+    }
+    Ok(())
+}
+
+/// One endpoint's shutdown/metrics summary line (shared by the demo
+/// and wire serving paths).
+fn print_endpoint_metrics(name: &str, m: &ServeMetrics) {
+    println!(
+        "  {name}: {} ok / {} rejected, {} batches (mean occupancy {:.1}), \
+         latency p50 {:.1} ms / p99 {:.1} ms",
+        m.completed,
+        m.rejected,
+        m.batches,
+        m.mean_occupancy(),
+        m.latency_percentile(50.0) * 1e3,
+        m.latency_percentile(99.0) * 1e3
+    );
+}
+
+/// `dfq serve --listen/--uds`: run the wire acceptor over the populated
+/// registry until a client sends a `Shutdown` frame.
+fn serve_wire(args: &Args, addr: WireAddr, server: ModelServer) -> Result<(), DfqError> {
+    let wire_cfg = WireServerConfig {
+        max_connections: args
+            .usize_or("max-connections", WireServerConfig::default().max_connections),
+        ..WireServerConfig::default()
+    };
+    let wire = WireServer::bind(&addr, wire_cfg)?;
+    // the connect string (real port for tcp `:0`) goes to stdout first
+    // and flushed, so scripts can wait on it for readiness
+    println!("listening on {}", wire.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let server = Arc::new(server);
+    let stats = wire.serve(server.clone());
+    println!(
+        "wire: {} connections accepted, {} rejected at capacity, \
+         {} protocol errors, {} requests",
+        stats.accepted, stats.rejected_capacity, stats.protocol_errors, stats.requests
+    );
+    match Arc::try_unwrap(server) {
+        // serve() joins every handler before returning, so this is the
+        // expected path: drain the queues and report final metrics
+        Ok(server) => {
+            for (name, m) in server.shutdown() {
+                print_endpoint_metrics(&name, &m);
+            }
+        }
+        Err(server) => {
+            for name in server.models() {
+                if let Ok(m) = server.metrics(&name) {
+                    print_endpoint_metrics(&name, &m);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<(), DfqError> {
+    let connect = args.get("connect").ok_or_else(|| {
+        DfqError::invalid("--connect required (tcp:HOST:PORT or unix:/path)")
+    })?;
+    let addr = WireAddr::parse(connect)?;
+    let timeout = Duration::from_millis(args.usize_or("timeout-ms", 30_000) as u64);
+    let ccfg = WireClientConfig { read_timeout: timeout, ..Default::default() };
+    let action = args.pos.first().map(|s| s.as_str()).unwrap_or("infer");
+    let mut client = WireClient::connect(&addr, ccfg)?;
+    match action {
+        "list" => {
+            for m in client.list()? {
+                println!("{m}");
+            }
+        }
+        "metrics" => {
+            let m = client.metrics(args.str_or("model", "resnet_s"))?;
+            println!(
+                "{}: {} completed / {} rejected, {} batches, {} swaps, \
+                 queue {}, latency p50 {:.1} ms / p99 {:.1} ms / p99.9 {:.1} ms",
+                m.model,
+                m.completed,
+                m.rejected,
+                m.batches,
+                m.swaps,
+                m.queue_len,
+                m.p50_s * 1e3,
+                m.p99_s * 1e3,
+                m.p999_s * 1e3
+            );
+        }
+        "infer" => {
+            let model = args.str_or("model", "resnet_s");
+            let count = args.usize_or("count", 1);
+            let seed = args.usize_or("seed", 0) as u64;
+            let hw = args.usize_or("hw", 32);
+            let c = args.usize_or("channels", 3);
+            for i in 0..count {
+                let img =
+                    dfq::data::dataset::synth_images(1, hw, c, seed.wrapping_add(i as u64));
+                let t = Timer::start();
+                let out = client.infer(model, img)?;
+                let mut best = 0usize;
+                for (j, v) in out.iter().enumerate() {
+                    if *v > out[best] {
+                        best = j;
+                    }
+                }
+                println!(
+                    "#{i}: class {best} (score {:.4}, {} classes) in {:.2} ms",
+                    out[best],
+                    out.len(),
+                    t.secs() * 1e3
+                );
+            }
+        }
+        "shutdown" => {
+            client.shutdown_server()?;
+            println!("server acknowledged shutdown");
+        }
+        other => {
+            return Err(DfqError::invalid(format!(
+                "unknown client action '{other}' (infer|metrics|list|shutdown)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<(), DfqError> {
+    let connect = args.get("connect").ok_or_else(|| {
+        DfqError::invalid("--connect required (tcp:HOST:PORT or unix:/path)")
+    })?;
+    let duration: f64 = args
+        .get("duration")
+        .map(|s| s.parse().map_err(|_| DfqError::invalid("--duration must be seconds")))
+        .transpose()?
+        .unwrap_or(5.0);
+    let rps: f64 = args
+        .get("rps")
+        .map(|s| s.parse().map_err(|_| DfqError::invalid("--rps must be a number")))
+        .transpose()?
+        .unwrap_or(50.0);
+    let cfg = dfq::wire::LoadgenConfig {
+        addr: WireAddr::parse(connect)?,
+        model: args.str_or("model", "resnet_s").to_string(),
+        rps,
+        duration: Duration::from_secs_f64(duration),
+        connections: args.usize_or("connections", 8),
+        burst: args.has("burst"),
+        image_hw: args.usize_or("hw", 32),
+        image_c: args.usize_or("channels", 3),
+        seed: args.usize_or("seed", 0) as u64,
+        client: WireClientConfig {
+            read_timeout: Duration::from_millis(args.usize_or("timeout-ms", 30_000) as u64),
+            ..Default::default()
+        },
+    };
+    let report = dfq::wire::loadgen::run(&cfg)?;
+    println!(
+        "loadgen {} @ {} rps for {:.1}s{}: {} sent, {} completed \
+         ({:.1} rps), {} shed ({:.1}%), {} errors, {} client-saturated",
+        cfg.model,
+        cfg.rps,
+        report.wall_secs,
+        if cfg.burst { " (burst)" } else { "" },
+        report.sent,
+        report.completed,
+        report.throughput_rps(),
+        report.shed,
+        report.shed_rate() * 100.0,
+        report.errors,
+        report.client_saturated
+    );
+    let pct = |p: f64| {
+        let v = report.latency.percentile(p) * 1e3;
+        if v.is_finite() {
+            v
+        } else {
+            0.0
+        }
+    };
+    println!(
+        "  latency p50 {:.2} ms / p90 {:.2} ms / p99 {:.2} ms / p99.9 {:.2} ms",
+        pct(50.0),
+        pct(90.0),
+        pct(99.0),
+        pct(99.9)
+    );
+    if let Some(e) = &report.first_error {
+        println!("  first error: {e}");
+    }
+    let out = args.str_or("out", "BENCH_serve.json");
+    let doc = report.to_json(&cfg);
+    dfq::report::bench::validate(&doc).map_err(|e| {
+        DfqError::serve(format!("emitted report failed its own schema: {e}"))
+    })?;
+    std::fs::write(out, doc.dump() + "\n").map_err(|e| DfqError::io(out, &e))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_benchcheck(args: &Args) -> Result<(), DfqError> {
+    let files = args.all("file");
+    if files.is_empty() {
+        return Err(DfqError::invalid("--file PATH required (repeatable)"));
+    }
+    for f in files {
+        let text =
+            std::fs::read_to_string(f).map_err(|e| DfqError::io(f.as_str(), &e))?;
+        let doc = dfq::util::json::Json::parse(&text)
+            .map_err(|e| DfqError::data(format!("{f}: not valid JSON: {e}")))?;
+        dfq::report::bench::validate(&doc)
+            .map_err(|e| DfqError::data(format!("{f}: schema violation: {e}")))?;
+        println!("{f}: ok");
     }
     Ok(())
 }

@@ -94,6 +94,44 @@ pub fn by_name(name: &str) -> Option<Graph> {
     Some(resnet_graph(name, blocks_for(variant)?, 10))
 }
 
+/// Deterministic He-initialised folded parameters for every weight
+/// module of `graph` — the artifact-free way to stand a model up
+/// (benches, `dfq serve --synthetic`, CI smoke lanes) when no trained
+/// weights exist. Same seed, same graph → bit-identical parameters.
+pub fn synth_folded(
+    graph: &Graph,
+    seed: u64,
+) -> std::collections::HashMap<String, crate::graph::bn_fold::FoldedParams> {
+    use crate::graph::bn_fold::FoldedParams;
+    use crate::tensor::Tensor;
+
+    let mut rng = crate::util::rng::Pcg::new(seed);
+    let mut folded = std::collections::HashMap::new();
+    for md in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &md.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!("weight_modules yields no Gap"),
+        };
+        let stdv = (2.0 / fan_in as f32).sqrt();
+        let numel: usize = shape.iter().product();
+        let cout = *shape.last().expect("weight shapes are non-empty");
+        folded.insert(
+            md.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(
+                    &shape,
+                    (0..numel).map(|_| rng.normal_ms(0.0, stdv)).collect(),
+                ),
+                b: vec![0.0; cout],
+            },
+        );
+    }
+    folded
+}
+
 /// The same model in *fine-grained* layer form (pre-fusion) — input to
 /// the dataflow pass; `fuse(resnet_layers(..))` must equal
 /// `resnet_graph(..)` (tested below), which demonstrates the paper's
@@ -262,5 +300,26 @@ mod tests {
         assert!(by_name("resnet_l").is_some());
         assert!(by_name("resnet_x").is_none());
         assert!(by_name("detnet").is_none());
+    }
+
+    #[test]
+    fn synth_folded_is_deterministic_and_complete() {
+        let g = resnet_graph("resnet_s", 1, 10);
+        let a = synth_folded(&g, 7);
+        let b = synth_folded(&g, 7);
+        let c = synth_folded(&g, 8);
+        let mut covered = 0usize;
+        for md in g.weight_modules() {
+            let pa = &a[&md.name];
+            assert_eq!(pa.w.data, b[&md.name].w.data, "{}", md.name);
+            assert_ne!(pa.w.data, c[&md.name].w.data, "{}", md.name);
+            assert!(pa.b.iter().all(|&x| x == 0.0));
+            covered += 1;
+        }
+        assert_eq!(a.len(), covered);
+        // the synthesized params really drive the full pipeline
+        let session =
+            crate::session::Session::from_graph(g, a).expect("session");
+        drop(session);
     }
 }

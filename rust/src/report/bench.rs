@@ -1,0 +1,324 @@
+//! The machine-readable perf trajectory: the schema behind
+//! `BENCH_serve.json` (written by `dfq loadgen`, see
+//! [`crate::wire::loadgen::LoadReport::to_json`]) and
+//! `BENCH_hotpath.json` (written by `cargo bench --bench hotpath --
+//! --json PATH`), plus the [`validate`] check `dfq benchcheck` and CI
+//! run over both — so a malformed emitter fails the build instead of
+//! silently rotting the trajectory every later PR diffs against.
+//!
+//! Both documents share the envelope `{ "bench": "serve"|"hotpath",
+//! "schema_version": N, ... }`; extra keys are allowed everywhere
+//! (emitters may enrich, validators must tolerate), missing or
+//! ill-typed required keys are errors.
+
+use crate::util::json::{self, Json};
+
+/// Version stamped into every emitted bench document; bump when a
+/// required key changes meaning.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// One named measurement in `BENCH_hotpath.json`.
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    /// measurement name (e.g. `int_engine/resnet_s/b8`)
+    pub name: String,
+    /// median seconds per iteration
+    pub median_s: f64,
+    /// p95 seconds per iteration
+    pub p95_s: f64,
+    /// work rate at the median (unit given by `unit`; 0 when N/A)
+    pub rate: f64,
+    /// what `rate` counts (e.g. `GMAC/s`, `img/s`)
+    pub unit: String,
+}
+
+/// Assemble the `BENCH_hotpath.json` document from measured entries.
+pub fn hotpath_json(profile: &str, entries: &[BenchEntry]) -> Json {
+    json::obj(vec![
+        ("bench", json::s("hotpath")),
+        ("schema_version", json::num(BENCH_SCHEMA_VERSION as f64)),
+        ("profile", json::s(profile)),
+        (
+            "entries",
+            json::arr(entries.iter().map(|e| {
+                json::obj(vec![
+                    ("name", json::s(&e.name)),
+                    ("median_s", json::num(e.median_s)),
+                    ("p95_s", json::num(e.p95_s)),
+                    ("rate", json::num(e.rate)),
+                    ("unit", json::s(&e.unit)),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn want_f64(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
+    doc.req(key)
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_f64()
+        .ok_or_else(|| format!("{path}.{key}: expected a number"))
+}
+
+fn want_count(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
+    let v = want_f64(doc, path, key)?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(format!(
+            "{path}.{key}: expected a non-negative integer, got {v}"
+        ));
+    }
+    Ok(v)
+}
+
+fn want_str<'a>(
+    doc: &'a Json,
+    path: &str,
+    key: &str,
+) -> Result<&'a str, String> {
+    doc.req(key)
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_str()
+        .ok_or_else(|| format!("{path}.{key}: expected a string"))
+}
+
+/// Validate a parsed bench document against its schema (dispatching on
+/// the `"bench"` discriminator). Returns a human-readable reason on
+/// failure.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let kind = want_str(doc, "$", "bench")?;
+    let version = want_count(doc, "$", "schema_version")?;
+    if version as u64 > BENCH_SCHEMA_VERSION {
+        return Err(format!(
+            "schema_version {version} is newer than this build understands \
+             ({BENCH_SCHEMA_VERSION})"
+        ));
+    }
+    match kind {
+        "serve" => validate_serve(doc),
+        "hotpath" => validate_hotpath(doc),
+        other => Err(format!("$.bench: unknown bench kind '{other}'")),
+    }
+}
+
+fn validate_serve(doc: &Json) -> Result<(), String> {
+    let cfg = doc.req("config")?;
+    let transport = want_str(cfg, "$.config", "transport")?;
+    if transport != "tcp" && transport != "unix" {
+        return Err(format!(
+            "$.config.transport: expected tcp|unix, got '{transport}'"
+        ));
+    }
+    want_str(cfg, "$.config", "model")?;
+    if want_f64(cfg, "$.config", "rps")? <= 0.0 {
+        return Err("$.config.rps: must be positive".into());
+    }
+    if want_f64(cfg, "$.config", "duration_s")? <= 0.0 {
+        return Err("$.config.duration_s: must be positive".into());
+    }
+    if want_count(cfg, "$.config", "connections")? < 1.0 {
+        return Err("$.config.connections: must be at least 1".into());
+    }
+    cfg.req("burst")
+        .map_err(|e| format!("$.config: {e}"))?
+        .as_bool()
+        .ok_or("$.config.burst: expected a bool")?;
+
+    let res = doc.req("results")?;
+    for key in ["sent", "completed", "shed", "errors", "client_saturated"] {
+        want_count(res, "$.results", key)?;
+    }
+    if want_f64(res, "$.results", "wall_s")? <= 0.0 {
+        return Err("$.results.wall_s: must be positive".into());
+    }
+    if want_f64(res, "$.results", "throughput_rps")? < 0.0 {
+        return Err("$.results.throughput_rps: must be >= 0".into());
+    }
+    let shed_rate = want_f64(res, "$.results", "shed_rate")?;
+    if !(0.0..=1.0).contains(&shed_rate) {
+        return Err(format!(
+            "$.results.shed_rate: {shed_rate} is outside [0, 1]"
+        ));
+    }
+    let lat = res.req("latency_ms").map_err(|e| format!("$.results: {e}"))?;
+    let mut vals = Vec::new();
+    for key in ["p50", "p90", "p99", "p999", "max"] {
+        let v = want_f64(lat, "$.results.latency_ms", key)?;
+        if v < 0.0 || !v.is_finite() {
+            return Err(format!(
+                "$.results.latency_ms.{key}: {v} is not a finite \
+                 non-negative number"
+            ));
+        }
+        vals.push(v);
+    }
+    // percentile ordering is meaningful only once something completed
+    let completed = want_count(res, "$.results", "completed")?;
+    if completed > 0.0 {
+        for w in vals.windows(2) {
+            if w[0] > w[1] {
+                return Err(format!(
+                    "$.results.latency_ms: percentiles are not \
+                     non-decreasing ({vals:?})"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn validate_hotpath(doc: &Json) -> Result<(), String> {
+    want_str(doc, "$", "profile")?;
+    let entries = doc
+        .req("entries")?
+        .as_arr()
+        .ok_or("$.entries: expected an array")?;
+    if entries.is_empty() {
+        return Err("$.entries: must not be empty".into());
+    }
+    for (i, e) in entries.iter().enumerate() {
+        let path = format!("$.entries[{i}]");
+        let name = want_str(e, &path, "name")?;
+        if name.is_empty() {
+            return Err(format!("{path}.name: must not be empty"));
+        }
+        let median = want_f64(e, &path, "median_s")?;
+        if median <= 0.0 || !median.is_finite() {
+            return Err(format!("{path}.median_s: must be positive"));
+        }
+        let p95 = want_f64(e, &path, "p95_s")?;
+        if p95 < median {
+            return Err(format!(
+                "{path}.p95_s: {p95} is below the median {median}"
+            ));
+        }
+        let rate = want_f64(e, &path, "rate")?;
+        if rate < 0.0 || !rate.is_finite() {
+            return Err(format!("{path}.rate: must be >= 0"));
+        }
+        want_str(e, &path, "unit")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> BenchEntry {
+        BenchEntry {
+            name: "int_engine/resnet_s/b8".into(),
+            median_s: 0.004,
+            p95_s: 0.005,
+            rate: 12.5,
+            unit: "GMAC/s".into(),
+        }
+    }
+
+    #[test]
+    fn hotpath_document_roundtrips_and_validates() {
+        let doc = hotpath_json("release", &[entry()]);
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        validate(&parsed).unwrap();
+    }
+
+    #[test]
+    fn hotpath_rejections_are_specific() {
+        // empty entries
+        let doc = hotpath_json("debug", &[]);
+        assert!(validate(&doc).unwrap_err().contains("entries"));
+        // p95 below median
+        let bad = BenchEntry { p95_s: 0.001, ..entry() };
+        let doc = hotpath_json("debug", &[bad]);
+        assert!(validate(&doc).unwrap_err().contains("p95_s"));
+        // non-positive median
+        let bad = BenchEntry { median_s: 0.0, ..entry() };
+        let doc = hotpath_json("debug", &[bad]);
+        assert!(validate(&doc).unwrap_err().contains("median_s"));
+    }
+
+    #[test]
+    fn envelope_rejections() {
+        let doc = json::obj(vec![("bench", json::s("hotpath"))]);
+        assert!(validate(&doc).unwrap_err().contains("schema_version"));
+        let doc = json::obj(vec![
+            ("bench", json::s("nonsense")),
+            ("schema_version", json::num(1.0)),
+        ]);
+        assert!(validate(&doc).unwrap_err().contains("nonsense"));
+        let doc = json::obj(vec![
+            ("bench", json::s("hotpath")),
+            ("schema_version", json::num(99.0)),
+        ]);
+        assert!(validate(&doc).unwrap_err().contains("newer"));
+    }
+
+    #[test]
+    fn extra_keys_are_tolerated() {
+        let mut doc = hotpath_json("release", &[entry()]);
+        if let Json::Obj(m) = &mut doc {
+            m.insert("commit".into(), json::s("abc123"));
+        }
+        validate(&doc).unwrap();
+    }
+
+    // the serve-side positive case is covered end-to-end by
+    // wire::loadgen's report_json_is_schema_valid test and the
+    // integration suite; here we pin the rejections
+    #[test]
+    fn serve_rejections_are_specific() {
+        let serve = |shed_rate: f64, p99: f64| {
+            json::obj(vec![
+                ("bench", json::s("serve")),
+                ("schema_version", json::num(1.0)),
+                (
+                    "config",
+                    json::obj(vec![
+                        ("transport", json::s("unix")),
+                        ("model", json::s("m")),
+                        ("rps", json::num(50.0)),
+                        ("duration_s", json::num(5.0)),
+                        ("connections", json::num(4.0)),
+                        ("burst", Json::Bool(false)),
+                    ]),
+                ),
+                (
+                    "results",
+                    json::obj(vec![
+                        ("sent", json::num(100.0)),
+                        ("completed", json::num(90.0)),
+                        ("shed", json::num(10.0)),
+                        ("errors", json::num(0.0)),
+                        ("client_saturated", json::num(0.0)),
+                        ("wall_s", json::num(5.0)),
+                        ("throughput_rps", json::num(18.0)),
+                        ("shed_rate", json::num(shed_rate)),
+                        (
+                            "latency_ms",
+                            json::obj(vec![
+                                ("p50", json::num(1.0)),
+                                ("p90", json::num(2.0)),
+                                ("p99", json::num(p99)),
+                                ("p999", json::num(8.0)),
+                                ("max", json::num(9.0)),
+                            ]),
+                        ),
+                    ]),
+                ),
+            ])
+        };
+        validate(&serve(0.1, 4.0)).unwrap();
+        assert!(validate(&serve(1.5, 4.0)).unwrap_err().contains("shed_rate"));
+        // p99 above p999 breaks the ordering
+        assert!(validate(&serve(0.1, 100.0))
+            .unwrap_err()
+            .contains("non-decreasing"));
+        // bad transport
+        let mut doc = serve(0.1, 4.0);
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(cfg)) = m.get_mut("config") {
+                cfg.insert("transport".into(), json::s("carrier-pigeon"));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("transport"));
+    }
+}

@@ -1,8 +1,12 @@
 //! Paper-table regeneration: ASCII table rendering ([`table`]), simple
 //! ASCII plots + CSV export ([`figures`]) and the experiment drivers that
 //! reproduce every table and figure of the paper ([`experiments`]) —
-//! shared by the CLI (`dfq tables`) and the benches.
+//! shared by the CLI (`dfq tables`) and the benches. [`bench`] holds the
+//! schema + validator for the machine-readable perf trajectory
+//! (`BENCH_serve.json` / `BENCH_hotpath.json`, checked by
+//! `dfq benchcheck`).
 
+pub mod bench;
 pub mod experiments;
 pub mod figures;
 pub mod table;

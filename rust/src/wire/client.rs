@@ -1,0 +1,327 @@
+//! [`WireClient`] — the client side of the wire protocol: a blocking,
+//! timeout-guarded connection to a `dfq serve --listen` server with a
+//! bounded reconnect-with-backoff policy.
+//!
+//! Retry semantics: only **transport** failures (socket errors and
+//! truncated streams — [`WireFault::Io`] / [`WireFault::Truncated`])
+//! are retried, on a fresh connection, at most
+//! [`WireClientConfig::max_retries`] times with doubling backoff.
+//! A typed error *frame* from the server (an overload shed, an unknown
+//! model, a backend failure) is a complete answer and is returned
+//! immediately — retrying an [`DfqError::Overloaded`] shed in a tight
+//! loop would amplify the overload it reports.
+
+use std::time::Duration;
+
+use crate::error::{DfqError, WireFault};
+use crate::tensor::Tensor;
+use crate::wire::frame::{read_frame, write_frame, Frame, MetricsReply};
+use crate::wire::net::{WireAddr, WireStream};
+
+/// Client-side connection policy.
+#[derive(Clone, Copy, Debug)]
+pub struct WireClientConfig {
+    /// TCP/UDS connect timeout
+    pub connect_timeout: Duration,
+    /// how long to wait for a response frame (covers the server's
+    /// batching wait plus execution)
+    pub read_timeout: Duration,
+    /// socket write timeout for requests
+    pub write_timeout: Duration,
+    /// transport-failure retries per call (0 = fail fast)
+    pub max_retries: usize,
+    /// initial retry backoff; doubles per retry, capped at 2 s
+    pub backoff: Duration,
+}
+
+impl Default for WireClientConfig {
+    fn default() -> Self {
+        WireClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(5),
+            max_retries: 3,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// A connection to a wire server. Not thread-safe by design (one
+/// in-flight request per connection); open one per worker thread.
+pub struct WireClient {
+    addr: WireAddr,
+    cfg: WireClientConfig,
+    stream: Option<WireStream>,
+}
+
+impl WireClient {
+    /// Connect eagerly to `addr` (`tcp:host:port`, `unix:/path`, or the
+    /// bare forms [`WireAddr::parse`] accepts).
+    pub fn connect(
+        addr: &WireAddr,
+        cfg: WireClientConfig,
+    ) -> Result<WireClient, DfqError> {
+        let mut c = WireClient { addr: addr.clone(), cfg, stream: None };
+        c.ensure_stream()?;
+        Ok(c)
+    }
+
+    /// The server address this client talks to.
+    pub fn addr(&self) -> &WireAddr {
+        &self.addr
+    }
+
+    fn ensure_stream(&mut self) -> Result<&mut WireStream, DfqError> {
+        if self.stream.is_none() {
+            let s = WireStream::connect(&self.addr, self.cfg.connect_timeout)?;
+            s.set_timeouts(
+                Some(self.cfg.read_timeout),
+                Some(self.cfg.write_timeout),
+            )?;
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().expect("just connected"))
+    }
+
+    fn try_call(&mut self, request: &Frame) -> Result<Frame, DfqError> {
+        let stream = self.ensure_stream()?;
+        write_frame(stream, request)?;
+        read_frame(stream)
+    }
+
+    /// Send one request frame and wait for the response, reconnecting
+    /// and retrying transport failures per the config. An error *frame*
+    /// from the server comes back as `Err` without a retry.
+    pub fn call(&mut self, request: &Frame) -> Result<Frame, DfqError> {
+        let mut backoff = self.cfg.backoff;
+        let mut attempt = 0usize;
+        loop {
+            match self.try_call(request) {
+                Ok(Frame::Error(e)) => return Err(e),
+                Ok(frame) => return Ok(frame),
+                Err(e) => {
+                    let transport = matches!(
+                        e,
+                        DfqError::Wire {
+                            fault: WireFault::Io | WireFault::Truncated,
+                            ..
+                        }
+                    );
+                    if !transport || attempt >= self.cfg.max_retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    // the stream is in an unknown state: reconnect
+                    self.stream = None;
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
+                }
+            }
+        }
+    }
+
+    /// Run one `(1, H, W, C)` image through the named model remotely.
+    /// Bit-identical to calling the same engine in-process: the image's
+    /// f32 bits travel verbatim, and the server submits through the
+    /// same [`crate::session::Client`] path.
+    pub fn infer(
+        &mut self,
+        model: &str,
+        image: Tensor,
+    ) -> Result<Vec<f32>, DfqError> {
+        let req =
+            Frame::InferRequest { model: model.to_string(), image };
+        match self.call(&req)? {
+            Frame::InferResponse { output } => Ok(output),
+            other => Err(unexpected("an inference response", &other)),
+        }
+    }
+
+    /// Fetch the named model's metrics snapshot.
+    pub fn metrics(&mut self, model: &str) -> Result<MetricsReply, DfqError> {
+        let req = Frame::MetricsRequest { model: model.to_string() };
+        match self.call(&req)? {
+            Frame::MetricsResponse(m) => Ok(m),
+            other => Err(unexpected("a metrics response", &other)),
+        }
+    }
+
+    /// List the models registered on the server, sorted.
+    pub fn list(&mut self) -> Result<Vec<String>, DfqError> {
+        match self.call(&Frame::ListRequest)? {
+            Frame::ListResponse { models } => Ok(models),
+            other => Err(unexpected("a model list", &other)),
+        }
+    }
+
+    /// Ask the server to shut down gracefully (acknowledged with `Ok`
+    /// before the server's accept loop exits).
+    pub fn shutdown_server(&mut self) -> Result<(), DfqError> {
+        match self.call(&Frame::Shutdown)? {
+            Frame::Ok => Ok(()),
+            other => Err(unexpected("a shutdown acknowledgement", &other)),
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &Frame) -> DfqError {
+    DfqError::wire(
+        WireFault::Malformed,
+        format!(
+            "expected {wanted}, got frame type {:#04x}",
+            got.frame_type()
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::net::WireListener;
+    use std::time::Instant;
+
+    /// Accept `conns` connections; on each, serve request frames until
+    /// the peer disconnects. `flaky_first` drops the first connection
+    /// without answering, to exercise the reconnect path.
+    fn scripted_server(
+        listener: WireListener,
+        conns: usize,
+        flaky_first: bool,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            for i in 0..conns {
+                let mut stream = loop {
+                    if let Some(s) = listener.accept().unwrap() {
+                        break s;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                };
+                if flaky_first && i == 0 {
+                    stream.shutdown();
+                    continue;
+                }
+                while let Ok(req) = read_frame(&mut stream) {
+                    let reply = match req {
+                        Frame::InferRequest { image, .. } => {
+                            Frame::InferResponse {
+                                output: vec![image.data.iter().sum()],
+                            }
+                        }
+                        Frame::ListRequest => Frame::ListResponse {
+                            models: vec!["m".into()],
+                        },
+                        Frame::Shutdown => Frame::Ok,
+                        _ => Frame::Error(DfqError::serve("unexpected")),
+                    };
+                    if write_frame(&mut stream, &reply).is_err() {
+                        break;
+                    }
+                }
+            }
+        })
+    }
+
+    fn img(v: f32) -> Tensor {
+        Tensor::from_vec(&[1, 2, 2, 1], vec![v; 4])
+    }
+
+    #[test]
+    fn infer_list_shutdown_roundtrip() {
+        let listener =
+            WireListener::bind(&WireAddr::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = WireAddr::parse(&listener.local_addr()).unwrap();
+        let server = scripted_server(listener, 1, false);
+        let mut client =
+            WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+        assert_eq!(client.infer("m", img(1.5)).unwrap(), vec![6.0]);
+        assert_eq!(client.list().unwrap(), vec!["m".to_string()]);
+        client.shutdown_server().unwrap();
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn transport_failure_reconnects_with_backoff() {
+        let listener =
+            WireListener::bind(&WireAddr::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = WireAddr::parse(&listener.local_addr()).unwrap();
+        // first connection is dropped without an answer; the retry on a
+        // fresh connection must succeed
+        let server = scripted_server(listener, 2, true);
+        let mut client = WireClient::connect(
+            &addr,
+            WireClientConfig {
+                max_retries: 2,
+                backoff: Duration::from_millis(5),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(client.infer("m", img(2.0)).unwrap(), vec![8.0]);
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn retries_are_bounded_and_backoff_is_applied() {
+        // nothing is listening: every attempt is a transport failure
+        let addr = WireAddr::Uds("/nonexistent/dfq-client-test.sock".into());
+        let cfg = WireClientConfig {
+            connect_timeout: Duration::from_millis(50),
+            max_retries: 2,
+            backoff: Duration::from_millis(20),
+            ..Default::default()
+        };
+        assert!(WireClient::connect(&addr, cfg).is_err());
+        // call() path: construct without the eager connect
+        let mut client =
+            WireClient { addr: addr.clone(), cfg, stream: None };
+        let t0 = Instant::now();
+        let err = client.infer("m", img(1.0)).unwrap_err();
+        assert!(matches!(
+            err,
+            DfqError::Wire { fault: WireFault::Io, .. }
+        ));
+        // 2 retries with 20ms + 40ms backoff: at least 60ms elapsed
+        assert!(
+            t0.elapsed() >= Duration::from_millis(60),
+            "backoff was not applied: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn server_error_frames_are_returned_not_retried() {
+        let listener =
+            WireListener::bind(&WireAddr::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = WireAddr::parse(&listener.local_addr()).unwrap();
+        // a server that answers every request with a typed shed
+        let server = std::thread::spawn(move || {
+            let mut stream = loop {
+                if let Some(s) = listener.accept().unwrap() {
+                    break s;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            };
+            let mut answered = 0usize;
+            while let Ok(_req) = read_frame(&mut stream) {
+                write_frame(
+                    &mut stream,
+                    &Frame::Error(DfqError::overloaded("m", 7)),
+                )
+                .ok();
+                answered += 1;
+            }
+            answered
+        });
+        let mut client =
+            WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+        let err = client.infer("m", img(1.0)).unwrap_err();
+        assert_eq!(err, DfqError::overloaded("m", 7));
+        drop(client);
+        // exactly one request reached the server: no retry happened
+        assert_eq!(server.join().unwrap(), 1);
+    }
+}

@@ -1,0 +1,1037 @@
+//! The `dfq` wire frame format — byte-for-byte specification.
+//!
+//! Every message on a `dfq` connection (TCP or Unix-domain, see
+//! [`crate::wire::net`]) is one **frame**: a fixed 12-byte header
+//! followed by a length-prefixed payload. All multi-byte integers and
+//! floats are **little-endian**. Byte-for-byte, the header is:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     4  magic: the ASCII bytes "dfq1"            (b"dfq1")
+//!      4     1  protocol version                         (== 1)
+//!      5     1  frame type (see the FT_* constants)
+//!      6     2  reserved, must be zero                   (u16 LE)
+//!      8     4  payload length in bytes                  (u32 LE)
+//!     12     …  payload (exactly `payload length` bytes)
+//! ```
+//!
+//! The payload length is validated against [`MAX_PAYLOAD`] **before**
+//! any allocation, so a malicious length cannot OOM the server; a
+//! nonzero reserved field, a bad magic, or an unsupported version each
+//! reject the frame with a typed [`DfqError::Wire`] fault.
+//!
+//! ## Payload encodings by frame type
+//!
+//! Composite field encodings used below:
+//!
+//! * `str16` — `u16` byte length + that many UTF-8 bytes.
+//! * `str32` — `u32` byte length + that many UTF-8 bytes.
+//! * `tensor` — `u8` rank (≤ 4), then rank × `u32` dims, then
+//!   `numel` × `f32` row-major data. The element count is computed with
+//!   checked multiplication and bounded by the enclosing payload, so
+//!   malicious dims cannot overflow or over-allocate.
+//!
+//! | type | name              | payload |
+//! |------|-------------------|---------|
+//! | 0x01 | `InferRequest`    | model `str16`, image `tensor` |
+//! | 0x02 | `InferResponse`   | `u32` count + count × `f32` output |
+//! | 0x03 | `Error`           | `u8` code, model `str16`, `u32` detail, message `str32` |
+//! | 0x04 | `MetricsRequest`  | model `str16` |
+//! | 0x05 | `MetricsResponse` | model `str16`, 5 × `u64` counters, 3 × `f64` percentiles |
+//! | 0x06 | `ListRequest`     | empty |
+//! | 0x07 | `ListResponse`    | `u16` count + count × `str16` model names |
+//! | 0x08 | `Shutdown`        | empty |
+//! | 0x09 | `Ok`              | empty |
+//!
+//! The `Error` frame's `code` byte maps onto [`DfqError`] so overload
+//! shedding stays **typed** across the process boundary: 1 =
+//! `Overloaded` (model + queue depth in the detail field), 2 = `Serve`,
+//! 3 = `InvalidInput`, 4 = `Runtime`, 5 = `Wire` (the
+//! [`WireFault::code`] rides in the detail field), 0 = anything else
+//! (carried as its `Display` string).
+
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::error::{DfqError, WireFault};
+use crate::tensor::Tensor;
+
+/// The four magic bytes every frame starts with.
+pub const MAGIC: [u8; 4] = *b"dfq1";
+
+/// The protocol version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Header size in bytes (magic + version + type + reserved + length).
+pub const HEADER_LEN: usize = 12;
+
+/// Hard cap on a frame's payload size (16 MiB). A declared length above
+/// this is rejected as [`WireFault::Oversized`] before any allocation.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+
+/// Frame type: inference request.
+pub const FT_INFER_REQUEST: u8 = 0x01;
+/// Frame type: inference response.
+pub const FT_INFER_RESPONSE: u8 = 0x02;
+/// Frame type: typed error.
+pub const FT_ERROR: u8 = 0x03;
+/// Frame type: metrics request.
+pub const FT_METRICS_REQUEST: u8 = 0x04;
+/// Frame type: metrics response.
+pub const FT_METRICS_RESPONSE: u8 = 0x05;
+/// Frame type: model-list request.
+pub const FT_LIST_REQUEST: u8 = 0x06;
+/// Frame type: model-list response.
+pub const FT_LIST_RESPONSE: u8 = 0x07;
+/// Frame type: graceful server shutdown.
+pub const FT_SHUTDOWN: u8 = 0x08;
+/// Frame type: bare acknowledgement.
+pub const FT_OK: u8 = 0x09;
+
+/// A decoded metrics snapshot for one model endpoint, as carried by a
+/// `MetricsResponse` frame. Counters come from
+/// [`crate::coordinator::serve::ServeMetrics`]; `queue_len` is the live
+/// admission-queue occupancy at snapshot time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsReply {
+    /// the model the snapshot describes
+    pub model: String,
+    /// completed requests
+    pub completed: u64,
+    /// executed batches
+    pub batches: u64,
+    /// requests shed by admission control
+    pub rejected: u64,
+    /// hot-swaps performed
+    pub swaps: u64,
+    /// live admission-queue occupancy
+    pub queue_len: u64,
+    /// p50 request latency, seconds (0 when nothing completed)
+    pub p50_s: f64,
+    /// p99 request latency, seconds (0 when nothing completed)
+    pub p99_s: f64,
+    /// p99.9 request latency, seconds (0 when nothing completed)
+    pub p999_s: f64,
+}
+
+/// One decoded wire message. See the module docs for the byte-level
+/// payload layout of each variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// run one image through the named model
+    InferRequest {
+        /// target model name
+        model: String,
+        /// a single `(1, H, W, C)` normalised image
+        image: Tensor,
+    },
+    /// the output row for one `InferRequest`
+    InferResponse {
+        /// the model's output vector (e.g. logits)
+        output: Vec<f32>,
+    },
+    /// a typed [`DfqError`] (overload sheds arrive as this)
+    Error(DfqError),
+    /// request a metrics snapshot for the named model
+    MetricsRequest {
+        /// target model name
+        model: String,
+    },
+    /// a metrics snapshot
+    MetricsResponse(MetricsReply),
+    /// request the list of registered model names
+    ListRequest,
+    /// the registered model names
+    ListResponse {
+        /// registered model names, sorted
+        models: Vec<String>,
+    },
+    /// ask the server to drain and exit gracefully
+    Shutdown,
+    /// bare acknowledgement (reply to `Shutdown`)
+    Ok,
+}
+
+impl Frame {
+    /// The frame-type byte this variant encodes as.
+    pub fn frame_type(&self) -> u8 {
+        match self {
+            Frame::InferRequest { .. } => FT_INFER_REQUEST,
+            Frame::InferResponse { .. } => FT_INFER_RESPONSE,
+            Frame::Error(_) => FT_ERROR,
+            Frame::MetricsRequest { .. } => FT_METRICS_REQUEST,
+            Frame::MetricsResponse(_) => FT_METRICS_RESPONSE,
+            Frame::ListRequest => FT_LIST_REQUEST,
+            Frame::ListResponse { .. } => FT_LIST_RESPONSE,
+            Frame::Shutdown => FT_SHUTDOWN,
+            Frame::Ok => FT_OK,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// little-endian writers
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str16(buf: &mut Vec<u8>, s: &str) -> Result<(), DfqError> {
+    let bytes = s.as_bytes();
+    if bytes.len() > u16::MAX as usize {
+        return Err(DfqError::wire(
+            WireFault::Malformed,
+            format!("string of {} bytes exceeds the str16 limit", bytes.len()),
+        ));
+    }
+    put_u16(buf, bytes.len() as u16);
+    buf.extend_from_slice(bytes);
+    Ok(())
+}
+
+fn put_str32(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    put_u32(buf, bytes.len() as u32);
+    buf.extend_from_slice(bytes);
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) -> Result<(), DfqError> {
+    let dims = t.shape.dims();
+    if dims.len() > 4 {
+        return Err(DfqError::wire(
+            WireFault::Malformed,
+            format!("tensor rank {} exceeds the wire limit of 4", dims.len()),
+        ));
+    }
+    buf.push(dims.len() as u8);
+    for &d in dims {
+        if d > u32::MAX as usize {
+            return Err(DfqError::wire(
+                WireFault::Malformed,
+                format!("tensor dim {d} exceeds u32"),
+            ));
+        }
+        put_u32(buf, d as u32);
+    }
+    for &x in &t.data {
+        put_f32(buf, x);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// cursor-based reader with typed truncation/malformed errors
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DfqError> {
+        if self.pos + n > self.buf.len() {
+            return Err(DfqError::wire(
+                WireFault::Truncated,
+                format!(
+                    "payload ends at byte {} but {} more bytes were declared",
+                    self.buf.len(),
+                    self.pos + n - self.buf.len()
+                ),
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DfqError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, DfqError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, DfqError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, DfqError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32(&mut self) -> Result<f32, DfqError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, DfqError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String, DfqError> {
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| {
+            DfqError::wire(WireFault::Malformed, "string is not valid UTF-8")
+        })
+    }
+
+    fn str16(&mut self) -> Result<String, DfqError> {
+        let n = self.u16()? as usize;
+        self.utf8(n)
+    }
+
+    fn str32(&mut self) -> Result<String, DfqError> {
+        let n = self.u32()? as usize;
+        self.utf8(n)
+    }
+
+    fn tensor(&mut self) -> Result<Tensor, DfqError> {
+        let rank = self.u8()? as usize;
+        if rank > 4 {
+            return Err(DfqError::wire(
+                WireFault::Malformed,
+                format!("tensor rank {rank} exceeds the wire limit of 4"),
+            ));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        let mut numel: usize = 1;
+        for _ in 0..rank {
+            let d = self.u32()? as usize;
+            numel = numel.checked_mul(d).ok_or_else(|| {
+                DfqError::wire(
+                    WireFault::Malformed,
+                    "tensor element count overflows",
+                )
+            })?;
+            dims.push(d);
+        }
+        // bound the allocation by the bytes actually present: take()
+        // fails with Truncated before we ever allocate `numel` floats
+        let nbytes = numel.checked_mul(4).ok_or_else(|| {
+            DfqError::wire(WireFault::Malformed, "tensor byte count overflows")
+        })?;
+        let raw = self.take(nbytes)?;
+        let mut data = Vec::with_capacity(numel);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(Tensor::from_vec(&dims, data))
+    }
+
+    fn done(&self) -> Result<(), DfqError> {
+        if self.pos != self.buf.len() {
+            return Err(DfqError::wire(
+                WireFault::Malformed,
+                format!(
+                    "{} trailing bytes after the payload",
+                    self.buf.len() - self.pos
+                ),
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// error frame <-> DfqError
+
+const EC_OTHER: u8 = 0;
+const EC_OVERLOADED: u8 = 1;
+const EC_SERVE: u8 = 2;
+const EC_INVALID: u8 = 3;
+const EC_RUNTIME: u8 = 4;
+const EC_WIRE: u8 = 5;
+
+fn encode_error(buf: &mut Vec<u8>, e: &DfqError) -> Result<(), DfqError> {
+    let (code, model, detail, message): (u8, &str, u32, String) = match e {
+        DfqError::Overloaded { model, depth } => {
+            (EC_OVERLOADED, model.as_str(), *depth as u32, String::new())
+        }
+        DfqError::Serve(m) => (EC_SERVE, "", 0, m.clone()),
+        DfqError::InvalidInput(m) => (EC_INVALID, "", 0, m.clone()),
+        DfqError::Runtime(m) => (EC_RUNTIME, "", 0, m.clone()),
+        DfqError::Wire { fault, message } => {
+            (EC_WIRE, "", fault.code(), message.clone())
+        }
+        other => (EC_OTHER, "", 0, other.to_string()),
+    };
+    buf.push(code);
+    put_str16(buf, model)?;
+    put_u32(buf, detail);
+    put_str32(buf, &message);
+    Ok(())
+}
+
+fn decode_error(cur: &mut Cur<'_>) -> Result<DfqError, DfqError> {
+    let code = cur.u8()?;
+    let model = cur.str16()?;
+    let detail = cur.u32()?;
+    let message = cur.str32()?;
+    Ok(match code {
+        EC_OVERLOADED => DfqError::overloaded(model, detail as usize),
+        EC_SERVE => DfqError::serve(message),
+        EC_INVALID => DfqError::invalid(message),
+        EC_RUNTIME => DfqError::runtime(message),
+        EC_WIRE => DfqError::wire(
+            WireFault::from_code(detail).unwrap_or(WireFault::Malformed),
+            message,
+        ),
+        // unknown codes from a newer peer degrade to a serve error
+        _ => DfqError::serve(format!("remote error: {message}")),
+    })
+}
+
+// ---------------------------------------------------------------------
+// frame <-> bytes
+
+/// Encode one frame into a complete wire message (header + payload).
+///
+/// Fails with [`WireFault::Oversized`] if the payload would exceed
+/// [`MAX_PAYLOAD`], and [`WireFault::Malformed`] for unencodable values
+/// (over-long model names, rank > 4 tensors).
+pub fn encode(frame: &Frame) -> Result<Vec<u8>, DfqError> {
+    let mut payload = Vec::new();
+    match frame {
+        Frame::InferRequest { model, image } => {
+            put_str16(&mut payload, model)?;
+            put_tensor(&mut payload, image)?;
+        }
+        Frame::InferResponse { output } => {
+            put_u32(&mut payload, output.len() as u32);
+            for &x in output {
+                put_f32(&mut payload, x);
+            }
+        }
+        Frame::Error(e) => encode_error(&mut payload, e)?,
+        Frame::MetricsRequest { model } => put_str16(&mut payload, model)?,
+        Frame::MetricsResponse(m) => {
+            put_str16(&mut payload, &m.model)?;
+            put_u64(&mut payload, m.completed);
+            put_u64(&mut payload, m.batches);
+            put_u64(&mut payload, m.rejected);
+            put_u64(&mut payload, m.swaps);
+            put_u64(&mut payload, m.queue_len);
+            put_f64(&mut payload, m.p50_s);
+            put_f64(&mut payload, m.p99_s);
+            put_f64(&mut payload, m.p999_s);
+        }
+        Frame::ListRequest | Frame::Shutdown | Frame::Ok => {}
+        Frame::ListResponse { models } => {
+            if models.len() > u16::MAX as usize {
+                return Err(DfqError::wire(
+                    WireFault::Malformed,
+                    "too many models for a list frame",
+                ));
+            }
+            put_u16(&mut payload, models.len() as u16);
+            for m in models {
+                put_str16(&mut payload, m)?;
+            }
+        }
+    }
+    if payload.len() > MAX_PAYLOAD {
+        return Err(DfqError::wire(
+            WireFault::Oversized,
+            format!(
+                "payload of {} bytes exceeds the {MAX_PAYLOAD}-byte cap",
+                payload.len()
+            ),
+        ));
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(frame.frame_type());
+    put_u16(&mut out, 0); // reserved
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Validate a 12-byte header; return `(frame_type, payload_len)`.
+///
+/// Rejects bad magic, unsupported versions, nonzero reserved bytes and
+/// payload lengths over [`MAX_PAYLOAD`] — the length check happens here,
+/// **before** the caller allocates a payload buffer.
+pub fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u8, usize), DfqError> {
+    if header[0..4] != MAGIC {
+        return Err(DfqError::wire(
+            WireFault::BadMagic,
+            format!(
+                "expected magic {MAGIC:?}, got {:?}",
+                &header[0..4]
+            ),
+        ));
+    }
+    if header[4] != VERSION {
+        return Err(DfqError::wire(
+            WireFault::BadVersion,
+            format!("peer speaks version {}, this build speaks {VERSION}", header[4]),
+        ));
+    }
+    let reserved = u16::from_le_bytes([header[6], header[7]]);
+    if reserved != 0 {
+        return Err(DfqError::wire(
+            WireFault::Malformed,
+            format!("reserved header bytes must be zero, got {reserved:#x}"),
+        ));
+    }
+    let len =
+        u32::from_le_bytes([header[8], header[9], header[10], header[11]])
+            as usize;
+    if len > MAX_PAYLOAD {
+        return Err(DfqError::wire(
+            WireFault::Oversized,
+            format!("declared payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap"),
+        ));
+    }
+    Ok((header[5], len))
+}
+
+/// Decode a payload of the given frame type (as returned by
+/// [`parse_header`]) into a [`Frame`]. Never panics on malformed input —
+/// every rejection is a typed [`DfqError::Wire`].
+pub fn decode_payload(frame_type: u8, payload: &[u8]) -> Result<Frame, DfqError> {
+    let mut cur = Cur::new(payload);
+    let frame = match frame_type {
+        FT_INFER_REQUEST => {
+            let model = cur.str16()?;
+            let image = cur.tensor()?;
+            Frame::InferRequest { model, image }
+        }
+        FT_INFER_RESPONSE => {
+            let n = cur.u32()? as usize;
+            let raw = cur.take(n.checked_mul(4).ok_or_else(|| {
+                DfqError::wire(WireFault::Malformed, "output count overflows")
+            })?)?;
+            let mut output = Vec::with_capacity(n);
+            for c in raw.chunks_exact(4) {
+                output.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            Frame::InferResponse { output }
+        }
+        FT_ERROR => Frame::Error(decode_error(&mut cur)?),
+        FT_METRICS_REQUEST => Frame::MetricsRequest { model: cur.str16()? },
+        FT_METRICS_RESPONSE => Frame::MetricsResponse(MetricsReply {
+            model: cur.str16()?,
+            completed: cur.u64()?,
+            batches: cur.u64()?,
+            rejected: cur.u64()?,
+            swaps: cur.u64()?,
+            queue_len: cur.u64()?,
+            p50_s: cur.f64()?,
+            p99_s: cur.f64()?,
+            p999_s: cur.f64()?,
+        }),
+        FT_LIST_REQUEST => Frame::ListRequest,
+        FT_LIST_RESPONSE => {
+            let n = cur.u16()? as usize;
+            let mut models = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                models.push(cur.str16()?);
+            }
+            Frame::ListResponse { models }
+        }
+        FT_SHUTDOWN => Frame::Shutdown,
+        FT_OK => Frame::Ok,
+        other => {
+            return Err(DfqError::wire(
+                WireFault::UnknownFrame,
+                format!("unknown frame type {other:#04x}"),
+            ))
+        }
+    };
+    cur.done()?;
+    Ok(frame)
+}
+
+/// Read one complete frame from a blocking stream.
+///
+/// An EOF or read failure **inside** a frame maps to
+/// [`WireFault::Truncated`] / [`WireFault::Io`]; header validation and
+/// payload decoding faults pass through from [`parse_header`] /
+/// [`decode_payload`]. (The server's connection loop uses its own
+/// incremental reader so it can distinguish idle from mid-frame EOF —
+/// this helper is the simple client-side path.)
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, DfqError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_wire(r, &mut header)?;
+    let (frame_type, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    read_exact_wire(r, &mut payload)?;
+    decode_payload(frame_type, &payload)
+}
+
+fn read_exact_wire<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), DfqError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            DfqError::wire(
+                WireFault::Truncated,
+                "stream ended inside a frame",
+            )
+        } else {
+            DfqError::wire(WireFault::Io, format!("read failed: {e}"))
+        }
+    })
+}
+
+/// Result of one incremental receive attempt
+/// (see [`read_frame_incremental`]).
+pub enum Recv {
+    /// a complete, decoded frame
+    Frame(Frame),
+    /// the peer closed the stream cleanly **between** frames
+    Closed,
+    /// the `should_stop` callback fired while waiting
+    Stopped,
+}
+
+enum Fill {
+    Done,
+    CleanEof,
+    Stopped,
+}
+
+/// Read one frame from a stream whose read timeout is set to a short
+/// poll tick, re-checking `should_stop` at every tick. Used by server
+/// connection handlers; unlike [`read_frame`] it distinguishes a clean
+/// disconnect between frames ([`Recv::Closed`]) from a truncation
+/// inside one (a typed error), and it lets a peer sit idle between
+/// frames indefinitely while bounding how long it may stall **inside**
+/// a frame (`stall_budget`).
+pub fn read_frame_incremental<R: Read>(
+    r: &mut R,
+    stall_budget: Duration,
+    mut should_stop: impl FnMut() -> bool,
+) -> Result<Recv, DfqError> {
+    let mut header = [0u8; HEADER_LEN];
+    match fill_buf(r, &mut header, stall_budget, &mut should_stop, true)? {
+        Fill::Done => {}
+        Fill::CleanEof => return Ok(Recv::Closed),
+        Fill::Stopped => return Ok(Recv::Stopped),
+    }
+    let (frame_type, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    match fill_buf(r, &mut payload, stall_budget, &mut should_stop, false)? {
+        Fill::Done | Fill::CleanEof => {}
+        Fill::Stopped => return Ok(Recv::Stopped),
+    }
+    decode_payload(frame_type, &payload).map(Recv::Frame)
+}
+
+/// Fill `buf` completely from a poll-tick stream. `idle_ok` marks the
+/// zero-bytes-read state as "idle between frames": a clean EOF there is
+/// [`Fill::CleanEof`] and waiting is unbounded; once any byte has
+/// arrived (or `idle_ok` is false — the payload follows a header), EOF
+/// is [`WireFault::Truncated`] and stalls past `stall_budget` are too.
+fn fill_buf<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    stall_budget: Duration,
+    should_stop: &mut impl FnMut() -> bool,
+    idle_ok: bool,
+) -> Result<Fill, DfqError> {
+    if buf.is_empty() {
+        return Ok(Fill::Done);
+    }
+    let mut got = 0usize;
+    let mut last_progress = Instant::now();
+    loop {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && idle_ok {
+                    return Ok(Fill::CleanEof);
+                }
+                return Err(DfqError::wire(
+                    WireFault::Truncated,
+                    "stream ended inside a frame",
+                ));
+            }
+            Ok(n) => {
+                got += n;
+                last_progress = Instant::now();
+                if got == buf.len() {
+                    return Ok(Fill::Done);
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if should_stop() {
+                    return Ok(Fill::Stopped);
+                }
+                if (got > 0 || !idle_ok)
+                    && last_progress.elapsed() > stall_budget
+                {
+                    return Err(DfqError::wire(
+                        WireFault::Truncated,
+                        format!(
+                            "peer stalled mid-frame past the \
+                             {stall_budget:?} budget"
+                        ),
+                    ));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                return Err(DfqError::wire(
+                    WireFault::Io,
+                    format!("read failed: {e}"),
+                ))
+            }
+        }
+    }
+}
+
+/// Encode and write one frame, flushing the stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), DfqError> {
+    let bytes = encode(frame)?;
+    w.write_all(&bytes)
+        .and_then(|_| w.flush())
+        .map_err(|e| DfqError::wire(WireFault::Io, format!("write failed: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode(f).expect("encode");
+        let mut header = [0u8; HEADER_LEN];
+        header.copy_from_slice(&bytes[..HEADER_LEN]);
+        let (ft, len) = parse_header(&header).expect("header");
+        assert_eq!(len, bytes.len() - HEADER_LEN);
+        decode_payload(ft, &bytes[HEADER_LEN..]).expect("payload")
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::InferRequest {
+                model: "resnet_s".into(),
+                image: Tensor::from_vec(
+                    &[1, 2, 2, 1],
+                    vec![0.5, -1.25, 3.0, f32::MIN_POSITIVE],
+                ),
+            },
+            Frame::InferResponse { output: vec![1.0, -2.5, 0.0, 1e-20] },
+            Frame::Error(DfqError::overloaded("resnet_s", 64)),
+            Frame::Error(DfqError::serve("batch dropped")),
+            Frame::Error(DfqError::invalid("bad shape")),
+            Frame::Error(DfqError::runtime("backend died")),
+            Frame::Error(DfqError::wire(WireFault::Truncated, "mid-frame EOF")),
+            Frame::MetricsRequest { model: "m".into() },
+            Frame::MetricsResponse(MetricsReply {
+                model: "resnet_s".into(),
+                completed: 100,
+                batches: 13,
+                rejected: 7,
+                swaps: 2,
+                queue_len: 5,
+                p50_s: 0.001,
+                p99_s: 0.01,
+                p999_s: 0.02,
+            }),
+            Frame::ListRequest,
+            Frame::ListResponse {
+                models: vec!["a".into(), "resnet_m".into()],
+            },
+            Frame::Shutdown,
+            Frame::Ok,
+        ]
+    }
+
+    #[test]
+    fn every_frame_type_roundtrips_bit_exact() {
+        for f in sample_frames() {
+            assert_eq!(roundtrip(&f), f, "frame {f:?}");
+        }
+    }
+
+    #[test]
+    fn io_roundtrip_through_a_byte_stream() {
+        let mut buf = Vec::new();
+        for f in sample_frames() {
+            write_frame(&mut buf, &f).expect("write");
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for f in sample_frames() {
+            assert_eq!(read_frame(&mut cursor).expect("read"), f);
+        }
+        // the stream is exactly drained: another read is a clean EOF
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert!(matches!(
+            err,
+            DfqError::Wire { fault: WireFault::Truncated, .. }
+        ));
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_typed_never_a_panic() {
+        for f in sample_frames() {
+            let bytes = encode(&f).unwrap();
+            for cut in 0..bytes.len() {
+                let mut cursor = std::io::Cursor::new(&bytes[..cut]);
+                let err = read_frame(&mut cursor).unwrap_err();
+                assert!(
+                    matches!(err, DfqError::Wire { .. }),
+                    "cut at {cut}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_reserved_and_unknown_type() {
+        let good = encode(&Frame::ListRequest).unwrap();
+        let mut header = [0u8; HEADER_LEN];
+        header.copy_from_slice(&good[..HEADER_LEN]);
+
+        let mut h = header;
+        h[0] = b'G'; // "GET ..." — an HTTP client knocking
+        assert!(matches!(
+            parse_header(&h).unwrap_err(),
+            DfqError::Wire { fault: WireFault::BadMagic, .. }
+        ));
+
+        let mut h = header;
+        h[4] = 99;
+        assert!(matches!(
+            parse_header(&h).unwrap_err(),
+            DfqError::Wire { fault: WireFault::BadVersion, .. }
+        ));
+
+        let mut h = header;
+        h[6] = 1;
+        assert!(matches!(
+            parse_header(&h).unwrap_err(),
+            DfqError::Wire { fault: WireFault::Malformed, .. }
+        ));
+
+        let mut h = header;
+        h[5] = 0xEE;
+        let (ft, _) = parse_header(&h).unwrap();
+        assert!(matches!(
+            decode_payload(ft, &[]).unwrap_err(),
+            DfqError::Wire { fault: WireFault::UnknownFrame, .. }
+        ));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4] = VERSION;
+        h[5] = FT_INFER_REQUEST;
+        h[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            parse_header(&h).unwrap_err(),
+            DfqError::Wire { fault: WireFault::Oversized, .. }
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_are_malformed() {
+        let good = encode(&Frame::ListRequest).unwrap();
+        let mut payload = good[HEADER_LEN..].to_vec();
+        payload.push(0);
+        assert!(matches!(
+            decode_payload(FT_LIST_REQUEST, &payload).unwrap_err(),
+            DfqError::Wire { fault: WireFault::Malformed, .. }
+        ));
+    }
+
+    #[test]
+    fn malicious_tensor_dims_cannot_allocate() {
+        // rank 4 with u32::MAX dims: numel overflows / truncates cleanly
+        let mut payload = Vec::new();
+        put_str16(&mut payload, "m").unwrap();
+        payload.push(4);
+        for _ in 0..4 {
+            put_u32(&mut payload, u32::MAX);
+        }
+        let err = decode_payload(FT_INFER_REQUEST, &payload).unwrap_err();
+        assert!(matches!(err, DfqError::Wire { .. }), "{err}");
+    }
+
+    #[test]
+    fn fuzz_random_bytes_never_panic_the_decoder() {
+        let mut rng = Pcg::new(0x5eed_0006);
+        for _ in 0..2000 {
+            let n = (rng.next_u32() % 64) as usize;
+            let payload: Vec<u8> =
+                (0..n).map(|_| rng.next_u32() as u8).collect();
+            let ft = (rng.next_u32() % 12) as u8;
+            // any Result is fine; a panic is the only failure mode
+            let _ = decode_payload(ft, &payload);
+        }
+        // and random headers
+        for _ in 0..2000 {
+            let mut h = [0u8; HEADER_LEN];
+            for b in h.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            let _ = parse_header(&h);
+        }
+    }
+
+    /// A mock poll-tick stream: a script of events, where `Tick` models
+    /// a read timeout and `Data` delivers bytes (possibly split
+    /// mid-frame), ending in clean EOF.
+    struct Scripted {
+        events: std::collections::VecDeque<Ev>,
+    }
+
+    enum Ev {
+        Tick,
+        Data(Vec<u8>),
+    }
+
+    impl Read for Scripted {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self.events.pop_front() {
+                None => Ok(0),
+                Some(Ev::Tick) => Err(std::io::Error::new(
+                    std::io::ErrorKind::WouldBlock,
+                    "tick",
+                )),
+                Some(Ev::Data(mut d)) => {
+                    let n = d.len().min(buf.len());
+                    buf[..n].copy_from_slice(&d[..n]);
+                    if n < d.len() {
+                        d.drain(..n);
+                        self.events.push_front(Ev::Data(d));
+                    }
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_reader_rides_out_ticks_and_split_frames() {
+        let bytes = encode(&Frame::MetricsRequest { model: "m".into() })
+            .unwrap();
+        let mid = bytes.len() / 2;
+        let mut s = Scripted {
+            events: [
+                Ev::Tick,
+                Ev::Data(bytes[..mid].to_vec()),
+                Ev::Tick,
+                Ev::Tick,
+                Ev::Data(bytes[mid..].to_vec()),
+            ]
+            .into_iter()
+            .collect(),
+        };
+        match read_frame_incremental(&mut s, Duration::from_secs(10), || false)
+            .unwrap()
+        {
+            Recv::Frame(Frame::MetricsRequest { model }) => {
+                assert_eq!(model, "m")
+            }
+            _ => panic!("expected the decoded frame"),
+        }
+        // nothing left: the next receive is a clean Closed, not an error
+        assert!(matches!(
+            read_frame_incremental(&mut s, Duration::from_secs(10), || false)
+                .unwrap(),
+            Recv::Closed
+        ));
+    }
+
+    #[test]
+    fn incremental_reader_eof_mid_frame_is_truncated() {
+        let bytes = encode(&Frame::ListRequest).unwrap();
+        let mut s = Scripted {
+            events: [Ev::Data(bytes[..5].to_vec())].into_iter().collect(),
+        };
+        let err =
+            read_frame_incremental(&mut s, Duration::from_secs(10), || false)
+                .unwrap_err();
+        assert!(matches!(
+            err,
+            DfqError::Wire { fault: WireFault::Truncated, .. }
+        ));
+    }
+
+    #[test]
+    fn incremental_reader_stops_on_request_while_idle() {
+        let mut s = Scripted {
+            events: [Ev::Tick, Ev::Tick, Ev::Tick].into_iter().collect(),
+        };
+        let mut polls = 0;
+        let got =
+            read_frame_incremental(&mut s, Duration::from_secs(10), || {
+                polls += 1;
+                polls >= 2
+            })
+            .unwrap();
+        assert!(matches!(got, Recv::Stopped));
+    }
+
+    #[test]
+    fn incremental_reader_enforces_the_mid_frame_stall_budget() {
+        let bytes = encode(&Frame::ListRequest).unwrap();
+        // endless ticks after a partial header: the zero budget trips
+        // immediately instead of spinning forever
+        let mut events: std::collections::VecDeque<Ev> =
+            [Ev::Data(bytes[..5].to_vec())].into_iter().collect();
+        for _ in 0..3 {
+            events.push_back(Ev::Tick);
+        }
+        let mut s = Scripted { events };
+        let err = read_frame_incremental(&mut s, Duration::ZERO, || false)
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            DfqError::Wire { fault: WireFault::Truncated, .. }
+        ));
+    }
+
+    #[test]
+    fn overload_shed_roundtrips_typed() {
+        let f = Frame::Error(DfqError::overloaded("big_model", 128));
+        match roundtrip(&f) {
+            Frame::Error(DfqError::Overloaded { model, depth }) => {
+                assert_eq!(model, "big_model");
+                assert_eq!(depth, 128);
+            }
+            other => panic!("expected typed overload, got {other:?}"),
+        }
+    }
+}

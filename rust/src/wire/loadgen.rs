@@ -1,0 +1,403 @@
+//! Open-loop load generator for a wire server (`dfq loadgen`).
+//!
+//! A pacer thread emits request ticks on the configured schedule
+//! **regardless of how fast responses come back** (open-loop — the
+//! honest way to measure a server under load: a closed loop would slow
+//! its own request rate down exactly when the server degrades, hiding
+//! the queueing delay users would see). Worker connections pull ticks
+//! and drive one request each; per-request latency is measured from the
+//! *scheduled* tick, so server-side queueing shows up in the tail.
+//!
+//! The report feeds `BENCH_serve.json` (see [`LoadReport::to_json`] and
+//! [`crate::report::bench`]): throughput, p50/p99/p999 latency, shed
+//! rate, plus the config that produced them — every future PR's serving
+//! claim is diffable against it.
+
+use std::sync::mpsc::{self, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::dataset::synth_images;
+use crate::error::DfqError;
+use crate::util::json::{self, Json};
+use crate::util::timer::Stats;
+use crate::wire::client::{WireClient, WireClientConfig};
+use crate::wire::net::WireAddr;
+
+/// Load-generation parameters.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// server address
+    pub addr: WireAddr,
+    /// target model name
+    pub model: String,
+    /// average request rate, requests/second
+    pub rps: f64,
+    /// how long to generate load for
+    pub duration: Duration,
+    /// concurrent worker connections
+    pub connections: usize,
+    /// bursty profile: alternate seconds at 1.75× / 0.25× the rate
+    /// (same average), exercising overload shed and queue drain
+    pub burst: bool,
+    /// synthetic image height/width
+    pub image_hw: usize,
+    /// synthetic image channels
+    pub image_c: usize,
+    /// RNG seed for the synthetic images
+    pub seed: u64,
+    /// per-connection client policy (retries are disabled by the runner
+    /// regardless — a retried request would be double-counted)
+    pub client: WireClientConfig,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: WireAddr::Tcp("127.0.0.1:7070".into()),
+            model: "model".into(),
+            rps: 50.0,
+            duration: Duration::from_secs(5),
+            connections: 8,
+            burst: false,
+            image_hw: 32,
+            image_c: 3,
+            seed: 0,
+            client: WireClientConfig::default(),
+        }
+    }
+}
+
+/// The burst profile's instantaneous rate multiplier at `elapsed`
+/// seconds: alternating seconds at 1.75× and 0.25× the average (flat
+/// 1.0 when `burst` is off).
+pub fn rate_multiplier(burst: bool, elapsed_secs: f64) -> f64 {
+    if !burst {
+        return 1.0;
+    }
+    if (elapsed_secs as u64) % 2 == 0 {
+        1.75
+    } else {
+        0.25
+    }
+}
+
+/// What one load run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// requests handed to workers
+    pub sent: usize,
+    /// requests answered with an output row
+    pub completed: usize,
+    /// requests shed by the server ([`DfqError::Overloaded`])
+    pub shed: usize,
+    /// requests that failed any other way
+    pub errors: usize,
+    /// schedule ticks dropped because every worker was busy (the
+    /// *client* saturated, not the server — raise `connections`)
+    pub client_saturated: usize,
+    /// wall-clock seconds the run took
+    pub wall_secs: f64,
+    /// open-loop latency of completed requests (seconds, from the
+    /// scheduled tick to the response)
+    pub latency: Stats,
+    /// first non-shed error message, when any occurred
+    pub first_error: Option<String>,
+}
+
+impl LoadReport {
+    /// Shed fraction of all answered requests (0 when none were).
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.completed + self.shed + self.errors;
+        if total == 0 {
+            0.0
+        } else {
+            self.shed as f64 / total as f64
+        }
+    }
+
+    /// Requests completed per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// The `BENCH_serve.json` document for this run (validated by
+    /// [`crate::report::bench::validate`]).
+    pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        let ms = |p: f64| {
+            let v = self.latency.percentile(p) * 1e3;
+            if v.is_finite() {
+                v
+            } else {
+                0.0
+            }
+        };
+        let max_ms = {
+            let v = self.latency.percentile(100.0) * 1e3;
+            if v.is_finite() {
+                v
+            } else {
+                0.0
+            }
+        };
+        let transport = match &cfg.addr {
+            WireAddr::Tcp(_) => "tcp",
+            WireAddr::Uds(_) => "unix",
+        };
+        json::obj(vec![
+            ("bench", json::s("serve")),
+            (
+                "schema_version",
+                json::num(crate::report::bench::BENCH_SCHEMA_VERSION as f64),
+            ),
+            (
+                "config",
+                json::obj(vec![
+                    ("transport", json::s(transport)),
+                    ("addr", json::s(&cfg.addr.to_string())),
+                    ("model", json::s(&cfg.model)),
+                    ("rps", json::num(cfg.rps)),
+                    ("duration_s", json::num(cfg.duration.as_secs_f64())),
+                    ("connections", json::num(cfg.connections as f64)),
+                    ("burst", Json::Bool(cfg.burst)),
+                ]),
+            ),
+            (
+                "results",
+                json::obj(vec![
+                    ("sent", json::num(self.sent as f64)),
+                    ("completed", json::num(self.completed as f64)),
+                    ("shed", json::num(self.shed as f64)),
+                    ("errors", json::num(self.errors as f64)),
+                    (
+                        "client_saturated",
+                        json::num(self.client_saturated as f64),
+                    ),
+                    ("wall_s", json::num(self.wall_secs)),
+                    ("throughput_rps", json::num(self.throughput_rps())),
+                    ("shed_rate", json::num(self.shed_rate())),
+                    (
+                        "latency_ms",
+                        json::obj(vec![
+                            ("p50", json::num(ms(50.0))),
+                            ("p90", json::num(ms(90.0))),
+                            ("p99", json::num(ms(99.0))),
+                            ("p999", json::num(ms(99.9))),
+                            ("max", json::num(max_ms)),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+struct WorkerTally {
+    completed: usize,
+    shed: usize,
+    errors: usize,
+    latencies: Vec<f64>,
+    first_error: Option<String>,
+}
+
+/// Drive one open-loop run against a live server.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, DfqError> {
+    if cfg.rps <= 0.0 {
+        return Err(DfqError::invalid("loadgen rps must be positive"));
+    }
+    if cfg.connections == 0 {
+        return Err(DfqError::invalid(
+            "loadgen needs at least one connection",
+        ));
+    }
+    // a retried request would be double-counted against the schedule
+    let client_cfg = WireClientConfig { max_retries: 0, ..cfg.client };
+
+    // a small pool of distinct synthetic images, reused round-robin
+    let pool: Vec<_> = (0..16)
+        .map(|i| {
+            synth_images(
+                1,
+                cfg.image_hw,
+                cfg.image_c,
+                cfg.seed.wrapping_add(i),
+            )
+        })
+        .collect();
+
+    let (tick_tx, tick_rx) = mpsc::sync_channel::<Instant>(4096);
+    let tick_rx = Arc::new(Mutex::new(tick_rx));
+    let start = Instant::now();
+
+    // workers: each owns one connection and pulls ticks until the pacer
+    // hangs up
+    let mut workers = Vec::new();
+    for w in 0..cfg.connections {
+        let rx = tick_rx.clone();
+        let addr = cfg.addr.clone();
+        let model = cfg.model.clone();
+        let pool = pool.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut tally = WorkerTally {
+                completed: 0,
+                shed: 0,
+                errors: 0,
+                latencies: Vec::new(),
+                first_error: None,
+            };
+            let mut client = match WireClient::connect(&addr, client_cfg) {
+                Ok(c) => c,
+                Err(e) => {
+                    // the worker can't serve: record once and exit; its
+                    // unprocessed ticks are drained and counted below
+                    tally.errors += 1;
+                    tally.first_error = Some(e.to_string());
+                    return tally;
+                }
+            };
+            let mut i = w; // stagger the image pool across workers
+            loop {
+                let tick = {
+                    let guard =
+                        rx.lock().unwrap_or_else(|e| e.into_inner());
+                    match guard.try_recv() {
+                        Ok(t) => Some(t),
+                        Err(mpsc::TryRecvError::Empty) => None,
+                        Err(mpsc::TryRecvError::Disconnected) => break,
+                    }
+                };
+                let Some(scheduled) = tick else {
+                    std::thread::sleep(Duration::from_micros(500));
+                    continue;
+                };
+                let image = pool[i % pool.len()].clone();
+                i += 1;
+                match client.infer(&model, image) {
+                    Ok(_) => {
+                        tally.completed += 1;
+                        tally
+                            .latencies
+                            .push(scheduled.elapsed().as_secs_f64());
+                    }
+                    Err(DfqError::Overloaded { .. }) => tally.shed += 1,
+                    Err(e) => {
+                        tally.errors += 1;
+                        if tally.first_error.is_none() {
+                            tally.first_error = Some(e.to_string());
+                        }
+                    }
+                }
+            }
+            tally
+        }));
+    }
+
+    // pacer: runs inline on this thread (workers carry the requests)
+    let deadline = start + cfg.duration;
+    let mut next = start;
+    let mut sent = 0usize;
+    let mut client_saturated = 0usize;
+    while next < deadline {
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        match tick_tx.try_send(next) {
+            Ok(()) => sent += 1,
+            Err(TrySendError::Full(_)) => client_saturated += 1,
+            Err(TrySendError::Disconnected(_)) => break,
+        }
+        let elapsed = next.duration_since(start).as_secs_f64();
+        let rate = cfg.rps * rate_multiplier(cfg.burst, elapsed);
+        next += Duration::from_secs_f64(1.0 / rate.max(1e-6));
+    }
+    drop(tick_tx); // workers drain the channel, then exit
+
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut errors = 0usize;
+    let mut latencies = Vec::new();
+    let mut first_error = None;
+    for w in workers {
+        if let Ok(t) = w.join() {
+            completed += t.completed;
+            shed += t.shed;
+            errors += t.errors;
+            latencies.extend(t.latencies);
+            if first_error.is_none() {
+                first_error = t.first_error;
+            }
+        }
+    }
+    // ticks no worker ever processed (e.g. every connection failed)
+    {
+        let guard = tick_rx.lock().unwrap_or_else(|e| e.into_inner());
+        while guard.try_recv().is_ok() {
+            errors += 1;
+        }
+    }
+    Ok(LoadReport {
+        sent,
+        completed,
+        shed,
+        errors,
+        client_saturated,
+        wall_secs: start.elapsed().as_secs_f64(),
+        latency: Stats::from(latencies),
+        first_error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_profile_alternates_and_preserves_the_average() {
+        assert_eq!(rate_multiplier(false, 0.3), 1.0);
+        assert_eq!(rate_multiplier(false, 5.7), 1.0);
+        assert_eq!(rate_multiplier(true, 0.5), 1.75);
+        assert_eq!(rate_multiplier(true, 1.5), 0.25);
+        assert_eq!(rate_multiplier(true, 2.0), 1.75);
+        // equal time in each phase averages to the configured rate
+        let avg =
+            (rate_multiplier(true, 0.0) + rate_multiplier(true, 1.0)) / 2.0;
+        assert!((avg - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn misconfiguration_is_rejected() {
+        let bad = LoadgenConfig { rps: 0.0, ..Default::default() };
+        assert!(run(&bad).is_err());
+        let bad = LoadgenConfig { connections: 0, ..Default::default() };
+        assert!(run(&bad).is_err());
+    }
+
+    #[test]
+    fn report_json_is_schema_valid_even_for_an_all_error_run() {
+        // nothing is listening: every request errors, latencies are
+        // empty — the JSON must still validate (no NaNs leak through)
+        let cfg = LoadgenConfig {
+            addr: WireAddr::Uds("/nonexistent/dfq-loadgen.sock".into()),
+            rps: 200.0,
+            duration: Duration::from_millis(100),
+            connections: 2,
+            image_hw: 2,
+            image_c: 1,
+            client: WireClientConfig {
+                connect_timeout: Duration::from_millis(20),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.completed, 0);
+        assert!(report.errors > 0, "{report:?}");
+        let doc = report.to_json(&cfg);
+        let text = doc.dump();
+        let parsed = Json::parse(&text).expect("dumped JSON re-parses");
+        crate::report::bench::validate(&parsed)
+            .unwrap_or_else(|e| panic!("schema: {e}\n{text}"));
+        assert_eq!(report.shed_rate(), 0.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! Cross-process serving: a versioned, length-prefixed binary protocol
+//! over TCP or Unix-domain sockets, std-only (the zero-dependency
+//! contract), carrying inference, metrics, model listing and graceful
+//! shutdown between a `dfq serve --listen` process and remote clients.
+//!
+//! ```text
+//!  dfq client / loadgen            dfq serve --listen ADDR | --uds PATH
+//!  ┌─────────────┐   frames   ┌────────────┐    Client    ┌───────────┐
+//!  │ WireClient  │ ─────────> │ WireServer │ ───────────> │ModelServer│
+//!  │ (reconnect, │ <───────── │ (acceptor  │ <─────────── │ (batching,│
+//!  │  timeouts)  │  typed     │  pool)     │  rows/sheds  │  hot-swap)│
+//!  └─────────────┘  errors    └────────────┘              └───────────┘
+//! ```
+//!
+//! * [`frame`] — the frame format, specified byte-for-byte, with a
+//!   decoder that rejects garbage with typed [`crate::error::WireFault`]
+//!   classes and a hard size cap instead of panicking or allocating.
+//! * [`net`] — one address/listener/stream abstraction over
+//!   `TcpListener` and `UnixListener`.
+//! * [`server`] — [`WireServer`]: a bounded acceptor pool that submits
+//!   decoded requests through the in-process
+//!   [`crate::session::ModelServer`] path, so admission control,
+//!   batching and atomic hot-swap apply to remote traffic unchanged —
+//!   and overload comes back over the wire as a typed
+//!   [`crate::error::DfqError::Overloaded`], not a dropped connection.
+//! * [`client`] — [`WireClient`]: connect/infer/metrics/list with
+//!   read/write timeouts and bounded reconnect-with-backoff.
+//! * [`loadgen`] — the open-loop load generator behind `dfq loadgen`
+//!   and `BENCH_serve.json`.
+//!
+//! Remote results are **bit-identical** to in-process execution: image
+//! and output f32s travel verbatim (little-endian bit patterns), and
+//! the server runs the same engines behind the same [`Client`] path —
+//! `tests/integration_wire.rs` asserts exact equality over both
+//! transports.
+//!
+//! [`Client`]: crate::session::Client
+
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod net;
+pub mod server;
+
+pub use client::{WireClient, WireClientConfig};
+pub use frame::{Frame, MetricsReply};
+pub use loadgen::{LoadgenConfig, LoadReport};
+pub use net::{WireAddr, WireListener, WireStream};
+pub use server::{StopHandle, WireServer, WireServerConfig, WireStats};

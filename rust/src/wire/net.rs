@@ -1,0 +1,373 @@
+//! Transport layer for the wire protocol: one address type, one
+//! listener and one stream that work over both TCP and Unix-domain
+//! sockets, std-only (the zero-dependency contract).
+//!
+//! Address syntax (used by `--listen`, `--uds` and `--connect`):
+//!
+//! * `unix:/path/to.sock` — explicit Unix-domain socket
+//! * `tcp:HOST:PORT` — explicit TCP
+//! * a bare string containing `/` — treated as a UDS path
+//! * anything else — treated as `HOST:PORT` TCP
+//!
+//! The listener hands out **nonblocking** accepts so the server's
+//! acceptor can interleave accept polling with shutdown checks; accepted
+//! streams are switched back to blocking with read/write timeouts.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::error::{DfqError, WireFault};
+
+/// A serving address: TCP `host:port` or a Unix-domain socket path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireAddr {
+    /// TCP `host:port`
+    Tcp(String),
+    /// Unix-domain socket path
+    Uds(PathBuf),
+}
+
+impl WireAddr {
+    /// Parse an address string (see the module docs for the syntax).
+    pub fn parse(s: &str) -> Result<WireAddr, DfqError> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err(DfqError::invalid("empty unix socket path"));
+            }
+            return Ok(WireAddr::Uds(PathBuf::from(path)));
+        }
+        if let Some(hp) = s.strip_prefix("tcp:") {
+            if hp.is_empty() {
+                return Err(DfqError::invalid("empty tcp address"));
+            }
+            return Ok(WireAddr::Tcp(hp.to_string()));
+        }
+        if s.is_empty() {
+            return Err(DfqError::invalid("empty wire address"));
+        }
+        if s.contains('/') {
+            Ok(WireAddr::Uds(PathBuf::from(s)))
+        } else {
+            Ok(WireAddr::Tcp(s.to_string()))
+        }
+    }
+}
+
+impl std::fmt::Display for WireAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireAddr::Tcp(hp) => write!(f, "tcp:{hp}"),
+            WireAddr::Uds(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A bound listening socket (TCP or UDS). Dropping a UDS listener
+/// removes its socket file.
+pub enum WireListener {
+    /// TCP listener
+    Tcp(TcpListener),
+    /// UDS listener plus the path to unlink on drop
+    Uds(UnixListener, PathBuf),
+}
+
+impl WireListener {
+    /// Bind the address. For UDS, a stale socket file from a previous
+    /// run is removed first (binding over it would otherwise fail).
+    pub fn bind(addr: &WireAddr) -> Result<WireListener, DfqError> {
+        match addr {
+            WireAddr::Tcp(hp) => {
+                let l = TcpListener::bind(hp.as_str())
+                    .map_err(|e| DfqError::io(format!("bind tcp {hp}"), &e))?;
+                l.set_nonblocking(true)
+                    .map_err(|e| DfqError::io("set nonblocking", &e))?;
+                Ok(WireListener::Tcp(l))
+            }
+            WireAddr::Uds(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path).map_err(|e| {
+                        DfqError::io(
+                            format!("remove stale socket {}", path.display()),
+                            &e,
+                        )
+                    })?;
+                }
+                let l = UnixListener::bind(path).map_err(|e| {
+                    DfqError::io(format!("bind uds {}", path.display()), &e)
+                })?;
+                l.set_nonblocking(true)
+                    .map_err(|e| DfqError::io("set nonblocking", &e))?;
+                Ok(WireListener::Uds(l, path.clone()))
+            }
+        }
+    }
+
+    /// The bound address as a connect string (`tcp:...` / `unix:...`).
+    /// For TCP this reports the **actual** port, so binding `:0` in
+    /// tests yields a usable address.
+    pub fn local_addr(&self) -> String {
+        match self {
+            WireListener::Tcp(l) => match l.local_addr() {
+                Ok(a) => format!("tcp:{a}"),
+                Err(_) => "tcp:?".to_string(),
+            },
+            WireListener::Uds(_, p) => format!("unix:{}", p.display()),
+        }
+    }
+
+    /// Nonblocking accept: `Ok(Some(stream))`, `Ok(None)` when no
+    /// connection is pending, or a typed error.
+    pub fn accept(&self) -> Result<Option<WireStream>, DfqError> {
+        match self {
+            WireListener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)
+                        .map_err(|e| DfqError::io("accept tcp", &e))?;
+                    s.set_nodelay(true).ok();
+                    Ok(Some(WireStream::Tcp(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    Ok(None)
+                }
+                Err(e) => Err(DfqError::io("accept tcp", &e)),
+            },
+            WireListener::Uds(l, _) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)
+                        .map_err(|e| DfqError::io("accept uds", &e))?;
+                    Ok(Some(WireStream::Uds(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    Ok(None)
+                }
+                Err(e) => Err(DfqError::io("accept uds", &e)),
+            },
+        }
+    }
+}
+
+impl Drop for WireListener {
+    fn drop(&mut self) {
+        if let WireListener::Uds(_, path) = self {
+            std::fs::remove_file(&*path).ok();
+        }
+    }
+}
+
+/// One connected socket (TCP or UDS), blocking with timeouts.
+pub enum WireStream {
+    /// TCP stream
+    Tcp(TcpStream),
+    /// UDS stream
+    Uds(UnixStream),
+}
+
+impl WireStream {
+    /// Connect to an address with a connect timeout. TCP host names are
+    /// resolved and the first address is tried; `TCP_NODELAY` is set so
+    /// small frames are not Nagle-delayed.
+    pub fn connect(
+        addr: &WireAddr,
+        connect_timeout: Duration,
+    ) -> Result<WireStream, DfqError> {
+        match addr {
+            WireAddr::Tcp(hp) => {
+                let mut addrs = hp.to_socket_addrs().map_err(|e| {
+                    DfqError::wire(
+                        WireFault::Io,
+                        format!("resolve {hp}: {e}"),
+                    )
+                })?;
+                let sa = addrs.next().ok_or_else(|| {
+                    DfqError::wire(
+                        WireFault::Io,
+                        format!("{hp} resolved to no addresses"),
+                    )
+                })?;
+                let s = TcpStream::connect_timeout(&sa, connect_timeout)
+                    .map_err(|e| {
+                        DfqError::wire(
+                            WireFault::Io,
+                            format!("connect {hp}: {e}"),
+                        )
+                    })?;
+                s.set_nodelay(true).ok();
+                Ok(WireStream::Tcp(s))
+            }
+            WireAddr::Uds(path) => {
+                let s = UnixStream::connect(path).map_err(|e| {
+                    DfqError::wire(
+                        WireFault::Io,
+                        format!("connect {}: {e}", path.display()),
+                    )
+                })?;
+                Ok(WireStream::Uds(s))
+            }
+        }
+    }
+
+    /// Set read/write timeouts (`None` = block forever).
+    pub fn set_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<(), DfqError> {
+        let map = |e: std::io::Error| {
+            DfqError::wire(WireFault::Io, format!("set timeouts: {e}"))
+        };
+        match self {
+            WireStream::Tcp(s) => {
+                s.set_read_timeout(read).map_err(map)?;
+                s.set_write_timeout(write).map_err(map)
+            }
+            WireStream::Uds(s) => {
+                s.set_read_timeout(read).map_err(map)?;
+                s.set_write_timeout(write).map_err(map)
+            }
+        }
+    }
+
+    /// Shut down both directions (best-effort; used when rejecting a
+    /// connection at capacity).
+    pub fn shutdown(&self) {
+        match self {
+            WireStream::Tcp(s) => {
+                s.shutdown(std::net::Shutdown::Both).ok();
+            }
+            WireStream::Uds(s) => {
+                s.shutdown(std::net::Shutdown::Both).ok();
+            }
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.read(buf),
+            WireStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.write(buf),
+            WireStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.flush(),
+            WireStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_syntax_parses() {
+        assert_eq!(
+            WireAddr::parse("unix:/tmp/dfq.sock").unwrap(),
+            WireAddr::Uds(PathBuf::from("/tmp/dfq.sock"))
+        );
+        assert_eq!(
+            WireAddr::parse("tcp:127.0.0.1:7070").unwrap(),
+            WireAddr::Tcp("127.0.0.1:7070".into())
+        );
+        assert_eq!(
+            WireAddr::parse("/var/run/dfq.sock").unwrap(),
+            WireAddr::Uds(PathBuf::from("/var/run/dfq.sock"))
+        );
+        assert_eq!(
+            WireAddr::parse("localhost:9000").unwrap(),
+            WireAddr::Tcp("localhost:9000".into())
+        );
+        assert!(WireAddr::parse("").is_err());
+        assert!(WireAddr::parse("unix:").is_err());
+        assert!(WireAddr::parse("tcp:").is_err());
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for s in ["unix:/tmp/x.sock", "tcp:127.0.0.1:80"] {
+            let a = WireAddr::parse(s).unwrap();
+            assert_eq!(WireAddr::parse(&a.to_string()).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn tcp_bind_accept_connect_loopback() {
+        let addr = WireAddr::Tcp("127.0.0.1:0".into());
+        let listener = WireListener::bind(&addr).unwrap();
+        // no pending connection yet: nonblocking accept yields None
+        assert!(listener.accept().unwrap().is_none());
+        let connect_to =
+            WireAddr::parse(&listener.local_addr()).unwrap();
+        let mut client =
+            WireStream::connect(&connect_to, Duration::from_secs(5)).unwrap();
+        // poll until the pending connection is visible to accept()
+        let mut server = None;
+        for _ in 0..500 {
+            if let Some(s) = listener.accept().unwrap() {
+                server = Some(s);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut server = server.expect("accept timed out");
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        let mut buf = [0u8; 4];
+        server.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+    }
+
+    #[test]
+    fn uds_bind_removes_stale_socket_and_cleans_up() {
+        let path = std::env::temp_dir()
+            .join(format!("dfq-net-test-{}.sock", std::process::id()));
+        std::fs::write(&path, b"stale").unwrap();
+        let addr = WireAddr::Uds(path.clone());
+        {
+            let listener = WireListener::bind(&addr).unwrap();
+            assert!(path.exists());
+            let mut client =
+                WireStream::connect(&addr, Duration::from_secs(5)).unwrap();
+            let mut server = None;
+            for _ in 0..500 {
+                if let Some(s) = listener.accept().unwrap() {
+                    server = Some(s);
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let mut server = server.expect("accept timed out");
+            client.write_all(b"uds!").unwrap();
+            let mut buf = [0u8; 4];
+            server.read_exact(&mut buf).unwrap();
+            assert_eq!(&buf, b"uds!");
+        }
+        // drop removed the socket file
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn connect_to_nothing_is_a_typed_io_fault() {
+        let addr = WireAddr::Uds(PathBuf::from("/nonexistent/dfq.sock"));
+        let err =
+            WireStream::connect(&addr, Duration::from_millis(100)).unwrap_err();
+        assert!(matches!(
+            err,
+            DfqError::Wire { fault: crate::error::WireFault::Io, .. }
+        ));
+    }
+}

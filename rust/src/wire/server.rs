@@ -1,0 +1,326 @@
+//! The serving side of the wire protocol: a bounded acceptor pool that
+//! decodes frames off TCP/UDS connections and submits them through the
+//! existing in-process [`ModelServer`] path — so admission control,
+//! batching and atomic hot-swap all apply to remote traffic unchanged.
+//!
+//! Robustness contract (exercised by `tests/integration_wire.rs`):
+//!
+//! * overload comes back over the wire as a **typed**
+//!   [`DfqError::Overloaded`] error frame, not a dropped connection;
+//! * a client that sends garbage gets a typed error frame and its
+//!   connection closed — the acceptor and every other connection keep
+//!   serving;
+//! * a client that disconnects mid-request (or mid-frame) never kills
+//!   the acceptor or poisons a batch: the response fan-out already
+//!   tolerates a hung-up waiter, and a partial frame is dropped with
+//!   the connection;
+//! * at [`WireServerConfig::max_connections`] live connections, new
+//!   ones are rejected with a typed error frame and closed (bounded
+//!   resource use, like the admission queue bounds memory).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::server::{Client, ModelServer};
+use crate::error::{DfqError, WireFault};
+use crate::wire::frame::{
+    read_frame_incremental, write_frame, Frame, MetricsReply, Recv,
+};
+use crate::wire::net::{WireAddr, WireListener, WireStream};
+
+/// Acceptor-pool configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct WireServerConfig {
+    /// max concurrently served connections; beyond this, new ones are
+    /// rejected with a typed error frame and closed
+    pub max_connections: usize,
+    /// per-read socket timeout — the poll tick at which an idle handler
+    /// re-checks the stop flag (shutdown latency is bounded by this)
+    pub read_tick: Duration,
+    /// how long a peer may stall **inside** a frame before the partial
+    /// frame is dropped as [`WireFault::Truncated`] (idle *between*
+    /// frames is unlimited)
+    pub stall_budget: Duration,
+    /// socket write timeout for responses
+    pub write_timeout: Duration,
+}
+
+impl Default for WireServerConfig {
+    fn default() -> Self {
+        WireServerConfig {
+            max_connections: 64,
+            read_tick: Duration::from_millis(100),
+            stall_budget: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Counters reported when [`WireServer::serve`] returns.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// connections accepted into the pool
+    pub accepted: usize,
+    /// connections rejected at [`WireServerConfig::max_connections`]
+    pub rejected_capacity: usize,
+    /// connections closed for a protocol violation (bad magic, garbage
+    /// payloads, truncated frames)
+    pub protocol_errors: usize,
+    /// inference requests served (including typed-error replies)
+    pub requests: usize,
+}
+
+#[derive(Default)]
+struct SharedStats {
+    accepted: AtomicUsize,
+    rejected_capacity: AtomicUsize,
+    protocol_errors: AtomicUsize,
+    requests: AtomicUsize,
+}
+
+impl SharedStats {
+    fn snapshot(&self) -> WireStats {
+        WireStats {
+            accepted: self.accepted.load(Ordering::SeqCst),
+            rejected_capacity: self.rejected_capacity.load(Ordering::SeqCst),
+            protocol_errors: self.protocol_errors.load(Ordering::SeqCst),
+            requests: self.requests.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// A handle that asks a running [`WireServer::serve`] loop to stop
+/// (same effect as a client sending a `Shutdown` frame).
+#[derive(Clone)]
+pub struct StopHandle(Arc<AtomicBool>);
+
+impl StopHandle {
+    /// Request a graceful stop: the acceptor stops accepting, live
+    /// handlers finish their current frame and exit at the next tick.
+    pub fn stop(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+}
+
+/// A bound wire endpoint, ready to [`serve`](WireServer::serve) a
+/// [`ModelServer`] to remote clients.
+pub struct WireServer {
+    listener: WireListener,
+    cfg: WireServerConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl WireServer {
+    /// Bind the address (TCP `host:port` or a UDS path).
+    pub fn bind(
+        addr: &WireAddr,
+        cfg: WireServerConfig,
+    ) -> Result<WireServer, DfqError> {
+        Ok(WireServer {
+            listener: WireListener::bind(addr)?,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address as a connect string (actual port for TCP `:0`).
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr()
+    }
+
+    /// A handle to stop the serve loop from another thread.
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle(self.stop.clone())
+    }
+
+    /// Run the accept loop until a `Shutdown` frame arrives or the
+    /// [`StopHandle`] fires; every handler thread is joined before this
+    /// returns, so the caller again holds the only live references to
+    /// the [`ModelServer`] afterwards.
+    pub fn serve(self, server: Arc<ModelServer>) -> WireStats {
+        let stats = Arc::new(SharedStats::default());
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            let stream = match self.listener.accept() {
+                Ok(Some(s)) => s,
+                Ok(None) => {
+                    handlers.retain(|h| !h.is_finished());
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                // a transient accept failure (e.g. EMFILE under load)
+                // must not kill the acceptor
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            handlers.retain(|h| !h.is_finished());
+            if handlers.len() >= self.cfg.max_connections {
+                stats.rejected_capacity.fetch_add(1, Ordering::SeqCst);
+                reject_at_capacity(stream, &self.cfg);
+                continue;
+            }
+            stats.accepted.fetch_add(1, Ordering::SeqCst);
+            let client = server.client();
+            let server = server.clone();
+            let stop = self.stop.clone();
+            let stats2 = stats.clone();
+            let cfg = self.cfg;
+            handlers.push(std::thread::spawn(move || {
+                handle_connection(stream, client, server, stop, stats2, cfg);
+            }));
+        }
+        for h in handlers {
+            h.join().ok();
+        }
+        stats.snapshot()
+    }
+}
+
+fn reject_at_capacity(mut stream: WireStream, cfg: &WireServerConfig) {
+    stream.set_timeouts(None, Some(cfg.write_timeout)).ok();
+    write_frame(
+        &mut stream,
+        &Frame::Error(DfqError::serve(
+            "server is at its connection-capacity limit; retry later",
+        )),
+    )
+    .ok();
+    stream.shutdown();
+}
+
+/// One connection's request/response loop. Returning closes the
+/// connection; the acceptor is never affected by anything here.
+fn handle_connection(
+    mut stream: WireStream,
+    client: Client,
+    server: Arc<ModelServer>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<SharedStats>,
+    cfg: WireServerConfig,
+) {
+    if stream
+        .set_timeouts(Some(cfg.read_tick), Some(cfg.write_timeout))
+        .is_err()
+    {
+        return;
+    }
+    loop {
+        let frame = match read_frame_incremental(
+            &mut stream,
+            cfg.stall_budget,
+            || stop.load(Ordering::SeqCst),
+        ) {
+            Ok(Recv::Frame(f)) => f,
+            // clean disconnect between frames, or the server stopping
+            Ok(Recv::Closed) | Ok(Recv::Stopped) => return,
+            Err(e) => {
+                // garbage / truncation: answer typed (best-effort) and
+                // close this connection only
+                stats.protocol_errors.fetch_add(1, Ordering::SeqCst);
+                write_frame(&mut stream, &Frame::Error(e)).ok();
+                stream.shutdown();
+                return;
+            }
+        };
+        let reply = match frame {
+            Frame::InferRequest { model, image } => {
+                stats.requests.fetch_add(1, Ordering::SeqCst);
+                match client.infer(&model, image) {
+                    Ok(output) => Frame::InferResponse { output },
+                    // typed shed (Overloaded) and every other failure
+                    // travel as an error frame; the connection stays up
+                    Err(e) => Frame::Error(e),
+                }
+            }
+            Frame::MetricsRequest { model } => match metrics_reply(
+                &server, &model,
+            ) {
+                Ok(m) => Frame::MetricsResponse(m),
+                Err(e) => Frame::Error(e),
+            },
+            Frame::ListRequest => {
+                Frame::ListResponse { models: server.models() }
+            }
+            Frame::Shutdown => {
+                write_frame(&mut stream, &Frame::Ok).ok();
+                stop.store(true, Ordering::SeqCst);
+                return;
+            }
+            // well-formed but not a request (a confused peer replaying
+            // server frames): typed answer, connection stays up
+            other => Frame::Error(DfqError::wire(
+                WireFault::Malformed,
+                format!(
+                    "frame type {:#04x} is not a request",
+                    other.frame_type()
+                ),
+            )),
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            // client hung up mid-response: drop the connection quietly
+            return;
+        }
+    }
+}
+
+/// Assemble one model's wire metrics snapshot (percentiles in seconds;
+/// 0.0 when nothing has completed yet, since NaN has no JSON/wire-safe
+/// meaning for clients).
+fn metrics_reply(
+    server: &ModelServer,
+    model: &str,
+) -> Result<MetricsReply, DfqError> {
+    let m = server.metrics(model)?;
+    let queue_len = server.queue_len(model)? as u64;
+    let pct = |p: f64| {
+        let v = m.latency_percentile(p);
+        if v.is_finite() {
+            v
+        } else {
+            0.0
+        }
+    };
+    Ok(MetricsReply {
+        model: model.to_string(),
+        completed: m.completed as u64,
+        batches: m.batches as u64,
+        rejected: m.rejected as u64,
+        swaps: m.swaps as u64,
+        queue_len,
+        p50_s: pct(50.0),
+        p99_s: pct(99.0),
+        p999_s: pct(99.9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::ServeConfig;
+
+    #[test]
+    fn stop_handle_ends_an_idle_serve_loop() {
+        let server = Arc::new(ModelServer::new(ServeConfig::default()));
+        let wire = WireServer::bind(
+            &WireAddr::Tcp("127.0.0.1:0".into()),
+            WireServerConfig::default(),
+        )
+        .unwrap();
+        let stop = wire.stop_handle();
+        let t = std::thread::spawn(move || wire.serve(server));
+        std::thread::sleep(Duration::from_millis(20));
+        stop.stop();
+        let stats = t.join().unwrap();
+        assert_eq!(stats, WireStats::default());
+    }
+
+    #[test]
+    fn default_config_is_bounded() {
+        let cfg = WireServerConfig::default();
+        assert!(cfg.max_connections > 0);
+        assert!(cfg.stall_budget > cfg.read_tick);
+    }
+}

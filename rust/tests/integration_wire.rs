@@ -1,0 +1,426 @@
+//! Integration tests for the wire layer: bit-identical remote inference
+//! over UDS and TCP, protocol robustness against garbage and
+//! disconnecting peers, bounded connection capacity, typed overload
+//! shed over the wire — all over real `Session`-built engines, no
+//! artifacts required — plus `record_bench_seed_trajectory`, which
+//! materialises the repo-root `BENCH_serve.json` / `BENCH_hotpath.json`
+//! perf-trajectory documents from a live loopback run.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dfq::coordinator::serve::Backend;
+use dfq::error::WireFault;
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::prelude::*;
+use dfq::wire::frame::{read_frame, Frame};
+use dfq::wire::loadgen::{self, LoadgenConfig};
+use dfq::wire::server::WireStats;
+use dfq::wire::StopHandle;
+
+/// A small conv -> gap -> fc model over an 8x8x3 input with random
+/// folded weights (mirrors `integration_serve.rs`).
+fn tiny_model(seed: u64) -> (Graph, HashMap<String, FoldedParams>) {
+    let graph = Graph {
+        name: format!("tiny{seed}"),
+        input_hwc: (8, 8, 3),
+        modules: vec![
+            UnifiedModule {
+                name: "c0".into(),
+                kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: 4, stride: 1 },
+                src: "input".into(),
+                res: None,
+                relu: true,
+            },
+            UnifiedModule {
+                name: "gap".into(),
+                kind: ModuleKind::Gap,
+                src: "c0".into(),
+                res: None,
+                relu: false,
+            },
+            UnifiedModule {
+                name: "fc".into(),
+                kind: ModuleKind::Dense { cin: 4, cout: 5 },
+                src: "gap".into(),
+                res: None,
+                relu: false,
+            },
+        ],
+    };
+    let mut rng = Pcg::new(seed);
+    let mut folded = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.05)).collect(),
+            },
+        );
+    }
+    (graph, folded)
+}
+
+fn calibrated(seed: u64) -> CalibratedModel {
+    let (graph, folded) = tiny_model(seed);
+    let session = Session::from_graph(graph, folded).unwrap();
+    let mut rng = Pcg::new(seed ^ 0xc0ffee);
+    let calib = Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect());
+    session.calibrate(CalibConfig::default(), &calib).unwrap()
+}
+
+fn image(seed: u64) -> Tensor {
+    let mut rng = Pcg::new(seed);
+    Tensor::from_vec(&[1, 8, 8, 3], (0..192).map(|_| rng.normal()).collect())
+}
+
+fn uds_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dfq-wire-{tag}-{}.sock", std::process::id()))
+}
+
+/// Stand up a ModelServer with one `tiny`-model int endpoint and a wire
+/// acceptor on `addr`; returns (connect-addr, stop, acceptor thread).
+fn start_tiny(
+    addr: &WireAddr,
+    wire_cfg: WireServerConfig,
+    serve_cfg: ServeConfig,
+) -> (WireAddr, StopHandle, std::thread::JoinHandle<WireStats>) {
+    let server = ModelServer::new(serve_cfg);
+    let engine = calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+    server.register("tiny", engine).unwrap();
+    start_server(addr, wire_cfg, server)
+}
+
+fn start_server(
+    addr: &WireAddr,
+    wire_cfg: WireServerConfig,
+    server: ModelServer,
+) -> (WireAddr, StopHandle, std::thread::JoinHandle<WireStats>) {
+    let wire = WireServer::bind(addr, wire_cfg).unwrap();
+    let connect = WireAddr::parse(&wire.local_addr()).unwrap();
+    let stop = wire.stop_handle();
+    let server = Arc::new(server);
+    let handle = std::thread::spawn(move || wire.serve(server));
+    (connect, stop, handle)
+}
+
+fn quick_server_cfg() -> WireServerConfig {
+    WireServerConfig {
+        read_tick: Duration::from_millis(10),
+        stall_budget: Duration::from_millis(300),
+        ..WireServerConfig::default()
+    }
+}
+
+/// The acceptance bar: a remote infer over UDS returns the exact bits
+/// the same engine produces in-process, and the whole client surface
+/// (list / metrics / shutdown) works over one connection.
+#[test]
+fn uds_roundtrip_is_bit_identical_and_full_surface() {
+    let path = uds_path("roundtrip");
+    let (addr, _stop, handle) =
+        start_tiny(&WireAddr::Uds(path), quick_server_cfg(), ServeConfig::default());
+
+    // in-process reference on an identically-built engine
+    let reference = calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+    let mut client = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    for seed in [10u64, 11, 12] {
+        let expected = reference.run(&image(seed)).unwrap();
+        let got = client.infer("tiny", image(seed)).unwrap();
+        assert_eq!(got, expected.data, "seed {seed}: remote bits differ");
+    }
+
+    assert_eq!(client.list().unwrap(), vec!["tiny".to_string()]);
+    let m = client.metrics("tiny").unwrap();
+    assert_eq!(m.model, "tiny");
+    assert!(m.completed >= 3, "{m:?}");
+    assert!(m.p50_s.is_finite() && m.p50_s >= 0.0);
+    assert!(client.metrics("nonexistent").is_err());
+
+    client.shutdown_server().unwrap();
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.accepted, 1);
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.protocol_errors, 0);
+}
+
+#[test]
+fn tcp_roundtrip_is_bit_identical() {
+    let (addr, _stop, handle) = start_tiny(
+        &WireAddr::Tcp("127.0.0.1:0".into()),
+        quick_server_cfg(),
+        ServeConfig::default(),
+    );
+    let reference = calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+    let mut client = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    let expected = reference.run(&image(42)).unwrap();
+    assert_eq!(client.infer("tiny", image(42)).unwrap(), expected.data);
+    client.shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+/// Raw-socket abuse: HTTP garbage, a wrong protocol version and an
+/// oversized length must each come back as a *typed* error frame and a
+/// closed connection — and the acceptor must keep serving throughout.
+#[test]
+fn garbage_is_answered_typed_and_never_kills_the_acceptor() {
+    let (addr, _stop, handle) = start_tiny(
+        &WireAddr::Tcp("127.0.0.1:0".into()),
+        quick_server_cfg(),
+        ServeConfig::default(),
+    );
+    let WireAddr::Tcp(hp) = &addr else { panic!("tcp addr expected") };
+
+    let fault_of = |raw: &[u8]| -> WireFault {
+        let mut s = std::net::TcpStream::connect(hp).unwrap();
+        s.write_all(raw).unwrap();
+        match read_frame(&mut s).unwrap() {
+            Frame::Error(DfqError::Wire { fault, .. }) => fault,
+            other => panic!("expected a wire error frame, got {other:?}"),
+        }
+    };
+
+    assert_eq!(fault_of(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n"), WireFault::BadMagic);
+
+    // right magic, version 99
+    let mut bad_version = Vec::from(*b"dfq1");
+    bad_version.extend_from_slice(&[99, 0x06, 0, 0, 0, 0, 0, 0]);
+    assert_eq!(fault_of(&bad_version), WireFault::BadVersion);
+
+    // a length far beyond the payload cap must be refused before any
+    // allocation happens
+    let mut oversized = Vec::from(*b"dfq1");
+    oversized.extend_from_slice(&[1, 0x06, 0, 0]);
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert_eq!(fault_of(&oversized), WireFault::Oversized);
+
+    // half a header, then hang up mid-frame: nothing to answer, but the
+    // server must shrug it off
+    {
+        let mut s = std::net::TcpStream::connect(hp).unwrap();
+        s.write_all(b"dfq1\x01").unwrap();
+    }
+    // give the handler a tick to classify the aborted connection
+    std::thread::sleep(Duration::from_millis(100));
+
+    // after all of that, a well-behaved client still gets served
+    let mut client = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    assert_eq!(client.infer("tiny", image(3)).unwrap().len(), 5);
+    client.shutdown_server().unwrap();
+    let stats = handle.join().unwrap();
+    assert!(stats.protocol_errors >= 3, "{stats:?}");
+    assert_eq!(stats.requests, 1);
+}
+
+/// A client that fires a request and vanishes before reading the
+/// response must not take the endpoint (or anyone else's request) down.
+#[test]
+fn client_disconnect_mid_request_leaves_server_serving() {
+    let path = uds_path("disconnect");
+    let (addr, _stop, handle) =
+        start_tiny(&WireAddr::Uds(path), quick_server_cfg(), ServeConfig::default());
+
+    for seed in [7u64, 8] {
+        // connect with a read timeout too short for the response: the
+        // request lands, the client gives up and hangs up immediately
+        let cfg = WireClientConfig {
+            read_timeout: Duration::from_micros(10),
+            max_retries: 0,
+            ..WireClientConfig::default()
+        };
+        let mut rude = WireClient::connect(&addr, cfg).unwrap();
+        let _ = rude.infer("tiny", image(seed)); // timeout -> Err; then drop
+    }
+
+    let mut client = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    let reference = calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+    assert_eq!(
+        client.infer("tiny", image(9)).unwrap(),
+        reference.run(&image(9)).unwrap().data,
+        "a vanished peer poisoned the batch path"
+    );
+    client.shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+/// Beyond `max_connections`, a new connection is answered with a typed
+/// error frame and closed; once capacity frees up, it can reconnect.
+#[test]
+fn capacity_limit_rejects_typed_then_recovers() {
+    let (addr, _stop, handle) = start_tiny(
+        &WireAddr::Tcp("127.0.0.1:0".into()),
+        WireServerConfig { max_connections: 1, ..quick_server_cfg() },
+        ServeConfig::default(),
+    );
+    let mut first = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    assert_eq!(first.infer("tiny", image(1)).unwrap().len(), 5);
+
+    // the pool is full: the second connection's first call must surface
+    // the server's typed rejection, not hang or panic
+    let cfg = WireClientConfig { max_retries: 0, ..WireClientConfig::default() };
+    let mut second = WireClient::connect(&addr, cfg).unwrap();
+    let err = second.infer("tiny", image(2)).unwrap_err();
+    assert!(
+        matches!(err, DfqError::Serve(_) | DfqError::Wire { .. }),
+        "unexpected rejection shape: {err:?}"
+    );
+
+    drop(first);
+    drop(second);
+    // the reaper runs on accept: poke it until the slot frees
+    let mut again = None;
+    for _ in 0..50 {
+        std::thread::sleep(Duration::from_millis(20));
+        let mut c = WireClient::connect(&addr, cfg).unwrap();
+        if let Ok(out) = c.infer("tiny", image(3)) {
+            assert_eq!(out.len(), 5);
+            again = Some(c);
+            break;
+        }
+    }
+    let mut again = again.expect("capacity never freed after the first client left");
+    again.shutdown_server().unwrap();
+    let stats = handle.join().unwrap();
+    assert!(stats.rejected_capacity >= 1, "{stats:?}");
+}
+
+/// A deliberately slow backend with a depth-1 admission queue: under a
+/// burst of concurrent remote requests, overload must come back as a
+/// typed [`DfqError::Overloaded`] frame — never a dropped connection —
+/// while at least one request completes.
+#[test]
+fn overload_is_shed_typed_over_the_wire() {
+    struct SlowBackend;
+    impl Backend for SlowBackend {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            std::thread::sleep(Duration::from_millis(60));
+            let b = batch.shape.dim(0);
+            Ok(Tensor::from_vec(&[b, 1], vec![1.0; b]))
+        }
+    }
+    let serve_cfg =
+        ServeConfig { max_wait: Duration::from_millis(1), queue_depth: 1 };
+    let server = ModelServer::new(serve_cfg);
+    server.register("slow", Arc::new(SlowBackend)).unwrap();
+    let (addr, _stop, handle) =
+        start_server(&WireAddr::Tcp("127.0.0.1:0".into()), quick_server_cfg(), server);
+
+    let mut threads = Vec::new();
+    for seed in 0..8u64 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let cfg = WireClientConfig { max_retries: 0, ..WireClientConfig::default() };
+            let mut c = WireClient::connect(&addr, cfg).unwrap();
+            c.infer("slow", image(seed))
+        }));
+    }
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for t in threads {
+        match t.join().unwrap() {
+            Ok(out) => {
+                assert_eq!(out, vec![1.0]);
+                ok += 1;
+            }
+            Err(DfqError::Overloaded { model, .. }) => {
+                assert_eq!(model, "slow");
+                shed += 1;
+            }
+            Err(e) => panic!("expected completion or a typed shed, got {e:?}"),
+        }
+    }
+    assert!(ok >= 1, "nothing completed");
+    assert!(shed >= 1, "nothing was shed: the backlog never formed");
+
+    let mut c = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    c.shutdown_server().unwrap();
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.requests, 8);
+    assert_eq!(stats.protocol_errors, 0);
+}
+
+/// Materialise the repo-root perf-trajectory documents from a live
+/// loopback run: `BENCH_serve.json` via the open-loop load generator
+/// over UDS, `BENCH_hotpath.json` from micro-measurements — both
+/// schema-validated before they land. (Profile is stamped honestly:
+/// `debug` under `cargo test`, `release` in the release lane.)
+#[test]
+fn record_bench_seed_trajectory() {
+    // --- serve trajectory ---
+    let path = uds_path("bench");
+    let (addr, _stop, handle) =
+        start_tiny(&WireAddr::Uds(path), quick_server_cfg(), ServeConfig::default());
+    let cfg = LoadgenConfig {
+        addr: addr.clone(),
+        model: "tiny".into(),
+        rps: 120.0,
+        duration: Duration::from_secs(2),
+        connections: 4,
+        burst: true,
+        image_hw: 8,
+        image_c: 3,
+        seed: 6,
+        client: WireClientConfig::default(),
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert!(report.completed > 0, "{report:?}");
+    assert_eq!(report.errors, 0, "first error: {:?}", report.first_error);
+    let doc = report.to_json(&cfg);
+    dfq::report::bench::validate(&doc).unwrap();
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(root.join("BENCH_serve.json"), doc.dump() + "\n").unwrap();
+
+    let mut c = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    c.shutdown_server().unwrap();
+    handle.join().unwrap();
+
+    // --- hotpath trajectory (micro slice of benches/hotpath.rs) ---
+    use dfq::report::bench::BenchEntry;
+    use dfq::tensor::{ops_int, TensorI32};
+    use dfq::util::timer::bench;
+    let mut rng = Pcg::new(99);
+    let (m, k, n) = (64usize, 144, 32);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.int_range(0, 256) as i32).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.int_range(-128, 128) as i32).collect();
+    let st_gemm = bench(1, 5, || {
+        std::hint::black_box(ops_int::gemm_i32(&a, &b, m, k, n));
+    });
+    let acc = TensorI32::from_vec(
+        &[1 << 16],
+        (0..1 << 16).map(|_| rng.int_range(-(1 << 24), 1 << 24) as i32).collect(),
+    );
+    let st_req = bench(1, 5, || {
+        std::hint::black_box(dfq::quant::scheme::requantize_tensor(&acc, 9, 8, true));
+    });
+    let entry = |name: &str, st: &dfq::util::timer::Stats, work: f64, unit: &str| BenchEntry {
+        name: name.to_string(),
+        median_s: st.median(),
+        p95_s: st.percentile(95.0).max(st.median()),
+        rate: work / st.median() / 1e9,
+        unit: unit.to_string(),
+    };
+    let entries = vec![
+        entry("int GEMM 64x144x32", &st_gemm, (m * k * n) as f64, "GMAC/s"),
+        entry("requantize 64k accumulators", &st_req, (1 << 16) as f64, "Gelem/s"),
+    ];
+    let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+    let doc = dfq::report::bench::hotpath_json(profile, &entries);
+    dfq::report::bench::validate(&doc).unwrap();
+    std::fs::write(root.join("BENCH_hotpath.json"), doc.dump() + "\n").unwrap();
+}
