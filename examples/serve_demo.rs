@@ -2,11 +2,13 @@
 //! quantized ResNets side by side — the deployment story end to end,
 //! python nowhere in sight. The whole wiring is the `Session` pipeline:
 //! every engine out of `calibrated.engine(kind)` registers as a named
-//! endpoint with zero glue, a cloneable `Client` routes requests by
-//! model name, and mid-traffic the demo **re-calibrates** resnet_s to
-//! 4 bits and hot-swaps the endpoint atomically — zero downtime, zero
-//! dropped requests, and every post-swap answer is bit-exact against
-//! the new engine.
+//! endpoint (each endpoint a 2-replica pool, least-loaded routing) with
+//! zero glue, a cloneable `Client` routes requests by model name, and
+//! mid-traffic the demo **re-calibrates** resnet_s to 4 bits and rolls
+//! it out the production way: a 10% canary arm, a ramp to 50% and then
+//! 100%, and finally an atomic hot-swap — zero downtime, zero dropped
+//! requests, and every post-cutover answer is bit-exact against the
+//! new engine.
 //!
 //! Requires `make artifacts` (and the `pjrt` cargo feature for the
 //! `pjrt` mode). The `int` modes run the data-parallel integer engine:
@@ -34,8 +36,10 @@ fn main() {
     let calib = art.calibration_images(1).unwrap();
 
     // registry: one named endpoint per model, same Session pipeline for
-    // each — session -> calibrate -> engine -> register
-    let server = ModelServer::new(ServeConfig::default());
+    // each — session -> calibrate -> engine -> register. Two replicas
+    // per endpoint: two batch collectors, least-loaded routing, results
+    // bit-exact regardless of which replica answers.
+    let server = ModelServer::new(ServeConfig { replicas: 2, ..Default::default() });
     let mut sessions = Vec::new();
     for model in models {
         let session = Session::from_artifacts(&art, model).expect("open session");
@@ -86,19 +90,27 @@ fn main() {
         }));
     }
 
-    // swap: mid-traffic, re-calibrate resnet_s down to 4 bits and cut
-    // the endpoint over atomically — in-flight batches on the old
-    // engine drain, nothing is dropped
+    // rollout: mid-traffic, re-calibrate resnet_s down to 4 bits and
+    // take it live the production way — a 10% canary arm, a ramp to
+    // 50% then 100%, then the atomic swap that retires the 8-bit
+    // engine. In-flight batches on the old engine drain at every step;
+    // nothing is dropped.
     std::thread::sleep(std::time::Duration::from_millis(10));
     let recal = sessions[0]
         .calibrate(CalibConfig { n_bits: 4, ..Default::default() }, &calib)
         .expect("re-calibration");
     let t_swap = Timer::start();
     let new_engine = recal
-        .deploy_into(&server, "resnet_s", kind)
-        .expect("hot-swap");
+        .deploy_arm_into(&server, "resnet_s", "canary", 0.1, kind)
+        .expect("canary deploy");
+    server.ramp("resnet_s", "canary", 0.5).expect("ramp to 50%");
+    server.ramp("resnet_s", "canary", 1.0).expect("ramp to 100%");
+    server.swap("resnet_s", new_engine.clone()).expect("hot-swap");
     swapped.store(true, Ordering::SeqCst);
-    println!("hot-swapped resnet_s to a 4-bit spec in {:.1} ms", t_swap.millis());
+    println!(
+        "canaried, ramped and swapped resnet_s to a 4-bit spec in {:.1} ms",
+        t_swap.millis()
+    );
 
     let mut correct = 0usize;
     let mut shed = 0usize;
@@ -143,12 +155,22 @@ fn main() {
         served as f64 / secs,
         100.0 * correct as f64 / served.max(1) as f64
     );
+    for arm in server.snapshot("resnet_s").expect("snapshot") {
+        println!(
+            "  resnet_s arm '{}' @ {:.2}: {} completed across {} replica(s)",
+            arm.arm,
+            arm.weight,
+            arm.metrics.completed,
+            arm.replicas.len()
+        );
+    }
     for (name, m) in server.shutdown() {
         println!(
-            "  {name}: {} completed / {} rejected, {} swaps, {} batches \
+            "  {name}: {} completed / {} rejected / {} failed, {} swaps, {} batches \
              (mean occupancy {:.1}), latency p50 {:.1} ms / p99 {:.1} ms",
             m.completed,
             m.rejected,
+            m.failed,
             m.swaps,
             m.batches,
             m.mean_occupancy(),

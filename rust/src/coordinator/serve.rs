@@ -5,9 +5,10 @@
 //! reports to **every** waiting client.
 //!
 //! The serving surface itself is [`crate::coordinator::server::ModelServer`]
-//! (re-exported through `dfq::session`): a registry of named endpoints
-//! with per-model batch collectors, atomic hot-swap and admission
-//! control. Any [`crate::session::Engine`] is a [`Backend`] via a
+//! (re-exported through `dfq::session`): a registry of named endpoints,
+//! each a set of weighted traffic arms over replica pools of batch
+//! collectors, with atomic hot-swap and admission control. Any
+//! [`crate::session::Engine`] is a [`Backend`] via a
 //! blanket impl, so `server.register("name", calibrated.engine(kind)?)`
 //! is the whole deployment story. The FP/int engines behind it execute a
 //! **cached** [`crate::engine::plan::ExecPlan`], so the per-batch path
@@ -49,15 +50,30 @@ pub struct ServeConfig {
     /// rejected with [`DfqError::Overloaded`] instead of growing the
     /// queue without bound. The batch the collector has already popped
     /// (being collected, then executed) is on top of this, so the true
-    /// backlog ceiling is `queue_depth + batch_size` requests. Must be at
+    /// backlog ceiling is `queue_depth + batch_size` requests. The bound
+    /// is **per replica**: an endpoint with `replicas` collectors holds
+    /// at most `replicas * queue_depth` waiting requests, and a submit
+    /// sheds only when its least-loaded replica is full. Must be at
     /// least 1 (validated when a model is registered);
     /// `dfq serve --queue-depth N` sets it from the CLI.
     pub queue_depth: usize,
+    /// How many replicas (independent queue + collector + backend slot)
+    /// each endpoint arm runs. Submissions route to the least-loaded
+    /// replica by live queue length, so throughput scales past the
+    /// single-collector ceiling while results stay bit-exact (every
+    /// replica serves the same backend). Must be at least 1 (validated
+    /// when a model is registered); `dfq serve --replicas N` sets it
+    /// from the CLI.
+    pub replicas: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_wait: Duration::from_millis(5), queue_depth: 256 }
+        ServeConfig {
+            max_wait: Duration::from_millis(5),
+            queue_depth: 256,
+            replicas: 1,
+        }
     }
 }
 
@@ -116,14 +132,31 @@ impl LatencyReservoir {
         self.seen
     }
 
-    /// p-th percentile (0..=100) over the retained sample, in seconds
-    /// (`NaN` when nothing was recorded). The copy handed to
+    /// p-th percentile (clamped to 0..=100) over the retained sample,
+    /// in seconds (`NaN` when nothing was recorded). The copy handed to
     /// [`crate::util::timer::Stats`] is at most
     /// [`LATENCY_RESERVOIR_CAP`] values — O(1) memory and work
     /// regardless of server uptime (the unbounded `latencies.clone()`
     /// this replaces grew with every request).
     pub fn percentile(&self, p: f64) -> f64 {
         crate::util::timer::Stats::from(self.samples.clone()).percentile(p)
+    }
+
+    /// Fold another reservoir into this one for an aggregated snapshot
+    /// (per-arm and per-endpoint metrics merge replica reservoirs).
+    /// `seen` adds exactly; the retained sample is the concatenation,
+    /// deterministically thinned back to [`LATENCY_RESERVOIR_CAP`] by
+    /// even-stride selection, so the merge result stays bounded.
+    pub fn merge(&mut self, other: &LatencyReservoir) {
+        self.seen += other.seen;
+        self.samples.extend_from_slice(&other.samples);
+        let n = self.samples.len();
+        if n > LATENCY_RESERVOIR_CAP {
+            let kept: Vec<f64> = (0..LATENCY_RESERVOIR_CAP)
+                .map(|i| self.samples[i * n / LATENCY_RESERVOIR_CAP])
+                .collect();
+            self.samples = kept;
+        }
     }
 }
 
@@ -138,6 +171,12 @@ pub struct ServeMetrics {
     pub rejected: usize,
     /// hot-swaps performed on this endpoint
     pub swaps: usize,
+    /// requests answered with the backend's error (a failing batch or a
+    /// mis-shaped backend output) — before this counter existed, a
+    /// backend erroring on every batch left the snapshot completely
+    /// flat: `completed`/`batches` never moved and nothing else did
+    /// either, so a dead model was invisible in the metrics
+    pub failed: usize,
     /// batch occupancy sum (for mean occupancy)
     pub occupancy_sum: usize,
     /// bounded per-request latency reservoir (seconds)
@@ -153,6 +192,21 @@ impl ServeMetrics {
     /// Mean batch occupancy.
     pub fn mean_occupancy(&self) -> f64 {
         self.occupancy_sum as f64 / self.batches.max(1) as f64
+    }
+
+    /// Fold another snapshot into this one. Counters add; the latency
+    /// reservoirs merge bounded (see [`LatencyReservoir::merge`]). Used
+    /// to aggregate replica snapshots into per-arm metrics and arm
+    /// metrics into endpoint totals, so per-arm numbers always sum to
+    /// what the endpoint reports.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.completed += other.completed;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.swaps += other.swaps;
+        self.failed += other.failed;
+        self.occupancy_sum += other.occupancy_sum;
+        self.latency.merge(&other.latency);
     }
 }
 
@@ -214,7 +268,12 @@ pub(crate) fn run_batch<B: Backend + ?Sized>(
     }
     let batch = Tensor::from_vec(&[bsz, lead[1], lead[2], lead[3]], data);
     match backend.run_batch(&batch) {
-        Ok(out) => {
+        // the output's leading dim must be the batch we submitted:
+        // a backend that answers `rows.len()` rows instead of the padded
+        // `bsz` (or any other count) used to slide `odim = numel / bsz`
+        // off the true row stride and fan *misaligned* rows back to the
+        // waiters — a silent wrong answer. Shape-check before slicing.
+        Ok(out) if out.shape.dims().first() == Some(&bsz) => {
             let odim = out.numel() / bsz;
             // counters survive a poisoner: they are monotonic snapshots,
             // always safe to take even if a holder panicked mid-update
@@ -228,12 +287,28 @@ pub(crate) fn run_batch<B: Backend + ?Sized>(
                 r.resp.send(Ok(row)).ok();
             }
         }
+        Ok(out) => {
+            let e = DfqError::serve(format!(
+                "backend returned output shape {} for a {bsz}-row batch \
+                 (leading dim must equal the submitted batch size)",
+                out.shape
+            ));
+            fail_rows(&rows, &e, metrics);
+        }
         Err(e) => {
             // fan the one batch failure out to every waiter
-            for r in rows {
-                r.resp.send(Err(e.clone())).ok();
-            }
+            fail_rows(&rows, &e, metrics);
         }
+    }
+}
+
+/// Answer every waiter in `rows` with (a clone of) `e` and count them as
+/// failed — a failing backend must be visible in the snapshot, not just
+/// in the clients' error channels.
+fn fail_rows(rows: &[&Request], e: &DfqError, metrics: &Arc<Mutex<ServeMetrics>>) {
+    metrics.lock().unwrap_or_else(|m| m.into_inner()).failed += rows.len();
+    for r in rows {
+        r.resp.send(Err(e.clone())).ok();
     }
 }
 

@@ -1,38 +1,59 @@
 //! [`ModelServer`] — the multi-model serving surface: a registry of
-//! **named endpoints**, each with its own batch collector thread,
-//! bounded admission queue and hot-swappable backend.
+//! **named endpoints**, each owning one or more traffic **arms**, each
+//! arm a pool of **replicas** (its own batch collector thread, bounded
+//! admission queue and hot-swappable backend slot).
 //!
 //! ```text
-//!                        ┌────────────────────────────────────────┐
-//! Client::infer(name, x) │ ModelServer                            │
-//!   ──route by name────> │  "resnet_s" ─ queue ─ collector ─ A ───┼─> rows
-//!                        │  "resnet_m" ─ queue ─ collector ─ B ───┼─> rows
-//!                        └────────────▲───────────────────────────┘
-//!                                swap("resnet_s", A')   (atomic, drains A)
+//!                        ┌──────────────────────────────────────────────┐
+//! Client::infer(name, x) │ ModelServer                                  │
+//!   ──route by name────> │  "resnet_s" ─ arm "default" (w=0.9)          │
+//!                        │               ├ replica 0: queue ─ collector │
+//!                        │               └ replica 1: queue ─ collector │
+//!                        │             ─ arm "canary"  (w=0.1)          │
+//!                        │               └ replica 0: queue ─ collector │
+//!                        └────────────▲─────────────────────────────────┘
+//!                            ramp("resnet_s", "canary", 0.5)
+//!                            swap("resnet_s", B')   (atomic, drains all)
 //! ```
 //!
 //! * **Routing** — [`ModelServer::register`] binds a name to any
 //!   [`Backend`] (every [`crate::session::Engine`] qualifies via the
 //!   blanket impl); [`Client::infer`] routes a request to the endpoint
 //!   by name, and [`ModelHandle`] pins one endpoint for lookup-free
-//!   submission on a hot path.
+//!   submission on a hot path. Within an endpoint a request first picks
+//!   an arm by its configured weight (a deterministic low-discrepancy
+//!   sequence, so even short windows split close to the configured
+//!   fractions), then the **least-loaded replica** of that arm by live
+//!   queue length (deterministic tie-break: lowest replica index).
+//! * **Replica pools** — [`ServeConfig::replicas`] collectors per arm
+//!   lift throughput past the single-collector ceiling. Every replica
+//!   serves the same backend, so results are bit-exact regardless of
+//!   replica count or which replica answered.
+//! * **Weighted arms** — [`ModelServer::deploy_arm`] adds (or replaces)
+//!   a named variant at a traffic fraction and [`ModelServer::ramp`]
+//!   adjusts it live, with per-arm [`ServeMetrics`] via
+//!   [`ModelServer::snapshot`]: canary → ramp → [`ModelServer::swap`]
+//!   is the standard deployment motion.
 //! * **Atomic hot-swap** — [`ModelServer::swap`] installs a new backend
-//!   and then waits for the batch in flight on the old one to retire:
-//!   no request is dropped, every request submitted after `swap`
-//!   returns executes on the new backend, and the returned old backend
-//!   can be torn down safely. [`crate::session::CalibratedModel::deploy_into`]
-//!   builds on this for zero-downtime re-calibration.
-//! * **Admission control** — each endpoint holds at most
+//!   in every replica of every arm and then waits for the batches in
+//!   flight on the old one to retire: no request is dropped, every
+//!   request submitted after `swap` returns executes on the new
+//!   backend, and the returned old backend can be torn down safely.
+//!   [`crate::session::CalibratedModel::deploy_into`] builds on this
+//!   for zero-downtime re-calibration.
+//! * **Admission control** — each replica holds at most
 //!   [`ServeConfig::queue_depth`] waiting requests (the batch being
 //!   collected or executed is on top); the excess is rejected with
 //!   [`DfqError::Overloaded`] instead of growing an unbounded channel
-//!   until memory runs out.
+//!   until memory runs out. Routing is least-loaded, so a submit sheds
+//!   only when its arm's emptiest replica is full.
 //! * **Graceful shutdown** — [`ModelServer::shutdown`] stops admission,
 //!   lets every collector drain its queue, joins the threads and
-//!   reports per-model [`ServeMetrics`].
+//!   reports per-model [`ServeMetrics`] (replica and arm counters
+//!   merged; per-arm numbers always sum to the endpoint totals).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
@@ -41,6 +62,24 @@ use crate::error::DfqError;
 use crate::tensor::Tensor;
 
 use super::serve::{run_batch, Backend, Request, ServeConfig, ServeMetrics};
+
+/// The arm name used by the single-arm registration paths
+/// ([`ModelServer::register`], [`ModelServer::deploy`]).
+pub const DEFAULT_ARM: &str = "default";
+
+/// Arm weights are tracked in integer parts of this scale so they can
+/// live in an atomic (readable on the submit path without locking) and
+/// never accumulate float drift: the shares of an endpoint's arms
+/// always sum to exactly `WEIGHT_SCALE`.
+const WEIGHT_SCALE: u64 = 1_000_000;
+
+/// Multiplier for the deterministic routing sequence: coprime with
+/// [`WEIGHT_SCALE`], so `ticket * WEIGHT_STRIDE % WEIGHT_SCALE` visits
+/// every position exactly once per `WEIGHT_SCALE` tickets while
+/// interleaving arms at every time scale — a plain `ticket %
+/// WEIGHT_SCALE` position would send very long runs to one arm before
+/// ever touching the other.
+const WEIGHT_STRIDE: u64 = 618_033;
 
 /// Adapter so `Arc<B>` for any `B: Backend + ?Sized` (notably
 /// `Arc<dyn Engine>` handles from [`crate::session::CalibratedModel::engine`])
@@ -65,8 +104,11 @@ fn erase<B: Backend + ?Sized + 'static>(backend: Arc<B>) -> Arc<dyn Backend> {
     Arc::new(SharedBackend(backend))
 }
 
-/// The state a collector thread shares with submitters and `swap`.
+/// The state a replica's collector thread shares with submitters and
+/// `swap`.
 struct EndpointShared {
+    /// the **model** name (not arm/replica-tagged): it feeds typed
+    /// errors like [`DfqError::Overloaded`], which callers match on
     name: String,
     /// requests sitting in the channel (admission-controlled); the
     /// collector decrements as it pops requests into a batch
@@ -81,9 +123,10 @@ struct EndpointShared {
     metrics: Arc<Mutex<ServeMetrics>>,
 }
 
-/// One named model endpoint: its shared state, submit channel and
-/// collector thread.
-struct Endpoint {
+/// One serving replica: its shared state, submit channel and collector
+/// thread. An arm owns one or more of these; every replica of an arm
+/// serves the same backend.
+struct Replica {
     shared: Arc<EndpointShared>,
     /// `None` once shutdown stopped admission. An `RwLock` so
     /// submitters share it (`Sender` is `Sync`; the admission counter
@@ -94,7 +137,7 @@ struct Endpoint {
     queue_depth: usize,
 }
 
-impl Endpoint {
+impl Replica {
     /// Admission-controlled submit: reject with
     /// [`DfqError::Overloaded`] when the queue is full, otherwise
     /// enqueue and wait for the output row.
@@ -141,6 +184,27 @@ impl Endpoint {
         })?
     }
 
+    /// Requests currently waiting in this replica's admission queue.
+    fn queued(&self) -> usize {
+        self.shared.queued.load(Ordering::SeqCst)
+    }
+
+    /// Install `backend` into this replica's slot, returning the old one
+    /// (which may still be executing a batch until [`Replica::drain`]).
+    fn install(&self, backend: Arc<dyn Backend>) -> Arc<dyn Backend> {
+        let mut slot =
+            self.shared.backend.write().unwrap_or_else(|e| e.into_inner());
+        std::mem::replace(&mut *slot, backend)
+    }
+
+    /// Wait for the batch possibly still running on a previously
+    /// installed backend to retire. The gate guards no data, so a
+    /// poisoned lock (a collector that died mid-batch) must not fail
+    /// the swap that repairs the replica.
+    fn drain(&self) {
+        drop(self.shared.run_gate.lock().unwrap_or_else(|e| e.into_inner()));
+    }
+
     /// Stop admission, drain the queue and join the collector.
     fn stop(&self) -> ServeMetrics {
         drop(self.tx.write().unwrap_or_else(|e| e.into_inner()).take());
@@ -151,6 +215,218 @@ impl Endpoint {
         }
         self.shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
+}
+
+/// One traffic arm of an endpoint: a named backend variant, its routed
+/// share of the endpoint's traffic and its replica pool.
+struct Arm {
+    name: String,
+    /// routed share in parts of [`WEIGHT_SCALE`]; atomic so `ramp`
+    /// never blocks the submit path
+    weight_ppm: AtomicU64,
+    /// never empty (arms start with `cfg.replicas >= 1` replicas)
+    replicas: Vec<Arc<Replica>>,
+}
+
+impl Arm {
+    /// Least-loaded replica by live queue length; ties break to the
+    /// lowest replica index, so routing is deterministic given the
+    /// queue gauges.
+    fn pick_replica(&self) -> &Arc<Replica> {
+        let mut best = &self.replicas[0];
+        let mut best_q = best.queued();
+        for r in &self.replicas[1..] {
+            let q = r.queued();
+            if q < best_q {
+                best = r;
+                best_q = q;
+            }
+        }
+        best
+    }
+
+    /// Waiting requests across the arm's replicas.
+    fn queued(&self) -> usize {
+        self.replicas.iter().map(|r| r.queued()).sum()
+    }
+
+    /// This arm's counters, merged over its replicas.
+    fn merged_metrics(&self) -> ServeMetrics {
+        let mut m = ServeMetrics::default();
+        for r in &self.replicas {
+            m.merge(&r.shared.metrics.lock().unwrap_or_else(|e| e.into_inner()));
+        }
+        m
+    }
+
+    /// Install `backend` into every replica, then drain each run gate:
+    /// from the install on, every later batch re-reads its slot and runs
+    /// the new backend; once the drains return, nothing is still
+    /// executing the old one. Returns the previous backend (one handle —
+    /// all replicas shared it).
+    fn install_all(&self, backend: &Arc<dyn Backend>) -> Arc<dyn Backend> {
+        let mut old: Option<Arc<dyn Backend>> = None;
+        for r in &self.replicas {
+            let prev = r.install(backend.clone());
+            if old.is_none() {
+                old = Some(prev);
+            }
+        }
+        for r in &self.replicas {
+            r.drain();
+        }
+        // the swap is counted once per arm, on the first replica, so a
+        // merged arm (or endpoint) snapshot reports each swap exactly
+        // once rather than `replicas` times
+        self.replicas[0]
+            .shared
+            .metrics
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .swaps += 1;
+        old.expect("arm has at least one replica")
+    }
+
+    /// Stop every replica and return the arm's merged final metrics.
+    fn stop(&self) -> ServeMetrics {
+        let mut m = ServeMetrics::default();
+        for r in &self.replicas {
+            m.merge(&r.stop());
+        }
+        m
+    }
+}
+
+/// One named model endpoint: its traffic arms and the routing clock.
+/// (The model name lives in each replica's [`EndpointShared`], where the
+/// typed errors are produced.)
+struct Endpoint {
+    /// routing clock for the deterministic weighted arm sequence
+    ticket: AtomicU64,
+    /// never empty; grows via [`ModelServer::deploy_arm`]
+    arms: RwLock<Vec<Arc<Arm>>>,
+}
+
+impl Endpoint {
+    /// Route one request: pick an arm by weight, then that arm's
+    /// least-loaded replica, and submit. The arms lock is released
+    /// before the (blocking) wait for the response.
+    fn infer(&self, image: Tensor) -> Result<Vec<f32>, DfqError> {
+        let replica = {
+            let arms = self.arms.read().unwrap_or_else(|e| e.into_inner());
+            self.pick_arm(&arms).pick_replica().clone()
+        };
+        replica.infer(image)
+    }
+
+    /// Deterministic weighted arm choice: ticket `t` maps to position
+    /// `t * WEIGHT_STRIDE mod WEIGHT_SCALE`, and the arm whose
+    /// cumulative weight range contains the position wins. A weight-0
+    /// arm receives exactly no traffic; a weight-`WEIGHT_SCALE` arm
+    /// receives all of it.
+    fn pick_arm<'a>(&self, arms: &'a [Arc<Arm>]) -> &'a Arc<Arm> {
+        if arms.len() == 1 {
+            return &arms[0];
+        }
+        let t = self.ticket.fetch_add(1, Ordering::SeqCst);
+        let pos = t.wrapping_mul(WEIGHT_STRIDE) % WEIGHT_SCALE;
+        let mut acc = 0u64;
+        for a in arms {
+            acc = acc.saturating_add(a.weight_ppm.load(Ordering::SeqCst));
+            if pos < acc {
+                return a;
+            }
+        }
+        // weights always sum to WEIGHT_SCALE > pos; this is unreachable
+        // but a routing fallback beats a panic in the submit path
+        arms.last().expect("endpoint has at least one arm")
+    }
+
+    /// Waiting requests across every arm and replica.
+    fn queue_len(&self) -> usize {
+        let arms = self.arms.read().unwrap_or_else(|e| e.into_inner());
+        arms.iter().map(|a| a.queued()).sum()
+    }
+
+    /// Endpoint totals: every arm's metrics merged.
+    fn merged_metrics(&self) -> ServeMetrics {
+        let arms = self.arms.read().unwrap_or_else(|e| e.into_inner());
+        let mut m = ServeMetrics::default();
+        for a in arms.iter() {
+            m.merge(&a.merged_metrics());
+        }
+        m
+    }
+
+    /// Live per-arm / per-replica view (arms in registration order).
+    fn snapshot(&self) -> Vec<ArmSnapshot> {
+        let arms = self.arms.read().unwrap_or_else(|e| e.into_inner());
+        arms.iter()
+            .map(|a| {
+                let replicas: Vec<ReplicaSnapshot> = a
+                    .replicas
+                    .iter()
+                    .map(|r| ReplicaSnapshot {
+                        queue_len: r.queued(),
+                        metrics: r
+                            .shared
+                            .metrics
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .clone(),
+                    })
+                    .collect();
+                ArmSnapshot {
+                    arm: a.name.clone(),
+                    weight: a.weight_ppm.load(Ordering::SeqCst) as f64
+                        / WEIGHT_SCALE as f64,
+                    queue_len: a.queued(),
+                    metrics: a.merged_metrics(),
+                    replicas,
+                }
+            })
+            .collect()
+    }
+
+    /// Stop every arm and return the endpoint's merged final metrics.
+    fn stop(&self) -> ServeMetrics {
+        let arms: Vec<Arc<Arm>> = {
+            let arms = self.arms.read().unwrap_or_else(|e| e.into_inner());
+            arms.clone()
+        };
+        let mut m = ServeMetrics::default();
+        for a in &arms {
+            m.merge(&a.stop());
+        }
+        m
+    }
+}
+
+/// Live snapshot of one replica (see [`ArmSnapshot::replicas`]).
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    /// requests waiting in this replica's admission queue right now
+    pub queue_len: usize,
+    /// this replica's own counters
+    pub metrics: ServeMetrics,
+}
+
+/// Live snapshot of one traffic arm of an endpoint, from
+/// [`ModelServer::snapshot`]. Arm counters are its replicas' merged;
+/// summing the arms of one endpoint reproduces the endpoint totals
+/// reported by [`ModelServer::metrics`].
+#[derive(Clone, Debug)]
+pub struct ArmSnapshot {
+    /// arm name ([`DEFAULT_ARM`] for single-arm endpoints)
+    pub arm: String,
+    /// routed traffic share in `[0, 1]`
+    pub weight: f64,
+    /// requests waiting across the arm's replicas
+    pub queue_len: usize,
+    /// counters merged over the arm's replicas
+    pub metrics: ServeMetrics,
+    /// one entry per replica, in replica-index order
+    pub replicas: Vec<ReplicaSnapshot>,
 }
 
 struct Inner {
@@ -190,14 +466,18 @@ impl Inner {
 /// # use dfq::coordinator::serve::ServeConfig;
 /// # fn demo(a: Arc<dyn Engine>, a2: Arc<dyn Engine>, b: Arc<dyn Engine>,
 /// #         img: Tensor) -> Result<(), DfqError> {
-/// let server = ModelServer::new(ServeConfig::default());
+/// // 2 replicas per arm: two collectors, least-loaded routing
+/// let server = ModelServer::new(ServeConfig { replicas: 2, ..Default::default() });
 /// server.register("resnet_s", a)?;
 /// server.register("resnet_m", b)?;
 /// let client = server.client();
-/// let row = client.infer("resnet_s", img)?;   // routed by name
-/// server.swap("resnet_s", a2)?;               // atomic, zero downtime
+/// let row = client.infer("resnet_s", img)?;     // routed by name
+/// // canary → ramp → swap: the standard deployment motion
+/// server.deploy_arm("resnet_s", "canary", a2.clone(), 0.1)?;
+/// server.ramp("resnet_s", "canary", 1.0)?;
+/// server.swap("resnet_s", a2)?;                 // atomic, zero downtime
 /// for (name, m) in server.shutdown() {
-///     println!("{name}: {} completed", m.completed);
+///     println!("{name}: {} completed / {} failed", m.completed, m.failed);
 /// }
 /// # Ok(())
 /// # }
@@ -220,7 +500,8 @@ impl ModelServer {
     }
 
     /// A zero queue depth would reject every request before it could
-    /// ever reach the collector — a misconfiguration, caught where
+    /// ever reach a collector, and zero replicas would leave an arm
+    /// with no collector at all — misconfigurations, caught where
     /// endpoints are created.
     fn check_cfg(&self) -> Result<(), DfqError> {
         if self.inner.cfg.queue_depth == 0 {
@@ -228,13 +509,19 @@ impl ModelServer {
                 "ServeConfig::queue_depth must be at least 1",
             ));
         }
+        if self.inner.cfg.replicas == 0 {
+            return Err(DfqError::invalid(
+                "ServeConfig::replicas must be at least 1",
+            ));
+        }
         Ok(())
     }
 
-    /// Register a new named endpoint over `backend` and start its batch
-    /// collector. Errors if `name` is already registered — use
-    /// [`ModelServer::swap`] (or [`ModelServer::deploy`]) to replace a
-    /// live model.
+    /// Register a new named endpoint over `backend` (a single
+    /// [`DEFAULT_ARM`] arm of [`ServeConfig::replicas`] replicas) and
+    /// start its collectors. Errors if `name` is already registered —
+    /// use [`ModelServer::swap`] (or [`ModelServer::deploy`]) to
+    /// replace a live model.
     pub fn register<B>(&self, name: &str, backend: Arc<B>) -> Result<(), DfqError>
     where
         B: Backend + ?Sized + 'static,
@@ -246,15 +533,21 @@ impl ModelServer {
                 "model '{name}' is already registered (use swap to replace it)"
             )));
         }
-        models.insert(name.to_string(), start_endpoint(name, erase(backend), self.inner.cfg));
+        models.insert(
+            name.to_string(),
+            start_endpoint(name, DEFAULT_ARM, erase(backend), self.inner.cfg),
+        );
         Ok(())
     }
 
-    /// Atomically replace `name`'s backend: new traffic cuts over to
-    /// `backend` immediately, the batch in flight on the old backend is
-    /// drained before this returns, and **no queued request is
-    /// dropped** (queued requests simply execute on the new backend).
-    /// Returns the old backend, now guaranteed idle.
+    /// Atomically replace `name`'s backend — in **every replica of
+    /// every arm**: new traffic cuts over to `backend` immediately, the
+    /// batches in flight on the old backend are drained before this
+    /// returns, and **no queued request is dropped** (queued requests
+    /// simply execute on the new backend). Returns the old backend of
+    /// the first arm, now guaranteed idle. Arm weights are untouched:
+    /// after the canary → ramp motion, `swap` makes the promotion
+    /// total regardless of the split.
     pub fn swap<B>(&self, name: &str, backend: Arc<B>) -> Result<Arc<dyn Backend>, DfqError>
     where
         B: Backend + ?Sized + 'static,
@@ -268,20 +561,15 @@ impl ModelServer {
         backend: Arc<dyn Backend>,
     ) -> Result<Arc<dyn Backend>, DfqError> {
         let ep = self.inner.endpoint(name)?;
-        let old = {
-            let mut slot =
-                ep.shared.backend.write().unwrap_or_else(|e| e.into_inner());
-            std::mem::replace(&mut *slot, backend)
-        };
-        // drain: once we can take the run gate, the batch that may still
-        // have been executing on the old backend has retired, and every
-        // later batch re-reads the slot — i.e. runs the new backend.
-        // The gate guards no data, so a poisoned lock (a collector that
-        // somehow died mid-batch) must not fail the swap that repairs
-        // the endpoint.
-        drop(ep.shared.run_gate.lock().unwrap_or_else(|e| e.into_inner()));
-        ep.shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).swaps += 1;
-        Ok(old)
+        let arms = ep.arms.read().unwrap_or_else(|e| e.into_inner());
+        let mut old: Option<Arc<dyn Backend>> = None;
+        for arm in arms.iter() {
+            let prev = arm.install_all(&backend);
+            if old.is_none() {
+                old = Some(prev);
+            }
+        }
+        Ok(old.expect("endpoint has at least one arm"))
     }
 
     /// Register-or-swap: deploy `backend` under `name`, hot-swapping if
@@ -301,12 +589,92 @@ impl ModelServer {
             if !models.contains_key(name) {
                 models.insert(
                     name.to_string(),
-                    start_endpoint(name, backend, self.inner.cfg),
+                    start_endpoint(name, DEFAULT_ARM, backend, self.inner.cfg),
                 );
                 return Ok(());
             }
         }
         self.swap_erased(name, backend)?;
+        Ok(())
+    }
+
+    /// Deploy `backend` as the traffic arm `arm` of endpoint `name` at
+    /// routed fraction `weight` (`0.0..=1.0` of the endpoint's
+    /// traffic; the other arms share the rest in proportion to their
+    /// current weights). Creates the endpoint if `name` is new (the
+    /// first arm takes all traffic until a second arrives), adds the
+    /// arm if it is new, or hot-swaps the arm's backend (draining, like
+    /// [`ModelServer::swap`]) if it is live. This is the **canary**
+    /// primitive: follow with [`ModelServer::ramp`] and
+    /// [`ModelServer::swap`] to promote.
+    pub fn deploy_arm<B>(
+        &self,
+        name: &str,
+        arm: &str,
+        backend: Arc<B>,
+        weight: f64,
+    ) -> Result<(), DfqError>
+    where
+        B: Backend + ?Sized + 'static,
+    {
+        self.check_cfg()?;
+        check_weight(weight)?;
+        if arm.is_empty() {
+            return Err(DfqError::invalid("arm name must not be empty"));
+        }
+        let backend = erase(backend);
+        let ep = {
+            let mut models =
+                self.inner.models.write().unwrap_or_else(|e| e.into_inner());
+            match models.get(name) {
+                Some(ep) => ep.clone(),
+                None => {
+                    models.insert(
+                        name.to_string(),
+                        start_endpoint(name, arm, backend, self.inner.cfg),
+                    );
+                    return Ok(());
+                }
+            }
+        };
+        // the arms write lock serializes concurrent deploy_arm/ramp
+        // calls; submitters only take it shared, briefly, to route
+        let mut arms = ep.arms.write().unwrap_or_else(|e| e.into_inner());
+        match arms.iter().position(|a| a.name == arm) {
+            Some(idx) => {
+                arms[idx].install_all(&backend);
+                set_weights(&arms, idx, weight);
+            }
+            None => {
+                arms.push(start_arm(name, arm, backend, self.inner.cfg));
+                let idx = arms.len() - 1;
+                // the new arm starts at full weight (single-arm
+                // convention); rescale it to the requested fraction
+                set_weights(&arms, idx, weight);
+            }
+        }
+        Ok(())
+    }
+
+    /// Set arm `arm`'s routed fraction of endpoint `name`'s traffic to
+    /// `weight` (`0.0..=1.0`); the other arms share the remainder in
+    /// proportion to their current weights. Takes effect for the next
+    /// submitted request — ramping a canary to `1.0` and then calling
+    /// [`ModelServer::swap`] promotes it with zero dropped requests.
+    pub fn ramp(&self, name: &str, arm: &str, weight: f64) -> Result<(), DfqError> {
+        check_weight(weight)?;
+        let ep = self.inner.endpoint(name)?;
+        let arms = ep.arms.write().unwrap_or_else(|e| e.into_inner());
+        let Some(idx) = arms.iter().position(|a| a.name == arm) else {
+            let mut known: Vec<&str> =
+                arms.iter().map(|a| a.name.as_str()).collect();
+            known.sort_unstable();
+            return Err(DfqError::invalid(format!(
+                "model '{name}' has no arm '{arm}' (arms: [{}])",
+                known.join(", ")
+            )));
+        };
+        set_weights(&arms, idx, weight);
         Ok(())
     }
 
@@ -329,26 +697,33 @@ impl ModelServer {
         names
     }
 
-    /// Snapshot one model's metrics.
+    /// Snapshot one model's metrics — the endpoint totals, i.e. every
+    /// arm's replicas merged. [`ModelServer::snapshot`] has the
+    /// per-arm / per-replica breakdown.
     pub fn metrics(&self, name: &str) -> Result<ServeMetrics, DfqError> {
-        let ep = self.inner.endpoint(name)?;
-        let m =
-            ep.shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone();
-        Ok(m)
+        Ok(self.inner.endpoint(name)?.merged_metrics())
     }
 
-    /// Requests currently waiting in `name`'s admission queue — an
-    /// instantaneous gauge for load monitoring; admission rejects when
-    /// it reaches [`ServeConfig::queue_depth`]. Requests the collector
-    /// has already popped into its current batch (at most one batch's
-    /// worth, collecting or executing) are no longer counted here.
+    /// Live per-arm / per-replica view of one endpoint, arms in
+    /// registration order. Arm metrics sum to the endpoint totals from
+    /// [`ModelServer::metrics`].
+    pub fn snapshot(&self, name: &str) -> Result<Vec<ArmSnapshot>, DfqError> {
+        Ok(self.inner.endpoint(name)?.snapshot())
+    }
+
+    /// Requests currently waiting in `name`'s admission queues (summed
+    /// over every arm and replica) — an instantaneous gauge for load
+    /// monitoring; admission rejects when a single replica reaches
+    /// [`ServeConfig::queue_depth`]. Requests a collector has already
+    /// popped into its current batch (at most one batch's worth per
+    /// replica, collecting or executing) are no longer counted here.
     pub fn queue_len(&self, name: &str) -> Result<usize, DfqError> {
-        Ok(self.inner.endpoint(name)?.shared.queued.load(Ordering::SeqCst))
+        Ok(self.inner.endpoint(name)?.queue_len())
     }
 
     /// Graceful shutdown: stop admission on every endpoint, let each
     /// collector drain its remaining queue, join the threads and report
-    /// per-model metrics (sorted by name).
+    /// per-model metrics (sorted by name; arms and replicas merged).
     pub fn shutdown(self) -> Vec<(String, ServeMetrics)> {
         self.inner.stopped.store(true, Ordering::SeqCst);
         let endpoints: Vec<(String, Arc<Endpoint>)> = {
@@ -380,6 +755,52 @@ impl Drop for ModelServer {
     }
 }
 
+/// `weight` is a traffic fraction; anything outside `[0, 1]` (or not a
+/// number) is a caller bug answered typed, not silently clamped.
+fn check_weight(weight: f64) -> Result<(), DfqError> {
+    if !weight.is_finite() || !(0.0..=1.0).contains(&weight) {
+        return Err(DfqError::invalid(format!(
+            "arm weight must be a fraction in [0, 1], got {weight}"
+        )));
+    }
+    Ok(())
+}
+
+/// Set arm `idx`'s share to `weight` (as parts of [`WEIGHT_SCALE`]) and
+/// renormalize the remaining arms onto the rest — proportionally to
+/// their current weights, or evenly when they currently hold nothing —
+/// so the shares always sum to exactly `WEIGHT_SCALE`. Callers hold the
+/// arms write lock, so concurrent renormalizations never interleave.
+fn set_weights(arms: &[Arc<Arm>], idx: usize, weight: f64) {
+    let target =
+        ((weight * WEIGHT_SCALE as f64).round() as u64).min(WEIGHT_SCALE);
+    if arms.len() == 1 {
+        // a lone arm always carries everything
+        arms[0].weight_ppm.store(WEIGHT_SCALE, Ordering::SeqCst);
+        return;
+    }
+    let rest = WEIGHT_SCALE - target;
+    let others: Vec<usize> = (0..arms.len()).filter(|i| *i != idx).collect();
+    let old_sum: u64 = others
+        .iter()
+        .map(|i| arms[*i].weight_ppm.load(Ordering::SeqCst))
+        .sum();
+    let mut given = 0u64;
+    for (j, i) in others.iter().enumerate() {
+        let share = if j + 1 == others.len() {
+            // the last arm absorbs integer-rounding drift
+            rest - given
+        } else if old_sum == 0 {
+            rest / others.len() as u64
+        } else {
+            rest * arms[*i].weight_ppm.load(Ordering::SeqCst) / old_sum
+        };
+        arms[*i].weight_ppm.store(share, Ordering::SeqCst);
+        given += share;
+    }
+    arms[idx].weight_ppm.store(target, Ordering::SeqCst);
+}
+
 /// A cloneable handle that routes requests to a [`ModelServer`]'s
 /// endpoints by model name. Obtained from [`ModelServer::client`];
 /// remains valid (returning typed errors) after the server shuts down.
@@ -398,8 +819,9 @@ impl Client {
     }
 
     /// Pin one model's endpoint for lookup-free submission. The handle
-    /// follows hot-swaps (the endpoint is replaced in place) and errors
-    /// typed-ly once the server shuts down.
+    /// follows hot-swaps, ramps and arm deploys (the endpoint is
+    /// updated in place) and errors typed-ly once the server shuts
+    /// down.
     pub fn handle(&self, model: &str) -> Result<ModelHandle, DfqError> {
         Ok(ModelHandle { endpoint: self.inner.endpoint(model)? })
     }
@@ -418,11 +840,15 @@ impl ModelHandle {
     }
 }
 
-/// Spawn one endpoint: channel, shared state and collector thread.
-fn start_endpoint(name: &str, backend: Arc<dyn Backend>, cfg: ServeConfig) -> Arc<Endpoint> {
+/// Spawn one replica: channel, shared state and collector thread.
+fn start_replica(
+    model: &str,
+    backend: Arc<dyn Backend>,
+    cfg: ServeConfig,
+) -> Arc<Replica> {
     let (tx, rx) = mpsc::channel::<Request>();
     let shared = Arc::new(EndpointShared {
-        name: name.to_string(),
+        name: model.to_string(),
         queued: AtomicUsize::new(0),
         backend: RwLock::new(backend),
         run_gate: Mutex::new(()),
@@ -430,16 +856,47 @@ fn start_endpoint(name: &str, backend: Arc<dyn Backend>, cfg: ServeConfig) -> Ar
     });
     let s2 = shared.clone();
     let worker = std::thread::spawn(move || collector(rx, s2, cfg));
-    Arc::new(Endpoint {
+    Arc::new(Replica {
         shared,
         tx: RwLock::new(Some(tx)),
         worker: Mutex::new(Some(worker)),
-        // validated >= 1 by ModelServer::{register,deploy}
+        // validated >= 1 by ModelServer::{register,deploy,deploy_arm}
         queue_depth: cfg.queue_depth,
     })
 }
 
-/// Per-endpoint collector loop: batch up to the current backend's batch
+/// Spawn one arm at full weight: `cfg.replicas` replicas all serving
+/// (the same handle to) `backend`.
+fn start_arm(
+    model: &str,
+    arm: &str,
+    backend: Arc<dyn Backend>,
+    cfg: ServeConfig,
+) -> Arc<Arm> {
+    let replicas: Vec<Arc<Replica>> = (0..cfg.replicas.max(1))
+        .map(|_| start_replica(model, backend.clone(), cfg))
+        .collect();
+    Arc::new(Arm {
+        name: arm.to_string(),
+        weight_ppm: AtomicU64::new(WEIGHT_SCALE),
+        replicas,
+    })
+}
+
+/// Spawn one endpoint with a single arm.
+fn start_endpoint(
+    model: &str,
+    arm: &str,
+    backend: Arc<dyn Backend>,
+    cfg: ServeConfig,
+) -> Arc<Endpoint> {
+    Arc::new(Endpoint {
+        ticket: AtomicU64::new(0),
+        arms: RwLock::new(vec![start_arm(model, arm, backend, cfg)]),
+    })
+}
+
+/// Per-replica collector loop: batch up to the current backend's batch
 /// size (bounded by the wait budget), then execute under the run gate —
 /// re-reading the backend slot so a swap that landed during collection
 /// takes effect before the batch runs.
@@ -496,6 +953,14 @@ fn collector(rx: Receiver<Request>, shared: Arc<EndpointShared>, cfg: ServeConfi
                 run_batch(chunk, &*backend, bsz, &shared.metrics);
             }));
             if ran.is_err() {
+                // a panicking backend is as failed as an erroring one —
+                // it must move the failure counter, not just the error
+                // channels
+                shared
+                    .metrics
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .failed += chunk.len();
                 for r in chunk {
                     r.resp
                         .send(Err(DfqError::serve(format!(
@@ -748,7 +1213,7 @@ mod tests {
     }
 
     #[test]
-    fn backend_error_fans_out_to_all_waiters() {
+    fn backend_error_fans_out_to_all_waiters_and_counts_failed() {
         let server = Arc::new(single(FailBackend, cfg_ms(20)));
         let mut handles = Vec::new();
         for i in 0..4 {
@@ -762,6 +1227,40 @@ mod tests {
         }
         let m = server.metrics("m").unwrap();
         assert_eq!(m.completed, 0, "failed requests must not count as completed");
+        // regression: before the `failed` counter, a backend erroring on
+        // every batch left the whole snapshot flat — invisible
+        assert_eq!(m.failed, 4, "every errored request must be counted");
+    }
+
+    /// A backend that answers fewer rows than the batch it was given —
+    /// the mis-shaped-output class the collector must catch.
+    struct ShortBackend;
+
+    impl Backend for ShortBackend {
+        fn batch_size(&self) -> usize {
+            4
+        }
+
+        fn run_batch(&self, _batch: &Tensor) -> Result<Tensor, DfqError> {
+            // one row regardless of the submitted batch size
+            Ok(Tensor::from_vec(&[1, 1], vec![42.0]))
+        }
+    }
+
+    #[test]
+    fn mis_shaped_backend_output_is_typed_error_not_misaligned_rows() {
+        // regression: `odim = out.numel() / bsz` trusted the output
+        // shape, so a short output fanned misaligned (here: empty) rows
+        // back to the waiters as Ok — a silent wrong answer
+        let server = single(ShortBackend, cfg_ms(1));
+        let client = server.client();
+        let err = client.infer("m", img(1.0)).unwrap_err();
+        assert!(matches!(err, DfqError::Serve(_)), "{err}");
+        assert!(err.to_string().contains("shape"), "{err}");
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.batches, 0);
+        assert_eq!(m.failed, 1);
     }
 
     #[test]
@@ -817,6 +1316,195 @@ mod tests {
         assert!(err.to_string().contains("shut down"), "{err}");
     }
 
+    // -----------------------------------------------------------------
+    // replica pools
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn zero_replicas_is_a_typed_misconfiguration() {
+        let server = ModelServer::new(ServeConfig {
+            replicas: 0,
+            ..Default::default()
+        });
+        let err = server.register("m", Arc::new(SumBackend::plain(4))).unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        assert!(err.to_string().contains("replicas"), "{err}");
+    }
+
+    #[test]
+    fn replica_pool_serves_bit_exact_and_merges_metrics() {
+        // 3 replicas, concurrent submitters: every answer must be
+        // bit-exact to what a single replica computes, and the merged
+        // endpoint counters must account for every request exactly once
+        let server = Arc::new(ModelServer::new(ServeConfig {
+            max_wait: Duration::from_millis(1),
+            queue_depth: 64,
+            replicas: 3,
+        }));
+        server.register("m", Arc::new(SumBackend::plain(2))).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..12 {
+            let c = server.client();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..4 {
+                    let v = (t * 10 + i) as f32;
+                    got.push((v, c.infer("m", img(v)).unwrap()));
+                }
+                got
+            }));
+        }
+        for h in handles {
+            for (v, out) in h.join().unwrap() {
+                assert_eq!(out, vec![4.0 * v], "replica answered wrong for {v}");
+            }
+        }
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.completed, 12 * 4);
+        assert_eq!(m.failed, 0);
+        assert_eq!(server.queue_len("m").unwrap(), 0);
+        // the snapshot agrees with the merged totals
+        let snap = server.snapshot("m").unwrap();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].arm, DEFAULT_ARM);
+        assert_eq!(snap[0].replicas.len(), 3);
+        let per_replica: usize =
+            snap[0].replicas.iter().map(|r| r.metrics.completed).sum();
+        assert_eq!(per_replica, 12 * 4);
+    }
+
+    #[test]
+    fn swap_replaces_backend_in_every_replica() {
+        let server = single(
+            SumBackend { batch: 1, k: 1.0 },
+            ServeConfig {
+                max_wait: Duration::from_millis(1),
+                queue_depth: 16,
+                replicas: 4,
+            },
+        );
+        let client = server.client();
+        for i in 0..8 {
+            assert_eq!(client.infer("m", img(i as f32)).unwrap(), vec![4.0 * i as f32]);
+        }
+        server.swap("m", Arc::new(SumBackend { batch: 1, k: 100.0 })).unwrap();
+        // whichever replica answers (sequential traffic lands on the
+        // least-loaded tie-break, replica 0), the result must be the
+        // new backend's — install_all put it in every slot
+        for i in 0..16 {
+            assert_eq!(
+                client.infer("m", img(i as f32)).unwrap(),
+                vec![400.0 * i as f32],
+                "a replica kept serving the old backend"
+            );
+        }
+        let m = server.metrics("m").unwrap();
+        assert_eq!(m.swaps, 1, "one swap operation counts once, not per replica");
+        assert_eq!(m.completed, 24);
+    }
+
+    // -----------------------------------------------------------------
+    // weighted arms
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn weighted_arms_split_traffic_and_per_arm_metrics_sum() {
+        let server = single(SumBackend { batch: 1, k: 1.0 }, cfg_ms(1));
+        // canary at 25%: k=10 makes its answers bit-distinguishable
+        server
+            .deploy_arm("m", "canary", Arc::new(SumBackend { batch: 1, k: 10.0 }), 0.25)
+            .unwrap();
+        let client = server.client();
+        let (mut base, mut canary) = (0usize, 0usize);
+        for i in 0..64 {
+            let v = (i + 1) as f32;
+            let out = client.infer("m", img(v)).unwrap();
+            if out == vec![4.0 * v] {
+                base += 1;
+            } else if out == vec![40.0 * v] {
+                canary += 1;
+            } else {
+                panic!("output {out:?} matches neither arm for {v}");
+            }
+        }
+        assert_eq!(base + canary, 64);
+        // the low-discrepancy sequence holds the split near 25% even in
+        // a short window (deterministic: same stride every run)
+        assert!((10..=22).contains(&canary), "canary got {canary}/64");
+        // per-arm metrics sum to the endpoint totals
+        let snap = server.snapshot("m").unwrap();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].arm, DEFAULT_ARM);
+        assert_eq!(snap[1].arm, "canary");
+        assert!((snap[0].weight - 0.75).abs() < 1e-9, "{}", snap[0].weight);
+        assert!((snap[1].weight - 0.25).abs() < 1e-9, "{}", snap[1].weight);
+        assert_eq!(snap[0].metrics.completed, base);
+        assert_eq!(snap[1].metrics.completed, canary);
+        let total = server.metrics("m").unwrap();
+        assert_eq!(
+            snap.iter().map(|a| a.metrics.completed).sum::<usize>(),
+            total.completed
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn ramp_to_full_weight_routes_everything_to_the_arm() {
+        let server = single(SumBackend { batch: 1, k: 1.0 }, cfg_ms(1));
+        server
+            .deploy_arm("m", "b", Arc::new(SumBackend { batch: 1, k: 10.0 }), 0.5)
+            .unwrap();
+        server.ramp("m", "b", 1.0).unwrap();
+        let client = server.client();
+        for i in 0..32 {
+            let v = (i + 1) as f32;
+            assert_eq!(
+                client.infer("m", img(v)).unwrap(),
+                vec![40.0 * v],
+                "weight-0 arm must receive no traffic"
+            );
+        }
+        // and back: weight 0 on "b" sends everything to the default arm
+        server.ramp("m", "b", 0.0).unwrap();
+        for i in 0..32 {
+            let v = (i + 1) as f32;
+            assert_eq!(client.infer("m", img(v)).unwrap(), vec![4.0 * v]);
+        }
+    }
+
+    #[test]
+    fn ramp_validates_arm_name_and_weight() {
+        let server = single(SumBackend::plain(1), cfg_ms(1));
+        let err = server.ramp("m", "ghost", 0.5).unwrap_err();
+        assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        assert!(err.to_string().contains("ghost"), "{err}");
+        assert!(err.to_string().contains(DEFAULT_ARM), "lists arms: {err}");
+        for bad in [-0.1, 1.1, f64::NAN, f64::INFINITY] {
+            let err = server.ramp("m", DEFAULT_ARM, bad).unwrap_err();
+            assert!(matches!(err, DfqError::InvalidInput(_)), "{err}");
+        }
+        let err = server.ramp("ghost-model", DEFAULT_ARM, 0.5).unwrap_err();
+        assert!(matches!(err, DfqError::Serve(_)), "{err}");
+    }
+
+    #[test]
+    fn deploy_arm_replaces_live_arm_and_reweights() {
+        let server = single(SumBackend { batch: 1, k: 1.0 }, cfg_ms(1));
+        server
+            .deploy_arm("m", "b", Arc::new(SumBackend { batch: 1, k: 10.0 }), 1.0)
+            .unwrap();
+        let client = server.client();
+        assert_eq!(client.infer("m", img(1.0)).unwrap(), vec![40.0]);
+        // redeploying the live arm hot-swaps its backend in place
+        server
+            .deploy_arm("m", "b", Arc::new(SumBackend { batch: 1, k: 100.0 }), 1.0)
+            .unwrap();
+        assert_eq!(client.infer("m", img(1.0)).unwrap(), vec![400.0]);
+        let snap = server.snapshot("m").unwrap();
+        let b = snap.iter().find(|a| a.arm == "b").unwrap();
+        assert_eq!(b.metrics.swaps, 1, "arm redeploy counts as one swap");
+    }
+
     /// A backend that blocks each batch until the test releases it —
     /// makes queue saturation deterministic.
     struct GatedBackend {
@@ -846,6 +1534,7 @@ mod tests {
             ServeConfig {
                 max_wait: Duration::from_millis(1),
                 queue_depth: depth,
+                replicas: 1,
             },
         ));
         // first request: popped by the collector, now blocked executing
@@ -969,6 +1658,8 @@ mod tests {
         let err = client.infer("m", img(1.0)).unwrap_err();
         assert!(matches!(err, DfqError::Serve(_)), "{err}");
         assert!(err.to_string().contains("panicked"), "{err}");
+        // the panic is failure-counted like any other backend error
+        assert_eq!(server.metrics("m").unwrap().failed, 1);
         // the repair path: hot-swap the broken model for a working one —
         // must not panic on a poisoned gate, and traffic must recover
         server.swap("m", Arc::new(SumBackend::plain(4))).unwrap();
@@ -990,7 +1681,9 @@ mod tests {
         let metrics = {
             let models =
                 server.inner.models.read().unwrap_or_else(|e| e.into_inner());
-            models.get("m").unwrap().shared.metrics.clone()
+            let ep = models.get("m").unwrap();
+            let arms = ep.arms.read().unwrap_or_else(|e| e.into_inner());
+            arms[0].replicas[0].shared.metrics.clone()
         };
         let m2 = metrics.clone();
         std::thread::spawn(move || {
@@ -1021,7 +1714,11 @@ mod tests {
         let (release_tx, release_rx) = mpsc::channel();
         let server = Arc::new(single(
             GatedBackend { started: started_tx, release: Mutex::new(release_rx) },
-            ServeConfig { max_wait: Duration::from_millis(1), queue_depth: 16 },
+            ServeConfig {
+                max_wait: Duration::from_millis(1),
+                queue_depth: 16,
+                replicas: 1,
+            },
         ));
         let mut handles = Vec::new();
         for _ in 0..4 {

@@ -77,6 +77,26 @@
 //! (latency percentiles come from a fixed-size reservoir, so a
 //! long-running server's memory stays flat).
 //!
+//! ### Replica pools and weighted traffic arms
+//!
+//! An endpoint scales out and splits traffic without changing the
+//! submission API. [`session::ServeConfig::replicas`] gives every arm
+//! `N` independent batch collectors (each with its own bounded queue);
+//! submissions route to the **least-loaded** replica by live queue
+//! length, results stay bit-exact for every replica count, and
+//! `queue_depth` bounds each replica individually. An endpoint may also
+//! host several **weighted arms** — e.g. the live spec plus a canary —
+//! each backed by its own engine and replica pool:
+//! [`session::CalibratedModel::deploy_arm_into`] adds or hot-swaps an
+//! arm at a traffic fraction,
+//! [`coordinator::server::ModelServer::ramp`] moves the split (`0.05` →
+//! `0.5` → `1.0` is the canary → ramp → cutover motion, no request
+//! dropped at any step), and
+//! [`coordinator::server::ModelServer::snapshot`] reports per-arm /
+//! per-replica [`session::ServeMetrics`] that sum to the endpoint
+//! totals. On the CLI: `dfq serve --replicas N` and `--model
+//! NAME=KIND@WEIGHT,KIND@WEIGHT`.
+//!
 //! ## Cross-process serving: the wire layer
 //!
 //! [`wire`] puts a network boundary in front of the `ModelServer` with
@@ -170,8 +190,9 @@ pub mod prelude {
     pub use crate::quant::params::{ModuleShifts, QuantSpec};
     pub use crate::quant::scheme;
     pub use crate::session::{
-        CalibratedModel, Client, Engine, EngineKind, ModelHandle, ModelServer,
-        ServeConfig, ServeMetrics, Session,
+        ArmSnapshot, CalibratedModel, Client, Engine, EngineKind,
+        ModelHandle, ModelServer, ReplicaSnapshot, ServeConfig, ServeMetrics,
+        Session, DEFAULT_ARM,
     };
     pub use crate::tensor::{Shape, Tensor, TensorI32};
     pub use crate::util::rng::Pcg;

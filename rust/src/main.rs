@@ -7,12 +7,13 @@
 //! dfq detect    [--bits B] [--eval-n N]
 //! dfq hwcost    [--clock MHZ]
 //! dfq inspect   --model NAME
-//! dfq serve     [--model NAME[=KIND]]... [--requests N] [--engine KIND]
+//! dfq serve     [--model NAME[=KIND[@W,KIND@W]]]... [--requests N]
+//!               [--engine KIND] [--replicas N]
 //!               [--max-wait MS] [--queue-depth N]
 //!               [--listen HOST:PORT | --uds PATH] [--synthetic]
 //! dfq client    --connect ADDR [infer|metrics|list|shutdown] [--model NAME]
 //! dfq loadgen   --connect ADDR [--rps N] [--duration S] [--burst]
-//! dfq benchcheck --file BENCH_x.json ...
+//! dfq benchcheck --file BENCH_x.json ... [--against PREV.json]
 //! ```
 //!
 //! Everything runs from the AOT artifacts through the unified
@@ -49,7 +50,7 @@ const COMMANDS: &[(&str, &[&str])] = &[
         "serve",
         &[
             "model", "requests", "engine", "artifacts", "threads", "max-wait", "queue-depth",
-            "listen", "uds", "synthetic", "seed", "max-connections",
+            "replicas", "listen", "uds", "synthetic", "seed", "max-connections",
         ],
     ),
     ("client", &["connect", "model", "count", "seed", "timeout-ms", "hw", "channels"]),
@@ -60,7 +61,7 @@ const COMMANDS: &[(&str, &[&str])] = &[
             "channels", "timeout-ms",
         ],
     ),
-    ("benchcheck", &["file"]),
+    ("benchcheck", &["file", "against"]),
 ];
 
 /// Minimal flag parser: `--key value` pairs + a subcommand, validated
@@ -190,7 +191,12 @@ COMMANDS:
              named endpoint, routes interleaved traffic by name
              (--model NAME[=KIND] repeatable, --requests,
               --engine fp|int|int:N|int:auto|pjrt  default KIND,
-              --threads, --max-wait MS, --queue-depth N).
+              --threads, --max-wait MS, --queue-depth N, --replicas N).
+             Each endpoint is a pool of --replicas batch collectors
+             behind least-loaded routing; a weighted A/B split is
+             --model NAME=KIND@WEIGHT,KIND@WEIGHT (e.g.
+             resnet_s=int:auto@0.9,fp@0.1 serves 90% on the default arm
+             and 10% on a canary arm; weights must sum to 1).
              With --listen HOST:PORT or --uds PATH it serves remote
              clients over the dfq wire protocol instead of running the
              local demo traffic (--max-connections bounds the acceptor
@@ -198,13 +204,16 @@ COMMANDS:
              He-initialised weights instead of the AOT artifacts.
   client     talk to a running wire server: dfq client --connect ADDR
              [infer|metrics|list|shutdown]  (infer: --model, --count,
-              --seed, --hw, --channels; --timeout-ms bounds each call)
+              --seed, --hw, --channels; --timeout-ms bounds each call;
+              metrics prints endpoint totals plus per-arm lines)
   loadgen    open-loop load generator against a wire server
              (--connect ADDR, --model, --rps, --duration S,
               --connections, --burst, --seed, --out FILE; writes the
               schema-versioned BENCH_serve.json report)
   benchcheck validate BENCH_*.json documents against the bench schema
-             (--file PATH, repeatable; non-zero exit on any failure)
+             (--file PATH, repeatable; non-zero exit on any failure;
+              --against PREV.json additionally diffs each file against a
+              previous run and prints warn-only regression notes)
 
 COMMON FLAGS:
   --artifacts DIR   artifacts directory (default: artifacts)
@@ -213,9 +222,11 @@ COMMON FLAGS:
   --threads N       integer-engine data parallelism (0 = machine-sized;
                     serve defaults to machine-sized, evaluate to 0 -> auto)
   --max-wait MS     serve: max milliseconds a batch waits to fill (default 5)
-  --queue-depth N   serve: per-model admission bound — beyond N queued
+  --queue-depth N   serve: per-replica admission bound — beyond N queued
                     requests submissions are rejected as overloaded
                     instead of growing the queue (default 256)
+  --replicas N      serve: batch collectors per endpoint arm; submissions
+                    route to the least-loaded replica (default 1)
 ";
 
 fn cmd_tables(args: &Args) -> Result<(), DfqError> {
@@ -413,20 +424,79 @@ fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
     Ok(())
 }
 
-/// Parse one `--model` occurrence: `NAME` (serves with the default
-/// engine kind) or `NAME=KIND` (e.g. `resnet_s=int:4`, `resnet_m=fp`).
-fn parse_model_spec(spec: &str, default: EngineKind) -> Result<(String, EngineKind), DfqError> {
-    match spec.split_once('=') {
-        None => Ok((spec.to_string(), default)),
-        Some((name, kind)) => {
-            let kind = EngineKind::parse(kind).ok_or_else(|| {
-                DfqError::invalid(format!(
-                    "--model {name}={kind}: engine kind must be fp|int|int:N|int:auto|pjrt"
-                ))
-            })?;
-            Ok((name.to_string(), kind))
-        }
+/// One traffic arm of a `--model` spec: which engine serves it and what
+/// fraction of the endpoint's traffic it takes.
+#[derive(Clone)]
+struct ArmSpec {
+    arm: String,
+    kind: EngineKind,
+    weight: f64,
+}
+
+/// Parse one `--model` occurrence:
+///
+/// * `NAME` — one arm, the default engine kind;
+/// * `NAME=KIND` — one arm (e.g. `resnet_s=int:4`, `resnet_m=fp`);
+/// * `NAME=KIND@W,KIND@W` — a weighted two-arm split (arm names
+///   `default` and `canary`); the weights must sum to 1.
+fn parse_model_spec(
+    spec: &str,
+    default: EngineKind,
+) -> Result<(String, Vec<ArmSpec>), DfqError> {
+    let one = |kind| {
+        vec![ArmSpec { arm: DEFAULT_ARM.to_string(), kind, weight: 1.0 }]
+    };
+    let Some((name, rest)) = spec.split_once('=') else {
+        return Ok((spec.to_string(), one(default)));
+    };
+    let parse_kind = |k: &str| {
+        EngineKind::parse(k).ok_or_else(|| {
+            DfqError::invalid(format!(
+                "--model {name}={k}: engine kind must be fp|int|int:N|int:auto|pjrt"
+            ))
+        })
+    };
+    let parts: Vec<&str> = rest.split(',').collect();
+    if parts.len() == 1 && !parts[0].contains('@') {
+        return Ok((name.to_string(), one(parse_kind(parts[0])?)));
     }
+    if parts.len() != 2 {
+        return Err(DfqError::invalid(format!(
+            "--model {name}={rest}: a weighted split takes exactly two arms \
+             (KIND@WEIGHT,KIND@WEIGHT)"
+        )));
+    }
+    let mut arms = Vec::with_capacity(2);
+    for (part, arm) in parts.iter().zip([DEFAULT_ARM, "canary"]) {
+        let Some((kind, w)) = part.split_once('@') else {
+            return Err(DfqError::invalid(format!(
+                "--model {name}={rest}: arm '{part}' is missing its \
+                 @WEIGHT (e.g. int:auto@0.9,fp@0.1)"
+            )));
+        };
+        let weight: f64 = w.parse().map_err(|_| {
+            DfqError::invalid(format!(
+                "--model {name}={rest}: weight '{w}' is not a number"
+            ))
+        })?;
+        if !weight.is_finite() || !(0.0..=1.0).contains(&weight) {
+            return Err(DfqError::invalid(format!(
+                "--model {name}={rest}: weight {w} must be in [0, 1]"
+            )));
+        }
+        arms.push(ArmSpec {
+            arm: arm.to_string(),
+            kind: parse_kind(kind)?,
+            weight,
+        });
+    }
+    let sum: f64 = arms.iter().map(|a| a.weight).sum();
+    if (sum - 1.0).abs() > 1e-6 {
+        return Err(DfqError::invalid(format!(
+            "--model {name}={rest}: arm weights sum to {sum}, not 1"
+        )));
+    }
+    Ok((name.to_string(), arms))
 }
 
 fn cmd_serve(args: &Args) -> Result<(), DfqError> {
@@ -456,12 +526,26 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
             .map_err(|_| DfqError::invalid("--queue-depth must be a number >= 1"))?,
         None => defaults.queue_depth,
     };
-    let cfg = ServeConfig { max_wait, queue_depth };
+    let replicas = match args.get("replicas") {
+        Some(r) => r
+            .parse()
+            .map_err(|_| DfqError::invalid("--replicas must be a number >= 1"))?,
+        None => defaults.replicas,
+    };
+    let cfg = ServeConfig { max_wait, queue_depth, replicas };
 
-    // every --model NAME[=KIND] becomes a named endpoint (default: one
-    // resnet_s endpoint, exactly the old single-model behaviour)
-    let mut specs: Vec<(String, EngineKind)> = if args.all("model").is_empty() {
-        vec![("resnet_s".to_string(), default_kind)]
+    // every --model NAME[=KIND[@W,KIND@W]] becomes a named endpoint
+    // (default: one resnet_s endpoint, exactly the old single-model
+    // behaviour)
+    let mut specs: Vec<(String, Vec<ArmSpec>)> = if args.all("model").is_empty() {
+        vec![(
+            "resnet_s".to_string(),
+            vec![ArmSpec {
+                arm: DEFAULT_ARM.to_string(),
+                kind: default_kind,
+                weight: 1.0,
+            }],
+        )]
     } else {
         args.all("model")
             .iter()
@@ -478,14 +562,16 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
             )));
         }
     }
-    // --threads overrides the worker count of every integer endpoint,
+    // --threads overrides the worker count of every integer arm,
     // whether its kind came from --engine or a per-model NAME=KIND spec
     if let Some(t) = threads {
         let mut applied = false;
-        for (_, kind) in &mut specs {
-            if matches!(kind, EngineKind::Int { .. }) {
-                *kind = EngineKind::Int { threads: t };
-                applied = true;
+        for (_, arms) in &mut specs {
+            for a in arms {
+                if matches!(a.kind, EngineKind::Int { .. }) {
+                    a.kind = EngineKind::Int { threads: t };
+                    applied = true;
+                }
             }
         }
         if !applied {
@@ -503,9 +589,31 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
     let synthetic = args.has("synthetic");
     let seed = args.usize_or("seed", 7) as u64;
     let server = ModelServer::new(cfg);
+    // deploying one calibrated model across a spec's arms: a single
+    // default arm uses the plain deploy path; a weighted split deploys
+    // each arm with its traffic fraction
+    let deploy_arms = |calibrated: &CalibratedModel,
+                       name: &str,
+                       arms: &[ArmSpec],
+                       suffix: &str|
+     -> Result<(), DfqError> {
+        for a in arms {
+            if arms.len() == 1 && a.arm == DEFAULT_ARM {
+                calibrated.deploy_into(&server, name, a.kind)?;
+                println!("registered '{name}' ({} engine{suffix})", a.kind);
+            } else {
+                calibrated.deploy_arm_into(&server, name, &a.arm, a.weight, a.kind)?;
+                println!(
+                    "registered '{name}' arm '{}' @ {:.2} ({} engine{suffix})",
+                    a.arm, a.weight, a.kind
+                );
+            }
+        }
+        Ok(())
+    };
     let art = if synthetic {
         let calib = dfq::data::dataset::synth_images(1, 32, 3, seed);
-        for (name, kind) in &specs {
+        for (name, arms) in &specs {
             let graph = resnet::by_name(name).ok_or_else(|| {
                 DfqError::invalid(format!(
                     "--synthetic serves the built-in resnet_{{s,m,l}} graphs; \
@@ -515,18 +623,16 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
             let folded = resnet::synth_folded(&graph, seed);
             let session = Session::from_graph(graph, folded)?;
             let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
-            calibrated.deploy_into(&server, name, *kind)?;
-            println!("registered '{name}' ({kind} engine, synthetic weights)");
+            deploy_arms(&calibrated, name, arms, ", synthetic weights")?;
         }
         None
     } else {
         let art = Artifacts::open(args.str_or("artifacts", "artifacts"))?;
         let calib = art.calibration_images(1)?;
-        for (name, kind) in &specs {
+        for (name, arms) in &specs {
             let session = Session::from_artifacts(&art, name)?;
             let calibrated = session.calibrate(CalibConfig::default(), &calib)?;
-            calibrated.deploy_into(&server, name, *kind)?;
-            println!("registered '{name}' ({kind} engine)");
+            deploy_arms(&calibrated, name, arms, "")?;
         }
         Some(art)
     };
@@ -616,10 +722,11 @@ fn cmd_serve(args: &Args) -> Result<(), DfqError> {
 /// and wire serving paths).
 fn print_endpoint_metrics(name: &str, m: &ServeMetrics) {
     println!(
-        "  {name}: {} ok / {} rejected, {} batches (mean occupancy {:.1}), \
-         latency p50 {:.1} ms / p99 {:.1} ms",
+        "  {name}: {} ok / {} rejected / {} failed, {} batches \
+         (mean occupancy {:.1}), latency p50 {:.1} ms / p99 {:.1} ms",
         m.completed,
         m.rejected,
+        m.failed,
         m.batches,
         m.mean_occupancy(),
         m.latency_percentile(50.0) * 1e3,
@@ -685,11 +792,13 @@ fn cmd_client(args: &Args) -> Result<(), DfqError> {
         "metrics" => {
             let m = client.metrics(args.str_or("model", "resnet_s"))?;
             println!(
-                "{}: {} completed / {} rejected, {} batches, {} swaps, \
-                 queue {}, latency p50 {:.1} ms / p99 {:.1} ms / p99.9 {:.1} ms",
+                "{}: {} completed / {} rejected / {} failed, {} batches, \
+                 {} swaps, queue {}, latency p50 {:.1} ms / p99 {:.1} ms \
+                 / p99.9 {:.1} ms",
                 m.model,
                 m.completed,
                 m.rejected,
+                m.failed,
                 m.batches,
                 m.swaps,
                 m.queue_len,
@@ -697,6 +806,23 @@ fn cmd_client(args: &Args) -> Result<(), DfqError> {
                 m.p99_s * 1e3,
                 m.p999_s * 1e3
             );
+            for a in &m.arms {
+                println!(
+                    "  arm '{}' @ {:.2}: {} completed / {} rejected / \
+                     {} failed, {} batches, queue {}, {} replica(s), \
+                     p50 {:.1} ms / p99 {:.1} ms",
+                    a.arm,
+                    a.weight,
+                    a.completed,
+                    a.rejected,
+                    a.failed,
+                    a.batches,
+                    a.queue_len,
+                    a.replicas.len(),
+                    a.p50_s * 1e3,
+                    a.p99_s * 1e3
+                );
+            }
         }
         "infer" => {
             let model = args.str_or("model", "resnet_s");
@@ -814,6 +940,25 @@ fn cmd_benchcheck(args: &Args) -> Result<(), DfqError> {
     if files.is_empty() {
         return Err(DfqError::invalid("--file PATH required (repeatable)"));
     }
+    // --against: a previous run to diff each file with. The diff is
+    // warn-only — a perf regression prints a note but never fails the
+    // check (machines differ; schema violations still do).
+    let against = match args.get("against") {
+        Some(prev) => match std::fs::read_to_string(prev) {
+            Ok(text) => match dfq::util::json::Json::parse(&text) {
+                Ok(doc) => Some(doc),
+                Err(e) => {
+                    println!("note: --against {prev} is not valid JSON ({e}); skipping the diff");
+                    None
+                }
+            },
+            Err(e) => {
+                println!("note: --against {prev} unreadable ({e}); skipping the diff");
+                None
+            }
+        },
+        None => None,
+    };
     for f in files {
         let text =
             std::fs::read_to_string(f).map_err(|e| DfqError::io(f.as_str(), &e))?;
@@ -822,6 +967,15 @@ fn cmd_benchcheck(args: &Args) -> Result<(), DfqError> {
         dfq::report::bench::validate(&doc)
             .map_err(|e| DfqError::data(format!("{f}: schema violation: {e}")))?;
         println!("{f}: ok");
+        if let Some(prev) = &against {
+            let warnings = dfq::report::bench::diff(prev, &doc);
+            if warnings.is_empty() {
+                println!("{f}: no regressions vs the previous run");
+            }
+            for w in warnings {
+                println!("{f}: warning: {w}");
+            }
+        }
     }
     Ok(())
 }

@@ -166,6 +166,116 @@ fn validate_serve(doc: &Json) -> Result<(), String> {
     Ok(())
 }
 
+/// Warn-only comparison of a new bench document against a previous run
+/// (`dfq benchcheck --against`): returns human-readable regression
+/// notes, empty when nothing moved for the worse. Never an error —
+/// perf numbers vary across machines, so the diff informs rather than
+/// gates; only missing/mismatched documents themselves produce a note.
+pub fn diff(old: &Json, new: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    let kind = |d: &Json| {
+        d.req("bench").ok().and_then(|b| b.as_str()).map(str::to_string)
+    };
+    let (Some(ko), Some(kn)) = (kind(old), kind(new)) else {
+        out.push(
+            "a document is missing its 'bench' discriminator; \
+             nothing to compare"
+                .into(),
+        );
+        return out;
+    };
+    if ko != kn {
+        out.push(format!(
+            "comparing a '{kn}' run against a '{ko}' baseline; \
+             nothing to compare"
+        ));
+        return out;
+    }
+    match kn.as_str() {
+        "serve" => diff_serve(old, new, &mut out),
+        "hotpath" => diff_hotpath(old, new, &mut out),
+        _ => {}
+    }
+    out
+}
+
+fn num_at(doc: &Json, keys: &[&str]) -> Option<f64> {
+    let mut cur = doc;
+    for k in keys {
+        cur = cur.req(k).ok()?;
+    }
+    cur.as_f64()
+}
+
+fn diff_serve(old: &Json, new: &Json, out: &mut Vec<String>) {
+    let pair =
+        |keys: &[&str]| Some((num_at(old, keys)?, num_at(new, keys)?));
+    if let Some((o, n)) = pair(&["results", "throughput_rps"]) {
+        if o > 0.0 && n < o * 0.8 {
+            out.push(format!(
+                "throughput dropped {:.1}% ({o:.1} -> {n:.1} rps)",
+                (1.0 - n / o) * 100.0
+            ));
+        }
+    }
+    if let Some((o, n)) = pair(&["results", "shed_rate"]) {
+        if n > o + 0.05 {
+            out.push(format!(
+                "shed rate rose from {:.1}% to {:.1}%",
+                o * 100.0,
+                n * 100.0
+            ));
+        }
+    }
+    if let Some((o, n)) = pair(&["results", "latency_ms", "p99"]) {
+        if o > 0.0 && n > o * 1.5 {
+            out.push(format!(
+                "p99 latency worsened {:.0}% ({o:.2} -> {n:.2} ms)",
+                (n / o - 1.0) * 100.0
+            ));
+        }
+    }
+    if let Some((_, n)) = pair(&["results", "errors"]) {
+        if n > 0.0 {
+            out.push(format!("{n} request error(s) in the new run"));
+        }
+    }
+}
+
+fn diff_hotpath(old: &Json, new: &Json, out: &mut Vec<String>) {
+    let entries = |d: &Json| -> Vec<(String, f64)> {
+        d.req("entries")
+            .ok()
+            .and_then(|e| e.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|e| {
+                        let name =
+                            e.req("name").ok()?.as_str()?.to_string();
+                        let med = e.req("median_s").ok()?.as_f64()?;
+                        Some((name, med))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let old_entries = entries(old);
+    for (name, n_med) in entries(new) {
+        if let Some((_, o_med)) =
+            old_entries.iter().find(|(o_name, _)| *o_name == name)
+        {
+            if *o_med > 0.0 && n_med > o_med * 1.2 {
+                out.push(format!(
+                    "{name}: median slowed {:.0}% ({:.4}s -> {:.4}s)",
+                    (n_med / o_med - 1.0) * 100.0,
+                    o_med,
+                    n_med
+                ));
+            }
+        }
+    }
+}
+
 fn validate_hotpath(doc: &Json) -> Result<(), String> {
     want_str(doc, "$", "profile")?;
     let entries = doc
@@ -250,6 +360,59 @@ mod tests {
             ("schema_version", json::num(99.0)),
         ]);
         assert!(validate(&doc).unwrap_err().contains("newer"));
+    }
+
+    #[test]
+    fn diff_is_warn_only_and_names_what_regressed() {
+        // hotpath: a 50% slowdown on one entry is flagged by name
+        let old = hotpath_json("release", &[entry()]);
+        let slow = BenchEntry { median_s: 0.006, p95_s: 0.007, ..entry() };
+        let new = hotpath_json("release", &[slow]);
+        let w = diff(&old, &new);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("int_engine/resnet_s/b8"), "{}", w[0]);
+        // identical runs: silence
+        assert!(diff(&old, &old).is_empty());
+        // mismatched kinds: one note, no panic
+        let serve_doc = json::obj(vec![
+            ("bench", json::s("serve")),
+            ("schema_version", json::num(1.0)),
+        ]);
+        let w = diff(&old, &serve_doc);
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("nothing to compare"), "{}", w[0]);
+        // a garbage baseline degrades to a note, never an error
+        let w = diff(&json::obj(vec![]), &old);
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn serve_diff_flags_throughput_shed_and_errors() {
+        let serve = |rps: f64, shed: f64, errors: f64| {
+            json::obj(vec![
+                ("bench", json::s("serve")),
+                ("schema_version", json::num(1.0)),
+                (
+                    "results",
+                    json::obj(vec![
+                        ("throughput_rps", json::num(rps)),
+                        ("shed_rate", json::num(shed)),
+                        ("errors", json::num(errors)),
+                        (
+                            "latency_ms",
+                            json::obj(vec![("p99", json::num(4.0))]),
+                        ),
+                    ]),
+                ),
+            ])
+        };
+        let base = serve(100.0, 0.0, 0.0);
+        assert!(diff(&base, &serve(95.0, 0.01, 0.0)).is_empty());
+        let w = diff(&base, &serve(50.0, 0.2, 3.0));
+        assert_eq!(w.len(), 3, "{w:?}");
+        assert!(w[0].contains("throughput"), "{}", w[0]);
+        assert!(w[1].contains("shed"), "{}", w[1]);
+        assert!(w[2].contains("error"), "{}", w[2]);
     }
 
     #[test]

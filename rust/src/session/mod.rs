@@ -40,7 +40,10 @@ pub use engine::{Engine, EngineKind};
 // the deployment surface rides along with the pipeline that feeds it:
 // `Session` -> `CalibratedModel` -> `Engine` -> `ModelServer`
 pub use crate::coordinator::serve::{ServeConfig, ServeMetrics};
-pub use crate::coordinator::server::{Client, ModelHandle, ModelServer};
+pub use crate::coordinator::server::{
+    ArmSnapshot, Client, ModelHandle, ModelServer, ReplicaSnapshot,
+    DEFAULT_ARM,
+};
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -309,6 +312,45 @@ impl CalibratedModel {
     ) -> Result<Arc<dyn Engine>, DfqError> {
         let engine = self.engine(kind)?;
         server.deploy(name, engine.clone())?;
+        Ok(engine)
+    }
+
+    /// Deploy this calibrated model as one **weighted traffic arm** of
+    /// the `name` endpoint: builds the `kind` engine and registers it
+    /// under `arm` with the given fraction of endpoint traffic (the
+    /// other arms are renormalised to share the rest). The canary →
+    /// ramp → full-cutover motion is:
+    ///
+    /// ```no_run
+    /// # use dfq::prelude::*;
+    /// # fn canary(candidate: &CalibratedModel, server: &ModelServer)
+    /// #     -> Result<(), DfqError> {
+    /// // 5% canary next to the live arm…
+    /// candidate.deploy_arm_into(
+    ///     server, "resnet_s", "canary", 0.05, EngineKind::Int { threads: 0 },
+    /// )?;
+    /// // …ramp as confidence grows…
+    /// server.ramp("resnet_s", "canary", 0.5)?;
+    /// // …and cut over completely
+    /// server.ramp("resnet_s", "canary", 1.0)?;
+    /// # Ok(())
+    /// # }
+    /// ```
+    ///
+    /// Returns the engine it deployed. Re-deploying a live arm
+    /// hot-swaps its backend atomically, exactly like
+    /// [`deploy_into`](CalibratedModel::deploy_into) does for
+    /// single-arm endpoints.
+    pub fn deploy_arm_into(
+        &self,
+        server: &ModelServer,
+        name: &str,
+        arm: &str,
+        weight: f64,
+        kind: EngineKind,
+    ) -> Result<Arc<dyn Engine>, DfqError> {
+        let engine = self.engine(kind)?;
+        server.deploy_arm(name, arm, engine.clone(), weight)?;
         Ok(engine)
     }
 }

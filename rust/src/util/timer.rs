@@ -44,11 +44,16 @@ impl Stats {
         self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
     }
 
-    /// p-th percentile (0..=100), linear interpolation.
+    /// p-th percentile, linear interpolation. `p` is clamped to
+    /// `[0, 100]` — callers reach this with user-supplied percentiles
+    /// (serve metrics, bench reports), and an out-of-range `p` used to
+    /// index out of bounds (`p > 100`) or wrap the index (`p < 0`)
+    /// instead of answering. `NaN` in gives `NaN` out.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
+        if self.samples.is_empty() || p.is_nan() {
             return f64::NAN;
         }
+        let p = p.clamp(0.0, 100.0);
         let k = (p / 100.0) * (self.samples.len() - 1) as f64;
         let lo = k.floor() as usize;
         let hi = k.ceil() as usize;
@@ -117,6 +122,21 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
         assert!((s.percentile(100.0) - 4.0).abs() < 1e-12);
         assert!((s.mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_out_of_range_clamps_instead_of_panicking() {
+        // regression: p > 100 indexed past the end of `samples`, and
+        // p < 0 wrapped `k.floor() as usize` to a huge index
+        let s = Stats::from(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.percentile(150.0), 4.0);
+        assert_eq!(s.percentile(1e9), 4.0);
+        assert_eq!(s.percentile(-5.0), 1.0);
+        assert_eq!(s.percentile(f64::NEG_INFINITY), 1.0);
+        assert_eq!(s.percentile(f64::INFINITY), 4.0);
+        assert!(s.percentile(f64::NAN).is_nan());
+        // the empty case still answers NaN for every p
+        assert!(Stats::from(Vec::new()).percentile(150.0).is_nan());
     }
 
     #[test]

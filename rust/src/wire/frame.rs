@@ -9,7 +9,7 @@
 //! offset  size  field
 //! ------  ----  -----------------------------------------------------
 //!      0     4  magic: the ASCII bytes "dfq1"            (b"dfq1")
-//!      4     1  protocol version                         (== 1)
+//!      4     1  protocol version                         (== 2)
 //!      5     1  frame type (see the FT_* constants)
 //!      6     2  reserved, must be zero                   (u16 LE)
 //!      8     4  payload length in bytes                  (u32 LE)
@@ -38,11 +38,21 @@
 //! | 0x02 | `InferResponse`   | `u32` count + count × `f32` output |
 //! | 0x03 | `Error`           | `u8` code, model `str16`, `u32` detail, message `str32` |
 //! | 0x04 | `MetricsRequest`  | model `str16` |
-//! | 0x05 | `MetricsResponse` | model `str16`, 5 × `u64` counters, 3 × `f64` percentiles |
+//! | 0x05 | `MetricsResponse` | model `str16`, 6 × `u64` counters, 3 × `f64` percentiles, `u16` arm count + arm count × `arm` |
 //! | 0x06 | `ListRequest`     | empty |
 //! | 0x07 | `ListResponse`    | `u16` count + count × `str16` model names |
 //! | 0x08 | `Shutdown`        | empty |
 //! | 0x09 | `Ok`              | empty |
+//!
+//! An `arm` (one weighted traffic arm of an endpoint, see
+//! [`crate::coordinator::server::ArmSnapshot`]) encodes as: name `str16`,
+//! weight `f64`, 6 × `u64` counters (completed, batches, rejected, swaps,
+//! failed, queue_len), 3 × `f64` percentiles, then a `u16` replica count
+//! and per replica 3 × `u64` (queue_len, completed, failed).
+//!
+//! Version history: v1 had no `failed` counter and no arm section in
+//! `MetricsResponse`; v2 added both. The version check in
+//! [`parse_header`] keeps the two from silently misreading each other.
 //!
 //! The `Error` frame's `code` byte maps onto [`DfqError`] so overload
 //! shedding stays **typed** across the process boundary: 1 =
@@ -60,8 +70,10 @@ use crate::tensor::Tensor;
 /// The four magic bytes every frame starts with.
 pub const MAGIC: [u8; 4] = *b"dfq1";
 
-/// The protocol version this build speaks.
-pub const VERSION: u8 = 1;
+/// The protocol version this build speaks. v2 extended the
+/// `MetricsResponse` payload with a `failed` counter and a per-arm /
+/// per-replica section (see the module docs).
+pub const VERSION: u8 = 2;
 
 /// Header size in bytes (magic + version + type + reserved + length).
 pub const HEADER_LEN: usize = 12;
@@ -92,7 +104,9 @@ pub const FT_OK: u8 = 0x09;
 /// A decoded metrics snapshot for one model endpoint, as carried by a
 /// `MetricsResponse` frame. Counters come from
 /// [`crate::coordinator::serve::ServeMetrics`]; `queue_len` is the live
-/// admission-queue occupancy at snapshot time.
+/// admission-queue occupancy at snapshot time. The top-level counters
+/// are merged across every arm and replica; `arms` breaks the same
+/// totals down per traffic arm.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetricsReply {
     /// the model the snapshot describes
@@ -105,7 +119,9 @@ pub struct MetricsReply {
     pub rejected: u64,
     /// hot-swaps performed
     pub swaps: u64,
-    /// live admission-queue occupancy
+    /// requests that reached a backend and came back as errors
+    pub failed: u64,
+    /// live admission-queue occupancy (summed over replicas)
     pub queue_len: u64,
     /// p50 request latency, seconds (0 when nothing completed)
     pub p50_s: f64,
@@ -113,6 +129,49 @@ pub struct MetricsReply {
     pub p99_s: f64,
     /// p99.9 request latency, seconds (0 when nothing completed)
     pub p999_s: f64,
+    /// per-arm breakdown (one entry per weighted traffic arm)
+    pub arms: Vec<ArmMetricsReply>,
+}
+
+/// Per-arm slice of a [`MetricsReply`]: one weighted traffic arm of an
+/// endpoint, with its replica pool broken out.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArmMetricsReply {
+    /// arm name (e.g. `"default"`, `"canary"`)
+    pub arm: String,
+    /// fraction of endpoint traffic routed here, in `[0, 1]`
+    pub weight: f64,
+    /// completed requests on this arm
+    pub completed: u64,
+    /// executed batches on this arm
+    pub batches: u64,
+    /// requests shed by this arm's admission control
+    pub rejected: u64,
+    /// hot-swaps performed on this arm
+    pub swaps: u64,
+    /// failed requests on this arm
+    pub failed: u64,
+    /// live queue occupancy summed over this arm's replicas
+    pub queue_len: u64,
+    /// p50 request latency, seconds (0 when nothing completed)
+    pub p50_s: f64,
+    /// p99 request latency, seconds (0 when nothing completed)
+    pub p99_s: f64,
+    /// p99.9 request latency, seconds (0 when nothing completed)
+    pub p999_s: f64,
+    /// per-replica breakdown
+    pub replicas: Vec<ReplicaMetricsReply>,
+}
+
+/// Per-replica slice of an [`ArmMetricsReply`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaMetricsReply {
+    /// live admission-queue occupancy of this replica
+    pub queue_len: u64,
+    /// completed requests on this replica
+    pub completed: u64,
+    /// failed requests on this replica
+    pub failed: u64,
 }
 
 /// One decoded wire message. See the module docs for the byte-level
@@ -206,10 +265,24 @@ fn put_str16(buf: &mut Vec<u8>, s: &str) -> Result<(), DfqError> {
     Ok(())
 }
 
-fn put_str32(buf: &mut Vec<u8>, s: &str) {
+fn put_str32(buf: &mut Vec<u8>, s: &str) -> Result<(), DfqError> {
     let bytes = s.as_bytes();
+    // guard the cast: a string past the payload cap used to truncate its
+    // length prefix to `bytes.len() as u32`, producing a frame whose
+    // declared and actual lengths disagree — a corrupt frame on the
+    // peer's side instead of a typed local error
+    if bytes.len() > MAX_PAYLOAD {
+        return Err(DfqError::wire(
+            WireFault::Oversized,
+            format!(
+                "string of {} bytes exceeds the {MAX_PAYLOAD}-byte payload cap",
+                bytes.len()
+            ),
+        ));
+    }
     put_u32(buf, bytes.len() as u32);
     buf.extend_from_slice(bytes);
+    Ok(())
 }
 
 fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) -> Result<(), DfqError> {
@@ -388,7 +461,7 @@ fn encode_error(buf: &mut Vec<u8>, e: &DfqError) -> Result<(), DfqError> {
     buf.push(code);
     put_str16(buf, model)?;
     put_u32(buf, detail);
-    put_str32(buf, &message);
+    put_str32(buf, &message)?;
     Ok(())
 }
 
@@ -427,6 +500,19 @@ pub fn encode(frame: &Frame) -> Result<Vec<u8>, DfqError> {
             put_tensor(&mut payload, image)?;
         }
         Frame::InferResponse { output } => {
+            // guard the cast *before* serialising: an output past the
+            // payload cap used to silently truncate `output.len() as
+            // u32` (and allocate the whole oversize buffer first)
+            if output.len() > (MAX_PAYLOAD - 4) / 4 {
+                return Err(DfqError::wire(
+                    WireFault::Oversized,
+                    format!(
+                        "output of {} floats exceeds the {MAX_PAYLOAD}-byte \
+                         payload cap",
+                        output.len()
+                    ),
+                ));
+            }
             put_u32(&mut payload, output.len() as u32);
             for &x in output {
                 put_f32(&mut payload, x);
@@ -440,10 +526,43 @@ pub fn encode(frame: &Frame) -> Result<Vec<u8>, DfqError> {
             put_u64(&mut payload, m.batches);
             put_u64(&mut payload, m.rejected);
             put_u64(&mut payload, m.swaps);
+            put_u64(&mut payload, m.failed);
             put_u64(&mut payload, m.queue_len);
             put_f64(&mut payload, m.p50_s);
             put_f64(&mut payload, m.p99_s);
             put_f64(&mut payload, m.p999_s);
+            if m.arms.len() > u16::MAX as usize {
+                return Err(DfqError::wire(
+                    WireFault::Malformed,
+                    "too many arms for a metrics frame",
+                ));
+            }
+            put_u16(&mut payload, m.arms.len() as u16);
+            for a in &m.arms {
+                put_str16(&mut payload, &a.arm)?;
+                put_f64(&mut payload, a.weight);
+                put_u64(&mut payload, a.completed);
+                put_u64(&mut payload, a.batches);
+                put_u64(&mut payload, a.rejected);
+                put_u64(&mut payload, a.swaps);
+                put_u64(&mut payload, a.failed);
+                put_u64(&mut payload, a.queue_len);
+                put_f64(&mut payload, a.p50_s);
+                put_f64(&mut payload, a.p99_s);
+                put_f64(&mut payload, a.p999_s);
+                if a.replicas.len() > u16::MAX as usize {
+                    return Err(DfqError::wire(
+                        WireFault::Malformed,
+                        "too many replicas for a metrics frame",
+                    ));
+                }
+                put_u16(&mut payload, a.replicas.len() as u16);
+                for r in &a.replicas {
+                    put_u64(&mut payload, r.queue_len);
+                    put_u64(&mut payload, r.completed);
+                    put_u64(&mut payload, r.failed);
+                }
+            }
         }
         Frame::ListRequest | Frame::Shutdown | Frame::Ok => {}
         Frame::ListResponse { models } => {
@@ -542,17 +661,69 @@ pub fn decode_payload(frame_type: u8, payload: &[u8]) -> Result<Frame, DfqError>
         }
         FT_ERROR => Frame::Error(decode_error(&mut cur)?),
         FT_METRICS_REQUEST => Frame::MetricsRequest { model: cur.str16()? },
-        FT_METRICS_RESPONSE => Frame::MetricsResponse(MetricsReply {
-            model: cur.str16()?,
-            completed: cur.u64()?,
-            batches: cur.u64()?,
-            rejected: cur.u64()?,
-            swaps: cur.u64()?,
-            queue_len: cur.u64()?,
-            p50_s: cur.f64()?,
-            p99_s: cur.f64()?,
-            p999_s: cur.f64()?,
-        }),
+        FT_METRICS_RESPONSE => {
+            let model = cur.str16()?;
+            let completed = cur.u64()?;
+            let batches = cur.u64()?;
+            let rejected = cur.u64()?;
+            let swaps = cur.u64()?;
+            let failed = cur.u64()?;
+            let queue_len = cur.u64()?;
+            let p50_s = cur.f64()?;
+            let p99_s = cur.f64()?;
+            let p999_s = cur.f64()?;
+            let n_arms = cur.u16()? as usize;
+            let mut arms = Vec::with_capacity(n_arms.min(64));
+            for _ in 0..n_arms {
+                let arm = cur.str16()?;
+                let weight = cur.f64()?;
+                let completed = cur.u64()?;
+                let batches = cur.u64()?;
+                let rejected = cur.u64()?;
+                let swaps = cur.u64()?;
+                let failed = cur.u64()?;
+                let queue_len = cur.u64()?;
+                let p50_s = cur.f64()?;
+                let p99_s = cur.f64()?;
+                let p999_s = cur.f64()?;
+                let n_replicas = cur.u16()? as usize;
+                let mut replicas = Vec::with_capacity(n_replicas.min(64));
+                for _ in 0..n_replicas {
+                    replicas.push(ReplicaMetricsReply {
+                        queue_len: cur.u64()?,
+                        completed: cur.u64()?,
+                        failed: cur.u64()?,
+                    });
+                }
+                arms.push(ArmMetricsReply {
+                    arm,
+                    weight,
+                    completed,
+                    batches,
+                    rejected,
+                    swaps,
+                    failed,
+                    queue_len,
+                    p50_s,
+                    p99_s,
+                    p999_s,
+                    replicas,
+                });
+            }
+            Frame::MetricsResponse(MetricsReply {
+                model,
+                completed,
+                batches,
+                rejected,
+                swaps,
+                failed,
+                queue_len,
+                p50_s,
+                p99_s,
+                p999_s,
+                arms,
+            })
+        }
         FT_LIST_REQUEST => Frame::ListRequest,
         FT_LIST_RESPONSE => {
             let n = cur.u16()? as usize;
@@ -761,10 +932,71 @@ mod tests {
                 batches: 13,
                 rejected: 7,
                 swaps: 2,
+                failed: 3,
                 queue_len: 5,
                 p50_s: 0.001,
                 p99_s: 0.01,
                 p999_s: 0.02,
+                arms: vec![
+                    ArmMetricsReply {
+                        arm: "default".into(),
+                        weight: 0.75,
+                        completed: 80,
+                        batches: 10,
+                        rejected: 6,
+                        swaps: 1,
+                        failed: 2,
+                        queue_len: 4,
+                        p50_s: 0.001,
+                        p99_s: 0.011,
+                        p999_s: 0.021,
+                        replicas: vec![
+                            ReplicaMetricsReply {
+                                queue_len: 1,
+                                completed: 40,
+                                failed: 0,
+                            },
+                            ReplicaMetricsReply {
+                                queue_len: 3,
+                                completed: 40,
+                                failed: 2,
+                            },
+                        ],
+                    },
+                    ArmMetricsReply {
+                        arm: "canary".into(),
+                        weight: 0.25,
+                        completed: 20,
+                        batches: 3,
+                        rejected: 1,
+                        swaps: 1,
+                        failed: 1,
+                        queue_len: 1,
+                        p50_s: 0.002,
+                        p99_s: 0.012,
+                        p999_s: 0.022,
+                        replicas: vec![ReplicaMetricsReply {
+                            queue_len: 1,
+                            completed: 20,
+                            failed: 1,
+                        }],
+                    },
+                ],
+            }),
+            // the no-arms form (a v2 peer reporting an empty registry
+            // entry) must roundtrip too
+            Frame::MetricsResponse(MetricsReply {
+                model: "m".into(),
+                completed: 0,
+                batches: 0,
+                rejected: 0,
+                swaps: 0,
+                failed: 0,
+                queue_len: 0,
+                p50_s: 0.0,
+                p99_s: 0.0,
+                p999_s: 0.0,
+                arms: Vec::new(),
             }),
             Frame::ListRequest,
             Frame::ListResponse {
@@ -1033,5 +1265,74 @@ mod tests {
             }
             other => panic!("expected typed overload, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn str16_at_the_boundary_roundtrips_and_over_it_is_typed() {
+        // exactly u16::MAX bytes: the longest legal str16
+        let max = "m".repeat(u16::MAX as usize);
+        let f = Frame::MetricsRequest { model: max.clone() };
+        match roundtrip(&f) {
+            Frame::MetricsRequest { model } => assert_eq!(model, max),
+            other => panic!("expected the request back, got {other:?}"),
+        }
+        // one byte over: a typed Malformed error, not a truncated cast
+        let over = "m".repeat(u16::MAX as usize + 1);
+        let err = encode(&Frame::MetricsRequest { model: over }).unwrap_err();
+        assert!(
+            matches!(err, DfqError::Wire { fault: WireFault::Malformed, .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn oversized_error_message_is_typed_at_encode_time() {
+        // regression: put_str32 cast `bytes.len() as u32` unchecked; a
+        // message past the payload cap now fails typed instead of
+        // emitting a frame whose length prefix disagrees with its body
+        let msg = "x".repeat(MAX_PAYLOAD + 1);
+        let err = encode(&Frame::Error(DfqError::serve(msg))).unwrap_err();
+        assert!(
+            matches!(err, DfqError::Wire { fault: WireFault::Oversized, .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn oversized_infer_response_is_typed_before_serialising() {
+        // regression: `output.len() as u32` was unchecked and the whole
+        // oversize payload was built before the final length check
+        let floats_cap = (MAX_PAYLOAD - 4) / 4;
+        let err = encode(&Frame::InferResponse {
+            output: vec![0.0f32; floats_cap + 1],
+        })
+        .unwrap_err();
+        assert!(
+            matches!(err, DfqError::Wire { fault: WireFault::Oversized, .. }),
+            "{err}"
+        );
+        // and the largest legal response still encodes + roundtrips
+        let f = Frame::InferResponse { output: vec![1.5f32; floats_cap] };
+        match roundtrip(&f) {
+            Frame::InferResponse { output } => {
+                assert_eq!(output.len(), floats_cap);
+                assert_eq!(output[0], 1.5);
+            }
+            other => panic!("expected the response back, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v1_metrics_payloads_are_rejected_by_the_version_check() {
+        // a v1 header is refused before its (shorter) metrics payload
+        // could be misread as v2
+        let good = encode(&Frame::ListRequest).unwrap();
+        let mut h = [0u8; HEADER_LEN];
+        h.copy_from_slice(&good[..HEADER_LEN]);
+        h[4] = 1;
+        assert!(matches!(
+            parse_header(&h).unwrap_err(),
+            DfqError::Wire { fault: WireFault::BadVersion, .. }
+        ));
     }
 }

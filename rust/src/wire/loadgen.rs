@@ -192,6 +192,26 @@ impl LoadReport {
     }
 }
 
+impl LoadReport {
+    /// Like [`LoadReport::to_json`], with extra top-level keys merged
+    /// into the document — scenario labels, replica counts, baseline
+    /// comparisons ([`crate::report::bench`] tolerates extra keys
+    /// everywhere, so enriched documents still validate and diff).
+    pub fn to_json_with(
+        &self,
+        cfg: &LoadgenConfig,
+        extras: Vec<(&str, Json)>,
+    ) -> Json {
+        let mut doc = self.to_json(cfg);
+        if let Json::Obj(m) = &mut doc {
+            for (k, v) in extras {
+                m.insert(k.to_string(), v);
+            }
+        }
+        doc
+    }
+}
+
 struct WorkerTally {
     completed: usize,
     shed: usize,
@@ -399,5 +419,20 @@ mod tests {
         crate::report::bench::validate(&parsed)
             .unwrap_or_else(|e| panic!("schema: {e}\n{text}"));
         assert_eq!(report.shed_rate(), 0.0);
+
+        // enriched documents (scenario labels etc.) validate unchanged
+        let doc = report.to_json_with(
+            &cfg,
+            vec![
+                ("scenario", json::s("ramp_swap_under_load")),
+                ("replicas", json::num(2.0)),
+            ],
+        );
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        crate::report::bench::validate(&parsed).unwrap();
+        assert_eq!(
+            parsed.req("scenario").unwrap().as_str(),
+            Some("ramp_swap_under_load")
+        );
     }
 }

@@ -43,7 +43,7 @@ pub mod net;
 pub mod server;
 
 pub use client::{WireClient, WireClientConfig};
-pub use frame::{Frame, MetricsReply};
+pub use frame::{ArmMetricsReply, Frame, MetricsReply, ReplicaMetricsReply};
 pub use loadgen::{LoadgenConfig, LoadReport};
 pub use net::{WireAddr, WireListener, WireStream};
 pub use server::{StopHandle, WireServer, WireServerConfig, WireStats};

@@ -25,7 +25,8 @@ use std::time::Duration;
 use crate::coordinator::server::{Client, ModelServer};
 use crate::error::{DfqError, WireFault};
 use crate::wire::frame::{
-    read_frame_incremental, write_frame, Frame, MetricsReply, Recv,
+    read_frame_incremental, write_frame, ArmMetricsReply, Frame,
+    MetricsReply, Recv, ReplicaMetricsReply,
 };
 use crate::wire::net::{WireAddr, WireListener, WireStream};
 
@@ -268,31 +269,54 @@ fn handle_connection(
 
 /// Assemble one model's wire metrics snapshot (percentiles in seconds;
 /// 0.0 when nothing has completed yet, since NaN has no JSON/wire-safe
-/// meaning for clients).
+/// meaning for clients). The top-level counters are the merged endpoint
+/// totals; `arms` carries the per-arm / per-replica breakdown from
+/// [`ModelServer::snapshot`].
 fn metrics_reply(
     server: &ModelServer,
     model: &str,
 ) -> Result<MetricsReply, DfqError> {
     let m = server.metrics(model)?;
     let queue_len = server.queue_len(model)? as u64;
-    let pct = |p: f64| {
-        let v = m.latency_percentile(p);
-        if v.is_finite() {
-            v
-        } else {
-            0.0
-        }
-    };
+    let sane = |v: f64| if v.is_finite() { v } else { 0.0 };
+    let arms = server
+        .snapshot(model)?
+        .into_iter()
+        .map(|a| ArmMetricsReply {
+            arm: a.arm,
+            weight: sane(a.weight),
+            completed: a.metrics.completed as u64,
+            batches: a.metrics.batches as u64,
+            rejected: a.metrics.rejected as u64,
+            swaps: a.metrics.swaps as u64,
+            failed: a.metrics.failed as u64,
+            queue_len: a.queue_len as u64,
+            p50_s: sane(a.metrics.latency_percentile(50.0)),
+            p99_s: sane(a.metrics.latency_percentile(99.0)),
+            p999_s: sane(a.metrics.latency_percentile(99.9)),
+            replicas: a
+                .replicas
+                .into_iter()
+                .map(|r| ReplicaMetricsReply {
+                    queue_len: r.queue_len as u64,
+                    completed: r.metrics.completed as u64,
+                    failed: r.metrics.failed as u64,
+                })
+                .collect(),
+        })
+        .collect();
     Ok(MetricsReply {
         model: model.to_string(),
         completed: m.completed as u64,
         batches: m.batches as u64,
         rejected: m.rejected as u64,
         swaps: m.swaps as u64,
+        failed: m.failed as u64,
         queue_len,
-        p50_s: pct(50.0),
-        p99_s: pct(99.0),
-        p999_s: pct(99.9),
+        p50_s: sane(m.latency_percentile(50.0)),
+        p99_s: sane(m.latency_percentile(99.0)),
+        p999_s: sane(m.latency_percentile(99.9)),
+        arms,
     })
 }
 

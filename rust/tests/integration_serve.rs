@@ -202,6 +202,166 @@ fn pinned_handle_follows_hot_swap() {
 // for precise gauge assertions. Duplicating that channel dance here
 // would just be a second copy to keep in sync.
 
+/// The tentpole property: for every replica count, concurrent traffic
+/// through the endpoint is bit-exact against the engine run directly —
+/// so 1-, 2- and 4-replica deployments of the same calibrated model are
+/// transitively bit-identical, over several random graphs.
+#[test]
+fn replica_pools_are_bit_exact_for_every_replica_count() {
+    for model_seed in [71u64, 72, 73] {
+        let cm = calibrated(model_seed, CalibConfig::default());
+        let eng = cm.engine(EngineKind::Int { threads: 1 }).unwrap();
+        for replicas in [1usize, 2, 4] {
+            let server = Arc::new(ModelServer::new(ServeConfig {
+                replicas,
+                ..Default::default()
+            }));
+            server.register("m", eng.clone()).unwrap();
+            let mut handles = Vec::new();
+            for t in 0..8u64 {
+                let client = server.client();
+                handles.push(std::thread::spawn(move || {
+                    let mut rows = Vec::new();
+                    for i in 0..6u64 {
+                        let seed = model_seed * 10_000 + t * 100 + i;
+                        rows.push((seed, client.infer("m", image(seed)).unwrap()));
+                    }
+                    rows
+                }));
+            }
+            let mut total = 0usize;
+            for h in handles {
+                for (seed, row) in h.join().unwrap() {
+                    total += 1;
+                    assert_eq!(
+                        row,
+                        eng.run(&image(seed)).unwrap().data,
+                        "model {model_seed}, {replicas} replica(s), request {seed}"
+                    );
+                }
+            }
+            assert_eq!(total, 48);
+            let server =
+                Arc::try_unwrap(server).ok().expect("submitters joined");
+            let report: HashMap<String, ServeMetrics> =
+                server.shutdown().into_iter().collect();
+            assert_eq!(report["m"].completed, 48, "{replicas} replica(s)");
+            assert_eq!(report["m"].rejected, 0);
+            assert_eq!(report["m"].failed, 0);
+        }
+    }
+}
+
+/// The canary motion under concurrent load: deploy a 25% canary arm,
+/// ramp it to 100%, then hot-swap — zero requests dropped or failed at
+/// any step, and every response is bit-exact to one of the two engines.
+#[test]
+fn ramp_to_full_and_swap_under_load_drop_nothing() {
+    let cm8 = calibrated(81, CalibConfig::default());
+    let eng8 = cm8.engine(EngineKind::Int { threads: 1 }).unwrap();
+    let cm4 = calibrated(81, CalibConfig { n_bits: 4, ..Default::default() });
+    let eng4 = cm4.engine(EngineKind::Int { threads: 1 }).unwrap();
+
+    let server = Arc::new(ModelServer::new(ServeConfig {
+        replicas: 2,
+        ..Default::default()
+    }));
+    server.register("m", eng8.clone()).unwrap();
+    server.deploy_arm("m", "canary", eng4.clone(), 0.25).unwrap();
+
+    let mut handles = Vec::new();
+    for t in 0..16u64 {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rows = Vec::new();
+            for i in 0..10u64 {
+                let seed = 90_000 + t * 100 + i;
+                rows.push((seed, client.infer("m", image(seed)).unwrap()));
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            rows
+        }));
+    }
+    // ramp the canary to full weight, then swap every arm's backend to
+    // the 4-bit engine (making the output unambiguous), all mid-traffic
+    std::thread::sleep(std::time::Duration::from_millis(3));
+    server.ramp("m", "canary", 1.0).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(3));
+    server.swap("m", eng4.clone()).unwrap();
+
+    let mut total = 0usize;
+    for h in handles {
+        for (seed, row) in h.join().unwrap() {
+            total += 1;
+            let x = image(seed);
+            let v8 = eng8.run(&x).unwrap().data;
+            let v4 = eng4.run(&x).unwrap().data;
+            assert!(
+                row == v8 || row == v4,
+                "request {seed} returned a foreign output"
+            );
+        }
+    }
+    assert_eq!(total, 16 * 10, "a request was dropped during ramp/swap");
+
+    // post-cutover: everything runs the 4-bit engine
+    let client = server.client();
+    for i in 0..4u64 {
+        let x = image(95_000 + i);
+        assert_eq!(client.infer("m", x.clone()).unwrap(), eng4.run(&x).unwrap().data);
+    }
+    let server = Arc::try_unwrap(server).ok().expect("submitters joined");
+    let report: HashMap<String, ServeMetrics> =
+        server.shutdown().into_iter().collect();
+    assert_eq!(report["m"].completed, 16 * 10 + 4);
+    assert_eq!(report["m"].failed, 0);
+    assert_eq!(report["m"].rejected, 0);
+}
+
+/// Per-arm snapshots decompose the endpoint totals exactly: arm
+/// completed counts sum to the merged metrics, and each arm's replicas
+/// sum to the arm.
+#[test]
+fn arm_snapshots_sum_to_endpoint_totals() {
+    let cm_live = calibrated(86, CalibConfig::default());
+    let cm_canary =
+        calibrated(86, CalibConfig { n_bits: 4, ..Default::default() });
+    let live = cm_live.engine(EngineKind::Int { threads: 1 }).unwrap();
+    let server = ModelServer::new(ServeConfig {
+        replicas: 2,
+        ..Default::default()
+    });
+    server.register("m", live).unwrap();
+    cm_canary
+        .deploy_arm_into(&server, "m", "canary", 0.25, EngineKind::Int { threads: 1 })
+        .unwrap();
+
+    let client = server.client();
+    for i in 0..40u64 {
+        client.infer("m", image(70_000 + i)).unwrap();
+    }
+
+    let snap = server.snapshot("m").unwrap();
+    assert_eq!(snap.len(), 2);
+    assert_eq!(snap[0].arm, DEFAULT_ARM);
+    assert_eq!(snap[1].arm, "canary");
+    assert!((snap[0].weight - 0.75).abs() < 1e-9, "{}", snap[0].weight);
+    assert!((snap[1].weight - 0.25).abs() < 1e-9, "{}", snap[1].weight);
+    let total = server.metrics("m").unwrap();
+    assert_eq!(total.completed, 40);
+    let arm_sum: usize = snap.iter().map(|a| a.metrics.completed).sum();
+    assert_eq!(arm_sum, total.completed, "arm metrics must sum to the endpoint");
+    for a in &snap {
+        assert_eq!(a.replicas.len(), 2, "arm '{}'", a.arm);
+        let replica_sum: usize =
+            a.replicas.iter().map(|r| r.metrics.completed).sum();
+        assert_eq!(replica_sum, a.metrics.completed, "arm '{}'", a.arm);
+        // both arms actually saw traffic at a 75/25 split over 40 reqs
+        assert!(a.metrics.completed > 0, "arm '{}' starved", a.arm);
+    }
+    server.shutdown();
+}
+
 /// Per-model metrics stay isolated and the latency reservoir is bounded.
 #[test]
 fn per_model_metrics_and_bounded_latencies() {

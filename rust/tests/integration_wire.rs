@@ -15,7 +15,7 @@ use dfq::coordinator::serve::Backend;
 use dfq::error::WireFault;
 use dfq::graph::bn_fold::FoldedParams;
 use dfq::prelude::*;
-use dfq::wire::frame::{read_frame, Frame};
+use dfq::wire::frame::{read_frame, Frame, VERSION};
 use dfq::wire::loadgen::{self, LoadgenConfig};
 use dfq::wire::server::WireStats;
 use dfq::wire::StopHandle;
@@ -203,7 +203,7 @@ fn garbage_is_answered_typed_and_never_kills_the_acceptor() {
     // a length far beyond the payload cap must be refused before any
     // allocation happens
     let mut oversized = Vec::from(*b"dfq1");
-    oversized.extend_from_slice(&[1, 0x06, 0, 0]);
+    oversized.extend_from_slice(&[VERSION, 0x06, 0, 0]);
     oversized.extend_from_slice(&u32::MAX.to_le_bytes());
     assert_eq!(fault_of(&oversized), WireFault::Oversized);
 
@@ -314,8 +314,11 @@ fn overload_is_shed_typed_over_the_wire() {
             Ok(Tensor::from_vec(&[b, 1], vec![1.0; b]))
         }
     }
-    let serve_cfg =
-        ServeConfig { max_wait: Duration::from_millis(1), queue_depth: 1 };
+    let serve_cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        queue_depth: 1,
+        replicas: 1,
+    };
     let server = ModelServer::new(serve_cfg);
     server.register("slow", Arc::new(SlowBackend)).unwrap();
     let (addr, _stop, handle) =
@@ -355,40 +358,230 @@ fn overload_is_shed_typed_over_the_wire() {
     assert_eq!(stats.protocol_errors, 0);
 }
 
+/// The v2 metrics frame carries the failure counter and the full
+/// per-arm / per-replica decomposition across the wire, and the sums
+/// survive the round-trip: replicas sum to their arm, arms sum to the
+/// endpoint totals.
+#[test]
+fn metrics_frame_carries_arms_replicas_and_failures() {
+    let path = uds_path("arms");
+    let server = ModelServer::new(ServeConfig {
+        replicas: 2,
+        ..Default::default()
+    });
+    let live = calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+    server.register("tiny", live).unwrap();
+    let canary = calibrated(2).engine(EngineKind::Int { threads: 1 }).unwrap();
+    server.deploy_arm("tiny", "canary", canary, 0.25).unwrap();
+
+    // a backend that reports the wrong number of output rows: every
+    // request must come back as a typed error and land in `failed`
+    struct WrongRows;
+    impl Backend for WrongRows {
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn run_batch(&self, _batch: &Tensor) -> Result<Tensor, DfqError> {
+            Ok(Tensor::from_vec(&[1, 2], vec![0.0; 2]))
+        }
+    }
+    server.register("wrong", Arc::new(WrongRows)).unwrap();
+
+    let (addr, _stop, handle) =
+        start_server(&WireAddr::Uds(path), quick_server_cfg(), server);
+    let mut client =
+        WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+    for seed in 0..20u64 {
+        client.infer("tiny", image(seed)).unwrap();
+    }
+    for seed in 0..3u64 {
+        assert!(client.infer("wrong", image(seed)).is_err());
+    }
+
+    let m = client.metrics("tiny").unwrap();
+    assert_eq!(m.model, "tiny");
+    assert_eq!(m.completed, 20);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.arms.len(), 2);
+    assert_eq!(m.arms[0].arm, DEFAULT_ARM);
+    assert_eq!(m.arms[1].arm, "canary");
+    assert!((m.arms[0].weight - 0.75).abs() < 1e-9, "{}", m.arms[0].weight);
+    assert!((m.arms[1].weight - 0.25).abs() < 1e-9, "{}", m.arms[1].weight);
+    let arm_sum: u64 = m.arms.iter().map(|a| a.completed).sum();
+    assert_eq!(arm_sum, m.completed, "arms must sum to the endpoint");
+    for a in &m.arms {
+        assert_eq!(a.replicas.len(), 2, "arm '{}'", a.arm);
+        let rep_sum: u64 = a.replicas.iter().map(|r| r.completed).sum();
+        assert_eq!(rep_sum, a.completed, "arm '{}'", a.arm);
+        assert_eq!(a.failed, 0, "arm '{}'", a.arm);
+    }
+
+    // the failure counter is visible end-to-end, per arm and replica
+    let w = client.metrics("wrong").unwrap();
+    assert_eq!(w.completed, 0);
+    assert_eq!(w.failed, 3, "{w:?}");
+    let failed_sum: u64 = w.arms.iter().map(|a| a.failed).sum();
+    assert_eq!(failed_sum, 3);
+
+    client.shutdown_server().unwrap();
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.protocol_errors, 0);
+}
+
 /// Materialise the repo-root perf-trajectory documents from a live
-/// loopback run: `BENCH_serve.json` via the open-loop load generator
-/// over UDS, `BENCH_hotpath.json` from micro-measurements — both
-/// schema-validated before they land. (Profile is stamped honestly:
-/// `debug` under `cargo test`, `release` in the release lane.)
+/// loopback run: `BENCH_serve.json` now tells the replica-scaling
+/// story — the same throttled int endpoint driven at 1 and at 2
+/// replicas (2 must complete measurably faster), plus a canary
+/// ramp-to-full + hot-swap under load with zero errors — and
+/// `BENCH_hotpath.json` comes from micro-measurements. Both documents
+/// are schema-validated before they land. (Profile is stamped
+/// honestly: `debug` under `cargo test`, `release` in the release
+/// lane.)
 #[test]
 fn record_bench_seed_trajectory() {
-    // --- serve trajectory ---
-    let path = uds_path("bench");
-    let (addr, _stop, handle) =
-        start_tiny(&WireAddr::Uds(path), quick_server_cfg(), ServeConfig::default());
-    let cfg = LoadgenConfig {
+    use dfq::util::json;
+
+    // an int engine with a fixed per-batch cost, so the endpoint — not
+    // the µs-scale tiny model — is the bottleneck: one replica tops out
+    // near 200 req/s and replica scaling is visible and deterministic
+    struct Throttled(Arc<dyn Engine>);
+    impl Backend for Throttled {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn input_hwc(&self) -> Option<(usize, usize, usize)> {
+            self.0.input_hwc()
+        }
+        fn run_batch(&self, batch: &Tensor) -> Result<Tensor, DfqError> {
+            let out = Engine::run_batch(self.0.as_ref(), batch)?;
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(out)
+        }
+    }
+
+    // --- serve trajectory: 1 replica vs 2 replicas, same endpoint ---
+    let run_at = |replicas: usize| {
+        let server = ModelServer::new(ServeConfig {
+            replicas,
+            ..Default::default()
+        });
+        let engine =
+            calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+        server.register("tiny", Arc::new(Throttled(engine))).unwrap();
+        let path = uds_path(&format!("bench-r{replicas}"));
+        let (addr, _stop, handle) =
+            start_server(&WireAddr::Uds(path), quick_server_cfg(), server);
+        let cfg = LoadgenConfig {
+            addr: addr.clone(),
+            model: "tiny".into(),
+            rps: 400.0,
+            duration: Duration::from_secs(1),
+            connections: 8,
+            burst: false,
+            image_hw: 8,
+            image_c: 3,
+            seed: 6,
+            client: WireClientConfig::default(),
+        };
+        let report = loadgen::run(&cfg).unwrap();
+        let mut c =
+            WireClient::connect(&addr, WireClientConfig::default()).unwrap();
+        c.shutdown_server().unwrap();
+        handle.join().unwrap();
+        (cfg, report)
+    };
+    let (_, r1) = run_at(1);
+    let (cfg2, r2) = run_at(2);
+    assert_eq!(r1.errors, 0, "first error: {:?}", r1.first_error);
+    assert_eq!(r2.errors, 0, "first error: {:?}", r2.first_error);
+    assert!(r1.completed > 0 && r2.completed > 0, "{r1:?}\n{r2:?}");
+    assert!(
+        r2.throughput_rps() > r1.throughput_rps() * 1.2,
+        "2 replicas did not outrun 1: {:.1} vs {:.1} req/s",
+        r2.throughput_rps(),
+        r1.throughput_rps()
+    );
+
+    // --- canary ramp → cutover → swap, all under open-loop load ---
+    let server = ModelServer::new(ServeConfig {
+        replicas: 2,
+        ..Default::default()
+    });
+    let live = calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+    let next = calibrated(1).engine(EngineKind::Int { threads: 1 }).unwrap();
+    server.register("tiny", live).unwrap();
+    server.deploy_arm("tiny", "canary", next.clone(), 0.1).unwrap();
+    let wire =
+        WireServer::bind(&WireAddr::Uds(uds_path("bench-ramp")), quick_server_cfg())
+            .unwrap();
+    let addr = WireAddr::parse(&wire.local_addr()).unwrap();
+    let _stop = wire.stop_handle();
+    let server = Arc::new(server);
+    let handle = {
+        let server = server.clone();
+        std::thread::spawn(move || wire.serve(server))
+    };
+    let control = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            server.ramp("tiny", "canary", 0.5).unwrap();
+            std::thread::sleep(Duration::from_millis(250));
+            server.ramp("tiny", "canary", 1.0).unwrap();
+            std::thread::sleep(Duration::from_millis(150));
+            server.swap("tiny", next).unwrap();
+        })
+    };
+    let ramp_cfg = LoadgenConfig {
         addr: addr.clone(),
         model: "tiny".into(),
-        rps: 120.0,
-        duration: Duration::from_secs(2),
+        rps: 150.0,
+        duration: Duration::from_secs(1),
         connections: 4,
         burst: true,
         image_hw: 8,
         image_c: 3,
-        seed: 6,
+        seed: 7,
         client: WireClientConfig::default(),
     };
-    let report = loadgen::run(&cfg).unwrap();
-    assert!(report.completed > 0, "{report:?}");
-    assert_eq!(report.errors, 0, "first error: {:?}", report.first_error);
-    let doc = report.to_json(&cfg);
-    dfq::report::bench::validate(&doc).unwrap();
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
-    std::fs::write(root.join("BENCH_serve.json"), doc.dump() + "\n").unwrap();
-
+    let ramp = loadgen::run(&ramp_cfg).unwrap();
+    control.join().unwrap();
+    assert_eq!(ramp.errors, 0, "first error: {:?}", ramp.first_error);
+    assert_eq!(ramp.shed, 0, "{ramp:?}");
+    assert!(ramp.completed > 0, "{ramp:?}");
     let mut c = WireClient::connect(&addr, WireClientConfig::default()).unwrap();
     c.shutdown_server().unwrap();
     handle.join().unwrap();
+
+    // the recorded document is the 2-replica run, enriched with the
+    // 1-replica baseline and the ramp/swap scenario alongside
+    let doc = r2.to_json_with(
+        &cfg2,
+        vec![
+            ("scenario", json::s("replica_scaling")),
+            ("replicas", json::num(2.0)),
+            (
+                "baseline_1_replica",
+                json::obj(vec![
+                    ("completed", json::num(r1.completed as f64)),
+                    ("throughput_rps", json::num(r1.throughput_rps())),
+                    ("shed_rate", json::num(r1.shed_rate())),
+                ]),
+            ),
+            (
+                "ramp_swap",
+                json::obj(vec![
+                    ("completed", json::num(ramp.completed as f64)),
+                    ("shed", json::num(ramp.shed as f64)),
+                    ("errors", json::num(ramp.errors as f64)),
+                    ("throughput_rps", json::num(ramp.throughput_rps())),
+                ]),
+            ),
+        ],
+    );
+    dfq::report::bench::validate(&doc).unwrap();
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(root.join("BENCH_serve.json"), doc.dump() + "\n").unwrap();
 
     // --- hotpath trajectory (micro slice of benches/hotpath.rs) ---
     use dfq::report::bench::BenchEntry;
