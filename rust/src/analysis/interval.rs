@@ -1,0 +1,359 @@
+//! Interval abstract interpretation over an integer plan's epilogue
+//! algebra (paper Eq. 3–4).
+//!
+//! Every value flowing through the integer executor is an i32 lane
+//! holding n-bit codes or a 32-bit accumulator. This pass propagates a
+//! conservative `[lo, hi]` interval (in i128, so the analysis itself
+//! cannot wrap) through exactly the operation sequence
+//! [`crate::engine::exec::int_epilogue`] / [`int_gap`] performs —
+//! accumulate, bias add, residual align/add, each rounded shift, each
+//! clamp — and proves, per step:
+//!
+//! * **acc-overflow** — no intermediate (accumulator prefix sums
+//!   included: products always straddle zero, so every prefix lies
+//!   inside the final bound), bias/residual add, left shift, or
+//!   rounding bias `+2^(s-1)` can exceed i32;
+//! * **shift-out-of-width** — every shift magnitude stays below the
+//!   32-bit lane width (`wrapping_shl` masks the amount, `>>` on a
+//!   too-large amount is UB-adjacent: both would be silent garbage);
+//! * **precision-loss** — no output requantization shift collapses the
+//!   entire incoming value range to zero (every bit of signal gone);
+//! * **clamp-range** — every clamp is non-inverted and a subset of its
+//!   target dtype (the n-bit code range the next step assumes).
+//!
+//! Inputs, weights and biases are assumed in-contract: codes produced
+//! by `quantize_val`, which clamps to the signed n-bit range.
+//!
+//! [`int_gap`]: crate::engine::exec::int_gap
+
+use crate::engine::plan::{ExecPlan, GapOp, GemmStep, Op, QuantEpi};
+use crate::error::PlanFaultKind;
+use crate::quant::scheme;
+
+use super::PlanFault;
+
+/// A conservative value interval, wide enough (i128) that the analysis
+/// arithmetic itself can never overflow on any mutated plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Iv {
+    lo: i128,
+    hi: i128,
+}
+
+impl Iv {
+    fn new(lo: i32, hi: i32) -> Iv {
+        Iv { lo: lo as i128, hi: hi as i128 }
+    }
+
+    fn within_i32(self) -> bool {
+        self.lo >= i32::MIN as i128 && self.hi <= i32::MAX as i128
+    }
+
+    /// Peak magnitude (for the report's per-step headroom column).
+    fn peak(self) -> i128 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Elementwise interval sum.
+    fn add(self, other: Iv) -> Iv {
+        Iv { lo: self.lo + other.lo, hi: self.hi + other.hi }
+    }
+
+    /// Four-corner interval product.
+    fn mul(self, other: Iv) -> Iv {
+        let c = [
+            self.lo * other.lo,
+            self.lo * other.hi,
+            self.hi * other.lo,
+            self.hi * other.hi,
+        ];
+        Iv {
+            lo: c.iter().copied().fold(c[0], i128::min),
+            hi: c.iter().copied().fold(c[0], i128::max),
+        }
+    }
+
+    /// Union with the zero point (SAME-padding fill).
+    fn with_zero(self) -> Iv {
+        Iv { lo: self.lo.min(0), hi: self.hi.max(0) }
+    }
+
+    /// The runtime `v.clamp(qmin, qmax)` image of this interval.
+    fn clamped(self, (qmin, qmax): (i32, i32)) -> Iv {
+        Iv {
+            lo: self.lo.clamp(qmin as i128, qmax as i128),
+            hi: self.hi.clamp(qmin as i128, qmax as i128),
+        }
+    }
+}
+
+/// What the interval pass concludes about one step.
+pub(crate) struct Ranged {
+    /// proved output range (`None`: fp plan, faulted step, or a source
+    /// interval unavailable because an earlier step faulted)
+    pub out: Option<(i32, i32)>,
+    /// widest intermediate magnitude reached inside the step
+    pub peak: i128,
+}
+
+/// A fault before step/module attribution.
+type Raw = (PlanFaultKind, String);
+
+/// Interval transfer of `scheme::shift_round(v, s)`, rejecting unsound
+/// shifts. `precision` additionally rejects a right shift that maps the
+/// whole (nonzero) incoming range to zero — only set for the output
+/// requantization shifts, where that means the step's entire signal is
+/// destroyed.
+fn shift_round_iv(iv: Iv, s: i32, what: &str, precision: bool) -> Result<Iv, Raw> {
+    if s.abs() >= 32 {
+        return Err((
+            PlanFaultKind::ShiftOutOfWidth,
+            format!(
+                "{what} = {s}: shift magnitude reaches the 32-bit lane width \
+                 (the runtime masks or drops such shifts silently)"
+            ),
+        ));
+    }
+    if s == 0 {
+        return Ok(iv);
+    }
+    if s > 0 {
+        let half = 1i128 << (s - 1);
+        if iv.hi + half > i32::MAX as i128 {
+            return Err((
+                PlanFaultKind::AccOverflow,
+                format!(
+                    "{what} = {s}: the rounding bias 2^{} pushes the peak \
+                     {} past i32::MAX",
+                    s - 1,
+                    iv.hi
+                ),
+            ));
+        }
+        let out = Iv { lo: (iv.lo + half) >> s, hi: (iv.hi + half) >> s };
+        if precision && (iv.lo != 0 || iv.hi != 0) && out == (Iv { lo: 0, hi: 0 }) {
+            return Err((
+                PlanFaultKind::PrecisionLoss,
+                format!(
+                    "{what} = {s} maps the whole value range [{}, {}] to 0 — \
+                     every bit of signal is destroyed",
+                    iv.lo, iv.hi
+                ),
+            ));
+        }
+        Ok(out)
+    } else {
+        let out = Iv { lo: iv.lo << (-s) as u32, hi: iv.hi << (-s) as u32 };
+        if !out.within_i32() {
+            return Err((
+                PlanFaultKind::AccOverflow,
+                format!(
+                    "{what} = {s}: the left shift reaches [{}, {}], outside i32",
+                    out.lo, out.hi
+                ),
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// Require a clamp range to be non-inverted and a subset of its target
+/// dtype range.
+fn check_clamp(clamp: (i32, i32), target: (i32, i32), what: &str) -> Result<(), Raw> {
+    if clamp.0 > clamp.1 {
+        return Err((
+            PlanFaultKind::ClampRange,
+            format!("{what} [{}, {}] is inverted", clamp.0, clamp.1),
+        ));
+    }
+    if clamp.0 < target.0 || clamp.1 > target.1 {
+        return Err((
+            PlanFaultKind::ClampRange,
+            format!(
+                "{what} [{}, {}] is not a subset of its target dtype range \
+                 [{}, {}]",
+                clamp.0, clamp.1, target.0, target.1
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Require an interval to fit i32 (the accumulator lane).
+fn check_i32(iv: Iv, what: &str) -> Result<(), Raw> {
+    if !iv.within_i32() {
+        return Err((
+            PlanFaultKind::AccOverflow,
+            format!("{what} can reach [{}, {}], outside i32", iv.lo, iv.hi),
+        ));
+    }
+    Ok(())
+}
+
+/// One weighted step's epilogue, mirroring `exec::int_epilogue` op for
+/// op. `src` is the input-code interval (already zero-unioned for SAME
+/// padding), `res` the residual-code interval if the step has one.
+fn gemm_step(
+    g: &GemmStep,
+    q: &QuantEpi,
+    n_bits: u32,
+    src: Iv,
+    res: Option<Iv>,
+    peak: &mut i128,
+) -> Result<Iv, Raw> {
+    let signed = Iv::new(scheme::qrange(n_bits, false).0, scheme::qrange(n_bits, false).1);
+    // K products, each straddling zero (weights span zero), so every
+    // wrapping prefix sum lies inside the full K-term bound
+    let p = src.mul(signed);
+    let acc = Iv { lo: p.lo.min(0) * g.kdim as i128, hi: p.hi.max(0) * g.kdim as i128 };
+    *peak = (*peak).max(acc.peak());
+    check_i32(acc, &format!("the {}-MAC accumulator", g.kdim))?;
+    // bias codes are signed n-bit, pre-aligned by align(b, bias_shift)
+    let b = shift_round_iv(signed, -q.bias_shift, "bias_shift (negated)", false)?;
+    let v = acc.add(b);
+    *peak = (*peak).max(v.peak());
+    check_i32(v, "the accumulator after the bias add")?;
+    if let Some(u) = q.unfused {
+        // unfused ablation: requantize, then align/add the residual in
+        // the code domain, then requantize again
+        let pre = shift_round_iv(v, u.pre_shift, "pre_shift", true)?;
+        check_clamp(
+            (u.pre_qmin, u.pre_qmax),
+            scheme::qrange(n_bits, false),
+            "the intermediate clamp",
+        )?;
+        let mut m = pre.clamped((u.pre_qmin, u.pre_qmax));
+        if let Some(r) = res {
+            let ra = shift_round_iv(r, u.res_align, "res_align", false)?;
+            m = m.add(ra);
+            *peak = (*peak).max(m.peak());
+            check_i32(m, "the intermediate after the residual add")?;
+            let (sq_lo, sq_hi) = scheme::qrange(n_bits, false);
+            check_clamp(
+                (u.mid_qmin, u.mid_qmax),
+                (2 * sq_lo, 2 * sq_hi),
+                "the post-residual clamp",
+            )?;
+            m = m.clamped((u.mid_qmin, u.mid_qmax));
+        }
+        let out = shift_round_iv(m, u.final_shift, "final_shift", true)?;
+        check_clamp((q.qmin, q.qmax), scheme::qrange(n_bits, g.relu), "the output clamp")?;
+        return Ok(out.clamped((q.qmin, q.qmax)));
+    }
+    // fused epilogue: residual aligned into the accumulator domain and
+    // added before the single output shift
+    let v = match res {
+        Some(r) => {
+            let ra = shift_round_iv(r, -q.res_shift, "res_shift (negated)", false)?;
+            let v = v.add(ra);
+            *peak = (*peak).max(v.peak());
+            check_i32(v, "the accumulator after the residual add")?;
+            v
+        }
+        None => v,
+    };
+    let out = shift_round_iv(v, q.out_shift, "out_shift", true)?;
+    check_clamp((q.qmin, q.qmax), scheme::qrange(n_bits, g.relu), "the output clamp")?;
+    Ok(out.clamped((q.qmin, q.qmax)))
+}
+
+/// One pooling step, mirroring `exec::int_gap`: a prefix-safe window
+/// sum, the exact power-of-two mean shift, and the code clamp.
+fn gap_step(g: &GapOp, n_bits: u32, src: Iv, peak: &mut i128) -> Result<Iv, Raw> {
+    let hw = (g.h * g.w) as i128;
+    let sum = Iv { lo: src.lo.min(0) * hw, hi: src.hi.max(0) * hw };
+    *peak = (*peak).max(sum.peak());
+    check_i32(sum, &format!("the {hw}-element pooling sum"))?;
+    let shifted = shift_round_iv(sum, g.shift, "the pooling shift", false)?;
+    let clamp = g.clamp.ok_or((
+        PlanFaultKind::ClampRange,
+        "integer plan step carries no pooling clamp".to_string(),
+    ))?;
+    // the source may be signed or unsigned codes; the dtype envelope
+    // spans both
+    let signed = scheme::qrange(n_bits, false);
+    let unsigned = scheme::qrange(n_bits, true);
+    check_clamp(clamp, (signed.0, unsigned.1), "the pooling clamp")?;
+    Ok(shifted.clamped(clamp))
+}
+
+/// Propagate intervals through every step of an integer plan. For an fp
+/// plan every step reports `None` with no faults (there is no integer
+/// algebra to check). Slot indices are bounds-guarded locally — the
+/// slot-safety pass owns reporting those faults.
+pub(crate) fn check(plan: &ExecPlan) -> (Vec<Ranged>, Vec<PlanFault>) {
+    let Some(pq) = plan.quant else {
+        let ranges =
+            plan.steps.iter().map(|_| Ranged { out: None, peak: 0 }).collect();
+        return (ranges, Vec::new());
+    };
+    let n_bits = pq.n_bits;
+    let signed = scheme::qrange(n_bits, false);
+    let mut vals: Vec<Option<Iv>> = vec![None; plan.slot_count];
+    if plan.input_slot < plan.slot_count {
+        // input codes come from quantize_val, clamped to the signed range
+        vals[plan.input_slot] = Some(Iv::new(signed.0, signed.1));
+    }
+    let mut ranges = Vec::with_capacity(plan.steps.len());
+    let mut faults = Vec::new();
+    for (i, step) in plan.steps.iter().enumerate() {
+        let mut peak = 0i128;
+        let src = vals.get(step.src).copied().flatten();
+        let res = step.res.map(|s| vals.get(s).copied().flatten());
+        let result: Option<Result<Iv, Raw>> = match (&step.op, src) {
+            (_, None) => None, // unavailable source: slot pass reports it
+            (Op::Gap(g), Some(s)) => Some(gap_step(g, n_bits, s, &mut peak)),
+            (Op::Conv(c), Some(s)) => match &c.g.q {
+                // SAME padding feeds zeros into the window
+                Some(q) => Some(gemm_step(
+                    &c.g,
+                    q,
+                    n_bits,
+                    s.with_zero(),
+                    res.flatten(),
+                    &mut peak,
+                )),
+                None => Some(Err((
+                    PlanFaultKind::ClampRange,
+                    "integer plan step carries no epilogue constants".to_string(),
+                ))),
+            },
+            (Op::Dense(d), Some(s)) => match &d.g.q {
+                Some(q) => {
+                    Some(gemm_step(&d.g, q, n_bits, s, res.flatten(), &mut peak))
+                }
+                None => Some(Err((
+                    PlanFaultKind::ClampRange,
+                    "integer plan step carries no epilogue constants".to_string(),
+                ))),
+            },
+        };
+        // a step whose residual slot is unavailable can't be analysed
+        // either (its source was, but the epilogue needs both)
+        let result = match (result, res) {
+            (Some(Ok(_)), Some(None)) => None,
+            (r, _) => r,
+        };
+        let out = match result {
+            Some(Ok(iv)) => {
+                debug_assert!(iv.within_i32());
+                Some((iv.lo as i32, iv.hi as i32))
+            }
+            Some(Err((kind, message))) => {
+                faults.push(PlanFault {
+                    kind,
+                    step: i,
+                    module: step.name.clone(),
+                    message,
+                });
+                None
+            }
+            None => None,
+        };
+        if step.dst < plan.slot_count {
+            vals[step.dst] = out.map(|(lo, hi)| Iv::new(lo, hi));
+        }
+        ranges.push(Ranged { out, peak });
+    }
+    (ranges, faults)
+}

@@ -1,0 +1,510 @@
+//! The zero-dependency **hot-path contract linter** (`dfq lint`).
+//!
+//! ROADMAP's "Contracts to preserve" promises that warm serving paths
+//! never panic and never allocate, and that narrowing casts are always
+//! checked. Comments cannot enforce that across refactors — this pass
+//! can. It scans a fixed table of hot-path modules, isolates the body of
+//! each named warm function (comments, strings and `#[cfg(test)]`
+//! modules blanked first, so only live code is scanned), and fails on:
+//!
+//! * **panic** — `.unwrap()` / `.expect(` / `panic!` / `unreachable!` /
+//!   `todo!` / `unimplemented!`. Debug `assert!`s are allowed: they
+//!   vanish in release and guard contracts, not data.
+//! * **narrowing-cast** — unchecked `as` casts to `i8`/`u8`/`i16`/`u16`
+//!   (silent truncation; use `try_from`). Widening casts are fine.
+//! * **alloc** — heap-allocation tokens (`vec!`, `Vec::new`,
+//!   `with_capacity`, `Box::new`, `format!`, `.collect(`, `.to_vec()`,
+//!   `.to_string()`, `.to_owned()`, `String::new`, `String::from`) in
+//!   **warm** functions only. Amortized in-place growth (`.resize(`,
+//!   `.resize_with(`, `.truncate(`) is the sanctioned scratch idiom and
+//!   is allowed.
+//!
+//! Functions listed as *warm* get all three rules; *guarded* functions
+//! (connection setup, frame encode — cold or allocation-by-design) get
+//! the panic and narrowing rules only. A listed function that no longer
+//! exists is itself a finding (`missing-fn`): renames must update the
+//! contract table, not silently escape it.
+//!
+//! Token scanning (not full parsing) keeps this zero-dependency and
+//! fast; the token sets are chosen so the sanctioned idioms
+//! (`unwrap_or_else`, `resize`, assertions) never collide with the
+//! forbidden ones.
+
+use std::path::Path;
+
+use crate::error::DfqError;
+
+/// One hot-path contract violation (or a missing listed function).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LintFinding {
+    /// repo-relative path of the offending file
+    pub file: String,
+    /// 1-indexed source line (0 for file-level findings)
+    pub line: usize,
+    /// rule id: `panic` | `narrowing-cast` | `alloc` | `missing-fn`
+    pub rule: &'static str,
+    /// the offending source line, trimmed
+    pub snippet: String,
+}
+
+impl std::fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.snippet)
+    }
+}
+
+/// One hot-path module and its contract-bound functions.
+struct Target {
+    file: &'static str,
+    /// full contract: no panics, no narrowing, no allocation
+    warm: &'static [&'static str],
+    /// panic + narrowing only (setup/encode paths that allocate by design)
+    guarded: &'static [&'static str],
+}
+
+/// The hot-path contract table. Every entry is a function some warm
+/// serving path runs per batch (warm) or per connection/frame (guarded).
+const TARGETS: &[Target] = &[
+    Target {
+        file: "rust/src/engine/exec.rs",
+        warm: &["execute", "int_epilogue", "int_gap", "sum_pool"],
+        guarded: &[],
+    },
+    Target {
+        file: "rust/src/tensor/ops_int.rs",
+        warm: &["gemm_i32_into", "gemm_serial_into", "gemm_i32_rb", "conv2d_acc_into"],
+        guarded: &[],
+    },
+    Target {
+        file: "rust/src/coordinator/pool.rs",
+        warm: &["worker_loop", "count_down", "is_done", "wait_timeout"],
+        guarded: &["run"],
+    },
+    Target {
+        file: "rust/src/wire/client.rs",
+        warm: &[],
+        guarded: &["ensure_stream", "try_call", "call"],
+    },
+    Target {
+        file: "rust/src/wire/frame.rs",
+        warm: &[],
+        guarded: &["encode", "parse_header", "put_str16", "put_str32", "put_tensor"],
+    },
+];
+
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+const ALLOC_TOKENS: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    "with_capacity",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "format!",
+    ".collect(",
+    ".to_vec()",
+    ".to_string()",
+    ".to_owned()",
+];
+
+const NARROW_TYPES: &[&str] = &["i8", "u8", "i16", "u16"];
+
+/// Lint every hot-path module under `root` (the repository root).
+/// Returns all findings — empty means the contracts hold.
+pub fn lint_root(root: &Path) -> Result<Vec<LintFinding>, DfqError> {
+    let mut findings = Vec::new();
+    for t in TARGETS {
+        let path = root.join(t.file);
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| DfqError::io(format!("lint: read {}", path.display()), &e))?;
+        lint_source(t.file, &src, t.warm, t.guarded, &mut findings);
+    }
+    Ok(findings)
+}
+
+/// Lint one file's source. Public within the crate so tests can feed
+/// synthetic sources.
+pub(crate) fn lint_source(
+    file: &str,
+    src: &str,
+    warm: &[&str],
+    guarded: &[&str],
+    out: &mut Vec<LintFinding>,
+) {
+    let mut san = sanitize(src);
+    blank_test_mods(&mut san);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    for (names, full) in [(warm, true), (guarded, false)] {
+        for name in names {
+            match fn_body(&san, name) {
+                Some((start, end)) => {
+                    scan_body(file, &san, &orig_lines, start, end, full, out)
+                }
+                None => out.push(LintFinding {
+                    file: file.to_string(),
+                    line: 0,
+                    rule: "missing-fn",
+                    snippet: format!(
+                        "listed hot-path function `{name}` not found — \
+                         update the contract table in analysis/lint.rs"
+                    ),
+                }),
+            }
+        }
+    }
+}
+
+/// Replace comment, string and char-literal contents (and any non-ASCII
+/// character) with spaces, preserving newlines — so token scanning and
+/// brace matching only ever see live ASCII code with intact line
+/// structure.
+fn sanitize(src: &str) -> String {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = vec![' '; n];
+    let mut i = 0;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            out[i] = '\n';
+            i += 1;
+        } else if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    out[i] = '\n';
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if let Some(next) = raw_string_end(&cs, i) {
+            while i < next {
+                if cs[i] == '\n' {
+                    out[i] = '\n';
+                }
+                i += 1;
+            }
+        } else if c == '"' {
+            i += 1;
+            while i < n && cs[i] != '"' {
+                if cs[i] == '\n' {
+                    out[i] = '\n';
+                }
+                if cs[i] == '\\' {
+                    i += 1; // skip the escaped char (may be a quote)
+                }
+                i += 1;
+            }
+            i += 1; // closing quote
+        } else if c == '\'' {
+            // char literal vs lifetime: a literal is 'x' or an escape
+            if i + 1 < n && cs[i + 1] == '\\' {
+                i += 2;
+                while i < n && cs[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if i + 2 < n && cs[i + 2] == '\'' {
+                i += 3;
+            } else {
+                i += 1; // lifetime: keep scanning normally
+            }
+        } else {
+            // copy one live char through (non-ASCII stays blanked)
+            if c.is_ascii() {
+                out[i] = c;
+            }
+            i += 1;
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// If position `i` starts a raw (or raw-byte) string literal, return the
+/// position just past its closing delimiter.
+fn raw_string_end(cs: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if cs.get(j) != Some(&'r') {
+        return None;
+    }
+    if i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_') {
+        return None; // identifier ending in 'r', not a literal prefix
+    }
+    j += 1;
+    let mut hashes = 0;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cs.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    // find `"` followed by `hashes` hashes
+    while j < cs.len() {
+        if cs[j] == '"' && cs[j + 1..].iter().take_while(|&&c| c == '#').count() >= hashes {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(cs.len())
+}
+
+/// Blank every `#[cfg(test)]`-attributed block in sanitized source (test
+/// modules legitimately use `unwrap` and allocation).
+fn blank_test_mods(san: &mut String) {
+    let mut bytes: Vec<u8> = san.clone().into_bytes(); // ASCII by construction
+    let marker = b"#[cfg(test)]";
+    let mut from = 0;
+    while let Some(pos) = find_bytes(&bytes, marker, from) {
+        // the attributed item's block; a brace-less item (`use`, type
+        // alias) ends at `;` first and is left alone
+        let Some(open) = bytes[pos..]
+            .iter()
+            .position(|&b| b == b'{' || b == b';')
+            .map(|o| pos + o)
+        else {
+            break;
+        };
+        if bytes[open] == b';' {
+            from = open;
+            continue;
+        }
+        let close = match_brace(&bytes, open);
+        for b in bytes.iter_mut().take(close).skip(pos) {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+        from = close;
+    }
+    // safe: only ASCII spaces written over ASCII text
+    *san = String::from_utf8(bytes).unwrap_or_else(|_| san.clone());
+}
+
+fn find_bytes(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from >= hay.len() || needle.is_empty() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Position just past the brace matching the one at `open`.
+fn match_brace(bytes: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    bytes.len()
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Find the byte range `(body_open, body_close)` of `fn name` in
+/// sanitized source, `None` if no such function exists.
+fn fn_body(san: &str, name: &str) -> Option<(usize, usize)> {
+    let bytes = san.as_bytes();
+    let needle = format!("fn {name}");
+    let mut from = 0;
+    while let Some(pos) = find_bytes(bytes, needle.as_bytes(), from) {
+        from = pos + 1;
+        // ident boundaries on both sides ("fn run" must not match
+        // "fn run_loop", nor "burn fn" style prefixes)
+        if pos > 0 && is_ident(bytes[pos - 1]) {
+            continue;
+        }
+        let after = pos + needle.len();
+        if after < bytes.len() && is_ident(bytes[after]) {
+            continue;
+        }
+        let open = bytes[after..].iter().position(|&b| b == b'{')? + after;
+        let close = match_brace(bytes, open);
+        return Some((open + 1, close.saturating_sub(1)));
+    }
+    None
+}
+
+/// Scan one function body for forbidden tokens; `full` adds the
+/// allocation rule on top of panic + narrowing.
+fn scan_body(
+    file: &str,
+    san: &str,
+    orig_lines: &[&str],
+    start: usize,
+    end: usize,
+    full: bool,
+    out: &mut Vec<LintFinding>,
+) {
+    let body = &san[start..end.max(start)];
+    let first_line = san[..start].bytes().filter(|&b| b == b'\n').count();
+    for (off, line) in body.lines().enumerate() {
+        let lineno = first_line + off + 1;
+        let mut flag = |rule: &'static str| {
+            out.push(LintFinding {
+                file: file.to_string(),
+                line: lineno,
+                rule,
+                snippet: orig_lines
+                    .get(lineno - 1)
+                    .map(|l| l.trim().to_string())
+                    .unwrap_or_default(),
+            });
+        };
+        if PANIC_TOKENS.iter().any(|t| line.contains(t)) {
+            flag("panic");
+        }
+        if has_narrowing_cast(line) {
+            flag("narrowing-cast");
+        }
+        if full && ALLOC_TOKENS.iter().any(|t| line.contains(t)) {
+            flag("alloc");
+        }
+    }
+}
+
+/// `… as i8/u8/i16/u16` with an ident boundary after the type name.
+fn has_narrowing_cast(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = find_bytes(bytes, b" as ", from) {
+        from = pos + 1;
+        let rest = &line[pos + 4..];
+        let ty: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if NARROW_TYPES.contains(&ty.as_str()) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str, warm: &[&str], guarded: &[&str]) -> Vec<LintFinding> {
+        let mut out = Vec::new();
+        lint_source("t.rs", src, warm, guarded, &mut out);
+        out
+    }
+
+    #[test]
+    fn panic_tokens_flagged_in_warm_and_guarded() {
+        let src = "fn hot(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let f = run(src, &["hot"], &[]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "panic");
+        assert_eq!(f[0].line, 1);
+        let f = run(src, &[], &["hot"]);
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn alloc_only_flagged_in_warm() {
+        let src = "fn hot() -> Vec<u32> { vec![1, 2] }\n";
+        assert_eq!(run(src, &["hot"], &[]).len(), 1);
+        assert!(run(src, &[], &["hot"]).is_empty());
+    }
+
+    #[test]
+    fn narrowing_cast_flagged_widening_ignored() {
+        let src = "fn hot(x: usize) -> u16 { x as u16 }\n";
+        let f = run(src, &["hot"], &[]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "narrowing-cast");
+        let ok = "fn hot(x: u8) -> u64 { x as u64 }\n";
+        assert!(run(ok, &["hot"], &[]).is_empty());
+    }
+
+    #[test]
+    fn sanctioned_idioms_do_not_trip() {
+        let src = "fn hot(m: &Mutex<u32>, v: &mut Vec<i32>) -> u32 {\n\
+                   let g = m.lock().unwrap_or_else(PoisonError::into_inner);\n\
+                   v.resize(8, 0);\n\
+                   v.truncate(4);\n\
+                   assert_eq!(v.len(), 4);\n\
+                   *g\n\
+                   }\n";
+        assert!(run(src, &["hot"], &[]).is_empty(), "{:?}", run(src, &["hot"], &[]));
+    }
+
+    #[test]
+    fn comments_strings_and_test_mods_ignored() {
+        let src = "fn hot() -> &'static str {\n\
+                   // a comment may say panic! or .unwrap()\n\
+                   /* vec![] in a block comment */\n\
+                   \"panic! inside a string\"\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn helper() { Vec::<u32>::new().pop().unwrap(); }\n\
+                   }\n";
+        assert!(run(src, &["hot"], &[]).is_empty(), "{:?}", run(src, &["hot"], &[]));
+    }
+
+    #[test]
+    fn missing_listed_fn_is_a_finding() {
+        let f = run("fn other() {}\n", &["gone"], &[]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "missing-fn");
+        assert!(f[0].snippet.contains("gone"));
+    }
+
+    #[test]
+    fn fn_name_matching_is_ident_exact() {
+        // `run` listed; only `run_loop` exists — must be missing-fn, not
+        // a scan of the wrong body
+        let src = "fn run_loop() { loop { panic!(\"x\") } }\n";
+        let f = run(src, &["run"], &[]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "missing-fn");
+    }
+
+    #[test]
+    fn repo_hot_paths_lint_clean() {
+        // the real contract: the shipped tree has zero findings. Walk up
+        // from the test cwd to find the repo root (target dir layouts
+        // differ between cargo test and CI).
+        let mut root = std::env::current_dir().expect("cwd");
+        while !root.join("rust/src/engine/exec.rs").exists() {
+            assert!(root.pop(), "repo root not found from test cwd");
+        }
+        let findings = lint_root(&root).expect("lint_root");
+        assert!(findings.is_empty(), "hot-path contract violations:\n{findings:#?}");
+    }
+}

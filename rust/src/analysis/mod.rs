@@ -1,0 +1,462 @@
+//! **Static plan verification** — machine-checked proofs over the
+//! compiled [`ExecPlan`] IR, plus the zero-dependency hot-path source
+//! linter ([`lint`]).
+//!
+//! The paper's integer arithmetic (Eq. 3–4) is a chain of i8×i8→i32
+//! accumulation, bit shifts and clamps in which a single mis-sized
+//! constant is a *silent wrong answer*, not a crash. Because every
+//! constant is folded into the plan at compile time, the plan contains
+//! everything needed to prove the arithmetic sound **before a batch
+//! ever runs**:
+//!
+//! * [`interval`](self) — interval abstract interpretation over each
+//!   step's epilogue, proving no intermediate exceeds i32, every shift
+//!   is in-width and signal-preserving, and every clamp is a subset of
+//!   its target dtype;
+//! * slot safety — liveness re-derived from the schedule, proving no
+//!   overlapping live ranges, no read-before-write, no dead or leaked
+//!   values.
+//!
+//! [`verify`] runs both passes and returns a [`VerifyReport`]: a
+//! per-step [`StepCheck`] (the proved output range feeds the executor's
+//! debug-build runtime cross-check and `dfq inspect --plan`) and a list
+//! of typed, step-addressed [`PlanFault`]s. `ExecPlan::compile` calls
+//! it in debug builds and tests, so every plan the test suite touches
+//! is verified; release builds skip it (compile-time only — the hot
+//! path never pays).
+//!
+//! `dfq verify` exposes the verifier on the CLI; `dfq lint` runs the
+//! [`lint`] pass that enforces the ROADMAP hot-path contracts
+//! (no panics, no unchecked narrowing, no warm-path allocation) on the
+//! source itself.
+
+pub mod lint;
+
+mod interval;
+mod slots;
+
+use crate::engine::plan::ExecPlan;
+use crate::error::{DfqError, PlanFaultKind};
+
+/// One violated plan contract, addressed to the offending step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanFault {
+    /// the contract class that failed
+    pub kind: PlanFaultKind,
+    /// index of the offending plan step
+    pub step: usize,
+    /// name of the module the step lowers (`<input>`/`<output>` for
+    /// plan-boundary faults)
+    pub module: String,
+    /// the derivation: which constant, which bound, which values
+    pub message: String,
+}
+
+impl std::fmt::Display for PlanFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: step {} ({}): {}",
+            self.kind.label(),
+            self.step,
+            self.module,
+            self.message
+        )
+    }
+}
+
+impl From<PlanFault> for DfqError {
+    fn from(fault: PlanFault) -> DfqError {
+        DfqError::verify(fault.kind, fault.step, fault.module, fault.message)
+    }
+}
+
+/// What the verifier proved about one plan step.
+#[derive(Clone, Debug)]
+pub struct StepCheck {
+    /// step index
+    pub step: usize,
+    /// module name the step lowers
+    pub module: String,
+    /// proved output-value range — `None` for fp plans (no integer
+    /// algebra to bound) and for steps downstream of a fault
+    pub out_range: Option<(i32, i32)>,
+    /// widest intermediate magnitude the step can reach (accumulator
+    /// peak — compare against `i32::MAX` for headroom)
+    pub peak: i128,
+}
+
+/// The verifier's full result for one compiled plan.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    /// per-step conclusions, in schedule order
+    pub steps: Vec<StepCheck>,
+    /// every violated contract, in schedule order (empty = proved sound)
+    pub faults: Vec<PlanFault>,
+    /// the plan's buffer-slot count (context for slot faults)
+    pub slot_count: usize,
+    /// whether the plan carries integer constants (fp plans get the
+    /// slot-safety pass only)
+    pub quantized: bool,
+}
+
+impl VerifyReport {
+    /// `true` when every contract holds.
+    pub fn ok(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Human-readable report (the `dfq verify` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let domain = if self.quantized { "integer" } else { "fp" };
+        s.push_str(&format!(
+            "{} steps over {} buffer slots ({domain} plan)\n",
+            self.steps.len(),
+            self.slot_count
+        ));
+        for c in &self.steps {
+            let range = match c.out_range {
+                Some((lo, hi)) => format!("[{lo}, {hi}]"),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "  {:>3}  {:<16} range {:<16} peak |{}|\n",
+                c.step, c.module, range, c.peak
+            ));
+        }
+        if self.ok() {
+            s.push_str("verified: no faults\n");
+        } else {
+            for f in &self.faults {
+                s.push_str(&format!("FAULT {f}\n"));
+            }
+        }
+        s
+    }
+
+    /// Machine-readable report (the `dfq verify --json` output).
+    pub fn json(&self) -> String {
+        let steps: Vec<String> = self
+            .steps
+            .iter()
+            .map(|c| {
+                let range = match c.out_range {
+                    Some((lo, hi)) => format!("[{lo},{hi}]"),
+                    None => "null".to_string(),
+                };
+                format!(
+                    "{{\"step\":{},\"module\":\"{}\",\"range\":{},\"peak\":{}}}",
+                    c.step,
+                    json_escape(&c.module),
+                    range,
+                    c.peak
+                )
+            })
+            .collect();
+        let faults: Vec<String> = self
+            .faults
+            .iter()
+            .map(|f| {
+                format!(
+                    "{{\"kind\":\"{}\",\"step\":{},\"module\":\"{}\",\"message\":\"{}\"}}",
+                    f.kind.label(),
+                    f.step,
+                    json_escape(&f.module),
+                    json_escape(&f.message)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"ok\":{},\"quantized\":{},\"slots\":{},\"steps\":[{}],\"faults\":[{}]}}",
+            self.ok(),
+            self.quantized,
+            self.slot_count,
+            steps.join(","),
+            faults.join(",")
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Statically verify a compiled plan: run the interval pass over the
+/// integer epilogue algebra and the slot-safety pass over the schedule.
+/// Both always run; faults accumulate (one broken constant does not
+/// hide an unrelated liveness bug). Never panics, whatever the plan
+/// contains — corrupt plans are exactly its input domain.
+pub fn verify(plan: &ExecPlan) -> VerifyReport {
+    let (ranges, mut faults) = interval::check(plan);
+    faults.extend(slots::check(plan));
+    faults.sort_by_key(|f| f.step);
+    let steps = plan
+        .steps
+        .iter()
+        .zip(ranges)
+        .enumerate()
+        .map(|(i, (s, r))| StepCheck {
+            step: i,
+            module: s.name.clone(),
+            out_range: r.out,
+            peak: r.peak,
+        })
+        .collect();
+    VerifyReport {
+        steps,
+        faults,
+        slot_count: plan.slot_count,
+        quantized: plan.quant.is_some(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    use super::*;
+    use crate::engine::plan::{Op, QuantEpi};
+    use crate::graph::{Graph, ModuleKind, UnifiedModule};
+    use crate::quant::params::{ModuleShifts, QuantSpec};
+
+    fn resnet_like() -> Graph {
+        Graph {
+            name: "t".into(),
+            input_hwc: (4, 4, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "c0".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "c1".into(),
+                    kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 2, cout: 2, stride: 1 },
+                    src: "c0".into(),
+                    res: Some("c0".into()),
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "c1".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 2, cout: 3 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        }
+    }
+
+    fn spec() -> QuantSpec {
+        let mut s = QuantSpec::new(8);
+        s.input_frac = 5;
+        for name in ["c0", "c1", "fc"] {
+            s.modules.insert(name.into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        }
+        s
+    }
+
+    fn int_plan() -> ExecPlan {
+        let g = resnet_like();
+        ExecPlan::compile(&g, &spec(), g.input_hwc).unwrap()
+    }
+
+    fn epi_mut(plan: &mut ExecPlan, i: usize) -> &mut QuantEpi {
+        match &mut plan.steps[i].op {
+            Op::Conv(c) => c.g.q.as_mut().unwrap(),
+            Op::Dense(d) => d.g.q.as_mut().unwrap(),
+            Op::Gap(_) => panic!("step {i} is a pooling step"),
+        }
+    }
+
+    fn has(report: &VerifyReport, kind: PlanFaultKind, step: usize) -> bool {
+        report.faults.iter().any(|f| f.kind == kind && f.step == step)
+    }
+
+    #[test]
+    fn clean_plans_verify_green() {
+        let g = resnet_like();
+        let int = int_plan();
+        let r = verify(&int);
+        assert!(r.ok(), "int plan faults: {:?}", r.faults);
+        assert!(r.quantized);
+        // every int step gets a proved range
+        for c in &r.steps {
+            assert!(c.out_range.is_some(), "step {} has no range", c.step);
+        }
+        // c0: fused relu → the proved range is exactly the unsigned clamp
+        assert_eq!(r.steps[0].out_range, Some((0, 255)));
+        assert!(r.steps[0].peak > 0);
+
+        let pre: HashMap<String, i32> =
+            [("c0", 3), ("c1", 3), ("fc", 3)].iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        let unf = ExecPlan::compile_unfused(&g, &spec(), &pre, g.input_hwc).unwrap();
+        let r = verify(&unf);
+        assert!(r.ok(), "unfused plan faults: {:?}", r.faults);
+
+        let fp = ExecPlan::compile_fp(&g, g.input_hwc).unwrap();
+        let r = verify(&fp);
+        assert!(r.ok(), "fp plan faults: {:?}", r.faults);
+        assert!(!r.quantized);
+        assert!(r.steps.iter().all(|c| c.out_range.is_none()));
+    }
+
+    #[test]
+    fn unused_module_self_release_is_not_a_fault() {
+        // the graph layer permits modules nothing consumes; the compiler
+        // self-discards their value at the producing step — not dead code
+        // the verifier should flag
+        let mut g = resnet_like();
+        g.modules.push(UnifiedModule {
+            name: "unused".into(),
+            kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 2, cout: 2, stride: 1 },
+            src: "c1".into(),
+            res: None,
+            relu: false,
+        });
+        let mut s = spec();
+        s.modules.insert("unused".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        let plan = ExecPlan::compile(&g, &s, g.input_hwc).unwrap();
+        let r = verify(&plan);
+        assert!(r.ok(), "faults: {:?}", r.faults);
+    }
+
+    #[test]
+    fn oversized_shift_is_shift_out_of_width() {
+        let mut plan = int_plan();
+        epi_mut(&mut plan, 0).out_shift = 40;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::ShiftOutOfWidth, 0), "{:?}", r.faults);
+        let f = &r.faults[0];
+        assert_eq!(f.module, "c0");
+        assert!(f.message.contains("out_shift"), "{f}");
+        // the typed error carries the same address
+        let err: DfqError = f.clone().into();
+        assert!(err.to_string().starts_with("verify/shift-out-of-width"), "{err}");
+        assert!(err.to_string().contains("step 0 (c0)"), "{err}");
+    }
+
+    #[test]
+    fn clamp_outside_dtype_is_clamp_range() {
+        let mut plan = int_plan();
+        epi_mut(&mut plan, 0).qmax = 1 << 20;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::ClampRange, 0), "{:?}", r.faults);
+        assert!(r.faults[0].message.contains("not a subset"), "{}", r.faults[0]);
+    }
+
+    #[test]
+    fn overflowing_accumulator_is_acc_overflow() {
+        let mut plan = int_plan();
+        let Op::Conv(c) = &mut plan.steps[0].op else { panic!("c0 is conv") };
+        c.g.kdim = 1 << 22; // 4M MACs of i8×i8 products overflow i32
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::AccOverflow, 0), "{:?}", r.faults);
+        assert!(r.faults[0].message.contains("accumulator"), "{}", r.faults[0]);
+    }
+
+    #[test]
+    fn signal_destroying_shift_is_precision_loss() {
+        let mut plan = int_plan();
+        // in-width, no overflow — but maps the whole ±3e5 accumulator
+        // range to exactly 0
+        epi_mut(&mut plan, 0).out_shift = 31;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::PrecisionLoss, 0), "{:?}", r.faults);
+    }
+
+    #[test]
+    fn overlapping_live_ranges_are_slot_overlap() {
+        let mut plan = int_plan();
+        plan.steps[1].dst = plan.steps[1].src;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::SlotOverlap, 1), "{:?}", r.faults);
+        let f = r.faults.iter().find(|f| f.kind == PlanFaultKind::SlotOverlap).unwrap();
+        assert_eq!(f.module, "c1");
+    }
+
+    #[test]
+    fn read_of_unwritten_slot_is_read_before_write() {
+        let mut plan = int_plan();
+        plan.slot_count += 1;
+        plan.steps[0].src = plan.slot_count - 1;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::ReadBeforeWrite, 0), "{:?}", r.faults);
+    }
+
+    #[test]
+    fn leaked_value_is_dead_step() {
+        let mut plan = int_plan();
+        // append a step whose value is never released nor the output
+        let mut extra = plan.steps.last().unwrap().clone();
+        extra.src = plan.out_slot;
+        extra.res = None;
+        extra.release.clear();
+        extra.dst = plan.slot_count;
+        plan.slot_count += 1;
+        plan.steps.push(extra);
+        let at = plan.steps.len() - 1;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::DeadStep, at), "{:?}", r.faults);
+        let f = r.faults.iter().find(|f| f.kind == PlanFaultKind::DeadStep).unwrap();
+        assert!(f.message.contains("never released"), "{f}");
+    }
+
+    #[test]
+    fn released_empty_slot_is_dead_step() {
+        let mut plan = int_plan();
+        plan.slot_count += 1;
+        plan.steps[0].release.push(plan.slot_count - 1);
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::DeadStep, 0), "{:?}", r.faults);
+        assert!(r.faults[0].message.contains("no live value"), "{}", r.faults[0]);
+    }
+
+    #[test]
+    fn out_of_range_slot_is_slot_bounds() {
+        let mut plan = int_plan();
+        plan.steps[0].dst = 99;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::SlotBounds, 0), "{:?}", r.faults);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let r = verify(&int_plan());
+        let text = r.render();
+        for name in ["c0", "c1", "gap", "fc"] {
+            assert!(text.contains(name), "{text}");
+        }
+        assert!(text.contains("verified: no faults"), "{text}");
+        let json = r.json();
+        assert!(json.contains("\"ok\":true"), "{json}");
+        assert!(json.contains("\"module\":\"c0\""), "{json}");
+
+        let mut bad = int_plan();
+        epi_mut(&mut bad, 1).out_shift = 40;
+        let r = verify(&bad);
+        assert!(r.render().contains("FAULT shift-out-of-width"), "{}", r.render());
+        assert!(r.json().contains("\"ok\":false"), "{}", r.json());
+        assert!(r.json().contains("\"kind\":\"shift-out-of-width\""), "{}", r.json());
+    }
+}

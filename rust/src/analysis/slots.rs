@@ -1,0 +1,195 @@
+//! Buffer-slot safety: re-derive liveness from the step schedule and
+//! check the compiler's slot assignment against it.
+//!
+//! The executor ([`crate::engine::exec`]) trusts the plan completely —
+//! it indexes slots without checking that a read slot holds a live
+//! value or that a write does not clobber one. This pass replays the
+//! schedule over an abstract slot state (written / producing step /
+//! consumed) and reports every violation as a typed
+//! [`PlanFault`](super::PlanFault):
+//!
+//! * **slot-bounds** — a step (or the plan input/output) addresses a
+//!   slot at or beyond `slot_count`;
+//! * **read-before-write** — a `src`/`res` read of a slot nothing has
+//!   written, or a plan output slot left unwritten;
+//! * **slot-overlap** — a `dst` write into a slot still holding a live
+//!   value (two liveness intervals assigned to one slot);
+//! * **dead-step** — a released slot holding no value, a computed value
+//!   released without ever being read, or a value still live when the
+//!   plan ends (the release schedule leaked it). A value released by
+//!   the very step that produced it is *not* a fault: the graph layer
+//!   permits unused modules, and the compiler self-discards their
+//!   outputs at the producing step.
+
+use crate::engine::plan::ExecPlan;
+use crate::error::PlanFaultKind;
+
+use super::PlanFault;
+
+/// Sentinel "producing step" for the plan input, which no step writes.
+const INPUT: usize = usize::MAX;
+
+/// Replay the schedule; return every slot-safety violation found (empty
+/// for a sound plan). Never panics, whatever the plan contains.
+pub(crate) fn check(plan: &ExecPlan) -> Vec<PlanFault> {
+    let n = plan.slot_count;
+    let mut faults = Vec::new();
+    // per-slot state of the value currently occupying it
+    let mut written = vec![false; n];
+    let mut born = vec![INPUT; n];
+    let mut read = vec![false; n];
+
+    if plan.input_slot < n {
+        written[plan.input_slot] = true;
+    } else {
+        faults.push(PlanFault {
+            kind: PlanFaultKind::SlotBounds,
+            step: 0,
+            module: "<input>".to_string(),
+            message: format!(
+                "input slot s{} is outside the plan's {n} slots",
+                plan.input_slot
+            ),
+        });
+    }
+
+    for (i, step) in plan.steps.iter().enumerate() {
+        let mut fault = |kind: PlanFaultKind, at: usize, message: String| PlanFault {
+            kind,
+            step: at,
+            module: step.name.clone(),
+            message,
+        };
+        // reads first: src, then the optional residual
+        let reads = [Some((step.src, "src")), step.res.map(|s| (s, "res"))];
+        for (slot, role) in reads.into_iter().flatten() {
+            if slot >= n {
+                faults.push(fault(
+                    PlanFaultKind::SlotBounds,
+                    i,
+                    format!("{role} slot s{slot} is outside the plan's {n} slots"),
+                ));
+            } else if !written[slot] {
+                faults.push(fault(
+                    PlanFaultKind::ReadBeforeWrite,
+                    i,
+                    format!("{role} reads slot s{slot}, which holds no live value"),
+                ));
+            } else {
+                read[slot] = true;
+            }
+        }
+        // the write
+        if step.dst >= n {
+            faults.push(fault(
+                PlanFaultKind::SlotBounds,
+                i,
+                format!("dst slot s{} is outside the plan's {n} slots", step.dst),
+            ));
+        } else {
+            if written[step.dst] {
+                let since = born_label(born[step.dst]);
+                faults.push(fault(
+                    PlanFaultKind::SlotOverlap,
+                    i,
+                    format!(
+                        "dst slot s{} still holds the live value produced by \
+                         {since} — two liveness intervals overlap",
+                        step.dst
+                    ),
+                ));
+            }
+            written[step.dst] = true;
+            born[step.dst] = i;
+            read[step.dst] = false;
+        }
+        // releases retire values whose last use was this step
+        for &slot in &step.release {
+            if slot >= n {
+                faults.push(fault(
+                    PlanFaultKind::SlotBounds,
+                    i,
+                    format!("release of slot s{slot}, outside the plan's {n} slots"),
+                ));
+                continue;
+            }
+            if !written[slot] {
+                faults.push(fault(
+                    PlanFaultKind::DeadStep,
+                    i,
+                    format!("releases slot s{slot}, which holds no live value"),
+                ));
+                continue;
+            }
+            // a value produced and released by the same step is the
+            // compiler's self-discard for an unused module — legal
+            if !read[slot] && born[slot] != i && born[slot] != INPUT {
+                faults.push(PlanFault {
+                    kind: PlanFaultKind::DeadStep,
+                    step: born[slot],
+                    module: plan.steps[born[slot]].name.clone(),
+                    message: format!(
+                        "computes a value in slot s{slot} that nothing reads \
+                         before step {i} releases it"
+                    ),
+                });
+            }
+            written[slot] = false;
+        }
+    }
+
+    // the plan output must be live at the end…
+    let last = plan.steps.len().saturating_sub(1);
+    if plan.out_slot >= n {
+        faults.push(PlanFault {
+            kind: PlanFaultKind::SlotBounds,
+            step: last,
+            module: "<output>".to_string(),
+            message: format!(
+                "output slot s{} is outside the plan's {n} slots",
+                plan.out_slot
+            ),
+        });
+    } else if !written[plan.out_slot] {
+        faults.push(PlanFault {
+            kind: PlanFaultKind::ReadBeforeWrite,
+            step: last,
+            module: "<output>".to_string(),
+            message: format!(
+                "output slot s{} holds no live value when the plan ends",
+                plan.out_slot
+            ),
+        });
+    }
+    // …and nothing else may be: a live non-output slot means the
+    // release schedule leaked a value
+    for slot in 0..n {
+        if written[slot] && slot != plan.out_slot {
+            let at = if born[slot] == INPUT { 0 } else { born[slot] };
+            let module = if born[slot] == INPUT {
+                "<input>".to_string()
+            } else {
+                plan.steps[born[slot]].name.clone()
+            };
+            faults.push(PlanFault {
+                kind: PlanFaultKind::DeadStep,
+                step: at,
+                module,
+                message: format!(
+                    "slot s{slot} (holding the value produced by {}) is still \
+                     live when the plan ends — never released",
+                    born_label(born[slot])
+                ),
+            });
+        }
+    }
+    faults
+}
+
+fn born_label(born: usize) -> String {
+    if born == INPUT {
+        "the plan input".to_string()
+    } else {
+        format!("step {born}")
+    }
+}

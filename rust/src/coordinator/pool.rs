@@ -25,6 +25,16 @@ use std::thread::JoinHandle;
 /// `Pool::run`, which guarantees completion before its borrows expire.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Lock a mutex, recovering the guard when the lock is poisoned. Every
+/// closure on the queue catches its own panics, so a poisoned pool
+/// mutex only means some *other* thread died mid-section holding a
+/// counter — the protected state is a plain integer or queue that is
+/// still consistent, and recovering beats propagating a panic through
+/// the serving hot path.
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 struct State {
     jobs: VecDeque<Job>,
     shutdown: bool,
@@ -50,7 +60,7 @@ impl Latch {
     }
 
     fn count_down(&self) {
-        let mut left = self.remaining.lock().unwrap();
+        let mut left = locked(&self.remaining);
         *left -= 1;
         if *left == 0 {
             self.cv.notify_all();
@@ -58,17 +68,20 @@ impl Latch {
     }
 
     fn is_done(&self) -> bool {
-        *self.remaining.lock().unwrap() == 0
+        *locked(&self.remaining) == 0
     }
 
     /// Wait until the count reaches zero or `dur` elapses; returns
     /// whether the latch is done.
     fn wait_timeout(&self, dur: std::time::Duration) -> bool {
-        let left = self.remaining.lock().unwrap();
+        let left = locked(&self.remaining);
         if *left == 0 {
             return true;
         }
-        let (left, _timed_out) = self.cv.wait_timeout(left, dur).unwrap();
+        let (left, _timed_out) = self
+            .cv
+            .wait_timeout(left, dur)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         *left == 0
     }
 }
@@ -93,7 +106,7 @@ impl Pool {
         let mut handles = Vec::new();
         if workers > 1 {
             // counted at spawn time so live_workers() is deterministic
-            *shared.alive.lock().unwrap() = workers;
+            *locked(&shared.alive) = workers;
             for _ in 0..workers {
                 let sh = shared.clone();
                 handles.push(std::thread::spawn(move || worker_loop(&sh)));
@@ -137,8 +150,16 @@ impl Pool {
         if self.workers == 1 || n == 1 {
             return jobs.into_iter().map(|j| j()).collect();
         }
-        let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
-            (0..n).map(|_| Mutex::new(None)).collect();
+        // slots pre-filled with a "never ran" panic payload: if a job
+        // were ever lost (the latch proves it cannot be), the caller
+        // resumes a descriptive panic instead of unwrapping a hole
+        let results: Vec<Mutex<std::thread::Result<T>>> = (0..n)
+            .map(|_| {
+                Mutex::new(Err(
+                    Box::new("pool: job never ran") as Box<dyn std::any::Any + Send>
+                ))
+            })
+            .collect();
         let latch = Latch::new(n);
         {
             // erase each job to a queue entry that records its result
@@ -152,7 +173,7 @@ impl Pool {
                     let latch = &latch;
                     Box::new(move || {
                         let out = catch_unwind(AssertUnwindSafe(f));
-                        *results[i].lock().unwrap() = Some(out);
+                        *locked(&results[i]) = out;
                         latch.count_down();
                     }) as Box<dyn FnOnce() + Send + '_>
                 })
@@ -163,7 +184,7 @@ impl Pool {
             // this scope. Box<dyn FnOnce> layouts are lifetime-invariant.
             let tasks: Vec<Job> = unsafe { std::mem::transmute(tasks) };
             {
-                let mut st = self.shared.state.lock().unwrap();
+                let mut st = locked(&self.shared.state);
                 st.jobs.extend(tasks);
             }
             self.shared.work_cv.notify_all();
@@ -178,7 +199,7 @@ impl Pool {
                 if latch.is_done() {
                     break;
                 }
-                let stolen = self.shared.state.lock().unwrap().jobs.pop_front();
+                let stolen = locked(&self.shared.state).jobs.pop_front();
                 match stolen {
                     Some(j) => j(),
                     None => {
@@ -191,9 +212,14 @@ impl Pool {
         }
         results
             .into_iter()
-            .map(|m| match m.into_inner().unwrap().expect("job completed") {
-                Ok(v) => v,
-                Err(payload) => resume_unwind(payload),
+            .map(|m| {
+                let slot = m
+                    .into_inner()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                match slot {
+                    Ok(v) => v,
+                    Err(payload) => resume_unwind(payload),
+                }
             })
             .collect()
     }
@@ -201,14 +227,14 @@ impl Pool {
     /// Live worker-thread count (0 once the pool has shut down) — for
     /// tests and diagnostics.
     pub fn live_workers(&self) -> usize {
-        *self.shared.alive.lock().unwrap()
+        *locked(&self.shared.alive)
     }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = locked(&self.shared.state);
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
@@ -221,7 +247,7 @@ impl Drop for Pool {
 fn worker_loop(sh: &Shared) {
     loop {
         let job = {
-            let mut st = sh.state.lock().unwrap();
+            let mut st = locked(&sh.state);
             loop {
                 if let Some(j) = st.jobs.pop_front() {
                     break Some(j);
@@ -229,7 +255,10 @@ fn worker_loop(sh: &Shared) {
                 if st.shutdown {
                     break None;
                 }
-                st = sh.work_cv.wait(st).unwrap();
+                st = sh
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
         match job {
@@ -237,7 +266,7 @@ fn worker_loop(sh: &Shared) {
             None => break,
         }
     }
-    *sh.alive.lock().unwrap() -= 1;
+    *locked(&sh.alive) -= 1;
 }
 
 #[cfg(test)]

@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 
 use crate::engine::int::QuantizedParams;
-use crate::engine::plan::{ConvOp, DenseOp, ExecPlan, GapOp, GemmStep, Op};
+use crate::engine::plan::{ConvOp, DenseOp, ExecPlan, GapOp, GemmStep, Op, QuantEpi};
 use crate::error::DfqError;
 use crate::quant::scheme;
 use crate::tensor::im2col::{im2col_slice_into, Padding};
@@ -36,11 +36,14 @@ use crate::tensor::{ops, ops_int};
 pub struct Scratch<T = i32> {
     pub(crate) patches: Vec<T>,
     free: Vec<Vec<T>>,
+    /// the executor's slot table, kept between passes so the warm path
+    /// never allocates it (cells are always `None` between passes)
+    slots: Vec<Option<Vec<T>>>,
 }
 
 impl<T> Default for Scratch<T> {
     fn default() -> Self {
-        Scratch { patches: Vec::new(), free: Vec::new() }
+        Scratch { patches: Vec::new(), free: Vec::new(), slots: Vec::new() }
     }
 }
 
@@ -97,7 +100,9 @@ impl<T: Copy + Default> Scratch<T> {
 
 /// One numeric kernel domain the plan executor is generic over: the
 /// element type plus the three compute kernels (each reads the resolved
-/// instruction plus raw slices — no names, no shape checks).
+/// instruction plus raw slices — no names, no shape checks). Kernels
+/// are fallible so a plan whose constants are missing (an fp plan bound
+/// to the int domain) surfaces as a typed error, never a panic.
 #[allow(clippy::too_many_arguments)]
 pub(crate) trait Domain {
     /// element type flowing through the buffers
@@ -113,7 +118,7 @@ pub(crate) trait Domain {
         out: &mut Vec<Self::Elem>,
         patches: &mut Vec<Self::Elem>,
         threads: usize,
-    );
+    ) -> Result<(), DfqError>;
 
     /// dense GEMM + epilogue into `out` (`n * cout` elems).
     fn dense(
@@ -124,10 +129,23 @@ pub(crate) trait Domain {
         res: Option<&[Self::Elem]>,
         out: &mut Vec<Self::Elem>,
         threads: usize,
-    );
+    ) -> Result<(), DfqError>;
 
     /// global average pool into `out` (`n * c` elems, pre-zeroed).
-    fn gap(&self, g: &GapOp, n: usize, src: &[Self::Elem], out: &mut [Self::Elem]);
+    fn gap(
+        &self,
+        g: &GapOp,
+        n: usize,
+        src: &[Self::Elem],
+        out: &mut [Self::Elem],
+    ) -> Result<(), DfqError>;
+
+    /// Cross-check a step's runtime output against the interval the
+    /// static verifier proved for it (`plan.ranges`, populated in debug
+    /// builds for integer plans). Default: no-op — the int domain
+    /// overrides it in debug builds, catching verifier unsoundness and
+    /// executor drift in one guard.
+    fn check_range(&self, _step: &str, _range: Option<(i32, i32)>, _out: &[Self::Elem]) {}
 }
 
 /// Run a compiled plan over one batch: `input` is the input value's
@@ -146,16 +164,23 @@ pub(crate) fn execute<D: Domain>(
 ) -> Result<Vec<D::Elem>, DfqError> {
     let want = n * plan.input_shape.elems();
     if input.len() != want {
-        return Err(DfqError::invalid(format!(
-            "plan input has {} elements, expected {want} (batch {n} of {})",
-            input.len(),
-            plan.input_shape
-        )));
+        return Err(bad_input_err(input.len(), want, n, plan));
     }
-    let mut slots: Vec<Option<Vec<D::Elem>>> =
-        (0..plan.slot_count).map(|_| None).collect();
-    slots[plan.input_slot] = Some(input);
-    for step in &plan.steps {
+    // the slot table lives in the scratch between passes (warm path
+    // allocates nothing); cells are None between passes, but drain
+    // defensively in case a previous pass error-returned mid-plan
+    let mut slots = std::mem::take(&mut scratch.slots);
+    for cell in slots.iter_mut() {
+        if let Some(buf) = cell.take() {
+            scratch.recycle(buf);
+        }
+    }
+    slots.resize_with(plan.slot_count, || None);
+    let Some(cell) = slots.get_mut(plan.input_slot) else {
+        return Err(dead_slot_err("<input>", "input", plan.input_slot));
+    };
+    *cell = Some(input);
+    for (i, step) in plan.steps.iter().enumerate() {
         let out_len = n * step.out.elems();
         // Gap accumulates in place and needs zeros; the GEMM steps
         // overwrite every element (take_uninit contract)
@@ -163,29 +188,79 @@ pub(crate) fn execute<D: Domain>(
             Op::Gap(_) => scratch.take(out_len),
             _ => scratch.take_uninit(out_len),
         };
+        let Some(src) = slots.get(step.src).and_then(|c| c.as_deref()) else {
+            return Err(dead_slot_err(&step.name, "src", step.src));
+        };
+        let res = match step.res {
+            Some(slot) => match slots.get(slot).and_then(|c| c.as_deref()) {
+                Some(r) => Some(r),
+                None => return Err(dead_slot_err(&step.name, "res", slot)),
+            },
+            None => None,
+        };
         // detach the patch buffer so the kernel can borrow it mutably
         // alongside the immutable slot views
         let mut patches = std::mem::take(&mut scratch.patches);
-        {
-            let src = slots[step.src].as_deref().expect("plan: src slot live");
-            let res = step
-                .res
-                .map(|s| slots[s].as_deref().expect("plan: res slot live"));
-            match &step.op {
-                Op::Conv(c) => dom.conv(c, n, src, res, &mut out, &mut patches, threads),
-                Op::Dense(d) => dom.dense(d, n, src, res, &mut out, threads),
-                Op::Gap(g) => dom.gap(g, n, src, &mut out),
-            }
-        }
+        let ran = match &step.op {
+            Op::Conv(c) => dom.conv(c, n, src, res, &mut out, &mut patches, threads),
+            Op::Dense(d) => dom.dense(d, n, src, res, &mut out, threads),
+            Op::Gap(g) => dom.gap(g, n, src, &mut out),
+        };
         scratch.patches = patches;
-        slots[step.dst] = Some(out);
+        ran?;
+        // debug-build cross-validation of static range vs runtime values
+        // (plan.ranges is empty in release: None -> default no-op)
+        dom.check_range(&step.name, plan.ranges.get(i).copied(), &out);
+        let Some(cell) = slots.get_mut(step.dst) else {
+            return Err(dead_slot_err(&step.name, "dst", step.dst));
+        };
+        *cell = Some(out);
         for &s in &step.release {
-            if let Some(buf) = slots[s].take() {
+            if let Some(buf) = slots.get_mut(s).and_then(|c| c.take()) {
                 scratch.recycle(buf);
             }
         }
     }
-    Ok(slots[plan.out_slot].take().expect("plan: output slot live"))
+    let Some(out) = slots.get_mut(plan.out_slot).and_then(|c| c.take()) else {
+        return Err(dead_slot_err("<output>", "output", plan.out_slot));
+    };
+    scratch.slots = slots;
+    Ok(out)
+}
+
+/// Out-of-line constructor for the (cold) input-shape mismatch error —
+/// keeps the formatting machinery off the warm path.
+#[cold]
+#[inline(never)]
+fn bad_input_err(got: usize, want: usize, n: usize, plan: &ExecPlan) -> DfqError {
+    DfqError::invalid(format!(
+        "plan input has {got} elements, expected {want} (batch {n} of {})",
+        plan.input_shape
+    ))
+}
+
+/// Out-of-line constructor for the (cold) corrupt-slot-schedule error.
+/// Unreachable for any plan `ExecPlan::compile` produced — the static
+/// verifier proves slot safety in debug builds — but a typed error beats
+/// a panic if a hand-built plan ever gets here.
+#[cold]
+#[inline(never)]
+fn dead_slot_err(step: &str, role: &str, slot: usize) -> DfqError {
+    DfqError::graph(format!(
+        "{step}: {role} slot s{slot} holds no live buffer — the plan's slot \
+         schedule is corrupt (`dfq verify` rejects such plans)"
+    ))
+}
+
+/// Out-of-line constructor for the (cold) missing-epilogue error: an fp
+/// plan's step reached an integer kernel.
+#[cold]
+#[inline(never)]
+fn no_epilogue_err() -> DfqError {
+    DfqError::graph(
+        "integer plan step has no epilogue constants (was an fp plan bound \
+         to the integer engine?)",
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -242,7 +317,12 @@ pub(crate) fn aligned_biases(
                 g.cout
             )));
         }
-        let q = g.q.expect("integer plans carry quant constants");
+        let Some(q) = g.q else {
+            return Err(DfqError::graph(format!(
+                "module '{name}': integer parameters bound to a plan step \
+                 with no epilogue constants (fp plan?)"
+            )));
+        };
         out[g.param] = qp.b.iter().map(|&b| scheme::align(b, q.bias_shift)).collect();
     }
     Ok(out)
@@ -267,13 +347,12 @@ pub(crate) fn int_views<'a>(
 /// by both the plan executor and the per-module interpreter path, so the
 /// two cannot drift.
 pub(crate) fn int_epilogue(
-    g: &GemmStep,
+    q: &QuantEpi,
+    cout: usize,
     b_aligned: &[i32],
     res: Option<&[i32]>,
     acc: &mut [i32],
 ) {
-    let q = g.q.expect("integer plans carry quant constants");
-    let cout = g.cout;
     if let Some(u) = q.unfused {
         // ----- unfused ablation: extra quantization points -----
         for chunk in acc.chunks_exact_mut(cout) {
@@ -327,10 +406,12 @@ pub(crate) fn int_epilogue(
 }
 
 /// The shared integer pooling kernel: wrapping sums over the window into
-/// the pre-zeroed `out`, then the exact rounded-shift mean + clamp.
-pub(crate) fn int_gap(g: &GapOp, n: usize, src: &[i32], out: &mut [i32]) {
+/// the pre-zeroed `out`, then the exact rounded-shift mean + clamp
+/// (`clamp` is the step's resolved code range — callers extract it from
+/// `GapOp::clamp` so a missing constant is a typed bind/step error).
+pub(crate) fn int_gap(g: &GapOp, clamp: (i32, i32), n: usize, src: &[i32], out: &mut [i32]) {
     sum_pool(n, g.h, g.w, g.c, src, out, |a, b| a.wrapping_add(b));
-    let (qmin, qmax) = g.clamp.expect("integer plans carry quant constants");
+    let (qmin, qmax) = clamp;
     for v in out.iter_mut() {
         *v = scheme::shift_round(*v, g.shift).clamp(qmin, qmax);
     }
@@ -348,7 +429,8 @@ impl Domain for IntDomain<'_> {
         out: &mut Vec<i32>,
         patches: &mut Vec<i32>,
         threads: usize,
-    ) {
+    ) -> Result<(), DfqError> {
+        let Some(q) = &c.g.q else { return Err(no_epilogue_err()) };
         let p = &self.params[c.g.param];
         im2col_slice_into(
             src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
@@ -366,7 +448,8 @@ impl Domain for IntDomain<'_> {
             out,
             threads,
         );
-        int_epilogue(&c.g, p.b, res, out);
+        int_epilogue(q, c.g.cout, p.b, res, out);
+        Ok(())
     }
 
     fn dense(
@@ -377,14 +460,34 @@ impl Domain for IntDomain<'_> {
         res: Option<&[i32]>,
         out: &mut Vec<i32>,
         threads: usize,
-    ) {
+    ) -> Result<(), DfqError> {
+        let Some(q) = &d.g.q else { return Err(no_epilogue_err()) };
         let p = &self.params[d.g.param];
         ops_int::gemm_i32_into(src, p.w, n, d.g.kdim, d.g.cout, out, threads);
-        int_epilogue(&d.g, p.b, res, out);
+        int_epilogue(q, d.g.cout, p.b, res, out);
+        Ok(())
     }
 
-    fn gap(&self, g: &GapOp, n: usize, src: &[i32], out: &mut [i32]) {
-        int_gap(g, n, src, out);
+    fn gap(&self, g: &GapOp, n: usize, src: &[i32], out: &mut [i32]) -> Result<(), DfqError> {
+        let Some(clamp) = g.clamp else { return Err(no_epilogue_err()) };
+        int_gap(g, clamp, n, src, out);
+        Ok(())
+    }
+
+    /// The cross-validation guard (debug builds only): every runtime
+    /// output value must lie inside the interval the static verifier
+    /// proved for the step. A violation means the verifier is unsound or
+    /// the executor drifted from the Eq. 3–4 algebra it models.
+    #[cfg(debug_assertions)]
+    fn check_range(&self, step: &str, range: Option<(i32, i32)>, out: &[i32]) {
+        let Some((lo, hi)) = range else { return };
+        for &v in out {
+            assert!(
+                v >= lo && v <= hi,
+                "{step}: runtime value {v} escapes the statically verified \
+                 range [{lo}, {hi}]"
+            );
+        }
     }
 }
 
@@ -481,7 +584,7 @@ impl Domain for FpDomain<'_> {
         out: &mut Vec<f32>,
         patches: &mut Vec<f32>,
         _threads: usize,
-    ) {
+    ) -> Result<(), DfqError> {
         let p = &self.params[c.g.param];
         im2col_slice_into(
             src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
@@ -489,6 +592,7 @@ impl Domain for FpDomain<'_> {
         let m = n * c.ho * c.wo;
         ops::gemm_f32_into(&patches[..m * c.g.kdim], p.w, m, c.g.kdim, c.g.cout, out);
         fp_epilogue(&c.g, p.b, res, out);
+        Ok(())
     }
 
     fn dense(
@@ -499,19 +603,21 @@ impl Domain for FpDomain<'_> {
         res: Option<&[f32]>,
         out: &mut Vec<f32>,
         _threads: usize,
-    ) {
+    ) -> Result<(), DfqError> {
         let p = &self.params[d.g.param];
         ops::gemm_f32_into(src, p.w, n, d.g.kdim, d.g.cout, out);
         fp_epilogue(&d.g, p.b, res, out);
+        Ok(())
     }
 
-    fn gap(&self, g: &GapOp, n: usize, src: &[f32], out: &mut [f32]) {
+    fn gap(&self, g: &GapOp, n: usize, src: &[f32], out: &mut [f32]) -> Result<(), DfqError> {
         // sum then scale, in ops::global_avg_pool's exact order
         sum_pool(n, g.h, g.w, g.c, src, out, |a, b| a + b);
         let inv = 1.0 / (g.h * g.w) as f32;
         for v in out.iter_mut() {
             *v *= inv;
         }
+        Ok(())
     }
 }
 

@@ -51,7 +51,7 @@
 use std::collections::HashMap;
 
 use crate::engine::exec;
-use crate::engine::plan::{ExecPlan, GapOp, GemmStep, QuantEpi};
+use crate::engine::plan::{ExecPlan, GapOp, QuantEpi};
 use crate::error::DfqError;
 use crate::graph::bn_fold::FoldedParams;
 use crate::graph::{Graph, ModuleKind};
@@ -239,15 +239,16 @@ impl<'g> IntEngine<'g> {
                     )));
                 }
                 let unsigned = self.spec.try_value_unsigned(self.graph, &m.src)?;
+                let clamp = scheme::qrange(n_bits, unsigned);
                 let g = GapOp {
                     h,
                     w,
                     c,
                     shift: hw.trailing_zeros() as i32,
-                    clamp: Some(scheme::qrange(n_bits, unsigned)),
+                    clamp: Some(clamp),
                 };
                 let mut out = scratch.take(n * c); // pre-zeroed: gap sums in place
-                exec::int_gap(&g, n, &src.data, &mut out);
+                exec::int_gap(&g, clamp, n, &src.data, &mut out);
                 Ok(TensorI32 { shape: Shape(vec![n, c]), data: out })
             }
             ModuleKind::Conv { .. } | ModuleKind::Dense { .. } => {
@@ -260,7 +261,7 @@ impl<'g> IntEngine<'g> {
                         m.name
                     ))
                 })?;
-                let (mut acc, kdim) = match &m.kind {
+                let (mut acc, cout) = match &m.kind {
                     ModuleKind::Conv { kh, kw, cin, cout, stride } => {
                         if src.shape.rank() != 4 || src.shape.dim(3) != *cin {
                             return Err(DfqError::graph(format!(
@@ -290,7 +291,7 @@ impl<'g> IntEngine<'g> {
                             &mut out,
                             self.threads,
                         );
-                        (TensorI32 { shape, data: out }, kh * kw * cin)
+                        (TensorI32 { shape, data: out }, *cout)
                     }
                     ModuleKind::Dense { .. } => {
                         let rows = src.shape.dim(0);
@@ -314,11 +315,15 @@ impl<'g> IntEngine<'g> {
                             &mut out,
                             self.threads,
                         );
-                        (TensorI32 { shape: Shape(vec![rows, cout]), data: out }, cin)
+                        (TensorI32 { shape: Shape(vec![rows, cout]), data: out }, cout)
                     }
-                    ModuleKind::Gap => unreachable!(),
+                    ModuleKind::Gap => {
+                        return Err(DfqError::graph(format!(
+                            "{}: pooling module reached the weighted-module path",
+                            m.name
+                        )))
+                    }
                 };
-                let cout = *acc.shape.dims().last().unwrap();
                 // resolve the residual (name + full shape equality: an
                 // equal element count with a different layout would
                 // silently add misaligned channels)
@@ -349,20 +354,14 @@ impl<'g> IntEngine<'g> {
                     m,
                     self.pre_frac.as_ref(),
                 )?;
-                let g = GemmStep {
-                    param: 0, // unused by the epilogue
-                    kdim,
-                    cout,
-                    relu: m.relu,
-                    q: Some(q),
-                };
                 let aligned: Vec<i32> = qp
                     .b
                     .iter()
                     .map(|&b| scheme::align(b, q.bias_shift))
                     .collect();
                 exec::int_epilogue(
-                    &g,
+                    &q,
+                    cout,
                     &aligned,
                     res.map(|rt| rt.data.as_slice()),
                     &mut acc.data,

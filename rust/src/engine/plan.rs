@@ -287,6 +287,10 @@ pub struct ExecPlan {
     /// weighted-module names in parameter-table order
     pub(crate) params: Vec<String>,
     pub(crate) quant: Option<PlanQuant>,
+    /// per-step output ranges proved by the static verifier — populated
+    /// in debug builds/tests for integer plans (drives the executor's
+    /// runtime cross-check), empty otherwise
+    pub(crate) ranges: Vec<(i32, i32)>,
     graph_name: String,
 }
 
@@ -550,7 +554,8 @@ impl ExecPlan {
                 )?,
             }),
         };
-        Ok(ExecPlan {
+        #[cfg_attr(not(debug_assertions), allow(unused_mut))]
+        let mut plan = ExecPlan {
             steps,
             slot_count: next_slot,
             input_slot: 0,
@@ -559,8 +564,29 @@ impl ExecPlan {
             out_shape,
             params,
             quant,
+            ranges: Vec::new(),
             graph_name: graph.name.clone(),
-        })
+        };
+        // debug builds and tests statically verify every compiled plan
+        // (interval soundness of the integer algebra + slot safety) and
+        // keep the proved per-step ranges for the executor's runtime
+        // cross-check; release builds skip it — compile stays cheap and
+        // the hot path never pays
+        #[cfg(debug_assertions)]
+        {
+            let report = crate::analysis::verify(&plan);
+            if let Some(fault) = report.faults.first() {
+                return Err(fault.clone().into());
+            }
+            if plan.quant.is_some() {
+                plan.ranges = report
+                    .steps
+                    .iter()
+                    .map(|s| s.out_range.unwrap_or((i32::MIN, i32::MAX)))
+                    .collect();
+            }
+        }
+        Ok(plan)
     }
 
     /// Validate a batch's shape against the plan's resolved input

@@ -52,6 +52,20 @@ pub enum DfqError {
         /// human-readable detail
         message: String,
     },
+    /// The static plan verifier ([`crate::analysis`]) rejected a
+    /// compiled `ExecPlan`: an intermediate can overflow i32, a shift
+    /// or clamp constant is unsound, or the buffer-slot schedule is
+    /// unsafe. Addressed to the offending step.
+    Verify {
+        /// the contract class that failed
+        kind: PlanFaultKind,
+        /// index of the offending plan step
+        step: usize,
+        /// name of the module the step lowers
+        module: String,
+        /// the derivation: which constant, which bound, which values
+        message: String,
+    },
 }
 
 /// How a wire frame (or the stream carrying it) was invalid. Carried by
@@ -118,6 +132,47 @@ impl WireFault {
     }
 }
 
+/// Which machine-checked plan contract a step violated. Carried by
+/// [`DfqError::Verify`] and by [`crate::analysis::PlanFault`]; the
+/// corrupt-plan corpus matches on the class instead of parsing strings
+/// (mirroring [`WireFault`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanFaultKind {
+    /// an accumulator / bias-add / residual-add can exceed i32
+    AccOverflow,
+    /// a shift constant's magnitude is at or beyond the 32-bit width
+    ShiftOutOfWidth,
+    /// a right shift large enough to collapse the whole incoming value
+    /// range to zero — every bit of signal is destroyed
+    PrecisionLoss,
+    /// a clamp range is inverted or not a subset of its target dtype
+    ClampRange,
+    /// a step writes a slot that still holds a live value
+    SlotOverlap,
+    /// a step (or the plan output) reads a slot nothing has written
+    ReadBeforeWrite,
+    /// a value is produced (or released) without ever being consumed
+    DeadStep,
+    /// a step addresses a slot outside the plan's `slot_count`
+    SlotBounds,
+}
+
+impl PlanFaultKind {
+    /// Stable kebab-case label (used in `Display` and `--json` output).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlanFaultKind::AccOverflow => "acc-overflow",
+            PlanFaultKind::ShiftOutOfWidth => "shift-out-of-width",
+            PlanFaultKind::PrecisionLoss => "precision-loss",
+            PlanFaultKind::ClampRange => "clamp-range",
+            PlanFaultKind::SlotOverlap => "slot-overlap",
+            PlanFaultKind::ReadBeforeWrite => "read-before-write",
+            PlanFaultKind::DeadStep => "dead-step",
+            PlanFaultKind::SlotBounds => "slot-bounds",
+        }
+    }
+}
+
 impl DfqError {
     /// An I/O failure with the operation it interrupted.
     pub fn io(context: impl Into<String>, source: &std::io::Error) -> DfqError {
@@ -164,6 +219,16 @@ impl DfqError {
     pub fn wire(fault: WireFault, msg: impl Into<String>) -> DfqError {
         DfqError::Wire { fault, message: msg.into() }
     }
+
+    /// A static plan-verification fault, addressed to one plan step.
+    pub fn verify(
+        kind: PlanFaultKind,
+        step: usize,
+        module: impl Into<String>,
+        msg: impl Into<String>,
+    ) -> DfqError {
+        DfqError::Verify { kind, step, module: module.into(), message: msg.into() }
+    }
 }
 
 impl fmt::Display for DfqError {
@@ -183,6 +248,11 @@ impl fmt::Display for DfqError {
             DfqError::Wire { fault, message } => {
                 write!(f, "wire/{}: {message}", fault.label())
             }
+            DfqError::Verify { kind, step, module, message } => write!(
+                f,
+                "verify/{}: step {step} ({module}): {message}",
+                kind.label()
+            ),
         }
     }
 }
@@ -259,6 +329,34 @@ mod tests {
         let e = DfqError::wire(WireFault::Oversized, "payload 99MB > cap");
         assert!(e.to_string().contains("oversized"), "{e}");
         assert!(e.to_string().contains("99MB"), "{e}");
+    }
+
+    #[test]
+    fn verify_faults_name_kind_step_and_module() {
+        let e = DfqError::verify(
+            PlanFaultKind::AccOverflow,
+            3,
+            "c1",
+            "accumulator peak 3000000000 exceeds i32::MAX",
+        );
+        let s = e.to_string();
+        assert!(s.starts_with("verify/acc-overflow"), "{s}");
+        assert!(s.contains("step 3"), "{s}");
+        assert!(s.contains("(c1)"), "{s}");
+        // every kind has a distinct stable label
+        let kinds = [
+            PlanFaultKind::AccOverflow,
+            PlanFaultKind::ShiftOutOfWidth,
+            PlanFaultKind::PrecisionLoss,
+            PlanFaultKind::ClampRange,
+            PlanFaultKind::SlotOverlap,
+            PlanFaultKind::ReadBeforeWrite,
+            PlanFaultKind::DeadStep,
+            PlanFaultKind::SlotBounds,
+        ];
+        let labels: std::collections::HashSet<&str> =
+            kinds.iter().map(|k| k.label()).collect();
+        assert_eq!(labels.len(), kinds.len());
     }
 
     #[test]

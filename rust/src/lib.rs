@@ -139,6 +139,26 @@
 //! (multi-node sharding, NUMA pinning, fused-kernel emission) target the
 //! plan IR.
 //!
+//! ## Static verification: `dfq::analysis`
+//!
+//! Because every shift/clamp constant and every buffer-slot assignment
+//! is folded into the plan at compile time, the plan can be **proved
+//! sound before a batch ever runs**. [`analysis::verify`] runs interval
+//! abstract interpretation over each step's integer epilogue (no
+//! intermediate exceeds i32, every shift is in-width and
+//! signal-preserving, every clamp is a subset of its target dtype) and
+//! re-derives slot liveness from the schedule (no overlapping live
+//! ranges, no read-before-write, no dead or leaked values). Violations
+//! are typed, step-addressed [`analysis::PlanFault`]s
+//! ([`error::DfqError::Verify`]). `ExecPlan::compile` verifies every
+//! plan in debug builds and tests; release builds skip it — the hot
+//! path never pays. The proved per-step ranges also drive a
+//! debug-build runtime cross-check inside the integer executor and the
+//! range column of `dfq inspect --plan`. On the CLI: `dfq verify`
+//! (plans) and `dfq lint` (the [`analysis::lint`] hot-path source
+//! contract: no panics, no unchecked narrowing casts, no warm-path
+//! allocation).
+//!
 //! ## Layering
 //!
 //! * **L1/L2 (build-time python)** — Pallas kernels + JAX model graphs,
@@ -159,6 +179,7 @@
 //! [`Session::from_graph`]: session::Session::from_graph
 #![deny(missing_docs)]
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod engine;

@@ -7,6 +7,8 @@
 //! dfq detect    [--bits B] [--eval-n N]
 //! dfq hwcost    [--clock MHZ]
 //! dfq inspect   --model NAME
+//! dfq verify    [--model NAME]... [--bits B] [--seed N] [--json] [--plan]
+//! dfq lint      [--root DIR]
 //! dfq serve     [--model NAME[=KIND[@W,KIND@W]]]... [--requests N]
 //!               [--engine KIND] [--replicas N]
 //!               [--max-wait MS] [--queue-depth N]
@@ -46,6 +48,8 @@ const COMMANDS: &[(&str, &[&str])] = &[
     ("detect", &["bits", "eval-n", "batch", "images", "artifacts"]),
     ("hwcost", &["clock"]),
     ("inspect", &["model", "plan"]),
+    ("verify", &["model", "bits", "seed", "json", "plan"]),
+    ("lint", &["root"]),
     (
         "serve",
         &[
@@ -163,6 +167,8 @@ fn main() {
         "detect" => cmd_detect(&args),
         "hwcost" => cmd_hwcost(&args),
         "inspect" => cmd_inspect(&args),
+        "verify" => cmd_verify(&args),
+        "lint" => cmd_lint(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "loadgen" => cmd_loadgen(&args),
@@ -186,7 +192,21 @@ COMMANDS:
   evaluate   top-1 of FP vs quantized (--model, --bits, --eval-n, --via-pjrt, --threads)
   detect     Table-4 style detection eval (--bits, --eval-n)
   hwcost     RTL cost model (--clock MHz)
-  inspect    dataflow analysis + quant-point report (--model [--plan])
+  inspect    dataflow analysis + quant-point report (--model [--plan];
+             --plan appends the static verifier's per-step proved-range
+             column to the schedule dump)
+  verify     statically verify compiled plans: interval/bit-width
+             soundness of every integer epilogue (no i32 overflow, no
+             out-of-width or signal-destroying shift, every clamp inside
+             its dtype) plus buffer-slot liveness safety
+             (--model NAME repeatable, default resnet_{s,m,l};
+              --bits B, --seed N for the synthetic calibration;
+              --json machine-readable report; --plan dumps each
+              schedule too); non-zero exit on any fault
+  lint       zero-dependency hot-path contract linter: scans the serving
+             hot-path sources for panics, unchecked narrowing casts and
+             warm-path allocation (--root DIR, default .); non-zero exit
+             on any finding
   serve      multi-model batching server: registers every --model as a
              named endpoint, routes interleaved traffic by name
              (--model NAME[=KIND] repeatable, --requests,
@@ -396,9 +416,14 @@ fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
             fused.graph.input_hwc,
         )?;
         print!("{plan}");
+        // the static verifier's per-step column: proved output ranges
+        // ('-' here — the fp oracle has no integer algebra to bound)
+        // plus the slot-safety verdict over the same schedule
+        let report = dfq::analysis::verify(&plan);
+        print!("{}", report.render());
         println!(
             "(integer plans additionally fold in the calibrated shift/clamp \
-             constants; run `dfq calibrate` to produce a spec)"
+             constants and get proved per-step ranges; see `dfq verify`)"
         );
         return Ok(());
     }
@@ -422,6 +447,89 @@ fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
     }
     println!("\ntotal MACs/image: {}", fused.graph.total_macs());
     Ok(())
+}
+
+/// `dfq verify`: statically verify the compiled integer plan of each
+/// requested model — interval/bit-width soundness of every epilogue
+/// plus buffer-slot liveness safety. Runs the same zero-input path as
+/// `serve --synthetic` (built-in graph, deterministic He-init weights,
+/// Session calibration), so it works anywhere — CI included.
+fn cmd_verify(args: &Args) -> Result<(), DfqError> {
+    let models: Vec<String> = if args.all("model").is_empty() {
+        ["resnet_s", "resnet_m", "resnet_l"].iter().map(|s| s.to_string()).collect()
+    } else {
+        args.all("model").to_vec()
+    };
+    let bits = args.u32_or("bits", 8);
+    let seed = args.usize_or("seed", 7) as u64;
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, seed);
+    let mut json_entries: Vec<String> = Vec::new();
+    let mut faults = 0usize;
+    let mut first_fault: Option<dfq::analysis::PlanFault> = None;
+    for name in &models {
+        let graph = resnet::by_name(name).ok_or_else(|| {
+            DfqError::invalid(format!(
+                "verify runs on the built-in resnet_{{s,m,l}} graphs; '{name}' is not one"
+            ))
+        })?;
+        let folded = resnet::synth_folded(&graph, seed);
+        let session = Session::from_graph(graph, folded)?;
+        let calibrated =
+            session.calibrate(CalibConfig { n_bits: bits, ..Default::default() }, &calib)?;
+        let plan = ExecPlan::compile(
+            calibrated.graph(),
+            calibrated.spec(),
+            calibrated.graph().input_hwc,
+        )?;
+        let report = dfq::analysis::verify(&plan);
+        faults += report.faults.len();
+        if first_fault.is_none() {
+            first_fault = report.faults.first().cloned();
+        }
+        if args.has("json") {
+            json_entries.push(format!(
+                "{{\"model\":\"{name}\",\"bits\":{bits},\"report\":{}}}",
+                report.json()
+            ));
+        } else {
+            println!("{name} ({bits}-bit plan):");
+            print!("{}", report.render());
+            if args.has("plan") {
+                print!("{plan}");
+            }
+            println!();
+        }
+    }
+    if args.has("json") {
+        println!("{{\"verify\":[{}]}}", json_entries.join(","));
+    }
+    if let Some(f) = first_fault {
+        eprintln!("{faults} plan fault(s) across {} model(s)", models.len());
+        return Err(f.into());
+    }
+    Ok(())
+}
+
+/// `dfq lint`: run the zero-dependency hot-path contract linter over
+/// the repository sources. Non-zero exit on any finding — the CI lint
+/// lane runs exactly this.
+fn cmd_lint(args: &Args) -> Result<(), DfqError> {
+    let root = std::path::Path::new(args.str_or("root", "."));
+    let findings = dfq::analysis::lint::lint_root(root)?;
+    if findings.is_empty() {
+        println!(
+            "lint: hot-path contracts hold (no panics, no unchecked \
+             narrowing casts, no warm-path allocation)"
+        );
+        return Ok(());
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    Err(DfqError::invalid(format!(
+        "{} hot-path contract violation(s)",
+        findings.len()
+    )))
 }
 
 /// One traffic arm of a `--model` spec: which engine serves it and what

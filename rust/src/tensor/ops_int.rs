@@ -12,6 +12,12 @@
 //! engine's scratch arena reuses them) and an optional second level of
 //! parallelism: row-blocks of C are computed on scoped threads, which is
 //! bit-exact by construction since output rows are independent.
+//!
+//! The `_into` kernels are **lint-enforced hot paths**
+//! ([`crate::analysis::lint`], `dfq lint`): no panicking calls, no
+//! unchecked narrowing casts, no allocation inside the kernel bodies —
+//! slice-length `assert!`s and scratch `.resize`/`.truncate` are the
+//! allowed exceptions the contract spells out.
 
 use super::im2col::{im2col, im2col_into, Padding};
 use super::{Shape, TensorI32};

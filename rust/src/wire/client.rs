@@ -82,7 +82,13 @@ impl WireClient {
             )?;
             self.stream = Some(s);
         }
-        Ok(self.stream.as_mut().expect("just connected"))
+        match self.stream.as_mut() {
+            Some(s) => Ok(s),
+            None => Err(DfqError::wire(
+                WireFault::Io,
+                "client stream vanished after connect",
+            )),
+        }
     }
 
     fn try_call(&mut self, request: &Frame) -> Result<Frame, DfqError> {

@@ -254,13 +254,14 @@ fn put_f64(buf: &mut Vec<u8>, v: f64) {
 
 fn put_str16(buf: &mut Vec<u8>, s: &str) -> Result<(), DfqError> {
     let bytes = s.as_bytes();
-    if bytes.len() > u16::MAX as usize {
+    // checked conversion doubles as the length guard: no `as` truncation
+    let Ok(len) = u16::try_from(bytes.len()) else {
         return Err(DfqError::wire(
             WireFault::Malformed,
             format!("string of {} bytes exceeds the str16 limit", bytes.len()),
         ));
-    }
-    put_u16(buf, bytes.len() as u16);
+    };
+    put_u16(buf, len);
     buf.extend_from_slice(bytes);
     Ok(())
 }
@@ -287,13 +288,15 @@ fn put_str32(buf: &mut Vec<u8>, s: &str) -> Result<(), DfqError> {
 
 fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) -> Result<(), DfqError> {
     let dims = t.shape.dims();
-    if dims.len() > 4 {
+    // checked conversion subsumes the rank cast; the wire limit is 4
+    let rank = u8::try_from(dims.len()).unwrap_or(u8::MAX);
+    if rank > 4 {
         return Err(DfqError::wire(
             WireFault::Malformed,
             format!("tensor rank {} exceeds the wire limit of 4", dims.len()),
         ));
     }
-    buf.push(dims.len() as u8);
+    buf.push(rank);
     for &d in dims {
         if d > u32::MAX as usize {
             return Err(DfqError::wire(
@@ -531,13 +534,13 @@ pub fn encode(frame: &Frame) -> Result<Vec<u8>, DfqError> {
             put_f64(&mut payload, m.p50_s);
             put_f64(&mut payload, m.p99_s);
             put_f64(&mut payload, m.p999_s);
-            if m.arms.len() > u16::MAX as usize {
+            let Ok(n_arms) = u16::try_from(m.arms.len()) else {
                 return Err(DfqError::wire(
                     WireFault::Malformed,
                     "too many arms for a metrics frame",
                 ));
-            }
-            put_u16(&mut payload, m.arms.len() as u16);
+            };
+            put_u16(&mut payload, n_arms);
             for a in &m.arms {
                 put_str16(&mut payload, &a.arm)?;
                 put_f64(&mut payload, a.weight);
@@ -550,13 +553,13 @@ pub fn encode(frame: &Frame) -> Result<Vec<u8>, DfqError> {
                 put_f64(&mut payload, a.p50_s);
                 put_f64(&mut payload, a.p99_s);
                 put_f64(&mut payload, a.p999_s);
-                if a.replicas.len() > u16::MAX as usize {
+                let Ok(n_replicas) = u16::try_from(a.replicas.len()) else {
                     return Err(DfqError::wire(
                         WireFault::Malformed,
                         "too many replicas for a metrics frame",
                     ));
-                }
-                put_u16(&mut payload, a.replicas.len() as u16);
+                };
+                put_u16(&mut payload, n_replicas);
                 for r in &a.replicas {
                     put_u64(&mut payload, r.queue_len);
                     put_u64(&mut payload, r.completed);
@@ -566,13 +569,13 @@ pub fn encode(frame: &Frame) -> Result<Vec<u8>, DfqError> {
         }
         Frame::ListRequest | Frame::Shutdown | Frame::Ok => {}
         Frame::ListResponse { models } => {
-            if models.len() > u16::MAX as usize {
+            let Ok(n_models) = u16::try_from(models.len()) else {
                 return Err(DfqError::wire(
                     WireFault::Malformed,
                     "too many models for a list frame",
                 ));
-            }
-            put_u16(&mut payload, models.len() as u16);
+            };
+            put_u16(&mut payload, n_models);
             for m in models {
                 put_str16(&mut payload, m)?;
             }

@@ -1,0 +1,177 @@
+//! Property tests for the static plan verifier (`dfq::analysis`):
+//! every plan the compiler emits — integer, unfused-ablation, fp —
+//! must verify **clean** over random fused graphs (zero false
+//! positives is load-bearing: `ExecPlan::compile` runs the verifier on
+//! every compile in debug builds, so one false positive breaks the
+//! whole suite), integer steps must all carry proved output ranges,
+//! and runtime values must stay inside them — `cargo test` builds with
+//! debug assertions, so the integer executor's per-step range
+//! cross-check runs on every execution below.
+
+use std::collections::HashMap;
+
+use dfq::analysis;
+use dfq::engine::int::IntEngine;
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::prelude::*;
+
+/// A random residual CNN over an 8x8x3 input (same generator shape as
+/// `prop_plan.rs`: strides keep the spatial size a power of two, so an
+/// optional gap+dense head is always integer-exact).
+fn random_model(rng: &mut Pcg) -> (Graph, HashMap<String, FoldedParams>) {
+    let mut modules = Vec::new();
+    let mut ch = rng.int_range(2, 5) as usize;
+    modules.push(UnifiedModule {
+        name: "stem".into(),
+        kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: ch, stride: 1 },
+        src: "input".into(),
+        res: None,
+        relu: true,
+    });
+    let mut prev = "stem".to_string();
+    let n_blocks = rng.int_range(1, 4);
+    for i in 0..n_blocks {
+        let name = format!("c{i}");
+        let stride = if rng.f32() < 0.3 { 2 } else { 1 };
+        let cout = if stride == 1 && rng.f32() < 0.5 {
+            ch
+        } else {
+            rng.int_range(2, 6) as usize
+        };
+        let res = (stride == 1 && cout == ch && rng.f32() < 0.6).then(|| prev.clone());
+        let k = if rng.f32() < 0.5 { 1 } else { 3 };
+        modules.push(UnifiedModule {
+            name: name.clone(),
+            kind: ModuleKind::Conv { kh: k, kw: k, cin: ch, cout, stride },
+            src: prev.clone(),
+            res,
+            relu: rng.f32() < 0.7,
+        });
+        ch = cout;
+        prev = name;
+    }
+    if rng.f32() < 0.7 {
+        modules.push(UnifiedModule {
+            name: "gap".into(),
+            kind: ModuleKind::Gap,
+            src: prev.clone(),
+            res: None,
+            relu: false,
+        });
+        modules.push(UnifiedModule {
+            name: "fc".into(),
+            kind: ModuleKind::Dense { cin: ch, cout: 5 },
+            src: "gap".into(),
+            res: None,
+            relu: false,
+        });
+    }
+    let graph = Graph { name: "rand".into(), input_hwc: (8, 8, 3), modules };
+    let mut folded = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+            },
+        );
+    }
+    (graph, folded)
+}
+
+fn images(rng: &mut Pcg, n: usize) -> Tensor {
+    Tensor::from_vec(&[n, 8, 8, 3], (0..n * 192).map(|_| rng.normal()).collect())
+}
+
+fn calibrated_spec(
+    graph: &Graph,
+    folded: &HashMap<String, FoldedParams>,
+    rng: &mut Pcg,
+) -> QuantSpec {
+    let session = Session::from_graph(graph.clone(), folded.clone()).unwrap();
+    let cm = session.calibrate(CalibConfig::default(), &images(rng, 1)).unwrap();
+    cm.spec().clone()
+}
+
+#[test]
+fn prop_every_compiled_plan_verifies_clean() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg::new(67000 + seed * 151);
+        let (graph, folded) = random_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+
+        let int = ExecPlan::compile(&graph, &spec, graph.input_hwc).unwrap();
+        let r = analysis::verify(&int);
+        assert!(r.ok(), "seed {seed}: int plan faults: {:?}", r.faults);
+        assert!(r.quantized);
+        for c in &r.steps {
+            // every integer step carries a proved range with i32 headroom
+            let Some((lo, hi)) = c.out_range else {
+                panic!("seed {seed}: step {} ({}) has no proved range", c.step, c.module);
+            };
+            assert!(lo <= hi, "seed {seed}: step {} range inverted", c.step);
+            assert!(
+                c.peak <= i32::MAX as i128,
+                "seed {seed}: step {} peak {} exceeds i32",
+                c.step,
+                c.peak
+            );
+        }
+
+        let mut pre = HashMap::new();
+        for m in graph.weight_modules() {
+            pre.insert(m.name.clone(), rng.int_range(2, 6) as i32);
+        }
+        let unf = ExecPlan::compile_unfused(&graph, &spec, &pre, graph.input_hwc).unwrap();
+        let r = analysis::verify(&unf);
+        assert!(r.ok(), "seed {seed}: unfused plan faults: {:?}", r.faults);
+
+        let fp = ExecPlan::compile_fp(&graph, graph.input_hwc).unwrap();
+        let r = analysis::verify(&fp);
+        assert!(r.ok(), "seed {seed}: fp plan faults: {:?}", r.faults);
+        assert!(!r.quantized, "fp plans carry no integer constants");
+    }
+}
+
+#[test]
+fn prop_runtime_outputs_stay_inside_proved_ranges() {
+    // `cargo test` builds with debug assertions, so the integer
+    // executor cross-checks every step's output against the verifier's
+    // range as it runs — a completed run IS the per-step assertion.
+    // The final output is additionally checked here against the last
+    // step's proved range through the public report.
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(71000 + seed * 89);
+        let (graph, folded) = random_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+        let eng = IntEngine::new(&graph, &folded, &spec);
+        let plan = eng.plan().unwrap();
+        let report = analysis::verify(&plan);
+        let (lo, hi) = report
+            .steps
+            .last()
+            .and_then(|c| c.out_range)
+            .expect("integer plans prove a range for every step");
+        for &b in &[1usize, 3] {
+            let x = images(&mut rng, b);
+            let out = eng.run(&x).unwrap();
+            for &v in &out.data {
+                assert!(
+                    v >= lo && v <= hi,
+                    "seed {seed} batch {b}: output {v} outside proved [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+}
