@@ -26,6 +26,7 @@ use dfq::quant::algo1::{self, ModuleProblem, SearchConfig};
 use dfq::quant::scheme;
 use dfq::report::bench::{hotpath_json, BenchEntry};
 use dfq::tensor::im2col::{im2col, Padding};
+use dfq::tensor::kernels::{fused_gemm_into, pack_panels, FusedEpi, PackDtype};
 use dfq::tensor::{ops_int, TensorI32};
 use dfq::util::timer::{bench, fmt_secs, Stats};
 
@@ -90,6 +91,49 @@ fn main() {
         std::hint::black_box(ops_int::gemm_i32(&a, &b, m, k, n));
     });
     rec.report("int GEMM 256x576x64", (m * k * n) as f64, "GMAC/s", &st);
+
+    // --- kernel emission: fused packed GEMM+epilogue vs the reference
+    //     GEMM + separate int_epilogue sweep, same shape. The fused
+    //     kernel reads i8-packed panels and applies bias/shift/clamp
+    //     in-tile; bit-identity is asserted below, not assumed. ---
+    let bias: Vec<i32> = (0..n).map(|_| rng.int_range(-4096, 4096) as i32).collect();
+    let epi = FusedEpi { out_shift: 9, res_shift: 0, qmin: 0, qmax: 255 };
+    let reference = || {
+        let mut c = ops_int::gemm_i32(&a, &b, m, k, n);
+        for chunk in c.chunks_exact_mut(n) {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                let x = v.wrapping_add(bias[j]);
+                *v = scheme::shift_round(x, epi.out_shift).clamp(epi.qmin, epi.qmax);
+            }
+        }
+        c
+    };
+    let st_ref = bench(micro.0, micro.1, || {
+        std::hint::black_box(reference());
+    });
+    rec.report("ref GEMM+epilogue 256x576x64", (m * k * n) as f64, "GMAC/s", &st_ref);
+    let packed = pack_panels(&b, k, n, PackDtype::I8).expect("codes fit i8 panels");
+    let mut fused_out = vec![0i32; m * n];
+    let st_fused = bench(micro.0, micro.1, || {
+        fused_gemm_into(&a, &packed, &bias, None, epi, m, &mut fused_out, 1);
+        std::hint::black_box(&fused_out);
+    });
+    rec.report(
+        "fused packed GEMM+epilogue 256x576x64",
+        (m * k * n) as f64,
+        "GMAC/s",
+        &st_fused,
+    );
+    println!(
+        "  -> {:.2}x vs reference GEMM + separate epilogue",
+        st_ref.median() / st_fused.median()
+    );
+    fused_gemm_into(&a, &packed, &bias, None, epi, m, &mut fused_out, 1);
+    assert_eq!(
+        fused_out,
+        reference(),
+        "fused packed kernel must be bit-identical to the reference"
+    );
 
     // --- f32 GEMM, same shape (the FP oracle's core) ---
     let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();

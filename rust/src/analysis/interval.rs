@@ -19,7 +19,11 @@
 //! * **precision-loss** — no output requantization shift collapses the
 //!   entire incoming value range to zero (every bit of signal gone);
 //! * **clamp-range** — every clamp is non-inverted and a subset of its
-//!   target dtype (the n-bit code range the next step assumes).
+//!   target dtype (the n-bit code range the next step assumes);
+//! * **pack-width** — every step's selected packed-weight storage
+//!   ([`crate::tensor::kernels::PackDtype`]) is at least as wide as the
+//!   range the calibrated bit-width licenses, so bind-time panel
+//!   packing can never truncate a weight code.
 //!
 //! Inputs, weights and biases are assumed in-contract: codes produced
 //! by `quantize_val`, which clamps to the signed n-bit range.
@@ -29,6 +33,7 @@
 use crate::engine::plan::{ExecPlan, GapOp, GemmStep, Op, QuantEpi};
 use crate::error::PlanFaultKind;
 use crate::quant::scheme;
+use crate::tensor::kernels::PackDtype;
 
 use super::PlanFault;
 
@@ -201,6 +206,22 @@ fn gemm_step(
     res: Option<Iv>,
     peak: &mut i128,
 ) -> Result<Iv, Raw> {
+    // the packed weight storage must be at least as wide as the range
+    // the calibrated bit-width licenses — narrower storage would reject
+    // legitimate codes at bind time (the packer narrows via `try_from`,
+    // so the failure is a typed error, but it is still a broken plan)
+    let licensed = PackDtype::licensed(n_bits);
+    if g.kernel.pack.bits() < licensed.bits() {
+        return Err((
+            PlanFaultKind::PackWidth,
+            format!(
+                "packed weight storage {} is narrower than the {licensed} \
+                 the {n_bits}-bit calibration licenses — weight codes \
+                 cannot be bound without truncation",
+                g.kernel.pack
+            ),
+        ));
+    }
     let signed = Iv::new(scheme::qrange(n_bits, false).0, scheme::qrange(n_bits, false).1);
     // K products, each straddling zero (weights span zero), so every
     // wrapping prefix sum lies inside the full K-term bound

@@ -76,6 +76,13 @@ const TARGETS: &[Target] = &[
         guarded: &[],
     },
     Target {
+        file: "rust/src/tensor/kernels.rs",
+        warm: &["fused_gemm_into", "fused_rows", "fused_rows_t", "fused_tile"],
+        // bind-time, once per plan: allocates the panel storage by
+        // design, but must still narrow via `try_from` and never panic
+        guarded: &["pack_panels", "fill_panels"],
+    },
+    Target {
         file: "rust/src/coordinator/pool.rs",
         warm: &["worker_loop", "count_down", "is_done", "wait_timeout"],
         guarded: &["run"],

@@ -226,9 +226,10 @@ mod tests {
     use std::collections::HashMap;
 
     use super::*;
-    use crate::engine::plan::{Op, QuantEpi};
+    use crate::engine::plan::{KernelChoice, Op, QuantEpi};
     use crate::graph::{Graph, ModuleKind, UnifiedModule};
     use crate::quant::params::{ModuleShifts, QuantSpec};
+    use crate::tensor::kernels::PackDtype;
 
     fn resnet_like() -> Graph {
         Graph {
@@ -291,6 +292,14 @@ mod tests {
 
     fn has(report: &VerifyReport, kind: PlanFaultKind, step: usize) -> bool {
         report.faults.iter().any(|f| f.kind == kind && f.step == step)
+    }
+
+    fn kern_mut(plan: &mut ExecPlan, i: usize) -> &mut KernelChoice {
+        match &mut plan.steps[i].op {
+            Op::Conv(c) => &mut c.g.kernel,
+            Op::Dense(d) => &mut d.g.kernel,
+            Op::Gap(_) => panic!("step {i} is a pooling step"),
+        }
     }
 
     #[test]
@@ -438,6 +447,32 @@ mod tests {
         plan.steps[0].dst = 99;
         let r = verify(&plan);
         assert!(has(&r, PlanFaultKind::SlotBounds, 0), "{:?}", r.faults);
+    }
+
+    #[test]
+    fn narrowed_pack_storage_is_pack_width() {
+        // a 12-bit calibration licenses i16 panels; forcing a step's
+        // selection down to i8 claims storage the codes cannot fit
+        let g = resnet_like();
+        let mut s = QuantSpec::new(12);
+        s.input_frac = 5;
+        for name in ["c0", "c1", "fc"] {
+            s.modules.insert(name.into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        }
+        let mut plan = ExecPlan::compile(&g, &s, g.input_hwc).unwrap();
+        assert_eq!(kern_mut(&mut plan, 0).pack, PackDtype::I16);
+        let r = verify(&plan);
+        assert!(!r.faults.iter().any(|f| f.kind == PlanFaultKind::PackWidth));
+
+        kern_mut(&mut plan, 0).pack = PackDtype::I8;
+        let r = verify(&plan);
+        assert!(has(&r, PlanFaultKind::PackWidth, 0), "{:?}", r.faults);
+        let f = r.faults.iter().find(|f| f.kind == PlanFaultKind::PackWidth).unwrap();
+        assert_eq!(f.module, "c0");
+        assert!(f.message.contains("i8"), "{f}");
+        assert!(f.message.contains("i16"), "{f}");
+        let err: DfqError = f.clone().into();
+        assert!(err.to_string().starts_with("verify/pack-width"), "{err}");
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::engine::plan::{ConvOp, DenseOp, ExecPlan, GapOp, GemmStep, Op, QuantE
 use crate::error::DfqError;
 use crate::quant::scheme;
 use crate::tensor::im2col::{im2col_slice_into, Padding};
+use crate::tensor::kernels::{self, FusedEpi, PackedGemm};
 use crate::tensor::{ops, ops_int};
 
 // ---------------------------------------------------------------------
@@ -276,6 +277,9 @@ pub(crate) struct IntStepView<'a> {
     pub w: &'a [i32],
     /// accumulator-domain bias codes, one per output channel
     pub b: &'a [i32],
+    /// bind-time packed panels for the fused kernel — `None` keeps the
+    /// step on the reference GEMM + `int_epilogue` path
+    pub packed: Option<&'a PackedGemm>,
 }
 
 /// The i32 kernel domain: parameter views indexed by the plan's
@@ -330,16 +334,73 @@ pub(crate) fn aligned_biases(
 
 /// Build the per-param views over a quantized parameter map and the
 /// aligned biases from [`aligned_biases`]. Infallible once bound.
+/// `packed` is the bind-time panel table from [`pack_plan`] — pass an
+/// empty slice to keep every step on the reference kernels.
 pub(crate) fn int_views<'a>(
     plan: &ExecPlan,
     qparams: &'a HashMap<String, QuantizedParams>,
     biases: &'a [Vec<i32>],
+    packed: &'a [PackedGemm],
 ) -> Vec<IntStepView<'a>> {
     plan.param_names()
         .iter()
         .zip(biases)
-        .map(|(name, b)| IntStepView { w: &qparams[name].w.data, b })
+        .enumerate()
+        .map(|(i, (name, b))| IntStepView {
+            w: &qparams[name].w.data,
+            b,
+            packed: packed.get(i),
+        })
         .collect()
+}
+
+/// Pre-pack every weighted step's weight codes into the cache-friendly
+/// column panels its compile-time [`crate::engine::plan::KernelChoice`]
+/// declared — the bind-time half of kernel emission (once per plan, not
+/// per batch). Returns an empty table for plans whose steps all selected
+/// the reference kernels (fp / unfused-ablation plans), so binding costs
+/// nothing there. Coverage/shape errors surface in [`aligned_biases`];
+/// this reports only the (statically impossible, still checked)
+/// narrowing failure.
+pub(crate) fn pack_plan(
+    plan: &ExecPlan,
+    qparams: &HashMap<String, QuantizedParams>,
+) -> Result<Vec<PackedGemm>, DfqError> {
+    let mut out = Vec::with_capacity(plan.param_names().len());
+    for step in &plan.steps {
+        let g = match &step.op {
+            Op::Conv(c) => &c.g,
+            Op::Dense(d) => &d.g,
+            Op::Gap(_) => continue,
+        };
+        if !g.kernel.fused {
+            return Ok(Vec::new());
+        }
+        let name = &plan.param_names()[g.param];
+        let qp = qparams.get(name).ok_or_else(|| {
+            DfqError::graph(format!("module '{name}' has no quantized parameters"))
+        })?;
+        debug_assert_eq!(out.len(), g.param);
+        out.push(kernels::pack_panels(
+            &qp.w.data,
+            g.kdim,
+            g.cout,
+            g.kernel.pack,
+        )?);
+    }
+    Ok(out)
+}
+
+/// The fused-epilogue constants of a step, for
+/// [`kernels::fused_gemm_into`] (the non-ablation subset of `QuantEpi`).
+#[inline]
+fn fused_epi(q: &QuantEpi) -> FusedEpi {
+    FusedEpi {
+        out_shift: q.out_shift,
+        res_shift: q.res_shift,
+        qmin: q.qmin,
+        qmax: q.qmax,
+    }
 }
 
 /// The shared integer GEMM epilogue — fused (bias + residual align +
@@ -432,13 +493,48 @@ impl Domain for IntDomain<'_> {
     ) -> Result<(), DfqError> {
         let Some(q) = &c.g.q else { return Err(no_epilogue_err()) };
         let p = &self.params[c.g.param];
-        im2col_slice_into(
-            src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
-        );
         let m = n * c.ho * c.wo;
         // exact-size take_uninit upstream: the GEMM overwrites every
         // element, no zero fill needed
         debug_assert_eq!(out.len(), m * c.g.cout);
+        if let Some(pk) = p.packed {
+            if q.unfused.is_none() {
+                // emitted kernel: packed panels, epilogue fused in-tile
+                if c.g.kernel.elide_im2col {
+                    // 1x1 stride-1 SAME: the patch matrix IS the input
+                    // buffer — run the GEMM over the activation in place
+                    kernels::fused_gemm_into(
+                        src,
+                        pk,
+                        p.b,
+                        res,
+                        fused_epi(q),
+                        m,
+                        out,
+                        threads,
+                    );
+                    return Ok(());
+                }
+                im2col_slice_into(
+                    src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same,
+                    patches,
+                );
+                kernels::fused_gemm_into(
+                    &patches[..m * c.g.kdim],
+                    pk,
+                    p.b,
+                    res,
+                    fused_epi(q),
+                    m,
+                    out,
+                    threads,
+                );
+                return Ok(());
+            }
+        }
+        im2col_slice_into(
+            src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
+        );
         ops_int::gemm_i32_into(
             &patches[..m * c.g.kdim],
             p.w,
@@ -463,6 +559,12 @@ impl Domain for IntDomain<'_> {
     ) -> Result<(), DfqError> {
         let Some(q) = &d.g.q else { return Err(no_epilogue_err()) };
         let p = &self.params[d.g.param];
+        if let Some(pk) = p.packed {
+            if q.unfused.is_none() {
+                kernels::fused_gemm_into(src, pk, p.b, res, fused_epi(q), n, out, threads);
+                return Ok(());
+            }
+        }
         ops_int::gemm_i32_into(src, p.w, n, d.g.kdim, d.g.cout, out, threads);
         int_epilogue(q, d.g.cout, p.b, res, out);
         Ok(())
@@ -586,11 +688,18 @@ impl Domain for FpDomain<'_> {
         _threads: usize,
     ) -> Result<(), DfqError> {
         let p = &self.params[c.g.param];
-        im2col_slice_into(
-            src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
-        );
         let m = n * c.ho * c.wo;
-        ops::gemm_f32_into(&patches[..m * c.g.kdim], p.w, m, c.g.kdim, c.g.cout, out);
+        if c.g.kernel.elide_im2col {
+            // 1x1 stride-1 SAME: the patch matrix equals the input
+            // buffer element-for-element, so the GEMM result is
+            // bit-identical with the copy skipped
+            ops::gemm_f32_into(src, p.w, m, c.g.kdim, c.g.cout, out);
+        } else {
+            im2col_slice_into(
+                src, n, c.in_h, c.in_w, c.cin, c.kh, c.kw, c.stride, Padding::Same, patches,
+            );
+            ops::gemm_f32_into(&patches[..m * c.g.kdim], p.w, m, c.g.kdim, c.g.cout, out);
+        }
         fp_epilogue(&c.g, p.b, res, out);
         Ok(())
     }

@@ -10,7 +10,11 @@
 //! retain-everything interpreter: calibration and the fake-quant
 //! baselines read every intermediate (and the transform hook must fire
 //! per module). The two paths use identical arithmetic order and are
-//! bit-identical (`rust/tests/prop_plan.rs`).
+//! bit-identical (`rust/tests/prop_plan.rs`). The plan path also honors
+//! the compile-time kernel selection where it applies to f32: a 1×1
+//! stride-1 conv's im2col is elided (the patch matrix equals the input
+//! buffer element-for-element, so the GEMM is bit-identical with the
+//! copy skipped).
 //!
 //! Malformed graphs (dangling names, missing parameters, shape
 //! mismatches) surface as typed [`DfqError`]s — this engine no longer

@@ -433,7 +433,11 @@ impl<'g> IntEngine<'g> {
         scratch: &mut Scratch,
     ) -> Result<TensorI32, DfqError> {
         let biases = exec::aligned_biases(plan, &self.qparams)?;
-        let views = exec::int_views(plan, &self.qparams, &biases);
+        // bind-time kernel emission: panels repack per call here (this
+        // path already binds biases per call); the deploy engine packs
+        // once and reuses across every batch
+        let packed = exec::pack_plan(plan, &self.qparams)?;
+        let views = exec::int_views(plan, &self.qparams, &biases, &packed);
         let out = exec::execute(
             plan,
             &exec::IntDomain { params: &views },

@@ -16,7 +16,12 @@
 //!   calibrated [`QuantSpec`], and
 //! * **buffer slots** are assigned by an activation-liveness pass, so an
 //!   executor needs exactly `slot_count` live buffers (one arena per
-//!   in-flight pass) instead of a name-keyed map of every activation.
+//!   in-flight pass) instead of a name-keyed map of every activation, and
+//! * a **kernel variant** is selected per GEMM step ([`KernelChoice`]):
+//!   integer plans emit the packed fused-epilogue kernel
+//!   ([`crate::tensor::kernels`]) with the storage width the calibrated
+//!   bit-range licenses, and 1×1 stride-1 convs elide im2col entirely
+//!   (the patch matrix is the input buffer).
 //!
 //! All graph/spec validation errors — a spec that doesn't cover a
 //! module, a dangling `src`/`res`, a residual shape mismatch, a
@@ -38,6 +43,7 @@ use crate::graph::{Graph, ModuleKind};
 use crate::quant::params::QuantSpec;
 use crate::quant::scheme;
 use crate::tensor::im2col::{conv_geometry, Padding};
+use crate::tensor::kernels::PackDtype;
 
 /// Per-image shape of a value in the plan (the batch dimension is the
 /// executor's runtime parameter).
@@ -167,6 +173,27 @@ pub(crate) struct UnfusedEpi {
     pub final_shift: i32,
 }
 
+/// The kernel variant selected for one GEMM-backed step — resolved at
+/// compile time alongside the shapes and shift constants, observable in
+/// the plan's `Display` dump (`dfq inspect --plan` / `dfq verify
+/// --plan`). The executor never re-derives this on the hot path.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct KernelChoice {
+    /// run the packed fused-epilogue kernel
+    /// ([`crate::tensor::kernels::fused_gemm_into`]) instead of the
+    /// reference GEMM + separate `int_epilogue` sweep — selected for
+    /// integer plans without the unfused ablation
+    pub fused: bool,
+    /// skip im2col entirely: a 1×1 stride-1 SAME conv's patch matrix
+    /// **is** the input buffer, so the GEMM reads activations in place
+    /// (both numeric domains honor this)
+    pub elide_im2col: bool,
+    /// packed weight storage width the calibrated bit-range licenses
+    /// (codes are clamped to `qrange(n_bits, false)` at quantize time;
+    /// `dfq verify` re-checks the licensing — `PackWidth` fault)
+    pub pack: PackDtype,
+}
+
 /// Shared fields of the two GEMM-backed steps (conv, dense).
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct GemmStep {
@@ -181,6 +208,8 @@ pub(crate) struct GemmStep {
     pub relu: bool,
     /// integer epilogue constants — `Some` iff compiled with a spec
     pub q: Option<QuantEpi>,
+    /// the compile-time kernel selection for this step
+    pub kernel: KernelChoice,
 }
 
 /// An im2col convolution step with compile-time geometry.
@@ -384,6 +413,15 @@ impl ExecPlan {
             let src_v = value_of[m.src.as_str()];
             let src_shape = shapes[src_v];
             let n_bits = spec.map(|s| s.n_bits).unwrap_or(0);
+            // kernel emission: integer plans without the unfused ablation
+            // run the packed fused-epilogue kernel; the storage width is
+            // licensed by the calibrated bit-range (codes are clamped to
+            // qrange(n_bits, false) at quantize time)
+            let fused = spec.is_some() && pre_frac.is_none();
+            let pack = match spec {
+                Some(_) => PackDtype::licensed(n_bits),
+                None => PackDtype::I32,
+            };
             // integer epilogue constants for a weighted module — the one
             // shared folding of the Eq. 3–4 algebra
             let quant_for = || -> Result<Option<QuantEpi>, DfqError> {
@@ -416,6 +454,11 @@ impl ExecPlan {
                         cout: *cout,
                         relu: m.relu,
                         q: quant_for()?,
+                        kernel: KernelChoice {
+                            fused,
+                            elide_im2col: *kh == 1 && *kw == 1 && *stride == 1,
+                            pack,
+                        },
                     };
                     params.push(m.name.clone());
                     (
@@ -448,6 +491,9 @@ impl ExecPlan {
                         cout: *cout,
                         relu: m.relu,
                         q: quant_for()?,
+                        // dense reads the flat activation directly — there
+                        // is no patch matrix to elide
+                        kernel: KernelChoice { fused, elide_im2col: false, pack },
                     };
                     params.push(m.name.clone());
                     (Op::Dense(DenseOp { g }), ValShape::Flat { features: *cout })
@@ -695,6 +741,18 @@ impl std::fmt::Display for ExecPlan {
                 },
                 Op::Gap(_) => String::new(),
             };
+            let kern = match &s.op {
+                Op::Conv(ConvOp { g, .. }) | Op::Dense(DenseOp { g }) => {
+                    let variant = if g.kernel.fused {
+                        format!("fused/{}", g.kernel.pack)
+                    } else {
+                        "ref".to_string()
+                    };
+                    let elide = if g.kernel.elide_im2col { "+elide" } else { "" };
+                    format!("  kern[{variant}{elide}]")
+                }
+                Op::Gap(_) => String::new(),
+            };
             let freed = if s.release.is_empty() {
                 String::new()
             } else {
@@ -709,7 +767,7 @@ impl std::fmt::Display for ExecPlan {
             };
             writeln!(
                 f,
-                "  {i:>3} {kind:<5} {:<16} s{}{res} -> s{} [{}]  {detail}{relu}{shifts}{freed}",
+                "  {i:>3} {kind:<5} {:<16} s{}{res} -> s{} [{}]  {detail}{relu}{kern}{shifts}{freed}",
                 s.name, s.src, s.dst, s.out
             )?;
         }
@@ -804,6 +862,82 @@ mod tests {
         assert_eq!(q.res_shift, 7);
         assert_eq!((q.qmin, q.qmax), (0, 255)); // fused relu -> unsigned
         assert_eq!(plan.quant.unwrap().out_frac, 4);
+    }
+
+    #[test]
+    fn kernel_selection_resolved_at_compile() {
+        // a model with a 1x1 stride-1 conv (elidable), a 1x1 stride-2
+        // conv (subsamples -> NOT elidable), and a dense head
+        let g = Graph {
+            name: "k".into(),
+            input_hwc: (4, 4, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "p0".into(),
+                    kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 2, cout: 4, stride: 1 },
+                    src: "input".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "p1".into(),
+                    kind: ModuleKind::Conv { kh: 1, kw: 1, cin: 4, cout: 4, stride: 2 },
+                    src: "p0".into(),
+                    res: None,
+                    relu: true,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 2 * 2 * 4, cout: 3 },
+                    src: "p1".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut s = QuantSpec::new(8);
+        s.input_frac = 5;
+        for name in ["p0", "p1", "fc"] {
+            s.modules.insert(name.into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        }
+        let plan = ExecPlan::compile(&g, &s, g.input_hwc).unwrap();
+        let kern = |i: usize| match &plan.steps[i].op {
+            Op::Conv(c) => c.g.kernel,
+            Op::Dense(d) => d.g.kernel,
+            Op::Gap(_) => panic!("gemm step"),
+        };
+        // 8-bit codes license i8 panels; every step runs fused
+        for i in 0..3 {
+            assert!(kern(i).fused, "step {i}");
+            assert_eq!(kern(i).pack, PackDtype::I8, "step {i}");
+        }
+        assert!(kern(0).elide_im2col, "1x1 stride-1 elides im2col");
+        assert!(!kern(1).elide_im2col, "1x1 stride-2 subsamples");
+        assert!(!kern(2).elide_im2col, "dense has no patch matrix");
+        // selection is observable in the dump
+        let dump = plan.to_string();
+        assert!(dump.contains("kern[fused/i8+elide]"), "{dump}");
+        assert!(dump.contains("kern[fused/i8]"), "{dump}");
+        // a wider bit-range licenses wider storage
+        let mut s12 = QuantSpec::new(12);
+        s12.input_frac = 5;
+        for name in ["p0", "p1", "fc"] {
+            s12.modules.insert(name.into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        }
+        let plan12 = ExecPlan::compile(&g, &s12, g.input_hwc).unwrap();
+        let Op::Conv(c) = &plan12.steps[0].op else { panic!("conv") };
+        assert_eq!(c.g.kernel.pack, PackDtype::I16);
+        // the unfused ablation and the fp oracle stay on the reference
+        // kernels (the ablation's extra quant points cannot fuse)
+        let pre: HashMap<String, i32> = HashMap::new();
+        let plan_u = ExecPlan::compile_unfused(&g, &s, &pre, g.input_hwc).unwrap();
+        let Op::Conv(c) = &plan_u.steps[0].op else { panic!("conv") };
+        assert!(!c.g.kernel.fused);
+        let plan_fp = ExecPlan::compile_fp(&g, g.input_hwc).unwrap();
+        let Op::Conv(c) = &plan_fp.steps[0].op else { panic!("conv") };
+        assert!(!c.g.kernel.fused);
+        assert!(c.g.kernel.elide_im2col, "fp plans elide 1x1 im2col too");
+        assert!(plan_fp.to_string().contains("kern[ref+elide]"));
     }
 
     #[test]

@@ -155,6 +155,9 @@ pub enum PlanFaultKind {
     DeadStep,
     /// a step addresses a slot outside the plan's `slot_count`
     SlotBounds,
+    /// a step's packed weight storage is narrower than the calibrated
+    /// bit-range licenses — codes could truncate at bind time
+    PackWidth,
 }
 
 impl PlanFaultKind {
@@ -169,6 +172,7 @@ impl PlanFaultKind {
             PlanFaultKind::ReadBeforeWrite => "read-before-write",
             PlanFaultKind::DeadStep => "dead-step",
             PlanFaultKind::SlotBounds => "slot-bounds",
+            PlanFaultKind::PackWidth => "pack-width",
         }
     }
 }
@@ -353,6 +357,7 @@ mod tests {
             PlanFaultKind::ReadBeforeWrite,
             PlanFaultKind::DeadStep,
             PlanFaultKind::SlotBounds,
+            PlanFaultKind::PackWidth,
         ];
         let labels: std::collections::HashSet<&str> =
             kinds.iter().map(|k| k.label()).collect();

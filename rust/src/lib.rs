@@ -128,6 +128,28 @@
 //! inspect --plan` dumps the schedule. One [`engine::exec::Scratch`]
 //! arena serves one in-flight executor — the buffer-reuse contract.
 //!
+//! ### Kernel emission
+//!
+//! `compile` also **selects a kernel per step** and binding **pre-packs
+//! the weights** for it ([`tensor::kernels`]): integer steps whose
+//! epilogue constants are fully resolved run a register-tiled GEMM over
+//! weights packed into cache-friendly K×16 column panels, with the
+//! bias/residual-align/shift/clamp epilogue applied **inside the tile**
+//! (no separate epilogue sweep), and 1×1 stride-1 convolutions skip
+//! im2col entirely (the patch matrix *is* the input buffer — both
+//! domains elide the copy). Panel storage is **range-licensed**: the
+//! calibrated bit-width proves whether weight codes fit `i8`/`i16`/`i32`,
+//! the packer checks every value (`try_from`, typed error — never a
+//! silent truncation), and the static verifier rejects any plan whose
+//! packed width is narrower than its calibration licenses
+//! (`pack-width` fault). Exactness is non-negotiable: wrapping-i32
+//! accumulation is associative, so the fused/packed path is
+//! **bit-identical** to the reference kernels for every shape, batch,
+//! thread count and the unfused ablation (`tests/prop_kernels.rs`);
+//! the `kern[..]` column of `dfq inspect --plan` shows each step's
+//! selection, and `benches/hotpath.rs` records the fused-vs-reference
+//! delta with an in-bench bit-identity assert.
+//!
 //! The integer deploy engine is **data-parallel**: it shards each batch
 //! along N across the coordinator pool (persistent parked workers — no
 //! spawn per batch) and reuses per-shard scratch arenas (im2col patches,
@@ -135,9 +157,9 @@
 //! no large allocations; batches too small to shard fall back to
 //! row-blocked GEMM. Output is bit-identical to the serial engine for
 //! every thread count — image rows are independent. `run_batch` on any
-//! engine is safe to call concurrently. Future scaling layers
-//! (multi-node sharding, NUMA pinning, fused-kernel emission) target the
-//! plan IR.
+//! engine is safe to call concurrently. It packs each plan's weights
+//! once at build and reuses the panels for every batch. Future scaling
+//! layers (multi-node sharding, NUMA pinning) target the plan IR.
 //!
 //! ## Static verification: `dfq::analysis`
 //!

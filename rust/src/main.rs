@@ -193,8 +193,10 @@ COMMANDS:
   detect     Table-4 style detection eval (--bits, --eval-n)
   hwcost     RTL cost model (--clock MHz)
   inspect    dataflow analysis + quant-point report (--model [--plan];
-             --plan appends the static verifier's per-step proved-range
-             column to the schedule dump)
+             --plan dumps the schedule with each step's selected kernel
+             variant / packed-weight storage — the kern[...] column —
+             and appends the static verifier's per-step proved-range
+             column)
   verify     statically verify compiled plans: interval/bit-width
              soundness of every integer epilogue (no i32 overflow, no
              out-of-width or signal-destroying shift, every clamp inside
@@ -422,8 +424,12 @@ fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
         let report = dfq::analysis::verify(&plan);
         print!("{}", report.render());
         println!(
-            "(integer plans additionally fold in the calibrated shift/clamp \
-             constants and get proved per-step ranges; see `dfq verify`)"
+            "(kern[...] is each step's compile-time kernel selection: \
+             fused/<dtype> = packed-panel GEMM with the epilogue applied \
+             in-tile, ref = reference GEMM + separate epilogue sweep, \
+             +elide = 1x1 stride-1 im2col elided. Integer plans \
+             additionally fold in the calibrated shift/clamp constants \
+             and get proved per-step ranges; see `dfq verify`)"
         );
         return Ok(());
     }

@@ -26,6 +26,7 @@ use crate::graph::bn_fold::FoldedParams;
 use crate::graph::Graph;
 use crate::quant::scheme;
 use crate::runtime::{ArgValue, PjrtWorker};
+use crate::tensor::kernels::PackedGemm;
 use crate::tensor::{Tensor, TensorI32};
 
 use super::CalibratedModel;
@@ -236,6 +237,10 @@ pub(crate) struct IntDeployEngine {
     weights: Vec<TensorI32>,
     /// accumulator-aligned bias codes, same order
     biases: Vec<Vec<i32>>,
+    /// bind-time kernel emission: weights pre-packed into K×NR panels
+    /// (narrowed to the range-licensed dtype) once at build, reused by
+    /// every batch; empty when the plan selected no fused kernels
+    packed: Vec<PackedGemm>,
     out_dim: usize,
     /// fractional bits of the final module's codes (dequant per shard)
     out_frac: i32,
@@ -265,6 +270,9 @@ impl IntDeployEngine {
         let mut qparams =
             crate::engine::int::quantize_params(&cm.graph, &cm.folded, &cm.spec);
         let biases = exec::aligned_biases(&plan, &qparams)?;
+        // pack before the weight tensors are moved out of the map: the
+        // packer reads codes by parameter name
+        let packed = exec::pack_plan(&plan, &qparams)?;
         let weights = plan
             .param_names()
             .iter()
@@ -280,6 +288,7 @@ impl IntDeployEngine {
             plan,
             weights,
             biases,
+            packed,
             threads,
             pool: Pool::new(threads),
             scratch: Mutex::new(Vec::new()),
@@ -322,7 +331,12 @@ impl Engine for IntDeployEngine {
             .weights
             .iter()
             .zip(&self.biases)
-            .map(|(w, bias)| exec::IntStepView { w: &w.data, b: bias })
+            .enumerate()
+            .map(|(i, (w, bias))| exec::IntStepView {
+                w: &w.data,
+                b: bias,
+                packed: self.packed.get(i),
+            })
             .collect();
         // batch-level sharding first; leftover parallelism goes to
         // row-blocked GEMM inside each shard (e.g. N=1 with 4 threads

@@ -1,0 +1,538 @@
+//! **Fused, packed GEMM kernels** — the kernel-emission layer between
+//! [`crate::engine::plan::ExecPlan`] compilation and the integer
+//! executor (ROADMAP Open item 2).
+//!
+//! The reference integer path widens every weight code to an `i32` row
+//! in `(K, N)` layout, runs a scalar GEMM, and then makes a *second*
+//! full pass over the output for the bias/residual/shift/clamp epilogue.
+//! This module removes both costs:
+//!
+//! * **Packed weight panels.** At plan-bind time [`pack_panels`] lays a
+//!   step's weight codes out as cache-friendly column panels in the
+//!   narrowest storage the calibrated bit-width licenses (`i8` for
+//!   `n_bits ≤ 8`, `i16` for `≤ 16`, `i32` otherwise — see
+//!   [`PackDtype::licensed`]). Codes are produced by
+//!   `scheme::quantize_val`, which clamps to the signed `n_bits` range,
+//!   so the narrowing is proven statically; the packer still verifies it
+//!   value-by-value and reports a typed error instead of truncating.
+//! * **In-tile epilogue.** [`fused_gemm_into`] computes a register tile
+//!   of `MR × NR` accumulators over the full K extent and applies the
+//!   Eq. 3–4 epilogue (bias add, residual align-add, rounded shift,
+//!   clamp) **while the accumulators are still in registers** — the
+//!   separate `int_epilogue` sweep, and its extra round trip through
+//!   memory, disappear.
+//!
+//! # The packed-panel layout contract
+//!
+//! A `(K, N)` row-major weight matrix is split along N into
+//! `ceil(N / NR)` panels of `NR = 16` columns. Panel `p` stores its
+//! `K × NR` block contiguously, K-major: element `(kk, j)` of panel `p`
+//! lives at `p*K*NR + kk*NR + j`. The tail panel is **zero-padded** to
+//! `NR` columns — zero weights contribute nothing to any accumulator,
+//! and the epilogue only writes the `nr < NR` real columns, so padding
+//! never reaches the output. This is the layout `dfq::analysis` checks
+//! kernel selections against (`PlanFaultKind::PackWidth`).
+//!
+//! # Exactness
+//!
+//! Wrapping `i32` accumulation is associative and commutative modulo
+//! 2³², so *any* summation order — row tiles, column panels, thread
+//! splits — produces bit-identical accumulators. The in-tile epilogue
+//! calls the same [`crate::quant::scheme`] operators in the same order
+//! as the reference `int_epilogue`, so every fused/packed path is
+//! bit-identical to the reference scalar GEMM + epilogue for all shapes,
+//! batch sizes and thread counts (property-tested in
+//! `tests/prop_kernels.rs`).
+//!
+//! The `fused_*` kernels are **lint-enforced hot paths**
+//! ([`crate::analysis::lint`], `dfq lint`): no panicking calls, no
+//! unchecked narrowing casts, no allocation inside the kernel bodies.
+//! [`pack_panels`] runs once at bind time (guarded: it may allocate,
+//! but must not panic or narrow unchecked — it narrows via `try_from`
+//! with a typed error).
+
+use crate::error::DfqError;
+use crate::quant::scheme;
+
+use super::ops_int::PAR_MIN_ROWS_PER_THREAD;
+
+/// Panel width: columns per packed panel (the register tile's N extent).
+pub const NR: usize = 16;
+/// Row-tile height: output rows accumulated per register tile.
+pub const MR: usize = 4;
+
+/// Storage element of a packed weight panel — the narrowest width the
+/// calibrated bit-range licenses for a step's weight codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackDtype {
+    /// 8-bit storage (`n_bits ≤ 8`)
+    I8,
+    /// 16-bit storage (`8 < n_bits ≤ 16`)
+    I16,
+    /// full-width storage (wider codes, or no proved range)
+    I32,
+}
+
+impl PackDtype {
+    /// The narrowest storage licensed for signed codes of `n_bits`
+    /// (codes are clamped by `scheme::quantize_val` into
+    /// `qrange(n_bits, false)`, so `n_bits ≤ 8` fits `i8`, `≤ 16` fits
+    /// `i16`).
+    pub fn licensed(n_bits: u32) -> PackDtype {
+        if n_bits <= 8 {
+            PackDtype::I8
+        } else if n_bits <= 16 {
+            PackDtype::I16
+        } else {
+            PackDtype::I32
+        }
+    }
+
+    /// Storage width in bits.
+    pub fn bits(&self) -> u32 {
+        match self {
+            PackDtype::I8 => 8,
+            PackDtype::I16 => 16,
+            PackDtype::I32 => 32,
+        }
+    }
+}
+
+impl std::fmt::Display for PackDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PackDtype::I8 => "i8",
+            PackDtype::I16 => "i16",
+            PackDtype::I32 => "i32",
+        })
+    }
+}
+
+/// The storage behind a [`PackedGemm`], by element width.
+#[derive(Clone, Debug)]
+enum PackedPanels {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+    I32(Vec<i32>),
+}
+
+/// One step's weight matrix repacked into column panels (see the
+/// module-level layout contract). Built once at plan-bind time by
+/// [`pack_panels`]; consumed by [`fused_gemm_into`].
+#[derive(Clone, Debug)]
+pub struct PackedGemm {
+    panels: PackedPanels,
+    k: usize,
+    n: usize,
+}
+
+impl PackedGemm {
+    /// The K dimension the panels were packed for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The N dimension (real columns, before tail zero-padding).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The storage width the panels hold.
+    pub fn dtype(&self) -> PackDtype {
+        match self.panels {
+            PackedPanels::I8(_) => PackDtype::I8,
+            PackedPanels::I16(_) => PackDtype::I16,
+            PackedPanels::I32(_) => PackDtype::I32,
+        }
+    }
+}
+
+/// The fused epilogue constants [`fused_gemm_into`] applies in-tile —
+/// the fused (non-ablation) subset of the plan's `QuantEpi`, carried
+/// separately so the tensor layer stays independent of the plan IR.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedEpi {
+    /// output requantization shift (rounded right shift when ≥ 0)
+    pub out_shift: i32,
+    /// residual alignment shift into the accumulator domain
+    pub res_shift: i32,
+    /// output clamp range (unsigned after a fused ReLU)
+    pub qmin: i32,
+    /// see `qmin`
+    pub qmax: i32,
+}
+
+/// Panel element: widened to `i32` inside the accumulator loop.
+trait PackElem: Copy + Send + Sync {
+    /// Widen to the accumulator domain (always a lossless cast).
+    fn widen(self) -> i32;
+}
+
+impl PackElem for i8 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+impl PackElem for i16 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+impl PackElem for i32 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self
+    }
+}
+
+/// Repack a `(K, N)` row-major weight-code matrix into column panels of
+/// `want` storage (bind time, once per plan). Narrowing is checked
+/// value-by-value: a code outside the declared storage is a typed error
+/// (stale spec or corrupted parameters), never a silent truncation.
+pub fn pack_panels(
+    w: &[i32],
+    k: usize,
+    n: usize,
+    want: PackDtype,
+) -> Result<PackedGemm, DfqError> {
+    assert_eq!(w.len(), k * n, "weight matrix does not match K x N");
+    let len = n.div_ceil(NR) * k * NR;
+    let panels = match want {
+        PackDtype::I8 => {
+            let mut p = vec![0i8; len];
+            fill_panels(w, k, n, &mut p, |v| {
+                i8::try_from(v).map_err(|_| narrow_err(v, PackDtype::I8))
+            })?;
+            PackedPanels::I8(p)
+        }
+        PackDtype::I16 => {
+            let mut p = vec![0i16; len];
+            fill_panels(w, k, n, &mut p, |v| {
+                i16::try_from(v).map_err(|_| narrow_err(v, PackDtype::I16))
+            })?;
+            PackedPanels::I16(p)
+        }
+        PackDtype::I32 => {
+            let mut p = vec![0i32; len];
+            fill_panels(w, k, n, &mut p, Ok)?;
+            PackedPanels::I32(p)
+        }
+    };
+    Ok(PackedGemm { panels, k, n })
+}
+
+/// Scatter `w` into the panel layout through a checked narrowing.
+fn fill_panels<E: Copy>(
+    w: &[i32],
+    k: usize,
+    n: usize,
+    out: &mut [E],
+    narrow: impl Fn(i32) -> Result<E, DfqError>,
+) -> Result<(), DfqError> {
+    for pi in 0..n.div_ceil(NR) {
+        let j0 = pi * NR;
+        let nr = (n - j0).min(NR);
+        let base = pi * k * NR;
+        for kk in 0..k {
+            for j in 0..nr {
+                out[base + kk * NR + j] = narrow(w[kk * n + j0 + j])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Out-of-line constructor for the (cold) narrowing-failure error.
+#[cold]
+#[inline(never)]
+fn narrow_err(v: i32, want: PackDtype) -> DfqError {
+    DfqError::data(format!(
+        "weight code {v} does not fit the plan's packed {want} storage \
+         (stale spec or corrupted parameters)"
+    ))
+}
+
+/// `C = A(M,K) × packed(K,N)` **with the integer epilogue fused into the
+/// register tile**: per output element, `acc + bias[j]`
+/// (+ `align(res, res_shift)` when a residual is present), then
+/// `shift_round(·, out_shift).clamp(qmin, qmax)` — the exact reference
+/// `int_epilogue` algebra, applied while the accumulators are still in
+/// registers. `bias` must already be aligned into the accumulator
+/// domain. Rows split across `threads` scoped threads exactly like the
+/// reference GEMM (output rows are independent, so any thread count is
+/// bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_gemm_into(
+    a: &[i32],
+    w: &PackedGemm,
+    bias: &[i32],
+    res: Option<&[i32]>,
+    epi: FusedEpi,
+    m: usize,
+    out: &mut [i32],
+    threads: usize,
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bias.len(), n);
+    assert_eq!(out.len(), m * n);
+    if let Some(r) = res {
+        assert_eq!(r.len(), m * n);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, (m / PAR_MIN_ROWS_PER_THREAD).max(1));
+    if threads == 1 {
+        fused_rows(a, w, bias, res, epi, m, out);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (i, ob) in out.chunks_mut(rows_per * n).enumerate() {
+            let rows = ob.len() / n;
+            let ab = &a[i * rows_per * k..i * rows_per * k + rows * k];
+            let rb = res.map(|r| &r[i * rows_per * n..i * rows_per * n + rows * n]);
+            s.spawn(move || fused_rows(ab, w, bias, rb, epi, rows, ob));
+        }
+    });
+}
+
+/// Single-threaded worker behind [`fused_gemm_into`]: dispatch on the
+/// packed storage width, then tile.
+fn fused_rows(
+    a: &[i32],
+    w: &PackedGemm,
+    bias: &[i32],
+    res: Option<&[i32]>,
+    epi: FusedEpi,
+    m: usize,
+    out: &mut [i32],
+) {
+    match &w.panels {
+        PackedPanels::I8(p) => fused_rows_t(a, p, w.k, w.n, bias, res, epi, m, out),
+        PackedPanels::I16(p) => fused_rows_t(a, p, w.k, w.n, bias, res, epi, m, out),
+        PackedPanels::I32(p) => fused_rows_t(a, p, w.k, w.n, bias, res, epi, m, out),
+    }
+}
+
+/// Monomorphized tile loop: `MR`-row × `NR`-column register tiles over
+/// the packed panels, epilogue applied per tile. Row tails dispatch to
+/// smaller monomorphized tile heights so the inner loops stay fully
+/// unrolled.
+#[allow(clippy::too_many_arguments)]
+fn fused_rows_t<E: PackElem>(
+    a: &[i32],
+    panels: &[E],
+    k: usize,
+    n: usize,
+    bias: &[i32],
+    res: Option<&[i32]>,
+    epi: FusedEpi,
+    m: usize,
+    out: &mut [i32],
+) {
+    let npanels = n.div_ceil(NR);
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = (m - i0).min(MR);
+        for pi in 0..npanels {
+            let j0 = pi * NR;
+            let nr = (n - j0).min(NR);
+            let panel = &panels[pi * k * NR..(pi + 1) * k * NR];
+            match mr {
+                4 => fused_tile::<E, 4>(a, i0, k, panel, bias, res, epi, n, j0, nr, out),
+                3 => fused_tile::<E, 3>(a, i0, k, panel, bias, res, epi, n, j0, nr, out),
+                2 => fused_tile::<E, 2>(a, i0, k, panel, bias, res, epi, n, j0, nr, out),
+                _ => fused_tile::<E, 1>(a, i0, k, panel, bias, res, epi, n, j0, nr, out),
+            }
+        }
+        i0 += mr;
+    }
+}
+
+/// One register tile: accumulate `MR_ × NR` over the full K extent
+/// (K is never blocked — the epilogue needs the finished sum), then
+/// apply the fused epilogue and store only the `nr` real columns.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fused_tile<E: PackElem, const MR_: usize>(
+    a: &[i32],
+    i0: usize,
+    k: usize,
+    panel: &[E],
+    bias: &[i32],
+    res: Option<&[i32]>,
+    epi: FusedEpi,
+    n: usize,
+    j0: usize,
+    nr: usize,
+    out: &mut [i32],
+) {
+    let arows: [&[i32]; MR_] = std::array::from_fn(|r| &a[(i0 + r) * k..(i0 + r + 1) * k]);
+    let mut acc = [[0i32; NR]; MR_];
+    for (p, brow) in panel.chunks_exact(NR).enumerate() {
+        for (accr, arow) in acc.iter_mut().zip(&arows) {
+            let av = arow[p];
+            for (ac, &bv) in accr.iter_mut().zip(brow) {
+                *ac = ac.wrapping_add(av.wrapping_mul(bv.widen()));
+            }
+        }
+    }
+    let bcol = &bias[j0..j0 + nr];
+    for (r, accr) in acc.iter().enumerate() {
+        let row = i0 + r;
+        let orow = &mut out[row * n + j0..row * n + j0 + nr];
+        match res {
+            Some(rs) => {
+                let rrow = &rs[row * n + j0..row * n + j0 + nr];
+                for j in 0..nr {
+                    let v = accr[j]
+                        .wrapping_add(bcol[j])
+                        .wrapping_add(scheme::align(rrow[j], epi.res_shift));
+                    orow[j] = scheme::shift_round(v, epi.out_shift).clamp(epi.qmin, epi.qmax);
+                }
+            }
+            None => {
+                for j in 0..nr {
+                    let v = accr[j].wrapping_add(bcol[j]);
+                    orow[j] = scheme::shift_round(v, epi.out_shift).clamp(epi.qmin, epi.qmax);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops_int;
+    use crate::util::rng::Pcg;
+
+    /// The reference oracle: scalar GEMM, then the epilogue as a
+    /// separate sweep (the exact algebra of `exec::int_epilogue`).
+    fn reference(
+        a: &[i32],
+        w: &[i32],
+        bias: &[i32],
+        res: Option<&[i32]>,
+        epi: FusedEpi,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<i32> {
+        let mut c = ops_int::gemm_i32(a, w, m, k, n);
+        for (row, chunk) in c.chunks_exact_mut(n).enumerate() {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                let mut x = v.wrapping_add(bias[j]);
+                if let Some(r) = res {
+                    x = x.wrapping_add(scheme::align(r[row * n + j], epi.res_shift));
+                }
+                *v = scheme::shift_round(x, epi.out_shift).clamp(epi.qmin, epi.qmax);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn licensed_width_tracks_bits() {
+        assert_eq!(PackDtype::licensed(4), PackDtype::I8);
+        assert_eq!(PackDtype::licensed(8), PackDtype::I8);
+        assert_eq!(PackDtype::licensed(9), PackDtype::I16);
+        assert_eq!(PackDtype::licensed(16), PackDtype::I16);
+        assert_eq!(PackDtype::licensed(17), PackDtype::I32);
+        assert!(PackDtype::I8.bits() < PackDtype::I16.bits());
+    }
+
+    #[test]
+    fn panel_layout_known_values() {
+        // (K=2, N=3): one zero-padded panel; element (kk, j) at kk*NR + j
+        let w = vec![1, 2, 3, 4, 5, 6];
+        let p = pack_panels(&w, 2, 3, PackDtype::I8).unwrap();
+        assert_eq!((p.k(), p.n()), (2, 3));
+        assert_eq!(p.dtype(), PackDtype::I8);
+        let PackedPanels::I8(data) = &p.panels else { panic!("i8 panels") };
+        assert_eq!(data.len(), 2 * NR);
+        assert_eq!(&data[..3], &[1, 2, 3]);
+        assert_eq!(&data[NR..NR + 3], &[4, 5, 6]);
+        // tail padding is zero
+        assert!(data[3..NR].iter().all(|&v| v == 0));
+        assert!(data[NR + 3..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn narrowing_is_checked_not_truncated() {
+        let err = pack_panels(&[200], 1, 1, PackDtype::I8).unwrap_err();
+        assert!(err.to_string().contains("200"), "{err}");
+        assert!(pack_panels(&[200], 1, 1, PackDtype::I16).is_ok());
+        let err = pack_panels(&[40_000], 1, 1, PackDtype::I16).unwrap_err();
+        assert!(err.to_string().contains("i16"), "{err}");
+    }
+
+    #[test]
+    fn fused_matches_reference_across_shapes_dtypes_threads() {
+        let mut rng = Pcg::new(41);
+        // tile-multiple and tail shapes across all three N regimes
+        for &(m, k, n) in &[
+            (8usize, 5usize, 16usize),
+            (7, 9, 13),
+            (33, 17, 37),
+            (64, 24, 96),
+            (50, 11, 130),
+            (1, 1, 1),
+        ] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.int_range(-128, 128) as i32).collect();
+            let w: Vec<i32> = (0..k * n).map(|_| rng.int_range(-128, 128) as i32).collect();
+            let bias: Vec<i32> =
+                (0..n).map(|_| rng.int_range(-4096, 4096) as i32).collect();
+            let r: Vec<i32> = (0..m * n).map(|_| rng.int_range(-128, 128) as i32).collect();
+            let epi = FusedEpi { out_shift: 7, res_shift: 3, qmin: -128, qmax: 127 };
+            for dtype in [PackDtype::I8, PackDtype::I16, PackDtype::I32] {
+                let packed = pack_panels(&w, k, n, dtype).unwrap();
+                for res in [None, Some(r.as_slice())] {
+                    let want = reference(&a, &w, &bias, res, epi, m, k, n);
+                    for threads in [1usize, 2, 4] {
+                        let mut got = vec![7i32; m * n]; // dirty buffer
+                        fused_gemm_into(&a, &packed, &bias, res, epi, m, &mut got, threads);
+                        assert_eq!(
+                            got, want,
+                            "m={m} k={k} n={n} {dtype} res={} threads={threads}",
+                            res.is_some()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn left_shift_and_unsigned_clamp_epilogues() {
+        // negative out_shift (left shift) and a fused-ReLU clamp range
+        let mut rng = Pcg::new(42);
+        let (m, k, n) = (5, 4, 18);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.int_range(-16, 16) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.int_range(-16, 16) as i32).collect();
+        let bias: Vec<i32> = (0..n).map(|_| rng.int_range(-64, 64) as i32).collect();
+        let epi = FusedEpi { out_shift: -2, res_shift: 0, qmin: 0, qmax: 255 };
+        let packed = pack_panels(&w, k, n, PackDtype::I8).unwrap();
+        let want = reference(&a, &w, &bias, None, epi, m, k, n);
+        let mut got = vec![0i32; m * n];
+        fused_gemm_into(&a, &packed, &bias, None, epi, m, &mut got, 1);
+        assert_eq!(got, want);
+        assert!(got.iter().all(|&v| (0..=255).contains(&v)));
+    }
+
+    #[test]
+    fn k_zero_is_epilogue_over_zeros() {
+        let packed = pack_panels(&[], 0, 3, PackDtype::I8).unwrap();
+        let epi = FusedEpi { out_shift: 1, res_shift: 0, qmin: -8, qmax: 7 };
+        let mut got = vec![9i32; 6];
+        fused_gemm_into(&[], &packed, &[2, 4, 6], None, epi, 2, &mut got, 1);
+        // shift_round(bias, 1) per column
+        assert_eq!(got, vec![1, 2, 3, 1, 2, 3]);
+    }
+}

@@ -8,6 +8,7 @@
 //! structurally comparable.
 
 pub mod im2col;
+pub mod kernels;
 pub mod ops;
 pub mod ops_int;
 

@@ -23,8 +23,9 @@ use super::im2col::{im2col, im2col_into, Padding};
 use super::{Shape, TensorI32};
 
 /// Below this many output rows per worker, scoped-thread spawn overhead
-/// beats the win — the row-block split degrades to fewer workers.
-const PAR_MIN_ROWS_PER_THREAD: usize = 32;
+/// beats the win — the row-block split degrades to fewer workers
+/// (shared with the fused kernels in [`super::kernels`]).
+pub(crate) const PAR_MIN_ROWS_PER_THREAD: usize = 32;
 
 /// C(M,N) = A(M,K) * B(K,N) with i32 accumulation (single-threaded,
 /// allocating — see [`gemm_i32_into`] for the scratch/parallel form).
@@ -79,8 +80,9 @@ pub fn gemm_i32_into(
 /// * `n <= 64` (most of our conv channels): accumulate each output row in
 ///   a fixed stack buffer so LLVM keeps it in vector registers across the
 ///   whole K loop — one store per output element instead of one per MAC;
-/// * wider N: stream through B/C rows, skipping zero input codes (common
-///   after ReLU, where ~30–50% of codes are 0).
+/// * wider N: the same stack-tile accumulation over column blocks of 64,
+///   plus a zero-input-code skip (common after ReLU, where ~30–50% of
+///   codes are 0).
 fn gemm_serial_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, c: &mut [i32]) {
     // monomorphized register-blocked kernels for the channel widths our
     // models actually use: the compile-time N fully unrolls the inner
@@ -111,18 +113,28 @@ fn gemm_serial_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, c: &mut 
         }
         return;
     }
+    // wide N: accumulate through a stack tile of <= 64 columns so the
+    // running sums live in registers across the whole K loop instead of
+    // round-tripping through `crow` on every K step (which left the path
+    // memory-bound), while keeping the post-ReLU zero-skip
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
-        crow.fill(0);
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue; // zero codes are common after ReLU
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = (n - j0).min(64);
+            let mut acc = [0i32; 64];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue; // zero codes are common after ReLU
+                }
+                let brow = &b[p * n + j0..p * n + j0 + nb];
+                for (ac, &bv) in acc[..nb].iter_mut().zip(brow) {
+                    *ac = ac.wrapping_add(av.wrapping_mul(bv));
+                }
             }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
-            }
+            crow[j0..j0 + nb].copy_from_slice(&acc[..nb]);
+            j0 += nb;
         }
     }
 }

@@ -1,0 +1,239 @@
+//! Property tests for the kernel-emission layer (`dfq::tensor::kernels`):
+//! the packed fused-epilogue GEMM must be **bit-identical** to the
+//! reference scalar GEMM + separate epilogue sweep for random shapes
+//! (including non-tile-multiple tails), every licensed storage width,
+//! residual/no-residual, and every thread count — and at the plan level,
+//! the emitted kernels (including 1×1 stride-1 im2col elision) must be
+//! bit-identical to the reference interpreter, with the unfused ablation
+//! staying on the reference path.
+
+use std::collections::HashMap;
+
+use dfq::engine::int::IntEngine;
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::prelude::*;
+use dfq::quant::scheme;
+use dfq::tensor::kernels::{fused_gemm_into, pack_panels, FusedEpi, PackDtype};
+use dfq::tensor::ops_int;
+
+/// The reference semantics: scalar GEMM, then the epilogue as a separate
+/// full pass — the exact algebra of the executor's `int_epilogue`.
+fn reference(
+    a: &[i32],
+    w: &[i32],
+    bias: &[i32],
+    res: Option<&[i32]>,
+    epi: FusedEpi,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut c = ops_int::gemm_i32(a, w, m, k, n);
+    for (row, chunk) in c.chunks_exact_mut(n).enumerate() {
+        for (j, v) in chunk.iter_mut().enumerate() {
+            let mut x = v.wrapping_add(bias[j]);
+            if let Some(r) = res {
+                x = x.wrapping_add(scheme::align(r[row * n + j], epi.res_shift));
+            }
+            *v = scheme::shift_round(x, epi.out_shift).clamp(epi.qmin, epi.qmax);
+        }
+    }
+    c
+}
+
+#[test]
+fn prop_fused_packed_gemm_bit_identical_to_reference() {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    for seed in 0..20u64 {
+        let mut rng = Pcg::new(71000 + seed * 193);
+        // random shapes, deliberately spanning MR/NR tile tails (the
+        // tile is 4×16; m=1..69, n=1..149 hit every tail class)
+        let m = rng.int_range(1, 70) as usize;
+        let k = rng.int_range(1, 40) as usize;
+        let n = rng.int_range(1, 150) as usize;
+        let a: Vec<i32> = (0..m * k).map(|_| rng.int_range(-128, 128) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.int_range(-128, 128) as i32).collect();
+        let bias: Vec<i32> = (0..n).map(|_| rng.int_range(-4096, 4096) as i32).collect();
+        let r: Vec<i32> = (0..m * n).map(|_| rng.int_range(-256, 256) as i32).collect();
+        let epi = FusedEpi {
+            out_shift: rng.int_range(0, 10) as i32,
+            res_shift: rng.int_range(0, 4) as i32,
+            qmin: -128,
+            qmax: 127,
+        };
+        for dtype in [PackDtype::I8, PackDtype::I16, PackDtype::I32] {
+            let packed = pack_panels(&w, k, n, dtype).unwrap();
+            assert_eq!(packed.dtype(), dtype);
+            for res in [None, Some(r.as_slice())] {
+                let want = reference(&a, &w, &bias, res, epi, m, k, n);
+                for threads in [1usize, 2, 4, auto] {
+                    // dirty output buffer: every element must be written
+                    let mut got = vec![-77i32; m * n];
+                    fused_gemm_into(&a, &packed, &bias, res, epi, m, &mut got, threads);
+                    assert_eq!(
+                        got, want,
+                        "seed {seed} m={m} k={k} n={n} {dtype} res={} threads={threads}",
+                        res.is_some()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A model mixing every kernel-selection case: a 3×3 conv (im2col +
+/// fused GEMM), a 1×1 stride-1 conv with a residual (im2col **elided**),
+/// a 1×1 stride-2 conv (subsamples — not elidable), and a gap+dense
+/// head.
+fn selection_model(rng: &mut Pcg) -> (Graph, HashMap<String, FoldedParams>) {
+    let ch = rng.int_range(2, 5) as usize;
+    let modules = vec![
+        UnifiedModule {
+            name: "stem".into(),
+            kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: ch, stride: 1 },
+            src: "input".into(),
+            res: None,
+            relu: true,
+        },
+        UnifiedModule {
+            name: "pw".into(),
+            kind: ModuleKind::Conv { kh: 1, kw: 1, cin: ch, cout: ch, stride: 1 },
+            src: "stem".into(),
+            res: Some("stem".into()),
+            relu: true,
+        },
+        UnifiedModule {
+            name: "down".into(),
+            kind: ModuleKind::Conv { kh: 1, kw: 1, cin: ch, cout: ch + 1, stride: 2 },
+            src: "pw".into(),
+            res: None,
+            relu: true,
+        },
+        UnifiedModule {
+            name: "gap".into(),
+            kind: ModuleKind::Gap,
+            src: "down".into(),
+            res: None,
+            relu: false,
+        },
+        UnifiedModule {
+            name: "fc".into(),
+            kind: ModuleKind::Dense { cin: ch + 1, cout: 5 },
+            src: "gap".into(),
+            res: None,
+            relu: false,
+        },
+    ];
+    let graph = Graph { name: "sel".into(), input_hwc: (8, 8, 3), modules };
+    let mut folded = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+            },
+        );
+    }
+    (graph, folded)
+}
+
+fn images(rng: &mut Pcg, n: usize) -> Tensor {
+    Tensor::from_vec(&[n, 8, 8, 3], (0..n * 192).map(|_| rng.normal()).collect())
+}
+
+fn calibrated_spec(
+    graph: &Graph,
+    folded: &HashMap<String, FoldedParams>,
+    rng: &mut Pcg,
+) -> QuantSpec {
+    let session = Session::from_graph(graph.clone(), folded.clone()).unwrap();
+    let cm = session.calibrate(CalibConfig::default(), &images(rng, 1)).unwrap();
+    cm.spec().clone()
+}
+
+/// The reference interpreter: module-by-module over a name-keyed map
+/// (`run_module` never uses the emitted kernels).
+fn interpret(eng: &IntEngine<'_>, graph: &Graph, x_int: &TensorI32) -> TensorI32 {
+    let mut acts: HashMap<String, TensorI32> = HashMap::new();
+    acts.insert("input".to_string(), x_int.clone());
+    for m in &graph.modules {
+        let out = eng.run_module(m, &acts).unwrap();
+        acts.insert(m.name.clone(), out);
+    }
+    acts.remove(&graph.modules.last().unwrap().name).unwrap()
+}
+
+#[test]
+fn prop_emitted_plan_kernels_bit_identical_to_interpreter() {
+    // the plan path runs packed fused kernels with im2col elided on the
+    // 1×1 stride-1 step; the interpreter is the reference — every batch
+    // and thread count must agree bit-for-bit
+    for seed in 0..8u64 {
+        let mut rng = Pcg::new(73000 + seed * 149);
+        let (graph, folded) = selection_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+        for &b in &[1usize, 3, 5] {
+            let x = images(&mut rng, b);
+            let serial = IntEngine::new(&graph, &folded, &spec);
+            let want = interpret(&serial, &graph, &serial.quantize_input(&x));
+            for &threads in &[1usize, 2, 4] {
+                let eng = IntEngine::new(&graph, &folded, &spec).with_threads(threads);
+                let got = eng.run(&x).unwrap();
+                assert_eq!(
+                    want, got,
+                    "seed {seed} batch {b} threads {threads}: emitted kernels diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_unfused_ablation_bit_identical_to_interpreter() {
+    // the ablation's extra quantization points cannot fuse: its plans
+    // select the reference kernels, and stay bit-identical to the
+    // interpreter running the same ablation epilogue
+    for seed in 0..5u64 {
+        let mut rng = Pcg::new(79000 + seed * 101);
+        let (graph, folded) = selection_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+        let mut pre = HashMap::new();
+        for m in graph.weight_modules() {
+            pre.insert(m.name.clone(), rng.int_range(2, 6) as i32);
+        }
+        let mut eng = IntEngine::new(&graph, &folded, &spec);
+        eng.pre_frac = Some(pre);
+        let x = images(&mut rng, 2);
+        let want = interpret(&eng, &graph, &eng.quantize_input(&x));
+        let got = eng.run(&x).unwrap();
+        assert_eq!(want, got, "seed {seed}: unfused ablation diverged");
+    }
+}
+
+#[test]
+fn prop_fp_plan_elision_bit_identical_to_interpreter() {
+    // fp plans also elide 1×1 stride-1 im2col (the patch matrix equals
+    // the input buffer, so the f32 GEMM is bit-identical with the copy
+    // skipped); the retain-everything interpreter is the reference
+    for seed in 0..5u64 {
+        let mut rng = Pcg::new(83000 + seed * 61);
+        let (graph, folded) = selection_model(&mut rng);
+        let eng = dfq::engine::fp::FpEngine::new(&graph, &folded);
+        let x = images(&mut rng, 3);
+        let mut acts = eng.run_acts(&x).unwrap();
+        let want = acts.remove(&graph.modules.last().unwrap().name).unwrap();
+        let got = eng.run(&x).unwrap();
+        assert_eq!(want.data, got.data, "seed {seed}: fp elision diverged");
+    }
+}
