@@ -1,0 +1,42 @@
+//! Bench: the static dataflow audit over the seed models — the
+//! quant-op census (fused vs unfused ablation), the proved |int - fp|
+//! output bound, and the energy/area roll-up, timed end-to-end per
+//! model. Artifact-free (synthetic calibration), always runs.
+//!
+//!     cargo bench --bench audit
+
+use std::time::Instant;
+
+use dfq::analysis::audit;
+use dfq::models::resnet;
+use dfq::prelude::*;
+
+fn main() {
+    let seed = 7u64;
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, seed);
+    for name in ["resnet_s", "resnet_m", "resnet_l"] {
+        let graph = resnet::by_name(name).expect("built-in model");
+        let folded = resnet::synth_folded(&graph, seed);
+        let session =
+            Session::from_graph(graph, folded.clone()).expect("session");
+        let cm = session
+            .calibrate(CalibConfig::default(), &calib)
+            .expect("calibration");
+        let t0 = Instant::now();
+        let report = audit::audit(cm.graph(), cm.spec(), &folded, (-2.0, 2.0))
+            .expect("audit");
+        let dt = t0.elapsed();
+        println!(
+            "{name}: audited {} steps in {:.2?} — quant ops fused {} vs \
+             unfused {} ({:.2}x), proved bound {:.3e}, {:.3} uJ/inference",
+            report.fused.steps.len(),
+            dt,
+            report.fused.total,
+            report.unfused.total,
+            report.unfused.total as f64 / report.fused.total.max(1) as f64,
+            report.bound.output,
+            report.cost.total_uj()
+        );
+        assert!(report.ok(), "{name}: audit faults: {:?}", report.faults);
+    }
+}

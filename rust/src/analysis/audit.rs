@@ -1,0 +1,355 @@
+//! **Quant-op census** — statically counting the quantization
+//! operations a compiled plan performs, and machine-checking the
+//! paper's central dataflow hypothesis.
+//!
+//! The paper restructures the network into unified modules so each
+//! dataflow path crosses *one* quantization point instead of one per
+//! layer edge. Until now the repo asserted that by construction; this
+//! pass proves it per plan: [`census`] walks an [`ExecPlan`] step by
+//! step and counts, per output element, how many
+//! quantize/requantize operations the executor's epilogue performs
+//! (see [`crate::engine::exec::int_epilogue`]):
+//!
+//! * a **fused** GEMM step requantizes once — accumulator →
+//!   output codes (one rounded shift + clamp), regardless of bias or
+//!   residual, which join in the accumulator domain;
+//! * an **unfused-ablation** GEMM step requantizes twice — accumulator
+//!   → intermediate codes, intermediate → output codes — plus a third
+//!   residual realignment requant when the step carries a shortcut;
+//! * a pooling step requantizes once (the power-of-two mean shift +
+//!   clamp), and the plan input is quantized once per element.
+//!
+//! [`check_hypothesis`] compares the fused plan's census against the
+//! `compile_unfused` ablation of the same graph and raises a typed
+//! [`PlanFaultKind::AuditQuantOps`] fault unless the fused total is
+//! *strictly* smaller — the machine-checked form of the paper's
+//! "fewer quantization operations, less information loss" claim.
+//!
+//! [`audit`] bundles the census with the proved error bound
+//! ([`super::qerror`]) and the energy/area roll-up ([`super::cost`])
+//! into one [`AuditReport`] — the `dfq audit` command.
+
+use std::collections::HashMap;
+
+use crate::engine::plan::{ExecPlan, Op};
+use crate::error::{DfqError, PlanFaultKind};
+use crate::graph::bn_fold::FoldedParams;
+use crate::graph::Graph;
+use crate::hw::energy::EnergyTable;
+use crate::quant::params::QuantSpec;
+use crate::util::json::{self, Json};
+
+use super::cost::{self, CostReport};
+use super::qerror::{self, ErrorBound};
+use super::PlanFault;
+
+/// Quant-op count for one plan step.
+#[derive(Clone, Debug)]
+pub struct StepCensus {
+    /// step index
+    pub step: usize,
+    /// module name the step lowers
+    pub module: String,
+    /// output elements per image (the requantization sites)
+    pub sites: u64,
+    /// quantization points per site (1 fused, 2–3 unfused, 1 pooling)
+    pub points: u64,
+    /// `sites * points`
+    pub ops: u64,
+}
+
+/// The full census of one plan.
+#[derive(Clone, Debug)]
+pub struct Census {
+    /// per-step counts, in schedule order
+    pub steps: Vec<StepCensus>,
+    /// input quantization ops (one per input element)
+    pub input_ops: u64,
+    /// `input_ops + sum(step ops)`
+    pub total: u64,
+}
+
+/// Statically count the quantization operations one inference through
+/// `plan` performs. For an fp plan the structural count equals the
+/// fused integer plan's (the schedule is identical and every GEMM/Gap
+/// site would host exactly one quantization point), so `dfq inspect
+/// --plan` can show the census before any calibration exists.
+pub fn census(plan: &ExecPlan) -> Census {
+    let mut steps = Vec::with_capacity(plan.steps.len());
+    let mut total = 0u64;
+    for (i, step) in plan.steps.iter().enumerate() {
+        let points = match &step.op {
+            Op::Gap(_) => 1,
+            op => match op.gemm().and_then(|g| g.q.as_ref()) {
+                // unfused: acc→intermediate, intermediate→output, and a
+                // residual realignment requant when a shortcut joins
+                Some(q) if q.unfused.is_some() => {
+                    if step.res.is_some() {
+                        3
+                    } else {
+                        2
+                    }
+                }
+                // fused (or fp, structurally identical): one point
+                _ => 1,
+            },
+        };
+        let sites = step.out.elems() as u64;
+        let ops = sites * points;
+        total += ops;
+        steps.push(StepCensus { step: i, module: step.name.clone(), sites, points, ops });
+    }
+    let input_ops = plan.input_shape.elems() as u64;
+    Census { steps, input_ops, total: total + input_ops }
+}
+
+/// Machine-check the paper's hypothesis: the fused plan must perform
+/// *strictly* fewer quant ops than the unfused ablation of the same
+/// graph. Returns the typed audit fault when it does not hold,
+/// addressed to the first step whose count failed to shrink.
+pub fn check_hypothesis(fused: &Census, unfused: &Census) -> Option<PlanFault> {
+    if fused.total < unfused.total {
+        return None;
+    }
+    let (step, module) = fused
+        .steps
+        .iter()
+        .zip(&unfused.steps)
+        .find(|(f, u)| f.ops >= u.ops && u.points > 1)
+        .map(|(f, _)| (f.step, f.module.clone()))
+        .unwrap_or_else(|| (0, "<plan>".to_string()));
+    Some(PlanFault {
+        kind: PlanFaultKind::AuditQuantOps,
+        step,
+        module,
+        message: format!(
+            "fused plan performs {} quant ops but the unfused ablation \
+             performs {} — the dataflow hypothesis requires strictly fewer",
+            fused.total, unfused.total
+        ),
+    })
+}
+
+/// The full static audit of one calibrated model: census, hypothesis
+/// check, proved error bound, and energy/area cost roll-up.
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    /// model name (the compiled graph's name)
+    pub model: String,
+    /// calibrated bit-width
+    pub n_bits: u32,
+    /// census of the fused (deployed) plan
+    pub fused: Census,
+    /// census of the `compile_unfused` ablation
+    pub unfused: Census,
+    /// proved int-vs-fp output divergence bound over the fused plan
+    pub bound: ErrorBound,
+    /// per-step and total energy/area estimate of the fused plan
+    pub cost: CostReport,
+    /// audit faults (empty = the hypothesis holds)
+    pub faults: Vec<PlanFault>,
+}
+
+impl AuditReport {
+    /// `true` when the dataflow hypothesis holds for this model.
+    pub fn ok(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Human-readable report (the `dfq audit` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("audit {} ({}-bit)\n", self.model, self.n_bits));
+        let ratio = self.unfused.total as f64 / self.fused.total.max(1) as f64;
+        s.push_str(&format!(
+            "  quant ops: fused {} vs unfused {} ({ratio:.2}x fewer)\n",
+            self.fused.total, self.unfused.total
+        ));
+        s.push_str(&format!(
+            "  proved |int - fp| output bound: {:.4e}\n",
+            self.bound.output
+        ));
+        s.push_str(&format!(
+            "  energy/inference: {:.3} uJ (mac {:.3}, requant {:.3}, sram {:.3}); \
+             traffic {} bytes\n",
+            self.cost.total_uj(),
+            self.cost.mac_uj,
+            self.cost.requant_uj,
+            self.cost.sram_uj,
+            self.cost.traffic_bytes
+        ));
+        s.push_str(&format!(
+            "  requant unit: {} ({:.1} um2, {:.3} mW); codebook alternative \
+             costs {:.1}x area, {:.1}x power\n",
+            self.cost.unit.style,
+            self.cost.unit.area_um2,
+            self.cost.unit.power_mw,
+            self.cost.unit.codebook_area_ratio,
+            self.cost.unit.codebook_power_ratio
+        ));
+        s.push_str("  step  module            sites  pts  qops     macs      uJ       err-bound\n");
+        for ((c, sc), sb) in
+            self.fused.steps.iter().zip(&self.cost.steps).zip(&self.bound.steps)
+        {
+            s.push_str(&format!(
+                "  {:>4}  {:<16} {:>6} {:>4} {:>6} {:>8} {:>9.4} {:>12.4e}\n",
+                c.step,
+                c.module,
+                c.sites,
+                c.points,
+                c.ops,
+                sc.macs,
+                sc.total_uj(),
+                sb.bound
+            ));
+        }
+        if self.ok() {
+            s.push_str("audit: hypothesis holds (fused strictly fewer quant ops)\n");
+        } else {
+            for f in &self.faults {
+                s.push_str(&format!("FAULT {f}\n"));
+            }
+        }
+        s
+    }
+
+    /// One model's entry of the `dfq audit --json` document (the
+    /// envelope and schema validation live in [`crate::report::audit`]).
+    pub fn to_json(&self) -> Json {
+        let census_steps: Vec<Json> = self
+            .fused
+            .steps
+            .iter()
+            .zip(&self.unfused.steps)
+            .map(|(f, u)| {
+                json::obj(vec![
+                    ("step", json::num(f.step as f64)),
+                    ("module", json::s(&f.module)),
+                    ("sites", json::num(f.sites as f64)),
+                    ("points", json::num(f.points as f64)),
+                    ("ops", json::num(f.ops as f64)),
+                    ("unfused_ops", json::num(u.ops as f64)),
+                ])
+            })
+            .collect();
+        let bound_steps: Vec<Json> = self
+            .bound
+            .steps
+            .iter()
+            .map(|b| {
+                json::obj(vec![
+                    ("step", json::num(b.step as f64)),
+                    ("module", json::s(&b.module)),
+                    ("bound", json::num(b.bound)),
+                ])
+            })
+            .collect();
+        let cost_steps: Vec<Json> = self
+            .cost
+            .steps
+            .iter()
+            .map(|c| {
+                json::obj(vec![
+                    ("step", json::num(c.step as f64)),
+                    ("module", json::s(&c.module)),
+                    ("macs", json::num(c.macs as f64)),
+                    ("uj", json::num(c.total_uj())),
+                ])
+            })
+            .collect();
+        let faults: Vec<Json> = self
+            .faults
+            .iter()
+            .map(|f| {
+                json::obj(vec![
+                    ("kind", json::s(f.kind.label())),
+                    ("step", json::num(f.step as f64)),
+                    ("module", json::s(&f.module)),
+                    ("message", json::s(&f.message)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("bits", json::num(self.n_bits as f64)),
+            ("hypothesis_ok", Json::Bool(self.ok())),
+            (
+                "census",
+                json::obj(vec![
+                    ("input_ops", json::num(self.fused.input_ops as f64)),
+                    ("fused_total", json::num(self.fused.total as f64)),
+                    ("unfused_total", json::num(self.unfused.total as f64)),
+                    ("steps", Json::Arr(census_steps)),
+                ]),
+            ),
+            (
+                "bound",
+                json::obj(vec![
+                    ("output", json::num(self.bound.output)),
+                    ("steps", Json::Arr(bound_steps)),
+                ]),
+            ),
+            (
+                "cost",
+                json::obj(vec![
+                    ("total_uj", json::num(self.cost.total_uj())),
+                    ("mac_uj", json::num(self.cost.mac_uj)),
+                    ("requant_uj", json::num(self.cost.requant_uj)),
+                    ("sram_uj", json::num(self.cost.sram_uj)),
+                    ("traffic_bytes", json::num(self.cost.traffic_bytes as f64)),
+                    (
+                        "requant_unit",
+                        json::obj(vec![
+                            ("style", json::s(self.cost.unit.style)),
+                            ("area_um2", json::num(self.cost.unit.area_um2)),
+                            ("power_mw", json::num(self.cost.unit.power_mw)),
+                            (
+                                "codebook_area_ratio",
+                                json::num(self.cost.unit.codebook_area_ratio),
+                            ),
+                            (
+                                "codebook_power_ratio",
+                                json::num(self.cost.unit.codebook_power_ratio),
+                            ),
+                        ]),
+                    ),
+                    ("steps", Json::Arr(cost_steps)),
+                ]),
+            ),
+            ("faults", Json::Arr(faults)),
+        ])
+    }
+}
+
+/// Run the full static audit for one calibrated model: compile the
+/// fused plan and the unfused ablation, census both, machine-check the
+/// fewer-quant-ops hypothesis, prove the output-divergence bound over
+/// `input_domain` (the fp range the inputs are promised to lie in),
+/// and roll the fused plan's structure up into energy/area estimates.
+pub fn audit(
+    graph: &Graph,
+    spec: &QuantSpec,
+    folded: &HashMap<String, FoldedParams>,
+    input_domain: (f32, f32),
+) -> Result<AuditReport, DfqError> {
+    let fused_plan = ExecPlan::compile(graph, spec, graph.input_hwc)?;
+    // the ablation with every intermediate at its module's own output
+    // scale — the per-layer placement the paper's restructuring removes
+    let pre: HashMap<String, i32> = HashMap::new();
+    let unfused_plan = ExecPlan::compile_unfused(graph, spec, &pre, graph.input_hwc)?;
+    let fused = census(&fused_plan);
+    let unfused = census(&unfused_plan);
+    let faults: Vec<PlanFault> =
+        check_hypothesis(&fused, &unfused).into_iter().collect();
+    let bound = qerror::error_bound(&fused_plan, graph, spec, folded, input_domain)?;
+    let cost = cost::cost(&fused_plan, &fused, &EnergyTable::default());
+    Ok(AuditReport {
+        model: graph.name.clone(),
+        n_bits: spec.n_bits,
+        fused,
+        unfused,
+        bound,
+        cost,
+        faults,
+    })
+}

@@ -1,0 +1,192 @@
+//! **Energy/area cost roll-up** — mapping a compiled plan's structure
+//! onto the `hw` cost model, per step and in total.
+//!
+//! # The hw cost mapping
+//!
+//! Each plan step contributes three energy terms, priced from
+//! [`EnergyTable`] (45nm-class per-op constants, Horowitz ISSCC'14):
+//!
+//! * **MACs** — the step's geometry-derived multiply-accumulate count
+//!   ([`Op::macs`]), priced by the packed storage width the plan
+//!   selected: `i8` panels run the 8-bit MAC datapath
+//!   (`int8_mac_pj`), wider packs are charged the 32-bit multiply
+//!   (`int32_mul_pj`), and fp plans the fp32 MAC. Pooling steps do
+//!   adds only, charged at the shift/add rate per element summed;
+//! * **requantization** — the step's quant-op count from the census
+//!   ([`super::audit::census`]), each op being the paper's bit-shift
+//!   operator (barrel shift + round + clamp, `shift_pj`). This is the
+//!   term the dataflow restructuring shrinks: fused plans pay it once
+//!   per output element, the unfused ablation 2–3×;
+//! * **memory traffic** — weights + output activations at the packed
+//!   element width, priced at the SRAM per-byte rate (weights are
+//!   assumed resident after a one-time load; the per-inference
+//!   steady-state is SRAM-bound).
+//!
+//! The roll-up also reports the **requantization unit** itself from the
+//! gate-level model ([`crate::hw::units::RequantOp::gate_count`]): the
+//! area/power of the bit-shift operator every counted quant op runs
+//! on, and the paper's headline comparison against the codebook
+//! alternative (~9× area / ~15× power,
+//! [`crate::hw::synth::headline_ratios`]) — reproduced statically,
+//! with no RTL flow.
+
+use crate::engine::plan::{ExecPlan, Op};
+use crate::hw::energy::EnergyTable;
+use crate::hw::synth;
+use crate::hw::units::RequantOp;
+use crate::tensor::kernels::PackDtype;
+
+use super::audit::Census;
+
+/// Energy/traffic contribution of one plan step.
+#[derive(Clone, Debug)]
+pub struct StepCost {
+    /// step index
+    pub step: usize,
+    /// module name the step lowers
+    pub module: String,
+    /// multiply-accumulates per image
+    pub macs: u64,
+    /// quantization ops per image (from the census)
+    pub quant_ops: u64,
+    /// weight + output-activation bytes touched per image
+    pub bytes: u64,
+    /// MAC (or pooling-add) energy, µJ
+    pub mac_uj: f64,
+    /// requantization energy, µJ
+    pub requant_uj: f64,
+    /// memory energy, µJ
+    pub sram_uj: f64,
+}
+
+impl StepCost {
+    /// Total step energy, µJ.
+    pub fn total_uj(&self) -> f64 {
+        self.mac_uj + self.requant_uj + self.sram_uj
+    }
+}
+
+/// The requantization operator the counted quant ops run on, priced by
+/// the gate-level model, plus the paper's headline codebook comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct RequantUnit {
+    /// operator label (always the paper's bit-shift design)
+    pub style: &'static str,
+    /// cell area, µm²
+    pub area_um2: f64,
+    /// dynamic power at the reference clock, mW
+    pub power_mw: f64,
+    /// codebook-alternative area ÷ bit-shift area (~9×)
+    pub codebook_area_ratio: f64,
+    /// codebook-alternative power ÷ bit-shift power (~15×)
+    pub codebook_power_ratio: f64,
+}
+
+/// Whole-plan cost estimate.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    /// per-step contributions, in schedule order
+    pub steps: Vec<StepCost>,
+    /// total MAC energy, µJ
+    pub mac_uj: f64,
+    /// total requantization energy, µJ (input quantization included)
+    pub requant_uj: f64,
+    /// total memory energy, µJ (input read included)
+    pub sram_uj: f64,
+    /// total bytes touched per image
+    pub traffic_bytes: u64,
+    /// the requantization unit every counted op runs on
+    pub unit: RequantUnit,
+}
+
+impl CostReport {
+    /// Total energy per image, µJ.
+    pub fn total_uj(&self) -> f64 {
+        self.mac_uj + self.requant_uj + self.sram_uj
+    }
+}
+
+/// Bytes per stored element for a plan: the packed width for integer
+/// plans, f32 for fp plans.
+fn el_bytes(pack: PackDtype, quantized: bool) -> u64 {
+    if quantized {
+        (pack.bits() / 8).max(1) as u64
+    } else {
+        4
+    }
+}
+
+/// Roll a plan's structure up into per-step and total energy/area
+/// estimates. `census` must be the census of the same plan (step
+/// indices are aligned 1:1).
+pub fn cost(plan: &ExecPlan, census: &Census, e: &EnergyTable) -> CostReport {
+    let quantized = plan.quant.is_some();
+    let mut steps = Vec::with_capacity(plan.steps.len());
+    let (mut mac_uj, mut requant_uj, mut sram_uj) = (0f64, 0f64, 0f64);
+    let mut traffic = 0u64;
+    for (i, step) in plan.steps.iter().enumerate() {
+        let macs = step.op.macs();
+        let (mac_e, weight_elems, pack) = match &step.op {
+            Op::Gap(g) => {
+                // h*w-element window sums per channel: adds only, priced
+                // at the shift/add rate; the output is requantized to
+                // the activation width like every other step (the
+                // census charges it one quant op per element), so its
+                // traffic is priced at the narrow width, not the i32
+                // accumulator's
+                ((g.h * g.w * g.c) as f64 * e.shift_pj, 0u64, PackDtype::I8)
+            }
+            op => {
+                let g = op.gemm().expect("non-gap steps are GEMM-backed");
+                let per_mac = if !quantized {
+                    e.fp32_mac_pj
+                } else if g.kernel.pack == PackDtype::I8 {
+                    e.int8_mac_pj
+                } else {
+                    e.int32_mul_pj
+                };
+                (macs as f64 * per_mac, (g.kdim * g.cout) as u64, g.kernel.pack)
+            }
+        };
+        let qops = census.steps.get(i).map(|c| c.ops).unwrap_or(0);
+        let bytes =
+            (weight_elems + step.out.elems() as u64) * el_bytes(pack, quantized);
+        let sc = StepCost {
+            step: i,
+            module: step.name.clone(),
+            macs,
+            quant_ops: qops,
+            bytes,
+            mac_uj: mac_e * 1e-6,
+            requant_uj: qops as f64 * e.shift_pj * 1e-6,
+            sram_uj: bytes as f64 * e.sram_byte_pj * 1e-6,
+        };
+        mac_uj += sc.mac_uj;
+        requant_uj += sc.requant_uj;
+        sram_uj += sc.sram_uj;
+        traffic += bytes;
+        steps.push(sc);
+    }
+    // plan-boundary terms: the input is quantized and read once
+    let in_bytes =
+        plan.input_shape.elems() as u64 * el_bytes(PackDtype::I8, quantized);
+    requant_uj += census.input_ops as f64 * e.shift_pj * 1e-6;
+    sram_uj += in_bytes as f64 * e.sram_byte_pj * 1e-6;
+    traffic += in_bytes;
+    let bs = RequantOp::BitShift.gate_count();
+    let (codebook_power_ratio, codebook_area_ratio) = synth::headline_ratios();
+    CostReport {
+        steps,
+        mac_uj,
+        requant_uj,
+        sram_uj,
+        traffic_bytes: traffic,
+        unit: RequantUnit {
+            style: RequantOp::BitShift.label(),
+            area_um2: bs.area_um2(),
+            power_mw: bs.power_mw(),
+            codebook_area_ratio,
+            codebook_power_ratio,
+        },
+    }
+}

@@ -88,6 +88,25 @@ const TARGETS: &[Target] = &[
         guarded: &["run"],
     },
     Target {
+        // warm submission/routing path: every request crosses
+        // Replica::infer (the table's `infer`/`queued` rows bind to the
+        // first definition in the file, which is Replica's), the arm
+        // and replica pickers, and the queue gauges
+        file: "rust/src/coordinator/server.rs",
+        warm: &["infer", "pick_replica", "pick_arm", "queued", "queue_len"],
+        // registry lookup: builds its miss diagnostics by design, but
+        // must still never panic or narrow
+        guarded: &["endpoint"],
+    },
+    Target {
+        // per-frame request/response loop of every live connection
+        file: "rust/src/wire/server.rs",
+        warm: &["handle_connection"],
+        // per-connection setup / capacity rejection / metrics encode:
+        // allocate by design
+        guarded: &["serve", "reject_at_capacity", "metrics_reply"],
+    },
+    Target {
         file: "rust/src/wire/client.rs",
         warm: &[],
         guarded: &["ensure_stream", "try_call", "call"],

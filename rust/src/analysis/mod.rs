@@ -25,12 +25,28 @@
 //! is verified; release builds skip it (compile-time only — the hot
 //! path never pays).
 //!
-//! `dfq verify` exposes the verifier on the CLI; `dfq lint` runs the
-//! [`lint`] pass that enforces the ROADMAP hot-path contracts
-//! (no panics, no unchecked narrowing, no warm-path allocation) on the
-//! source itself.
+//! On top of the same step-walk, the **dataflow auditor** proves the
+//! paper's quantitative claims per plan:
+//!
+//! * [`audit`] — the static quant-op census, machine-checking that the
+//!   fused plan performs strictly fewer quantization ops than the
+//!   `compile_unfused` ablation (typed
+//!   [`PlanFaultKind::AuditQuantOps`] fault otherwise);
+//! * [`qerror`] — deterministic propagation of rounding / shift-
+//!   truncation / clamp-saturation error terms to a proved int-vs-fp
+//!   output-divergence bound;
+//! * [`cost`] — the per-step energy/area roll-up onto the
+//!   [`crate::hw`] gate/energy model.
+//!
+//! `dfq verify` exposes the verifier on the CLI and `dfq audit` the
+//! auditor; `dfq lint` runs the [`lint`] pass that enforces the
+//! ROADMAP hot-path contracts (no panics, no unchecked narrowing, no
+//! warm-path allocation) on the source itself.
 
+pub mod audit;
+pub mod cost;
 pub mod lint;
+pub mod qerror;
 
 mod interval;
 mod slots;
@@ -226,10 +242,14 @@ mod tests {
     use std::collections::HashMap;
 
     use super::*;
-    use crate::engine::plan::{KernelChoice, Op, QuantEpi};
+    use crate::engine::plan::{KernelChoice, Op, QuantEpi, UnfusedEpi};
+    use crate::graph::bn_fold::FoldedParams;
     use crate::graph::{Graph, ModuleKind, UnifiedModule};
+    use crate::hw::energy::EnergyTable;
+    use crate::models::resnet::synth_folded;
     use crate::quant::params::{ModuleShifts, QuantSpec};
     use crate::tensor::kernels::PackDtype;
+    use crate::tensor::Tensor;
 
     fn resnet_like() -> Graph {
         Graph {
@@ -493,5 +513,199 @@ mod tests {
         assert!(r.render().contains("FAULT shift-out-of-width"), "{}", r.render());
         assert!(r.json().contains("\"ok\":false"), "{}", r.json());
         assert!(r.json().contains("\"kind\":\"shift-out-of-width\""), "{}", r.json());
+    }
+
+    // ---- audit corpus: plans with closed-form census/bound/cost ----
+
+    fn unfused_plan() -> ExecPlan {
+        let g = resnet_like();
+        // empty pre map: every module gets an intermediate at its own
+        // output scale — the per-layer ablation
+        let pre: HashMap<String, i32> = HashMap::new();
+        ExecPlan::compile_unfused(&g, &spec(), &pre, g.input_hwc).unwrap()
+    }
+
+    #[test]
+    fn census_has_closed_form_counts() {
+        // resnet_like on a 4x4x2 input: c0 and c1 produce 32 elements,
+        // gap 2, fc 3; the input is 32 elements
+        let f = audit::census(&int_plan());
+        assert_eq!(f.input_ops, 32);
+        let fused_pts: Vec<(u64, u64)> =
+            f.steps.iter().map(|s| (s.sites, s.points)).collect();
+        assert_eq!(fused_pts, vec![(32, 1), (32, 1), (2, 1), (3, 1)]);
+        assert_eq!(f.total, 32 + 32 + 32 + 2 + 3);
+
+        // unfused: c0 pays acc→pre + pre→out (2), c1 additionally the
+        // residual realignment (3), gap stays 1, fc pays 2
+        let u = audit::census(&unfused_plan());
+        let unf_pts: Vec<u64> = u.steps.iter().map(|s| s.points).collect();
+        assert_eq!(unf_pts, vec![2, 3, 1, 2]);
+        assert_eq!(u.total, 32 + 64 + 96 + 2 + 6);
+
+        // the paper's hypothesis holds on the healthy pair
+        assert!(audit::check_hypothesis(&f, &u).is_none());
+
+        // the fp plan's structural census equals the fused int plan's
+        let g = resnet_like();
+        let fp = ExecPlan::compile_fp(&g, g.input_hwc).unwrap();
+        assert_eq!(audit::census(&fp).total, f.total);
+    }
+
+    #[test]
+    fn hypothesis_violation_raises_typed_audit_fault() {
+        let fused = audit::census(&int_plan());
+        let unf = audit::census(&unfused_plan());
+
+        // a "fused" schedule that secretly runs the unfused epilogue on
+        // every GEMM step performs exactly as many quant ops as the
+        // ablation — not strictly fewer, so the audit must refuse it
+        let mut cheat = int_plan();
+        for i in [0usize, 1, 3] {
+            epi_mut(&mut cheat, i).unfused = Some(UnfusedEpi {
+                pre_shift: 4,
+                pre_qmin: -255,
+                pre_qmax: 255,
+                res_align: 0,
+                mid_qmin: -255,
+                mid_qmax: 255,
+                final_shift: 4,
+            });
+        }
+        let c = audit::census(&cheat);
+        assert_eq!(c.total, unf.total);
+        let fault = audit::check_hypothesis(&c, &unf).expect("equal totals must fault");
+        assert_eq!(fault.kind, PlanFaultKind::AuditQuantOps);
+        assert_eq!(fault.step, 0);
+        assert_eq!(fault.module, "c0");
+        assert!(fault.message.contains("strictly fewer"), "{fault}");
+        let err: DfqError = fault.clone().into();
+        assert!(err.to_string().starts_with("verify/audit-quant-ops"), "{err}");
+
+        // degenerate ablation (identical censuses) also faults
+        assert!(audit::check_hypothesis(&fused, &fused).is_some());
+    }
+
+    #[test]
+    fn error_bound_has_closed_form_on_exact_weights() {
+        // gap (1x1 window, shift 0: exact) then a dense whose weights
+        // (±0.5 at n_w=7) and biases (0) are exactly representable, so
+        // the only error terms are the input rounding 0.5·2⁻⁵ amplified
+        // by the L1 row norm 0.5, plus the output rounding 0.5·2⁻⁴ and
+        // a ~1e-6 fp-oracle slack:
+        //   bound = 0.5·0.015625 + 0.03125 (+ slack) = 0.0390625 + ε
+        let g = Graph {
+            name: "td".into(),
+            input_hwc: (1, 1, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "input".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 2, cout: 2 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut sp = QuantSpec::new(8);
+        sp.input_frac = 5;
+        sp.modules.insert("fc".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        let mut folded = HashMap::new();
+        folded.insert(
+            "fc".to_string(),
+            FoldedParams {
+                w: Tensor::from_vec(&[2, 2], vec![0.5, 0.0, 0.0, 0.5]),
+                b: vec![0.0, 0.0],
+            },
+        );
+        let plan = ExecPlan::compile(&g, &sp, g.input_hwc).unwrap();
+        let b = qerror::error_bound(&plan, &g, &sp, &folded, (-1.0, 1.0)).unwrap();
+        assert_eq!(b.steps.len(), 2);
+        // the gap step carries the input quantization error unchanged
+        assert!((b.steps[0].bound - 0.015625).abs() < 1e-9, "{}", b.steps[0].bound);
+        assert!(
+            b.output >= 0.0390625 && b.output <= 0.0390625 + 1e-5,
+            "closed-form bound violated: {}",
+            b.output
+        );
+        // the proved fp interval covers exactly W·x for x ∈ [-1,1]
+        assert!(b.steps[1].fp_lo <= -0.5 && b.steps[1].fp_hi >= 0.5);
+
+        // fp plans have no quantization error to bound
+        let fp = ExecPlan::compile_fp(&g, g.input_hwc).unwrap();
+        assert!(qerror::error_bound(&fp, &g, &sp, &folded, (-1.0, 1.0)).is_err());
+    }
+
+    #[test]
+    fn cost_rollup_has_closed_form_totals() {
+        let plan = int_plan();
+        let c = audit::census(&plan);
+        let e = EnergyTable::default();
+        let r = cost::cost(&plan, &c, &e);
+
+        // MACs from geometry: convs 4·4·(3·3·2)·2 = 576, gap 0, fc 2·3
+        let macs: Vec<u64> = r.steps.iter().map(|s| s.macs).collect();
+        assert_eq!(macs, vec![576, 576, 0, 6]);
+
+        // every quant op is one bit-shift requant
+        let want_rq = c.total as f64 * e.shift_pj * 1e-6;
+        assert!((r.requant_uj - want_rq).abs() < 1e-12, "{}", r.requant_uj);
+
+        // i8 MACs plus the gap's 32 window adds at the shift rate
+        let want_mac =
+            (576.0 + 576.0 + 6.0) * e.int8_mac_pj * 1e-6 + 32.0 * e.shift_pj * 1e-6;
+        assert!((r.mac_uj - want_mac).abs() < 1e-12, "{}", r.mac_uj);
+
+        // traffic at 1 byte/element: weights 36+36+0+6, outputs
+        // 32+32+2+3, input 32
+        assert_eq!(r.traffic_bytes, 36 + 36 + 6 + 32 + 32 + 2 + 3 + 32);
+        let want_sram = r.traffic_bytes as f64 * e.sram_byte_pj * 1e-6;
+        assert!((r.sram_uj - want_sram).abs() < 1e-12, "{}", r.sram_uj);
+        assert!(r.total_uj() > 0.0);
+
+        // the requant unit reproduces the paper's headline comparison
+        assert_eq!(r.unit.style, "bit-shifting");
+        assert!(r.unit.area_um2 > 0.0 && r.unit.power_mw > 0.0);
+        assert!(
+            r.unit.codebook_area_ratio > 5.0 && r.unit.codebook_area_ratio < 16.0,
+            "{}",
+            r.unit.codebook_area_ratio
+        );
+        assert!(
+            r.unit.codebook_power_ratio > 6.0 && r.unit.codebook_power_ratio < 25.0,
+            "{}",
+            r.unit.codebook_power_ratio
+        );
+    }
+
+    #[test]
+    fn audit_end_to_end_on_corpus_model() {
+        let g = resnet_like();
+        let folded = synth_folded(&g, 7);
+        let report = audit::audit(&g, &spec(), &folded, (-1.0, 1.0)).unwrap();
+        assert!(report.ok(), "faults: {:?}", report.faults);
+        assert!(report.fused.total < report.unfused.total);
+        assert_eq!(report.model, "t");
+        assert_eq!(report.n_bits, 8);
+        assert!(report.bound.output.is_finite() && report.bound.output > 0.0);
+
+        let text = report.render();
+        for needle in ["c0", "c1", "gap", "fc", "hypothesis holds"] {
+            assert!(text.contains(needle), "{text}");
+        }
+        let json = report.to_json().dump();
+        let doc = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(doc.get("model").and_then(|m| m.as_str()), Some("t"));
+        assert_eq!(
+            doc.get("hypothesis_ok").and_then(|b| b.as_bool()),
+            Some(true)
+        );
     }
 }

@@ -1,0 +1,385 @@
+//! **Proved quantization-error bounds** — deterministic propagation of
+//! per-step error intervals through a compiled integer plan, to a
+//! sound bound on the int-vs-fp output divergence.
+//!
+//! # The error-term model
+//!
+//! Every value the integer executor holds is a code `c` at `N`
+//! fractional bits representing the real value `c·2⁻ᴺ`. This pass
+//! tracks, per buffer slot, a pair:
+//!
+//! * `err` — a proved bound on `|dequantized int value − fp oracle
+//!   value|`, elementwise;
+//! * `[lo, hi]` — a conservative interval containing every fp-oracle
+//!   value in the slot (computed from the *actual* folded weights, so
+//!   clamp-saturation terms are evaluated against real ranges, not the
+//!   dtype envelope).
+//!
+//! Each step's transfer mirrors [`crate::engine::exec::int_epilogue`] /
+//! [`int_gap`] op for op and accumulates exactly four error sources:
+//!
+//! 1. **weight/bias representation error** — computed *exactly* from
+//!    the folded fp parameters and their quantized codes
+//!    (`Σₖ|w_fp − w_int·2⁻ᴺʷ|`, maximized over output channels), so
+//!    weight-code saturation is automatically covered;
+//! 2. **rounding** — every `shift_round` with a positive shift adds at
+//!    most half an output-scale ulp (`0.5·2⁻ᴺ`, round-half-up); left
+//!    shifts (`align`) are exact;
+//! 3. **clamp saturation** — clamping is 1-Lipschitz, so a clamp adds
+//!    only the distance the fp interval extends beyond the clamp range
+//!    (`max(0, fp_hi − qmax·2⁻ᴺ) + max(0, qmin·2⁻ᴺ − fp_lo)`);
+//! 4. **fp-oracle arithmetic slack** — the "oracle" itself runs in
+//!    f32, so a standard `O(K·ε)` summation-error term on the
+//!    accumulator magnitude keeps the bound sound against the engine
+//!    we actually measure (not exact real arithmetic).
+//!
+//! Through a K-MAC step the incoming error is amplified by the L1 row
+//! norm of the dequantized integer weights (`max_j Σₖ|w_int·2⁻ᴺʷ|`) —
+//! the discrete analogue of a Lipschitz constant — and the weight
+//! representation error couples to the input magnitude. The unfused
+//! ablation's extra quantization points each contribute their own
+//! rounding + saturation terms, which is precisely how the paper's
+//! "fewer quantization operations ⇒ less information loss" claim shows
+//! up in the algebra.
+//!
+//! `rust/tests/prop_audit.rs` asserts that the *measured* divergence
+//! between [`crate::engine::int::IntEngine::run_dequant`] and
+//! [`crate::engine::fp::FpEngine::run`] on random graphs never exceeds
+//! [`ErrorBound::output`].
+//!
+//! [`int_gap`]: crate::engine::exec::int_gap
+
+use std::collections::HashMap;
+
+use crate::engine::int::{quantize_params, QuantizedParams};
+use crate::engine::plan::{ExecPlan, Op};
+use crate::error::DfqError;
+use crate::graph::bn_fold::FoldedParams;
+use crate::graph::Graph;
+use crate::quant::params::QuantSpec;
+use crate::quant::scheme;
+
+/// What the pass proves about one step.
+#[derive(Clone, Debug)]
+pub struct StepErr {
+    /// step index
+    pub step: usize,
+    /// module name the step lowers
+    pub module: String,
+    /// proved elementwise `|int − fp|` bound on the step's output
+    pub bound: f64,
+    /// conservative fp-oracle interval of the step's output
+    pub fp_lo: f64,
+    /// see `fp_lo`
+    pub fp_hi: f64,
+}
+
+/// The proved divergence bound for one plan.
+#[derive(Clone, Debug)]
+pub struct ErrorBound {
+    /// per-step conclusions, in schedule order
+    pub steps: Vec<StepErr>,
+    /// proved bound on the final dequantized output's divergence
+    pub output: f64,
+}
+
+/// Per-slot analysis state: error bound + fp-value interval.
+#[derive(Clone, Copy, Debug)]
+struct Est {
+    err: f64,
+    lo: f64,
+    hi: f64,
+}
+
+impl Est {
+    fn mag(self) -> f64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// SAME-padding fill: the fp window also sees zeros.
+    fn with_zero(self) -> Est {
+        Est { err: self.err, lo: self.lo.min(0.0), hi: self.hi.max(0.0) }
+    }
+}
+
+/// `2^-n` in f64 (exact for every exponent the shift algebra allows).
+fn p2(n: i32) -> f64 {
+    (2.0f64).powi(-n)
+}
+
+/// Rounding term of `shift_round(v, s)` landing on `target_frac`
+/// fractional bits: half an output ulp for a true right shift, exact
+/// for identity and left shifts.
+fn round_err(s: i32, target_frac: i32) -> f64 {
+    if s > 0 {
+        0.5 * p2(target_frac)
+    } else {
+        0.0
+    }
+}
+
+/// Saturation term of clamping codes to `[qmin, qmax]` at `frac`
+/// fractional bits when the fp values live in `[lo, hi]` — the
+/// 1-Lipschitz clamp adds only the overshoot distance.
+fn sat_err(qmin: i32, qmax: i32, frac: i32, lo: f64, hi: f64) -> f64 {
+    let lo_v = qmin as f64 * p2(frac);
+    let hi_v = qmax as f64 * p2(frac);
+    (hi - hi_v).max(0.0) + (lo_v - lo).max(0.0)
+}
+
+/// Exact per-channel weight/bias statistics of one weighted module.
+struct ParamStats {
+    /// `max_j Σ_k |w_int[k,j]|·2^-n_w` — error amplification
+    wq_l1: f64,
+    /// `max_j Σ_k |w_fp − w_int·2^-n_w|` — representation error row sum
+    w_err: f64,
+    /// `max_j Σ_k |w_fp|` — fp magnitude row sum (slack + intervals)
+    w_abs: f64,
+    /// `max_j |b_fp − b_int·2^-n_b|`
+    b_err: f64,
+    /// `max_j |b_fp|`
+    b_abs: f64,
+    /// per-channel rows for [`interval_of`]
+    data: ParamData,
+}
+
+/// The raw per-channel rows needed to evaluate the fp interval for a
+/// concrete input range (kept so intervals use actual signs, not `|w|`).
+struct ParamData {
+    pos_sum: Vec<f64>,
+    neg_sum: Vec<f64>,
+    bias: Vec<f64>,
+}
+
+fn interval_of(d: &ParamData, lo: f64, hi: f64) -> (f64, f64) {
+    let mut t_lo = f64::INFINITY;
+    let mut t_hi = f64::NEG_INFINITY;
+    for j in 0..d.bias.len() {
+        // w>0 contributes w*hi to the max and w*lo to the min; w<0 the
+        // reverse — pos_sum/neg_sum hold Σ max(w,0) and Σ min(w,0)
+        let hi_j = d.pos_sum[j] * hi + d.neg_sum[j] * lo + d.bias[j];
+        let lo_j = d.pos_sum[j] * lo + d.neg_sum[j] * hi + d.bias[j];
+        t_lo = t_lo.min(lo_j);
+        t_hi = t_hi.max(hi_j);
+    }
+    (t_lo, t_hi)
+}
+
+fn param_stats(
+    fp: &FoldedParams,
+    q: &QuantizedParams,
+    n_w: i32,
+    n_b: i32,
+) -> ParamStats {
+    let cout = *fp.w.shape.dims().last().unwrap_or(&1);
+    let rows = fp.w.data.len() / cout.max(1);
+    let mut wq_l1_j = vec![0f64; cout];
+    let mut w_err_j = vec![0f64; cout];
+    let mut w_abs_j = vec![0f64; cout];
+    let mut pos_sum = vec![0f64; cout];
+    let mut neg_sum = vec![0f64; cout];
+    for k in 0..rows {
+        for j in 0..cout {
+            let w_fp = fp.w.data[k * cout + j] as f64;
+            let w_deq = q.w.data[k * cout + j] as f64 * p2(n_w);
+            wq_l1_j[j] += w_deq.abs();
+            w_err_j[j] += (w_fp - w_deq).abs();
+            w_abs_j[j] += w_fp.abs();
+            pos_sum[j] += w_fp.max(0.0);
+            neg_sum[j] += w_fp.min(0.0);
+        }
+    }
+    let mut b_err = 0f64;
+    let mut b_abs = 0f64;
+    let bias: Vec<f64> = fp
+        .b
+        .iter()
+        .enumerate()
+        .map(|(j, &b_fp)| {
+            let b_deq = q.b.get(j).copied().unwrap_or(0) as f64 * p2(n_b);
+            b_err = b_err.max((b_fp as f64 - b_deq).abs());
+            b_abs = b_abs.max((b_fp as f64).abs());
+            b_fp as f64
+        })
+        .collect();
+    let fold = |v: &[f64]| v.iter().cloned().fold(0.0, f64::max);
+    ParamStats {
+        wq_l1: fold(&wq_l1_j),
+        w_err: fold(&w_err_j),
+        w_abs: fold(&w_abs_j),
+        b_err,
+        b_abs,
+        data: ParamData { pos_sum, neg_sum, bias },
+    }
+}
+
+/// Propagate quantization-error bounds through an integer plan compiled
+/// from `graph`/`spec` with the given folded parameters. `input_domain`
+/// is the fp interval the inputs are promised to lie in (e.g. the
+/// min/max of the evaluation set); the input-quantization error and
+/// every saturation term are evaluated against it.
+pub fn error_bound(
+    plan: &ExecPlan,
+    graph: &Graph,
+    spec: &QuantSpec,
+    folded: &HashMap<String, FoldedParams>,
+    input_domain: (f32, f32),
+) -> Result<ErrorBound, DfqError> {
+    let Some(pq) = plan.quant else {
+        return Err(DfqError::invalid(
+            "error bounds are defined for integer plans only (fp plans have \
+             no quantization error to bound)",
+        ));
+    };
+    if input_domain.0 > input_domain.1 {
+        return Err(DfqError::invalid(format!(
+            "input domain [{}, {}] is inverted",
+            input_domain.0, input_domain.1
+        )));
+    }
+    let qparams = quantize_params(graph, folded, spec);
+    let n_bits = pq.n_bits;
+    let (sq_min, sq_max) = scheme::qrange(n_bits, false);
+    let eps = f32::EPSILON as f64;
+
+    let mut vals: Vec<Option<Est>> = vec![None; plan.slot_count];
+    if plan.input_slot < plan.slot_count {
+        let (in_lo, in_hi) = (input_domain.0 as f64, input_domain.1 as f64);
+        // input codes: one rounded quantization + signed-range clamp
+        let err = 0.5 * p2(pq.input_frac)
+            + sat_err(sq_min, sq_max, pq.input_frac, in_lo, in_hi);
+        vals[plan.input_slot] = Some(Est { err, lo: in_lo, hi: in_hi });
+    }
+
+    let mut steps = Vec::with_capacity(plan.steps.len());
+    for (i, step) in plan.steps.iter().enumerate() {
+        let src = vals
+            .get(step.src)
+            .copied()
+            .flatten()
+            .ok_or_else(|| DfqError::invalid(format!(
+                "step {i} ({}) reads a slot no step has written — run `dfq \
+                 verify` first",
+                step.name
+            )))?;
+        let res = match step.res {
+            Some(s) => Some(vals.get(s).copied().flatten().ok_or_else(|| {
+                DfqError::invalid(format!(
+                    "step {i} ({}) reads an unwritten residual slot",
+                    step.name
+                ))
+            })?),
+            None => None,
+        };
+        let out = match &step.op {
+            Op::Gap(g) => {
+                // mean of errors ≤ max error; one rounded shift + clamp
+                let frac = spec.try_value_frac(graph, &step.name)?;
+                let (qmin, qmax) = g.clamp.unwrap_or((sq_min, sq_max));
+                let err = src.err
+                    + round_err(g.shift, frac)
+                    + sat_err(qmin, qmax, frac, src.lo, src.hi);
+                Est { err, lo: src.lo, hi: src.hi }
+            }
+            op => {
+                let g = op.gemm().expect("non-gap steps are GEMM-backed");
+                let q = g.q.as_ref().ok_or_else(|| {
+                    DfqError::invalid(format!(
+                        "step {i} ({}) carries no epilogue constants",
+                        step.name
+                    ))
+                })?;
+                let m = graph.module(&step.name).ok_or_else(|| {
+                    DfqError::invalid(format!(
+                        "plan step '{}' is not a module of the given graph",
+                        step.name
+                    ))
+                })?;
+                let sp = spec.try_module(&step.name)?;
+                let n_x = spec.try_value_frac(graph, &m.src)?;
+                let n_acc = n_x + sp.n_w;
+                let fp = folded.get(&step.name).ok_or_else(|| {
+                    DfqError::invalid(format!(
+                        "no folded parameters for module '{}'",
+                        step.name
+                    ))
+                })?;
+                let qp = qparams.get(&step.name).ok_or_else(|| {
+                    DfqError::invalid(format!(
+                        "module '{}' has no quantized parameters (spec \
+                         coverage?)",
+                        step.name
+                    ))
+                })?;
+                let st = param_stats(fp, qp, sp.n_w, sp.n_b);
+                // conv windows see SAME-padding zeros
+                let x = if matches!(op, Op::Conv(_)) { src.with_zero() } else { src };
+                // accumulator-domain error: amplified input error, exact
+                // weight/bias representation error, bias-align rounding,
+                // and the f32-oracle summation slack
+                let res_mag = res.map(|r| r.mag()).unwrap_or(0.0);
+                let acc_mag = st.w_abs * x.mag() + st.b_abs + res_mag;
+                let slack = (2.0 * g.kdim as f64 + 8.0) * eps * acc_mag;
+                let mut err = st.wq_l1 * x.err
+                    + st.w_err * x.mag()
+                    + st.b_err
+                    + round_err(-q.bias_shift, n_acc)
+                    + slack;
+                // fp-oracle interval of the pre-residual accumulator
+                let (mut lo, mut hi) = interval_of(&st.data, x.lo, x.hi);
+                if let Some(u) = q.unfused {
+                    // unfused ablation: three quantization points
+                    let n_pre = sp.n_o + u.final_shift;
+                    err += round_err(u.pre_shift, n_pre)
+                        + sat_err(u.pre_qmin, u.pre_qmax, n_pre, lo, hi);
+                    if let Some(r) = res {
+                        err += r.err + round_err(u.res_align, n_pre);
+                        lo += r.lo;
+                        hi += r.hi;
+                        err += sat_err(u.mid_qmin, u.mid_qmax, n_pre, lo, hi);
+                    }
+                    if g.relu {
+                        lo = lo.max(0.0);
+                        hi = hi.max(0.0);
+                    }
+                    err += round_err(u.final_shift, sp.n_o)
+                        + sat_err(q.qmin, q.qmax, sp.n_o, lo, hi);
+                } else {
+                    // fused: residual joins in the accumulator domain,
+                    // then a single rounded shift + clamp
+                    if let Some(r) = res {
+                        err += r.err + round_err(-q.res_shift, n_acc);
+                        lo += r.lo;
+                        hi += r.hi;
+                    }
+                    if g.relu {
+                        lo = lo.max(0.0);
+                        hi = hi.max(0.0);
+                    }
+                    err += round_err(q.out_shift, sp.n_o)
+                        + sat_err(q.qmin, q.qmax, sp.n_o, lo, hi);
+                }
+                Est { err, lo, hi }
+            }
+        };
+        if step.dst < plan.slot_count {
+            vals[step.dst] = Some(out);
+        }
+        steps.push(StepErr {
+            step: i,
+            module: step.name.clone(),
+            bound: out.err,
+            fp_lo: out.lo,
+            fp_hi: out.hi,
+        });
+    }
+    let output = vals
+        .get(plan.out_slot)
+        .copied()
+        .flatten()
+        .map(|e| e.err)
+        .ok_or_else(|| {
+            DfqError::invalid("plan output slot holds no value — run `dfq verify`")
+        })?;
+    Ok(ErrorBound { steps, output })
+}

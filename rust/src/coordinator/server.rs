@@ -137,6 +137,22 @@ struct Replica {
     queue_depth: usize,
 }
 
+/// Out-of-line error constructors for the submit path's cold branches:
+/// `Replica::infer` is a lint-enforced warm path (no allocation), so
+/// the rejection messages are built behind calls the optimizer keeps
+/// off the admitted fast path (the kernels.rs `narrow_err` idiom).
+#[cold]
+#[inline(never)]
+fn shutdown_err(name: &str) -> DfqError {
+    DfqError::serve(format!("model '{name}' has been shut down"))
+}
+
+#[cold]
+#[inline(never)]
+fn dropped_err(name: &str) -> DfqError {
+    DfqError::serve(format!("model '{name}' dropped the request"))
+}
+
 impl Replica {
     /// Admission-controlled submit: reject with
     /// [`DfqError::Overloaded`] when the queue is full, otherwise
@@ -152,10 +168,7 @@ impl Replica {
             // whose send is still in flight
             let guard = self.tx.read().unwrap_or_else(|e| e.into_inner());
             let Some(tx) = guard.as_ref() else {
-                return Err(DfqError::serve(format!(
-                    "model '{}' has been shut down",
-                    shared.name
-                )));
+                return Err(shutdown_err(&shared.name));
             };
             let prev = shared.queued.fetch_add(1, Ordering::SeqCst);
             if prev >= self.queue_depth {
@@ -173,15 +186,10 @@ impl Replica {
                 .is_err()
             {
                 shared.queued.fetch_sub(1, Ordering::SeqCst);
-                return Err(DfqError::serve(format!(
-                    "model '{}' has been shut down",
-                    shared.name
-                )));
+                return Err(shutdown_err(&shared.name));
             }
         }
-        rrx.recv().map_err(|_| {
-            DfqError::serve(format!("model '{}' dropped the request", shared.name))
-        })?
+        rrx.recv().map_err(|_| dropped_err(&shared.name))?
     }
 
     /// Requests currently waiting in this replica's admission queue.
@@ -339,7 +347,9 @@ impl Endpoint {
         }
         // weights always sum to WEIGHT_SCALE > pos; this is unreachable
         // but a routing fallback beats a panic in the submit path
-        arms.last().expect("endpoint has at least one arm")
+        // (arms is never empty — the indexing mirrors the fast path
+        // above)
+        arms.last().unwrap_or(&arms[0])
     }
 
     /// Waiting requests across every arm and replica.

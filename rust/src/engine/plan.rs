@@ -269,6 +269,29 @@ pub(crate) enum Op {
     Gap(GapOp),
 }
 
+impl Op {
+    /// Multiply-accumulates this step performs per image — the
+    /// geometry-derived count the audit cost roll-up
+    /// ([`crate::analysis::cost`]) charges MAC energy against. Pooling
+    /// steps do adds only, which the cost model accounts separately.
+    pub(crate) fn macs(&self) -> u64 {
+        match self {
+            Op::Conv(c) => (c.ho * c.wo * c.g.kdim * c.g.cout) as u64,
+            Op::Dense(d) => (d.g.kdim * d.g.cout) as u64,
+            Op::Gap(_) => 0,
+        }
+    }
+
+    /// The shared GEMM fields, when this step is GEMM-backed.
+    pub(crate) fn gemm(&self) -> Option<&GemmStep> {
+        match self {
+            Op::Conv(c) => Some(&c.g),
+            Op::Dense(d) => Some(&d.g),
+            Op::Gap(_) => None,
+        }
+    }
+}
+
 /// One shape-resolved, slot-addressed instruction of the plan.
 #[derive(Clone, Debug)]
 pub(crate) struct Step {

@@ -158,6 +158,10 @@ pub enum PlanFaultKind {
     /// a step's packed weight storage is narrower than the calibrated
     /// bit-range licenses — codes could truncate at bind time
     PackWidth,
+    /// the audit census refutes the paper's dataflow hypothesis for
+    /// this plan: the fused schedule does not perform strictly fewer
+    /// quantization ops than the unfused ablation
+    AuditQuantOps,
 }
 
 impl PlanFaultKind {
@@ -173,6 +177,7 @@ impl PlanFaultKind {
             PlanFaultKind::DeadStep => "dead-step",
             PlanFaultKind::SlotBounds => "slot-bounds",
             PlanFaultKind::PackWidth => "pack-width",
+            PlanFaultKind::AuditQuantOps => "audit-quant-ops",
         }
     }
 }
@@ -358,6 +363,7 @@ mod tests {
             PlanFaultKind::DeadStep,
             PlanFaultKind::SlotBounds,
             PlanFaultKind::PackWidth,
+            PlanFaultKind::AuditQuantOps,
         ];
         let labels: std::collections::HashSet<&str> =
             kinds.iter().map(|k| k.label()).collect();

@@ -8,6 +8,7 @@
 //! dfq hwcost    [--clock MHZ]
 //! dfq inspect   --model NAME
 //! dfq verify    [--model NAME]... [--bits B] [--seed N] [--json] [--plan]
+//! dfq audit     [--model NAME]... [--bits B] [--seed N] [--json] [--against FILE]
 //! dfq lint      [--root DIR]
 //! dfq serve     [--model NAME[=KIND[@W,KIND@W]]]... [--requests N]
 //!               [--engine KIND] [--replicas N]
@@ -49,6 +50,7 @@ const COMMANDS: &[(&str, &[&str])] = &[
     ("hwcost", &["clock"]),
     ("inspect", &["model", "plan"]),
     ("verify", &["model", "bits", "seed", "json", "plan"]),
+    ("audit", &["model", "bits", "seed", "json", "against"]),
     ("lint", &["root"]),
     (
         "serve",
@@ -168,6 +170,7 @@ fn main() {
         "hwcost" => cmd_hwcost(&args),
         "inspect" => cmd_inspect(&args),
         "verify" => cmd_verify(&args),
+        "audit" => cmd_audit(&args),
         "lint" => cmd_lint(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
@@ -205,6 +208,18 @@ COMMANDS:
               --bits B, --seed N for the synthetic calibration;
               --json machine-readable report; --plan dumps each
               schedule too); non-zero exit on any fault
+  audit      static dataflow audit of compiled plans: counts the
+             quantization ops of the fused plan vs the per-layer
+             unfused ablation and machine-checks the paper's
+             fewer-quant-ops hypothesis, proves an |int - fp| output
+             divergence bound from the calibrated shift constants and
+             the actual folded weights, and rolls the schedule up onto
+             the gate-level energy/area model
+             (--model NAME repeatable, default resnet_{s,m,l};
+              --bits B, --seed N for the synthetic calibration;
+              --json schema-versioned document on stdout;
+              --against AUDIT_seed.json diffs against a committed
+              baseline, warn-only); non-zero exit on any audit fault
   lint       zero-dependency hot-path contract linter: scans the serving
              hot-path sources for panics, unchecked narrowing casts and
              warm-path allocation (--root DIR, default .); non-zero exit
@@ -423,6 +438,30 @@ fn cmd_inspect(args: &Args) -> Result<(), DfqError> {
         // plus the slot-safety verdict over the same schedule
         let report = dfq::analysis::verify(&plan);
         print!("{}", report.render());
+        // the audit's structural columns: the quant-op census (for an
+        // fp plan, structurally identical to the fused integer plan's)
+        // and the geometry-derived MAC count each step brings
+        let census = dfq::analysis::audit::census(&plan);
+        let cost = dfq::analysis::cost::cost(
+            &plan,
+            &census,
+            &dfq::hw::energy::EnergyTable::default(),
+        );
+        println!(
+            "\n{:<5} {:<16} {:>7} {:>4} {:>7} {:>10}",
+            "step", "module", "sites", "pts", "qops", "macs"
+        );
+        for (c, sc) in census.steps.iter().zip(&cost.steps) {
+            println!(
+                "{:<5} {:<16} {:>7} {:>4} {:>7} {:>10}",
+                c.step, c.module, c.sites, c.points, c.ops, sc.macs
+            );
+        }
+        println!(
+            "quant ops/image incl. input: {} (fused-vs-unfused census, \
+             proved error bounds and the energy roll-up: `dfq audit`)",
+            census.total
+        );
         println!(
             "(kern[...] is each step's compile-time kernel selection: \
              fused/<dtype> = packed-panel GEMM with the epilogue applied \
@@ -511,6 +550,92 @@ fn cmd_verify(args: &Args) -> Result<(), DfqError> {
     }
     if let Some(f) = first_fault {
         eprintln!("{faults} plan fault(s) across {} model(s)", models.len());
+        return Err(f.into());
+    }
+    Ok(())
+}
+
+/// `dfq audit`: run the static dataflow audit over each requested
+/// model — the quant-op census of the fused plan vs the unfused
+/// ablation (machine-checking the paper's fewer-quant-ops hypothesis),
+/// the proved int-vs-fp output-divergence bound, and the energy/area
+/// cost roll-up. Same zero-input path as `dfq verify` (built-in graph,
+/// deterministic He-init weights, Session calibration), so it runs
+/// anywhere — CI diffs its `--json` output against the committed
+/// `AUDIT_seed.json` baseline.
+fn cmd_audit(args: &Args) -> Result<(), DfqError> {
+    let models: Vec<String> = if args.all("model").is_empty() {
+        ["resnet_s", "resnet_m", "resnet_l"].iter().map(|s| s.to_string()).collect()
+    } else {
+        args.all("model").to_vec()
+    };
+    let bits = args.u32_or("bits", 8);
+    let seed = args.usize_or("seed", 7) as u64;
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, seed);
+    let mut entries: Vec<dfq::util::json::Json> = Vec::new();
+    let mut faults = 0usize;
+    let mut first_fault: Option<dfq::analysis::PlanFault> = None;
+    for name in &models {
+        let graph = resnet::by_name(name).ok_or_else(|| {
+            DfqError::invalid(format!(
+                "audit runs on the built-in resnet_{{s,m,l}} graphs; '{name}' is not one"
+            ))
+        })?;
+        let folded = resnet::synth_folded(&graph, seed);
+        let session = Session::from_graph(graph, folded.clone())?;
+        let calibrated =
+            session.calibrate(CalibConfig { n_bits: bits, ..Default::default() }, &calib)?;
+        // synth_images clamps to [-2, 2] — the domain the proved bound
+        // is entitled to assume
+        let report = dfq::analysis::audit::audit(
+            calibrated.graph(),
+            calibrated.spec(),
+            &folded,
+            (-2.0, 2.0),
+        )?;
+        faults += report.faults.len();
+        if first_fault.is_none() {
+            first_fault = report.faults.first().cloned();
+        }
+        if !args.has("json") {
+            print!("{}", report.render());
+            println!();
+        }
+        entries.push(report.to_json());
+    }
+    let doc = dfq::report::audit::audit_doc(entries);
+    if args.has("json") {
+        // never emit a document our own schema validator rejects
+        dfq::report::audit::validate(&doc).map_err(|e| {
+            DfqError::data(format!("emitted audit document is schema-invalid: {e}"))
+        })?;
+        println!("{}", doc.dump());
+    }
+    // --against: a committed baseline to diff with. Warn-only, like
+    // `dfq benchcheck --against` — drift informs, schema gates.
+    if let Some(prev) = args.get("against") {
+        match std::fs::read_to_string(prev) {
+            Ok(text) => match dfq::util::json::Json::parse(&text) {
+                Ok(old) => {
+                    let warnings = dfq::report::audit::diff(&old, &doc);
+                    if warnings.is_empty() {
+                        println!("audit: no drift vs {prev}");
+                    }
+                    for w in warnings {
+                        println!("audit: warning: {w}");
+                    }
+                }
+                Err(e) => println!(
+                    "note: --against {prev} is not valid JSON ({e}); skipping the diff"
+                ),
+            },
+            Err(e) => {
+                println!("note: --against {prev} unreadable ({e}); skipping the diff")
+            }
+        }
+    }
+    if let Some(f) = first_fault {
+        eprintln!("{faults} audit fault(s) across {} model(s)", models.len());
         return Err(f.into());
     }
     Ok(())

@@ -1,0 +1,578 @@
+//! The machine-readable audit trajectory: the schema behind
+//! `AUDIT_seed.json` (written by `dfq audit --json`), the [`validate`]
+//! check run over every emitted document, the [`validate_verify`]
+//! check for `dfq verify --json`, and the warn-only [`diff`] that
+//! `dfq audit --against` and CI run against the committed baseline —
+//! same contract as [`super::bench`]: a malformed emitter fails the
+//! build, but number movement across machines only informs.
+//!
+//! The document envelope is `{ "audit": "plans", "schema_version": N,
+//! "models": [ ... ] }` with one entry per audited model
+//! ([`crate::analysis::audit::AuditReport::to_json`]); extra keys are
+//! allowed everywhere (emitters may enrich, validators must tolerate),
+//! missing or ill-typed required keys are errors. The validator also
+//! enforces the *semantic* invariants the audit proves: per-step
+//! `ops == sites * points`, census/hypothesis consistency, and
+//! fault-list/`hypothesis_ok` agreement — so a hand-edited baseline
+//! that contradicts itself is rejected, not silently diffed.
+
+use crate::util::json::{self, Json};
+
+/// Version stamped into every emitted audit document; bump when a
+/// required key changes meaning.
+pub const AUDIT_SCHEMA_VERSION: u64 = 1;
+
+/// Assemble the `dfq audit --json` document from per-model entries.
+pub fn audit_doc(models: Vec<Json>) -> Json {
+    json::obj(vec![
+        ("audit", json::s("plans")),
+        ("schema_version", json::num(AUDIT_SCHEMA_VERSION as f64)),
+        ("models", Json::Arr(models)),
+    ])
+}
+
+fn want_f64(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
+    doc.req(key)
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_f64()
+        .ok_or_else(|| format!("{path}.{key}: expected a number"))
+}
+
+fn want_count(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
+    let v = want_f64(doc, path, key)?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(format!(
+            "{path}.{key}: expected a non-negative integer, got {v}"
+        ));
+    }
+    Ok(v)
+}
+
+fn want_str<'a>(
+    doc: &'a Json,
+    path: &str,
+    key: &str,
+) -> Result<&'a str, String> {
+    doc.req(key)
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_str()
+        .ok_or_else(|| format!("{path}.{key}: expected a string"))
+}
+
+fn want_bool(doc: &Json, path: &str, key: &str) -> Result<bool, String> {
+    doc.req(key)
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_bool()
+        .ok_or_else(|| format!("{path}.{key}: expected a bool"))
+}
+
+fn want_uj(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
+    let v = want_f64(doc, path, key)?;
+    if v < 0.0 || !v.is_finite() {
+        return Err(format!(
+            "{path}.{key}: {v} is not a finite non-negative number"
+        ));
+    }
+    Ok(v)
+}
+
+/// Validate a parsed `dfq audit --json` document against its schema.
+/// Returns a human-readable reason on failure.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let kind = want_str(doc, "$", "audit")?;
+    if kind != "plans" {
+        return Err(format!("$.audit: unknown audit kind '{kind}'"));
+    }
+    let version = want_count(doc, "$", "schema_version")?;
+    if version as u64 > AUDIT_SCHEMA_VERSION {
+        return Err(format!(
+            "schema_version {version} is newer than this build understands \
+             ({AUDIT_SCHEMA_VERSION})"
+        ));
+    }
+    let models = doc
+        .req("models")?
+        .as_arr()
+        .ok_or("$.models: expected an array")?;
+    if models.is_empty() {
+        return Err("$.models: must not be empty".into());
+    }
+    for (i, m) in models.iter().enumerate() {
+        validate_model(m, &format!("$.models[{i}]"))?;
+    }
+    Ok(())
+}
+
+fn validate_model(m: &Json, path: &str) -> Result<(), String> {
+    if want_str(m, path, "model")?.is_empty() {
+        return Err(format!("{path}.model: must not be empty"));
+    }
+    let bits = want_count(m, path, "bits")?;
+    if !(2.0..=32.0).contains(&bits) {
+        return Err(format!("{path}.bits: {bits} is outside [2, 32]"));
+    }
+    let hypothesis_ok = want_bool(m, path, "hypothesis_ok")?;
+
+    // census: totals, per-step counts, and the arithmetic invariant
+    let c = m.req("census").map_err(|e| format!("{path}: {e}"))?;
+    let cpath = format!("{path}.census");
+    want_count(c, &cpath, "input_ops")?;
+    let fused_total = want_count(c, &cpath, "fused_total")?;
+    let unfused_total = want_count(c, &cpath, "unfused_total")?;
+    if hypothesis_ok != (fused_total < unfused_total) {
+        return Err(format!(
+            "{path}: hypothesis_ok={hypothesis_ok} contradicts the census \
+             (fused {fused_total} vs unfused {unfused_total})"
+        ));
+    }
+    let steps = c
+        .req("steps")
+        .map_err(|e| format!("{cpath}: {e}"))?
+        .as_arr()
+        .ok_or_else(|| format!("{cpath}.steps: expected an array"))?;
+    if steps.is_empty() {
+        return Err(format!("{cpath}.steps: must not be empty"));
+    }
+    for (i, s) in steps.iter().enumerate() {
+        let spath = format!("{cpath}.steps[{i}]");
+        want_count(s, &spath, "step")?;
+        if want_str(s, &spath, "module")?.is_empty() {
+            return Err(format!("{spath}.module: must not be empty"));
+        }
+        let sites = want_count(s, &spath, "sites")?;
+        let points = want_count(s, &spath, "points")?;
+        if !(1.0..=3.0).contains(&points) {
+            return Err(format!("{spath}.points: {points} is outside [1, 3]"));
+        }
+        let ops = want_count(s, &spath, "ops")?;
+        if ops != sites * points {
+            return Err(format!(
+                "{spath}.ops: {ops} != sites {sites} * points {points}"
+            ));
+        }
+        want_count(s, &spath, "unfused_ops")?;
+    }
+
+    // bound: proved divergence numbers must be finite and non-negative
+    let b = m.req("bound").map_err(|e| format!("{path}: {e}"))?;
+    let bpath = format!("{path}.bound");
+    want_uj(b, &bpath, "output")?;
+    let bsteps = b
+        .req("steps")
+        .map_err(|e| format!("{bpath}: {e}"))?
+        .as_arr()
+        .ok_or_else(|| format!("{bpath}.steps: expected an array"))?;
+    for (i, s) in bsteps.iter().enumerate() {
+        let spath = format!("{bpath}.steps[{i}]");
+        want_count(s, &spath, "step")?;
+        want_str(s, &spath, "module")?;
+        want_uj(s, &spath, "bound")?;
+    }
+
+    // cost: energy terms and the requant unit
+    let co = m.req("cost").map_err(|e| format!("{path}: {e}"))?;
+    let copath = format!("{path}.cost");
+    let total = want_uj(co, &copath, "total_uj")?;
+    let parts = want_uj(co, &copath, "mac_uj")?
+        + want_uj(co, &copath, "requant_uj")?
+        + want_uj(co, &copath, "sram_uj")?;
+    if (total - parts).abs() > 1e-9 + 1e-6 * total.abs() {
+        return Err(format!(
+            "{copath}.total_uj: {total} does not sum from its parts {parts}"
+        ));
+    }
+    want_count(co, &copath, "traffic_bytes")?;
+    let unit = co
+        .req("requant_unit")
+        .map_err(|e| format!("{copath}: {e}"))?;
+    let upath = format!("{copath}.requant_unit");
+    want_str(unit, &upath, "style")?;
+    for key in ["area_um2", "power_mw"] {
+        if want_uj(unit, &upath, key)? <= 0.0 {
+            return Err(format!("{upath}.{key}: must be positive"));
+        }
+    }
+    for key in ["codebook_area_ratio", "codebook_power_ratio"] {
+        if want_uj(unit, &upath, key)? <= 1.0 {
+            return Err(format!(
+                "{upath}.{key}: the codebook alternative must cost more \
+                 than the bit-shift unit"
+            ));
+        }
+    }
+    let csteps = co
+        .req("steps")
+        .map_err(|e| format!("{copath}: {e}"))?
+        .as_arr()
+        .ok_or_else(|| format!("{copath}.steps: expected an array"))?;
+    for (i, s) in csteps.iter().enumerate() {
+        let spath = format!("{copath}.steps[{i}]");
+        want_count(s, &spath, "step")?;
+        want_str(s, &spath, "module")?;
+        want_count(s, &spath, "macs")?;
+        want_uj(s, &spath, "uj")?;
+    }
+
+    // faults must agree with the hypothesis flag
+    let faults = m
+        .req("faults")
+        .map_err(|e| format!("{path}: {e}"))?
+        .as_arr()
+        .ok_or_else(|| format!("{path}.faults: expected an array"))?;
+    if hypothesis_ok != faults.is_empty() {
+        return Err(format!(
+            "{path}.faults: {} fault(s) contradict hypothesis_ok={hypothesis_ok}",
+            faults.len()
+        ));
+    }
+    for (i, f) in faults.iter().enumerate() {
+        let fpath = format!("{path}.faults[{i}]");
+        want_str(f, &fpath, "kind")?;
+        want_count(f, &fpath, "step")?;
+        want_str(f, &fpath, "module")?;
+        want_str(f, &fpath, "message")?;
+    }
+    Ok(())
+}
+
+/// Validate a parsed `dfq verify --json` document (the
+/// [`crate::analysis::VerifyReport`] serialization: `{ ok, quantized,
+/// slots, steps[], faults[] }`).
+pub fn validate_verify(doc: &Json) -> Result<(), String> {
+    let ok = want_bool(doc, "$", "ok")?;
+    want_bool(doc, "$", "quantized")?;
+    if want_count(doc, "$", "slots")? < 1.0 {
+        return Err("$.slots: must be at least 1".into());
+    }
+    let steps = doc
+        .req("steps")?
+        .as_arr()
+        .ok_or("$.steps: expected an array")?;
+    if steps.is_empty() {
+        return Err("$.steps: must not be empty".into());
+    }
+    for (i, s) in steps.iter().enumerate() {
+        let path = format!("$.steps[{i}]");
+        want_count(s, &path, "step")?;
+        if want_str(s, &path, "module")?.is_empty() {
+            return Err(format!("{path}.module: must not be empty"));
+        }
+        want_count(s, &path, "peak")?;
+        match s.req("range").map_err(|e| format!("{path}: {e}"))? {
+            Json::Null => {}
+            Json::Arr(pair) if pair.len() == 2 => {
+                let lo = pair[0]
+                    .as_f64()
+                    .ok_or_else(|| format!("{path}.range[0]: expected a number"))?;
+                let hi = pair[1]
+                    .as_f64()
+                    .ok_or_else(|| format!("{path}.range[1]: expected a number"))?;
+                if lo > hi {
+                    return Err(format!(
+                        "{path}.range: [{lo}, {hi}] is inverted"
+                    ));
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "{path}.range: expected null or a [lo, hi] pair"
+                ))
+            }
+        }
+    }
+    let faults = doc
+        .req("faults")?
+        .as_arr()
+        .ok_or("$.faults: expected an array")?;
+    if ok != faults.is_empty() {
+        return Err(format!(
+            "$.faults: {} fault(s) contradict ok={ok}",
+            faults.len()
+        ));
+    }
+    for (i, f) in faults.iter().enumerate() {
+        let path = format!("$.faults[{i}]");
+        want_str(f, &path, "kind")?;
+        want_count(f, &path, "step")?;
+        want_str(f, &path, "module")?;
+        want_str(f, &path, "message")?;
+    }
+    Ok(())
+}
+
+fn num_at(doc: &Json, keys: &[&str]) -> Option<f64> {
+    let mut cur = doc;
+    for k in keys {
+        cur = cur.req(k).ok()?;
+    }
+    cur.as_f64()
+}
+
+fn model_entries(doc: &Json) -> Vec<(String, &Json)> {
+    doc.req("models")
+        .ok()
+        .and_then(|m| m.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|m| {
+                    Some((m.req("model").ok()?.as_str()?.to_string(), m))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Warn-only comparison of a new audit document against a committed
+/// baseline (`dfq audit --against`). Census totals are structural —
+/// machine-exact from the graph — so any movement is flagged; bound
+/// and energy values depend on weights and cost constants, so only
+/// large (>4x) movement is, keeping a hand-estimated baseline quiet.
+/// Never an error: a garbage baseline degrades to a single note.
+pub fn diff(old: &Json, new: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    if old.req("audit").ok().and_then(|a| a.as_str()) != Some("plans") {
+        out.push(
+            "the baseline is not an audit document; nothing to compare".into(),
+        );
+        return out;
+    }
+    let old_models = model_entries(old);
+    for (name, nm) in model_entries(new) {
+        let Some((_, om)) =
+            old_models.iter().find(|(o_name, _)| *o_name == name)
+        else {
+            continue;
+        };
+        for key in ["fused_total", "unfused_total"] {
+            if let (Some(o), Some(n)) =
+                (num_at(om, &["census", key]), num_at(nm, &["census", key]))
+            {
+                if o != n {
+                    out.push(format!(
+                        "{name}: census {key} moved {o} -> {n} \
+                         (plan structure changed)"
+                    ));
+                }
+            }
+        }
+        let hyp = |d: &Json| d.req("hypothesis_ok").ok().and_then(|b| b.as_bool());
+        if hyp(om) == Some(true) && hyp(nm) == Some(false) {
+            out.push(format!(
+                "{name}: the dataflow hypothesis no longer holds"
+            ));
+        }
+        if let (Some(o), Some(n)) =
+            (num_at(om, &["bound", "output"]), num_at(nm, &["bound", "output"]))
+        {
+            if o > 0.0 && n > o * 4.0 {
+                out.push(format!(
+                    "{name}: proved error bound loosened {:.1}x \
+                     ({o:.3e} -> {n:.3e})",
+                    n / o
+                ));
+            }
+        }
+        if let (Some(o), Some(n)) =
+            (num_at(om, &["cost", "total_uj"]), num_at(nm, &["cost", "total_uj"]))
+        {
+            if o > 0.0 && n > o * 4.0 {
+                out.push(format!(
+                    "{name}: energy estimate rose {:.1}x ({o:.3} -> {n:.3} uJ)",
+                    n / o
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    use super::*;
+    use crate::analysis;
+    use crate::engine::plan::ExecPlan;
+    use crate::graph::bn_fold::FoldedParams;
+    use crate::graph::{Graph, ModuleKind, UnifiedModule};
+    use crate::quant::params::{ModuleShifts, QuantSpec};
+    use crate::tensor::Tensor;
+
+    fn tiny_graph() -> (Graph, QuantSpec, HashMap<String, FoldedParams>) {
+        let g = Graph {
+            name: "td".into(),
+            input_hwc: (1, 1, 2),
+            modules: vec![
+                UnifiedModule {
+                    name: "gap".into(),
+                    kind: ModuleKind::Gap,
+                    src: "input".into(),
+                    res: None,
+                    relu: false,
+                },
+                UnifiedModule {
+                    name: "fc".into(),
+                    kind: ModuleKind::Dense { cin: 2, cout: 2 },
+                    src: "gap".into(),
+                    res: None,
+                    relu: false,
+                },
+            ],
+        };
+        let mut sp = QuantSpec::new(8);
+        sp.input_frac = 5;
+        sp.modules.insert("fc".into(), ModuleShifts { n_w: 7, n_b: 7, n_o: 4 });
+        let mut folded = HashMap::new();
+        folded.insert(
+            "fc".to_string(),
+            FoldedParams {
+                w: Tensor::from_vec(&[2, 2], vec![0.5, 0.0, 0.0, 0.5]),
+                b: vec![0.0, 0.0],
+            },
+        );
+        (g, sp, folded)
+    }
+
+    fn real_doc() -> Json {
+        let (g, sp, folded) = tiny_graph();
+        let report =
+            analysis::audit::audit(&g, &sp, &folded, (-1.0, 1.0)).unwrap();
+        audit_doc(vec![report.to_json()])
+    }
+
+    #[test]
+    fn emitted_audit_document_roundtrips_and_validates() {
+        let doc = real_doc();
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        validate(&parsed).unwrap();
+    }
+
+    #[test]
+    fn emitted_verify_document_validates() {
+        let (g, sp, _) = tiny_graph();
+        let plan = ExecPlan::compile(&g, &sp, g.input_hwc).unwrap();
+        let json = analysis::verify(&plan).json();
+        let parsed = Json::parse(&json).unwrap();
+        validate_verify(&parsed).unwrap();
+
+        // and the fp plan's report too (null ranges)
+        let fp = ExecPlan::compile_fp(&g, g.input_hwc).unwrap();
+        let parsed = Json::parse(&analysis::verify(&fp).json()).unwrap();
+        validate_verify(&parsed).unwrap();
+    }
+
+    #[test]
+    fn envelope_rejections() {
+        let doc = json::obj(vec![("audit", json::s("plans"))]);
+        assert!(validate(&doc).unwrap_err().contains("schema_version"));
+        let doc = json::obj(vec![
+            ("audit", json::s("nonsense")),
+            ("schema_version", json::num(1.0)),
+        ]);
+        assert!(validate(&doc).unwrap_err().contains("nonsense"));
+        let doc = json::obj(vec![
+            ("audit", json::s("plans")),
+            ("schema_version", json::num(99.0)),
+        ]);
+        assert!(validate(&doc).unwrap_err().contains("newer"));
+        let doc = json::obj(vec![
+            ("audit", json::s("plans")),
+            ("schema_version", json::num(1.0)),
+            ("models", Json::Arr(vec![])),
+        ]);
+        assert!(validate(&doc).unwrap_err().contains("models"));
+    }
+
+    #[test]
+    fn semantic_inconsistencies_are_rejected() {
+        // a doc whose hypothesis flag contradicts its own census
+        let mut doc = real_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Arr(models)) = m.get_mut("models") {
+                if let Some(Json::Obj(entry)) = models.get_mut(0) {
+                    entry.insert("hypothesis_ok".into(), Json::Bool(false));
+                }
+            }
+        }
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("hypothesis_ok"), "{err}");
+
+        // a step whose ops arithmetic is wrong
+        let mut doc = real_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Arr(models)) = m.get_mut("models") {
+                if let Some(Json::Obj(entry)) = models.get_mut(0) {
+                    if let Some(Json::Obj(census)) = entry.get_mut("census") {
+                        if let Some(Json::Arr(steps)) = census.get_mut("steps") {
+                            if let Some(Json::Obj(s)) = steps.get_mut(0) {
+                                s.insert("ops".into(), json::num(9999.0));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("ops"), "{err}");
+    }
+
+    #[test]
+    fn extra_keys_are_tolerated() {
+        let mut doc = real_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("commit".into(), json::s("abc123"));
+        }
+        validate(&doc).unwrap();
+    }
+
+    #[test]
+    fn diff_is_warn_only_and_names_what_moved() {
+        let old = real_doc();
+        // identical runs: silence
+        assert!(diff(&old, &old).is_empty());
+
+        // census movement is flagged with the model name
+        let mut new = real_doc();
+        if let Json::Obj(m) = &mut new {
+            if let Some(Json::Arr(models)) = m.get_mut("models") {
+                if let Some(Json::Obj(entry)) = models.get_mut(0) {
+                    if let Some(Json::Obj(census)) = entry.get_mut("census") {
+                        census.insert("fused_total".into(), json::num(999.0));
+                    }
+                }
+            }
+        }
+        let w = diff(&old, &new);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("td") && w[0].contains("fused_total"), "{}", w[0]);
+
+        // small bound movement stays quiet, >4x is flagged
+        let bump = |factor: f64| {
+            let mut d = real_doc();
+            if let Json::Obj(m) = &mut d {
+                if let Some(Json::Arr(models)) = m.get_mut("models") {
+                    if let Some(Json::Obj(entry)) = models.get_mut(0) {
+                        let out = num_at(
+                            entry.get("bound").unwrap(),
+                            &["output"],
+                        )
+                        .unwrap();
+                        if let Some(Json::Obj(b)) = entry.get_mut("bound") {
+                            b.insert("output".into(), json::num(out * factor));
+                        }
+                    }
+                }
+            }
+            d
+        };
+        assert!(diff(&old, &bump(2.0)).is_empty());
+        let w = diff(&old, &bump(10.0));
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("bound"), "{}", w[0]);
+
+        // a garbage baseline degrades to a single note, never an error
+        let w = diff(&json::obj(vec![]), &old);
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("nothing to compare"), "{}", w[0]);
+    }
+}

@@ -4,8 +4,11 @@
 //! shared by the CLI (`dfq tables`) and the benches. [`bench`] holds the
 //! schema + validator for the machine-readable perf trajectory
 //! (`BENCH_serve.json` / `BENCH_hotpath.json`, checked by
-//! `dfq benchcheck`).
+//! `dfq benchcheck`); [`audit`] the same for the static-audit
+//! trajectory (`AUDIT_seed.json`, emitted by `dfq audit --json`) plus
+//! the `dfq verify --json` document.
 
+pub mod audit;
 pub mod bench;
 pub mod experiments;
 pub mod figures;

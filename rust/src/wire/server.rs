@@ -192,6 +192,19 @@ fn reject_at_capacity(mut stream: WireStream, cfg: &WireServerConfig) {
     stream.shutdown();
 }
 
+/// Out-of-line constructor for the confused-peer reply:
+/// `handle_connection`'s per-frame loop is a lint-enforced warm path
+/// (no allocation), so this cold branch builds its message behind a
+/// call the optimizer keeps out of the loop.
+#[cold]
+#[inline(never)]
+fn not_a_request(frame_type: u8) -> DfqError {
+    DfqError::wire(
+        WireFault::Malformed,
+        format!("frame type {frame_type:#04x} is not a request"),
+    )
+}
+
 /// One connection's request/response loop. Returning closes the
 /// connection; the acceptor is never affected by anything here.
 fn handle_connection(
@@ -252,13 +265,7 @@ fn handle_connection(
             }
             // well-formed but not a request (a confused peer replaying
             // server frames): typed answer, connection stays up
-            other => Frame::Error(DfqError::wire(
-                WireFault::Malformed,
-                format!(
-                    "frame type {:#04x} is not a request",
-                    other.frame_type()
-                ),
-            )),
+            other => Frame::Error(not_a_request(other.frame_type())),
         };
         if write_frame(&mut stream, &reply).is_err() {
             // client hung up mid-response: drop the connection quietly

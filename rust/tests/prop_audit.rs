@@ -1,0 +1,217 @@
+//! Property tests for the static dataflow auditor
+//! (`dfq::analysis::{audit, qerror}`): over random fused graphs the
+//! fused plan must perform **strictly fewer** quantization ops than the
+//! `compile_unfused` ablation (the paper's dataflow hypothesis,
+//! machine-checked per plan — and re-checked on every seed model), and
+//! the measured int-vs-fp output divergence must never exceed the
+//! proved bound (zero violations — the bound is a proof, not an
+//! estimate).
+
+use std::collections::HashMap;
+
+use dfq::analysis::{audit, qerror};
+use dfq::engine::fp::FpEngine;
+use dfq::engine::int::IntEngine;
+use dfq::graph::bn_fold::FoldedParams;
+use dfq::prelude::*;
+
+/// A random residual CNN over an 8x8x3 input (same generator shape as
+/// `prop_verify.rs`: strides keep the spatial size a power of two, so
+/// an optional gap+dense head is always integer-exact).
+fn random_model(rng: &mut Pcg) -> (Graph, HashMap<String, FoldedParams>) {
+    let mut modules = Vec::new();
+    let mut ch = rng.int_range(2, 5) as usize;
+    modules.push(UnifiedModule {
+        name: "stem".into(),
+        kind: ModuleKind::Conv { kh: 3, kw: 3, cin: 3, cout: ch, stride: 1 },
+        src: "input".into(),
+        res: None,
+        relu: true,
+    });
+    let mut prev = "stem".to_string();
+    let n_blocks = rng.int_range(1, 4);
+    for i in 0..n_blocks {
+        let name = format!("c{i}");
+        let stride = if rng.f32() < 0.3 { 2 } else { 1 };
+        let cout = if stride == 1 && rng.f32() < 0.5 {
+            ch
+        } else {
+            rng.int_range(2, 6) as usize
+        };
+        let res = (stride == 1 && cout == ch && rng.f32() < 0.6).then(|| prev.clone());
+        let k = if rng.f32() < 0.5 { 1 } else { 3 };
+        modules.push(UnifiedModule {
+            name: name.clone(),
+            kind: ModuleKind::Conv { kh: k, kw: k, cin: ch, cout, stride },
+            src: prev.clone(),
+            res,
+            relu: rng.f32() < 0.7,
+        });
+        ch = cout;
+        prev = name;
+    }
+    if rng.f32() < 0.7 {
+        modules.push(UnifiedModule {
+            name: "gap".into(),
+            kind: ModuleKind::Gap,
+            src: prev.clone(),
+            res: None,
+            relu: false,
+        });
+        modules.push(UnifiedModule {
+            name: "fc".into(),
+            kind: ModuleKind::Dense { cin: ch, cout: 5 },
+            src: "gap".into(),
+            res: None,
+            relu: false,
+        });
+    }
+    let graph = Graph { name: "rand".into(), input_hwc: (8, 8, 3), modules };
+    let mut folded = HashMap::new();
+    for m in graph.weight_modules() {
+        let (shape, fan_in): (Vec<usize>, usize) = match &m.kind {
+            ModuleKind::Conv { kh, kw, cin, cout, .. } => {
+                (vec![*kh, *kw, *cin, *cout], kh * kw * cin)
+            }
+            ModuleKind::Dense { cin, cout } => (vec![*cin, *cout], *cin),
+            ModuleKind::Gap => unreachable!(),
+        };
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let cout = *shape.last().unwrap();
+        folded.insert(
+            m.name.clone(),
+            FoldedParams {
+                w: Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_ms(0.0, std)).collect()),
+                b: (0..cout).map(|_| rng.normal_ms(0.0, 0.1)).collect(),
+            },
+        );
+    }
+    (graph, folded)
+}
+
+fn images(rng: &mut Pcg, n: usize) -> Tensor {
+    Tensor::from_vec(&[n, 8, 8, 3], (0..n * 192).map(|_| rng.normal()).collect())
+}
+
+fn calibrated_spec(
+    graph: &Graph,
+    folded: &HashMap<String, FoldedParams>,
+    rng: &mut Pcg,
+) -> QuantSpec {
+    let session = Session::from_graph(graph.clone(), folded.clone()).unwrap();
+    let cm = session.calibrate(CalibConfig::default(), &images(rng, 1)).unwrap();
+    cm.spec().clone()
+}
+
+#[test]
+fn prop_fused_plans_perform_strictly_fewer_quant_ops() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg::new(83000 + seed * 127);
+        let (graph, folded) = random_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+
+        let fused = ExecPlan::compile(&graph, &spec, graph.input_hwc).unwrap();
+        // empty pre map: every module's intermediate at its own output
+        // scale — the per-layer placement the restructuring removes
+        let pre: HashMap<String, i32> = HashMap::new();
+        let unf =
+            ExecPlan::compile_unfused(&graph, &spec, &pre, graph.input_hwc).unwrap();
+        let f = audit::census(&fused);
+        let u = audit::census(&unf);
+        assert!(
+            f.total < u.total,
+            "seed {seed}: fused {} quant ops vs unfused {} — hypothesis violated",
+            f.total,
+            u.total
+        );
+        assert!(audit::check_hypothesis(&f, &u).is_none(), "seed {seed}");
+
+        // the census invariant: per step, ops = sites * points, and the
+        // unfused schedule never pays fewer points at a GEMM step
+        for (fs, us) in f.steps.iter().zip(&u.steps) {
+            assert_eq!(fs.ops, fs.sites * fs.points, "seed {seed} step {}", fs.step);
+            assert!(
+                us.points >= fs.points,
+                "seed {seed} step {}: unfused {} < fused {} points",
+                fs.step,
+                us.points,
+                fs.points
+            );
+        }
+    }
+}
+
+#[test]
+fn seed_models_satisfy_the_dataflow_hypothesis() {
+    // the acceptance gate on the built-in models: fused strictly fewer
+    // quant ops for every seed model, via the full audit entry point
+    let calib = dfq::data::dataset::synth_images(1, 32, 3, 7);
+    for name in ["resnet_s", "resnet_m", "resnet_l"] {
+        let graph = dfq::models::resnet::by_name(name).unwrap();
+        let folded = dfq::models::resnet::synth_folded(&graph, 7);
+        let session = Session::from_graph(graph, folded.clone()).unwrap();
+        let cm = session.calibrate(CalibConfig::default(), &calib).unwrap();
+        // synth_images clamps to [-2, 2]: the promised input domain
+        let report =
+            audit::audit(cm.graph(), cm.spec(), &folded, (-2.0, 2.0)).unwrap();
+        assert!(report.ok(), "{name}: audit faults: {:?}", report.faults);
+        assert!(
+            report.fused.total < report.unfused.total,
+            "{name}: fused {} vs unfused {}",
+            report.fused.total,
+            report.unfused.total
+        );
+        assert!(report.bound.output.is_finite() && report.bound.output > 0.0);
+    }
+}
+
+#[test]
+fn prop_measured_divergence_never_exceeds_the_proved_bound() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(91000 + seed * 113);
+        let (graph, folded) = random_model(&mut rng);
+        let spec = calibrated_spec(&graph, &folded, &mut rng);
+        let plan = ExecPlan::compile(&graph, &spec, graph.input_hwc).unwrap();
+
+        // the proved bound is conditioned on the input domain, so draw
+        // the batches first and prove over their actual value range
+        let batches: Vec<Tensor> = (0..2).map(|_| images(&mut rng, 2)).collect();
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for b in &batches {
+            for &v in &b.data {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        let bound =
+            qerror::error_bound(&plan, &graph, &spec, &folded, (lo, hi)).unwrap();
+        assert!(bound.output.is_finite() && bound.output > 0.0, "seed {seed}");
+        // per-step bounds exist for the whole schedule
+        assert_eq!(bound.steps.len(), plan_len(&plan), "seed {seed}");
+
+        let int = IntEngine::new(&graph, &folded, &spec);
+        let fp = FpEngine::new(&graph, &folded);
+        for (bi, x) in batches.iter().enumerate() {
+            let qa = int.run_dequant(x).unwrap();
+            let fa = fp.run(x).unwrap();
+            assert_eq!(qa.data.len(), fa.data.len(), "seed {seed} batch {bi}");
+            let mut worst = 0f64;
+            for (q, f) in qa.data.iter().zip(&fa.data) {
+                worst = worst.max((*q as f64 - *f as f64).abs());
+            }
+            assert!(
+                worst <= bound.output,
+                "seed {seed} batch {bi}: measured divergence {worst:.6e} \
+                 exceeds the proved bound {:.6e}",
+                bound.output
+            );
+        }
+    }
+}
+
+/// The number of steps in a compiled plan, through the public verify
+/// report (the plan's step list itself is crate-private).
+fn plan_len(plan: &ExecPlan) -> usize {
+    dfq::analysis::verify(plan).steps.len()
+}
